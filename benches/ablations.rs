@@ -1,0 +1,141 @@
+//! Ablation benches (DESIGN.md §6): the design choices behind the
+//! headline tables.
+//!
+//! * RNG strategy: inline exact binomial vs adaptive vs pool — the root
+//!   cause of Table 2 isolated from any offload effect.
+//! * Patch size (nsigma sweep): dispatch-overhead-to-work ratio.
+//! * Scatter implementation: serial vs atomic vs tile-striped.
+//! * FFT path: radix-2 vs Bluestein grid sizes for the FT stage.
+//!
+//! ```sh
+//! cargo bench --bench ablations
+//! ```
+
+mod common;
+
+use std::time::Instant;
+use wirecell::backend::{ExecBackend, SerialBackend};
+use wirecell::config::{FluctuationMode, SimConfig};
+use wirecell::fft::{Complex, Plan};
+use wirecell::harness::{time_backend, workload};
+use wirecell::metrics::Table;
+use wirecell::parallel::{ExecPolicy, ThreadPool};
+use wirecell::rng::RandomPool;
+use wirecell::scatter::{scatter_atomic, scatter_serial, scatter_tiled, PlaneGrid};
+
+fn main() -> anyhow::Result<()> {
+    let n = common::depos(10_000);
+    let repeat = common::repeat(3);
+    let cfg = SimConfig::default();
+    let wl = workload(&cfg, n)?;
+    let pool = RandomPool::shared(cfg.seed, cfg.pool_size);
+
+    // --- RNG strategy ablation -------------------------------------
+    let mut t = Table::new(
+        &format!("Ablation: fluctuation RNG strategy ({n} depos)"),
+        &["Mode", "Total [s]", "Fluctuation [s]", "vs none"],
+    );
+    let mut base = 0.0;
+    for mode in [FluctuationMode::None, FluctuationMode::Pool, FluctuationMode::Inline] {
+        let mut be = SerialBackend::new(cfg.raster_params(), mode, cfg.seed, Some(pool.clone()));
+        let (timing, wall, _) = time_backend(&mut be, &wl, repeat)?;
+        if mode == FluctuationMode::None {
+            base = wall;
+        }
+        t.row(&[
+            format!("{mode:?}"),
+            format!("{wall:.3}"),
+            format!("{:.3}", timing.fluctuation_s),
+            format!("{:.1}x", wall / base),
+        ]);
+    }
+    common::emit(&t);
+
+    // --- patch-size (nsigma) ablation --------------------------------
+    let mut t = Table::new(
+        &format!("Ablation: patch extent nsigma ({n} depos, ref-CPU)"),
+        &["nsigma", "Mean patch bins", "Total [s]"],
+    );
+    for nsigma in [1.5, 2.0, 3.0, 4.0, 5.0] {
+        let mut params = cfg.raster_params();
+        params.nsigma = nsigma;
+        let mut be = SerialBackend::new(params, FluctuationMode::Inline, cfg.seed, None);
+        let t0 = Instant::now();
+        let out = be.rasterize(&wl.views, &wl.spec)?;
+        let dt = t0.elapsed().as_secs_f64();
+        let mean_bins = out.patches.iter().map(|p| p.size()).sum::<usize>() as f64
+            / out.patches.len().max(1) as f64;
+        t.row(&[
+            format!("{nsigma:.1}"),
+            format!("{mean_bins:.0}"),
+            format!("{dt:.3}"),
+        ]);
+    }
+    common::emit(&t);
+
+    // --- scatter implementation ablation ------------------------------
+    let mut be = SerialBackend::new(cfg.raster_params(), FluctuationMode::None, cfg.seed, None);
+    let patches = be.rasterize(&wl.views, &wl.spec)?.patches;
+    let mut t = Table::new(
+        &format!("Ablation: scatter-add implementation ({} patches)", patches.len()),
+        &["Implementation", "Threads", "Time [s]"],
+    );
+    let time_it = |f: &mut dyn FnMut(&mut PlaneGrid)| {
+        let mut best = f64::INFINITY;
+        for _ in 0..repeat {
+            let mut g = PlaneGrid::for_spec(&wl.spec);
+            let t0 = Instant::now();
+            f(&mut g);
+            best = best.min(t0.elapsed().as_secs_f64());
+        }
+        best
+    };
+    t.row(&[
+        "serial".into(),
+        "1".into(),
+        format!("{:.4}", time_it(&mut |g| scatter_serial(g, &wl.spec, &patches))),
+    ]);
+    for threads in [2, 4, 8] {
+        let tp = ThreadPool::new(threads);
+        t.row(&[
+            "atomic".into(),
+            threads.to_string(),
+            format!(
+                "{:.4}",
+                time_it(&mut |g| scatter_atomic(g, &wl.spec, &patches, &tp, ExecPolicy::Threads(threads)))
+            ),
+        ]);
+        t.row(&[
+            "tiled".into(),
+            threads.to_string(),
+            format!(
+                "{:.4}",
+                time_it(&mut |g| scatter_tiled(g, &wl.spec, &patches, &tp, ExecPolicy::Threads(threads)))
+            ),
+        ]);
+    }
+    common::emit(&t);
+
+    // --- FFT path ablation --------------------------------------------
+    let mut t = Table::new(
+        "Ablation: FFT path (1k transforms per size)",
+        &["N", "Path", "Time [ms]"],
+    );
+    for n in [512usize, 560, 1024, 1000, 2048, 2000] {
+        let plan = Plan::new(n);
+        let path = if n.is_power_of_two() { "radix-2" } else { "bluestein" };
+        let mut buf: Vec<Complex> = (0..n).map(|i| Complex::new(i as f64, 0.0)).collect();
+        let t0 = Instant::now();
+        for _ in 0..1000 {
+            plan.forward(&mut buf);
+        }
+        t.row(&[
+            n.to_string(),
+            path.into(),
+            format!("{:.2}", t0.elapsed().as_secs_f64() * 1e3),
+        ]);
+    }
+    common::emit(&t);
+
+    Ok(())
+}

@@ -1,0 +1,42 @@
+//! Shared bench plumbing: environment-scaled workload sizes and table
+//! emission.  criterion is not in the vendored registry, so each bench
+//! target is a `harness = false` binary over `wirecell::harness`.
+
+use std::io::Write;
+
+/// Workload size: `WCT_BENCH_DEPOS` env or the default.  The paper uses
+/// 100k depos; benches default lower so a full `cargo bench` sweep
+/// completes in minutes — set `WCT_BENCH_DEPOS=100000` for paper scale.
+pub fn depos(default: usize) -> usize {
+    std::env::var("WCT_BENCH_DEPOS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(default)
+}
+
+/// Repetitions: `WCT_BENCH_REPEAT` env or the default (paper: 5).
+pub fn repeat(default: usize) -> usize {
+    std::env::var("WCT_BENCH_REPEAT")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(default)
+}
+
+/// Print the table and append it to bench_results.md for EXPERIMENTS.md.
+pub fn emit(table: &wirecell::metrics::Table) {
+    let text = table.render();
+    println!("{text}");
+    if let Ok(mut f) = std::fs::OpenOptions::new()
+        .create(true)
+        .append(true)
+        .open("bench_results.md")
+    {
+        let _ = writeln!(f, "{text}");
+    }
+}
+
+/// True when the AOT artifacts exist (PJRT rows possible).
+#[allow(dead_code)]
+pub fn have_artifacts() -> bool {
+    std::path::Path::new("artifacts/manifest.json").exists()
+}

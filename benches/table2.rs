@@ -1,0 +1,44 @@
+//! Paper Table 2: serial CPU vs per-depo device offload vs RNG-free CPU.
+//!
+//! ```sh
+//! cargo bench --bench table2                     # default 20k depos
+//! WCT_BENCH_DEPOS=100000 cargo bench --bench table2   # paper scale
+//! ```
+
+mod common;
+
+use wirecell::config::SimConfig;
+use wirecell::harness::table2;
+
+fn main() -> anyhow::Result<()> {
+    let n = common::depos(20_000);
+    let repeat = common::repeat(5); // paper: "ran each test 5 times"
+    let cfg = SimConfig::default();
+    let with_pjrt = common::have_artifacts();
+    if !with_pjrt {
+        eprintln!("artifacts/ missing: skipping the ref-accel row (run `make artifacts`)");
+    }
+    let (table, rows) = table2(&cfg, n, repeat, with_pjrt)?;
+    common::emit(&table);
+
+    // Shape assertions from the paper:
+    // 1. ref-CPU's fluctuation (inline RNG) dominates its total.
+    let ref_cpu = rows.iter().find(|r| r.label == "ref-CPU").unwrap();
+    assert!(ref_cpu.fluctuation_s > 0.5 * ref_cpu.total_s);
+    // 2. factoring the RNG out wins big (paper: 3.57 -> 0.18, ~20x).
+    let norng = rows.iter().find(|r| r.label == "ref-CPU-noRNG").unwrap();
+    assert!(ref_cpu.total_s > 4.0 * norng.total_s);
+    // 3. per-depo offload loses to the RNG-free CPU (paper: 1.22 vs 0.18).
+    if let Some(accel) = rows.iter().find(|r| r.label.starts_with("ref-accel")) {
+        assert!(accel.total_s > norng.total_s);
+        println!(
+            "per-depo offload is {:.1}x slower than ref-CPU-noRNG (paper: ~6.8x)",
+            accel.total_s / norng.total_s
+        );
+    }
+    println!(
+        "RNG factored out: {:.1}x speedup (paper: ~19.8x)",
+        ref_cpu.total_s / norng.total_s
+    );
+    Ok(())
+}

@@ -1,0 +1,41 @@
+//! Paper Table 3: the first-round portable port — host-parallel with
+//! 1/2/4/8 threads gets *slower* with more threads (dispatch overhead
+//! vs tiny work units), and the device backend through the portability
+//! layer trails the raw device path.
+//!
+//! ```sh
+//! cargo bench --bench table3
+//! WCT_BENCH_DEPOS=100000 cargo bench --bench table3   # paper scale
+//! ```
+
+mod common;
+
+use wirecell::config::SimConfig;
+use wirecell::harness::table3;
+
+fn main() -> anyhow::Result<()> {
+    let n = common::depos(20_000);
+    let repeat = common::repeat(5);
+    let cfg = SimConfig::default();
+    let with_pjrt = common::have_artifacts();
+    let (table, rows) = table3(&cfg, n, repeat, &[1, 2, 4, 8], with_pjrt)?;
+    common::emit(&table);
+
+    // Shape assertion: with the per-depo dispatch structure, more
+    // threads must NOT be faster (paper: 0.29 -> 0.49 -> 0.55 -> 0.66 s).
+    let omp: Vec<&wirecell::harness::Row> = rows
+        .iter()
+        .filter(|r| r.label.starts_with("Kokkos-OMP"))
+        .collect();
+    let t1 = omp.first().unwrap().total_s;
+    let t8 = omp.last().unwrap().total_s;
+    assert!(
+        t8 > 0.9 * t1,
+        "8-thread per-depo run should not beat 1-thread (dispatch overhead): {t8} vs {t1}"
+    );
+    println!(
+        "per-depo dispatch pathology: 1 thread {:.3}s -> 8 threads {:.3}s (paper: 0.29 -> 0.66)",
+        t1, t8
+    );
+    Ok(())
+}

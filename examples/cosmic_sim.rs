@@ -1,0 +1,106 @@
+//! End-to-end validation driver (DESIGN.md "End-to-end" experiment):
+//! simulate a full cosmic-ray event — the paper's benchmark workload —
+//! through every stage on every plane, with both the serial reference
+//! backend and the batched PJRT (device) backend, and report the
+//! headline per-stage wall-clock metrics plus physics sanity checks.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example cosmic_sim [ndepos]
+//! ```
+//!
+//! The run is recorded in EXPERIMENTS.md §End-to-end.
+
+use wirecell::config::{BackendChoice, FluctuationMode, SimConfig, Strategy};
+use wirecell::coordinator::SimPipeline;
+use wirecell::depo::{stats, CosmicSource, DepoSource};
+use wirecell::geometry::PlaneId;
+use wirecell::metrics::Table;
+
+fn main() -> anyhow::Result<()> {
+    let n: usize = std::env::args()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(100_000);
+
+    let mut cfg = SimConfig::default();
+    cfg.detector = "test-small".into();
+    cfg.fluctuation = FluctuationMode::Pool;
+    cfg.noise = true;
+    cfg.target_depos = n;
+
+    // shared workload
+    let det = cfg.detector().unwrap();
+    let mut src = CosmicSource::with_target_depos(det, n, cfg.seed);
+    let depos = src.generate();
+    let s = stats(&depos);
+    println!(
+        "workload: {} depos, {:.3e} electrons total, t in [{:.1}, {:.1}] us ({})",
+        s.count,
+        s.total_charge,
+        s.time_range.0 / 1000.0,
+        s.time_range.1 / 1000.0,
+        src.label()
+    );
+
+    let mut table = Table::new(
+        "cosmic_sim — end-to-end stage wall clock [s]",
+        &["Backend", "drift", "raster", "scatter", "ft", "noise", "adc", "total"],
+    );
+    let mut frames = Vec::new();
+    for backend in [
+        BackendChoice::Serial,
+        BackendChoice::Threaded(4),
+        BackendChoice::Pjrt,
+    ] {
+        let mut cfg = cfg.clone();
+        cfg.backend = backend.clone();
+        cfg.strategy = Strategy::Batched;
+        let mut pipe = SimPipeline::new(cfg)?;
+        let report = pipe.run(&depos)?;
+        let g = |s: &str| report.stages.total(s);
+        table.row_seconds(
+            &report.label,
+            &[
+                g("drift"),
+                g("raster"),
+                g("scatter"),
+                g("ft"),
+                g("noise"),
+                g("adc"),
+                report.stages.grand_total(),
+            ],
+        );
+        frames.push((report.label.clone(), report));
+    }
+    println!("{}", table.render());
+
+    // Physics consistency across backends: the same workload must give
+    // the same total rasterized charge (fluctuations differ per path,
+    // but totals agree to << 1%).
+    let mut phys = Table::new(
+        "physics consistency",
+        &["Backend", "W-plane charge [e]", "W traces > 30 ADC"],
+    );
+    for (label, report) in &frames {
+        let q = report.planes[PlaneId::W as usize].charge;
+        let traces = report
+            .frame
+            .as_ref()
+            .map(|f| f.plane(PlaneId::W).traces(30.0, 5).len())
+            .unwrap_or(0);
+        phys.row(&[label.clone(), format!("{q:.4e}"), traces.to_string()]);
+    }
+    println!("{}", phys.render());
+
+    let charges: Vec<f64> = frames
+        .iter()
+        .map(|(_, r)| r.planes[PlaneId::W as usize].charge)
+        .collect();
+    let spread = (charges.iter().cloned().fold(f64::MIN, f64::max)
+        - charges.iter().cloned().fold(f64::MAX, f64::min))
+        / charges[0];
+    println!("cross-backend W-plane charge spread: {:.4}%", spread * 100.0);
+    assert!(spread.abs() < 0.01, "backends disagree on total charge");
+    println!("cosmic_sim OK");
+    Ok(())
+}

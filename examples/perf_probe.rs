@@ -1,0 +1,32 @@
+//! Perf probe used for the EXPERIMENTS.md §Perf iteration log.
+use std::sync::Arc;
+use wirecell::backend::*;
+use wirecell::config::*;
+use wirecell::harness::*;
+use wirecell::rng::RandomPool;
+use wirecell::runtime::Runtime;
+
+fn main() -> anyhow::Result<()> {
+    let n: usize = std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(20_000);
+    let cfg = SimConfig::default();
+    let wl = workload(&cfg, n)?;
+    let params = cfg.raster_params();
+    let pool = RandomPool::shared(1, cfg.pool_size);
+
+    let mut nr = SerialBackend::new(params, FluctuationMode::None, 1, None);
+    let (_, wall, np) = time_backend(&mut nr, &wl, 5)?;
+    println!("serial-noRNG : {:.4}s  {:.2} us/depo", wall, wall / np as f64 * 1e6);
+
+    let mut inl = SerialBackend::new(params, FluctuationMode::Inline, 1, None);
+    let (_, wall, np) = time_backend(&mut inl, &wl, 3)?;
+    println!("serial-inline: {:.4}s  {:.2} us/depo", wall, wall / np as f64 * 1e6);
+
+    if std::path::Path::new("artifacts/manifest.json").exists() {
+        let rt = Arc::new(Runtime::open(std::path::Path::new("artifacts"))?);
+        let mut bt = PjrtBackend::new(rt.clone(), "small", Strategy::Batched, params, pool.clone())?;
+        let (_, wall, np) = time_backend(&mut bt, &wl, 3)?;
+        let (h2d, exec, d2h, disp) = rt.stats.snapshot();
+        println!("pjrt-batched : {:.4}s  {:.2} us/depo  (h2d {h2d:.3} exec {exec:.3} d2h {d2h:.3} over {disp} dispatches)", wall, wall / np as f64 * 1e6);
+    }
+    Ok(())
+}

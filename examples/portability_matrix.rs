@@ -1,0 +1,79 @@
+//! Portability matrix: every backend × strategy combination on the same
+//! workload — the full landscape behind the paper's Tables 2–3 in one
+//! run.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example portability_matrix [ndepos]
+//! ```
+
+use std::sync::Arc;
+use wirecell::backend::{ExecBackend, PjrtBackend, SerialBackend, ThreadedBackend};
+use wirecell::config::{FluctuationMode, SimConfig, Strategy};
+use wirecell::harness::{time_backend, workload};
+use wirecell::metrics::Table;
+use wirecell::parallel::ThreadPool;
+use wirecell::rng::RandomPool;
+use wirecell::runtime::Runtime;
+
+fn main() -> anyhow::Result<()> {
+    let n: usize = std::env::args()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(10_000);
+    let repeat = 3;
+
+    let cfg = SimConfig::default();
+    let wl = workload(&cfg, n)?;
+    let params = cfg.raster_params();
+    let pool = RandomPool::shared(cfg.seed, cfg.pool_size);
+    let rt = Arc::new(Runtime::open(std::path::Path::new(&cfg.artifacts_dir))?);
+
+    let mut table = Table::new(
+        &format!("portability matrix — {n} depos, mean of {repeat} runs"),
+        &["Backend", "Strategy", "Total [s]", "2D sampling [s]", "Fluctuation [s]", "Throughput [depo/ms]"],
+    );
+
+    let mut add = |be: &mut dyn ExecBackend, strategy: &str| -> anyhow::Result<()> {
+        let (t, wall, patches) = time_backend(be, &wl, repeat)?;
+        table.row(&[
+            be.label(),
+            strategy.to_string(),
+            format!("{wall:.3}"),
+            format!("{:.3}", t.sampling_s),
+            format!("{:.3}", t.fluctuation_s),
+            format!("{:.1}", patches as f64 / wall / 1e3),
+        ]);
+        Ok(())
+    };
+
+    // serial rows (strategy is moot: one thread, no dispatch)
+    for mode in [
+        FluctuationMode::Inline,
+        FluctuationMode::Pool,
+        FluctuationMode::None,
+    ] {
+        let mut be = SerialBackend::new(params, mode, cfg.seed, Some(pool.clone()));
+        add(&mut be, "-")?;
+    }
+
+    // host-parallel rows
+    for strategy in [Strategy::PerDepo, Strategy::Batched] {
+        for threads in [1, 2, 4, 8] {
+            let tp = Arc::new(ThreadPool::new(threads));
+            let mut be = ThreadedBackend::new(params, strategy, threads, tp, pool.clone(), cfg.seed);
+            add(&mut be, strategy.as_str())?;
+        }
+    }
+
+    // device rows
+    for strategy in [Strategy::PerDepo, Strategy::Batched] {
+        let mut be = PjrtBackend::new(rt.clone(), "small", strategy, params, pool.clone())?;
+        add(&mut be, strategy.as_str())?;
+    }
+
+    println!("{}", table.render());
+    println!(
+        "note: per-depo = paper Figure 3 (dispatch-bound), batched = Figure 4 (amortized)."
+    );
+    Ok(())
+}

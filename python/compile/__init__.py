@@ -1,0 +1,1 @@
+"""Build-time compile path: L1 pallas kernels, L2 jax model, AOT export."""

@@ -1,0 +1,175 @@
+"""AOT export: lower every L2 graph to HLO text for the Rust runtime.
+
+Interchange format is HLO *text*, not a serialized ``HloModuleProto``:
+jax >= 0.5 emits protos with 64-bit instruction ids which the published
+``xla`` crate's xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``);
+the text parser reassigns ids and round-trips cleanly (see
+/opt/xla-example/README.md).
+
+Each artifact gets an entry in ``artifacts/manifest.json`` recording its
+input/output shapes and the grid constants baked into the graph, so the
+Rust loader can construct bit-identical grids and literals.
+
+Usage:  python -m compile.aot --out-dir ../artifacts
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(fn, *avals) -> str:
+    """Lower a function to HLO text via stablehlo (return_tuple=True)."""
+    lowered = jax.jit(fn).lower(*avals)
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def f32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def i32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.int32)
+
+
+def grid_meta(grid: model.GridModel) -> dict:
+    return {
+        "nwires": grid.nwires,
+        "nticks": grid.nticks,
+        "pitch": grid.pitch,
+        "tick": grid.tick,
+        "pitch_oversample": grid.pitch_oversample,
+        "time_oversample": grid.time_oversample,
+        "patch_p": model.P,
+        "patch_t": model.T,
+    }
+
+
+def build_all(out_dir: str, grids: dict, batch: int = model.BATCH) -> dict:
+    """Lower every artifact; returns the manifest dict."""
+    os.makedirs(out_dir, exist_ok=True)
+    manifest = {"batch": batch, "block": model.BLOCK, "artifacts": {}}
+
+    def emit(name: str, fn, avals: list, meta: dict):
+        text = to_hlo_text(fn, *avals)
+        path = os.path.join(out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        manifest["artifacts"][name] = {
+            "file": f"{name}.hlo.txt",
+            "inputs": [
+                {"shape": list(a.shape), "dtype": a.dtype.name} for a in avals
+            ],
+            **meta,
+        }
+        print(f"wrote {path} ({len(text)} chars)")
+
+    for gname, grid in grids.items():
+        nspec = (grid.nwires, grid.nticks // 2 + 1)
+        # Figure-3 unit: one depo per dispatch.
+        emit(
+            f"raster_single_{gname}",
+            model.make_raster_single(grid),
+            [f32(1, 5), i32(1, 2), f32(1, model.P, model.T)],
+            {"grid": grid_meta(grid), "strategy": "per-depo"},
+        )
+        # Figure-4 stage 1: batched rasterization.
+        emit(
+            f"raster_batch_{gname}",
+            model.make_raster_batch(grid, batch),
+            [f32(batch, 5), i32(batch, 2), f32(batch, model.P, model.T)],
+            {"grid": grid_meta(grid), "strategy": "batched"},
+        )
+        # Figure-4 full: fused device-resident pipeline.
+        emit(
+            f"fused_pipeline_{gname}",
+            model.make_fused_pipeline(grid, batch),
+            [
+                f32(batch, 5),
+                i32(batch, 2),
+                f32(batch, model.P, model.T),
+                f32(*nspec),
+                f32(*nspec),
+            ],
+            {"grid": grid_meta(grid), "strategy": "fused"},
+        )
+        # The paper's two CUDA kernels, separately dispatchable so the
+        # Table-2/3 timing columns (2D sampling vs fluctuation) map to
+        # distinct execute() calls.  B=1 variants drive the per-depo
+        # (Figure-3) strategy; batched variants the host side of ablations.
+        emit(
+            f"raster_sample_single_{gname}",
+            model.make_raster_sample(grid, 1),
+            [f32(1, 5), i32(1, 2)],
+            {"grid": grid_meta(grid), "strategy": "per-depo"},
+        )
+        emit(
+            f"fluct_single_{gname}",
+            model.make_fluct_only(grid, 1),
+            [f32(1, model.P, model.T), f32(1), f32(1, model.P, model.T)],
+            {"grid": grid_meta(grid), "strategy": "per-depo"},
+        )
+        emit(
+            f"raster_sample_batch_{gname}",
+            model.make_raster_sample(grid, batch),
+            [f32(batch, 5), i32(batch, 2)],
+            {"grid": grid_meta(grid), "strategy": "batched"},
+        )
+        emit(
+            f"fluct_batch_{gname}",
+            model.make_fluct_only(grid, batch),
+            [f32(batch, model.P, model.T), f32(batch),
+             f32(batch, model.P, model.T)],
+            {"grid": grid_meta(grid), "strategy": "batched"},
+        )
+        # Figure-4 staged variant: per-batch raster+scatter with
+        # device-side grid accumulation; FT runs once per event.
+        emit(
+            f"raster_scatter_{gname}",
+            model.make_raster_scatter(grid, batch),
+            [
+                f32(batch, 5),
+                i32(batch, 2),
+                f32(batch, model.P, model.T),
+            ],
+            {"grid": grid_meta(grid), "strategy": "batched"},
+        )
+        # FT stage alone (ablation + the Rust FT-offload backend).
+        emit(
+            f"ft_only_{gname}",
+            model.make_ft_only(grid),
+            [f32(grid.nwires, grid.nticks), f32(*nspec), f32(*nspec)],
+            {"grid": grid_meta(grid), "strategy": "ft"},
+        )
+
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+    return manifest
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--batch", type=int, default=model.BATCH)
+    args = ap.parse_args()
+    grids = {
+        "small": model.test_small_grid(),
+        "bench": model.bench_grid(),
+    }
+    build_all(args.out_dir, grids, args.batch)
+
+
+if __name__ == "__main__":
+    main()

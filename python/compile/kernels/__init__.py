@@ -1,0 +1,1 @@
+"""L1 kernels: Pallas rasterization + pure-jnp oracles."""

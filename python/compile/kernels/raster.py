@@ -1,0 +1,110 @@
+"""L1 Pallas kernel: batched charge rasterization.
+
+The paper's CUDA port rasterized one 20x20 patch per GPU thread block
+(§3) — one tiny kernel per depo, which Table 2 shows to be dispatch- and
+transfer-bound.  The TPU re-think (DESIGN.md §Hardware-Adaptation) maps
+the *batch* dimension onto the Pallas grid instead: each program
+instance owns a block of depos resident in VMEM, computes the two erf
+bin-mass vectors per depo on the VPU, forms the outer product, and
+applies the pool-based fluctuation — the batched "Figure 4" formulation.
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; interpret mode lowers to plain HLO so the artifact runs on
+the Rust runtime's CPU client.  Real-TPU resource estimates live in
+DESIGN.md §Perf-Estimates.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import P, T, erf_approx
+
+# Depos per Pallas program instance (VMEM block).
+BLOCK = 64
+
+
+def _raster_kernel(params_ref, windows_ref, normals_ref, out_ref, *,
+                   pitch_origin, pitch_binsize, time_origin, time_binsize,
+                   fluctuate):
+    """Kernel body: rasterize one block of depos.
+
+    params_ref:  [BLOCK, 5] f32 in VMEM
+    windows_ref: [BLOCK, 2] i32
+    normals_ref: [BLOCK, P, T] f32
+    out_ref:     [BLOCK, P, T] f32
+    """
+    params = params_ref[...]
+    windows = windows_ref[...]
+    pitch = params[:, 0]
+    time = params[:, 1]
+    sp = params[:, 2]
+    st = params[:, 3]
+    q = params[:, 4]
+
+    def masses(center, sigma, bin0, binsize, origin, nbins):
+        idx = jnp.arange(nbins + 1, dtype=jnp.float32)
+        edges = origin + (bin0[:, None].astype(jnp.float32) + idx[None, :]) * binsize
+        inv = 1.0 / (sigma[:, None] * jnp.sqrt(jnp.float32(2.0)))
+        e = erf_approx((edges - center[:, None]) * inv)
+        return 0.5 * (e[:, 1:] - e[:, :-1])
+
+    wp = masses(pitch, sp, windows[:, 0], pitch_binsize, pitch_origin, P)
+    wt = masses(time, st, windows[:, 1], time_binsize, time_origin, T)
+    w = wp[:, :, None] * wt[:, None, :]
+    total = jnp.sum(w, axis=(1, 2), keepdims=True)
+    w = jnp.where(total > 0.0, w / total, 0.0)
+    if fluctuate:
+        z = normals_ref[...]
+        n = jnp.round(q)[:, None, None]
+        mean = n * w
+        sigma = jnp.sqrt(jnp.maximum(mean * (1.0 - w), 0.0))
+        out = jnp.clip(jnp.round(mean + sigma * z), 0.0, n)
+    else:
+        out = q[:, None, None] * w
+    out_ref[...] = out.astype(jnp.float32)
+
+
+def raster_pallas(params, windows, normals, *, pitch_origin, pitch_binsize,
+                  time_origin, time_binsize, fluctuate=True):
+    """Batched rasterization as a pallas_call.
+
+    params: [B, 5] f32; windows: [B, 2] i32; normals: [B, P, T] f32.
+    Any B works (padded internally to a BLOCK multiple).
+    Returns [B, P, T] f32.
+    """
+    b = params.shape[0]
+    if b % BLOCK != 0:
+        # pad to a whole number of blocks; sliced off below
+        pad = BLOCK - b % BLOCK
+        params = jnp.concatenate([params, jnp.zeros((pad, 5), params.dtype)])
+        windows = jnp.concatenate([windows, jnp.zeros((pad, 2), windows.dtype)])
+        normals = jnp.concatenate(
+            [normals, jnp.zeros((pad, P, T), normals.dtype)])
+    bp = params.shape[0]
+    grid = (bp // BLOCK,)
+    kernel = functools.partial(
+        _raster_kernel,
+        pitch_origin=pitch_origin,
+        pitch_binsize=pitch_binsize,
+        time_origin=time_origin,
+        time_binsize=time_binsize,
+        fluctuate=fluctuate,
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((BLOCK, 5), lambda i: (i, 0)),
+            pl.BlockSpec((BLOCK, 2), lambda i: (i, 0)),
+            pl.BlockSpec((BLOCK, P, T), lambda i: (i, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((BLOCK, P, T), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((bp, P, T), jnp.float32),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(params, windows, normals)
+    return out[:b]

@@ -1,0 +1,251 @@
+"""L2 JAX model: the signal-simulation compute graphs.
+
+Each public function is a jax-jittable graph over *static* shapes that
+``aot.py`` lowers once to HLO text for the Rust runtime.  The graphs
+call the L1 Pallas kernel (``kernels.raster``) so the kernel lowers into
+the same HLO module — the three-layer contract.
+
+Graph inventory (the paper's porting strategies):
+
+* ``raster_single``  — one depo, one 20x20 patch: the Figure-3 per-depo
+  offload unit (deliberately tiny, so the dispatch overhead the paper
+  measures in Tables 2-3 is visible).
+* ``raster_batch``   — B depos per dispatch: the first step of the
+  Figure-4 strategy (batched transfer, batched compute).
+* ``fused_pipeline`` — rasterize → scatter-add → fold → FT (Eq. 2), all
+  device-resident: the complete Figure-4 data flow with one transfer in
+  and one out.
+
+A ``GridModel`` bundles the static geometry constants every graph bakes
+in; ``aot.py`` instantiates it per detector preset and records the
+values in the artifact manifest so the Rust side constructs identical
+grids.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import raster as kraster
+from .kernels import ref as kref
+
+P = kref.P
+T = kref.T
+BLOCK = kraster.BLOCK
+
+# Default dispatch batch for the Figure-4 strategy artifacts.
+BATCH = 256
+
+
+@dataclasses.dataclass(frozen=True)
+class GridModel:
+    """Static grid geometry shared by all graphs of one plane."""
+
+    nwires: int
+    nticks: int
+    pitch: float            # wire pitch [mm]
+    tick: float             # sample period [ns]
+    pitch_oversample: int
+    time_oversample: int
+
+    @property
+    def fine_shape(self):
+        return (self.nwires * self.pitch_oversample,
+                self.nticks * self.time_oversample)
+
+    @property
+    def pitch_binsize(self):
+        return self.pitch / self.pitch_oversample
+
+    @property
+    def time_binsize(self):
+        return self.tick / self.time_oversample
+
+    @property
+    def pitch_origin(self):
+        # fine bin 0 lower edge: -pitch/2 (wire 0 strip start)
+        return -0.5 * self.pitch
+
+    @property
+    def time_origin(self):
+        return 0.0
+
+    def raster_kwargs(self):
+        # plain python floats: static constants baked into the kernel
+        return dict(
+            pitch_origin=float(self.pitch_origin),
+            pitch_binsize=float(self.pitch_binsize),
+            time_origin=float(self.time_origin),
+            time_binsize=float(self.time_binsize),
+        )
+
+
+def test_small_grid(pos: int = 5, tos: int = 2) -> GridModel:
+    """Grid constants matching ``Detector::test_small`` in Rust."""
+    return GridModel(nwires=560, nticks=1024, pitch=3.0, tick=500.0,
+                     pitch_oversample=pos, time_oversample=tos)
+
+
+def bench_grid(pos: int = 5, tos: int = 2) -> GridModel:
+    """Mid-size grid for the strategy benchmarks (fits comfortably in
+    memory while keeping the FT stage non-trivial)."""
+    return GridModel(nwires=512, nticks=2048, pitch=3.0, tick=500.0,
+                     pitch_oversample=pos, time_oversample=tos)
+
+
+def make_raster_single(grid: GridModel, fluctuate: bool = True):
+    """One-depo rasterization graph (Figure-3 unit of offload)."""
+
+    def fn(params, windows, normals):
+        # params [1,5] f32, windows [1,2] i32, normals [1,P,T] f32
+        # Pad the single depo to one pallas BLOCK.
+        reps = BLOCK
+        p = jnp.tile(params, (reps, 1))
+        w = jnp.tile(windows, (reps, 1))
+        z = jnp.tile(normals, (reps, 1, 1))
+        out = kraster.raster_pallas(p, w, z, fluctuate=fluctuate,
+                                    **grid.raster_kwargs())
+        return (out[:1],)
+
+    return fn
+
+
+def make_raster_batch(grid: GridModel, batch: int = BATCH,
+                      fluctuate: bool = True):
+    """Batched rasterization graph (Figure-4, stage 1)."""
+
+    def fn(params, windows, normals):
+        out = kraster.raster_pallas(params, windows, normals,
+                                    fluctuate=fluctuate,
+                                    **grid.raster_kwargs())
+        return (out,)
+
+    return fn
+
+
+def make_fused_pipeline(grid: GridModel, batch: int = BATCH,
+                        fluctuate: bool = True):
+    """Device-resident rasterize → scatter → fold → FT graph (Figure 4).
+
+    Inputs:
+      params  [B, 5] f32, windows [B, 2] i32, normals [B, P, T] f32,
+      r_re/r_im [NW, NT//2+1] f32 — the pre-computed response spectrum.
+    Output: measured grid M [NW, NT] f32.
+    """
+
+    def fn(params, windows, normals, r_re, r_im):
+        patches = kraster.raster_pallas(params, windows, normals,
+                                        fluctuate=fluctuate,
+                                        **grid.raster_kwargs())
+        coarse = kref.scatter_coarse_ref(
+            patches, windows, coarse_shape=(grid.nwires, grid.nticks),
+            pos=grid.pitch_oversample, tos=grid.time_oversample)
+        return (kref.ft_ref(coarse, r_re, r_im),)
+
+    return fn
+
+
+def make_raster_scatter(grid: GridModel, batch: int = BATCH,
+                        fluctuate: bool = True):
+    """Figure-4 per-batch stage: rasterize a batch and scatter it onto
+    the coarse grid, returned for (cheap, linear) host-side
+    accumulation.  The expensive FT then runs once per event via
+    ``make_ft_only`` — the staged Figure-4 data flow."""
+
+    def fn(params, windows, normals):
+        patches = kraster.raster_pallas(params, windows, normals,
+                                        fluctuate=fluctuate,
+                                        **grid.raster_kwargs())
+        coarse = kref.scatter_coarse_ref(
+            patches, windows, coarse_shape=(grid.nwires, grid.nticks),
+            pos=grid.pitch_oversample, tos=grid.time_oversample)
+        return (coarse,)
+
+    return fn
+
+
+def make_raster_sample(grid: GridModel, batch: int = BATCH):
+    """2D-sampling sub-step alone (no fluctuation): the paper's first
+    CUDA kernel.  Same inputs as ``raster_batch`` minus the normals."""
+
+    def fn(params, windows):
+        b = params.shape[0]
+        if b < BLOCK:
+            # pad tiny dispatches (the per-depo strategy) to one block
+            reps = BLOCK // b + (BLOCK % b > 0)
+            params_x = jnp.tile(params, (reps, 1))[:BLOCK]
+            windows_x = jnp.tile(windows, (reps, 1))[:BLOCK]
+        else:
+            params_x, windows_x = params, windows
+        zeros = jnp.zeros((params_x.shape[0], P, T), jnp.float32)
+        out = kraster.raster_pallas(params_x, windows_x, zeros,
+                                    fluctuate=False, **grid.raster_kwargs())
+        return (out[:b],)
+
+    return fn
+
+
+def make_fluct_only(grid: GridModel, batch: int = BATCH):
+    """Fluctuation sub-step alone: the paper's second CUDA kernel.
+
+    Takes the un-fluctuated mean patches (``vpatch = q*w``), the charges
+    and pool normals; reconstructs w = v/q and applies the
+    normal-approximation binomial — bitwise the same arithmetic as the
+    fused kernel's fluctuation branch.
+    """
+
+    def fn(vpatch, charge, normals):
+        q = charge[:, None, None]
+        n = jnp.round(q)
+        w = jnp.where(q > 0.0, vpatch / q, 0.0)
+        mean = n * w
+        sigma = jnp.sqrt(jnp.maximum(mean * (1.0 - w), 0.0))
+        out = jnp.clip(jnp.round(mean + sigma * normals), 0.0, n)
+        return (out.astype(jnp.float32),)
+
+    return fn
+
+
+def make_scatter_fold(grid: GridModel, batch: int = BATCH):
+    """Scatter + fold alone (for the scatter-offload ablation)."""
+
+    def fn(patches, windows):
+        fine = kref.scatter_ref(patches, windows, fine_shape=grid.fine_shape)
+        return (kref.fold_ref(fine, pos=grid.pitch_oversample,
+                              tos=grid.time_oversample),)
+
+    return fn
+
+
+def make_ft_only(grid: GridModel):
+    """FT stage alone: S → M on the coarse grid (Eq. 2)."""
+
+    def fn(coarse, r_re, r_im):
+        return (kref.ft_ref(coarse, r_re, r_im),)
+
+    return fn
+
+
+def example_args(grid: GridModel, batch: int, seed: int = 0):
+    """Realistic example inputs for lowering and python-side tests."""
+    key = jax.random.PRNGKey(seed)
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    fp, ft = grid.fine_shape
+    pitch = jax.random.uniform(k1, (batch,), minval=0.0,
+                               maxval=grid.nwires * grid.pitch)
+    time = jax.random.uniform(k2, (batch,), minval=0.0,
+                              maxval=grid.nticks * grid.tick)
+    sp = jax.random.uniform(k3, (batch,), minval=0.4, maxval=3.0)
+    st = jax.random.uniform(k4, (batch,), minval=200.0, maxval=1500.0)
+    q = jnp.full((batch,), 6000.0, dtype=jnp.float32)
+    params = jnp.stack([pitch, time, sp, st, q], axis=1).astype(jnp.float32)
+    # window origins centered on the depo
+    pb = jnp.floor((pitch - grid.pitch_origin) / grid.pitch_binsize).astype(jnp.int32) - P // 2
+    tb = jnp.floor(time / grid.time_binsize).astype(jnp.int32) - T // 2
+    windows = jnp.stack([pb, tb], axis=1)
+    normals = jax.random.normal(jax.random.PRNGKey(seed + 1),
+                                (batch, P, T), dtype=jnp.float32)
+    return params, windows, normals

@@ -1,0 +1,162 @@
+"""L1 correctness: Pallas kernel vs pure-jnp oracle.
+
+The core correctness signal of the compile path: the pallas_call
+(interpret mode) must agree with ``kernels.ref`` bit-for-bit-ish over a
+hypothesis sweep of shapes, grid constants and depo parameters.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import raster as kraster
+from compile.kernels import ref as kref
+
+GRID = model.test_small_grid()
+
+
+def assert_patches_match(got, want):
+    """Fluctuated patches: rounding can flip a bin by one electron when
+    the pallas and jit paths differ in the last f32 ulp, so require
+    near-exact agreement rather than strict allclose."""
+    got = np.asarray(got)
+    want = np.asarray(want)
+    diff = np.abs(got - want)
+    # one electron of rounding flip, plus the f32 ulp scale of the
+    # largest bin (a 1-ulp mean difference rounds to +-1 at any
+    # magnitude; at ~1e5 electrons/bin it can round to +-2)
+    tol = 1.0 + 3e-5 * float(want.max()) + 1e-3
+    assert diff.max() <= tol, f"max diff {diff.max()} (tol {tol})"
+    frac = (diff > 1e-3).mean()
+    assert frac < 0.01, f"{frac:.2%} of bins differ"
+    np.testing.assert_allclose(got.sum(), want.sum(),
+                               rtol=1e-4, atol=got.shape[0] * 2.0)
+
+
+def ref_kwargs(grid):
+    return dict(
+        pitch_origin=grid.pitch_origin,
+        pitch_binsize=grid.pitch_binsize,
+        time_origin=grid.time_origin,
+        time_binsize=grid.time_binsize,
+    )
+
+
+def make_inputs(batch, seed=0, charge=6000.0):
+    params, windows, normals = model.example_args(GRID, batch, seed)
+    params = params.at[:, 4].set(charge)
+    return params, windows, normals
+
+
+class TestPallasVsRef:
+    @pytest.mark.parametrize("batch", [32, 64, 256])
+    def test_fluctuated_matches_ref(self, batch):
+        params, windows, normals = make_inputs(batch)
+        got = kraster.raster_pallas(params, windows, normals,
+                                    **GRID.raster_kwargs())
+        want = kref.raster_ref(params, windows, normals, **ref_kwargs(GRID))
+        assert_patches_match(got, want)
+
+    @pytest.mark.parametrize("batch", [32, 128])
+    def test_unfluctuated_matches_ref(self, batch):
+        params, windows, normals = make_inputs(batch)
+        got = kraster.raster_pallas(params, windows, normals,
+                                    fluctuate=False, **GRID.raster_kwargs())
+        want = kref.raster_ref_nofluct(params, windows, **ref_kwargs(GRID))
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-3, atol=0.05)
+
+    def test_odd_batch_is_padded_internally(self):
+        params, windows, normals = make_inputs(32)
+        got = kraster.raster_pallas(params[:7], windows[:7], normals[:7],
+                                    **GRID.raster_kwargs())
+        assert got.shape == (7, kref.P, kref.T)
+        want = kref.raster_ref(params[:7], windows[:7], normals[:7],
+                               **ref_kwargs(GRID))
+        assert_patches_match(got, want)
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        seed=st.integers(0, 2**16),
+        charge=st.floats(10.0, 1e6),
+        sp=st.floats(0.05, 8.0),
+        st_=st.floats(50.0, 4000.0),
+    )
+    def test_hypothesis_sweep(self, seed, charge, sp, st_):
+        """Sweep depo parameters: kernel == oracle for any physical input."""
+        params, windows, normals = make_inputs(kraster.BLOCK, seed, charge)
+        params = params.at[:, 2].set(sp).at[:, 3].set(st_)
+        got = kraster.raster_pallas(params, windows, normals,
+                                    **GRID.raster_kwargs())
+        want = kref.raster_ref(params, windows, normals, **ref_kwargs(GRID))
+        assert_patches_match(got, want)
+
+    @settings(max_examples=10, deadline=None)
+    @given(
+        pos=st.integers(1, 10),
+        tos=st.integers(1, 4),
+        nwires=st.integers(16, 600),
+        nticks=st.sampled_from([256, 512, 1024]),
+    )
+    def test_hypothesis_grid_sweep(self, pos, tos, nwires, nticks):
+        """Sweep grid constants: any detector geometry agrees."""
+        grid = model.GridModel(nwires=nwires, nticks=nticks, pitch=3.0,
+                               tick=500.0, pitch_oversample=pos,
+                               time_oversample=tos)
+        params, windows, normals = model.example_args(grid, kraster.BLOCK, 3)
+        got = kraster.raster_pallas(params, windows, normals,
+                                    **grid.raster_kwargs())
+        want = kref.raster_ref(params, windows, normals, **ref_kwargs(grid))
+        assert_patches_match(got, want)
+
+
+class TestOracleProperties:
+    def test_unfluctuated_conserves_charge(self):
+        params, windows, _ = make_inputs(64, charge=5000.0)
+        out = kref.raster_ref_nofluct(params, windows, **ref_kwargs(GRID))
+        np.testing.assert_allclose(np.asarray(out.sum(axis=(1, 2))),
+                                   5000.0, rtol=1e-4)
+
+    def test_fluctuated_mean_is_charge(self):
+        # across many normal draws the mean total equals the charge
+        params, windows, _ = make_inputs(kraster.BLOCK, charge=3000.0)
+        totals = []
+        for s in range(30):
+            normals = jax.random.normal(jax.random.PRNGKey(s),
+                                        (kraster.BLOCK, kref.P, kref.T),
+                                        dtype=jnp.float32)
+            out = kref.raster_ref(params, windows, normals,
+                                  **ref_kwargs(GRID))
+            totals.append(np.asarray(out.sum(axis=(1, 2))))
+        mean = np.mean(totals)
+        assert abs(mean - 3000.0) < 25.0, mean
+
+    def test_patches_are_non_negative_and_bounded(self):
+        params, windows, normals = make_inputs(64, seed=5, charge=777.0)
+        out = np.asarray(kref.raster_ref(params, windows, normals,
+                                         **ref_kwargs(GRID)))
+        assert (out >= 0).all()
+        assert (out <= 777.0).all()
+
+    def test_zero_normals_equal_rounded_mean(self):
+        params, windows, _ = make_inputs(32, charge=4000.0)
+        zeros = jnp.zeros((32, kref.P, kref.T), jnp.float32)
+        fluct = np.asarray(kref.raster_ref(params, windows, zeros,
+                                           **ref_kwargs(GRID)))
+        mean = np.asarray(kref.raster_ref_nofluct(params, windows,
+                                                  **ref_kwargs(GRID)))
+        np.testing.assert_allclose(fluct, np.round(mean), atol=0.5)
+
+    def test_weights_peak_near_center(self):
+        params, windows, _ = make_inputs(16, seed=9)
+        out = np.asarray(kref.raster_ref_nofluct(params, windows,
+                                                 **ref_kwargs(GRID)))
+        # argmax should be near the middle of each patch
+        for b in range(16):
+            i = out[b].argmax()
+            p, t = divmod(i, kref.T)
+            assert abs(p - kref.P // 2) <= 2, (b, p)
+            assert abs(t - kref.T // 2) <= 2, (b, t)

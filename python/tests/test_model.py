@@ -1,0 +1,179 @@
+"""L2 graph tests: scatter/fold/FT stages and the fused pipeline."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import ref as kref
+
+GRID = model.test_small_grid()
+
+
+class TestScatterFold:
+    def test_scatter_places_patch(self):
+        patches = jnp.ones((1, kref.P, kref.T), jnp.float32)
+        windows = jnp.array([[10, 20]], jnp.int32)
+        fine = kref.scatter_ref(patches, windows, fine_shape=GRID.fine_shape)
+        assert float(fine.sum()) == kref.P * kref.T
+        assert float(fine[10, 20]) == 1.0
+        assert float(fine[10 + kref.P - 1, 20 + kref.T - 1]) == 1.0
+        assert float(fine[9, 20]) == 0.0
+
+    def test_scatter_drops_out_of_range(self):
+        patches = jnp.ones((2, kref.P, kref.T), jnp.float32)
+        windows = jnp.array([[-5, -5], [10**6, 10**6]], jnp.int32)
+        fine = kref.scatter_ref(patches, windows, fine_shape=GRID.fine_shape)
+        # first patch: only the in-range (P-5)x(T-5) corner lands
+        assert float(fine.sum()) == (kref.P - 5) * (kref.T - 5)
+
+    def test_overlapping_patches_accumulate(self):
+        patches = jnp.ones((2, kref.P, kref.T), jnp.float32)
+        windows = jnp.array([[10, 20], [10, 20]], jnp.int32)
+        fine = kref.scatter_ref(patches, windows, fine_shape=GRID.fine_shape)
+        assert float(fine[10, 20]) == 2.0
+
+    def test_fold_conserves_sum(self):
+        key = jax.random.PRNGKey(0)
+        fine = jax.random.uniform(key, GRID.fine_shape, jnp.float32)
+        coarse = kref.fold_ref(fine, pos=GRID.pitch_oversample,
+                               tos=GRID.time_oversample)
+        assert coarse.shape == (GRID.nwires, GRID.nticks)
+        np.testing.assert_allclose(float(coarse.sum()), float(fine.sum()),
+                                   rtol=1e-5)
+
+    def test_fold_groups_correct_bins(self):
+        fine = jnp.zeros(GRID.fine_shape, jnp.float32)
+        pos, tos = GRID.pitch_oversample, GRID.time_oversample
+        # all fine bins of wire 3 / tick 7
+        fine = fine.at[3 * pos:(3 + 1) * pos, 7 * tos:(7 + 1) * tos].set(1.0)
+        coarse = kref.fold_ref(fine, pos=pos, tos=tos)
+        assert float(coarse[3, 7]) == pos * tos
+        assert float(coarse.sum()) == pos * tos
+
+
+class TestFT:
+    def test_unit_response_is_identity(self):
+        key = jax.random.PRNGKey(1)
+        s = jax.random.uniform(key, (GRID.nwires, GRID.nticks), jnp.float32)
+        nspec = (GRID.nwires, GRID.nticks // 2 + 1)
+        m = kref.ft_ref(s, jnp.ones(nspec, jnp.float32),
+                        jnp.zeros(nspec, jnp.float32))
+        np.testing.assert_allclose(np.asarray(m), np.asarray(s), atol=1e-4)
+
+    def test_matches_numpy_reference(self):
+        rng = np.random.default_rng(2)
+        s = rng.random((64, 128), dtype=np.float32)
+        r = (rng.random((64, 65)) + 1j * rng.random((64, 65))).astype(np.complex64)
+        want = np.fft.irfft2(np.fft.rfft2(s) * r, s=s.shape)
+        got = kref.ft_ref(jnp.asarray(s), jnp.asarray(r.real),
+                          jnp.asarray(r.imag))
+        np.testing.assert_allclose(np.asarray(got), want, atol=1e-3)
+
+    @settings(max_examples=10, deadline=None)
+    @given(scale=st.floats(0.1, 100.0), seed=st.integers(0, 1000))
+    def test_linearity(self, scale, seed):
+        key = jax.random.PRNGKey(seed)
+        s = jax.random.uniform(key, (32, 64), jnp.float32)
+        nspec = (32, 33)
+        rr = jax.random.uniform(jax.random.PRNGKey(seed + 1), nspec)
+        ri = jax.random.uniform(jax.random.PRNGKey(seed + 2), nspec)
+        m1 = kref.ft_ref(s, rr, ri)
+        m2 = kref.ft_ref(s * scale, rr, ri)
+        np.testing.assert_allclose(np.asarray(m2), np.asarray(m1) * scale,
+                                   rtol=1e-3, atol=1e-3)
+
+
+class TestFusedPipeline:
+    def test_conserves_charge_with_unit_response(self):
+        batch = 64
+        params, windows, normals = model.example_args(GRID, batch, 7)
+        fused = model.make_fused_pipeline(GRID, batch)
+        nspec = (GRID.nwires, GRID.nticks // 2 + 1)
+        m, = fused(params, windows, normals,
+                   jnp.ones(nspec, jnp.float32), jnp.zeros(nspec, jnp.float32))
+        assert m.shape == (GRID.nwires, GRID.nticks)
+        # with R == 1 the FT stage is the identity, so the total equals
+        # the summed rasterized charge
+        patches = kref.raster_ref(
+            params, windows, normals,
+            pitch_origin=GRID.pitch_origin, pitch_binsize=GRID.pitch_binsize,
+            time_origin=GRID.time_origin, time_binsize=GRID.time_binsize)
+        fine = kref.scatter_ref(patches, windows, fine_shape=GRID.fine_shape)
+        np.testing.assert_allclose(float(m.sum()), float(fine.sum()),
+                                   rtol=1e-4)
+
+    def test_stages_compose(self):
+        """fused == raster |> scatter |> fold |> ft, stage by stage."""
+        batch = 32
+        params, windows, normals = model.example_args(GRID, batch, 11)
+        nspec = (GRID.nwires, GRID.nticks // 2 + 1)
+        rr = jax.random.uniform(jax.random.PRNGKey(1), nspec, jnp.float32)
+        ri = jax.random.uniform(jax.random.PRNGKey(2), nspec, jnp.float32)
+        fused = model.make_fused_pipeline(GRID, batch)
+        m_fused, = fused(params, windows, normals, rr, ri)
+        patches = kref.raster_ref(
+            params, windows, normals,
+            pitch_origin=GRID.pitch_origin, pitch_binsize=GRID.pitch_binsize,
+            time_origin=GRID.time_origin, time_binsize=GRID.time_binsize)
+        fine = kref.scatter_ref(patches, windows, fine_shape=GRID.fine_shape)
+        coarse = kref.fold_ref(fine, pos=GRID.pitch_oversample,
+                               tos=GRID.time_oversample)
+        m_staged = kref.ft_ref(coarse, rr, ri)
+        np.testing.assert_allclose(np.asarray(m_fused), np.asarray(m_staged),
+                                   rtol=1e-4, atol=1e-3)
+
+    def test_single_depo_graph(self):
+        params, windows, normals = model.example_args(GRID, 1, 13)
+        single = model.make_raster_single(GRID)
+        out, = single(params, windows, normals)
+        assert out.shape == (1, kref.P, kref.T)
+        want = kref.raster_ref(
+            params, windows, normals,
+            pitch_origin=GRID.pitch_origin, pitch_binsize=GRID.pitch_binsize,
+            time_origin=GRID.time_origin, time_binsize=GRID.time_binsize)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                                   rtol=1e-5, atol=1e-3)
+
+
+class TestScatterCoarse:
+    def test_matches_fold_of_fine_scatter(self):
+        key = jax.random.PRNGKey(5)
+        b = 64
+        patches = jax.random.uniform(key, (b, kref.P, kref.T), jnp.float32)
+        pb = jax.random.randint(jax.random.PRNGKey(6), (b,), -10,
+                                GRID.fine_shape[0] + 10, dtype=jnp.int32)
+        tb = jax.random.randint(jax.random.PRNGKey(7), (b,), -10,
+                                GRID.fine_shape[1] + 10, dtype=jnp.int32)
+        windows = jnp.stack([pb, tb], axis=1)
+        fine = kref.scatter_ref(patches, windows, fine_shape=GRID.fine_shape)
+        folded = kref.fold_ref(fine, pos=GRID.pitch_oversample,
+                               tos=GRID.time_oversample)
+        direct = kref.scatter_coarse_ref(
+            patches, windows, coarse_shape=(GRID.nwires, GRID.nticks),
+            pos=GRID.pitch_oversample, tos=GRID.time_oversample)
+        np.testing.assert_allclose(np.asarray(direct), np.asarray(folded),
+                                   rtol=1e-5, atol=1e-4)
+
+    def test_negative_windows_dropped(self):
+        patches = jnp.ones((1, kref.P, kref.T), jnp.float32)
+        windows = jnp.array([[-kref.P - 1, 0]], jnp.int32)
+        out = kref.scatter_coarse_ref(
+            patches, windows, coarse_shape=(GRID.nwires, GRID.nticks),
+            pos=GRID.pitch_oversample, tos=GRID.time_oversample)
+        assert float(out.sum()) == 0.0
+
+    def test_raster_scatter_graph_conserves_charge(self):
+        batch = 64
+        params, windows, normals = model.example_args(GRID, batch, 21)
+        fn = model.make_raster_scatter(GRID, batch)
+        coarse, = fn(params, windows, normals)
+        assert coarse.shape == (GRID.nwires, GRID.nticks)
+        patches = kref.raster_ref(
+            params, windows, normals,
+            pitch_origin=GRID.pitch_origin, pitch_binsize=GRID.pitch_binsize,
+            time_origin=GRID.time_origin, time_binsize=GRID.time_binsize)
+        np.testing.assert_allclose(float(coarse.sum()), float(patches.sum()),
+                                   rtol=1e-4)

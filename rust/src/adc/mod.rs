@@ -1,0 +1,94 @@
+//! Digitization: voltage waveform → ADC counts.
+
+/// ADC model: linear conversion with baseline, clamped to the
+/// converter's range (12-bit by default, like MicroBooNE).
+#[derive(Clone, Debug)]
+pub struct Digitizer {
+    /// Counts per voltage unit.
+    pub counts_per_volt: f64,
+    /// Baseline (pedestal) in counts.
+    pub baseline: f64,
+    /// Number of ADC bits.
+    pub bits: u32,
+}
+
+impl Digitizer {
+    /// MicroBooNE-like 12-bit digitizer: 2 V full scale, pedestal ~2048
+    /// for induction planes / ~400 for collection.
+    pub fn standard(baseline: f64) -> Self {
+        Self {
+            counts_per_volt: 4096.0 / 2.0,
+            baseline,
+            bits: 12,
+        }
+    }
+
+    /// Max representable count.
+    pub fn max_count(&self) -> u16 {
+        ((1u32 << self.bits) - 1) as u16
+    }
+
+    /// Digitize one sample (voltage in crate base units — the caller
+    /// supplies waveforms in volts via `units::VOLT`).
+    pub fn digitize(&self, volts: f64) -> u16 {
+        let counts = self.baseline + volts * self.counts_per_volt;
+        counts.round().clamp(0.0, self.max_count() as f64) as u16
+    }
+
+    /// Digitize a full waveform.
+    pub fn digitize_wave(&self, wave: &[f64]) -> Vec<u16> {
+        wave.iter().map(|&v| self.digitize(v)).collect()
+    }
+
+    /// Invert (for analysis/tests): counts → volts relative to baseline.
+    pub fn undigitize(&self, counts: u16) -> f64 {
+        (counts as f64 - self.baseline) / self.counts_per_volt
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn baseline_at_zero_volts() {
+        let d = Digitizer::standard(2048.0);
+        assert_eq!(d.digitize(0.0), 2048);
+    }
+
+    #[test]
+    fn linear_in_range() {
+        let d = Digitizer::standard(400.0);
+        let v = 0.1; // volts
+        let c = d.digitize(v);
+        assert_eq!(c, (400.0f64 + 0.1 * 2048.0).round() as u16);
+        // roundtrip within one LSB
+        assert!((d.undigitize(c) - v).abs() < 1.0 / d.counts_per_volt);
+    }
+
+    #[test]
+    fn saturates_high_and_low() {
+        let d = Digitizer::standard(2048.0);
+        assert_eq!(d.digitize(100.0), 4095);
+        assert_eq!(d.digitize(-100.0), 0);
+        assert_eq!(d.max_count(), 4095);
+    }
+
+    #[test]
+    fn wave_digitization() {
+        let d = Digitizer::standard(1000.0);
+        let wave = vec![0.0, 0.5, -0.25];
+        let adc = d.digitize_wave(&wave);
+        assert_eq!(adc, vec![1000, 2024, 488]);
+    }
+
+    #[test]
+    fn negative_swings_preserved_on_induction_baseline() {
+        // Induction planes sit mid-range so bipolar signals survive.
+        let d = Digitizer::standard(2048.0);
+        let lo = d.digitize(-0.5);
+        let hi = d.digitize(0.5);
+        assert!(lo > 0 && hi < 4095);
+        assert_eq!((2048 - lo as i32), (hi as i32 - 2048));
+    }
+}

@@ -1,0 +1,101 @@
+//! Portable execution backends — the paper's evaluation axis.
+//!
+//! One user-level API ([`ExecBackend::rasterize`]) over three backends,
+//! mirroring the Kokkos single-source / multi-backend model the paper
+//! evaluates:
+//!
+//! | paper           | here                                         |
+//! |-----------------|----------------------------------------------|
+//! | ref-CPU         | [`SerialBackend`] + `Fluctuation::Inline`    |
+//! | ref-CPU-noRNG   | [`SerialBackend`] + `Fluctuation::None`      |
+//! | Kokkos-OMP (n)  | [`ThreadedBackend`] with n pool threads      |
+//! | ref-CUDA / Kokkos-CUDA | [`PjrtBackend`] (AOT XLA artifacts)   |
+//!
+//! The *strategy* dimension (paper Figures 3 vs 4) is orthogonal:
+//! `Strategy::PerDepo` dispatches one tiny kernel per depo (the paper's
+//! initial port; dominated by dispatch/transfer overhead), while
+//! `Strategy::Batched` processes depos in large blocks (the proposed
+//! fix).  Both are implemented for every backend so the benches can
+//! fill the full matrix.
+//!
+//! Stage timings are split into the paper's two columns —
+//! "2D sampling" and "fluctuation" — at the same boundaries the paper
+//! instruments (for the device path: sampling includes the h→d
+//! transfer, fluctuation the d→h read-back; Table 2's annotations).
+
+mod pjrt;
+mod serial;
+mod threaded;
+
+pub use pjrt::PjrtBackend;
+pub use serial::SerialBackend;
+pub use threaded::ThreadedBackend;
+
+use crate::raster::{DepoView, GridSpec, Patch};
+use anyhow::Result;
+
+/// Accumulated sub-step wall-clock, in seconds (Table 2/3 columns).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct StageTimings {
+    /// "2D sampling" column (device: incl. h→d).
+    pub sampling_s: f64,
+    /// "Fluctuation" column (device: incl. d→h).
+    pub fluctuation_s: f64,
+    /// Anything not attributable to either (dispatch bookkeeping).
+    pub other_s: f64,
+}
+
+impl StageTimings {
+    /// Total rasterization time.
+    pub fn total(&self) -> f64 {
+        self.sampling_s + self.fluctuation_s + self.other_s
+    }
+
+    /// Accumulate another timing set.
+    pub fn add(&mut self, other: &StageTimings) {
+        self.sampling_s += other.sampling_s;
+        self.fluctuation_s += other.fluctuation_s;
+        self.other_s += other.other_s;
+    }
+}
+
+/// Result of rasterizing a workload.
+pub struct RasterOutput {
+    /// The rasterized patches (order matches the input views).
+    pub patches: Vec<Patch>,
+    /// Stage timing split.
+    pub timings: StageTimings,
+}
+
+/// The portable backend API (Kokkos analog): rasterize a batch of depo
+/// views on whatever execution space the implementation owns.
+/// `Send` so backends can ride dataflow-engine node threads.
+pub trait ExecBackend: Send {
+    /// Row label used in benchmark tables ("ref-CPU", "Kokkos-OMP 4", ...).
+    fn label(&self) -> String;
+
+    /// Rasterize the views into patches, timing the two sub-steps.
+    fn rasterize(&mut self, views: &[DepoView], spec: &GridSpec) -> Result<RasterOutput>;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stage_timings_accumulate() {
+        let mut a = StageTimings {
+            sampling_s: 1.0,
+            fluctuation_s: 2.0,
+            other_s: 0.5,
+        };
+        let b = StageTimings {
+            sampling_s: 0.25,
+            fluctuation_s: 0.25,
+            other_s: 0.0,
+        };
+        a.add(&b);
+        assert_eq!(a.total(), 4.0);
+        assert_eq!(a.sampling_s, 1.25);
+    }
+}

@@ -1,0 +1,185 @@
+//! Serial CPU backend: the paper's original reference implementation.
+
+use super::{ExecBackend, RasterOutput, StageTimings};
+use crate::config::FluctuationMode;
+use crate::raster::{fluctuate, patch_window, sample_2d, DepoView, Fluctuation, GridSpec, Patch, RasterParams};
+use crate::rng::{Pcg32, RandomPool};
+use anyhow::Result;
+use std::sync::Arc;
+use std::time::Instant;
+
+/// The ref-CPU / ref-CPU-noRNG rows: one thread, straightforward loop,
+/// RNG either inline (expensive, the paper's Table-2 headline) or from
+/// a pre-computed pool.
+pub struct SerialBackend {
+    params: RasterParams,
+    mode: FluctuationMode,
+    rng: Pcg32,
+    pool: Option<Arc<RandomPool>>,
+}
+
+impl SerialBackend {
+    /// Construct; `pool` is required for `FluctuationMode::Pool`.
+    pub fn new(
+        params: RasterParams,
+        mode: FluctuationMode,
+        seed: u64,
+        pool: Option<Arc<RandomPool>>,
+    ) -> Self {
+        assert!(
+            mode != FluctuationMode::Pool || pool.is_some(),
+            "pool mode needs a RandomPool"
+        );
+        Self {
+            params,
+            mode,
+            rng: Pcg32::seeded(seed),
+            pool,
+        }
+    }
+}
+
+impl ExecBackend for SerialBackend {
+    fn label(&self) -> String {
+        match self.mode {
+            FluctuationMode::Inline => "ref-CPU".into(),
+            FluctuationMode::None => "ref-CPU-noRNG".into(),
+            FluctuationMode::Pool => "ref-CPU-pool".into(),
+        }
+    }
+
+    fn rasterize(&mut self, views: &[DepoView], spec: &GridSpec) -> Result<RasterOutput> {
+        let mut patches = Vec::with_capacity(views.len());
+        let mut timings = StageTimings::default();
+        for view in views {
+            let Some(window) = patch_window(view, spec, &self.params) else {
+                continue;
+            };
+            // Sub-step 1: 2D sampling.
+            let t0 = Instant::now();
+            let weights = sample_2d(view, spec, &self.params, window);
+            let t1 = Instant::now();
+            // Sub-step 2: fluctuation.
+            let values = match self.mode {
+                FluctuationMode::None => fluctuate(&weights, view.charge, &mut Fluctuation::None),
+                FluctuationMode::Inline => fluctuate(
+                    &weights,
+                    view.charge,
+                    &mut Fluctuation::InlineBinomial(&mut self.rng),
+                ),
+                FluctuationMode::Pool => fluctuate(
+                    &weights,
+                    view.charge,
+                    &mut Fluctuation::PoolNormal(self.pool.as_ref().unwrap()),
+                ),
+            };
+            let t2 = Instant::now();
+            timings.sampling_s += (t1 - t0).as_secs_f64();
+            timings.fluctuation_s += (t2 - t1).as_secs_f64();
+            let (p0, np, t0_, nt) = window;
+            patches.push(Patch {
+                pbin0: p0,
+                tbin0: t0_,
+                np,
+                nt,
+                values,
+            });
+        }
+        Ok(RasterOutput { patches, timings })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::units::*;
+
+    fn spec() -> GridSpec {
+        GridSpec::new(100, 3.0 * MM, 256, 0.5 * US, 5, 2)
+    }
+
+    fn views(n: usize) -> Vec<DepoView> {
+        (0..n)
+            .map(|i| DepoView {
+                pitch: (50.0 + i as f64) * MM,
+                time: (20.0 + i as f64) * US,
+                sigma_pitch: 1.5 * MM,
+                sigma_time: 0.8 * US,
+                charge: 5000.0,
+            })
+            .collect()
+    }
+
+    #[test]
+    fn labels_match_paper_rows() {
+        let p = RasterParams::default();
+        assert_eq!(
+            SerialBackend::new(p, FluctuationMode::Inline, 1, None).label(),
+            "ref-CPU"
+        );
+        assert_eq!(
+            SerialBackend::new(p, FluctuationMode::None, 1, None).label(),
+            "ref-CPU-noRNG"
+        );
+    }
+
+    #[test]
+    fn norng_conserves_charge() {
+        let mut b = SerialBackend::new(RasterParams::default(), FluctuationMode::None, 1, None);
+        let out = b.rasterize(&views(10), &spec()).unwrap();
+        assert_eq!(out.patches.len(), 10);
+        for p in &out.patches {
+            assert!((p.total() - 5000.0).abs() < 1.0, "{}", p.total());
+        }
+        assert!(out.timings.sampling_s > 0.0);
+        // no RNG: fluctuation step is a trivial multiply
+        assert!(out.timings.fluctuation_s < out.timings.sampling_s * 2.0);
+    }
+
+    #[test]
+    fn inline_rng_dominates_timing() {
+        // the Table-2 effect: inline exact binomial per bin is much
+        // slower than the no-RNG fluctuation step
+        let n = 200;
+        let mut norng = SerialBackend::new(RasterParams::default(), FluctuationMode::None, 1, None);
+        let mut inline = SerialBackend::new(RasterParams::default(), FluctuationMode::Inline, 1, None);
+        let t_norng = norng.rasterize(&views(n), &spec()).unwrap().timings;
+        let t_inline = inline.rasterize(&views(n), &spec()).unwrap().timings;
+        assert!(
+            t_inline.fluctuation_s > 5.0 * t_norng.fluctuation_s,
+            "inline {:.6} vs norng {:.6}",
+            t_inline.fluctuation_s,
+            t_norng.fluctuation_s
+        );
+    }
+
+    #[test]
+    fn pool_mode_runs() {
+        let pool = RandomPool::shared(3, 1 << 16);
+        let mut b = SerialBackend::new(
+            RasterParams::default(),
+            FluctuationMode::Pool,
+            1,
+            Some(pool),
+        );
+        let out = b.rasterize(&views(20), &spec()).unwrap();
+        assert_eq!(out.patches.len(), 20);
+        let mean: f64 = out.patches.iter().map(|p| p.total()).sum::<f64>() / 20.0;
+        assert!((mean - 5000.0).abs() < 100.0, "mean={mean}");
+    }
+
+    #[test]
+    #[should_panic(expected = "pool mode needs a RandomPool")]
+    fn pool_mode_without_pool_panics() {
+        let _ = SerialBackend::new(RasterParams::default(), FluctuationMode::Pool, 1, None);
+    }
+
+    #[test]
+    fn off_grid_views_skipped() {
+        let mut b = SerialBackend::new(RasterParams::default(), FluctuationMode::None, 1, None);
+        let mut vs = views(3);
+        vs[1].pitch = -10.0 * M; // far off grid
+        let out = b.rasterize(&vs, &spec()).unwrap();
+        assert_eq!(out.patches.len(), 2);
+    }
+}

@@ -1,0 +1,241 @@
+//! Hand-rolled command-line interface (clap is not in the vendored
+//! registry).  Subcommand + `--key value` / `--flag` options, with
+//! config overlays: defaults ⊕ `--config file.json` ⊕ individual
+//! `--key value` overrides.
+
+use crate::config::SimConfig;
+use crate::json::Value;
+use std::collections::BTreeMap;
+
+/// Parsed command line.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Cli {
+    /// Subcommand name (first positional).
+    pub command: String,
+    /// Remaining positionals.
+    pub positionals: Vec<String>,
+    /// `--key value` options.
+    pub options: BTreeMap<String, String>,
+    /// Bare `--flag`s.
+    pub flags: Vec<String>,
+}
+
+/// Options that are bare flags (never consume a following value).
+const KNOWN_FLAGS: &[&str] = &["noise", "no-response", "no-pjrt", "quiet", "frames"];
+
+impl Cli {
+    /// Parse an argument list (exclusive of argv[0]).
+    pub fn parse(args: &[String]) -> Result<Self, String> {
+        let mut command = String::new();
+        let mut positionals = Vec::new();
+        let mut options = BTreeMap::new();
+        let mut flags = Vec::new();
+        let mut it = args.iter().peekable();
+        while let Some(arg) = it.next() {
+            if let Some(key) = arg.strip_prefix("--") {
+                if key.is_empty() {
+                    return Err("bare '--' not supported".into());
+                }
+                // --key=value or --key value or --flag
+                if let Some((k, v)) = key.split_once('=') {
+                    options.insert(k.to_string(), v.to_string());
+                } else if KNOWN_FLAGS.contains(&key) {
+                    flags.push(key.to_string());
+                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    options.insert(key.to_string(), it.next().unwrap().clone());
+                } else {
+                    flags.push(key.to_string());
+                }
+            } else if command.is_empty() {
+                command = arg.clone();
+            } else {
+                positionals.push(arg.clone());
+            }
+        }
+        if command.is_empty() {
+            return Err("no subcommand given".into());
+        }
+        Ok(Self {
+            command,
+            positionals,
+            options,
+            flags,
+        })
+    }
+
+    /// Option lookup.
+    pub fn opt(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(|s| s.as_str())
+    }
+
+    /// Option with parse.
+    pub fn opt_parse<T: std::str::FromStr>(&self, key: &str) -> Result<Option<T>, String> {
+        match self.opt(key) {
+            None => Ok(None),
+            Some(s) => s
+                .parse::<T>()
+                .map(Some)
+                .map_err(|_| format!("bad value for --{key}: '{s}'")),
+        }
+    }
+
+    /// Flag presence.
+    pub fn has_flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    /// Build a SimConfig: defaults ⊕ --config file ⊕ CLI overrides.
+    pub fn sim_config(&self) -> Result<SimConfig, String> {
+        let mut cfg = SimConfig::default();
+        if let Some(path) = self.opt("config") {
+            cfg = SimConfig::from_file(std::path::Path::new(path))?;
+        }
+        // individual overrides map to the same keys as the JSON schema
+        let mut overlay = BTreeMap::new();
+        for key in [
+            "detector",
+            "fluctuation",
+            "backend",
+            "strategy",
+            "artifacts_dir",
+        ] {
+            if let Some(v) = self.opt(key) {
+                overlay.insert(key.to_string(), Value::from(v));
+            }
+        }
+        for key in [
+            "target_depos",
+            "seed",
+            "pool_size",
+            "pitch_oversample",
+            "time_oversample",
+        ] {
+            if let Some(v) = self.opt(key) {
+                let n: f64 = v.parse().map_err(|_| format!("bad --{key}: '{v}'"))?;
+                overlay.insert(key.to_string(), Value::Number(n));
+            }
+        }
+        for key in ["nsigma"] {
+            if let Some(v) = self.opt(key) {
+                let n: f64 = v.parse().map_err(|_| format!("bad --{key}: '{v}'"))?;
+                overlay.insert(key.to_string(), Value::Number(n));
+            }
+        }
+        if self.has_flag("noise") {
+            overlay.insert("noise".into(), Value::Bool(true));
+        }
+        if self.has_flag("no-response") {
+            overlay.insert("apply_response".into(), Value::Bool(false));
+        }
+        cfg.overlay(&Value::Object(overlay))?;
+        cfg.validate()?;
+        Ok(cfg)
+    }
+}
+
+/// Usage text for the binary.
+pub fn usage() -> &'static str {
+    "wire-cell — LArTPC signal simulation with portable acceleration
+
+USAGE: wire-cell <COMMAND> [--key value]... [--flag]...
+
+COMMANDS:
+  simulate     run the full pipeline on a generated cosmic workload
+  table2       regenerate paper Table 2 (ref-CPU / ref-accel / noRNG)
+  table3       regenerate paper Table 3 (portable-layer backends)
+  fig5         regenerate paper Figure 5 (scatter-add atomic scaling)
+  sweep        Figure-3 vs Figure-4 strategy sweep over depo counts
+  inspect      list artifacts and their metadata
+  version      print version and environment info
+
+COMMON OPTIONS:
+  --config <file.json>     load a config file (then apply overrides)
+  --detector <name>        test-small | uboone-like
+  --backend <b>            serial | threads:N | pjrt
+  --strategy <s>           per-depo | batched
+  --fluctuation <m>        inline | pool | none
+  --target_depos <n>       workload size (default 100000)
+  --seed <n>               master seed
+  --artifacts_dir <dir>    AOT artifacts directory (default artifacts)
+  --repeat <n>             benchmark repetitions (default 5, as paper)
+  --out <file>             also write the report/table to a file
+  --noise                  add electronics noise (simulate)
+  --no-response            skip the FT stage (raster-only runs)
+"
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::BackendChoice;
+
+    fn args(s: &[&str]) -> Vec<String> {
+        s.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_subcommand_options_flags() {
+        let cli = Cli::parse(&args(&[
+            "table2",
+            "--backend",
+            "serial",
+            "--target_depos=500",
+            "--noise",
+            "pos1",
+        ]))
+        .unwrap();
+        assert_eq!(cli.command, "table2");
+        assert_eq!(cli.opt("backend"), Some("serial"));
+        assert_eq!(cli.opt("target_depos"), Some("500"));
+        assert!(cli.has_flag("noise"));
+        assert_eq!(cli.positionals, vec!["pos1"]);
+    }
+
+    #[test]
+    fn rejects_empty() {
+        assert!(Cli::parse(&[]).is_err());
+        assert!(Cli::parse(&args(&["--", "x"])).is_err());
+    }
+
+    #[test]
+    fn sim_config_overrides() {
+        let cli = Cli::parse(&args(&[
+            "simulate",
+            "--backend",
+            "threads:4",
+            "--target_depos",
+            "1234",
+            "--no-response",
+        ]))
+        .unwrap();
+        let cfg = cli.sim_config().unwrap();
+        assert_eq!(cfg.backend, BackendChoice::Threaded(4));
+        assert_eq!(cfg.target_depos, 1234);
+        assert!(!cfg.apply_response);
+    }
+
+    #[test]
+    fn sim_config_rejects_bad_values() {
+        let cli = Cli::parse(&args(&["simulate", "--backend", "cuda"])).unwrap();
+        assert!(cli.sim_config().is_err());
+        let cli = Cli::parse(&args(&["simulate", "--target_depos", "abc"])).unwrap();
+        assert!(cli.sim_config().is_err());
+    }
+
+    #[test]
+    fn opt_parse_types() {
+        let cli = Cli::parse(&args(&["x", "--repeat", "7"])).unwrap();
+        assert_eq!(cli.opt_parse::<u32>("repeat").unwrap(), Some(7));
+        assert_eq!(cli.opt_parse::<u32>("missing").unwrap(), None);
+        let cli = Cli::parse(&args(&["x", "--repeat", "zz"])).unwrap();
+        assert!(cli.opt_parse::<u32>("repeat").is_err());
+    }
+
+    #[test]
+    fn flag_vs_option_disambiguation() {
+        // --flag followed by another --opt stays a flag
+        let cli = Cli::parse(&args(&["x", "--noise", "--seed", "3"])).unwrap();
+        assert!(cli.has_flag("noise"));
+        assert_eq!(cli.opt("seed"), Some("3"));
+    }
+}

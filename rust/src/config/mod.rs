@@ -1,0 +1,357 @@
+//! Typed run configuration with JSON overlays (WCT is JSON-configured;
+//! this reproduces that shape with defaults ⊕ file ⊕ CLI overrides).
+
+use crate::json::{parse, to_string_pretty, Value};
+use crate::units::{MM, US};
+
+/// Which fluctuation implementation the rasterizer uses (Table 2 rows).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FluctuationMode {
+    /// No fluctuation — "ref-CPU-noRNG".
+    None,
+    /// Exact binomial inline — "ref-CPU".
+    Inline,
+    /// Pre-computed pool + normal approximation — device paths.
+    Pool,
+}
+
+impl FluctuationMode {
+    /// Parse from config string.
+    pub fn from_str(s: &str) -> Result<Self, String> {
+        match s {
+            "none" => Ok(Self::None),
+            "inline" => Ok(Self::Inline),
+            "pool" => Ok(Self::Pool),
+            other => Err(format!("unknown fluctuation mode '{other}'")),
+        }
+    }
+
+    /// Config string form.
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Self::None => "none",
+            Self::Inline => "inline",
+            Self::Pool => "pool",
+        }
+    }
+}
+
+/// Which execution backend runs the hot kernels (the portability axis).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum BackendChoice {
+    /// Hand-written serial Rust — "ref-CPU".
+    Serial,
+    /// Portable layer, host-parallel with n threads — "Kokkos-OMP n".
+    Threaded(usize),
+    /// Portable layer, PJRT device artifacts — "Kokkos-CUDA" analog.
+    Pjrt,
+}
+
+impl BackendChoice {
+    /// Parse "serial" | "threads:N" | "pjrt".
+    pub fn from_str(s: &str) -> Result<Self, String> {
+        if s == "serial" {
+            return Ok(Self::Serial);
+        }
+        if s == "pjrt" {
+            return Ok(Self::Pjrt);
+        }
+        if let Some(n) = s.strip_prefix("threads:") {
+            return n
+                .parse::<usize>()
+                .map(Self::Threaded)
+                .map_err(|e| format!("bad thread count in '{s}': {e}"));
+        }
+        Err(format!("unknown backend '{s}' (serial|threads:N|pjrt)"))
+    }
+
+    /// Config string form.
+    pub fn label(&self) -> String {
+        match self {
+            Self::Serial => "serial".into(),
+            Self::Threaded(n) => format!("threads:{n}"),
+            Self::Pjrt => "pjrt".into(),
+        }
+    }
+}
+
+/// Offload strategy: the paper's Figure 3 vs Figure 4.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Strategy {
+    /// Per-depo offload (Figure 3): one dispatch + transfer per depo.
+    PerDepo,
+    /// Batched, device-resident (Figure 4): one transfer in/out.
+    Batched,
+}
+
+impl Strategy {
+    /// Parse from config string.
+    pub fn from_str(s: &str) -> Result<Self, String> {
+        match s {
+            "per-depo" => Ok(Self::PerDepo),
+            "batched" => Ok(Self::Batched),
+            other => Err(format!("unknown strategy '{other}' (per-depo|batched)")),
+        }
+    }
+
+    /// Config string form.
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Self::PerDepo => "per-depo",
+            Self::Batched => "batched",
+        }
+    }
+}
+
+/// Full simulation configuration.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SimConfig {
+    /// Detector preset name ("uboone-like" | "test-small").
+    pub detector: String,
+    /// Impact positions per wire pitch.
+    pub pitch_oversample: usize,
+    /// Sub-ticks per tick.
+    pub time_oversample: usize,
+    /// Patch half-extent in sigmas.
+    pub nsigma: f64,
+    /// Width floors (see `RasterParams`).
+    pub min_sigma_pitch: f64,
+    /// Time-width floor.
+    pub min_sigma_time: f64,
+    /// Fluctuation mode.
+    pub fluctuation: FluctuationMode,
+    /// Backend for the hot kernels.
+    pub backend: BackendChoice,
+    /// Offload strategy for device backends.
+    pub strategy: Strategy,
+    /// Target number of depos for generated workloads.
+    pub target_depos: usize,
+    /// Pre-computed pool length (Pool mode).
+    pub pool_size: usize,
+    /// Master seed.
+    pub seed: u64,
+    /// Add electronics noise.
+    pub noise: bool,
+    /// Apply the FT (response convolution) stage.
+    pub apply_response: bool,
+    /// Directory holding AOT artifacts.
+    pub artifacts_dir: String,
+}
+
+impl Default for SimConfig {
+    fn default() -> Self {
+        Self {
+            detector: "test-small".into(),
+            pitch_oversample: 5,
+            time_oversample: 2,
+            nsigma: 3.0,
+            min_sigma_pitch: 1e-3 * MM,
+            min_sigma_time: 1e-3 * US,
+            fluctuation: FluctuationMode::Inline,
+            backend: BackendChoice::Serial,
+            strategy: Strategy::Batched,
+            target_depos: 100_000,
+            pool_size: 1 << 22,
+            seed: 12345,
+            noise: false,
+            apply_response: true,
+            artifacts_dir: "artifacts".into(),
+        }
+    }
+}
+
+impl SimConfig {
+    /// Overlay values from a JSON document onto this config.
+    pub fn overlay(&mut self, doc: &Value) -> Result<(), String> {
+        let get_str = |k: &str| doc.get(k).and_then(|v| v.as_str().map(|s| s.to_string()));
+        let get_num = |k: &str| doc.get(k).and_then(|v| v.as_f64());
+        let get_usize = |k: &str| doc.get(k).and_then(|v| v.as_usize());
+        let get_bool = |k: &str| doc.get(k).and_then(|v| v.as_bool());
+        if let Some(s) = get_str("detector") {
+            self.detector = s;
+        }
+        if let Some(n) = get_usize("pitch_oversample") {
+            self.pitch_oversample = n.max(1);
+        }
+        if let Some(n) = get_usize("time_oversample") {
+            self.time_oversample = n.max(1);
+        }
+        if let Some(x) = get_num("nsigma") {
+            self.nsigma = x;
+        }
+        if let Some(x) = get_num("min_sigma_pitch") {
+            self.min_sigma_pitch = x;
+        }
+        if let Some(x) = get_num("min_sigma_time") {
+            self.min_sigma_time = x;
+        }
+        if let Some(s) = get_str("fluctuation") {
+            self.fluctuation = FluctuationMode::from_str(&s)?;
+        }
+        if let Some(s) = get_str("backend") {
+            self.backend = BackendChoice::from_str(&s)?;
+        }
+        if let Some(s) = get_str("strategy") {
+            self.strategy = Strategy::from_str(&s)?;
+        }
+        if let Some(n) = get_usize("target_depos") {
+            self.target_depos = n;
+        }
+        if let Some(n) = get_usize("pool_size") {
+            self.pool_size = n.max(1);
+        }
+        if let Some(n) = get_usize("seed") {
+            self.seed = n as u64;
+        }
+        if let Some(b) = get_bool("noise") {
+            self.noise = b;
+        }
+        if let Some(b) = get_bool("apply_response") {
+            self.apply_response = b;
+        }
+        if let Some(s) = get_str("artifacts_dir") {
+            self.artifacts_dir = s;
+        }
+        Ok(())
+    }
+
+    /// Load: defaults ⊕ JSON text.
+    pub fn from_json(text: &str) -> Result<Self, String> {
+        let doc = parse(text).map_err(|e| e.to_string())?;
+        let mut cfg = Self::default();
+        cfg.overlay(&doc)?;
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    /// Load from a file path.
+    pub fn from_file(path: &std::path::Path) -> Result<Self, String> {
+        let text = std::fs::read_to_string(path).map_err(|e| format!("{}: {e}", path.display()))?;
+        Self::from_json(&text)
+    }
+
+    /// Build the detector this config names.
+    pub fn detector(&self) -> Result<crate::geometry::Detector, String> {
+        match self.detector.as_str() {
+            "uboone-like" => Ok(crate::geometry::Detector::uboone_like()),
+            "test-small" => Ok(crate::geometry::Detector::test_small()),
+            other => Err(format!("unknown detector preset '{other}'")),
+        }
+    }
+
+    /// Sanity checks.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.nsigma <= 0.0 || self.nsigma > 10.0 {
+            return Err(format!("nsigma {} out of range (0, 10]", self.nsigma));
+        }
+        if self.pitch_oversample == 0 || self.time_oversample == 0 {
+            return Err("oversample factors must be >= 1".into());
+        }
+        self.detector()?;
+        Ok(())
+    }
+
+    /// Serialize to pretty JSON (run-report embedding).
+    pub fn to_json(&self) -> String {
+        let v = Value::object(vec![
+            ("detector", Value::from(self.detector.as_str())),
+            ("pitch_oversample", Value::from(self.pitch_oversample)),
+            ("time_oversample", Value::from(self.time_oversample)),
+            ("nsigma", Value::from(self.nsigma)),
+            ("min_sigma_pitch", Value::from(self.min_sigma_pitch)),
+            ("min_sigma_time", Value::from(self.min_sigma_time)),
+            ("fluctuation", Value::from(self.fluctuation.as_str())),
+            ("backend", Value::from(self.backend.label())),
+            ("strategy", Value::from(self.strategy.as_str())),
+            ("target_depos", Value::from(self.target_depos)),
+            ("pool_size", Value::from(self.pool_size)),
+            ("seed", Value::from(self.seed as f64)),
+            ("noise", Value::from(self.noise)),
+            ("apply_response", Value::from(self.apply_response)),
+            ("artifacts_dir", Value::from(self.artifacts_dir.as_str())),
+        ]);
+        to_string_pretty(&v)
+    }
+
+    /// `RasterParams` view of this config.
+    pub fn raster_params(&self) -> crate::raster::RasterParams {
+        crate::raster::RasterParams {
+            nsigma: self.nsigma,
+            min_sigma_pitch: self.min_sigma_pitch,
+            min_sigma_time: self.min_sigma_time,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_validate() {
+        let cfg = SimConfig::default();
+        assert!(cfg.validate().is_ok());
+        assert_eq!(cfg.fluctuation, FluctuationMode::Inline);
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let cfg = SimConfig::default();
+        let text = cfg.to_json();
+        let back = SimConfig::from_json(&text).unwrap();
+        assert_eq!(cfg, back);
+    }
+
+    #[test]
+    fn overlay_partial() {
+        let cfg = SimConfig::from_json(r#"{"backend":"threads:4","target_depos":500}"#).unwrap();
+        assert_eq!(cfg.backend, BackendChoice::Threaded(4));
+        assert_eq!(cfg.target_depos, 500);
+        // untouched fields keep defaults
+        assert_eq!(cfg.detector, "test-small");
+    }
+
+    #[test]
+    fn backend_parsing() {
+        assert_eq!(BackendChoice::from_str("serial").unwrap(), BackendChoice::Serial);
+        assert_eq!(BackendChoice::from_str("pjrt").unwrap(), BackendChoice::Pjrt);
+        assert_eq!(
+            BackendChoice::from_str("threads:8").unwrap(),
+            BackendChoice::Threaded(8)
+        );
+        assert!(BackendChoice::from_str("cuda").is_err());
+        assert!(BackendChoice::from_str("threads:x").is_err());
+    }
+
+    #[test]
+    fn strategy_and_fluctuation_parsing() {
+        assert_eq!(Strategy::from_str("per-depo").unwrap(), Strategy::PerDepo);
+        assert_eq!(Strategy::from_str("batched").unwrap(), Strategy::Batched);
+        assert!(Strategy::from_str("x").is_err());
+        assert_eq!(FluctuationMode::from_str("pool").unwrap(), FluctuationMode::Pool);
+        assert!(FluctuationMode::from_str("rng").is_err());
+    }
+
+    #[test]
+    fn invalid_configs_rejected() {
+        assert!(SimConfig::from_json(r#"{"nsigma": -1}"#).is_err());
+        assert!(SimConfig::from_json(r#"{"detector": "atlas"}"#).is_err());
+        assert!(SimConfig::from_json(r#"{"backend": "gpu"}"#).is_err());
+        assert!(SimConfig::from_json("{bad json").is_err());
+    }
+
+    #[test]
+    fn detector_presets() {
+        let mut cfg = SimConfig::default();
+        assert_eq!(cfg.detector().unwrap().name, "test-small");
+        cfg.detector = "uboone-like".into();
+        assert_eq!(cfg.detector().unwrap().planes.len(), 3);
+    }
+
+    #[test]
+    fn labels_roundtrip() {
+        for b in ["serial", "threads:3", "pjrt"] {
+            assert_eq!(BackendChoice::from_str(b).unwrap().label(), b);
+        }
+    }
+}

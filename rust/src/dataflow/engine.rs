@@ -1,0 +1,244 @@
+//! Execution engines: serial and pipelined-threaded (the TBB analog).
+
+use super::graph::{Graph, GraphError, NodeKind};
+use super::Payload;
+use std::sync::mpsc;
+
+/// Run the graph on the calling thread: pull from the source, push each
+/// payload through the chain, finish with an EOS sweep.
+pub fn run_serial(graph: Graph) -> Result<EngineReport, GraphError> {
+    let order = graph.validate()?;
+    let mut nodes = graph.nodes;
+    let mut report = EngineReport::default();
+    loop {
+        // take from source
+        let payload = match &mut nodes[order[0]] {
+            NodeKind::Source(s) => s.next(),
+            _ => unreachable!("validated head is a source"),
+        };
+        let Some(payload) = payload else {
+            break;
+        };
+        report.produced += 1;
+        // push through functions to the sink
+        let mut inflight = vec![payload];
+        for &idx in &order[1..] {
+            let mut next = Vec::new();
+            for p in inflight {
+                match &mut nodes[idx] {
+                    NodeKind::Function(f) => next.extend(f.call(p)),
+                    NodeKind::Sink(s) => {
+                        s.consume(p);
+                        report.consumed += 1;
+                    }
+                    NodeKind::Source(_) => unreachable!(),
+                }
+            }
+            inflight = next;
+        }
+    }
+    Ok(report)
+}
+
+/// Run the graph with one thread per node connected by channels —
+/// pipeline parallelism in the style of `tbb::flow` used by WCT.
+/// Bounded channels provide backpressure (`capacity` payloads per edge).
+pub fn run_threaded(graph: Graph, capacity: usize) -> Result<EngineReport, GraphError> {
+    let order = graph.validate()?;
+    let mut nodes: Vec<Option<NodeKind>> = graph.nodes.into_iter().map(Some).collect();
+    let mut report = EngineReport::default();
+
+    std::thread::scope(|scope| {
+        // build channel chain: n nodes -> n-1 edges
+        let mut senders: Vec<mpsc::SyncSender<Payload>> = Vec::new();
+        let mut receivers: Vec<mpsc::Receiver<Payload>> = Vec::new();
+        for _ in 1..order.len() {
+            let (tx, rx) = mpsc::sync_channel(capacity.max(1));
+            senders.push(tx);
+            receivers.push(rx);
+        }
+        receivers.reverse(); // pop from the back = edge order
+
+        let mut handles = Vec::new();
+        for (pos, &idx) in order.iter().enumerate() {
+            let node = nodes[idx].take().unwrap();
+            let tx = if pos < senders.len() {
+                Some(senders[pos].clone())
+            } else {
+                None
+            };
+            let rx = if pos > 0 { receivers.pop() } else { None };
+            handles.push(scope.spawn(move || -> (u64, u64) {
+                let mut produced = 0u64;
+                let mut consumed = 0u64;
+                match node {
+                    NodeKind::Source(mut s) => {
+                        let tx = tx.expect("source has a downstream");
+                        while let Some(p) = s.next() {
+                            produced += 1;
+                            if tx.send(p).is_err() {
+                                break;
+                            }
+                        }
+                        // dropping tx closes the edge -> downstream stops
+                    }
+                    NodeKind::Function(mut f) => {
+                        let rx = rx.expect("function has an upstream");
+                        let tx = tx.expect("function has a downstream");
+                        while let Ok(p) = rx.recv() {
+                            for out in f.call(p) {
+                                if tx.send(out).is_err() {
+                                    return (produced, consumed);
+                                }
+                            }
+                        }
+                    }
+                    NodeKind::Sink(mut s) => {
+                        let rx = rx.expect("sink has an upstream");
+                        while let Ok(p) = rx.recv() {
+                            s.consume(p);
+                            consumed += 1;
+                        }
+                    }
+                }
+                (produced, consumed)
+            }));
+        }
+        drop(senders); // only clones held by threads keep edges alive
+        for h in handles {
+            let (p, c) = h.join().expect("engine thread panicked");
+            report.produced += p;
+            report.consumed += c;
+        }
+    });
+    Ok(report)
+}
+
+/// Counters from an engine run.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct EngineReport {
+    /// Payloads emitted by the source.
+    pub produced: u64,
+    /// Payloads absorbed by the sink.
+    pub consumed: u64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{FunctionNode, Payload, SinkNode, SourceNode};
+    use super::*;
+    use crate::depo::Depo;
+    use std::sync::{Arc, Mutex};
+
+    struct CountSource(u64);
+    impl SourceNode for CountSource {
+        fn name(&self) -> String {
+            "count".into()
+        }
+        fn next(&mut self) -> Option<Payload> {
+            if self.0 == 0 {
+                return None;
+            }
+            self.0 -= 1;
+            Some(Payload::Depos(vec![Depo::point(
+                self.0 as f64,
+                [0.0; 3],
+                1.0,
+                self.0,
+            )]))
+        }
+    }
+
+    /// Doubles each depo's charge.
+    struct Doubler;
+    impl FunctionNode for Doubler {
+        fn name(&self) -> String {
+            "doubler".into()
+        }
+        fn call(&mut self, input: Payload) -> Vec<Payload> {
+            match input {
+                Payload::Depos(mut d) => {
+                    for x in &mut d {
+                        x.charge *= 2.0;
+                    }
+                    vec![Payload::Depos(d)]
+                }
+                other => vec![other],
+            }
+        }
+    }
+
+    #[derive(Clone)]
+    struct Collect(Arc<Mutex<f64>>);
+    impl SinkNode for Collect {
+        fn name(&self) -> String {
+            "collect".into()
+        }
+        fn consume(&mut self, input: Payload) {
+            if let Payload::Depos(d) = input {
+                *self.0.lock().unwrap() += d.iter().map(|x| x.charge).sum::<f64>();
+            }
+        }
+    }
+
+    fn build(n: u64, sink: Collect) -> Graph {
+        let mut g = Graph::new();
+        let s = g.add_source(Box::new(CountSource(n)));
+        let f = g.add_function(Box::new(Doubler));
+        let k = g.add_sink(Box::new(sink));
+        g.connect(s, f);
+        g.connect(f, k);
+        g
+    }
+
+    #[test]
+    fn serial_engine_processes_all() {
+        let total = Arc::new(Mutex::new(0.0));
+        let report = run_serial(build(10, Collect(total.clone()))).unwrap();
+        assert_eq!(report.produced, 10);
+        assert_eq!(report.consumed, 10);
+        assert_eq!(*total.lock().unwrap(), 20.0); // 10 depos x charge 2
+    }
+
+    #[test]
+    fn threaded_engine_matches_serial() {
+        let t1 = Arc::new(Mutex::new(0.0));
+        let t2 = Arc::new(Mutex::new(0.0));
+        run_serial(build(100, Collect(t1.clone()))).unwrap();
+        let report = run_threaded(build(100, Collect(t2.clone())), 4).unwrap();
+        assert_eq!(*t1.lock().unwrap(), *t2.lock().unwrap());
+        assert_eq!(report.consumed, 100);
+    }
+
+    #[test]
+    fn threaded_with_tiny_capacity_backpressures_correctly() {
+        let total = Arc::new(Mutex::new(0.0));
+        let report = run_threaded(build(50, Collect(total.clone())), 1).unwrap();
+        assert_eq!(report.consumed, 50);
+        assert_eq!(*total.lock().unwrap(), 100.0);
+    }
+
+    #[test]
+    fn invalid_graph_rejected_by_engines() {
+        let g = Graph::new();
+        assert!(run_serial(g).is_err());
+        let g = Graph::new();
+        assert!(run_threaded(g, 2).is_err());
+    }
+
+    #[test]
+    fn multi_stage_pipeline() {
+        // source -> doubler -> doubler -> sink: charge x4
+        let total = Arc::new(Mutex::new(0.0));
+        let mut g = Graph::new();
+        let s = g.add_source(Box::new(CountSource(5)));
+        let f1 = g.add_function(Box::new(Doubler));
+        let f2 = g.add_function(Box::new(Doubler));
+        let k = g.add_sink(Box::new(Collect(total.clone())));
+        g.connect(s, f1);
+        g.connect(f1, f2);
+        g.connect(f2, k);
+        run_threaded(g, 2).unwrap();
+        assert_eq!(*total.lock().unwrap(), 20.0);
+    }
+}

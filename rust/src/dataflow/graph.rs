@@ -1,0 +1,281 @@
+//! Graph assembly: nodes + edges with validation.
+//!
+//! A graph is a linear-izable DAG of one source, N function nodes and
+//! one sink per chain; edges are declared explicitly and validated
+//! (acyclic, connected, single producer per input port) before any
+//! engine runs it — the same "assemble then execute" model as WCT.
+
+use super::{FunctionNode, SinkNode, SourceNode};
+use std::collections::BTreeMap;
+use std::fmt;
+
+/// Node handle.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct NodeId(pub usize);
+
+/// Graph assembly errors.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum GraphError {
+    /// An edge references a node that does not exist.
+    UnknownNode(usize),
+    /// A cycle was detected.
+    Cycle,
+    /// A node other than the source has no incoming edge.
+    Disconnected(String),
+    /// Two edges feed the same consumer.
+    DuplicateInput(String),
+    /// Source/sink multiplicity is wrong.
+    Shape(String),
+}
+
+impl fmt::Display for GraphError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            GraphError::UnknownNode(i) => write!(f, "edge references unknown node {i}"),
+            GraphError::Cycle => write!(f, "graph contains a cycle"),
+            GraphError::Disconnected(n) => write!(f, "node '{n}' has no input"),
+            GraphError::DuplicateInput(n) => write!(f, "node '{n}' has multiple inputs"),
+            GraphError::Shape(m) => write!(f, "bad graph shape: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for GraphError {}
+
+pub(super) enum NodeKind {
+    Source(Box<dyn SourceNode>),
+    Function(Box<dyn FunctionNode>),
+    Sink(Box<dyn SinkNode>),
+}
+
+impl NodeKind {
+    pub(super) fn name(&self) -> String {
+        match self {
+            NodeKind::Source(n) => n.name(),
+            NodeKind::Function(n) => n.name(),
+            NodeKind::Sink(n) => n.name(),
+        }
+    }
+}
+
+/// A dataflow graph under assembly.
+pub struct Graph {
+    pub(super) nodes: Vec<NodeKind>,
+    /// edges[from] = to
+    pub(super) edges: BTreeMap<usize, usize>,
+}
+
+impl Default for Graph {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Graph {
+    /// Empty graph.
+    pub fn new() -> Self {
+        Self {
+            nodes: Vec::new(),
+            edges: BTreeMap::new(),
+        }
+    }
+
+    /// Add a source node.
+    pub fn add_source(&mut self, node: Box<dyn SourceNode>) -> NodeId {
+        self.nodes.push(NodeKind::Source(node));
+        NodeId(self.nodes.len() - 1)
+    }
+
+    /// Add a function node.
+    pub fn add_function(&mut self, node: Box<dyn FunctionNode>) -> NodeId {
+        self.nodes.push(NodeKind::Function(node));
+        NodeId(self.nodes.len() - 1)
+    }
+
+    /// Add a sink node.
+    pub fn add_sink(&mut self, node: Box<dyn SinkNode>) -> NodeId {
+        self.nodes.push(NodeKind::Sink(node));
+        NodeId(self.nodes.len() - 1)
+    }
+
+    /// Connect `from` → `to`.
+    pub fn connect(&mut self, from: NodeId, to: NodeId) {
+        self.edges.insert(from.0, to.0);
+    }
+
+    /// Validate the assembled graph and return the execution order
+    /// (source → … → sink).
+    pub fn validate(&self) -> Result<Vec<usize>, GraphError> {
+        let n = self.nodes.len();
+        if n == 0 {
+            return Err(GraphError::Shape("empty graph".into()));
+        }
+        for (&from, &to) in &self.edges {
+            if from >= n {
+                return Err(GraphError::UnknownNode(from));
+            }
+            if to >= n {
+                return Err(GraphError::UnknownNode(to));
+            }
+        }
+        // single producer per consumer
+        let mut indeg = vec![0usize; n];
+        for &to in self.edges.values() {
+            indeg[to] += 1;
+            if indeg[to] > 1 {
+                return Err(GraphError::DuplicateInput(self.nodes[to].name()));
+            }
+        }
+        // exactly one source at the head of the chain
+        let sources: Vec<usize> = self
+            .nodes
+            .iter()
+            .enumerate()
+            .filter(|(_, k)| matches!(k, NodeKind::Source(_)))
+            .map(|(i, _)| i)
+            .collect();
+        if sources.len() != 1 {
+            return Err(GraphError::Shape(format!(
+                "need exactly 1 source, got {}",
+                sources.len()
+            )));
+        }
+        // every non-source must have an input
+        for (i, node) in self.nodes.iter().enumerate() {
+            if !matches!(node, NodeKind::Source(_)) && indeg[i] == 0 {
+                return Err(GraphError::Disconnected(node.name()));
+            }
+        }
+        // walk the chain from the source; detect cycles by step count
+        let mut order = vec![sources[0]];
+        let mut cur = sources[0];
+        let mut steps = 0;
+        while let Some(&next) = self.edges.get(&cur) {
+            order.push(next);
+            cur = next;
+            steps += 1;
+            if steps > n {
+                return Err(GraphError::Cycle);
+            }
+        }
+        // the chain must end at a sink and cover all nodes
+        if !matches!(self.nodes[cur], NodeKind::Sink(_)) {
+            return Err(GraphError::Shape(format!(
+                "chain ends at non-sink '{}'",
+                self.nodes[cur].name()
+            )));
+        }
+        if order.len() != n {
+            return Err(GraphError::Shape(format!(
+                "{} of {} nodes reachable from source",
+                order.len(),
+                n
+            )));
+        }
+        Ok(order)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{Payload, SinkNode, SourceNode};
+    use super::*;
+
+    struct NullSource(usize);
+    impl SourceNode for NullSource {
+        fn name(&self) -> String {
+            "null-src".into()
+        }
+        fn next(&mut self) -> Option<Payload> {
+            if self.0 == 0 {
+                None
+            } else {
+                self.0 -= 1;
+                Some(Payload::Eos)
+            }
+        }
+    }
+
+    struct NullSink;
+    impl SinkNode for NullSink {
+        fn name(&self) -> String {
+            "null-sink".into()
+        }
+        fn consume(&mut self, _p: Payload) {}
+    }
+
+    struct Identity;
+    impl super::super::FunctionNode for Identity {
+        fn name(&self) -> String {
+            "identity".into()
+        }
+        fn call(&mut self, input: Payload) -> Vec<Payload> {
+            vec![input]
+        }
+    }
+
+    #[test]
+    fn valid_chain() {
+        let mut g = Graph::new();
+        let s = g.add_source(Box::new(NullSource(1)));
+        let f = g.add_function(Box::new(Identity));
+        let k = g.add_sink(Box::new(NullSink));
+        g.connect(s, f);
+        g.connect(f, k);
+        assert_eq!(g.validate().unwrap(), vec![s.0, f.0, k.0]);
+    }
+
+    #[test]
+    fn rejects_empty() {
+        assert!(matches!(Graph::new().validate(), Err(GraphError::Shape(_))));
+    }
+
+    #[test]
+    fn rejects_disconnected() {
+        let mut g = Graph::new();
+        let _s = g.add_source(Box::new(NullSource(1)));
+        let _f = g.add_function(Box::new(Identity));
+        assert!(matches!(g.validate(), Err(GraphError::Disconnected(_))));
+    }
+
+    #[test]
+    fn rejects_cycle() {
+        let mut g = Graph::new();
+        let s = g.add_source(Box::new(NullSource(1)));
+        let f1 = g.add_function(Box::new(Identity));
+        let f2 = g.add_function(Box::new(Identity));
+        g.connect(s, f1);
+        g.connect(f1, f2);
+        g.connect(f2, f1); // cycle, also duplicate input on f1
+        let err = g.validate().unwrap_err();
+        assert!(
+            matches!(err, GraphError::Cycle | GraphError::DuplicateInput(_)),
+            "{err}"
+        );
+    }
+
+    #[test]
+    fn rejects_two_sources() {
+        let mut g = Graph::new();
+        let _ = g.add_source(Box::new(NullSource(1)));
+        let _ = g.add_source(Box::new(NullSource(1)));
+        assert!(matches!(g.validate(), Err(GraphError::Shape(_))));
+    }
+
+    #[test]
+    fn rejects_chain_not_ending_in_sink() {
+        let mut g = Graph::new();
+        let s = g.add_source(Box::new(NullSource(1)));
+        let f = g.add_function(Box::new(Identity));
+        g.connect(s, f);
+        assert!(matches!(g.validate(), Err(GraphError::Shape(_))));
+    }
+
+    #[test]
+    fn rejects_unknown_node_edge() {
+        let mut g = Graph::new();
+        let s = g.add_source(Box::new(NullSource(1)));
+        g.connect(s, NodeId(99));
+        assert!(matches!(g.validate(), Err(GraphError::UnknownNode(99))));
+    }
+}

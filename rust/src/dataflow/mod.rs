@@ -1,0 +1,172 @@
+//! Dataflow framework — the Wire-Cell Toolkit programming-model analog.
+//!
+//! WCT "supports a modular computing model by expressing computing
+//! tasks as nodes of a graph ... executed by various processing
+//! engines" (paper §2.1.2).  This module reproduces that framework
+//! shape: typed payloads flowing through polymorphic nodes assembled
+//! into a DAG, executed by a serial engine or a pipelined threaded
+//! engine (the TBB analog).  It also reproduces the §4.2.2 lifecycle
+//! concern: backends that need global init/finalize (Kokkos there,
+//! PJRT here) register [`Terminal`] hooks that run before the program
+//! exits, in reverse registration order — WCT's `ITerminal` stack.
+
+mod engine;
+mod graph;
+
+pub use engine::{run_serial, run_threaded};
+pub use graph::{Graph, GraphError, NodeId};
+
+use crate::depo::Depo;
+use crate::frame::Frame;
+use crate::raster::Patch;
+use crate::scatter::PlaneGrid;
+
+/// The payload that flows along graph edges.
+#[derive(Debug)]
+pub enum Payload {
+    /// A set of depos.
+    Depos(Vec<Depo>),
+    /// Rasterized patches plus their plane tag.
+    Patches(usize, Vec<Patch>),
+    /// An accumulated plane grid.
+    Grid(usize, PlaneGrid),
+    /// A measured (post-FT) plane waveform grid.
+    Signal(usize, Vec<f64>),
+    /// A complete event frame.
+    Frame(Frame),
+    /// End-of-stream marker.
+    Eos,
+}
+
+impl Payload {
+    /// Human-readable tag for diagnostics.
+    pub fn kind(&self) -> &'static str {
+        match self {
+            Payload::Depos(_) => "depos",
+            Payload::Patches(..) => "patches",
+            Payload::Grid(..) => "grid",
+            Payload::Signal(..) => "signal",
+            Payload::Frame(_) => "frame",
+            Payload::Eos => "eos",
+        }
+    }
+}
+
+/// A source node: produces payloads until exhausted.
+pub trait SourceNode: Send {
+    /// Descriptive name.
+    fn name(&self) -> String;
+    /// Next payload, or None when exhausted.
+    fn next(&mut self) -> Option<Payload>;
+}
+
+/// A function node: transforms one payload into zero or more outputs.
+pub trait FunctionNode: Send {
+    /// Descriptive name.
+    fn name(&self) -> String;
+    /// Transform.
+    fn call(&mut self, input: Payload) -> Vec<Payload>;
+}
+
+/// A sink node: consumes payloads.
+pub trait SinkNode: Send {
+    /// Descriptive name.
+    fn name(&self) -> String;
+    /// Consume.
+    fn consume(&mut self, input: Payload);
+}
+
+/// Finalize hook (WCT `ITerminal` analog).
+pub trait Terminal: Send {
+    /// Called once at teardown, reverse registration order.
+    fn finalize(&mut self);
+}
+
+/// A stack of finalize hooks, run in reverse registration order.
+#[derive(Default)]
+pub struct TerminalStack {
+    hooks: Vec<Box<dyn Terminal>>,
+}
+
+impl TerminalStack {
+    /// New empty stack.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Register a hook.
+    pub fn register(&mut self, hook: Box<dyn Terminal>) {
+        self.hooks.push(hook);
+    }
+
+    /// Run and clear all hooks (LIFO).
+    pub fn finalize_all(&mut self) {
+        while let Some(mut h) = self.hooks.pop() {
+            h.finalize();
+        }
+    }
+
+    /// Number of pending hooks.
+    pub fn len(&self) -> usize {
+        self.hooks.len()
+    }
+
+    /// True when no hooks are registered.
+    pub fn is_empty(&self) -> bool {
+        self.hooks.is_empty()
+    }
+}
+
+impl Drop for TerminalStack {
+    fn drop(&mut self) {
+        self.finalize_all();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::sync::Arc;
+
+    struct Recorder(Arc<AtomicUsize>, usize, Arc<std::sync::Mutex<Vec<usize>>>);
+    impl Terminal for Recorder {
+        fn finalize(&mut self) {
+            self.0.fetch_add(1, Ordering::SeqCst);
+            self.2.lock().unwrap().push(self.1);
+        }
+    }
+
+    #[test]
+    fn terminal_stack_runs_lifo() {
+        let count = Arc::new(AtomicUsize::new(0));
+        let order = Arc::new(std::sync::Mutex::new(Vec::new()));
+        let mut stack = TerminalStack::new();
+        for i in 0..3 {
+            stack.register(Box::new(Recorder(count.clone(), i, order.clone())));
+        }
+        assert_eq!(stack.len(), 3);
+        stack.finalize_all();
+        assert_eq!(count.load(Ordering::SeqCst), 3);
+        assert_eq!(*order.lock().unwrap(), vec![2, 1, 0]);
+        assert!(stack.is_empty());
+    }
+
+    #[test]
+    fn terminal_stack_runs_on_drop() {
+        let count = Arc::new(AtomicUsize::new(0));
+        let order = Arc::new(std::sync::Mutex::new(Vec::new()));
+        {
+            let mut stack = TerminalStack::new();
+            stack.register(Box::new(Recorder(count.clone(), 9, order.clone())));
+        }
+        assert_eq!(count.load(Ordering::SeqCst), 1);
+    }
+
+    #[test]
+    fn payload_kinds() {
+        assert_eq!(Payload::Eos.kind(), "eos");
+        assert_eq!(Payload::Depos(vec![]).kind(), "depos");
+        assert_eq!(Payload::Patches(0, vec![]).kind(), "patches");
+    }
+}

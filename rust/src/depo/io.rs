@@ -1,0 +1,134 @@
+//! JSON depo-set I/O (WCT-style depo files).
+//!
+//! Format: `{"depos": [{"t":..,"x":..,"y":..,"z":..,"q":..,"e":..,
+//! "sl":..,"st":..,"id":..}, ...]}` — close to the wire-cell-toolkit
+//! JSON depo schema, with widths included so drifted sets round-trip.
+
+use super::Depo;
+use crate::json::{parse, to_string, Value};
+use std::path::Path;
+
+/// Serialize a depo set to a JSON string.
+pub fn depos_to_json(depos: &[Depo]) -> String {
+    let arr: Vec<Value> = depos
+        .iter()
+        .map(|d| {
+            Value::object(vec![
+                ("t", Value::from(d.time)),
+                ("x", Value::from(d.pos[0])),
+                ("y", Value::from(d.pos[1])),
+                ("z", Value::from(d.pos[2])),
+                ("q", Value::from(d.charge)),
+                ("e", Value::from(d.energy)),
+                ("sl", Value::from(d.sigma_l)),
+                ("st", Value::from(d.sigma_t)),
+                ("id", Value::from(d.id as f64)),
+            ])
+        })
+        .collect();
+    to_string(&Value::object(vec![("depos", Value::Array(arr))]))
+}
+
+/// Parse a depo set from a JSON string.
+pub fn depos_from_json(text: &str) -> Result<Vec<Depo>, String> {
+    let doc = parse(text).map_err(|e| e.to_string())?;
+    let arr = doc
+        .get("depos")
+        .and_then(|v| v.as_array())
+        .ok_or_else(|| "missing 'depos' array".to_string())?;
+    let mut out = Vec::with_capacity(arr.len());
+    for (i, item) in arr.iter().enumerate() {
+        let f = |key: &str| -> Result<f64, String> {
+            item.get(key)
+                .and_then(|v| v.as_f64())
+                .ok_or_else(|| format!("depo {i}: missing number '{key}'"))
+        };
+        out.push(Depo {
+            time: f("t")?,
+            pos: [f("x")?, f("y")?, f("z")?],
+            charge: f("q")?,
+            energy: f("e").unwrap_or(0.0),
+            sigma_l: f("sl").unwrap_or(0.0),
+            sigma_t: f("st").unwrap_or(0.0),
+            id: f("id").unwrap_or(i as f64) as u64,
+        });
+    }
+    Ok(out)
+}
+
+/// Write a depo file.
+pub fn write_depo_file(path: &Path, depos: &[Depo]) -> std::io::Result<()> {
+    std::fs::write(path, depos_to_json(depos))
+}
+
+/// Read a depo file.
+pub fn read_depo_file(path: &Path) -> Result<Vec<Depo>, String> {
+    let text = std::fs::read_to_string(path).map_err(|e| e.to_string())?;
+    depos_from_json(&text)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Vec<Depo> {
+        vec![
+            Depo {
+                time: 1.5,
+                pos: [10.0, -20.0, 30.0],
+                charge: 5000.0,
+                energy: 0.12,
+                sigma_l: 0.5,
+                sigma_t: 0.25,
+                id: 3,
+            },
+            Depo::point(0.0, [0.0, 0.0, 0.0], 1.0, 0),
+        ]
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let depos = sample();
+        let text = depos_to_json(&depos);
+        let back = depos_from_json(&text).unwrap();
+        assert_eq!(depos, back);
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let depos = sample();
+        let path = std::env::temp_dir().join("wct_test_depos.json");
+        write_depo_file(&path, &depos).unwrap();
+        let back = read_depo_file(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        assert_eq!(depos, back);
+    }
+
+    #[test]
+    fn missing_field_errors() {
+        let r = depos_from_json(r#"{"depos":[{"t":1.0}]}"#);
+        assert!(r.is_err());
+        assert!(r.unwrap_err().contains("missing number 'x'"));
+    }
+
+    #[test]
+    fn optional_fields_default() {
+        let r = depos_from_json(r#"{"depos":[{"t":1,"x":2,"y":3,"z":4,"q":5}]}"#).unwrap();
+        assert_eq!(r[0].sigma_l, 0.0);
+        assert_eq!(r[0].energy, 0.0);
+        assert_eq!(r[0].id, 0);
+    }
+
+    #[test]
+    fn bad_document_errors() {
+        assert!(depos_from_json("not json").is_err());
+        assert!(depos_from_json("{}").is_err());
+        assert!(depos_from_json(r#"{"depos": 3}"#).is_err());
+    }
+
+    #[test]
+    fn empty_set_roundtrips() {
+        let text = depos_to_json(&[]);
+        assert_eq!(depos_from_json(&text).unwrap(), vec![]);
+    }
+}

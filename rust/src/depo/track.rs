@@ -1,0 +1,193 @@
+//! Deterministic depo sources: straight-line tracks and point sources.
+
+use super::{Depo, DepoSource};
+use crate::physics::MipLoss;
+use crate::rng::Pcg32;
+use crate::units::*;
+
+/// Steps a straight track between two endpoints, drawing Landau-
+/// fluctuated MIP losses per step — the minimal "charged particle"
+/// workload for examples and targeted tests.
+pub struct TrackDepoSource {
+    /// Start point.
+    pub start: [f64; 3],
+    /// End point.
+    pub end: [f64; 3],
+    /// Track start time.
+    pub time: f64,
+    /// Step length between depos.
+    pub step: f64,
+    /// Energy-loss model.
+    pub loss: MipLoss,
+    /// RNG seed.
+    pub seed: u64,
+    /// Track id assigned to the produced depos.
+    pub track_id: u64,
+}
+
+impl TrackDepoSource {
+    /// A MIP track with 1 mm steps and default loss model.
+    pub fn mip(start: [f64; 3], end: [f64; 3], time: f64, seed: u64) -> Self {
+        Self {
+            start,
+            end,
+            time,
+            step: 1.0 * MM,
+            loss: MipLoss::default(),
+            seed,
+            track_id: 0,
+        }
+    }
+}
+
+impl DepoSource for TrackDepoSource {
+    fn generate(&mut self) -> Vec<Depo> {
+        let mut rng = Pcg32::seeded(self.seed);
+        let d = [
+            self.end[0] - self.start[0],
+            self.end[1] - self.start[1],
+            self.end[2] - self.start[2],
+        ];
+        let length = (d[0] * d[0] + d[1] * d[1] + d[2] * d[2]).sqrt();
+        if length <= 0.0 {
+            return Vec::new();
+        }
+        let nsteps = (length / self.step).ceil() as usize;
+        let beta_c = 0.9997 * 299.792458 * MM / NS; // ~light speed muon
+        let mut depos = Vec::with_capacity(nsteps);
+        for i in 0..nsteps {
+            // Midpoint of step i.
+            let s0 = i as f64 * self.step;
+            let s1 = ((i + 1) as f64 * self.step).min(length);
+            let smid = 0.5 * (s0 + s1);
+            let frac = smid / length;
+            let steplen = s1 - s0;
+            if steplen <= 0.0 {
+                break;
+            }
+            let (energy, electrons) = self.loss.step(&mut rng, steplen);
+            depos.push(Depo {
+                time: self.time + smid / beta_c,
+                pos: [
+                    self.start[0] + frac * d[0],
+                    self.start[1] + frac * d[1],
+                    self.start[2] + frac * d[2],
+                ],
+                charge: electrons,
+                energy,
+                sigma_l: 0.0,
+                sigma_t: 0.0,
+                id: self.track_id,
+            });
+        }
+        depos
+    }
+
+    fn label(&self) -> String {
+        format!(
+            "track[({:.0},{:.0},{:.0})->({:.0},{:.0},{:.0}) mm, step {:.1} mm]",
+            self.start[0] / MM,
+            self.start[1] / MM,
+            self.start[2] / MM,
+            self.end[0] / MM,
+            self.end[1] / MM,
+            self.end[2] / MM,
+            self.step / MM
+        )
+    }
+}
+
+/// A fixed set of identical point depos — the fully deterministic
+/// source for kernel-level golden tests.
+pub struct PointSource {
+    /// The depos to emit.
+    pub depos: Vec<Depo>,
+}
+
+impl PointSource {
+    /// `n` depos of `charge` electrons at `pos`, spaced `dt` in time.
+    pub fn repeated(n: usize, pos: [f64; 3], charge: f64, t0: f64, dt: f64) -> Self {
+        Self {
+            depos: (0..n)
+                .map(|i| Depo::point(t0 + i as f64 * dt, pos, charge, i as u64))
+                .collect(),
+        }
+    }
+}
+
+impl DepoSource for PointSource {
+    fn generate(&mut self) -> Vec<Depo> {
+        self.depos.clone()
+    }
+    fn label(&self) -> String {
+        format!("points[n={}]", self.depos.len())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::depo::stats;
+
+    #[test]
+    fn track_spans_endpoints() {
+        let mut src = TrackDepoSource::mip([0.0, 0.0, 0.0], [0.0, 0.0, 100.0 * MM], 0.0, 1);
+        let depos = src.generate();
+        assert_eq!(depos.len(), 100);
+        assert!(depos[0].pos[2] < 1.0 * MM);
+        assert!(depos.last().unwrap().pos[2] > 99.0 * MM);
+        // times increase along the track
+        assert!(depos.windows(2).all(|w| w[1].time > w[0].time));
+    }
+
+    #[test]
+    fn track_charge_is_mip_scale() {
+        let mut src = TrackDepoSource::mip([0.0, 0.0, 0.0], [0.0, 0.0, 100.0 * MM], 0.0, 2);
+        let s = stats(&src.generate());
+        // ~6k electrons per mm step on average (58k/cm)
+        let per_depo = s.total_charge / s.count as f64;
+        assert!((3_000.0..15_000.0).contains(&per_depo), "per_depo={per_depo}");
+    }
+
+    #[test]
+    fn track_is_deterministic_by_seed() {
+        let gen = |seed| {
+            TrackDepoSource::mip([0.0, 0.0, 0.0], [10.0 * MM, 0.0, 50.0 * MM], 0.0, seed).generate()
+        };
+        assert_eq!(gen(5), gen(5));
+        assert_ne!(
+            gen(5).iter().map(|d| d.charge).sum::<f64>(),
+            gen(6).iter().map(|d| d.charge).sum::<f64>()
+        );
+    }
+
+    #[test]
+    fn degenerate_track_is_empty() {
+        let mut src = TrackDepoSource::mip([1.0, 2.0, 3.0], [1.0, 2.0, 3.0], 0.0, 1);
+        assert!(src.generate().is_empty());
+    }
+
+    #[test]
+    fn diagonal_track_midpoint() {
+        let mut src = TrackDepoSource::mip([0.0, 0.0, 0.0], [60.0 * MM, 60.0 * MM, 60.0 * MM], 0.0, 3);
+        let depos = src.generate();
+        let s = stats(&depos);
+        for k in 0..3 {
+            assert!(
+                (s.mean_pos[k] - 30.0 * MM).abs() < 5.0 * MM,
+                "axis {k}: {}",
+                s.mean_pos[k] / MM
+            );
+        }
+    }
+
+    #[test]
+    fn point_source_repeats() {
+        let mut src = PointSource::repeated(5, [1.0, 2.0, 3.0], 1000.0, 0.0, 10.0);
+        let depos = src.generate();
+        assert_eq!(depos.len(), 5);
+        assert!(depos.iter().all(|d| d.charge == 1000.0));
+        assert_eq!(depos[4].time, 40.0);
+        assert_eq!(depos[2].id, 2);
+    }
+}

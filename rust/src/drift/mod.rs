@@ -1,0 +1,220 @@
+//! Electron-cloud drift simulation.
+//!
+//! Transports each depo from its creation point to the response plane
+//! (Figure 2 of the paper): the cloud's arrival time advances by the
+//! drift time, its longitudinal/transverse Gaussian widths grow with
+//! diffusion (σ² += 2·D·t_drift), and its charge is attenuated by
+//! electron attachment over the finite lifetime — optionally with a
+//! binomial survival fluctuation (the same RNG-cost structure as the
+//! rasterizer's fluctuation step, but off the Table-2 hot path).
+
+use crate::depo::Depo;
+use crate::rng::{binomial, Pcg32};
+use crate::units::consts;
+
+/// Drift model parameters.
+#[derive(Clone, Debug)]
+pub struct Drifter {
+    /// X coordinate of the response plane depos drift to.
+    pub response_plane_x: f64,
+    /// Drift speed.
+    pub speed: f64,
+    /// Longitudinal diffusion coefficient.
+    pub diffusion_l: f64,
+    /// Transverse diffusion coefficient.
+    pub diffusion_t: f64,
+    /// Electron lifetime (attachment).
+    pub lifetime: f64,
+    /// If true, draw binomial survival instead of scaling by the mean.
+    pub fluctuate: bool,
+    /// RNG seed (used only when `fluctuate`).
+    pub seed: u64,
+}
+
+impl Drifter {
+    /// Standard drifter for a response plane at `response_plane_x`.
+    pub fn new(response_plane_x: f64) -> Self {
+        Self {
+            response_plane_x,
+            speed: consts::DRIFT_SPEED,
+            diffusion_l: consts::DIFFUSION_L,
+            diffusion_t: consts::DIFFUSION_T,
+            lifetime: consts::ELECTRON_LIFETIME,
+            fluctuate: false,
+            seed: 0,
+        }
+    }
+
+    /// Drift one depo to the response plane; returns None if the depo
+    /// lies behind the plane (it cannot drift backwards) or loses all
+    /// charge.
+    pub fn drift_one(&self, depo: &Depo, rng: &mut Pcg32) -> Option<Depo> {
+        let dx = depo.pos[0] - self.response_plane_x;
+        if dx < 0.0 {
+            return None;
+        }
+        let dt = dx / self.speed;
+        // Diffusion growth on top of any existing width.
+        let sigma_l = (depo.sigma_l * depo.sigma_l + 2.0 * self.diffusion_l * dt).sqrt();
+        let sigma_t = (depo.sigma_t * depo.sigma_t + 2.0 * self.diffusion_t * dt).sqrt();
+        // Attachment survival.
+        let survive_p = (-dt / self.lifetime).exp();
+        let charge = if self.fluctuate {
+            let n = depo.charge.round().max(0.0) as u64;
+            binomial(rng, n, survive_p) as f64
+        } else {
+            depo.charge * survive_p
+        };
+        if charge <= 0.0 {
+            return None;
+        }
+        Some(Depo {
+            time: depo.time + dt,
+            pos: [self.response_plane_x, depo.pos[1], depo.pos[2]],
+            charge,
+            energy: depo.energy,
+            sigma_l,
+            sigma_t,
+            id: depo.id,
+        })
+    }
+
+    /// Drift a whole depo set, dropping out-of-volume depos.  Output is
+    /// sorted by arrival time, as the downstream rasterizer expects.
+    pub fn drift(&self, depos: &[Depo]) -> Vec<Depo> {
+        let mut rng = Pcg32::seeded(self.seed);
+        let mut out: Vec<Depo> = depos
+            .iter()
+            .filter_map(|d| self.drift_one(d, &mut rng))
+            .collect();
+        out.sort_by(|a, b| a.time.partial_cmp(&b.time).unwrap());
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::units::*;
+
+    fn depo_at(x: f64, charge: f64) -> Depo {
+        Depo::point(0.0, [x, 10.0 * CM, -5.0 * CM], charge, 1)
+    }
+
+    fn drifter() -> Drifter {
+        Drifter::new(10.0 * CM)
+    }
+
+    #[test]
+    fn drift_time_is_distance_over_speed() {
+        let d = drifter();
+        let mut rng = Pcg32::seeded(0);
+        let out = d.drift_one(&depo_at(110.0 * CM, 10_000.0), &mut rng).unwrap();
+        let expect = (100.0 * CM) / consts::DRIFT_SPEED;
+        assert!((out.time - expect).abs() < 1e-9);
+        assert!((out.pos[0] - 10.0 * CM).abs() < 1e-12);
+        // transverse position unchanged
+        assert_eq!(out.pos[1], 10.0 * CM);
+        assert_eq!(out.pos[2], -5.0 * CM);
+    }
+
+    #[test]
+    fn diffusion_grows_with_sqrt_time() {
+        let d = drifter();
+        let mut rng = Pcg32::seeded(0);
+        let near = d.drift_one(&depo_at(20.0 * CM, 1e4), &mut rng).unwrap();
+        let far = d.drift_one(&depo_at(250.0 * CM, 1e4), &mut rng).unwrap();
+        assert!(far.sigma_l > near.sigma_l);
+        assert!(far.sigma_t > near.sigma_t);
+        // ratio ~ sqrt(240/10)
+        let expect = (240.0f64 / 10.0).sqrt();
+        assert!((far.sigma_l / near.sigma_l - expect).abs() < 0.01);
+        // sanity scale: after ~1.5 m drift sigma_l is around a millimeter
+        assert!(far.sigma_l > 0.3 * MM && far.sigma_l < 3.0 * MM);
+    }
+
+    #[test]
+    fn existing_width_adds_in_quadrature() {
+        let d = drifter();
+        let mut rng = Pcg32::seeded(0);
+        let mut depo = depo_at(110.0 * CM, 1e4);
+        depo.sigma_l = 2.0 * MM;
+        let out = d.drift_one(&depo, &mut rng).unwrap();
+        let pure = {
+            let dt = (100.0 * CM) / d.speed;
+            (2.0 * d.diffusion_l * dt).sqrt()
+        };
+        let expect = ((2.0 * MM) * (2.0 * MM) + pure * pure).sqrt();
+        assert!((out.sigma_l - expect).abs() < 1e-9);
+    }
+
+    #[test]
+    fn lifetime_attenuates_charge() {
+        let d = drifter();
+        let mut rng = Pcg32::seeded(0);
+        let out = d.drift_one(&depo_at(170.0 * CM, 1e6), &mut rng).unwrap();
+        let dt = (160.0 * CM) / d.speed;
+        let expect = 1e6 * (-dt / d.lifetime).exp();
+        assert!((out.charge - expect).abs() < 1.0);
+        assert!(out.charge < 1e6);
+    }
+
+    #[test]
+    fn behind_plane_is_dropped() {
+        let d = drifter();
+        let mut rng = Pcg32::seeded(0);
+        assert!(d.drift_one(&depo_at(5.0 * CM, 1e4), &mut rng).is_none());
+    }
+
+    #[test]
+    fn fluctuated_survival_has_binomial_spread() {
+        let mut d = drifter();
+        d.fluctuate = true;
+        let depo = depo_at(200.0 * CM, 100_000.0);
+        let dt = (190.0 * CM) / d.speed;
+        let p = (-dt / d.lifetime).exp();
+        let n = 2000;
+        let mut sum = 0.0;
+        let mut sum2 = 0.0;
+        for seed in 0..n {
+            let mut rng = Pcg32::seeded(seed);
+            let q = d.drift_one(&depo, &mut rng).unwrap().charge;
+            sum += q;
+            sum2 += q * q;
+        }
+        let mean = sum / n as f64;
+        let var = sum2 / n as f64 - mean * mean;
+        let expect_mean = 100_000.0 * p;
+        let expect_var = 100_000.0 * p * (1.0 - p);
+        assert!((mean - expect_mean).abs() < 5.0 * (expect_var / n as f64).sqrt() + 1.0);
+        assert!(var > 0.3 * expect_var && var < 3.0 * expect_var, "var={var} expect={expect_var}");
+    }
+
+    #[test]
+    fn drift_sorts_by_arrival() {
+        let d = drifter();
+        let depos = vec![
+            depo_at(200.0 * CM, 1e4),
+            depo_at(50.0 * CM, 1e4),
+            depo_at(20.0 * CM, 1e4),
+        ];
+        let out = d.drift(&depos);
+        assert_eq!(out.len(), 3);
+        assert!(out.windows(2).all(|w| w[0].time <= w[1].time));
+    }
+
+    #[test]
+    fn property_charge_never_increases() {
+        crate::testing::forall("drift conserves or loses charge", 100, |g| {
+            let x = g.f64_in(10.0..250.0) * CM;
+            let q = g.f64_in(1.0..1e6);
+            let d = drifter();
+            let mut rng = Pcg32::seeded(1);
+            if let Some(out) = d.drift_one(&depo_at(x, q), &mut rng) {
+                g.assert(out.charge <= q + 1e-9, &format!("q {q} -> {}", out.charge));
+                g.assert(out.time >= 0.0, "time non-negative");
+                g.assert(out.sigma_l >= 0.0 && out.sigma_t >= 0.0, "widths non-negative");
+            }
+        });
+    }
+}

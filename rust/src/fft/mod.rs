@@ -1,0 +1,173 @@
+//! FFT substrate, from scratch.
+//!
+//! Wire-Cell's production "FT" stage (Eq. 2 of the paper) runs Eigen over
+//! FFTW; neither is available here, and the paper itself notes (§5) that
+//! Kokkos lacked an FFT so the team wrapped vendor libraries per backend.
+//! We take the same role for our Rust reference path: a self-contained
+//! FFT library with
+//!
+//! * iterative radix-2 Cooley–Tukey for power-of-two sizes,
+//! * Bluestein's algorithm for arbitrary sizes (so detector geometries
+//!   with non-power-of-two channel counts still work),
+//! * cached [`Plan`]s (twiddles, bit-reversal tables, Bluestein chirps),
+//! * 1-D / 2-D forward and inverse transforms over [`Complex`] buffers,
+//! * real-input convenience wrappers and linear-convolution helpers.
+//!
+//! Correctness is pinned against a naive O(N²) DFT in the unit tests and
+//! against `jnp.fft` through the artifact round-trip integration test.
+
+mod complex;
+mod plan;
+mod real;
+
+pub use complex::Complex;
+pub use plan::{Fft2d, Plan};
+pub use real::{convolve_real, cyclic_convolve_real, next_fast_len, rfft, irfft};
+
+/// Direction of a transform.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Direction {
+    /// e^{-2πi kn/N}
+    Forward,
+    /// e^{+2πi kn/N}, scaled by 1/N.
+    Inverse,
+}
+
+/// One-shot forward FFT (plans internally; prefer [`Plan`] in loops).
+pub fn fft(data: &mut [Complex]) {
+    Plan::new(data.len()).forward(data);
+}
+
+/// One-shot inverse FFT.
+pub fn ifft(data: &mut [Complex]) {
+    Plan::new(data.len()).inverse(data);
+}
+
+/// Naive O(N²) DFT — the oracle the fast paths are tested against.
+pub fn dft_naive(input: &[Complex], dir: Direction) -> Vec<Complex> {
+    let n = input.len();
+    let sign = match dir {
+        Direction::Forward => -1.0,
+        Direction::Inverse => 1.0,
+    };
+    let mut out = vec![Complex::ZERO; n];
+    for (k, o) in out.iter_mut().enumerate() {
+        let mut acc = Complex::ZERO;
+        for (j, &x) in input.iter().enumerate() {
+            let ang = sign * 2.0 * std::f64::consts::PI * (k as f64) * (j as f64) / (n as f64);
+            acc += x * Complex::from_polar(1.0, ang);
+        }
+        if let Direction::Inverse = dir {
+            acc = acc.scale(1.0 / n as f64);
+        }
+        *o = acc;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn assert_close(a: &[Complex], b: &[Complex], tol: f64) {
+        assert_eq!(a.len(), b.len());
+        for (i, (x, y)) in a.iter().zip(b.iter()).enumerate() {
+            assert!(
+                (x.re - y.re).abs() < tol && (x.im - y.im).abs() < tol,
+                "mismatch at {i}: {x:?} vs {y:?}"
+            );
+        }
+    }
+
+    fn ramp(n: usize) -> Vec<Complex> {
+        (0..n)
+            .map(|i| Complex::new(i as f64 + 1.0, (i as f64) * 0.5 - 1.0))
+            .collect()
+    }
+
+    #[test]
+    fn fft_matches_naive_pow2() {
+        for n in [1usize, 2, 4, 8, 16, 64, 256] {
+            let input = ramp(n);
+            let mut fast = input.clone();
+            fft(&mut fast);
+            let slow = dft_naive(&input, Direction::Forward);
+            assert_close(&fast, &slow, 1e-8 * n as f64);
+        }
+    }
+
+    #[test]
+    fn fft_matches_naive_arbitrary() {
+        for n in [3usize, 5, 6, 7, 12, 15, 100, 241] {
+            let input = ramp(n);
+            let mut fast = input.clone();
+            fft(&mut fast);
+            let slow = dft_naive(&input, Direction::Forward);
+            assert_close(&fast, &slow, 1e-7 * n as f64);
+        }
+    }
+
+    #[test]
+    fn ifft_matches_naive() {
+        for n in [4usize, 7, 32, 45] {
+            let input = ramp(n);
+            let mut fast = input.clone();
+            ifft(&mut fast);
+            let slow = dft_naive(&input, Direction::Inverse);
+            assert_close(&fast, &slow, 1e-9 * n as f64);
+        }
+    }
+
+    #[test]
+    fn roundtrip_is_identity() {
+        for n in [2usize, 3, 8, 30, 128, 1000] {
+            let input = ramp(n);
+            let mut buf = input.clone();
+            fft(&mut buf);
+            ifft(&mut buf);
+            assert_close(&buf, &input, 1e-9 * n as f64);
+        }
+    }
+
+    #[test]
+    fn delta_transforms_to_ones() {
+        let mut buf = vec![Complex::ZERO; 16];
+        buf[0] = Complex::new(1.0, 0.0);
+        fft(&mut buf);
+        for c in &buf {
+            assert!((c.re - 1.0).abs() < 1e-12 && c.im.abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn parseval_holds() {
+        let input = ramp(64);
+        let time_energy: f64 = input.iter().map(|c| c.norm_sqr()).sum();
+        let mut buf = input;
+        fft(&mut buf);
+        let freq_energy: f64 = buf.iter().map(|c| c.norm_sqr()).sum::<f64>() / 64.0;
+        assert!((time_energy - freq_energy).abs() < 1e-6 * time_energy);
+    }
+
+    #[test]
+    fn linearity() {
+        let a = ramp(32);
+        let b: Vec<Complex> = ramp(32).iter().map(|c| c.scale(0.3).conj()).collect();
+        let sum: Vec<Complex> = a.iter().zip(&b).map(|(x, y)| *x + *y).collect();
+        let mut fa = a.clone();
+        let mut fb = b.clone();
+        let mut fs = sum.clone();
+        fft(&mut fa);
+        fft(&mut fb);
+        fft(&mut fs);
+        let combined: Vec<Complex> = fa.iter().zip(&fb).map(|(x, y)| *x + *y).collect();
+        assert_close(&fs, &combined, 1e-9);
+    }
+
+    #[test]
+    fn empty_is_noop() {
+        let mut buf: Vec<Complex> = Vec::new();
+        fft(&mut buf); // must not panic
+        ifft(&mut buf);
+    }
+}

@@ -1,0 +1,372 @@
+//! FFT plans: cached radix-2 and Bluestein transforms, plus 2-D plans.
+
+use super::complex::Complex;
+
+/// A reusable 1-D FFT plan for a fixed length.
+///
+/// Power-of-two lengths use iterative radix-2 Cooley–Tukey with cached
+/// twiddles and a cached bit-reversal permutation.  Other lengths use
+/// Bluestein's chirp-z algorithm, re-expressing the DFT as a cyclic
+/// convolution of power-of-two length (whose plan is cached inside).
+pub struct Plan {
+    n: usize,
+    kind: Kind,
+}
+
+enum Kind {
+    /// n == 0 or 1.
+    Trivial,
+    Radix2 {
+        /// twiddle[s] holds the stage-s factors, total n/2 per direction.
+        twiddles_fwd: Vec<Complex>,
+        twiddles_inv: Vec<Complex>,
+        bitrev: Vec<u32>,
+    },
+    Bluestein {
+        /// chirp[k] = e^{-iπk²/n}
+        chirp: Vec<Complex>,
+        /// FFT(b) where b[k] = conj(chirp[k]) arranged cyclically, length m.
+        bhat_fwd: Vec<Complex>,
+        m: usize,
+        inner: Box<Plan>,
+    },
+}
+
+impl Plan {
+    /// Build a plan for length `n`.
+    pub fn new(n: usize) -> Self {
+        if n <= 1 {
+            return Self { n, kind: Kind::Trivial };
+        }
+        if n.is_power_of_two() {
+            Self {
+                n,
+                kind: build_radix2(n),
+            }
+        } else {
+            Self {
+                n,
+                kind: build_bluestein(n),
+            }
+        }
+    }
+
+    /// Transform length.
+    pub fn len(&self) -> usize {
+        self.n
+    }
+
+    /// True for the degenerate 0/1-length plan.
+    pub fn is_empty(&self) -> bool {
+        self.n == 0
+    }
+
+    /// In-place forward transform. Panics if `data.len() != self.len()`.
+    pub fn forward(&self, data: &mut [Complex]) {
+        assert_eq!(data.len(), self.n, "plan length mismatch");
+        self.run(data, false);
+    }
+
+    /// In-place inverse transform (scaled by 1/N).
+    pub fn inverse(&self, data: &mut [Complex]) {
+        assert_eq!(data.len(), self.n, "plan length mismatch");
+        self.run(data, true);
+        let k = 1.0 / self.n as f64;
+        for c in data.iter_mut() {
+            *c = c.scale(k);
+        }
+    }
+
+    /// Unscaled transform core.
+    fn run(&self, data: &mut [Complex], inverse: bool) {
+        match &self.kind {
+            Kind::Trivial => {}
+            Kind::Radix2 {
+                twiddles_fwd,
+                twiddles_inv,
+                bitrev,
+            } => {
+                let tw = if inverse { twiddles_inv } else { twiddles_fwd };
+                radix2_inplace(data, tw, bitrev);
+            }
+            Kind::Bluestein {
+                chirp,
+                bhat_fwd,
+                m,
+                inner,
+            } => {
+                bluestein(data, chirp, bhat_fwd, *m, inner, inverse);
+            }
+        }
+    }
+}
+
+fn build_radix2(n: usize) -> Kind {
+    debug_assert!(n.is_power_of_two() && n >= 2);
+    // Stage-ordered twiddles: for stage half-size h = 1,2,4,...,n/2 store
+    // w^j for j in 0..h with w = e^{∓2πi/(2h)}. Total n-1 entries.
+    let mut twiddles_fwd = Vec::with_capacity(n - 1);
+    let mut twiddles_inv = Vec::with_capacity(n - 1);
+    let mut h = 1usize;
+    while h < n {
+        for j in 0..h {
+            let ang = std::f64::consts::PI * (j as f64) / (h as f64);
+            twiddles_fwd.push(Complex::from_polar(1.0, -ang));
+            twiddles_inv.push(Complex::from_polar(1.0, ang));
+        }
+        h *= 2;
+    }
+    let bits = n.trailing_zeros();
+    let bitrev = (0..n as u32)
+        .map(|i| i.reverse_bits() >> (32 - bits))
+        .collect();
+    Kind::Radix2 {
+        twiddles_fwd,
+        twiddles_inv,
+        bitrev,
+    }
+}
+
+/// Iterative in-place radix-2 with pre-permuted input ordering.
+fn radix2_inplace(data: &mut [Complex], twiddles: &[Complex], bitrev: &[u32]) {
+    let n = data.len();
+    // Bit-reversal permutation.
+    for i in 0..n {
+        let j = bitrev[i] as usize;
+        if i < j {
+            data.swap(i, j);
+        }
+    }
+    // Butterflies.
+    let mut h = 1usize;
+    let mut tw_base = 0usize;
+    while h < n {
+        let step = 2 * h;
+        let tw = &twiddles[tw_base..tw_base + h];
+        let mut start = 0;
+        while start < n {
+            for j in 0..h {
+                let u = data[start + j];
+                let v = data[start + j + h] * tw[j];
+                data[start + j] = u + v;
+                data[start + j + h] = u - v;
+            }
+            start += step;
+        }
+        tw_base += h;
+        h = step;
+    }
+}
+
+fn build_bluestein(n: usize) -> Kind {
+    // Chirp c[k] = e^{-iπ k²/n}; indices mod 2n for numerical stability.
+    let chirp: Vec<Complex> = (0..n)
+        .map(|k| {
+            let kk = ((k as u128 * k as u128) % (2 * n as u128)) as f64;
+            Complex::from_polar(1.0, -std::f64::consts::PI * kk / n as f64)
+        })
+        .collect();
+    let m = (2 * n - 1).next_power_of_two();
+    let inner = Plan::new(m);
+    // b[j] = conj(chirp[|j|]) cyclically embedded in length m.
+    let mut b = vec![Complex::ZERO; m];
+    b[0] = chirp[0].conj();
+    for j in 1..n {
+        let v = chirp[j].conj();
+        b[j] = v;
+        b[m - j] = v;
+    }
+    inner.forward(&mut b);
+    Kind::Bluestein {
+        chirp,
+        bhat_fwd: b,
+        m,
+        inner: Box::new(inner),
+    }
+}
+
+fn bluestein(
+    data: &mut [Complex],
+    chirp: &[Complex],
+    bhat: &[Complex],
+    m: usize,
+    inner: &Plan,
+    inverse: bool,
+) {
+    let n = data.len();
+    // For the inverse direction, conjugate in, conjugate out (1/N scaling
+    // applied by the caller).
+    let mut a = vec![Complex::ZERO; m];
+    for k in 0..n {
+        let x = if inverse { data[k].conj() } else { data[k] };
+        a[k] = x * chirp[k];
+    }
+    inner.forward(&mut a);
+    for (ai, bi) in a.iter_mut().zip(bhat.iter()) {
+        *ai = *ai * *bi;
+    }
+    inner.inverse(&mut a);
+    for k in 0..n {
+        let y = a[k] * chirp[k];
+        data[k] = if inverse { y.conj() } else { y };
+    }
+}
+
+/// A 2-D FFT plan over row-major `rows × cols` data.
+///
+/// The signal-simulation "FT" step transforms the (channel × tick) grid;
+/// rows are channels (wire/pitch axis ω_x) and columns ticks (ω_t).
+pub struct Fft2d {
+    rows: usize,
+    cols: usize,
+    row_plan: Plan,
+    col_plan: Plan,
+}
+
+impl Fft2d {
+    /// Build a 2-D plan.
+    pub fn new(rows: usize, cols: usize) -> Self {
+        Self {
+            rows,
+            cols,
+            row_plan: Plan::new(cols),
+            col_plan: Plan::new(rows),
+        }
+    }
+
+    /// Grid shape (rows, cols).
+    pub fn shape(&self) -> (usize, usize) {
+        (self.rows, self.cols)
+    }
+
+    /// In-place forward 2-D transform of row-major data.
+    pub fn forward(&self, data: &mut [Complex]) {
+        self.transform(data, false);
+    }
+
+    /// In-place inverse 2-D transform (scaled by 1/(rows·cols)).
+    pub fn inverse(&self, data: &mut [Complex]) {
+        self.transform(data, true);
+    }
+
+    fn transform(&self, data: &mut [Complex], inverse: bool) {
+        assert_eq!(data.len(), self.rows * self.cols, "grid shape mismatch");
+        // Rows first.
+        for r in 0..self.rows {
+            let row = &mut data[r * self.cols..(r + 1) * self.cols];
+            if inverse {
+                self.row_plan.inverse(row);
+            } else {
+                self.row_plan.forward(row);
+            }
+        }
+        // Then columns, via a scratch column buffer.
+        let mut col = vec![Complex::ZERO; self.rows];
+        for c in 0..self.cols {
+            for r in 0..self.rows {
+                col[r] = data[r * self.cols + c];
+            }
+            if inverse {
+                self.col_plan.inverse(&mut col);
+            } else {
+                self.col_plan.forward(&mut col);
+            }
+            for r in 0..self.rows {
+                data[r * self.cols + c] = col[r];
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fft::{dft_naive, Direction};
+
+    #[test]
+    fn plan_reuse_matches_oneshot() {
+        let plan = Plan::new(128);
+        for trial in 0..3 {
+            let input: Vec<Complex> = (0..128)
+                .map(|i| Complex::new((i + trial) as f64, -(i as f64) * 0.25))
+                .collect();
+            let mut a = input.clone();
+            plan.forward(&mut a);
+            let b = dft_naive(&input, Direction::Forward);
+            for (x, y) in a.iter().zip(&b) {
+                assert!((x.re - y.re).abs() < 1e-7 && (x.im - y.im).abs() < 1e-7);
+            }
+        }
+    }
+
+    #[test]
+    fn bluestein_prime_length() {
+        let n = 97;
+        let input: Vec<Complex> = (0..n).map(|i| Complex::new((i % 7) as f64, (i % 3) as f64)).collect();
+        let mut fast = input.clone();
+        Plan::new(n).forward(&mut fast);
+        let slow = dft_naive(&input, Direction::Forward);
+        for (x, y) in fast.iter().zip(&slow) {
+            assert!((x.re - y.re).abs() < 1e-7 && (x.im - y.im).abs() < 1e-7);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "plan length mismatch")]
+    fn wrong_length_panics() {
+        let plan = Plan::new(8);
+        let mut buf = vec![Complex::ZERO; 4];
+        plan.forward(&mut buf);
+    }
+
+    #[test]
+    fn fft2d_roundtrip() {
+        let (r, c) = (6, 10); // exercises Bluestein rows and radix-2-ish cols
+        let input: Vec<Complex> = (0..r * c).map(|i| Complex::new(i as f64, (i % 5) as f64)).collect();
+        let plan = Fft2d::new(r, c);
+        let mut buf = input.clone();
+        plan.forward(&mut buf);
+        plan.inverse(&mut buf);
+        for (x, y) in buf.iter().zip(&input) {
+            assert!((x.re - y.re).abs() < 1e-8 && (x.im - y.im).abs() < 1e-8);
+        }
+    }
+
+    #[test]
+    fn fft2d_matches_separable_naive() {
+        let (r, c) = (4, 3);
+        let input: Vec<Complex> = (0..r * c).map(|i| Complex::new((i * i % 11) as f64, 0.0)).collect();
+        // naive 2-D dft
+        let mut expect = vec![Complex::ZERO; r * c];
+        for kr in 0..r {
+            for kc in 0..c {
+                let mut acc = Complex::ZERO;
+                for jr in 0..r {
+                    for jc in 0..c {
+                        let ang = -2.0 * std::f64::consts::PI
+                            * ((kr * jr) as f64 / r as f64 + (kc * jc) as f64 / c as f64);
+                        acc += input[jr * c + jc] * Complex::from_polar(1.0, ang);
+                    }
+                }
+                expect[kr * c + kc] = acc;
+            }
+        }
+        let mut fast = input.clone();
+        Fft2d::new(r, c).forward(&mut fast);
+        for (x, y) in fast.iter().zip(&expect) {
+            assert!((x.re - y.re).abs() < 1e-8 && (x.im - y.im).abs() < 1e-8);
+        }
+    }
+
+    #[test]
+    fn fft2d_dc_component() {
+        let (r, c) = (8, 8);
+        let input = vec![Complex::ONE; r * c];
+        let mut buf = input;
+        Fft2d::new(r, c).forward(&mut buf);
+        assert!((buf[0].re - 64.0).abs() < 1e-9);
+        for (i, z) in buf.iter().enumerate().skip(1) {
+            assert!(z.abs() < 1e-9, "bin {i} = {z:?}");
+        }
+    }
+}

@@ -1,0 +1,190 @@
+//! Real-input conveniences and convolution helpers built on the complex
+//! plans.  The detector-response application (Eq. 2) is a cyclic
+//! spectral product; the electronics-shaping and noise paths use linear
+//! convolution with zero padding.
+
+use super::complex::Complex;
+use super::plan::Plan;
+
+/// Smallest transform length >= `n` that the fast path handles well
+/// (next power of two; Bluestein internally pads to one anyway, so for
+/// convolution work we pad explicitly and skip the chirp machinery).
+pub fn next_fast_len(n: usize) -> usize {
+    n.next_power_of_two()
+}
+
+/// Forward FFT of a real sequence; returns the full complex spectrum
+/// (length n). Callers needing the half-spectrum can slice `0..n/2+1`
+/// and rely on Hermitian symmetry.
+pub fn rfft(input: &[f64]) -> Vec<Complex> {
+    let mut buf: Vec<Complex> = input.iter().map(|&x| Complex::real(x)).collect();
+    Plan::new(buf.len()).forward(&mut buf);
+    buf
+}
+
+/// Inverse FFT returning only the real parts (the caller asserts the
+/// spectrum is Hermitian; imaginary residue is discarded).
+pub fn irfft(spectrum: &[Complex]) -> Vec<f64> {
+    let mut buf = spectrum.to_vec();
+    Plan::new(buf.len()).inverse(&mut buf);
+    buf.into_iter().map(|c| c.re).collect()
+}
+
+/// Cyclic (circular) convolution of two equal-length real sequences via
+/// the spectral product — the exact operation of the paper's "FT" stage
+/// along each axis.
+pub fn cyclic_convolve_real(a: &[f64], b: &[f64]) -> Vec<f64> {
+    assert_eq!(a.len(), b.len(), "cyclic convolution needs equal lengths");
+    let n = a.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let plan = Plan::new(n);
+    let mut fa: Vec<Complex> = a.iter().map(|&x| Complex::real(x)).collect();
+    let mut fb: Vec<Complex> = b.iter().map(|&x| Complex::real(x)).collect();
+    plan.forward(&mut fa);
+    plan.forward(&mut fb);
+    for (x, y) in fa.iter_mut().zip(fb.iter()) {
+        *x = *x * *y;
+    }
+    plan.inverse(&mut fa);
+    fa.into_iter().map(|c| c.re).collect()
+}
+
+/// Linear convolution of real sequences (output length a+b-1) by zero-
+/// padding to a fast length.  Used to build the composite detector
+/// response (field ⊗ electronics) and for oracle checks.
+pub fn convolve_real(a: &[f64], b: &[f64]) -> Vec<f64> {
+    if a.is_empty() || b.is_empty() {
+        return Vec::new();
+    }
+    let out_len = a.len() + b.len() - 1;
+    let m = next_fast_len(out_len);
+    let plan = Plan::new(m);
+    let mut fa = vec![Complex::ZERO; m];
+    let mut fb = vec![Complex::ZERO; m];
+    for (dst, &src) in fa.iter_mut().zip(a.iter()) {
+        *dst = Complex::real(src);
+    }
+    for (dst, &src) in fb.iter_mut().zip(b.iter()) {
+        *dst = Complex::real(src);
+    }
+    plan.forward(&mut fa);
+    plan.forward(&mut fb);
+    for (x, y) in fa.iter_mut().zip(fb.iter()) {
+        *x = *x * *y;
+    }
+    plan.inverse(&mut fa);
+    fa.truncate(out_len);
+    fa.into_iter().map(|c| c.re).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn naive_linear(a: &[f64], b: &[f64]) -> Vec<f64> {
+        let mut out = vec![0.0; a.len() + b.len() - 1];
+        for (i, &x) in a.iter().enumerate() {
+            for (j, &y) in b.iter().enumerate() {
+                out[i + j] += x * y;
+            }
+        }
+        out
+    }
+
+    fn naive_cyclic(a: &[f64], b: &[f64]) -> Vec<f64> {
+        let n = a.len();
+        let mut out = vec![0.0; n];
+        for k in 0..n {
+            for j in 0..n {
+                out[k] += a[j] * b[(k + n - j) % n];
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn rfft_of_cosine_has_two_lines() {
+        let n = 64;
+        let input: Vec<f64> = (0..n)
+            .map(|i| (2.0 * std::f64::consts::PI * 5.0 * i as f64 / n as f64).cos())
+            .collect();
+        let spec = rfft(&input);
+        for (k, z) in spec.iter().enumerate() {
+            let mag = z.abs();
+            if k == 5 || k == n - 5 {
+                assert!((mag - n as f64 / 2.0).abs() < 1e-9, "bin {k} mag {mag}");
+            } else {
+                assert!(mag < 1e-9, "bin {k} mag {mag}");
+            }
+        }
+    }
+
+    #[test]
+    fn rfft_hermitian_symmetry() {
+        let input: Vec<f64> = (0..32).map(|i| ((i * 7) % 13) as f64 - 6.0).collect();
+        let spec = rfft(&input);
+        for k in 1..32 {
+            let a = spec[k];
+            let b = spec[32 - k].conj();
+            assert!((a.re - b.re).abs() < 1e-9 && (a.im - b.im).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn rfft_irfft_roundtrip() {
+        let input: Vec<f64> = (0..48).map(|i| (i as f64 * 0.3).sin()).collect();
+        let back = irfft(&rfft(&input));
+        for (x, y) in back.iter().zip(&input) {
+            assert!((x - y).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn linear_convolution_matches_naive() {
+        let a: Vec<f64> = vec![1.0, 2.0, 3.0, -1.0, 0.5];
+        let b: Vec<f64> = vec![0.5, -0.25, 2.0];
+        let fast = convolve_real(&a, &b);
+        let slow = naive_linear(&a, &b);
+        assert_eq!(fast.len(), slow.len());
+        for (x, y) in fast.iter().zip(&slow) {
+            assert!((x - y).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn cyclic_convolution_matches_naive() {
+        let a: Vec<f64> = (0..17).map(|i| (i as f64).sin()).collect();
+        let b: Vec<f64> = (0..17).map(|i| (i as f64 * 0.5).cos()).collect();
+        let fast = cyclic_convolve_real(&a, &b);
+        let slow = naive_cyclic(&a, &b);
+        for (x, y) in fast.iter().zip(&slow) {
+            assert!((x - y).abs() < 1e-8);
+        }
+    }
+
+    #[test]
+    fn convolution_with_delta_is_identity() {
+        let a: Vec<f64> = vec![3.0, -1.0, 4.0, 1.0, -5.0];
+        let delta = vec![1.0, 0.0, 0.0, 0.0, 0.0];
+        let out = cyclic_convolve_real(&a, &delta);
+        for (x, y) in out.iter().zip(&a) {
+            assert!((x - y).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn next_fast_len_is_pow2_bound() {
+        assert_eq!(next_fast_len(1), 1);
+        assert_eq!(next_fast_len(5), 8);
+        assert_eq!(next_fast_len(8), 8);
+        assert_eq!(next_fast_len(1000), 1024);
+    }
+
+    #[test]
+    fn empty_inputs() {
+        assert!(convolve_real(&[], &[1.0]).is_empty());
+        assert!(cyclic_convolve_real(&[], &[]).is_empty());
+    }
+}

@@ -1,0 +1,202 @@
+//! Frames and traces: the simulation's output data model (WCT `IFrame`).
+
+use crate::geometry::PlaneId;
+
+/// One plane's dense readout: ADC counts or float signal, row-major
+/// (channel × tick).
+#[derive(Clone, Debug)]
+pub struct PlaneFrame {
+    /// Which plane.
+    pub plane: PlaneId,
+    /// Channels (wires).
+    pub nchan: usize,
+    /// Ticks.
+    pub nticks: usize,
+    /// Row-major samples.
+    pub data: Vec<f32>,
+}
+
+impl PlaneFrame {
+    /// Zeroed frame.
+    pub fn zeros(plane: PlaneId, nchan: usize, nticks: usize) -> Self {
+        Self {
+            plane,
+            nchan,
+            nticks,
+            data: vec![0.0; nchan * nticks],
+        }
+    }
+
+    /// Sample at (channel, tick).
+    pub fn at(&self, c: usize, t: usize) -> f32 {
+        self.data[c * self.nticks + t]
+    }
+
+    /// One channel's waveform.
+    pub fn channel(&self, c: usize) -> &[f32] {
+        &self.data[c * self.nticks..(c + 1) * self.nticks]
+    }
+
+    /// Extract sparse traces: contiguous runs where |sample| exceeds
+    /// `threshold`, padded by `pad` ticks each side.
+    pub fn traces(&self, threshold: f32, pad: usize) -> Vec<Trace> {
+        let mut out = Vec::new();
+        for c in 0..self.nchan {
+            let wave = self.channel(c);
+            let mut t = 0;
+            while t < self.nticks {
+                if wave[t].abs() > threshold {
+                    // find run end
+                    let mut end = t;
+                    while end < self.nticks && wave[end].abs() > threshold {
+                        end += 1;
+                    }
+                    let lo = t.saturating_sub(pad);
+                    let hi = (end + pad).min(self.nticks);
+                    out.push(Trace {
+                        plane: self.plane,
+                        channel: c,
+                        tbin: lo,
+                        samples: wave[lo..hi].to_vec(),
+                    });
+                    t = hi;
+                } else {
+                    t += 1;
+                }
+            }
+        }
+        out
+    }
+
+    /// Summary statistics (sum, min, max, rms).
+    pub fn stats(&self) -> FrameStats {
+        let n = self.data.len().max(1);
+        let sum: f64 = self.data.iter().map(|&v| v as f64).sum();
+        let min = self.data.iter().cloned().fold(f32::INFINITY, f32::min);
+        let max = self.data.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let mean = sum / n as f64;
+        let var: f64 = self
+            .data
+            .iter()
+            .map(|&v| (v as f64 - mean) * (v as f64 - mean))
+            .sum::<f64>()
+            / n as f64;
+        FrameStats {
+            sum,
+            min,
+            max,
+            rms: var.sqrt(),
+        }
+    }
+}
+
+/// Sparse trace: a run of samples on one channel.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Trace {
+    /// Plane of the channel.
+    pub plane: PlaneId,
+    /// Channel index.
+    pub channel: usize,
+    /// First tick of the samples.
+    pub tbin: usize,
+    /// The samples.
+    pub samples: Vec<f32>,
+}
+
+/// Frame summary statistics.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct FrameStats {
+    /// Sum over all samples.
+    pub sum: f64,
+    /// Minimum sample.
+    pub min: f32,
+    /// Maximum sample.
+    pub max: f32,
+    /// RMS about the mean.
+    pub rms: f64,
+}
+
+/// A full event: one frame per plane.
+#[derive(Clone, Debug)]
+pub struct Frame {
+    /// Per-plane frames in U, V, W order.
+    pub planes: Vec<PlaneFrame>,
+    /// Event identifier.
+    pub ident: u64,
+}
+
+impl Frame {
+    /// Frame lookup by plane.
+    pub fn plane(&self, id: PlaneId) -> &PlaneFrame {
+        &self.planes[id as usize]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn frame_with_pulse() -> PlaneFrame {
+        let mut f = PlaneFrame::zeros(PlaneId::W, 4, 100);
+        for t in 40..50 {
+            f.data[2 * 100 + t] = 10.0;
+        }
+        f
+    }
+
+    #[test]
+    fn accessors() {
+        let f = frame_with_pulse();
+        assert_eq!(f.at(2, 45), 10.0);
+        assert_eq!(f.at(1, 45), 0.0);
+        assert_eq!(f.channel(2).len(), 100);
+    }
+
+    #[test]
+    fn trace_extraction_finds_pulse() {
+        let f = frame_with_pulse();
+        let traces = f.traces(1.0, 3);
+        assert_eq!(traces.len(), 1);
+        let tr = &traces[0];
+        assert_eq!(tr.channel, 2);
+        assert_eq!(tr.tbin, 37);
+        assert_eq!(tr.samples.len(), 10 + 6);
+    }
+
+    #[test]
+    fn trace_extraction_multiple_runs() {
+        let mut f = PlaneFrame::zeros(PlaneId::U, 1, 100);
+        f.data[10] = 5.0;
+        f.data[60] = -5.0;
+        let traces = f.traces(1.0, 0);
+        assert_eq!(traces.len(), 2);
+        assert_eq!(traces[0].tbin, 10);
+        assert_eq!(traces[1].tbin, 60);
+    }
+
+    #[test]
+    fn trace_pad_clamps_at_edges() {
+        let mut f = PlaneFrame::zeros(PlaneId::U, 1, 20);
+        f.data[0] = 9.0;
+        f.data[19] = 9.0;
+        let traces = f.traces(1.0, 5);
+        assert_eq!(traces[0].tbin, 0);
+        assert_eq!(traces.last().unwrap().tbin + traces.last().unwrap().samples.len(), 20);
+    }
+
+    #[test]
+    fn stats() {
+        let f = frame_with_pulse();
+        let s = f.stats();
+        assert_eq!(s.sum, 100.0);
+        assert_eq!(s.max, 10.0);
+        assert_eq!(s.min, 0.0);
+        assert!(s.rms > 0.0);
+    }
+
+    #[test]
+    fn empty_frame_traces() {
+        let f = PlaneFrame::zeros(PlaneId::V, 3, 50);
+        assert!(f.traces(0.5, 2).is_empty());
+    }
+}

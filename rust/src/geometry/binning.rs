@@ -1,0 +1,157 @@
+//! Regular 1-D binning, the workhorse coordinate helper (WCT `Binning`).
+
+/// A regular binning of `nbins` over `[minval, maxval)`.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Binning {
+    nbins: usize,
+    minval: f64,
+    maxval: f64,
+}
+
+impl Binning {
+    /// Construct; panics if the interval is empty or inverted.
+    pub fn new(nbins: usize, minval: f64, maxval: f64) -> Self {
+        assert!(nbins > 0, "binning needs at least one bin");
+        assert!(maxval > minval, "inverted binning interval");
+        Self {
+            nbins,
+            minval,
+            maxval,
+        }
+    }
+
+    /// Number of bins.
+    pub fn nbins(&self) -> usize {
+        self.nbins
+    }
+
+    /// Lower edge of the binning.
+    pub fn min(&self) -> f64 {
+        self.minval
+    }
+
+    /// Upper edge of the binning.
+    pub fn max(&self) -> f64 {
+        self.maxval
+    }
+
+    /// Width of one bin.
+    pub fn binsize(&self) -> f64 {
+        (self.maxval - self.minval) / self.nbins as f64
+    }
+
+    /// Bin index containing `x`, unclamped (may be negative / ≥ nbins);
+    /// use for patch-extent arithmetic that deliberately overhangs.
+    pub fn bin_unclamped(&self, x: f64) -> i64 {
+        ((x - self.minval) / self.binsize()).floor() as i64
+    }
+
+    /// Bin index of `x` clamped into range.
+    pub fn bin(&self, x: f64) -> usize {
+        self.bin_unclamped(x).clamp(0, self.nbins as i64 - 1) as usize
+    }
+
+    /// True if `x` lies inside the binning interval.
+    pub fn contains(&self, x: f64) -> bool {
+        x >= self.minval && x < self.maxval
+    }
+
+    /// Lower edge of bin `i` (i may exceed range for edge arithmetic).
+    pub fn edge(&self, i: i64) -> f64 {
+        self.minval + i as f64 * self.binsize()
+    }
+
+    /// Center of bin `i`.
+    pub fn center(&self, i: i64) -> f64 {
+        self.edge(i) + 0.5 * self.binsize()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn basic_properties() {
+        let b = Binning::new(10, 0.0, 100.0);
+        assert_eq!(b.nbins(), 10);
+        assert_eq!(b.binsize(), 10.0);
+        assert_eq!(b.min(), 0.0);
+        assert_eq!(b.max(), 100.0);
+    }
+
+    #[test]
+    fn bin_assignment() {
+        let b = Binning::new(10, 0.0, 100.0);
+        assert_eq!(b.bin(0.0), 0);
+        assert_eq!(b.bin(9.999), 0);
+        assert_eq!(b.bin(10.0), 1);
+        assert_eq!(b.bin(99.9), 9);
+        // clamping
+        assert_eq!(b.bin(-5.0), 0);
+        assert_eq!(b.bin(1000.0), 9);
+    }
+
+    #[test]
+    fn unclamped_bins() {
+        let b = Binning::new(10, 0.0, 100.0);
+        assert_eq!(b.bin_unclamped(-15.0), -2);
+        assert_eq!(b.bin_unclamped(105.0), 10);
+    }
+
+    #[test]
+    fn edges_and_centers() {
+        let b = Binning::new(4, -2.0, 2.0);
+        assert_eq!(b.edge(0), -2.0);
+        assert_eq!(b.edge(4), 2.0);
+        assert_eq!(b.center(0), -1.5);
+        assert_eq!(b.center(3), 1.5);
+        // extrapolated edges for overhanging patches
+        assert_eq!(b.edge(-1), -3.0);
+        assert_eq!(b.edge(5), 3.0);
+    }
+
+    #[test]
+    fn contains_interval_semantics() {
+        let b = Binning::new(2, 0.0, 1.0);
+        assert!(b.contains(0.0));
+        assert!(b.contains(0.999));
+        assert!(!b.contains(1.0));
+        assert!(!b.contains(-0.001));
+    }
+
+    #[test]
+    fn negative_interval() {
+        let b = Binning::new(5, -10.0, -5.0);
+        assert_eq!(b.binsize(), 1.0);
+        assert_eq!(b.bin(-9.5), 0);
+        assert_eq!(b.bin(-5.5), 4);
+    }
+
+    #[test]
+    #[should_panic]
+    fn zero_bins_panics() {
+        let _ = Binning::new(0, 0.0, 1.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn inverted_interval_panics() {
+        let _ = Binning::new(3, 1.0, 0.0);
+    }
+
+    #[test]
+    fn property_bin_of_center_is_identity() {
+        crate::testing::forall("bin(center(i)) == i", 200, |g| {
+            let n = g.usize_in(1..1000);
+            let lo = g.f64_in(-1e3..1e3);
+            let width = g.f64_in(1e-3..1e3);
+            let b = Binning::new(n, lo, lo + width);
+            let i = g.usize_in(0..n) as i64;
+            g.assert(
+                b.bin(b.center(i)) == i as usize,
+                &format!("n={n} lo={lo} width={width} i={i}"),
+            );
+        });
+    }
+}

@@ -1,0 +1,149 @@
+//! Detector geometry: wire planes, binning, and the plane-impact-position
+//! (Pimpos) coordinate system.
+//!
+//! The simulation's working coordinates follow Wire-Cell conventions:
+//! X is the drift direction (anode at small x), Y is vertical, Z runs
+//! along the beam.  Each anode face carries three wire planes (U and V
+//! induction, W collection) whose wires lie in the Y–Z plane at a
+//! characteristic angle; a depo's transverse position projects onto each
+//! plane's *pitch* axis, which together with the digitization time axis
+//! spans the (channel × tick) grid the rasterizer fills.
+
+mod binning;
+mod plane;
+
+pub use binning::Binning;
+pub use plane::{PlaneId, WirePlane};
+
+use crate::units::*;
+
+/// Full detector description used by the simulation.
+#[derive(Clone, Debug)]
+pub struct Detector {
+    /// Name for reports ("uboone-like", "test-small", ...).
+    pub name: String,
+    /// The three wire planes in U, V, W order.
+    pub planes: Vec<WirePlane>,
+    /// X position of the response plane (where drift ends and the
+    /// pre-computed field response takes over), in length units.
+    pub response_plane_x: f64,
+    /// Nominal drift speed.
+    pub drift_speed: f64,
+    /// Digitization period (tick).
+    pub tick: f64,
+    /// Number of ticks in the readout window.
+    pub nticks: usize,
+    /// Readout window start time.
+    pub time_start: f64,
+}
+
+impl Detector {
+    /// A MicroBooNE-like detector: 2400/2400/3456 wires at ±60°/0°,
+    /// 3 mm pitch, 0.5 µs tick, 9595-tick readout.  This matches the
+    /// "~10k × ~10k" grid scale quoted by the paper (§2.1.1).
+    pub fn uboone_like() -> Self {
+        let pitch = 3.0 * MM;
+        Self {
+            name: "uboone-like".into(),
+            planes: vec![
+                // origins center each plane's pitch coverage on the
+                // (y, z) = (0, 0) axis so all three planes image the
+                // same active volume
+                WirePlane::new(PlaneId::U, 60.0 * DEGREE, pitch, 2400, -3.6 * M),
+                WirePlane::new(PlaneId::V, -60.0 * DEGREE, pitch, 2400, -3.6 * M),
+                WirePlane::new(PlaneId::W, 0.0, pitch, 3456, -5.184 * M),
+            ],
+            response_plane_x: 10.0 * CM,
+            drift_speed: consts::DRIFT_SPEED,
+            tick: 0.5 * US,
+            nticks: 9595,
+            time_start: 0.0,
+        }
+    }
+
+    /// A small detector for unit tests and quick examples: 3 planes,
+    /// 480/480/560 wires, 1024-tick readout.
+    pub fn test_small() -> Self {
+        let pitch = 3.0 * MM;
+        Self {
+            name: "test-small".into(),
+            planes: vec![
+                WirePlane::new(PlaneId::U, 60.0 * DEGREE, pitch, 480, -0.72 * M),
+                WirePlane::new(PlaneId::V, -60.0 * DEGREE, pitch, 480, -0.72 * M),
+                WirePlane::new(PlaneId::W, 0.0, pitch, 560, -0.84 * M),
+            ],
+            response_plane_x: 10.0 * CM,
+            drift_speed: consts::DRIFT_SPEED,
+            tick: 0.5 * US,
+            nticks: 1024,
+            time_start: 0.0,
+        }
+    }
+
+    /// The time-axis binning of the readout window.
+    pub fn time_binning(&self) -> Binning {
+        Binning::new(
+            self.nticks,
+            self.time_start,
+            self.time_start + self.nticks as f64 * self.tick,
+        )
+    }
+
+    /// Plane lookup.
+    pub fn plane(&self, id: PlaneId) -> &WirePlane {
+        &self.planes[id as usize]
+    }
+
+    /// Bounding box of the active volume in (y, z), derived from the
+    /// collection plane extent — used by depo sources to aim tracks.
+    pub fn transverse_extent(&self) -> (f64, f64) {
+        let w = self.plane(PlaneId::W);
+        let half = w.pitch * w.nwires as f64 / 2.0;
+        (-half, half)
+    }
+
+    /// Maximum drift distance (sets the longest drift time).  We model a
+    /// 2.56 m drift (MicroBooNE-like) scaled by plane count for tests.
+    pub fn max_drift(&self) -> f64 {
+        2.56 * M
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn uboone_like_shape_matches_paper_scale() {
+        let det = Detector::uboone_like();
+        assert_eq!(det.planes.len(), 3);
+        // collection grid ~3456 x 9595: the "~10k x ~10k" scale of §2.1.1
+        assert_eq!(det.plane(PlaneId::W).nwires, 3456);
+        assert_eq!(det.nticks, 9595);
+        assert!((det.tick - 0.5 * US).abs() < 1e-9);
+    }
+
+    #[test]
+    fn time_binning_covers_readout() {
+        let det = Detector::test_small();
+        let tb = det.time_binning();
+        assert_eq!(tb.nbins(), 1024);
+        assert!((tb.max() - 512.0 * US).abs() < 1e-6);
+    }
+
+    #[test]
+    fn plane_lookup_by_id() {
+        let det = Detector::test_small();
+        assert_eq!(det.plane(PlaneId::U).id, PlaneId::U);
+        assert_eq!(det.plane(PlaneId::V).id, PlaneId::V);
+        assert_eq!(det.plane(PlaneId::W).id, PlaneId::W);
+    }
+
+    #[test]
+    fn transverse_extent_is_symmetric() {
+        let det = Detector::test_small();
+        let (lo, hi) = det.transverse_extent();
+        assert!((lo + hi).abs() < 1e-9);
+        assert!(hi > 0.5 * M);
+    }
+}

@@ -1,0 +1,181 @@
+//! Wire planes and the pitch-coordinate projection (WCT `Pimpos`).
+
+use super::Binning;
+
+/// Plane identity: two induction planes and one collection plane.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum PlaneId {
+    /// First induction plane (bipolar response).
+    U = 0,
+    /// Second induction plane (bipolar response).
+    V = 1,
+    /// Collection plane (unipolar response).
+    W = 2,
+}
+
+impl PlaneId {
+    /// All planes in readout order.
+    pub const ALL: [PlaneId; 3] = [PlaneId::U, PlaneId::V, PlaneId::W];
+
+    /// Short label.
+    pub fn label(&self) -> &'static str {
+        match self {
+            PlaneId::U => "U",
+            PlaneId::V => "V",
+            PlaneId::W => "W",
+        }
+    }
+
+    /// True for the induction planes (bipolar field response).
+    pub fn is_induction(&self) -> bool {
+        !matches!(self, PlaneId::W)
+    }
+
+    /// From index 0..3.
+    pub fn from_index(i: usize) -> Option<PlaneId> {
+        match i {
+            0 => Some(PlaneId::U),
+            1 => Some(PlaneId::V),
+            2 => Some(PlaneId::W),
+            _ => None,
+        }
+    }
+}
+
+/// One wire plane: wires in the Y–Z plane at `angle` from the Z axis,
+/// `nwires` of them spaced by `pitch` along the pitch direction.
+///
+/// The pitch direction is the in-plane normal to the wires:
+/// `p̂ = (-sin θ, cos θ)` in (y, z), so a point's pitch coordinate is
+/// `p = -y·sin θ + z·cos θ - origin`.
+#[derive(Clone, Debug)]
+pub struct WirePlane {
+    /// Which plane this is.
+    pub id: PlaneId,
+    /// Wire angle w.r.t. the Z axis, radians.
+    pub angle: f64,
+    /// Wire spacing along the pitch direction.
+    pub pitch: f64,
+    /// Number of wires (channels).
+    pub nwires: usize,
+    /// Pitch coordinate of wire 0's position.
+    pub origin: f64,
+}
+
+impl WirePlane {
+    /// Construct a plane.
+    pub fn new(id: PlaneId, angle: f64, pitch: f64, nwires: usize, origin: f64) -> Self {
+        assert!(pitch > 0.0, "pitch must be positive");
+        assert!(nwires > 0, "need at least one wire");
+        Self {
+            id,
+            angle,
+            pitch,
+            nwires,
+            origin,
+        }
+    }
+
+    /// Pitch coordinate of a transverse point (y, z).
+    pub fn pitch_coord(&self, y: f64, z: f64) -> f64 {
+        let (s, c) = self.angle.sin_cos();
+        -y * s + z * c - self.origin
+    }
+
+    /// The pitch-axis binning: bin i is the strip owned by wire i,
+    /// centered on the wire (wire w sits at pitch `w * pitch`).
+    pub fn pitch_binning(&self) -> Binning {
+        Binning::new(
+            self.nwires,
+            -0.5 * self.pitch,
+            (self.nwires as f64 - 0.5) * self.pitch,
+        )
+    }
+
+    /// Nearest wire index for a pitch coordinate, or None if outside
+    /// the plane (beyond half a pitch from the edge wires).
+    pub fn wire_at(&self, pitch_coord: f64) -> Option<usize> {
+        let b = self.pitch_binning();
+        if !b.contains(pitch_coord) {
+            return None;
+        }
+        Some(b.bin(pitch_coord))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::units::*;
+
+    #[test]
+    fn plane_ids() {
+        assert_eq!(PlaneId::U.label(), "U");
+        assert!(PlaneId::U.is_induction());
+        assert!(PlaneId::V.is_induction());
+        assert!(!PlaneId::W.is_induction());
+        assert_eq!(PlaneId::from_index(2), Some(PlaneId::W));
+        assert_eq!(PlaneId::from_index(3), None);
+    }
+
+    #[test]
+    fn collection_pitch_is_z() {
+        // angle 0: wires along z? No — angle from Z axis = 0 means wires
+        // parallel to... pitch = -y*0 + z*1 = z. Vertical collection wires
+        // measure z directly.
+        let w = WirePlane::new(PlaneId::W, 0.0, 3.0 * MM, 100, 0.0);
+        assert!((w.pitch_coord(5.0, 42.0) - 42.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn sixty_degree_projection() {
+        let u = WirePlane::new(PlaneId::U, 60.0 * DEGREE, 3.0 * MM, 100, 0.0);
+        let p = u.pitch_coord(1.0, 0.0);
+        assert!((p - (-(3.0f64.sqrt()) / 2.0)).abs() < 1e-12);
+        let p = u.pitch_coord(0.0, 1.0);
+        assert!((p - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn wire_lookup() {
+        let w = WirePlane::new(PlaneId::W, 0.0, 3.0 * MM, 10, 0.0);
+        assert_eq!(w.wire_at(0.0), Some(0)); // on wire 0
+        assert_eq!(w.wire_at(3.0 * MM), Some(1));
+        assert_eq!(w.wire_at(1.4 * MM), Some(0)); // still nearest wire 0
+        assert_eq!(w.wire_at(1.6 * MM), Some(1));
+        assert_eq!(w.wire_at(-2.0 * MM), None); // beyond half pitch
+        assert_eq!(w.wire_at(28.6 * MM), None); // past last wire + half pitch
+        assert_eq!(w.wire_at(28.4 * MM), Some(9));
+    }
+
+    #[test]
+    fn origin_shifts_coordinates() {
+        let w = WirePlane::new(PlaneId::W, 0.0, 3.0 * MM, 10, -15.0 * MM);
+        assert_eq!(w.wire_at(w.pitch_coord(0.0, 0.0)), Some(5));
+    }
+
+    #[test]
+    fn pitch_binning_centers_on_wires() {
+        let w = WirePlane::new(PlaneId::W, 0.0, 2.0, 5, 0.0);
+        let b = w.pitch_binning();
+        for wire in 0..5 {
+            assert!((b.center(wire as i64) - wire as f64 * 2.0).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn property_wire_at_center_is_wire() {
+        crate::testing::forall("wire_at(center(w)) == w", 200, |g| {
+            let nwires = g.usize_in(1..5000);
+            let pitch = g.f64_in(0.1..10.0);
+            let origin = g.f64_in(-100.0..100.0);
+            let plane = WirePlane::new(PlaneId::V, 0.0, pitch, nwires, origin);
+            let w = g.usize_in(0..nwires);
+            let coord = w as f64 * pitch;
+            g.assert(
+                plane.wire_at(coord) == Some(w),
+                &format!("nwires={nwires} pitch={pitch} origin={origin} w={w}"),
+            );
+        });
+    }
+}

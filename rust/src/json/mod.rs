@@ -1,0 +1,231 @@
+//! JSON substrate (parser + writer), from scratch.
+//!
+//! Wire-Cell Toolkit is configured through JSON/Jsonnet documents and can
+//! exchange depo sets as JSON; serde is not available in the vendored
+//! registry, so this module provides the value model, a recursive-descent
+//! parser with line/column errors, and a writer (compact and pretty).
+
+mod parse;
+mod write;
+
+pub use parse::{parse, ParseError};
+pub use write::{to_string, to_string_pretty};
+
+use std::collections::BTreeMap;
+
+/// A JSON value. Objects use `BTreeMap` for deterministic ordering,
+/// which keeps config hashing and golden-file tests stable.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    /// `null`
+    Null,
+    /// `true` / `false`
+    Bool(bool),
+    /// Any JSON number (stored as f64, like most dynamic JSON models).
+    Number(f64),
+    /// String.
+    String(String),
+    /// Array.
+    Array(Vec<Value>),
+    /// Object.
+    Object(BTreeMap<String, Value>),
+}
+
+impl Value {
+    /// Access as bool.
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    /// Access as number.
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Number(n) => Some(*n),
+            _ => None,
+        }
+    }
+
+    /// Access as integer (number with no fractional part).
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            Value::Number(n) if n.fract() == 0.0 && n.abs() < 9.0e18 => Some(*n as i64),
+            _ => None,
+        }
+    }
+
+    /// Access as usize.
+    pub fn as_usize(&self) -> Option<usize> {
+        self.as_i64().and_then(|v| usize::try_from(v).ok())
+    }
+
+    /// Access as string slice.
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::String(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    /// Access as array slice.
+    pub fn as_array(&self) -> Option<&[Value]> {
+        match self {
+            Value::Array(a) => Some(a),
+            _ => None,
+        }
+    }
+
+    /// Access as object map.
+    pub fn as_object(&self) -> Option<&BTreeMap<String, Value>> {
+        match self {
+            Value::Object(o) => Some(o),
+            _ => None,
+        }
+    }
+
+    /// Object member lookup.
+    pub fn get(&self, key: &str) -> Option<&Value> {
+        self.as_object().and_then(|o| o.get(key))
+    }
+
+    /// Lookup by dotted path, e.g. `"detector.planes.0.pitch"`.
+    pub fn path(&self, dotted: &str) -> Option<&Value> {
+        let mut cur = self;
+        for seg in dotted.split('.') {
+            cur = match cur {
+                Value::Object(o) => o.get(seg)?,
+                Value::Array(a) => a.get(seg.parse::<usize>().ok()?)?,
+                _ => return None,
+            };
+        }
+        Some(cur)
+    }
+
+    /// Deep-merge `other` into `self`: objects merge recursively, any
+    /// other kind is replaced.  This is the config-overlay operation
+    /// (defaults ⊕ file ⊕ command line).
+    pub fn merge(&mut self, other: &Value) {
+        match (self, other) {
+            (Value::Object(dst), Value::Object(src)) => {
+                for (k, v) in src {
+                    match dst.get_mut(k) {
+                        Some(slot) => slot.merge(v),
+                        None => {
+                            dst.insert(k.clone(), v.clone());
+                        }
+                    }
+                }
+            }
+            (dst, src) => *dst = src.clone(),
+        }
+    }
+
+    /// Build an object from pairs (test/config convenience).
+    pub fn object(pairs: Vec<(&str, Value)>) -> Value {
+        Value::Object(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+    }
+}
+
+impl From<f64> for Value {
+    fn from(v: f64) -> Self {
+        Value::Number(v)
+    }
+}
+impl From<i64> for Value {
+    fn from(v: i64) -> Self {
+        Value::Number(v as f64)
+    }
+}
+impl From<usize> for Value {
+    fn from(v: usize) -> Self {
+        Value::Number(v as f64)
+    }
+}
+impl From<bool> for Value {
+    fn from(v: bool) -> Self {
+        Value::Bool(v)
+    }
+}
+impl From<&str> for Value {
+    fn from(v: &str) -> Self {
+        Value::String(v.to_string())
+    }
+}
+impl From<String> for Value {
+    fn from(v: String) -> Self {
+        Value::String(v)
+    }
+}
+impl<T: Into<Value>> From<Vec<T>> for Value {
+    fn from(v: Vec<T>) -> Self {
+        Value::Array(v.into_iter().map(Into::into).collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accessors() {
+        let v = Value::object(vec![
+            ("a", Value::from(1.5)),
+            ("b", Value::from(true)),
+            ("c", Value::from("hi")),
+            ("d", Value::from(vec![1i64, 2, 3])),
+        ]);
+        assert_eq!(v.get("a").unwrap().as_f64(), Some(1.5));
+        assert_eq!(v.get("b").unwrap().as_bool(), Some(true));
+        assert_eq!(v.get("c").unwrap().as_str(), Some("hi"));
+        assert_eq!(v.get("d").unwrap().as_array().unwrap().len(), 3);
+        assert!(v.get("zz").is_none());
+    }
+
+    #[test]
+    fn as_i64_rejects_fractions() {
+        assert_eq!(Value::Number(3.0).as_i64(), Some(3));
+        assert_eq!(Value::Number(3.5).as_i64(), None);
+        assert_eq!(Value::Number(-2.0).as_i64(), Some(-2));
+        assert_eq!(Value::Number(-2.0).as_usize(), None);
+    }
+
+    #[test]
+    fn path_lookup() {
+        let v = Value::object(vec![(
+            "detector",
+            Value::object(vec![(
+                "planes",
+                Value::Array(vec![Value::object(vec![("pitch", Value::from(3.0))])]),
+            )]),
+        )]);
+        assert_eq!(v.path("detector.planes.0.pitch").unwrap().as_f64(), Some(3.0));
+        assert!(v.path("detector.planes.1.pitch").is_none());
+        assert!(v.path("detector.nope").is_none());
+    }
+
+    #[test]
+    fn merge_overlays() {
+        let mut base = Value::object(vec![
+            ("a", Value::from(1i64)),
+            ("nest", Value::object(vec![("x", Value::from(1i64)), ("y", Value::from(2i64))])),
+        ]);
+        let over = Value::object(vec![
+            ("nest", Value::object(vec![("y", Value::from(99i64))])),
+            ("b", Value::from("new")),
+        ]);
+        base.merge(&over);
+        assert_eq!(base.path("nest.y").unwrap().as_i64(), Some(99));
+        assert_eq!(base.path("nest.x").unwrap().as_i64(), Some(1));
+        assert_eq!(base.get("a").unwrap().as_i64(), Some(1));
+        assert_eq!(base.get("b").unwrap().as_str(), Some("new"));
+    }
+
+    #[test]
+    fn merge_replaces_non_objects() {
+        let mut base = Value::from(vec![1i64, 2]);
+        base.merge(&Value::from(7i64));
+        assert_eq!(base.as_i64(), Some(7));
+    }
+}

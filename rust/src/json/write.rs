@@ -1,0 +1,196 @@
+//! JSON writer: compact and pretty forms.
+
+use super::Value;
+use std::fmt::Write as _;
+
+/// Serialize compactly (no added whitespace).
+pub fn to_string(v: &Value) -> String {
+    let mut out = String::new();
+    write_value(&mut out, v, None, 0);
+    out
+}
+
+/// Serialize with 2-space indentation.
+pub fn to_string_pretty(v: &Value) -> String {
+    let mut out = String::new();
+    write_value(&mut out, v, Some(2), 0);
+    out
+}
+
+fn write_value(out: &mut String, v: &Value, indent: Option<usize>, level: usize) {
+    match v {
+        Value::Null => out.push_str("null"),
+        Value::Bool(true) => out.push_str("true"),
+        Value::Bool(false) => out.push_str("false"),
+        Value::Number(n) => write_number(out, *n),
+        Value::String(s) => write_string(out, s),
+        Value::Array(items) => {
+            if items.is_empty() {
+                out.push_str("[]");
+                return;
+            }
+            out.push('[');
+            for (i, item) in items.iter().enumerate() {
+                if i > 0 {
+                    out.push(',');
+                }
+                newline_indent(out, indent, level + 1);
+                write_value(out, item, indent, level + 1);
+            }
+            newline_indent(out, indent, level);
+            out.push(']');
+        }
+        Value::Object(map) => {
+            if map.is_empty() {
+                out.push_str("{}");
+                return;
+            }
+            out.push('{');
+            for (i, (k, item)) in map.iter().enumerate() {
+                if i > 0 {
+                    out.push(',');
+                }
+                newline_indent(out, indent, level + 1);
+                write_string(out, k);
+                out.push(':');
+                if indent.is_some() {
+                    out.push(' ');
+                }
+                write_value(out, item, indent, level + 1);
+            }
+            newline_indent(out, indent, level);
+            out.push('}');
+        }
+    }
+}
+
+fn newline_indent(out: &mut String, indent: Option<usize>, level: usize) {
+    if let Some(w) = indent {
+        out.push('\n');
+        for _ in 0..w * level {
+            out.push(' ');
+        }
+    }
+}
+
+fn write_number(out: &mut String, n: f64) {
+    if n.is_nan() || n.is_infinite() {
+        // JSON has no NaN/Inf; emit null like most writers in lenient mode.
+        out.push_str("null");
+    } else if n.fract() == 0.0 && n.abs() < 9.0e15 {
+        let _ = write!(out, "{}", n as i64);
+    } else {
+        // Shortest roundtrip representation f64 Display provides.
+        let _ = write!(out, "{n}");
+    }
+}
+
+fn write_string(out: &mut String, s: &str) {
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            '\u{0008}' => out.push_str("\\b"),
+            '\u{000C}' => out.push_str("\\f"),
+            c if (c as u32) < 0x20 => {
+                let _ = write!(out, "\\u{:04x}", c as u32);
+            }
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::json::parse;
+
+    #[test]
+    fn compact_roundtrip() {
+        let src = r#"{"a":[1,2.5,null,true],"b":{"c":"x\ny"},"z":-0.125}"#;
+        let v = parse(src).unwrap();
+        let out = to_string(&v);
+        assert_eq!(parse(&out).unwrap(), v);
+    }
+
+    #[test]
+    fn integers_have_no_decimal() {
+        assert_eq!(to_string(&Value::Number(42.0)), "42");
+        assert_eq!(to_string(&Value::Number(-1.0)), "-1");
+        assert_eq!(to_string(&Value::Number(2.5)), "2.5");
+    }
+
+    #[test]
+    fn non_finite_becomes_null() {
+        assert_eq!(to_string(&Value::Number(f64::NAN)), "null");
+        assert_eq!(to_string(&Value::Number(f64::INFINITY)), "null");
+    }
+
+    #[test]
+    fn control_chars_escaped() {
+        let v = Value::String("a\u{0001}b".into());
+        assert_eq!(to_string(&v), "\"a\\u0001b\"");
+        assert_eq!(parse(&to_string(&v)).unwrap(), v);
+    }
+
+    #[test]
+    fn pretty_is_parseable_and_indented() {
+        let v = Value::object(vec![
+            ("arr", Value::from(vec![1i64, 2])),
+            ("obj", Value::object(vec![("k", Value::from("v"))])),
+        ]);
+        let s = to_string_pretty(&v);
+        assert!(s.contains("\n  \"arr\": [\n    1,"), "got: {s}");
+        assert_eq!(parse(&s).unwrap(), v);
+    }
+
+    #[test]
+    fn empty_containers() {
+        assert_eq!(to_string(&Value::Array(vec![])), "[]");
+        assert_eq!(to_string(&Value::Object(Default::default())), "{}");
+        assert_eq!(to_string_pretty(&Value::Array(vec![])), "[]");
+    }
+
+    #[test]
+    fn unicode_passthrough() {
+        let v = Value::String("π😀".into());
+        let s = to_string(&v);
+        assert_eq!(parse(&s).unwrap(), v);
+    }
+
+    use crate::rng::{Pcg32, UniformRng};
+
+    #[test]
+    fn fuzzish_roundtrip() {
+        // generate a few structured values and round-trip them
+        let mut rng = Pcg32::seeded(1234);
+        for _ in 0..50 {
+            let v = random_value(&mut rng, 0);
+            let s = to_string(&v);
+            assert_eq!(parse(&s).unwrap(), v, "failed on {s}");
+            let p = to_string_pretty(&v);
+            assert_eq!(parse(&p).unwrap(), v, "failed on pretty {p}");
+        }
+    }
+
+    fn random_value(rng: &mut crate::rng::Pcg32, depth: usize) -> Value {
+        let pick = if depth > 3 { rng.below(4) } else { rng.below(6) };
+        match pick {
+            0 => Value::Null,
+            1 => Value::Bool(rng.below(2) == 0),
+            2 => Value::Number((rng.next_u32() as f64 / 1e4).round() / 1e2),
+            3 => Value::String(format!("s{}", rng.below(1000))),
+            4 => Value::Array((0..rng.below(4)).map(|_| random_value(rng, depth + 1)).collect()),
+            _ => Value::Object(
+                (0..rng.below(4))
+                    .map(|i| (format!("k{i}"), random_value(rng, depth + 1)))
+                    .collect(),
+            ),
+        }
+    }
+}

@@ -1,0 +1,48 @@
+//! # wirecell — LArTPC signal simulation with portable acceleration
+//!
+//! A ground-up reproduction of the system studied in *"Evaluation of
+//! Portable Acceleration Solutions for LArTPC Simulation Using Wire-Cell
+//! Toolkit"* (EPJ Web Conf. 251, 03032, 2021): the Wire-Cell Toolkit
+//! LArTPC detector-signal simulation, re-implemented as a three-layer
+//! Rust + JAX + Pallas stack, plus the paper's full portability
+//! evaluation (Tables 2–3, Figure 5, and the Figure-3 vs Figure-4
+//! porting-strategy comparison).
+//!
+//! See `DESIGN.md` for the system inventory and experiment index and
+//! `EXPERIMENTS.md` for paper-vs-measured results.
+//!
+//! ## Layer map
+//!
+//! * substrates: [`units`], [`rng`], [`fft`], [`json`], [`parallel`],
+//!   [`special`], [`testing`]
+//! * physics/sim core: [`geometry`], [`depo`], [`physics`], [`drift`],
+//!   [`raster`], [`scatter`]
+//! * framework + portability: dataflow, backend, runtime, coordinator,
+//!   metrics, cli (see later modules)
+
+pub mod adc;
+pub mod backend;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod dataflow;
+pub mod depo;
+pub mod drift;
+pub mod fft;
+pub mod frame;
+pub mod geometry;
+pub mod harness;
+pub mod json;
+pub mod metrics;
+pub mod parallel;
+pub mod physics;
+pub mod noise;
+pub mod raster;
+pub mod response;
+pub mod rng;
+pub mod runtime;
+pub mod scatter;
+pub mod sigproc;
+pub mod special;
+pub mod testing;
+pub mod units;

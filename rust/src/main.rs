@@ -1,0 +1,183 @@
+//! wire-cell — leader binary: CLI, subcommands, reports.
+
+use anyhow::{anyhow, Result};
+use wirecell::cli::{usage, Cli};
+use wirecell::config::BackendChoice;
+use wirecell::coordinator::SimPipeline;
+use wirecell::depo::{CosmicSource, DepoSource};
+use wirecell::harness;
+use wirecell::metrics::Table;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if args.is_empty() || args[0] == "--help" || args[0] == "help" {
+        println!("{}", usage());
+        return;
+    }
+    match run(&args) {
+        Ok(()) => {}
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            std::process::exit(1);
+        }
+    }
+}
+
+fn run(args: &[String]) -> Result<()> {
+    let cli = Cli::parse(args).map_err(|e| anyhow!(e))?;
+    let repeat: usize = cli.opt_parse("repeat").map_err(|e| anyhow!(e))?.unwrap_or(5);
+    match cli.command.as_str() {
+        "simulate" => simulate(&cli),
+        "table2" => {
+            let cfg = cli.sim_config().map_err(|e| anyhow!(e))?;
+            let n = cfg.target_depos;
+            let with_pjrt = !cli.has_flag("no-pjrt");
+            let (table, _) = harness::table2(&cfg, n, repeat, with_pjrt)?;
+            emit(&cli, table)
+        }
+        "table3" => {
+            let cfg = cli.sim_config().map_err(|e| anyhow!(e))?;
+            let n = cfg.target_depos;
+            let with_pjrt = !cli.has_flag("no-pjrt");
+            let (table, _) = harness::table3(&cfg, n, repeat, &[1, 2, 4, 8], with_pjrt)?;
+            emit(&cli, table)
+        }
+        "fig5" => {
+            let cfg = cli.sim_config().map_err(|e| anyhow!(e))?;
+            let n = cfg.target_depos;
+            let max_t = 2 * std::thread::available_parallelism().map(|x| x.get()).unwrap_or(8);
+            let threads: Vec<usize> = (0..)
+                .map(|i| 1usize << i)
+                .take_while(|&t| t <= max_t)
+                .collect();
+            let (table, _) = harness::fig5(&cfg, n, &threads, repeat)?;
+            emit(&cli, table)
+        }
+        "sweep" => {
+            let cfg = cli.sim_config().map_err(|e| anyhow!(e))?;
+            let counts = [1000usize, 4000, 16000, 64000];
+            let upto = cfg.target_depos;
+            let counts: Vec<usize> = counts.into_iter().filter(|&c| c <= upto.max(1000)).collect();
+            let (table, _) = harness::strategy_sweep(&cfg, &counts, repeat.min(3))?;
+            emit(&cli, table)
+        }
+        "inspect" => inspect(&cli),
+        "version" => {
+            println!("wire-cell 0.1.0 (paper: EPJ Web Conf 251, 03032 (2021))");
+            println!("detectors: test-small, uboone-like");
+            println!("backends : serial | threads:N | pjrt (XLA/PJRT CPU)");
+            Ok(())
+        }
+        other => Err(anyhow!("unknown command '{other}'\n{}", usage())),
+    }
+}
+
+fn emit(cli: &Cli, table: Table) -> Result<()> {
+    let text = table.render();
+    println!("{text}");
+    if let Some(path) = cli.opt("out") {
+        std::fs::write(path, &text)?;
+        eprintln!("wrote {path}");
+    }
+    Ok(())
+}
+
+fn simulate(cli: &Cli) -> Result<()> {
+    let cfg = cli.sim_config().map_err(|e| anyhow!(e))?;
+    eprintln!("config:\n{}", cfg.to_json());
+    let mut pipe = SimPipeline::new(cfg.clone())?;
+    let mut src = CosmicSource::with_target_depos(
+        pipe.detector().clone(),
+        cfg.target_depos,
+        cfg.seed,
+    );
+    let t0 = std::time::Instant::now();
+    let depos = src.generate();
+    eprintln!("generated {} depos ({})", depos.len(), src.label());
+    let report = pipe.run(&depos)?;
+    let wall = t0.elapsed().as_secs_f64();
+
+    let mut table = Table::new(
+        &format!("simulate — backend {}", report.label),
+        &["Stage", "Time [s]", "Calls"],
+    );
+    for (stage, secs, count) in report.stages.stages() {
+        table.row(&[stage, format!("{secs:.3}"), count.to_string()]);
+    }
+    println!("{}", table.render());
+    let mut planes = Table::new(
+        "per-plane results",
+        &["Plane", "Views", "Patches", "Charge [e]", "2D sampling [s]", "Fluctuation [s]"],
+    );
+    for (i, p) in report.planes.iter().enumerate() {
+        planes.row(&[
+            ["U", "V", "W"][i].to_string(),
+            p.views.to_string(),
+            p.patches.to_string(),
+            format!("{:.3e}", p.charge),
+            format!("{:.3}", p.raster.sampling_s),
+            format!("{:.3}", p.raster.fluctuation_s),
+        ]);
+    }
+    println!("{}", planes.render());
+    if let Some(frame) = &report.frame {
+        for pf in &frame.planes {
+            let s = pf.stats();
+            println!(
+                "frame {}: {} ch x {} ticks, sum {:.3e}, min {:.1}, max {:.1}, rms {:.2}",
+                pf.plane.label(),
+                pf.nchan,
+                pf.nticks,
+                s.sum,
+                s.min,
+                s.max,
+                s.rms
+            );
+        }
+    }
+    println!("total wall: {wall:.3} s");
+    if matches!(cfg.backend, BackendChoice::Pjrt) {
+        if let Some(rt) = pipe.runtime() {
+            let (h2d, exec, d2h, n) = rt.stats.snapshot();
+            println!(
+                "pjrt: {n} dispatches, h2d {h2d:.3} s, exec {exec:.3} s, d2h {d2h:.3} s ({})",
+                rt.platform()
+            );
+        }
+    }
+    Ok(())
+}
+
+fn inspect(cli: &Cli) -> Result<()> {
+    let dir = cli.opt("artifacts_dir").unwrap_or("artifacts");
+    let rt = wirecell::runtime::Runtime::open(std::path::Path::new(dir))?;
+    let m = rt.manifest();
+    println!(
+        "artifacts dir: {dir} (platform {}, batch {}, block {})",
+        rt.platform(),
+        m.batch,
+        m.block
+    );
+    let mut table = Table::new(
+        "artifacts",
+        &["Name", "Strategy", "Inputs", "Grid (wires x ticks)", "Oversample"],
+    );
+    for (name, meta) in &m.artifacts {
+        table.row(&[
+            name.clone(),
+            meta.strategy.clone(),
+            meta.input_shapes
+                .iter()
+                .map(|s| format!("{s:?}"))
+                .collect::<Vec<_>>()
+                .join(" "),
+            format!("{} x {}", meta.grid.nwires, meta.grid.nticks),
+            format!(
+                "{}x{}",
+                meta.grid.pitch_oversample, meta.grid.time_oversample
+            ),
+        ]);
+    }
+    println!("{}", table.render());
+    Ok(())
+}

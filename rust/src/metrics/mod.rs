@@ -1,0 +1,192 @@
+//! Metrics: stage timers and paper-style table formatting.
+
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+/// Accumulating named stage timer.
+#[derive(Default)]
+pub struct StageTimer {
+    totals: BTreeMap<String, f64>,
+    counts: BTreeMap<String, u64>,
+}
+
+impl StageTimer {
+    /// New empty timer.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Time a closure under `stage`.
+    pub fn time<T>(&mut self, stage: &str, f: impl FnOnce() -> T) -> T {
+        let t0 = Instant::now();
+        let out = f();
+        self.add(stage, t0.elapsed().as_secs_f64());
+        out
+    }
+
+    /// Add elapsed seconds to a stage.
+    pub fn add(&mut self, stage: &str, seconds: f64) {
+        *self.totals.entry(stage.to_string()).or_default() += seconds;
+        *self.counts.entry(stage.to_string()).or_default() += 1;
+    }
+
+    /// Total for one stage.
+    pub fn total(&self, stage: &str) -> f64 {
+        self.totals.get(stage).copied().unwrap_or(0.0)
+    }
+
+    /// Call count for one stage.
+    pub fn count(&self, stage: &str) -> u64 {
+        self.counts.get(stage).copied().unwrap_or(0)
+    }
+
+    /// All stages (name, total seconds, count), insertion-independent
+    /// deterministic order.
+    pub fn stages(&self) -> Vec<(String, f64, u64)> {
+        self.totals
+            .iter()
+            .map(|(k, &v)| (k.clone(), v, self.counts[k]))
+            .collect()
+    }
+
+    /// Grand total.
+    pub fn grand_total(&self) -> f64 {
+        self.totals.values().sum()
+    }
+
+    /// Zero everything.
+    pub fn reset(&mut self) {
+        self.totals.clear();
+        self.counts.clear();
+    }
+}
+
+/// Fixed-width table builder that prints rows like the paper's tables.
+pub struct Table {
+    title: String,
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    /// New table with a title and column headers.
+    pub fn new(title: &str, headers: &[&str]) -> Self {
+        Self {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    /// Append a row (must match header arity).
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len(), "row arity mismatch");
+        self.rows.push(cells.to_vec());
+    }
+
+    /// Convenience: label + seconds columns with 2-decimal formatting.
+    pub fn row_seconds(&mut self, label: &str, seconds: &[f64]) {
+        let mut cells = vec![label.to_string()];
+        cells.extend(seconds.iter().map(|s| format!("{s:.3}")));
+        self.row(&cells);
+    }
+
+    /// Render to a string.
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        out.push_str(&format!("## {}\n", self.title));
+        let fmt_row = |cells: &[String]| -> String {
+            let mut line = String::from("|");
+            for (i, c) in cells.iter().enumerate() {
+                line.push_str(&format!(" {:<w$} |", c, w = widths[i]));
+            }
+            line.push('\n');
+            line
+        };
+        out.push_str(&fmt_row(&self.headers));
+        let mut sep = String::from("|");
+        for w in &widths {
+            sep.push_str(&format!("{}-|", "-".repeat(w + 2 - 1)));
+        }
+        sep.push('\n');
+        out.push_str(&sep);
+        for row in &self.rows {
+            out.push_str(&fmt_row(row));
+        }
+        out
+    }
+
+    /// Number of data rows.
+    pub fn len(&self) -> usize {
+        self.rows.len()
+    }
+
+    /// True if no rows.
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timer_accumulates() {
+        let mut t = StageTimer::new();
+        t.add("raster", 1.5);
+        t.add("raster", 0.5);
+        t.add("ft", 0.25);
+        assert_eq!(t.total("raster"), 2.0);
+        assert_eq!(t.count("raster"), 2);
+        assert_eq!(t.total("ft"), 0.25);
+        assert_eq!(t.grand_total(), 2.25);
+        assert_eq!(t.total("nope"), 0.0);
+    }
+
+    #[test]
+    fn timer_times_closures() {
+        let mut t = StageTimer::new();
+        let v = t.time("work", || {
+            std::thread::sleep(std::time::Duration::from_millis(5));
+            42
+        });
+        assert_eq!(v, 42);
+        assert!(t.total("work") >= 0.004);
+    }
+
+    #[test]
+    fn timer_reset() {
+        let mut t = StageTimer::new();
+        t.add("x", 1.0);
+        t.reset();
+        assert_eq!(t.grand_total(), 0.0);
+        assert!(t.stages().is_empty());
+    }
+
+    #[test]
+    fn table_renders_markdown() {
+        let mut tb = Table::new("Table 2", &["Description", "Total [s]", "Fluctuation [s]"]);
+        tb.row_seconds("ref-CPU", &[3.57, 3.42]);
+        tb.row_seconds("ref-CPU-noRNG", &[0.18, 0.03]);
+        let s = tb.render();
+        assert!(s.contains("## Table 2"));
+        assert!(s.contains("ref-CPU"));
+        assert!(s.contains("3.570"));
+        assert!(s.lines().count() >= 5);
+        assert_eq!(tb.len(), 2);
+    }
+
+    #[test]
+    #[should_panic(expected = "row arity mismatch")]
+    fn table_rejects_bad_rows() {
+        let mut tb = Table::new("t", &["a", "b"]);
+        tb.row(&["only-one".to_string()]);
+    }
+}

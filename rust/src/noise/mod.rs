@@ -1,0 +1,199 @@
+//! Electronics-noise simulation — the additive `N(t, x)` term of Eq. 1.
+//!
+//! WCT's noise model draws per-channel waveforms from a measured
+//! amplitude spectrum with random phases.  We parametrize the spectrum
+//! (white floor + low-frequency excess + shaper roll-off), generate a
+//! Hermitian-symmetric random spectrum per channel, and inverse-FFT —
+//! the same frequency-domain construction as production WCT.
+
+use crate::fft::{irfft, Complex};
+use crate::rng::{normal, Pcg32};
+
+/// Parametrized noise amplitude spectrum.
+#[derive(Clone, Debug)]
+pub struct NoiseSpectrum {
+    /// RMS scale of the white-noise floor (ADC-equivalent units).
+    pub white: f64,
+    /// Low-frequency excess amplitude (1/f-like component).
+    pub pink: f64,
+    /// Shaper roll-off frequency as a fraction of Nyquist (0..1].
+    pub rolloff: f64,
+    /// Number of ticks per generated waveform.
+    pub nticks: usize,
+}
+
+impl NoiseSpectrum {
+    /// MicroBooNE-ish defaults for a given readout length.
+    pub fn standard(nticks: usize) -> Self {
+        Self {
+            white: 1.0,
+            pink: 2.0,
+            rolloff: 0.35,
+            nticks,
+        }
+    }
+
+    /// Mean amplitude at frequency bin `k` (0..nticks/2 inclusive).
+    pub fn amplitude(&self, k: usize) -> f64 {
+        if k == 0 {
+            return 0.0; // no DC noise
+        }
+        let f = k as f64 / (self.nticks as f64 / 2.0); // fraction of Nyquist
+        let pink = self.pink / (1.0 + 8.0 * f);
+        let shape = 1.0 / (1.0 + (f / self.rolloff).powi(4));
+        (self.white + pink) * shape
+    }
+}
+
+/// Per-channel noise generator.
+pub struct NoiseGenerator {
+    spectrum: NoiseSpectrum,
+    rng: Pcg32,
+}
+
+impl NoiseGenerator {
+    /// New generator with a seed.
+    pub fn new(spectrum: NoiseSpectrum, seed: u64) -> Self {
+        Self {
+            spectrum,
+            rng: Pcg32::seeded(seed),
+        }
+    }
+
+    /// Generate one channel waveform of `nticks` samples.
+    ///
+    /// Construction: for each positive-frequency bin draw a complex
+    /// amplitude A(k)·(g1 + i·g2)/√2 with g ~ N(0,1), mirror to the
+    /// negative frequencies (Hermitian), inverse FFT, take real parts.
+    pub fn waveform(&mut self) -> Vec<f64> {
+        let n = self.spectrum.nticks;
+        let mut spec = vec![Complex::ZERO; n];
+        let half = n / 2;
+        for k in 1..half {
+            let a = self.spectrum.amplitude(k) * (n as f64).sqrt() / std::f64::consts::SQRT_2;
+            let re = normal(&mut self.rng, 0.0, 1.0) * a;
+            let im = normal(&mut self.rng, 0.0, 1.0) * a;
+            spec[k] = Complex::new(re, im);
+            spec[n - k] = spec[k].conj();
+        }
+        if n % 2 == 0 && half > 0 {
+            // Nyquist bin must be real
+            let a = self.spectrum.amplitude(half) * (n as f64).sqrt();
+            spec[half] = Complex::real(normal(&mut self.rng, 0.0, 1.0) * a);
+        }
+        irfft(&spec)
+    }
+
+    /// Generate `nchan` waveforms as a row-major (nchan × nticks) block.
+    pub fn frame(&mut self, nchan: usize) -> Vec<f64> {
+        let n = self.spectrum.nticks;
+        let mut out = Vec::with_capacity(nchan * n);
+        for _ in 0..nchan {
+            out.extend(self.waveform());
+        }
+        out
+    }
+
+    /// Access the spectrum parameters.
+    pub fn spectrum(&self) -> &NoiseSpectrum {
+        &self.spectrum
+    }
+
+    /// Expected waveform RMS from the spectrum (Parseval).
+    pub fn expected_rms(&self) -> f64 {
+        let n = self.spectrum.nticks;
+        let half = n / 2;
+        let mut var = 0.0;
+        for k in 1..half {
+            // each of the two half-spectrum quadratures contributes
+            var += 2.0 * self.spectrum.amplitude(k).powi(2);
+        }
+        if n % 2 == 0 && half > 0 {
+            var += self.spectrum.amplitude(half).powi(2);
+        }
+        (var / n as f64).sqrt()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn waveform_has_zero_mean() {
+        let mut gen = NoiseGenerator::new(NoiseSpectrum::standard(1024), 1);
+        let w = gen.waveform();
+        assert_eq!(w.len(), 1024);
+        let mean = w.iter().sum::<f64>() / w.len() as f64;
+        // DC bin is zeroed, so the time-domain mean is exactly ~0
+        assert!(mean.abs() < 1e-9, "mean={mean}");
+    }
+
+    #[test]
+    fn rms_matches_spectrum_expectation() {
+        let mut gen = NoiseGenerator::new(NoiseSpectrum::standard(2048), 2);
+        let expect = gen.expected_rms();
+        let mut total = 0.0;
+        let reps = 40;
+        for _ in 0..reps {
+            let w = gen.waveform();
+            total += w.iter().map(|v| v * v).sum::<f64>() / w.len() as f64;
+        }
+        let rms = (total / reps as f64).sqrt();
+        assert!(
+            (rms - expect).abs() < 0.1 * expect,
+            "rms={rms} expect={expect}"
+        );
+    }
+
+    #[test]
+    fn spectrum_rolls_off_at_high_frequency() {
+        let s = NoiseSpectrum::standard(1024);
+        assert!(s.amplitude(10) > s.amplitude(500));
+        assert_eq!(s.amplitude(0), 0.0);
+    }
+
+    #[test]
+    fn channels_are_uncorrelated() {
+        let mut gen = NoiseGenerator::new(NoiseSpectrum::standard(1024), 3);
+        let a = gen.waveform();
+        let b = gen.waveform();
+        let dot: f64 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
+        let na: f64 = a.iter().map(|x| x * x).sum::<f64>().sqrt();
+        let nb: f64 = b.iter().map(|x| x * x).sum::<f64>().sqrt();
+        let corr = dot / (na * nb);
+        assert!(corr.abs() < 0.15, "corr={corr}");
+    }
+
+    #[test]
+    fn deterministic_by_seed() {
+        let w1 = NoiseGenerator::new(NoiseSpectrum::standard(256), 7).waveform();
+        let w2 = NoiseGenerator::new(NoiseSpectrum::standard(256), 7).waveform();
+        assert_eq!(w1, w2);
+        let w3 = NoiseGenerator::new(NoiseSpectrum::standard(256), 8).waveform();
+        assert_ne!(w1, w3);
+    }
+
+    #[test]
+    fn frame_shape() {
+        let mut gen = NoiseGenerator::new(NoiseSpectrum::standard(128), 5);
+        let f = gen.frame(10);
+        assert_eq!(f.len(), 1280);
+    }
+
+    #[test]
+    fn spectral_content_matches_model() {
+        // Average the measured spectrum over many waveforms; low bins
+        // should carry more power than high bins per the model.
+        let mut gen = NoiseGenerator::new(NoiseSpectrum::standard(512), 11);
+        let mut low = 0.0;
+        let mut high = 0.0;
+        for _ in 0..20 {
+            let w = gen.waveform();
+            let spec = crate::fft::rfft(&w);
+            low += spec[5..25].iter().map(|c| c.norm_sqr()).sum::<f64>();
+            high += spec[200..220].iter().map(|c| c.norm_sqr()).sum::<f64>();
+        }
+        assert!(low > 4.0 * high, "low={low} high={high}");
+    }
+}

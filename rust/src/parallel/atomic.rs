@@ -1,0 +1,193 @@
+//! Floating-point atomics — the `Kokkos::atomic_add` analog.
+//!
+//! The scatter-add stage (Figure 5 of the paper) accumulates many small
+//! patches onto one large grid from many threads.  Hardware float
+//! atomics are not exposed by std, so these wrappers implement
+//! compare-and-swap loops over the bit representation, which is exactly
+//! what `Kokkos::atomic_add<double>` does on host backends.
+
+use std::sync::atomic::{AtomicU32, AtomicU64, Ordering};
+
+/// f32 with atomic add/load/store.
+#[derive(Debug, Default)]
+pub struct AtomicF32 {
+    bits: AtomicU32,
+}
+
+impl AtomicF32 {
+    /// New atomic with initial value.
+    pub fn new(v: f32) -> Self {
+        Self {
+            bits: AtomicU32::new(v.to_bits()),
+        }
+    }
+
+    /// Relaxed load.
+    #[inline]
+    pub fn load(&self) -> f32 {
+        f32::from_bits(self.bits.load(Ordering::Relaxed))
+    }
+
+    /// Relaxed store.
+    #[inline]
+    pub fn store(&self, v: f32) {
+        self.bits.store(v.to_bits(), Ordering::Relaxed);
+    }
+
+    /// Atomic `+= v` via CAS loop; returns the previous value.
+    #[inline]
+    pub fn fetch_add(&self, v: f32) -> f32 {
+        let mut cur = self.bits.load(Ordering::Relaxed);
+        loop {
+            let new = (f32::from_bits(cur) + v).to_bits();
+            match self
+                .bits
+                .compare_exchange_weak(cur, new, Ordering::Relaxed, Ordering::Relaxed)
+            {
+                Ok(_) => return f32::from_bits(cur),
+                Err(actual) => cur = actual,
+            }
+        }
+    }
+}
+
+/// f64 with atomic add/load/store.
+#[derive(Debug, Default)]
+pub struct AtomicF64 {
+    bits: AtomicU64,
+}
+
+impl AtomicF64 {
+    /// New atomic with initial value.
+    pub fn new(v: f64) -> Self {
+        Self {
+            bits: AtomicU64::new(v.to_bits()),
+        }
+    }
+
+    /// Relaxed load.
+    #[inline]
+    pub fn load(&self) -> f64 {
+        f64::from_bits(self.bits.load(Ordering::Relaxed))
+    }
+
+    /// Relaxed store.
+    #[inline]
+    pub fn store(&self, v: f64) {
+        self.bits.store(v.to_bits(), Ordering::Relaxed);
+    }
+
+    /// Atomic `+= v` via CAS loop; returns the previous value.
+    #[inline]
+    pub fn fetch_add(&self, v: f64) -> f64 {
+        let mut cur = self.bits.load(Ordering::Relaxed);
+        loop {
+            let new = (f64::from_bits(cur) + v).to_bits();
+            match self
+                .bits
+                .compare_exchange_weak(cur, new, Ordering::Relaxed, Ordering::Relaxed)
+            {
+                Ok(_) => return f64::from_bits(cur),
+                Err(actual) => cur = actual,
+            }
+        }
+    }
+}
+
+/// Reinterpret a mutable f32 slice as atomics (zero-copy).  Sound
+/// because `AtomicF32` is `repr`-compatible with `u32`/`f32` (same size
+/// and alignment) and the borrow is exclusive for the returned lifetime.
+pub fn as_atomic_f32(slice: &mut [f32]) -> &[AtomicF32] {
+    const _: () = assert!(std::mem::size_of::<AtomicF32>() == 4);
+    const _: () = assert!(std::mem::align_of::<AtomicF32>() == 4);
+    unsafe { std::slice::from_raw_parts(slice.as_ptr() as *const AtomicF32, slice.len()) }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn f32_add_sequential() {
+        let a = AtomicF32::new(1.0);
+        assert_eq!(a.fetch_add(2.5), 1.0);
+        assert_eq!(a.load(), 3.5);
+        a.store(-1.0);
+        assert_eq!(a.load(), -1.0);
+    }
+
+    #[test]
+    fn f64_add_sequential() {
+        let a = AtomicF64::new(0.0);
+        for _ in 0..1000 {
+            a.fetch_add(0.125); // exactly representable
+        }
+        assert_eq!(a.load(), 125.0);
+    }
+
+    #[test]
+    fn f64_concurrent_adds_lose_nothing() {
+        let a = Arc::new(AtomicF64::new(0.0));
+        let mut handles = Vec::new();
+        for _ in 0..8 {
+            let a = a.clone();
+            handles.push(std::thread::spawn(move || {
+                for _ in 0..10_000 {
+                    a.fetch_add(1.0);
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(a.load(), 80_000.0);
+    }
+
+    #[test]
+    fn f32_concurrent_adds_lose_nothing() {
+        let a = Arc::new(AtomicF32::new(0.0));
+        let mut handles = Vec::new();
+        for _ in 0..4 {
+            let a = a.clone();
+            handles.push(std::thread::spawn(move || {
+                for _ in 0..1000 {
+                    a.fetch_add(1.0);
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(a.load(), 4000.0);
+    }
+
+    #[test]
+    fn slice_reinterpret_roundtrip() {
+        let mut data = vec![1.0f32, 2.0, 3.0];
+        {
+            let atoms = as_atomic_f32(&mut data);
+            atoms[0].fetch_add(10.0);
+            atoms[2].fetch_add(-3.0);
+        }
+        assert_eq!(data, vec![11.0, 2.0, 0.0]);
+    }
+
+    #[test]
+    fn concurrent_slice_accumulation() {
+        let mut grid = vec![0.0f32; 64];
+        {
+            let atoms = as_atomic_f32(&mut grid);
+            std::thread::scope(|s| {
+                for _ in 0..8 {
+                    s.spawn(|| {
+                        for i in 0..64 {
+                            atoms[i].fetch_add(0.5);
+                        }
+                    });
+                }
+            });
+        }
+        assert!(grid.iter().all(|&v| v == 4.0));
+    }
+}

@@ -1,0 +1,222 @@
+//! Portable parallel-execution substrate — the Kokkos analog.
+//!
+//! Kokkos' role in the paper is: *one* user-level API
+//! (`parallel_for` / `parallel_reduce` / `atomic_add`) mapped onto
+//! multiple backends (Serial, OpenMP host-parallel, CUDA device), with a
+//! measurable abstraction overhead (Table 3) and with atomics whose
+//! scaling is studied in Figure 5.  rayon/crossbeam-channel are not in
+//! the vendored registry, so this module implements that layer from
+//! scratch:
+//!
+//! * [`ThreadPool`] — persistent workers, condvar dispatch, work-stealing
+//!   chunk claims.  Per-dispatch overhead is *instrumented* (counted and
+//!   timed) because dispatch overhead is exactly what Table 3 measures.
+//! * [`parallel_for`] / [`parallel_reduce`] — Kokkos-style range
+//!   policies with a grain size.
+//! * [`AtomicF32`] / [`AtomicF64`] — CAS-loop floating-point atomic adds
+//!   (`Kokkos::atomic_add` analog) for the Figure 5 scatter-add study.
+//! * [`ExecPolicy`] — the user-facing backend selector: `Serial` or
+//!   `Threads(n)`; the device backend lives in `backend::Pjrt` which
+//!   reuses these primitives for its host-side staging.
+
+mod atomic;
+mod pool;
+
+pub use atomic::{as_atomic_f32, AtomicF32, AtomicF64};
+pub use pool::{PoolStats, ThreadPool};
+
+use std::ops::Range;
+
+/// Execution-space policy (the Kokkos `ExecutionSpace` analog).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ExecPolicy {
+    /// Single-threaded on the calling thread.
+    Serial,
+    /// Host-parallel over `n` pool threads.
+    Threads(usize),
+}
+
+impl ExecPolicy {
+    /// Number of workers this policy uses (1 for serial).
+    pub fn concurrency(&self) -> usize {
+        match self {
+            ExecPolicy::Serial => 1,
+            ExecPolicy::Threads(n) => (*n).max(1),
+        }
+    }
+
+    /// Human-readable label used in benchmark tables.
+    pub fn label(&self) -> String {
+        match self {
+            ExecPolicy::Serial => "serial".to_string(),
+            ExecPolicy::Threads(n) => format!("threads({n})"),
+        }
+    }
+}
+
+/// Default grain (indices per claimed chunk) when the caller passes 0.
+const DEFAULT_GRAIN: usize = 1024;
+
+/// Kokkos-style `parallel_for` over `0..n`.
+///
+/// `body` is called with disjoint sub-ranges covering `0..n`.  Under
+/// [`ExecPolicy::Serial`] it is called once with the full range (no
+/// dispatch); under `Threads` the pool claims chunks of `grain` indices.
+pub fn parallel_for<F>(pool: &ThreadPool, policy: ExecPolicy, n: usize, grain: usize, body: F)
+where
+    F: Fn(Range<usize>) + Sync,
+{
+    if n == 0 {
+        return;
+    }
+    match policy {
+        ExecPolicy::Serial => body(0..n),
+        ExecPolicy::Threads(nthreads) => {
+            let grain = if grain == 0 { DEFAULT_GRAIN } else { grain };
+            pool.dispatch_chunks(nthreads.max(1), n, grain, &body);
+        }
+    }
+}
+
+/// Kokkos-style `parallel_reduce` over `0..n` with a binary combiner.
+///
+/// `map` produces a partial result per claimed chunk; partials are
+/// combined with `combine` (must be associative; order across chunks is
+/// deterministic by chunk index so results are reproducible).
+pub fn parallel_reduce<T, M, C>(
+    pool: &ThreadPool,
+    policy: ExecPolicy,
+    n: usize,
+    grain: usize,
+    identity: T,
+    map: M,
+    combine: C,
+) -> T
+where
+    T: Clone + Send,
+    M: Fn(Range<usize>) -> T + Sync,
+    C: Fn(T, T) -> T,
+{
+    if n == 0 {
+        return identity;
+    }
+    match policy {
+        ExecPolicy::Serial => combine(identity, map(0..n)),
+        ExecPolicy::Threads(nthreads) => {
+            let grain = if grain == 0 { DEFAULT_GRAIN } else { grain };
+            let nchunks = n.div_ceil(grain);
+            let slots: Vec<std::sync::Mutex<Option<T>>> =
+                (0..nchunks).map(|_| std::sync::Mutex::new(None)).collect();
+            let slots_ref = &slots;
+            let map_ref = &map;
+            pool.dispatch_indexed(nthreads.max(1), nchunks, &move |chunk_idx| {
+                let lo = chunk_idx * grain;
+                let hi = ((chunk_idx + 1) * grain).min(n);
+                let partial = map_ref(lo..hi);
+                *slots_ref[chunk_idx].lock().unwrap() = Some(partial);
+            });
+            let mut acc = identity;
+            for slot in slots {
+                if let Some(p) = slot.into_inner().unwrap() {
+                    acc = combine(acc, p);
+                }
+            }
+            acc
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn policy_concurrency() {
+        assert_eq!(ExecPolicy::Serial.concurrency(), 1);
+        assert_eq!(ExecPolicy::Threads(4).concurrency(), 4);
+        assert_eq!(ExecPolicy::Threads(0).concurrency(), 1);
+        assert_eq!(ExecPolicy::Threads(3).label(), "threads(3)");
+    }
+
+    #[test]
+    fn parallel_for_covers_every_index_once() {
+        let pool = ThreadPool::new(4);
+        let n = 10_000;
+        let hits: Vec<AtomicUsize> = (0..n).map(|_| AtomicUsize::new(0)).collect();
+        parallel_for(&pool, ExecPolicy::Threads(4), n, 37, |range| {
+            for i in range {
+                hits[i].fetch_add(1, Ordering::Relaxed);
+            }
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn parallel_for_serial_single_call() {
+        let pool = ThreadPool::new(2);
+        let calls = AtomicUsize::new(0);
+        parallel_for(&pool, ExecPolicy::Serial, 100, 10, |range| {
+            calls.fetch_add(1, Ordering::Relaxed);
+            assert_eq!(range, 0..100);
+        });
+        assert_eq!(calls.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn parallel_for_empty_is_noop() {
+        let pool = ThreadPool::new(2);
+        parallel_for(&pool, ExecPolicy::Threads(2), 0, 8, |_| panic!("no work"));
+    }
+
+    #[test]
+    fn reduce_sums_match_serial() {
+        let pool = ThreadPool::new(4);
+        let n = 123_457;
+        let serial = parallel_reduce(
+            &pool,
+            ExecPolicy::Serial,
+            n,
+            0,
+            0u64,
+            |r| r.map(|i| i as u64).sum::<u64>(),
+            |a, b| a + b,
+        );
+        let par = parallel_reduce(
+            &pool,
+            ExecPolicy::Threads(4),
+            n,
+            1000,
+            0u64,
+            |r| r.map(|i| i as u64).sum::<u64>(),
+            |a, b| a + b,
+        );
+        assert_eq!(serial, par);
+        assert_eq!(serial, (n as u64 - 1) * n as u64 / 2);
+    }
+
+    #[test]
+    fn reduce_is_deterministic_for_floats() {
+        // chunk combination order is fixed, so identical runs agree bitwise
+        let pool = ThreadPool::new(8);
+        let f = |r: std::ops::Range<usize>| r.map(|i| 1.0 / (i as f64 + 1.0)).sum::<f64>();
+        let a = parallel_reduce(&pool, ExecPolicy::Threads(8), 100_000, 777, 0.0, f, |x, y| x + y);
+        let b = parallel_reduce(&pool, ExecPolicy::Threads(8), 100_000, 777, 0.0, f, |x, y| x + y);
+        assert_eq!(a.to_bits(), b.to_bits());
+    }
+
+    #[test]
+    fn more_threads_than_work() {
+        let pool = ThreadPool::new(8);
+        let sum = parallel_reduce(
+            &pool,
+            ExecPolicy::Threads(8),
+            3,
+            1,
+            0usize,
+            |r| r.len(),
+            |a, b| a + b,
+        );
+        assert_eq!(sum, 3);
+    }
+}

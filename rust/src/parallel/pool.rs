@@ -1,0 +1,349 @@
+//! Persistent worker pool with instrumented dispatch.
+//!
+//! The pool is deliberately structured like a miniature Kokkos host
+//! backend: a dispatch posts one *kernel* (closure) which workers
+//! execute cooperatively by claiming chunk indices from an atomic
+//! counter.  Every dispatch increments [`PoolStats::dispatches`]; the
+//! cumulative dispatch latency (post → all workers picked up) feeds the
+//! Table-3 overhead analysis.
+
+use std::ops::Range;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+/// Counters exposed for the benchmark harness.
+#[derive(Debug, Default)]
+pub struct PoolStats {
+    /// Number of kernel dispatches posted to the pool.
+    pub dispatches: AtomicU64,
+    /// Total nanoseconds spent inside dispatch (post + wait-complete),
+    /// i.e. the caller-visible cost of using the abstraction.
+    pub dispatch_ns: AtomicU64,
+}
+
+impl PoolStats {
+    /// Snapshot (dispatches, total µs).
+    pub fn snapshot(&self) -> (u64, f64) {
+        (
+            self.dispatches.load(Ordering::Relaxed),
+            self.dispatch_ns.load(Ordering::Relaxed) as f64 / 1e3,
+        )
+    }
+
+    /// Zero the counters.
+    pub fn reset(&self) {
+        self.dispatches.store(0, Ordering::Relaxed);
+        self.dispatch_ns.store(0, Ordering::Relaxed);
+    }
+}
+
+/// The kernel currently being executed, type-erased.
+///
+/// Safety: the raw pointer is only dereferenced between job post and the
+/// completion handshake; `dispatch_*` does not return until every worker
+/// has finished with it, so the referent outlives all uses.
+#[derive(Clone, Copy)]
+struct JobPtr {
+    /// &dyn Fn(usize) — called with claimed chunk indices.
+    func: *const (dyn Fn(usize) + Sync),
+}
+unsafe impl Send for JobPtr {}
+
+struct Shared {
+    state: Mutex<State>,
+    work_cv: Condvar,
+    done_cv: Condvar,
+}
+
+struct State {
+    /// Monotonic id of the posted job; workers track the last id they ran.
+    epoch: u64,
+    job: Option<Job>,
+    /// Number of workers still inside the current job.
+    running: usize,
+    shutdown: bool,
+}
+
+struct Job {
+    ptr: JobPtr,
+    /// Next chunk index to claim.
+    next: Arc<AtomicUsize>,
+    /// One past the last chunk index.
+    end: usize,
+    /// How many workers should participate.
+    width: usize,
+    /// Workers that have joined this job (to cap at `width`).
+    joined: usize,
+}
+
+/// Persistent thread pool.
+pub struct ThreadPool {
+    shared: Arc<Shared>,
+    handles: Vec<JoinHandle<()>>,
+    stats: Arc<PoolStats>,
+    size: usize,
+}
+
+impl ThreadPool {
+    /// Spawn a pool with `size` workers (min 1).
+    pub fn new(size: usize) -> Self {
+        let size = size.max(1);
+        let shared = Arc::new(Shared {
+            state: Mutex::new(State {
+                epoch: 0,
+                job: None,
+                running: 0,
+                shutdown: false,
+            }),
+            work_cv: Condvar::new(),
+            done_cv: Condvar::new(),
+        });
+        let mut handles = Vec::with_capacity(size);
+        for worker_id in 0..size {
+            let sh = shared.clone();
+            handles.push(
+                std::thread::Builder::new()
+                    .name(format!("wct-pool-{worker_id}"))
+                    .spawn(move || worker_loop(sh))
+                    .expect("spawn pool worker"),
+            );
+        }
+        Self {
+            shared,
+            handles,
+            stats: Arc::new(PoolStats::default()),
+            size,
+        }
+    }
+
+    /// Pool with one worker per available hardware thread.
+    pub fn with_hardware_threads() -> Self {
+        Self::new(
+            std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(4),
+        )
+    }
+
+    /// Number of workers.
+    pub fn size(&self) -> usize {
+        self.size
+    }
+
+    /// Dispatch instrumentation counters.
+    pub fn stats(&self) -> &PoolStats {
+        &self.stats
+    }
+
+    /// Run `body` over `0..n` split into chunks of `grain`, using up to
+    /// `width` workers.  Blocks until complete.
+    pub fn dispatch_chunks(
+        &self,
+        width: usize,
+        n: usize,
+        grain: usize,
+        body: &(dyn Fn(Range<usize>) + Sync),
+    ) {
+        let nchunks = n.div_ceil(grain);
+        let kernel = move |chunk: usize| {
+            let lo = chunk * grain;
+            let hi = ((chunk + 1) * grain).min(n);
+            body(lo..hi);
+        };
+        self.dispatch_indexed(width, nchunks, &kernel);
+    }
+
+    /// Run `kernel(i)` for every i in `0..count`, cooperatively claimed
+    /// by up to `width` workers.  Blocks until complete.
+    pub fn dispatch_indexed(&self, width: usize, count: usize, kernel: &(dyn Fn(usize) + Sync)) {
+        if count == 0 {
+            return;
+        }
+        let t0 = Instant::now();
+        let width = width.min(self.size).max(1);
+        // Lifetime erasure: see JobPtr safety note — we block below until
+        // every participating worker is done before returning.
+        let ptr = JobPtr {
+            func: unsafe {
+                std::mem::transmute::<*const (dyn Fn(usize) + Sync), *const (dyn Fn(usize) + Sync)>(
+                    kernel as *const _,
+                )
+            },
+        };
+        let next = Arc::new(AtomicUsize::new(0));
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            debug_assert!(st.job.is_none(), "pool supports one job at a time");
+            st.epoch += 1;
+            st.job = Some(Job {
+                ptr,
+                next: next.clone(),
+                end: count,
+                width,
+                joined: 0,
+            });
+            st.running = 0;
+            self.shared.work_cv.notify_all();
+        }
+        // Wait for completion: job taken down AND all runners exited.
+        let mut st = self.shared.state.lock().unwrap();
+        while st.job.is_some() || st.running > 0 {
+            st = self.shared.done_cv.wait(st).unwrap();
+        }
+        drop(st);
+        self.stats.dispatches.fetch_add(1, Ordering::Relaxed);
+        self.stats
+            .dispatch_ns
+            .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            st.shutdown = true;
+            self.shared.work_cv.notify_all();
+        }
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+fn worker_loop(shared: Arc<Shared>) {
+    let mut last_epoch = 0u64;
+    loop {
+        // Wait for a fresh job (or shutdown).
+        let (ptr, next, end) = {
+            let mut st = shared.state.lock().unwrap();
+            loop {
+                if st.shutdown {
+                    return;
+                }
+                if st.epoch != last_epoch {
+                    if let Some(job) = st.job.as_mut() {
+                        if job.joined < job.width {
+                            job.joined += 1;
+                            last_epoch = st.epoch;
+                            st.running += 1;
+                            let job = st.job.as_ref().unwrap();
+                            break (job.ptr, job.next.clone(), job.end);
+                        }
+                    }
+                    // Job exists but is full (or already finished): skip
+                    // this epoch entirely so we don't spin on it.
+                    last_epoch = st.epoch;
+                }
+                st = shared.work_cv.wait(st).unwrap();
+            }
+        };
+        // Execute: claim chunk indices until exhausted.
+        let func: &(dyn Fn(usize) + Sync) = unsafe { &*ptr.func };
+        loop {
+            let i = next.fetch_add(1, Ordering::Relaxed);
+            if i >= end {
+                break;
+            }
+            func(i);
+        }
+        // Leave the job; last one out takes it down.
+        let mut st = shared.state.lock().unwrap();
+        st.running -= 1;
+        let job_done = match st.job.as_ref() {
+            Some(job) => next.load(Ordering::Relaxed) >= job.end,
+            None => false,
+        };
+        if job_done {
+            // All chunks claimed; when the final runner (us, possibly)
+            // exits, clear the job so the dispatcher can return.
+            if st.running == 0 {
+                st.job = None;
+            }
+        }
+        if st.running == 0 && st.job.as_ref().map(|j| j.joined >= j.width).unwrap_or(false) {
+            st.job = None;
+        }
+        shared.done_cv.notify_all();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64 as TestAtomicU64;
+
+    #[test]
+    fn dispatch_runs_all_indices() {
+        let pool = ThreadPool::new(4);
+        let sum = TestAtomicU64::new(0);
+        pool.dispatch_indexed(4, 1000, &|i| {
+            sum.fetch_add(i as u64, Ordering::Relaxed);
+        });
+        assert_eq!(sum.load(Ordering::Relaxed), 999 * 1000 / 2);
+    }
+
+    #[test]
+    fn sequential_dispatches() {
+        let pool = ThreadPool::new(3);
+        for round in 0..50 {
+            let count = TestAtomicU64::new(0);
+            pool.dispatch_indexed(3, 10 + round, &|_| {
+                count.fetch_add(1, Ordering::Relaxed);
+            });
+            assert_eq!(count.load(Ordering::Relaxed), 10 + round as u64);
+        }
+    }
+
+    #[test]
+    fn width_one_behaves_serially() {
+        let pool = ThreadPool::new(4);
+        let sum = TestAtomicU64::new(0);
+        pool.dispatch_indexed(1, 100, &|i| {
+            sum.fetch_add(i as u64, Ordering::Relaxed);
+        });
+        assert_eq!(sum.load(Ordering::Relaxed), 99 * 100 / 2);
+    }
+
+    #[test]
+    fn stats_count_dispatches() {
+        let pool = ThreadPool::new(2);
+        pool.stats().reset();
+        for _ in 0..7 {
+            pool.dispatch_indexed(2, 4, &|_| {});
+        }
+        let (n, us) = pool.stats().snapshot();
+        assert_eq!(n, 7);
+        assert!(us > 0.0);
+    }
+
+    #[test]
+    fn zero_count_dispatch_is_noop() {
+        let pool = ThreadPool::new(2);
+        pool.stats().reset();
+        pool.dispatch_indexed(2, 0, &|_| panic!("no work expected"));
+        assert_eq!(pool.stats().snapshot().0, 0);
+    }
+
+    #[test]
+    fn pool_drop_joins_workers() {
+        let pool = ThreadPool::new(8);
+        pool.dispatch_indexed(8, 64, &|_| {});
+        drop(pool); // must not hang
+    }
+
+    #[test]
+    fn heavy_concurrency_smoke() {
+        let pool = ThreadPool::new(8);
+        let total = TestAtomicU64::new(0);
+        for _ in 0..20 {
+            pool.dispatch_indexed(8, 10_000, &|i| {
+                total.fetch_add((i % 7) as u64, Ordering::Relaxed);
+            });
+        }
+        let expect: u64 = (0..10_000u64).map(|i| i % 7).sum::<u64>() * 20;
+        assert_eq!(total.load(Ordering::Relaxed), expect);
+    }
+}

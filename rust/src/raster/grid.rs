@@ -1,0 +1,157 @@
+//! Fine-grid specification for rasterization.
+
+use crate::geometry::{Binning, Detector, PlaneId};
+
+/// Describes the fine (oversampled) rasterization grid of one plane.
+///
+/// Wire w owns fine pitch bins `[w*pos, (w+1)*pos)`; tick k owns fine
+/// time bins `[k*tos, (k+1)*tos)`.  The scatter-add stage folds fine
+/// bins onto the coarse (wire, tick) grid by integer division.
+#[derive(Clone, Debug)]
+pub struct GridSpec {
+    nwires: usize,
+    nticks: usize,
+    pitch_oversample: usize,
+    time_oversample: usize,
+    pitch_bins: Binning,
+    time_bins: Binning,
+}
+
+impl GridSpec {
+    /// Construct from plane/readout parameters.
+    pub fn new(
+        nwires: usize,
+        pitch: f64,
+        nticks: usize,
+        tick: f64,
+        pitch_oversample: usize,
+        time_oversample: usize,
+    ) -> Self {
+        assert!(pitch_oversample >= 1 && time_oversample >= 1);
+        let pos = pitch_oversample;
+        let tos = time_oversample;
+        // Fine pitch bins cover the same interval as the wire strips:
+        // [-pitch/2, (nwires-1/2)*pitch), but subdivided pos x.
+        let pitch_bins = Binning::new(
+            nwires * pos,
+            -0.5 * pitch,
+            (nwires as f64 - 0.5) * pitch,
+        );
+        let time_bins = Binning::new(nticks * tos, 0.0, nticks as f64 * tick);
+        Self {
+            nwires,
+            nticks,
+            pitch_oversample: pos,
+            time_oversample: tos,
+            pitch_bins,
+            time_bins,
+        }
+    }
+
+    /// Build for one plane of a detector with given oversampling.
+    pub fn for_plane(det: &Detector, plane: PlaneId, pos: usize, tos: usize) -> Self {
+        let p = det.plane(plane);
+        Self::new(p.nwires, p.pitch, det.nticks, det.tick, pos, tos)
+    }
+
+    /// Fine pitch-axis binning.
+    pub fn pitch_bins(&self) -> &Binning {
+        &self.pitch_bins
+    }
+
+    /// Fine time-axis binning.
+    pub fn time_bins(&self) -> &Binning {
+        &self.time_bins
+    }
+
+    /// Coarse dimensions (nwires, nticks).
+    pub fn coarse_shape(&self) -> (usize, usize) {
+        (self.nwires, self.nticks)
+    }
+
+    /// Fine dimensions (pitch bins, time bins).
+    pub fn fine_shape(&self) -> (usize, usize) {
+        (self.pitch_bins.nbins(), self.time_bins.nbins())
+    }
+
+    /// Impact positions per wire.
+    pub fn pitch_oversample(&self) -> usize {
+        self.pitch_oversample
+    }
+
+    /// Sub-ticks per tick.
+    pub fn time_oversample(&self) -> usize {
+        self.time_oversample
+    }
+
+    /// Map a fine pitch bin to its wire (None off-grid).
+    pub fn wire_of(&self, fine_pitch_bin: i64) -> Option<usize> {
+        if fine_pitch_bin < 0 {
+            return None;
+        }
+        let w = fine_pitch_bin as usize / self.pitch_oversample;
+        (w < self.nwires).then_some(w)
+    }
+
+    /// Map a fine time bin to its tick (None off-grid).
+    pub fn tick_of(&self, fine_time_bin: i64) -> Option<usize> {
+        if fine_time_bin < 0 {
+            return None;
+        }
+        let t = fine_time_bin as usize / self.time_oversample;
+        (t < self.nticks).then_some(t)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::units::*;
+
+    #[test]
+    fn shapes() {
+        let s = GridSpec::new(100, 3.0 * MM, 256, 0.5 * US, 5, 2);
+        assert_eq!(s.coarse_shape(), (100, 256));
+        assert_eq!(s.fine_shape(), (500, 512));
+        assert_eq!(s.pitch_oversample(), 5);
+        assert_eq!(s.time_oversample(), 2);
+    }
+
+    #[test]
+    fn fine_bin_sizes() {
+        let s = GridSpec::new(100, 3.0 * MM, 256, 0.5 * US, 5, 2);
+        assert!((s.pitch_bins().binsize() - 0.6 * MM).abs() < 1e-12);
+        assert!((s.time_bins().binsize() - 0.25 * US).abs() < 1e-12);
+    }
+
+    #[test]
+    fn folding_maps() {
+        let s = GridSpec::new(10, 3.0 * MM, 16, 0.5 * US, 4, 2);
+        assert_eq!(s.wire_of(0), Some(0));
+        assert_eq!(s.wire_of(3), Some(0));
+        assert_eq!(s.wire_of(4), Some(1));
+        assert_eq!(s.wire_of(39), Some(9));
+        assert_eq!(s.wire_of(40), None);
+        assert_eq!(s.wire_of(-1), None);
+        assert_eq!(s.tick_of(0), Some(0));
+        assert_eq!(s.tick_of(31), Some(15));
+        assert_eq!(s.tick_of(32), None);
+    }
+
+    #[test]
+    fn for_plane_matches_detector() {
+        let det = Detector::test_small();
+        let s = GridSpec::for_plane(&det, crate::geometry::PlaneId::W, 5, 2);
+        assert_eq!(s.coarse_shape(), (560, 1024));
+    }
+
+    #[test]
+    fn wire_center_fine_bins_are_centered() {
+        // wire 3's strip spans fine bins 12..16 (pos=4); the pitch
+        // coordinate of wire 3 is 9 mm and must land in bins 13-14.
+        let s = GridSpec::new(10, 3.0 * MM, 16, 0.5 * US, 4, 2);
+        let b = s.pitch_bins().bin(9.0 * MM);
+        assert!(b == 13 || b == 14, "b={b}");
+        assert_eq!(s.wire_of(b as i64), Some(3));
+    }
+}

@@ -1,0 +1,433 @@
+//! Charge rasterization — the paper's profiled hot spot (§3, §4.3).
+//!
+//! Each drifted depo is a 2-D Gaussian charge cloud in (pitch, time).
+//! Rasterization turns it into a small patch (~20×20 bins) of per-bin
+//! electron counts in two sub-steps the paper times separately
+//! (Tables 2–3):
+//!
+//! 1. **"2D sampling"** — integrate the Gaussian over each bin of the
+//!    patch (erf differences along each axis, outer product, normalize).
+//! 2. **"Fluctuation"** — draw per-bin statistical fluctuations of the
+//!    integer electron counts.  Three modes reproduce the paper's rows:
+//!    * [`Fluctuation::InlineBinomial`] — exact binomial drawn inside
+//!      the loop (**ref-CPU**: the expensive `std::binomial_distribution`
+//!      analog),
+//!    * [`Fluctuation::PoolNormal`] — normal approximation fed from a
+//!      pre-computed [`RandomPool`] (**ref-CUDA / Kokkos** path),
+//!    * [`Fluctuation::None`] — no fluctuation (**ref-CPU-noRNG**).
+//!
+//! Patches live on a *fine* grid: `pitch_oversample` impact positions
+//! per wire and `time_oversample` sub-ticks per tick, mirroring WCT's
+//! sub-wire impact-position sampling.  With the default 5×2 oversample
+//! and uboone-like diffusion the mean patch is ~20×20 bins — the work
+//! unit size the paper quotes.  The scatter-add stage folds fine bins
+//! back onto (wire, tick).
+
+mod grid;
+mod patch;
+
+pub use grid::GridSpec;
+pub use patch::Patch;
+
+use crate::depo::Depo;
+use crate::geometry::WirePlane;
+use crate::rng::{binomial_exact, binomial_normal_approx, RandomPool, Pcg32};
+
+
+/// A depo reduced to one plane's rasterization inputs.  This is exactly
+/// the per-depo parameter vector the L1 Pallas kernel consumes
+/// (`python/compile/kernels/raster.py`), keeping Rust and JAX paths
+/// bit-comparable at the interface.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct DepoView {
+    /// Pitch coordinate of the cloud center on this plane.
+    pub pitch: f64,
+    /// Arrival time at the response plane.
+    pub time: f64,
+    /// Gaussian width along the pitch axis.
+    pub sigma_pitch: f64,
+    /// Gaussian width along the time axis.
+    pub sigma_time: f64,
+    /// Electrons in the cloud.
+    pub charge: f64,
+}
+
+impl DepoView {
+    /// Project a drifted depo onto a plane.
+    pub fn project(depo: &Depo, plane: &WirePlane, drift_speed: f64) -> Self {
+        Self {
+            pitch: plane.pitch_coord(depo.pos[1], depo.pos[2]),
+            time: depo.time,
+            sigma_pitch: depo.sigma_t,
+            sigma_time: depo.sigma_l / drift_speed,
+            charge: depo.charge,
+        }
+    }
+}
+
+/// Fluctuation mode for the second rasterization sub-step.
+pub enum Fluctuation<'a> {
+    /// No fluctuation: bins get their mean charge (ref-CPU-noRNG row).
+    None,
+    /// Exact per-bin binomial with the given inline RNG (ref-CPU row).
+    InlineBinomial(&'a mut Pcg32),
+    /// Normal-approximation fluctuation from a pre-computed pool
+    /// (ref-CUDA / Kokkos rows).
+    PoolNormal(&'a RandomPool),
+}
+
+/// Rasterization tuning parameters.
+#[derive(Clone, Copy, Debug)]
+pub struct RasterParams {
+    /// Patch half-extent in Gaussian sigmas.
+    pub nsigma: f64,
+    /// Width floors so zero-diffusion depos still cover one bin.
+    pub min_sigma_pitch: f64,
+    /// Width floor along time.
+    pub min_sigma_time: f64,
+}
+
+impl Default for RasterParams {
+    fn default() -> Self {
+        Self {
+            nsigma: 3.0,
+            min_sigma_pitch: 1e-3,
+            min_sigma_time: 1e-3,
+        }
+    }
+}
+
+/// Compute the patch bin window for a depo on a grid: returns
+/// (first fine pitch bin, count, first fine time bin, count).
+/// Bins are *unclipped* — they may hang off the grid; the scatter-add
+/// stage clips.  Returns None when the patch misses the grid entirely.
+pub fn patch_window(
+    view: &DepoView,
+    spec: &GridSpec,
+    params: &RasterParams,
+) -> Option<(i64, usize, i64, usize)> {
+    let sp = view.sigma_pitch.max(params.min_sigma_pitch);
+    let st = view.sigma_time.max(params.min_sigma_time);
+    let pb = spec.pitch_bins();
+    let tb = spec.time_bins();
+    let p_lo = pb.bin_unclamped(view.pitch - params.nsigma * sp);
+    let p_hi = pb.bin_unclamped(view.pitch + params.nsigma * sp);
+    let t_lo = tb.bin_unclamped(view.time - params.nsigma * st);
+    let t_hi = tb.bin_unclamped(view.time + params.nsigma * st);
+    // Entirely off-grid?
+    if p_hi < 0 || t_hi < 0 || p_lo >= pb.nbins() as i64 || t_lo >= tb.nbins() as i64 {
+        return None;
+    }
+    Some((
+        p_lo,
+        (p_hi - p_lo + 1) as usize,
+        t_lo,
+        (t_hi - t_lo + 1) as usize,
+    ))
+}
+
+/// Sub-step 1, "2D sampling": per-bin Gaussian masses for the patch,
+/// normalized to sum to 1 over the patch (WCT conserves the cloud's
+/// charge within its ±nσ window).  Row-major `[np][nt]`, f64 weights.
+pub fn sample_2d(
+    view: &DepoView,
+    spec: &GridSpec,
+    params: &RasterParams,
+    window: (i64, usize, i64, usize),
+) -> Vec<f64> {
+    let (p0, np, t0, nt) = window;
+    let sp = view.sigma_pitch.max(params.min_sigma_pitch);
+    let st = view.sigma_time.max(params.min_sigma_time);
+    let pb = spec.pitch_bins();
+    let tb = spec.time_bins();
+    // Separable axis masses.  Hot path: compute each axis from the erf
+    // at successive edges (N+1 erf calls instead of 2N) and use stack
+    // buffers for typical patch extents (perf log in EXPERIMENTS.md).
+    const STACK: usize = 64;
+    let mut wp_buf = [0.0f64; STACK];
+    let mut wt_buf = [0.0f64; STACK];
+    let mut wp_vec;
+    let mut wt_vec;
+    let wp: &mut [f64] = if np <= STACK {
+        &mut wp_buf[..np]
+    } else {
+        wp_vec = vec![0.0; np];
+        &mut wp_vec[..]
+    };
+    let wt: &mut [f64] = if nt <= STACK {
+        &mut wt_buf[..nt]
+    } else {
+        wt_vec = vec![0.0; nt];
+        &mut wt_vec[..]
+    };
+    axis_masses(view.pitch, sp, pb, p0, wp);
+    axis_masses(view.time, st, tb, t0, wt);
+    let total: f64 = wp.iter().sum::<f64>() * wt.iter().sum::<f64>();
+    let norm = if total > 0.0 { 1.0 / total } else { 0.0 };
+    let mut out = Vec::with_capacity(np * nt);
+    for &p in wp.iter() {
+        let k = p * norm;
+        for &t in wt.iter() {
+            out.push(k * t);
+        }
+    }
+    out
+}
+
+/// Fill `out[i]` with the Gaussian mass of bin `bin0 + i`, evaluating
+/// the erf once per edge (shared between adjacent bins).
+fn axis_masses(center: f64, sigma: f64, bins: &crate::geometry::Binning, bin0: i64, out: &mut [f64]) {
+    let inv = 1.0 / (sigma * std::f64::consts::SQRT_2);
+    let mut prev = crate::special::erf((bins.edge(bin0) - center) * inv);
+    for (i, o) in out.iter_mut().enumerate() {
+        let next = crate::special::erf((bins.edge(bin0 + i as i64 + 1) - center) * inv);
+        *o = 0.5 * (next - prev);
+        prev = next;
+    }
+}
+
+/// Sub-step 2, "fluctuation": convert normalized weights into per-bin
+/// electron counts.
+pub fn fluctuate(weights: &[f64], charge: f64, mode: &mut Fluctuation<'_>) -> Vec<f32> {
+    match mode {
+        Fluctuation::None => weights.iter().map(|&w| (w * charge) as f32).collect(),
+        Fluctuation::InlineBinomial(rng) => {
+            // The ref-CPU path: one exact binomial per bin, RNG inline.
+            let n = charge.round().max(0.0) as u64;
+            weights
+                .iter()
+                .map(|&w| binomial_exact(*rng, n, w.clamp(0.0, 1.0)) as f32)
+                .collect()
+        }
+        Fluctuation::PoolNormal(pool) => {
+            let n = charge.round().max(0.0) as u64;
+            const STACK: usize = 1024;
+            let mut z_buf = [0.0f32; STACK];
+            let mut z_vec;
+            let zs: &mut [f32] = if weights.len() <= STACK {
+                &mut z_buf[..weights.len()]
+            } else {
+                z_vec = vec![0.0f32; weights.len()];
+                &mut z_vec[..]
+            };
+            pool.fill_normals(zs);
+            weights
+                .iter()
+                .zip(zs.iter())
+                .map(|(&w, &z)| binomial_normal_approx(n, w.clamp(0.0, 1.0), z as f64) as f32)
+                .collect()
+        }
+    }
+}
+
+/// Full rasterization of one depo view: window + 2D sampling +
+/// fluctuation.  Returns None for off-grid depos.
+pub fn rasterize(
+    view: &DepoView,
+    spec: &GridSpec,
+    params: &RasterParams,
+    mode: &mut Fluctuation<'_>,
+) -> Option<Patch> {
+    let window = patch_window(view, spec, params)?;
+    let weights = sample_2d(view, spec, params, window);
+    let values = fluctuate(&weights, view.charge, mode);
+    let (p0, np, t0, nt) = window;
+    Some(Patch {
+        pbin0: p0,
+        tbin0: t0,
+        np,
+        nt,
+        values,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::units::*;
+
+    fn spec() -> GridSpec {
+        // 100 wires x 256 ticks, oversample 5x2 -> fine grid 500 x 512
+        GridSpec::new(100, 3.0 * MM, 256, 0.5 * US, 5, 2)
+    }
+
+    fn view(pitch: f64, time: f64) -> DepoView {
+        DepoView {
+            pitch,
+            time,
+            sigma_pitch: 1.8 * MM,
+            sigma_time: 0.9 * US,
+            charge: 6000.0,
+        }
+    }
+
+    #[test]
+    fn window_is_roughly_paper_patch_size() {
+        // With uboone-like diffusion and 5x2 oversample the patch should
+        // be on the order of 20x20 bins (the paper's work unit).
+        let s = spec();
+        let v = view(150.0 * MM, 64.0 * US);
+        let (_, np, _, nt) = patch_window(&v, &s, &RasterParams::default()).unwrap();
+        assert!((12..30).contains(&np), "np={np}");
+        assert!((12..30).contains(&nt), "nt={nt}");
+    }
+
+    #[test]
+    fn window_none_when_off_grid() {
+        let s = spec();
+        let p = RasterParams::default();
+        assert!(patch_window(&view(-100.0 * MM, 64.0 * US), &s, &p).is_none());
+        assert!(patch_window(&view(150.0 * MM, -50.0 * US), &s, &p).is_none());
+        assert!(patch_window(&view(10.0 * M, 64.0 * US), &s, &p).is_none());
+    }
+
+    #[test]
+    fn window_clips_partially_overhanging() {
+        let s = spec();
+        let p = RasterParams::default();
+        // Near the pitch origin the window may start at negative bins.
+        let (p0, np, _, _) = patch_window(&view(0.0, 64.0 * US), &s, &p).unwrap();
+        assert!(p0 < 0, "p0={p0}");
+        assert!(np > 0);
+    }
+
+    #[test]
+    fn weights_sum_to_one() {
+        let s = spec();
+        let p = RasterParams::default();
+        let v = view(150.0 * MM, 64.0 * US);
+        let w = patch_window(&v, &s, &p).unwrap();
+        let weights = sample_2d(&v, &s, &p, w);
+        let sum: f64 = weights.iter().sum();
+        assert!((sum - 1.0).abs() < 1e-12, "sum={sum}");
+        assert!(weights.iter().all(|&x| x >= 0.0));
+    }
+
+    #[test]
+    fn weights_peak_at_center() {
+        let s = spec();
+        let p = RasterParams::default();
+        let v = view(150.0 * MM, 64.0 * US);
+        let win = patch_window(&v, &s, &p).unwrap();
+        let weights = sample_2d(&v, &s, &p, win);
+        let (_, np, _, nt) = win;
+        let (imax, _) = weights
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap();
+        let (pc, tc) = (imax / nt, imax % nt);
+        // center bin of the window
+        assert!((pc as i64 - np as i64 / 2).abs() <= 1, "pc={pc} np={np}");
+        assert!((tc as i64 - nt as i64 / 2).abs() <= 1, "tc={tc} nt={nt}");
+    }
+
+    #[test]
+    fn no_fluctuation_preserves_total_charge() {
+        let s = spec();
+        let p = RasterParams::default();
+        let v = view(150.0 * MM, 64.0 * US);
+        let patch = rasterize(&v, &s, &p, &mut Fluctuation::None).unwrap();
+        let total: f64 = patch.values.iter().map(|&x| x as f64).sum();
+        assert!((total - 6000.0).abs() < 0.5, "total={total}");
+    }
+
+    #[test]
+    fn inline_binomial_statistics() {
+        let s = spec();
+        let p = RasterParams::default();
+        let v = view(150.0 * MM, 64.0 * US);
+        // Repeat rasterization; mean total should approach charge.
+        let n = 200;
+        let mut totals = Vec::new();
+        for seed in 0..n {
+            let mut rng = Pcg32::seeded(seed);
+            let mut mode = Fluctuation::InlineBinomial(&mut rng);
+            let patch = rasterize(&v, &s, &p, &mut mode).unwrap();
+            totals.push(patch.values.iter().map(|&x| x as f64).sum::<f64>());
+        }
+        let mean = totals.iter().sum::<f64>() / n as f64;
+        assert!((mean - 6000.0).abs() < 20.0, "mean={mean}");
+        // there must be spread (it's a fluctuation!)
+        let var = totals.iter().map(|t| (t - mean) * (t - mean)).sum::<f64>() / n as f64;
+        assert!(var > 100.0, "var={var}");
+    }
+
+    #[test]
+    fn pool_fluctuation_statistics() {
+        let s = spec();
+        let p = RasterParams::default();
+        let v = view(150.0 * MM, 64.0 * US);
+        let pool = RandomPool::generate(1, 1 << 20);
+        let n = 200;
+        let mut totals = Vec::new();
+        for _ in 0..n {
+            let mut mode = Fluctuation::PoolNormal(&pool);
+            let patch = rasterize(&v, &s, &p, &mut mode).unwrap();
+            totals.push(patch.values.iter().map(|&x| x as f64).sum::<f64>());
+        }
+        let mean = totals.iter().sum::<f64>() / n as f64;
+        assert!((mean - 6000.0).abs() < 20.0, "mean={mean}");
+        let var = totals.iter().map(|t| (t - mean) * (t - mean)).sum::<f64>() / n as f64;
+        assert!(var > 100.0, "var={var}");
+    }
+
+    #[test]
+    fn pool_mode_is_deterministic_after_reset() {
+        let s = spec();
+        let p = RasterParams::default();
+        let v = view(150.0 * MM, 64.0 * US);
+        let pool = RandomPool::generate(9, 1 << 16);
+        let a = rasterize(&v, &s, &p, &mut Fluctuation::PoolNormal(&pool)).unwrap();
+        pool.reset();
+        let b = rasterize(&v, &s, &p, &mut Fluctuation::PoolNormal(&pool)).unwrap();
+        assert_eq!(a.values, b.values);
+    }
+
+    #[test]
+    fn depo_view_projection() {
+        use crate::geometry::{PlaneId, WirePlane};
+        let plane = WirePlane::new(PlaneId::W, 0.0, 3.0 * MM, 100, 0.0);
+        let depo = crate::depo::Depo {
+            time: 10.0 * US,
+            pos: [10.0 * CM, 5.0 * MM, 60.0 * MM],
+            charge: 1234.0,
+            energy: 0.0,
+            sigma_l: 1.6 * MM,
+            sigma_t: 2.0 * MM,
+            id: 0,
+        };
+        let v = DepoView::project(&depo, &plane, consts::DRIFT_SPEED);
+        assert!((v.pitch - 60.0 * MM).abs() < 1e-9);
+        assert!((v.sigma_pitch - 2.0 * MM).abs() < 1e-12);
+        // 1.6 mm / 1.6 mm/us = 1 us
+        assert!((v.sigma_time - 1.0 * US).abs() < 1e-9);
+        assert_eq!(v.charge, 1234.0);
+    }
+
+    #[test]
+    fn property_rasterized_charge_bounded() {
+        crate::testing::forall("raster conserves charge within ~5 sigma", 50, |g| {
+            let s = spec();
+            let p = RasterParams::default();
+            let v = DepoView {
+                pitch: g.f64_in(30.0..250.0) * MM,
+                time: g.f64_in(10.0..110.0) * US,
+                sigma_pitch: g.f64_in(0.3..4.0) * MM,
+                sigma_time: g.f64_in(0.1..2.0) * US,
+                charge: g.f64_in(100.0..50_000.0),
+            };
+            let mut rng = Pcg32::seeded(77);
+            let mut mode = Fluctuation::InlineBinomial(&mut rng);
+            if let Some(patch) = rasterize(&v, &s, &p, &mut mode) {
+                let total: f64 = patch.values.iter().map(|&x| x as f64).sum();
+                let sigma_tot = (v.charge).sqrt().max(1.0);
+                g.assert(
+                    (total - v.charge).abs() < 8.0 * sigma_tot + 2.0,
+                    &format!("total={total} charge={}", v.charge),
+                );
+                g.assert(patch.values.iter().all(|&x| x >= 0.0), "no negative bins");
+            }
+        });
+    }
+}

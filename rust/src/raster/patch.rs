@@ -1,0 +1,59 @@
+//! The rasterized patch data type.
+
+/// A small rectangle of per-bin electron counts on the fine grid.
+///
+/// `values` is row-major `[np][nt]` (pitch-major, time-minor), f32 to
+/// match the device-side layout (the PJRT artifacts exchange patches as
+/// f32 tensors).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Patch {
+    /// First fine pitch bin (may be negative — clipped at scatter time).
+    pub pbin0: i64,
+    /// First fine time bin (may be negative).
+    pub tbin0: i64,
+    /// Pitch-axis bin count.
+    pub np: usize,
+    /// Time-axis bin count.
+    pub nt: usize,
+    /// Row-major bin values (electrons).
+    pub values: Vec<f32>,
+}
+
+impl Patch {
+    /// Total electrons in the patch.
+    pub fn total(&self) -> f64 {
+        self.values.iter().map(|&v| v as f64).sum()
+    }
+
+    /// Value at (pitch row, time col).
+    pub fn at(&self, p: usize, t: usize) -> f32 {
+        debug_assert!(p < self.np && t < self.nt);
+        self.values[p * self.nt + t]
+    }
+
+    /// Number of bins.
+    pub fn size(&self) -> usize {
+        self.np * self.nt
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accessors() {
+        let p = Patch {
+            pbin0: -1,
+            tbin0: 4,
+            np: 2,
+            nt: 3,
+            values: vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0],
+        };
+        assert_eq!(p.size(), 6);
+        assert_eq!(p.total(), 21.0);
+        assert_eq!(p.at(0, 0), 1.0);
+        assert_eq!(p.at(1, 2), 6.0);
+        assert_eq!(p.at(0, 2), 3.0);
+    }
+}

@@ -1,0 +1,111 @@
+//! Cold-electronics shaping response.
+
+use crate::units::*;
+
+/// Semi-Gaussian shaper: `e(t) = gain · (t/τ)^4 · exp(4·(1 − t/τ))`,
+/// peaking at `t = τ` with amplitude `gain` — the standard CMOS cold
+/// electronics parametrization (gain in mV/fC, shaping time τ).
+#[derive(Clone, Debug)]
+pub struct ElecResponse {
+    /// Peak gain (voltage per unit charge).
+    pub gain: f64,
+    /// Shaping (peaking) time.
+    pub shaping: f64,
+    /// Sample period.
+    pub tick: f64,
+    /// Waveform length in ticks (covers the tail to ~1e-4 of peak).
+    pub nticks: usize,
+}
+
+impl ElecResponse {
+    /// MicroBooNE-like defaults: 14 mV/fC, 2 µs shaping.
+    pub fn cold_default(tick: f64) -> Self {
+        Self::new(14.0 * MILLIVOLT / FC, 2.0 * US, tick)
+    }
+
+    /// Construct with explicit gain/shaping.
+    pub fn new(gain: f64, shaping: f64, tick: f64) -> Self {
+        // (t/τ)^4 e^{4(1-t/τ)} < 1e-4 around t/τ ≈ 6.5; keep 8τ.
+        let nticks = ((8.0 * shaping) / tick).ceil() as usize;
+        Self {
+            gain,
+            shaping,
+            tick,
+            nticks,
+        }
+    }
+
+    /// Response value at time `t` for a unit charge.
+    pub fn eval(&self, t: f64) -> f64 {
+        if t <= 0.0 {
+            return 0.0;
+        }
+        let x = t / self.shaping;
+        self.gain * x.powi(4) * (4.0 * (1.0 - x)).exp()
+    }
+
+    /// Sampled waveform, one value per tick.
+    pub fn waveform(&self) -> Vec<f64> {
+        (0..self.nticks)
+            .map(|k| self.eval(k as f64 * self.tick))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn peaks_at_shaping_time_with_gain() {
+        let e = ElecResponse::cold_default(0.5 * US);
+        let peak = e.eval(e.shaping);
+        assert!((peak - 14.0 * MILLIVOLT / FC).abs() < 1e-12 * peak);
+        // neighbourhood is lower
+        assert!(e.eval(1.5 * US) < peak);
+        assert!(e.eval(2.5 * US) < peak);
+    }
+
+    #[test]
+    fn zero_before_start() {
+        let e = ElecResponse::cold_default(0.5 * US);
+        assert_eq!(e.eval(0.0), 0.0);
+        assert_eq!(e.eval(-1.0 * US), 0.0);
+    }
+
+    #[test]
+    fn waveform_covers_tail() {
+        let e = ElecResponse::cold_default(0.5 * US);
+        let w = e.waveform();
+        assert_eq!(w.len(), 32); // 8 * 2us / 0.5us
+        let peak = w.iter().cloned().fold(0.0f64, f64::max);
+        assert!(w.last().unwrap() / peak < 1e-3);
+    }
+
+    #[test]
+    fn waveform_is_smooth_and_positive() {
+        let e = ElecResponse::new(1.0, 1.0 * US, 0.1 * US);
+        let w = e.waveform();
+        assert!(w.iter().all(|&v| v >= 0.0));
+        // single maximum
+        let imax = w
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap()
+            .0;
+        assert!(w[..imax].windows(2).all(|p| p[1] >= p[0]));
+        assert!(w[imax..].windows(2).all(|p| p[1] <= p[0]));
+    }
+
+    #[test]
+    fn gain_scales_linearly() {
+        let e1 = ElecResponse::new(1.0, 1.0 * US, 0.5 * US);
+        let e2 = ElecResponse::new(3.0, 1.0 * US, 0.5 * US);
+        let w1 = e1.waveform();
+        let w2 = e2.waveform();
+        for (a, b) in w1.iter().zip(&w2) {
+            assert!((3.0 * a - b).abs() < 1e-12);
+        }
+    }
+}

@@ -1,0 +1,171 @@
+//! Parametrized field response (induced current per Ramo's theorem).
+
+use crate::geometry::PlaneId;
+use crate::units::*;
+
+/// Field response sampled on (wire offset × tick): the induced current
+/// on wire `w - nwires/2` from a unit charge arriving at the central
+/// wire's position, as a function of time.
+#[derive(Clone, Debug)]
+pub struct FieldResponse {
+    /// Which plane.
+    pub plane: PlaneId,
+    /// Number of wire offsets covered (odd; center = nwires/2).
+    pub nwires: usize,
+    /// Number of time samples.
+    pub nticks: usize,
+    /// Sample period.
+    pub tick: f64,
+    /// Row-major (wire, tick) response values.  Normalized so the
+    /// *total* collection response integrates to 1 (all induced charge
+    /// collected) and induction responses integrate to ~0 per wire.
+    pub data: Vec<f64>,
+}
+
+impl FieldResponse {
+    /// Standard parametrized response: 21 wire offsets, 60 µs long.
+    ///
+    /// Collection (W): unipolar Gaussian current pulse, σ ≈ 1 µs,
+    /// amplitude decaying ~exp(-|Δw|/1.2) across neighbours.
+    /// Induction (U/V): bipolar derivative-of-Gaussian, σ ≈ 1.6 µs,
+    /// same transverse decay, slight arrival-delay skew with |Δw|.
+    pub fn standard(plane: PlaneId, tick: f64) -> Self {
+        let nwires = 21;
+        let duration = 60.0 * US;
+        let nticks = (duration / tick).round() as usize;
+        let mut data = vec![0.0; nwires * nticks];
+        let center = (nwires / 2) as i64;
+        let t0 = 20.0 * US; // arrival reference inside the window
+        for w in 0..nwires {
+            let dw = (w as i64 - center).abs() as f64;
+            let amp = (-dw / 1.2).exp();
+            // neighbours see the charge slightly earlier/wider (geometry)
+            let sigma = match plane {
+                PlaneId::W => (1.0 + 0.15 * dw) * US,
+                _ => (1.6 + 0.15 * dw) * US,
+            };
+            let delay = 0.4 * dw * US;
+            for k in 0..nticks {
+                let t = k as f64 * tick - (t0 + delay);
+                let g = (-0.5 * (t / sigma) * (t / sigma)).exp();
+                data[w * nticks + k] = match plane {
+                    // unipolar: the current pulse itself
+                    PlaneId::W => amp * g,
+                    // bipolar: d/dt of the Gaussian (sign: current
+                    // reverses as the charge passes the wire plane)
+                    _ => amp * (-t / sigma) * g,
+                };
+            }
+        }
+        let mut fr = Self {
+            plane,
+            nwires,
+            nticks,
+            tick,
+            data,
+        };
+        fr.normalize();
+        fr
+    }
+
+    /// One wire-offset row.
+    pub fn row(&self, w: usize) -> &[f64] {
+        &self.data[w * self.nticks..(w + 1) * self.nticks]
+    }
+
+    /// Normalize: collection — total integral over all wires = 1
+    /// (unit charge collected); induction — scale so the center wire's
+    /// positive lobe integrates to 1 (keeps amplitudes comparable).
+    fn normalize(&mut self) {
+        let norm = match self.plane {
+            PlaneId::W => self.data.iter().sum::<f64>(),
+            _ => {
+                let c = self.nwires / 2;
+                self.row(c).iter().filter(|&&v| v > 0.0).sum::<f64>()
+            }
+        };
+        if norm.abs() > 0.0 {
+            let inv = 1.0 / norm;
+            self.data.iter_mut().for_each(|v| *v *= inv);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tick() -> f64 {
+        0.5 * US
+    }
+
+    #[test]
+    fn collection_normalized_to_unit_charge() {
+        let fr = FieldResponse::standard(PlaneId::W, tick());
+        let total: f64 = fr.data.iter().sum();
+        assert!((total - 1.0).abs() < 1e-9, "total={total}");
+        assert!(fr.data.iter().all(|&v| v >= 0.0));
+    }
+
+    #[test]
+    fn induction_rows_integrate_to_zero() {
+        let fr = FieldResponse::standard(PlaneId::U, tick());
+        for w in 0..fr.nwires {
+            let s: f64 = fr.row(w).iter().sum();
+            let peak = fr.row(w).iter().cloned().fold(0.0f64, |a, b| a.max(b.abs()));
+            assert!(
+                s.abs() < 1e-6 + 1e-3 * peak,
+                "wire {w}: integral {s}, peak {peak}"
+            );
+        }
+    }
+
+    #[test]
+    fn center_wire_dominates() {
+        for plane in [PlaneId::U, PlaneId::V, PlaneId::W] {
+            let fr = FieldResponse::standard(plane, tick());
+            let c = fr.nwires / 2;
+            let amp = |w: usize| fr.row(w).iter().cloned().fold(0.0f64, |a, b| a.max(b.abs()));
+            assert!(amp(c) > 2.0 * amp(c + 2), "plane {plane:?}");
+            assert!(amp(c) > 10.0 * amp(0), "plane {plane:?}");
+        }
+    }
+
+    #[test]
+    fn transverse_symmetry() {
+        let fr = FieldResponse::standard(PlaneId::W, tick());
+        let c = fr.nwires / 2;
+        for off in 1..5 {
+            let a: f64 = fr.row(c - off).iter().sum();
+            let b: f64 = fr.row(c + off).iter().sum();
+            assert!((a - b).abs() < 1e-9, "offset {off}");
+        }
+    }
+
+    #[test]
+    fn bipolar_shape_crosses_zero_once_at_center() {
+        let fr = FieldResponse::standard(PlaneId::V, tick());
+        let c = fr.nwires / 2;
+        let row = fr.row(c);
+        // positive lobe then negative lobe (derivative of gaussian, -t)
+        let imax = row
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap()
+            .0;
+        let imin = row
+            .iter()
+            .enumerate()
+            .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap()
+            .0;
+        assert!(imax < imin, "imax={imax} imin={imin}");
+    }
+
+    #[test]
+    fn response_duration_is_60us() {
+        let fr = FieldResponse::standard(PlaneId::W, tick());
+        assert_eq!(fr.nticks, 120);
+    }
+}

@@ -1,0 +1,99 @@
+//! Detector response: field response, electronics shaping, and the
+//! frequency-domain assembly used by the "FT" stage (Eq. 2).
+//!
+//! The paper's production inputs are the measured/Garfield-computed
+//! MicroBooNE response functions of refs. [9, 10]; those data files are
+//! not available here, so we build *parametrized* responses with the
+//! same structure (DESIGN.md §2): bipolar induced current on the U/V
+//! induction planes, unipolar on the W collection plane (Ramo's
+//! theorem, §2 of the paper), spatial coupling that decays over
+//! neighbouring wires, and a cold-electronics semi-Gaussian shaper.
+//! The composite `R(ω_t, ω_x)` is assembled once per plane and reused —
+//! matching WCT's pre-calculated response (Eq. 2).
+
+mod elec;
+mod field;
+mod spectrum;
+
+pub use elec::ElecResponse;
+pub use field::FieldResponse;
+pub use spectrum::ResponseSpectrum;
+
+use crate::geometry::PlaneId;
+
+/// Bundle of per-plane responses with shared electronics.
+#[derive(Clone, Debug)]
+pub struct PlaneResponse {
+    /// Which plane.
+    pub plane: PlaneId,
+    /// Field response (induced current).
+    pub field: FieldResponse,
+    /// Electronics shaping applied after the field response.
+    pub elec: ElecResponse,
+}
+
+impl PlaneResponse {
+    /// Default parametrized response for a plane.
+    pub fn standard(plane: PlaneId, tick: f64) -> Self {
+        Self {
+            plane,
+            field: FieldResponse::standard(plane, tick),
+            elec: ElecResponse::cold_default(tick),
+        }
+    }
+
+    /// Composite time-domain response per wire offset: field ⊗ elec.
+    /// Returns (nwires, nticks, row-major data); the time length is the
+    /// linear-convolution length, truncated to the field length + the
+    /// shaper tail.
+    pub fn composite(&self) -> (usize, usize, Vec<f64>) {
+        let e = self.elec.waveform();
+        let nt = self.field.nticks + e.len() - 1;
+        let mut out = vec![0.0; self.field.nwires * nt];
+        for w in 0..self.field.nwires {
+            let row = self.field.row(w);
+            let conv = crate::fft::convolve_real(row, &e);
+            out[w * nt..(w + 1) * nt].copy_from_slice(&conv);
+        }
+        (self.field.nwires, nt, out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::units::*;
+
+    #[test]
+    fn composite_shapes() {
+        let pr = PlaneResponse::standard(PlaneId::W, 0.5 * US);
+        let (nw, nt, data) = pr.composite();
+        assert_eq!(nw, pr.field.nwires);
+        assert!(nt > pr.field.nticks);
+        assert_eq!(data.len(), nw * nt);
+    }
+
+    #[test]
+    fn collection_composite_is_mostly_positive() {
+        let pr = PlaneResponse::standard(PlaneId::W, 0.5 * US);
+        let (nw, nt, data) = pr.composite();
+        let center = nw / 2;
+        let row = &data[center * nt..(center + 1) * nt];
+        let pos: f64 = row.iter().filter(|&&v| v > 0.0).sum();
+        let neg: f64 = -row.iter().filter(|&&v| v < 0.0).sum::<f64>();
+        assert!(pos > 10.0 * neg, "pos={pos} neg={neg}");
+    }
+
+    #[test]
+    fn induction_composite_is_bipolar() {
+        let pr = PlaneResponse::standard(PlaneId::U, 0.5 * US);
+        let (nw, nt, data) = pr.composite();
+        let center = nw / 2;
+        let row = &data[center * nt..(center + 1) * nt];
+        let max = row.iter().cloned().fold(f64::MIN, f64::max);
+        let min = row.iter().cloned().fold(f64::MAX, f64::min);
+        assert!(max > 0.0 && min < 0.0);
+        // roughly balanced lobes
+        assert!(min.abs() > 0.2 * max, "max={max} min={min}");
+    }
+}

@@ -1,0 +1,178 @@
+//! Frequency-domain response assembly and application — the "FT" stage.
+//!
+//! Implements Eq. 2 of the paper: `M(ω_t, ω_x) = R(ω_t, ω_x)·S(ω_t, ω_x)`
+//! with `R` assembled once from the composite (field ⊗ electronics)
+//! response and cached, exactly like WCT's pre-calculated response.
+
+use super::PlaneResponse;
+use crate::fft::{Complex, Fft2d};
+use crate::scatter::PlaneGrid;
+
+/// Pre-computed `R(ω_t, ω_x)` on a (nwires × nticks) grid, plus the
+/// 2-D FFT plan for applying it.
+pub struct ResponseSpectrum {
+    rows: usize,
+    cols: usize,
+    /// R(ω) row-major.
+    spectrum: Vec<Complex>,
+    plan: Fft2d,
+}
+
+impl ResponseSpectrum {
+    /// Assemble the spectrum for a plane response on a grid of
+    /// `nwires × nticks`.  The composite response is embedded with its
+    /// central wire at row 0 (negative offsets wrap to the top rows —
+    /// circular-convolution layout) and its time origin at column 0.
+    pub fn assemble(pr: &PlaneResponse, nwires: usize, nticks: usize) -> Self {
+        let (rw, rt, data) = pr.composite();
+        assert!(rw <= nwires, "response wider than grid");
+        assert!(rt <= nticks, "response longer than readout");
+        let center = (rw / 2) as i64;
+        let mut grid = vec![Complex::ZERO; nwires * nticks];
+        for w in 0..rw {
+            let off = w as i64 - center;
+            let row = off.rem_euclid(nwires as i64) as usize;
+            for k in 0..rt {
+                grid[row * nticks + k] = Complex::real(data[w * rt + k]);
+            }
+        }
+        let plan = Fft2d::new(nwires, nticks);
+        plan.forward(&mut grid);
+        Self {
+            rows: nwires,
+            cols: nticks,
+            spectrum: grid,
+            plan,
+        }
+    }
+
+    /// Grid shape (nwires, nticks).
+    pub fn shape(&self) -> (usize, usize) {
+        (self.rows, self.cols)
+    }
+
+    /// Raw spectrum access (for export to the JAX artifact inputs).
+    pub fn spectrum(&self) -> &[Complex] {
+        &self.spectrum
+    }
+
+    /// Apply Eq. 2 to a charge grid: FFT → multiply by R(ω) → IFFT.
+    /// Returns the measured waveform grid M(t, x) (voltage units per
+    /// the electronics gain folded into R).
+    pub fn apply(&self, grid: &PlaneGrid) -> Vec<f64> {
+        assert_eq!(
+            (grid.nwires, grid.nticks),
+            (self.rows, self.cols),
+            "grid/spectrum shape mismatch"
+        );
+        let mut buf: Vec<Complex> = grid.data.iter().map(|&v| Complex::real(v as f64)).collect();
+        self.plan.forward(&mut buf);
+        for (b, r) in buf.iter_mut().zip(self.spectrum.iter()) {
+            *b = *b * *r;
+        }
+        self.plan.inverse(&mut buf);
+        buf.into_iter().map(|c| c.re).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::geometry::PlaneId;
+    use crate::units::*;
+
+    fn small_spectrum(plane: PlaneId) -> (ResponseSpectrum, usize, usize) {
+        let pr = PlaneResponse::standard(plane, 0.5 * US);
+        let (nw, nt) = (64, 512);
+        (ResponseSpectrum::assemble(&pr, nw, nt), nw, nt)
+    }
+
+    fn impulse_grid(nw: usize, nt: usize, w: usize, t: usize, q: f32) -> PlaneGrid {
+        let mut g = PlaneGrid {
+            nwires: nw,
+            nticks: nt,
+            data: vec![0.0; nw * nt],
+        };
+        g.data[w * nt + t] = q;
+        g
+    }
+
+    #[test]
+    fn impulse_response_reproduces_composite_center() {
+        let pr = PlaneResponse::standard(PlaneId::W, 0.5 * US);
+        let (rw, rt, comp) = pr.composite();
+        let (spec, nw, nt) = small_spectrum(PlaneId::W);
+        // unit charge at wire 30, tick 100
+        let m = spec.apply(&impulse_grid(nw, nt, 30, 100, 1.0));
+        // the response's center row should appear at wire 30 shifted by
+        // 100 ticks
+        let center = rw / 2;
+        for k in 0..rt.min(nt - 100) {
+            let got = m[30 * nt + 100 + k];
+            let want = comp[center * rt + k];
+            assert!(
+                (got - want).abs() < 1e-9 * (1.0 + want.abs()),
+                "tick {k}: {got} vs {want}"
+            );
+        }
+    }
+
+    #[test]
+    fn impulse_spreads_to_neighbour_wires() {
+        let (spec, nw, nt) = small_spectrum(PlaneId::W);
+        let m = spec.apply(&impulse_grid(nw, nt, 30, 100, 1.0));
+        let peak = |w: usize| {
+            (0..nt)
+                .map(|k| m[w * nt + k].abs())
+                .fold(0.0f64, f64::max)
+        };
+        assert!(peak(31) > 0.0);
+        assert!(peak(30) > peak(31));
+        assert!(peak(31) > peak(33));
+        // far wires see nothing
+        assert!(peak(50) < 1e-6 * peak(30));
+    }
+
+    #[test]
+    fn linearity_in_charge() {
+        let (spec, nw, nt) = small_spectrum(PlaneId::U);
+        let m1 = spec.apply(&impulse_grid(nw, nt, 10, 50, 1.0));
+        let m5 = spec.apply(&impulse_grid(nw, nt, 10, 50, 5.0));
+        for (a, b) in m1.iter().zip(&m5) {
+            assert!((5.0 * a - b).abs() < 1e-9 * (1.0 + b.abs()));
+        }
+    }
+
+    #[test]
+    fn collection_charge_is_conserved_through_ft() {
+        // With the collection response normalized to unit total charge
+        // and the shaper's area folding in, the integral of M equals
+        // q * sum(R). Check consistency between two charges.
+        let (spec, nw, nt) = small_spectrum(PlaneId::W);
+        let sum = |m: &[f64]| m.iter().sum::<f64>();
+        let m1 = sum(&spec.apply(&impulse_grid(nw, nt, 20, 30, 1000.0)));
+        let m2 = sum(&spec.apply(&impulse_grid(nw, nt, 40, 200, 2000.0)));
+        assert!((2.0 * m1 - m2).abs() < 1e-6 * m2.abs().max(1.0));
+    }
+
+    #[test]
+    fn induction_integral_vanishes() {
+        let (spec, nw, nt) = small_spectrum(PlaneId::V);
+        let m = spec.apply(&impulse_grid(nw, nt, 20, 100, 1000.0));
+        let total: f64 = m.iter().sum();
+        let peak = m.iter().cloned().fold(0.0f64, |a, b| a.max(b.abs()));
+        assert!(total.abs() < 1e-3 * peak * nt as f64, "total={total} peak={peak}");
+    }
+
+    #[test]
+    #[should_panic(expected = "shape mismatch")]
+    fn shape_mismatch_panics() {
+        let (spec, _, _) = small_spectrum(PlaneId::W);
+        let g = PlaneGrid {
+            nwires: 8,
+            nticks: 8,
+            data: vec![0.0; 64],
+        };
+        let _ = spec.apply(&g);
+    }
+}

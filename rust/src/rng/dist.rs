@@ -1,0 +1,244 @@
+//! Distributions: normal (Box–Muller) and binomial.
+//!
+//! The binomial sampler is the heart of the paper's "fluctuation" step:
+//! each rasterized bin carrying a mean of `n·p` electrons receives a
+//! binomially fluctuated integer count.  `std::binomial_distribution` in
+//! the ref-CPU implementation is expensive enough to dominate the whole
+//! rasterization (Table 2); we reproduce that cost profile with an exact
+//! sampler, and the pool/approx variants used by the ported code paths.
+
+use super::UniformRng;
+
+/// One normal variate via Box–Muller (the transform the paper used to
+/// fill Kokkos' missing normal RNG, §4.3.1).  Computes two, discards one;
+/// use [`BoxMuller`] to keep both.
+pub fn normal<R: UniformRng>(rng: &mut R, mean: f64, sigma: f64) -> f64 {
+    let u1 = rng.uniform_pos();
+    let u2 = rng.uniform();
+    let r = (-2.0 * u1.ln()).sqrt();
+    mean + sigma * r * (2.0 * std::f64::consts::PI * u2).cos()
+}
+
+/// Box–Muller generator that caches the second variate of each pair.
+#[derive(Clone, Debug, Default)]
+pub struct BoxMuller {
+    cached: Option<f64>,
+}
+
+impl BoxMuller {
+    /// New generator with an empty cache.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Next standard-normal variate.
+    pub fn sample<R: UniformRng>(&mut self, rng: &mut R) -> f64 {
+        if let Some(z) = self.cached.take() {
+            return z;
+        }
+        let u1 = rng.uniform_pos();
+        let u2 = rng.uniform();
+        let r = (-2.0 * u1.ln()).sqrt();
+        let (s, c) = (2.0 * std::f64::consts::PI * u2).sin_cos();
+        self.cached = Some(r * s);
+        r * c
+    }
+}
+
+/// Exact binomial(n, p) sampler by CDF inversion.
+///
+/// Cost is O(n·p) per draw on average — *intentionally* similar to the
+/// per-draw cost anatomy of `std::binomial_distribution` for the small
+/// n (tens to thousands of electrons per bin) seen by the fluctuation
+/// step.  This is the "ref-CPU" code path.
+pub fn binomial_exact<R: UniformRng>(rng: &mut R, n: u64, p: f64) -> u64 {
+    if n == 0 || p <= 0.0 {
+        return 0;
+    }
+    if p >= 1.0 {
+        return n;
+    }
+    // Work with p <= 0.5 and mirror.
+    let (pp, flip) = if p > 0.5 { (1.0 - p, true) } else { (p, false) };
+    let q = 1.0 - pp;
+    // P(X=0) = q^n computed in log space for stability.  When it
+    // underflows (huge n·p) CDF inversion from 0 is numerically dead;
+    // fall back to the normal approximation like production binomial
+    // samplers (std's BTPE region) do.
+    let log_p0 = n as f64 * q.ln();
+    if log_p0 < -700.0 {
+        let z = normal(rng, 0.0, 1.0);
+        return binomial_normal_approx(n, p, z);
+    }
+    let mut pdf = log_p0.exp();
+    let mut cdf = pdf;
+    let u = rng.uniform();
+    let mut k: u64 = 0;
+    // Invert the CDF by walking up the pmf recurrence.
+    while u > cdf && k < n {
+        k += 1;
+        pdf *= (n - k + 1) as f64 / k as f64 * (pp / q);
+        cdf += pdf;
+        if pdf < 1e-18 && cdf > u {
+            break;
+        }
+    }
+    if flip {
+        n - k
+    } else {
+        k
+    }
+}
+
+/// Normal-approximation binomial: round(N(np, np(1-p))), clamped to
+/// [0, n].  This is what the device code paths use (one pre-computed
+/// normal variate per bin), matching the paper's pool-based fluctuation.
+pub fn binomial_normal_approx(n: u64, p: f64, z: f64) -> u64 {
+    if n == 0 || p <= 0.0 {
+        return 0;
+    }
+    if p >= 1.0 {
+        return n;
+    }
+    let mean = n as f64 * p;
+    let sigma = (n as f64 * p * (1.0 - p)).sqrt();
+    let x = (mean + sigma * z).round();
+    x.clamp(0.0, n as f64) as u64
+}
+
+/// Adaptive binomial: exact inversion when cheap/necessary
+/// (n·p or n·(1-p) below ~30), otherwise the normal approximation with an
+/// inline Box–Muller draw.  This mirrors how production WCT trades
+/// accuracy for speed and gives the ablation a third point.
+pub fn binomial<R: UniformRng>(rng: &mut R, n: u64, p: f64) -> u64 {
+    let np = n as f64 * p.min(1.0 - p);
+    if np < 30.0 {
+        binomial_exact(rng, n, p)
+    } else {
+        let z = normal(rng, 0.0, 1.0);
+        binomial_normal_approx(n, p, z)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg32;
+
+    fn moments(vals: &[f64]) -> (f64, f64) {
+        let n = vals.len() as f64;
+        let mean = vals.iter().sum::<f64>() / n;
+        let var = vals.iter().map(|v| (v - mean) * (v - mean)).sum::<f64>() / n;
+        (mean, var)
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut rng = Pcg32::seeded(10);
+        let vals: Vec<f64> = (0..200_000).map(|_| normal(&mut rng, 3.0, 2.0)).collect();
+        let (mean, var) = moments(&vals);
+        assert!((mean - 3.0).abs() < 0.02, "mean={mean}");
+        assert!((var - 4.0).abs() < 0.08, "var={var}");
+    }
+
+    #[test]
+    fn box_muller_pairs_match_moments() {
+        let mut rng = Pcg32::seeded(11);
+        let mut bm = BoxMuller::new();
+        let vals: Vec<f64> = (0..200_000).map(|_| bm.sample(&mut rng)).collect();
+        let (mean, var) = moments(&vals);
+        assert!(mean.abs() < 0.02, "mean={mean}");
+        assert!((var - 1.0).abs() < 0.02, "var={var}");
+    }
+
+    #[test]
+    fn box_muller_uses_cached_second() {
+        // Two samples should consume exactly 2 uniforms (one pair).
+        struct Counting(Pcg32, usize);
+        impl crate::rng::UniformRng for Counting {
+            fn next_u32(&mut self) -> u32 {
+                self.1 += 1;
+                self.0.next_u32()
+            }
+        }
+        let mut rng = Counting(Pcg32::seeded(1), 0);
+        let mut bm = BoxMuller::new();
+        let _ = bm.sample(&mut rng);
+        let _ = bm.sample(&mut rng);
+        // uniform() consumes 2 u32 per f64 -> 2 uniforms = 4 u32
+        assert_eq!(rng.1, 4);
+    }
+
+    #[test]
+    fn binomial_exact_edge_cases() {
+        let mut rng = Pcg32::seeded(12);
+        assert_eq!(binomial_exact(&mut rng, 0, 0.5), 0);
+        assert_eq!(binomial_exact(&mut rng, 100, 0.0), 0);
+        assert_eq!(binomial_exact(&mut rng, 100, 1.0), 100);
+        for _ in 0..100 {
+            let k = binomial_exact(&mut rng, 10, 0.3);
+            assert!(k <= 10);
+        }
+    }
+
+    #[test]
+    fn binomial_exact_moments() {
+        let mut rng = Pcg32::seeded(13);
+        let (n, p) = (50u64, 0.3);
+        let vals: Vec<f64> = (0..100_000)
+            .map(|_| binomial_exact(&mut rng, n, p) as f64)
+            .collect();
+        let (mean, var) = moments(&vals);
+        assert!((mean - 15.0).abs() < 0.1, "mean={mean}");
+        assert!((var - 10.5).abs() < 0.2, "var={var}");
+    }
+
+    #[test]
+    fn binomial_exact_mirrored_p() {
+        let mut rng = Pcg32::seeded(14);
+        let vals: Vec<f64> = (0..100_000)
+            .map(|_| binomial_exact(&mut rng, 40, 0.8) as f64)
+            .collect();
+        let (mean, var) = moments(&vals);
+        assert!((mean - 32.0).abs() < 0.1, "mean={mean}");
+        assert!((var - 6.4).abs() < 0.2, "var={var}");
+    }
+
+    #[test]
+    fn binomial_normal_approx_moments() {
+        let mut rng = Pcg32::seeded(15);
+        let (n, p) = (10_000u64, 0.5);
+        let vals: Vec<f64> = (0..50_000)
+            .map(|_| binomial_normal_approx(n, p, normal(&mut rng, 0.0, 1.0)) as f64)
+            .collect();
+        let (mean, var) = moments(&vals);
+        assert!((mean - 5000.0).abs() < 2.0, "mean={mean}");
+        assert!((var - 2500.0).abs() < 50.0, "var={var}");
+    }
+
+    #[test]
+    fn binomial_adaptive_matches_exact_regime_moments() {
+        let mut rng = Pcg32::seeded(16);
+        let vals: Vec<f64> = (0..100_000).map(|_| binomial(&mut rng, 20, 0.4) as f64).collect();
+        let (mean, var) = moments(&vals);
+        assert!((mean - 8.0).abs() < 0.05, "mean={mean}");
+        assert!((var - 4.8).abs() < 0.12, "var={var}");
+    }
+
+    #[test]
+    fn binomial_adaptive_large_n_uses_approx_and_stays_bounded() {
+        let mut rng = Pcg32::seeded(17);
+        for _ in 0..1000 {
+            let k = binomial(&mut rng, 1_000_000, 0.999);
+            assert!(k <= 1_000_000);
+            assert!(k > 990_000);
+        }
+    }
+
+    #[test]
+    fn binomial_approx_clamps() {
+        assert_eq!(binomial_normal_approx(10, 0.5, 100.0), 10);
+        assert_eq!(binomial_normal_approx(10, 0.5, -100.0), 0);
+        assert_eq!(binomial_normal_approx(0, 0.5, 1.0), 0);
+    }
+}

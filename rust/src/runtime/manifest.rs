@@ -1,0 +1,221 @@
+//! Artifact manifest parsing (`artifacts/manifest.json`).
+
+use crate::json::{parse, Value};
+use std::collections::BTreeMap;
+
+/// Grid constants baked into an artifact (must match the Rust grid).
+#[derive(Clone, Debug, PartialEq)]
+pub struct GridMeta {
+    /// Wires on the plane.
+    pub nwires: usize,
+    /// Readout ticks.
+    pub nticks: usize,
+    /// Wire pitch (mm — matches `units::MM` base).
+    pub pitch: f64,
+    /// Sample period (ns base units).
+    pub tick: f64,
+    /// Impact positions per pitch.
+    pub pitch_oversample: usize,
+    /// Sub-ticks per tick.
+    pub time_oversample: usize,
+    /// Patch pitch-bin count (P).
+    pub patch_p: usize,
+    /// Patch time-bin count (T).
+    pub patch_t: usize,
+}
+
+/// One artifact's metadata.
+#[derive(Clone, Debug)]
+pub struct ArtifactMeta {
+    /// HLO text file name (relative to the artifacts dir).
+    pub file: String,
+    /// Input tensor shapes (same order as execution inputs).
+    pub input_shapes: Vec<Vec<usize>>,
+    /// Input dtypes ("float32" | "int32").
+    pub input_dtypes: Vec<String>,
+    /// Grid constants.
+    pub grid: GridMeta,
+    /// Strategy tag ("per-depo" | "batched" | "fused" | "ft").
+    pub strategy: String,
+}
+
+/// Parsed manifest.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    /// Batch size the batched artifacts were lowered with.
+    pub batch: usize,
+    /// Pallas block size (depos per program instance).
+    pub block: usize,
+    /// Artifacts by name.
+    pub artifacts: BTreeMap<String, ArtifactMeta>,
+}
+
+impl Manifest {
+    /// Parse from JSON text.
+    pub fn parse(text: &str) -> Result<Self, String> {
+        let doc = parse(text).map_err(|e| e.to_string())?;
+        let batch = doc
+            .get("batch")
+            .and_then(Value::as_usize)
+            .ok_or("manifest missing 'batch'")?;
+        let block = doc
+            .get("block")
+            .and_then(Value::as_usize)
+            .ok_or("manifest missing 'block'")?;
+        let arts = doc
+            .get("artifacts")
+            .and_then(Value::as_object)
+            .ok_or("manifest missing 'artifacts'")?;
+        let mut artifacts = BTreeMap::new();
+        for (name, meta) in arts {
+            artifacts.insert(name.clone(), Self::parse_artifact(name, meta)?);
+        }
+        Ok(Self {
+            batch,
+            block,
+            artifacts,
+        })
+    }
+
+    fn parse_artifact(name: &str, meta: &Value) -> Result<ArtifactMeta, String> {
+        let file = meta
+            .get("file")
+            .and_then(Value::as_str)
+            .ok_or_else(|| format!("artifact {name}: missing 'file'"))?
+            .to_string();
+        let inputs = meta
+            .get("inputs")
+            .and_then(Value::as_array)
+            .ok_or_else(|| format!("artifact {name}: missing 'inputs'"))?;
+        let mut input_shapes = Vec::new();
+        let mut input_dtypes = Vec::new();
+        for inp in inputs {
+            let shape = inp
+                .get("shape")
+                .and_then(Value::as_array)
+                .ok_or_else(|| format!("artifact {name}: input missing shape"))?
+                .iter()
+                .map(|v| v.as_usize().ok_or_else(|| "bad dim".to_string()))
+                .collect::<Result<Vec<_>, _>>()?;
+            input_shapes.push(shape);
+            input_dtypes.push(
+                inp.get("dtype")
+                    .and_then(Value::as_str)
+                    .unwrap_or("float32")
+                    .to_string(),
+            );
+        }
+        let g = meta
+            .get("grid")
+            .ok_or_else(|| format!("artifact {name}: missing 'grid'"))?;
+        let gu = |k: &str| -> Result<usize, String> {
+            g.get(k)
+                .and_then(Value::as_usize)
+                .ok_or_else(|| format!("artifact {name}: grid missing '{k}'"))
+        };
+        let gf = |k: &str| -> Result<f64, String> {
+            g.get(k)
+                .and_then(Value::as_f64)
+                .ok_or_else(|| format!("artifact {name}: grid missing '{k}'"))
+        };
+        let grid = GridMeta {
+            nwires: gu("nwires")?,
+            nticks: gu("nticks")?,
+            pitch: gf("pitch")?,
+            tick: gf("tick")?,
+            pitch_oversample: gu("pitch_oversample")?,
+            time_oversample: gu("time_oversample")?,
+            patch_p: gu("patch_p")?,
+            patch_t: gu("patch_t")?,
+        };
+        let strategy = meta
+            .get("strategy")
+            .and_then(Value::as_str)
+            .unwrap_or("unknown")
+            .to_string();
+        Ok(ArtifactMeta {
+            file,
+            input_shapes,
+            input_dtypes,
+            grid,
+            strategy,
+        })
+    }
+}
+
+impl GridMeta {
+    /// Build the matching Rust grid spec.
+    pub fn grid_spec(&self) -> crate::raster::GridSpec {
+        crate::raster::GridSpec::new(
+            self.nwires,
+            self.pitch,
+            self.nticks,
+            self.tick,
+            self.pitch_oversample,
+            self.time_oversample,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "batch": 256, "block": 32,
+      "artifacts": {
+        "raster_batch_small": {
+          "file": "raster_batch_small.hlo.txt",
+          "inputs": [
+            {"shape": [256, 5], "dtype": "float32"},
+            {"shape": [256, 2], "dtype": "int32"},
+            {"shape": [256, 20, 20], "dtype": "float32"}
+          ],
+          "grid": {"nwires": 560, "nticks": 1024, "pitch": 3.0,
+                   "tick": 500.0, "pitch_oversample": 5,
+                   "time_oversample": 2, "patch_p": 20, "patch_t": 20},
+          "strategy": "batched"
+        }
+      }
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.batch, 256);
+        assert_eq!(m.block, 32);
+        let a = &m.artifacts["raster_batch_small"];
+        assert_eq!(a.file, "raster_batch_small.hlo.txt");
+        assert_eq!(a.input_shapes.len(), 3);
+        assert_eq!(a.input_shapes[2], vec![256, 20, 20]);
+        assert_eq!(a.input_dtypes[1], "int32");
+        assert_eq!(a.grid.nwires, 560);
+        assert_eq!(a.strategy, "batched");
+    }
+
+    #[test]
+    fn grid_spec_roundtrip() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        let spec = m.artifacts["raster_batch_small"].grid.grid_spec();
+        assert_eq!(spec.coarse_shape(), (560, 1024));
+        assert_eq!(spec.fine_shape(), (2800, 2048));
+    }
+
+    #[test]
+    fn rejects_incomplete() {
+        assert!(Manifest::parse("{}").is_err());
+        assert!(Manifest::parse(r#"{"batch":1,"block":1}"#).is_err());
+        assert!(Manifest::parse(r#"{"batch":1,"block":1,"artifacts":{"x":{}}}"#).is_err());
+    }
+
+    #[test]
+    fn parses_real_manifest_if_built() {
+        // When `make artifacts` has run, validate the real manifest.
+        let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts/manifest.json");
+        if let Ok(text) = std::fs::read_to_string(path) {
+            let m = Manifest::parse(&text).unwrap();
+            assert!(m.artifacts.contains_key("raster_batch_small"));
+            assert!(m.artifacts.contains_key("fused_pipeline_bench"));
+        }
+    }
+}

@@ -1,0 +1,210 @@
+//! PJRT runtime: load AOT artifacts and execute them from Rust.
+//!
+//! This is the "device" of our reproduction (DESIGN.md §2): HLO text
+//! produced once by `python/compile/aot.py` is compiled onto the PJRT
+//! CPU client and executed from the L3 hot path.  Python never runs at
+//! request time.
+//!
+//! The timing instrumentation deliberately mirrors the paper's
+//! h→d / kernel / d→h decomposition (Table 2 annotates "incl. h->d" /
+//! "incl. d->h"): literal construction is the host→device transfer
+//! analog, `execute` the kernel, `to_literal_sync`+`to_vec` the
+//! device→host read-back.
+
+mod manifest;
+
+pub use manifest::{ArtifactMeta, GridMeta, Manifest};
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+use anyhow::{anyhow, Context, Result};
+
+/// Cumulative transfer/execute timing (nanoseconds) and call counts.
+#[derive(Debug, Default)]
+pub struct RuntimeStats {
+    /// Host→device analog: literal construction time.
+    pub h2d_ns: AtomicU64,
+    /// Kernel execution time.
+    pub exec_ns: AtomicU64,
+    /// Device→host analog: literal fetch + conversion time.
+    pub d2h_ns: AtomicU64,
+    /// Number of `execute` dispatches.
+    pub dispatches: AtomicU64,
+}
+
+impl RuntimeStats {
+    /// Snapshot in seconds: (h2d, exec, d2h, dispatches).
+    pub fn snapshot(&self) -> (f64, f64, f64, u64) {
+        (
+            self.h2d_ns.load(Ordering::Relaxed) as f64 / 1e9,
+            self.exec_ns.load(Ordering::Relaxed) as f64 / 1e9,
+            self.d2h_ns.load(Ordering::Relaxed) as f64 / 1e9,
+            self.dispatches.load(Ordering::Relaxed),
+        )
+    }
+
+    /// Zero all counters.
+    pub fn reset(&self) {
+        self.h2d_ns.store(0, Ordering::Relaxed);
+        self.exec_ns.store(0, Ordering::Relaxed);
+        self.d2h_ns.store(0, Ordering::Relaxed);
+        self.dispatches.store(0, Ordering::Relaxed);
+    }
+}
+
+/// Typed tensor input for an artifact execution.
+pub enum TensorInput<'a> {
+    /// f32 tensor with shape.
+    F32(&'a [f32], Vec<i64>),
+    /// i32 tensor with shape.
+    I32(&'a [i32], Vec<i64>),
+}
+
+/// The artifact runtime: PJRT client + compiled-executable cache.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    dir: PathBuf,
+    exes: Mutex<HashMap<String, std::sync::Arc<xla::PjRtLoadedExecutable>>>,
+    /// Timing counters.
+    pub stats: RuntimeStats,
+}
+
+// SAFETY: the PJRT CPU client (TfrtCpuClient) and its loaded
+// executables are thread-safe by the PJRT C API contract; the only
+// mutable Rust-side state is the executable cache, which is behind a
+// Mutex.  This lets backends holding an `Arc<Runtime>` move across the
+// dataflow engine's node threads.
+unsafe impl Send for Runtime {}
+unsafe impl Sync for Runtime {}
+
+impl Runtime {
+    /// Open an artifacts directory (must contain `manifest.json`).
+    pub fn open(dir: &Path) -> Result<Self> {
+        let manifest_path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&manifest_path)
+            .with_context(|| format!("reading {}", manifest_path.display()))?;
+        let manifest = Manifest::parse(&text).map_err(|e| anyhow!(e))?;
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Self {
+            client,
+            manifest,
+            dir: dir.to_path_buf(),
+            exes: Mutex::new(HashMap::new()),
+            stats: RuntimeStats::default(),
+        })
+    }
+
+    /// The manifest describing available artifacts.
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// PJRT platform name (for run reports).
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile (or fetch from cache) an artifact by name.
+    fn executable(&self, name: &str) -> Result<std::sync::Arc<xla::PjRtLoadedExecutable>> {
+        if let Some(exe) = self.exes.lock().unwrap().get(name) {
+            return Ok(exe.clone());
+        }
+        let meta = self
+            .manifest
+            .artifacts
+            .get(name)
+            .ok_or_else(|| anyhow!("artifact '{name}' not in manifest"))?;
+        let path = self.dir.join(&meta.file);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = std::sync::Arc::new(self.client.compile(&comp)?);
+        self.exes
+            .lock()
+            .unwrap()
+            .insert(name.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Pre-compile an artifact (so benchmarks exclude compile time).
+    pub fn warmup(&self, name: &str) -> Result<()> {
+        self.executable(name).map(|_| ())
+    }
+
+    /// Execute an artifact with the given inputs; returns the flattened
+    /// f32 output of the (single-element) result tuple.
+    pub fn execute_f32(&self, name: &str, inputs: &[TensorInput<'_>]) -> Result<Vec<f32>> {
+        let exe = self.executable(name)?;
+
+        let t0 = Instant::now();
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|inp| -> Result<xla::Literal> {
+                let lit = match inp {
+                    TensorInput::F32(data, shape) => {
+                        xla::Literal::vec1(data).reshape(shape)?
+                    }
+                    TensorInput::I32(data, shape) => {
+                        xla::Literal::vec1(data).reshape(shape)?
+                    }
+                };
+                Ok(lit)
+            })
+            .collect::<Result<_>>()?;
+        let t1 = Instant::now();
+
+        let result = exe.execute::<xla::Literal>(&literals)?;
+        let t2 = Instant::now();
+
+        let lit = result[0][0].to_literal_sync()?;
+        let out = lit.to_tuple1()?;
+        let values = out.to_vec::<f32>()?;
+        let t3 = Instant::now();
+
+        self.stats
+            .h2d_ns
+            .fetch_add((t1 - t0).as_nanos() as u64, Ordering::Relaxed);
+        self.stats
+            .exec_ns
+            .fetch_add((t2 - t1).as_nanos() as u64, Ordering::Relaxed);
+        self.stats
+            .d2h_ns
+            .fetch_add((t3 - t2).as_nanos() as u64, Ordering::Relaxed);
+        self.stats.dispatches.fetch_add(1, Ordering::Relaxed);
+        Ok(values)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Runtime integration tests (against real artifacts) live in
+    // rust/tests/artifacts.rs; here we only test the pieces that do
+    // not need a built artifacts/ tree.
+
+    #[test]
+    fn stats_snapshot_and_reset() {
+        let s = RuntimeStats::default();
+        s.h2d_ns.store(2_000_000_000, Ordering::Relaxed);
+        s.dispatches.store(3, Ordering::Relaxed);
+        let (h2d, exec, _, n) = s.snapshot();
+        assert_eq!(h2d, 2.0);
+        assert_eq!(exec, 0.0);
+        assert_eq!(n, 3);
+        s.reset();
+        assert_eq!(s.snapshot().3, 0);
+    }
+
+    #[test]
+    fn open_missing_dir_errors() {
+        let r = Runtime::open(Path::new("/nonexistent/artifacts"));
+        assert!(r.is_err());
+    }
+}

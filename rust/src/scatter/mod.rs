@@ -1,0 +1,316 @@
+//! Scatter-add: accumulate patches onto the plane grid.
+//!
+//! The second sub-step of S(t,x) construction (§2.1.1: "add up all the
+//! patches to a large grid (~10k×10k)") and the subject of the paper's
+//! Figure 5, which benchmarks `Kokkos::atomic_add` scaling for this
+//! operation.  Three implementations:
+//!
+//! * [`scatter_serial`] — the reference, one thread, no atomics.
+//! * [`scatter_atomic`] — `parallel_for` over patches with CAS-loop
+//!   float atomic adds into the shared grid (the Figure-5 subject).
+//! * [`scatter_tiled`] — per-thread private accumulation over disjoint
+//!   *time* stripes with a final reduction; the atomics-free ablation.
+//!
+//! All fold the fine (oversampled) patch bins onto the coarse
+//! (wire, tick) grid via [`GridSpec::wire_of`] / [`GridSpec::tick_of`].
+
+use crate::parallel::{as_atomic_f32, parallel_for, ExecPolicy, ThreadPool};
+use crate::raster::{GridSpec, Patch};
+
+/// The coarse accumulation grid of one plane: row-major
+/// `[nwires][nticks]` f32.
+#[derive(Clone, Debug)]
+pub struct PlaneGrid {
+    /// Wires (rows).
+    pub nwires: usize,
+    /// Ticks (columns).
+    pub nticks: usize,
+    /// Row-major charge values (electrons).
+    pub data: Vec<f32>,
+}
+
+impl PlaneGrid {
+    /// Zeroed grid for a spec's coarse shape.
+    pub fn for_spec(spec: &GridSpec) -> Self {
+        let (nwires, nticks) = spec.coarse_shape();
+        Self {
+            nwires,
+            nticks,
+            data: vec![0.0; nwires * nticks],
+        }
+    }
+
+    /// Total charge on the grid.
+    pub fn total(&self) -> f64 {
+        self.data.iter().map(|&v| v as f64).sum()
+    }
+
+    /// Value at (wire, tick).
+    pub fn at(&self, w: usize, t: usize) -> f32 {
+        self.data[w * self.nticks + t]
+    }
+
+    /// Zero all bins (for benchmark repetitions).
+    pub fn clear(&mut self) {
+        self.data.iter_mut().for_each(|v| *v = 0.0);
+    }
+}
+
+/// Serial scatter-add of patches onto the grid.
+pub fn scatter_serial(grid: &mut PlaneGrid, spec: &GridSpec, patches: &[Patch]) {
+    for patch in patches {
+        scatter_one(grid.nticks, &mut grid.data, spec, patch);
+    }
+}
+
+fn scatter_one(nticks: usize, data: &mut [f32], spec: &GridSpec, patch: &Patch) {
+    for p in 0..patch.np {
+        let Some(w) = spec.wire_of(patch.pbin0 + p as i64) else {
+            continue;
+        };
+        let row = &mut data[w * nticks..(w + 1) * nticks];
+        for t in 0..patch.nt {
+            let Some(k) = spec.tick_of(patch.tbin0 + t as i64) else {
+                continue;
+            };
+            row[k] += patch.values[p * patch.nt + t];
+        }
+    }
+}
+
+/// Parallel scatter-add using float atomics — `Kokkos::atomic_add`
+/// analog (Figure 5).  Patches are distributed over pool workers; every
+/// bin update is a CAS-loop atomic add into the shared grid.
+pub fn scatter_atomic(
+    grid: &mut PlaneGrid,
+    spec: &GridSpec,
+    patches: &[Patch],
+    pool: &ThreadPool,
+    policy: ExecPolicy,
+) {
+    let nticks = grid.nticks;
+    let atoms = as_atomic_f32(&mut grid.data);
+    parallel_for(pool, policy, patches.len(), 8, |range| {
+        for patch in &patches[range] {
+            for p in 0..patch.np {
+                let Some(w) = spec.wire_of(patch.pbin0 + p as i64) else {
+                    continue;
+                };
+                for t in 0..patch.nt {
+                    let Some(k) = spec.tick_of(patch.tbin0 + t as i64) else {
+                        continue;
+                    };
+                    atoms[w * nticks + k].fetch_add(patch.values[p * patch.nt + t]);
+                }
+            }
+        }
+    });
+}
+
+/// Atomics-free parallel scatter: workers own disjoint *tick stripes*
+/// of the grid; every worker scans all patches but only writes bins in
+/// its stripe.  Trades redundant patch scans for zero contention — the
+/// ablation point DESIGN.md §6 calls out.
+pub fn scatter_tiled(
+    grid: &mut PlaneGrid,
+    spec: &GridSpec,
+    patches: &[Patch],
+    pool: &ThreadPool,
+    policy: ExecPolicy,
+) {
+    let nstripes = policy.concurrency();
+    if nstripes <= 1 {
+        scatter_serial(grid, spec, patches);
+        return;
+    }
+    let nticks = grid.nticks;
+    let nwires = grid.nwires;
+    let stripe = nticks.div_ceil(nstripes);
+    let ptr = SendPtr(grid.data.as_mut_ptr());
+    parallel_for(pool, policy, nstripes, 1, |range| {
+        for s in range {
+            let t_lo = s * stripe;
+            let t_hi = ((s + 1) * stripe).min(nticks);
+            if t_lo >= t_hi {
+                continue;
+            }
+            // SAFETY: each stripe worker writes only bins whose tick
+            // index lies in its disjoint [t_lo, t_hi) range, so no two
+            // workers touch the same element.
+            let data = unsafe { std::slice::from_raw_parts_mut(ptr.get(), nwires * nticks) };
+            for patch in patches {
+                for t in 0..patch.nt {
+                    let Some(k) = spec.tick_of(patch.tbin0 + t as i64) else {
+                        continue;
+                    };
+                    if k < t_lo || k >= t_hi {
+                        continue;
+                    }
+                    for p in 0..patch.np {
+                        let Some(w) = spec.wire_of(patch.pbin0 + p as i64) else {
+                            continue;
+                        };
+                        data[w * nticks + k] += patch.values[p * patch.nt + t];
+                    }
+                }
+            }
+        }
+    });
+}
+
+struct SendPtr(*mut f32);
+impl SendPtr {
+    fn get(&self) -> *mut f32 {
+        self.0
+    }
+}
+unsafe impl Send for SendPtr {}
+unsafe impl Sync for SendPtr {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::units::*;
+
+    fn spec() -> GridSpec {
+        GridSpec::new(20, 3.0 * MM, 32, 0.5 * US, 4, 2)
+    }
+
+    fn patch(pbin0: i64, tbin0: i64, np: usize, nt: usize, val: f32) -> Patch {
+        Patch {
+            pbin0,
+            tbin0,
+            np,
+            nt,
+            values: vec![val; np * nt],
+        }
+    }
+
+    #[test]
+    fn serial_folds_fine_bins() {
+        let s = spec();
+        let mut g = PlaneGrid::for_spec(&s);
+        // one patch covering exactly wire 0's 4 fine bins x tick 0's 2
+        let p = patch(0, 0, 4, 2, 1.0);
+        scatter_serial(&mut g, &s, &[p]);
+        assert_eq!(g.at(0, 0), 8.0);
+        assert_eq!(g.total(), 8.0);
+    }
+
+    #[test]
+    fn serial_clips_negative_bins() {
+        let s = spec();
+        let mut g = PlaneGrid::for_spec(&s);
+        let p = patch(-2, -1, 4, 3, 1.0);
+        scatter_serial(&mut g, &s, &[p]);
+        // only fine bins >= 0 accumulate: 2 pitch x 2 time
+        assert_eq!(g.total(), 4.0);
+        assert_eq!(g.at(0, 0), 4.0);
+    }
+
+    #[test]
+    fn serial_clips_past_end() {
+        let s = spec();
+        let (fp, ft) = s.fine_shape();
+        let mut g = PlaneGrid::for_spec(&s);
+        let p = patch(fp as i64 - 2, ft as i64 - 1, 4, 3, 1.0);
+        scatter_serial(&mut g, &s, &[p]);
+        assert_eq!(g.total(), 2.0);
+    }
+
+    #[test]
+    fn atomic_matches_serial() {
+        let s = spec();
+        let pool = ThreadPool::new(4);
+        let patches: Vec<Patch> = (0..200)
+            .map(|i| patch((i % 70) as i64, (i % 50) as i64, 5, 7, 0.5 + (i % 3) as f32))
+            .collect();
+        let mut serial = PlaneGrid::for_spec(&s);
+        scatter_serial(&mut serial, &s, &patches);
+        let mut atomic = PlaneGrid::for_spec(&s);
+        scatter_atomic(&mut atomic, &s, &patches, &pool, ExecPolicy::Threads(4));
+        for (a, b) in serial.data.iter().zip(&atomic.data) {
+            assert!((a - b).abs() < 1e-3, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn tiled_matches_serial() {
+        let s = spec();
+        let pool = ThreadPool::new(4);
+        let patches: Vec<Patch> = (0..100)
+            .map(|i| patch((i % 60) as i64, (i % 40) as i64, 6, 5, 1.0))
+            .collect();
+        let mut serial = PlaneGrid::for_spec(&s);
+        scatter_serial(&mut serial, &s, &patches);
+        let mut tiled = PlaneGrid::for_spec(&s);
+        scatter_tiled(&mut tiled, &s, &patches, &pool, ExecPolicy::Threads(4));
+        for (a, b) in serial.data.iter().zip(&tiled.data) {
+            assert!((a - b).abs() < 1e-3, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn tiled_serial_policy_falls_back() {
+        let s = spec();
+        let pool = ThreadPool::new(2);
+        let patches = vec![patch(0, 0, 4, 2, 1.0)];
+        let mut g = PlaneGrid::for_spec(&s);
+        scatter_tiled(&mut g, &s, &patches, &pool, ExecPolicy::Serial);
+        assert_eq!(g.total(), 8.0);
+    }
+
+    #[test]
+    fn charge_conserved_for_in_bounds_patches() {
+        let s = spec();
+        let patches: Vec<Patch> = (0..50)
+            .map(|i| patch(4 + (i % 50) as i64, 2 + (i % 30) as i64, 4, 6, 2.0))
+            .collect();
+        let expect: f64 = patches.iter().map(|p| p.total()).sum();
+        let mut g = PlaneGrid::for_spec(&s);
+        scatter_serial(&mut g, &s, &patches);
+        assert!((g.total() - expect).abs() < 1e-6 * expect);
+    }
+
+    #[test]
+    fn clear_resets() {
+        let s = spec();
+        let mut g = PlaneGrid::for_spec(&s);
+        scatter_serial(&mut g, &s, &[patch(0, 0, 2, 2, 1.0)]);
+        assert!(g.total() > 0.0);
+        g.clear();
+        assert_eq!(g.total(), 0.0);
+    }
+
+    #[test]
+    fn property_scatter_equivalence() {
+        crate::testing::forall("atomic == serial scatter", 20, |g| {
+            let s = spec();
+            let pool = ThreadPool::new(3);
+            let n = g.usize_in(1..60);
+            let patches: Vec<Patch> = (0..n)
+                .map(|i| {
+                    let np = 1 + (i % 7);
+                    let nt = 1 + (i % 9);
+                    Patch {
+                        pbin0: (i % 90) as i64 - 5,
+                        tbin0: (i % 70) as i64 - 3,
+                        np,
+                        nt,
+                        values: (0..np * nt).map(|k| (k % 5) as f32 * 0.25).collect(),
+                    }
+                })
+                .collect();
+            let mut a = PlaneGrid::for_spec(&s);
+            scatter_serial(&mut a, &s, &patches);
+            let mut b = PlaneGrid::for_spec(&s);
+            scatter_atomic(&mut b, &s, &patches, &pool, ExecPolicy::Threads(3));
+            let close = a
+                .data
+                .iter()
+                .zip(&b.data)
+                .all(|(x, y)| (x - y).abs() < 1e-3);
+            g.assert(close, "grids differ");
+        });
+    }
+}

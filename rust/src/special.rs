@@ -1,0 +1,167 @@
+//! Special functions needed by the simulation (std has no `erf`).
+//!
+//! `erf`/`erfc` use the rational Chebyshev-style approximation from
+//! Numerical Recipes (`erfc` with fractional error < 1.2e-7 everywhere),
+//! which is ample for charge-fraction weights; the Gaussian bin-integral
+//! helper is the primitive the rasterizer's "2D sampling" step is built
+//! from.
+
+/// Complementary error function, |fractional error| < 1.2e-7.
+pub fn erfc(x: f64) -> f64 {
+    let z = x.abs();
+    let t = 2.0 / (2.0 + z);
+    let ty = 4.0 * t - 2.0;
+    // Chebyshev coefficients (Numerical Recipes 3rd ed., erfc_cheb).
+    const COF: [f64; 28] = [
+        -1.3026537197817094,
+        6.4196979235649026e-1,
+        1.9476473204185836e-2,
+        -9.561514786808631e-3,
+        -9.46595344482036e-4,
+        3.66839497852761e-4,
+        4.2523324806907e-5,
+        -2.0278578112534e-5,
+        -1.624290004647e-6,
+        1.303655835580e-6,
+        1.5626441722e-8,
+        -8.5238095915e-8,
+        6.529054439e-9,
+        5.059343495e-9,
+        -9.91364156e-10,
+        -2.27365122e-10,
+        9.6467911e-11,
+        2.394038e-12,
+        -6.886027e-12,
+        8.94487e-13,
+        3.13092e-13,
+        -1.12708e-13,
+        3.81e-16,
+        7.106e-15,
+        -1.523e-15,
+        -9.4e-17,
+        1.21e-16,
+        -2.8e-17,
+    ];
+    let mut d = 0.0;
+    let mut dd = 0.0;
+    for &c in COF.iter().rev().take(COF.len() - 1) {
+        let tmp = d;
+        d = ty * d - dd + c;
+        dd = tmp;
+    }
+    let ans = t * (-z * z + 0.5 * (COF[0] + ty * d) - dd).exp();
+    if x >= 0.0 {
+        ans
+    } else {
+        2.0 - ans
+    }
+}
+
+/// Error function.
+pub fn erf(x: f64) -> f64 {
+    1.0 - erfc(x)
+}
+
+/// Standard normal CDF Φ(x).
+pub fn norm_cdf(x: f64) -> f64 {
+    0.5 * erfc(-x * std::f64::consts::FRAC_1_SQRT_2)
+}
+
+/// Integral of a Gaussian N(mu, sigma) over [a, b] — the probability
+/// mass a rasterized bin receives.
+pub fn gauss_bin_integral(mu: f64, sigma: f64, a: f64, b: f64) -> f64 {
+    debug_assert!(b >= a);
+    if sigma <= 0.0 {
+        // Degenerate: all mass at mu.
+        return if mu >= a && mu < b { 1.0 } else { 0.0 };
+    }
+    let inv = 1.0 / (sigma * std::f64::consts::SQRT_2);
+    0.5 * (erf((b - mu) * inv) - erf((a - mu) * inv))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn erf_known_values() {
+        // Reference values from tables.
+        let cases = [
+            (0.0, 0.0),
+            (0.5, 0.5204998778),
+            (1.0, 0.8427007929),
+            (2.0, 0.9953222650),
+            (3.0, 0.9999779095),
+            (-1.0, -0.8427007929),
+        ];
+        for (x, want) in cases {
+            let got = erf(x);
+            assert!((got - want).abs() < 2e-7, "erf({x}) = {got}, want {want}");
+        }
+    }
+
+    #[test]
+    fn erfc_complements_erf() {
+        for i in -40..=40 {
+            let x = i as f64 * 0.1;
+            assert!((erf(x) + erfc(x) - 1.0).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn erf_is_odd() {
+        for i in 0..50 {
+            let x = i as f64 * 0.07;
+            assert!((erf(x) + erf(-x)).abs() < 2e-7);
+        }
+    }
+
+    #[test]
+    fn erfc_tails() {
+        assert!(erfc(6.0) < 1e-16);
+        assert!((erfc(-6.0) - 2.0).abs() < 1e-15);
+    }
+
+    #[test]
+    fn norm_cdf_values() {
+        assert!((norm_cdf(0.0) - 0.5).abs() < 1e-12);
+        assert!((norm_cdf(1.6448536269514722) - 0.95).abs() < 1e-7);
+        assert!((norm_cdf(-1.959963984540054) - 0.025).abs() < 1e-7);
+    }
+
+    #[test]
+    fn gauss_integral_total_mass() {
+        let total = gauss_bin_integral(0.0, 1.0, -10.0, 10.0);
+        assert!((total - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn gauss_integral_symmetric_halves() {
+        let left = gauss_bin_integral(0.0, 2.0, -20.0, 0.0);
+        let right = gauss_bin_integral(0.0, 2.0, 0.0, 20.0);
+        assert!((left - 0.5).abs() < 1e-9);
+        assert!((right - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn gauss_integral_degenerate_sigma() {
+        assert_eq!(gauss_bin_integral(0.5, 0.0, 0.0, 1.0), 1.0);
+        assert_eq!(gauss_bin_integral(1.5, 0.0, 0.0, 1.0), 0.0);
+    }
+
+    #[test]
+    fn property_bin_integrals_partition() {
+        crate::testing::forall("gauss bin integrals sum to ~1", 100, |g| {
+            let mu = g.f64_in(-5.0..5.0);
+            let sigma = g.f64_in(0.01..3.0);
+            let n = g.usize_in(10..200);
+            let lo = mu - 8.0 * sigma;
+            let hi = mu + 8.0 * sigma;
+            let w = (hi - lo) / n as f64;
+            let total: f64 = (0..n)
+                .map(|i| gauss_bin_integral(mu, sigma, lo + i as f64 * w, lo + (i + 1) as f64 * w))
+                .sum();
+            g.assert_close(total, 1.0, 1e-6, "partition sums to 1");
+        });
+    }
+}

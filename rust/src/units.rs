@@ -1,0 +1,210 @@
+//! Wire-Cell style system of units.
+//!
+//! The Wire-Cell Toolkit (and this reproduction) expresses every physical
+//! quantity as a plain `f64` in a coherent unit system, mirroring the
+//! CLHEP/Geant4 convention used by the original C++ code base:
+//!
+//! * length:   millimeter (`MM` = 1.0)
+//! * time:     nanosecond (`NS` = 1.0)
+//! * energy:   mega-electron-volt (`MEV` = 1.0)
+//! * charge:   positron charge (`EPLUS` = 1.0)
+//!
+//! Every other unit is defined as a multiple of these base units.  A value
+//! is *stored* in the base system and *expressed* in a unit by dividing:
+//!
+//! ```
+//! use wirecell::units::*;
+//! let drift_speed = 1.6 * MM / US;       // store
+//! let in_cm_per_us = drift_speed / (CM / US);   // express
+//! assert!((in_cm_per_us - 0.16).abs() < 1e-12);
+//! ```
+
+#![allow(clippy::excessive_precision)]
+
+// ---------------------------------------------------------------- length
+/// Millimeter — base length unit.
+pub const MM: f64 = 1.0;
+/// Centimeter.
+pub const CM: f64 = 10.0 * MM;
+/// Meter.
+pub const M: f64 = 1000.0 * MM;
+/// Kilometer.
+pub const KM: f64 = 1000.0 * M;
+/// Micrometer.
+pub const UM: f64 = 1e-3 * MM;
+/// Nanometer.
+pub const NM: f64 = 1e-6 * MM;
+
+// ------------------------------------------------------------------ time
+/// Nanosecond — base time unit.
+pub const NS: f64 = 1.0;
+/// Microsecond.
+pub const US: f64 = 1000.0 * NS;
+/// Millisecond.
+pub const MS: f64 = 1e6 * NS;
+/// Second.
+pub const S: f64 = 1e9 * NS;
+
+// ---------------------------------------------------------------- energy
+/// Mega-electron-volt — base energy unit.
+pub const MEV: f64 = 1.0;
+/// Electron-volt.
+pub const EV: f64 = 1e-6 * MEV;
+/// Kilo-electron-volt.
+pub const KEV: f64 = 1e-3 * MEV;
+/// Giga-electron-volt.
+pub const GEV: f64 = 1e3 * MEV;
+
+// ---------------------------------------------------------------- charge
+/// Charge of a positron — base charge unit.
+pub const EPLUS: f64 = 1.0;
+/// Coulomb expressed in positron charges.
+pub const COULOMB: f64 = EPLUS / 1.602_176_634e-19;
+/// Femtocoulomb — the natural scale of LArTPC wire signals.
+pub const FC: f64 = 1e-15 * COULOMB;
+/// Picocoulomb.
+pub const PC: f64 = 1e-12 * COULOMB;
+
+// --------------------------------------------------------------- voltage
+/// Megavolt — coherent with MeV / eplus.
+pub const MEGAVOLT: f64 = MEV / EPLUS;
+/// Volt.
+pub const VOLT: f64 = 1e-6 * MEGAVOLT;
+/// Kilovolt.
+pub const KILOVOLT: f64 = 1e-3 * MEGAVOLT;
+/// Millivolt.
+pub const MILLIVOLT: f64 = 1e-3 * VOLT;
+
+// ----------------------------------------------------------------- angle
+/// Radian — base angle unit.
+pub const RADIAN: f64 = 1.0;
+/// Degree.
+pub const DEGREE: f64 = std::f64::consts::PI / 180.0 * RADIAN;
+
+// ------------------------------------------------------------- frequency
+/// Hertz (cycles per second) in the base system.
+pub const HZ: f64 = 1.0 / S;
+/// Kilohertz.
+pub const KHZ: f64 = 1e3 * HZ;
+/// Megahertz.
+pub const MHZ: f64 = 1e6 * HZ;
+
+// ------------------------------------------------------- physical consts
+/// Physical constants used by the simulation, in the base unit system.
+pub mod consts {
+    use super::*;
+
+    /// Mean ionization energy to create one electron–ion pair in LAr.
+    /// W_i = 23.6 eV per pair.
+    pub const W_ION: f64 = 23.6 * EV;
+
+    /// Nominal electron drift speed at 500 V/cm, 87 K: ~1.6 mm/µs.
+    pub const DRIFT_SPEED: f64 = 1.6 * MM / US;
+
+    /// Longitudinal diffusion coefficient D_L ≈ 7.2 cm²/s
+    /// (MicroBooNE-like value).
+    pub const DIFFUSION_L: f64 = 7.2 * CM * CM / S;
+
+    /// Transverse diffusion coefficient D_T ≈ 12.0 cm²/s.
+    pub const DIFFUSION_T: f64 = 12.0 * CM * CM / S;
+
+    /// Electron lifetime in purified LAr (optimistic): 8 ms.
+    pub const ELECTRON_LIFETIME: f64 = 8.0 * MS;
+
+    /// Liquid argon density, 1.396 g/cm³ — expressed here only through
+    /// dE/dx products so we keep it as a plain number with its own tag.
+    pub const LAR_DENSITY_G_PER_CM3: f64 = 1.396;
+
+    /// MIP most-probable dE/dx in LAr ≈ 1.7 MeV/cm (restricted), mean 2.1.
+    pub const MIP_DEDX_MPV: f64 = 1.7 * MEV / CM;
+    /// MIP mean dE/dx.
+    pub const MIP_DEDX_MEAN: f64 = 2.1 * MEV / CM;
+
+    /// Nominal LAr electric field for recombination models: 500 V/cm.
+    pub const NOMINAL_EFIELD: f64 = 500.0 * VOLT / CM;
+}
+
+/// Format a value expressed in `unit` with the given suffix, for reports.
+pub fn with_unit(value: f64, unit: f64, suffix: &str) -> String {
+    format!("{:.4} {}", value / unit, suffix)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn base_units_are_unity() {
+        assert_eq!(MM, 1.0);
+        assert_eq!(NS, 1.0);
+        assert_eq!(MEV, 1.0);
+        assert_eq!(EPLUS, 1.0);
+    }
+
+    #[test]
+    fn length_ratios() {
+        assert_eq!(CM / MM, 10.0);
+        assert_eq!(M / CM, 100.0);
+        assert_eq!(KM / M, 1000.0);
+        assert!((UM / MM - 1e-3).abs() < 1e-18);
+    }
+
+    #[test]
+    fn time_ratios() {
+        assert_eq!(US / NS, 1000.0);
+        assert_eq!(S / MS, 1000.0);
+        assert_eq!(MS / US, 1000.0);
+    }
+
+    #[test]
+    fn energy_ratios() {
+        assert!((MEV / EV - 1e6).abs() < 1e-6);
+        assert_eq!(GEV / MEV, 1000.0);
+    }
+
+    #[test]
+    fn charge_conversions() {
+        // 1 fC ≈ 6241.5 electrons
+        let electrons_per_fc = FC / EPLUS;
+        assert!((electrons_per_fc - 6241.509).abs() < 0.1);
+    }
+
+    #[test]
+    fn drift_speed_expression() {
+        let v = consts::DRIFT_SPEED;
+        assert!((v / (CM / US) - 0.16).abs() < 1e-12);
+        assert!((v / (M / MS) - 1.6).abs() < 1e-12);
+    }
+
+    #[test]
+    fn w_ion_yield() {
+        // A 1 MeV deposit should liberate ~42k electrons.
+        let n = 1.0 * MEV / consts::W_ION;
+        assert!((n - 42372.9).abs() < 1.0);
+    }
+
+    #[test]
+    fn angle_units() {
+        assert!((90.0 * DEGREE - std::f64::consts::FRAC_PI_2).abs() < 1e-12);
+    }
+
+    #[test]
+    fn frequency_units() {
+        // 2 MHz sampling -> 500 ns period
+        let period = 1.0 / (2.0 * MHZ);
+        assert!((period / NS - 500.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn with_unit_formats() {
+        let s = with_unit(3.0 * CM, MM, "mm");
+        assert_eq!(s, "30.0000 mm");
+    }
+
+    #[test]
+    fn diffusion_sigma_scale() {
+        // sigma after 1 ms drift: sqrt(2 * D_L * t) ~ 1.2 mm for D_L=7.2cm^2/s
+        let sigma = (2.0 * consts::DIFFUSION_L * MS).sqrt();
+        assert!(sigma / MM > 1.0 && sigma / MM < 1.5, "sigma={} mm", sigma / MM);
+    }
+}

@@ -1,0 +1,317 @@
+//! Cross-language integration: the AOT artifacts executed through PJRT
+//! must agree with the Rust reference implementations bin-by-bin.
+//!
+//! These tests need `make artifacts` to have run; they skip (with a
+//! note) when `artifacts/manifest.json` is absent so plain `cargo test`
+//! stays green in a fresh checkout.
+
+use std::path::Path;
+use wirecell::raster::GridSpec;
+use wirecell::rng::{binomial_normal_approx, Pcg32, UniformRng};
+use wirecell::runtime::{Runtime, TensorInput};
+use wirecell::special::gauss_bin_integral;
+
+const P: usize = 20;
+const T: usize = 20;
+
+fn runtime() -> Option<Runtime> {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping artifact test: run `make artifacts` first");
+        return None;
+    }
+    Some(Runtime::open(&dir).expect("open artifacts"))
+}
+
+/// The grid the "small" artifacts bake in (must match the manifest).
+fn small_spec() -> GridSpec {
+    GridSpec::new(560, 3.0, 1024, 500.0, 5, 2)
+}
+
+/// Rust-side oracle for one fixed-window patch, mirroring the kernel:
+/// erf bin masses, normalize over P×T, normal-approx binomial.
+#[allow(clippy::too_many_arguments)]
+fn oracle_patch(
+    spec: &GridSpec,
+    pitch: f64,
+    time: f64,
+    sp: f64,
+    st: f64,
+    q: f64,
+    pb: i64,
+    tb: i64,
+    normals: &[f32],
+) -> Vec<f32> {
+    let pbins = spec.pitch_bins();
+    let tbins = spec.time_bins();
+    let wp: Vec<f64> = (0..P)
+        .map(|i| {
+            let a = pbins.edge(pb + i as i64);
+            gauss_bin_integral(pitch, sp, a, a + pbins.binsize())
+        })
+        .collect();
+    let wt: Vec<f64> = (0..T)
+        .map(|j| {
+            let a = tbins.edge(tb + j as i64);
+            gauss_bin_integral(time, st, a, a + tbins.binsize())
+        })
+        .collect();
+    let total: f64 = wp.iter().sum::<f64>() * wt.iter().sum::<f64>();
+    let norm = if total > 0.0 { 1.0 / total } else { 0.0 };
+    let n = q.round().max(0.0) as u64;
+    let mut out = Vec::with_capacity(P * T);
+    for (i, &a) in wp.iter().enumerate() {
+        for (j, &b) in wt.iter().enumerate() {
+            let w = (a * b * norm).clamp(0.0, 1.0);
+            let z = normals[i * T + j] as f64;
+            out.push(binomial_normal_approx(n, w, z) as f32);
+        }
+    }
+    out
+}
+
+/// Synthetic batch inputs shared by several tests.
+struct Inputs {
+    params: Vec<f32>,
+    windows: Vec<i32>,
+    normals: Vec<f32>,
+    batch: usize,
+}
+
+fn make_inputs(batch: usize, seed: u64) -> Inputs {
+    let spec = small_spec();
+    let mut rng = Pcg32::seeded(seed);
+    let mut params = Vec::with_capacity(batch * 5);
+    let mut windows = Vec::with_capacity(batch * 2);
+    for _ in 0..batch {
+        let pitch = 100.0 + rng.uniform() * 1400.0; // mm, inside 560*3
+        let time = 50_000.0 + rng.uniform() * 400_000.0; // ns, inside 1024*500
+        let sp = 0.5 + rng.uniform() * 2.5;
+        let st = 300.0 + rng.uniform() * 1200.0;
+        let q = 2000.0 + rng.uniform() * 8000.0;
+        let pb = spec.pitch_bins().bin_unclamped(pitch) - (P as i64) / 2;
+        let tb = spec.time_bins().bin_unclamped(time) - (T as i64) / 2;
+        params.extend([pitch as f32, time as f32, sp as f32, st as f32, q as f32]);
+        windows.extend([pb as i32, tb as i32]);
+    }
+    let normals: Vec<f32> = (0..batch * P * T)
+        .map(|_| wirecell::rng::normal(&mut rng, 0.0, 1.0) as f32)
+        .collect();
+    Inputs {
+        params,
+        windows,
+        normals,
+        batch,
+    }
+}
+
+#[test]
+fn raster_batch_artifact_matches_rust_oracle() {
+    let Some(rt) = runtime() else { return };
+    let batch = rt.manifest().batch;
+    let inp = make_inputs(batch, 42);
+    let out = rt
+        .execute_f32(
+            "raster_batch_small",
+            &[
+                TensorInput::F32(&inp.params, vec![batch as i64, 5]),
+                TensorInput::I32(&inp.windows, vec![batch as i64, 2]),
+                TensorInput::F32(&inp.normals, vec![batch as i64, P as i64, T as i64]),
+            ],
+        )
+        .expect("execute raster_batch_small");
+    assert_eq!(out.len(), batch * P * T);
+
+    let spec = small_spec();
+    let mut exact = 0usize;
+    let mut off_by_one = 0usize;
+    for b in 0..batch {
+        let want = oracle_patch(
+            &spec,
+            inp.params[b * 5] as f64,
+            inp.params[b * 5 + 1] as f64,
+            inp.params[b * 5 + 2] as f64,
+            inp.params[b * 5 + 3] as f64,
+            inp.params[b * 5 + 4] as f64,
+            inp.windows[b * 2] as i64,
+            inp.windows[b * 2 + 1] as i64,
+            &inp.normals[b * P * T..(b + 1) * P * T],
+        );
+        for (g, w) in out[b * P * T..(b + 1) * P * T].iter().zip(&want) {
+            let d = (g - w).abs();
+            if d < 1e-3 {
+                exact += 1;
+            } else if d <= 1.0 + 1e-3 {
+                off_by_one += 1; // f32-vs-f64 rounding flip
+            } else {
+                panic!("bin differs by {d}: artifact {g} vs oracle {w}");
+            }
+        }
+    }
+    let frac_exact = exact as f64 / (exact + off_by_one) as f64;
+    assert!(frac_exact > 0.99, "only {frac_exact:.3} of bins exact");
+}
+
+#[test]
+fn per_depo_artifacts_compose_like_batched() {
+    let Some(rt) = runtime() else { return };
+    let inp = make_inputs(4, 7);
+    for b in 0..inp.batch {
+        let params = &inp.params[b * 5..(b + 1) * 5];
+        let windows = &inp.windows[b * 2..(b + 1) * 2];
+        let normals = &inp.normals[b * P * T..(b + 1) * P * T];
+        // kernel 1: sampling
+        let vpatch = rt
+            .execute_f32(
+                "raster_sample_single_small",
+                &[
+                    TensorInput::F32(params, vec![1, 5]),
+                    TensorInput::I32(windows, vec![1, 2]),
+                ],
+            )
+            .expect("sample");
+        // unfluctuated patch conserves the charge
+        let total: f64 = vpatch.iter().map(|&v| v as f64).sum();
+        let q = params[4] as f64;
+        assert!((total - q).abs() < 0.01 * q, "total {total} vs q {q}");
+        // kernel 2: fluctuation
+        let charge = [params[4]];
+        let fluct = rt
+            .execute_f32(
+                "fluct_single_small",
+                &[
+                    TensorInput::F32(&vpatch, vec![1, P as i64, T as i64]),
+                    TensorInput::F32(&charge, vec![1]),
+                    TensorInput::F32(normals, vec![1, P as i64, T as i64]),
+                ],
+            )
+            .expect("fluct");
+        let ftotal: f64 = fluct.iter().map(|&v| v as f64).sum();
+        // fluctuated total within a few sigma of q
+        assert!(
+            (ftotal - q).abs() < 8.0 * q.sqrt() + 2.0,
+            "fluct total {ftotal} vs q {q}"
+        );
+        assert!(fluct.iter().all(|&v| v >= 0.0));
+    }
+}
+
+#[test]
+fn ft_artifact_matches_rust_fft() {
+    let Some(rt) = runtime() else { return };
+    use wirecell::geometry::PlaneId;
+    use wirecell::response::{PlaneResponse, ResponseSpectrum};
+    use wirecell::scatter::PlaneGrid;
+
+    let (nw, nt) = (560usize, 1024usize);
+    // rust response spectrum -> half-spectrum inputs
+    let pr = PlaneResponse::standard(PlaneId::W, 500.0);
+    let spec = ResponseSpectrum::assemble(&pr, nw, nt);
+    let half = nt / 2 + 1;
+    let mut r_re = vec![0f32; nw * half];
+    let mut r_im = vec![0f32; nw * half];
+    for w in 0..nw {
+        for k in 0..half {
+            let c = spec.spectrum()[w * nt + k];
+            r_re[w * half + k] = c.re as f32;
+            r_im[w * half + k] = c.im as f32;
+        }
+    }
+    // sparse random charge grid
+    let mut rng = Pcg32::seeded(3);
+    let mut grid = PlaneGrid {
+        nwires: nw,
+        nticks: nt,
+        data: vec![0.0; nw * nt],
+    };
+    for _ in 0..50 {
+        let w = rng.below(nw as u32) as usize;
+        let t = rng.below(nt as u32) as usize;
+        grid.data[w * nt + t] = 1000.0 + rng.uniform() as f32 * 5000.0;
+    }
+    let coarse: Vec<f32> = grid.data.clone();
+
+    let got = rt
+        .execute_f32(
+            "ft_only_small",
+            &[
+                TensorInput::F32(&coarse, vec![nw as i64, nt as i64]),
+                TensorInput::F32(&r_re, vec![nw as i64, half as i64]),
+                TensorInput::F32(&r_im, vec![nw as i64, half as i64]),
+            ],
+        )
+        .expect("execute ft_only_small");
+    let want = spec.apply(&grid);
+    let peak = want.iter().cloned().fold(0.0f64, |a, b| a.max(b.abs()));
+    let mut worst = 0.0f64;
+    for (g, w) in got.iter().zip(&want) {
+        worst = worst.max((*g as f64 - w).abs());
+    }
+    assert!(
+        worst < 1e-3 * peak,
+        "FT mismatch: worst {worst:.3e} vs peak {peak:.3e}"
+    );
+}
+
+#[test]
+fn fused_pipeline_conserves_charge_with_unit_response() {
+    let Some(rt) = runtime() else { return };
+    let batch = rt.manifest().batch;
+    let inp = make_inputs(batch, 11);
+    let (nw, nt) = (560usize, 1024usize);
+    let half = nt / 2 + 1;
+    let ones = vec![1.0f32; nw * half];
+    let zeros = vec![0.0f32; nw * half];
+    let m = rt
+        .execute_f32(
+            "fused_pipeline_small",
+            &[
+                TensorInput::F32(&inp.params, vec![batch as i64, 5]),
+                TensorInput::I32(&inp.windows, vec![batch as i64, 2]),
+                TensorInput::F32(&inp.normals, vec![batch as i64, P as i64, T as i64]),
+                TensorInput::F32(&ones, vec![nw as i64, half as i64]),
+                TensorInput::F32(&zeros, vec![nw as i64, half as i64]),
+            ],
+        )
+        .expect("execute fused");
+    assert_eq!(m.len(), nw * nt);
+    // unit response => output total == scattered charge total; all the
+    // synthetic windows are interior so nothing clips
+    let total: f64 = m.iter().map(|&v| v as f64).sum();
+    // expected: batched raster then sum
+    let patches = rt
+        .execute_f32(
+            "raster_batch_small",
+            &[
+                TensorInput::F32(&inp.params, vec![batch as i64, 5]),
+                TensorInput::I32(&inp.windows, vec![batch as i64, 2]),
+                TensorInput::F32(&inp.normals, vec![batch as i64, P as i64, T as i64]),
+            ],
+        )
+        .expect("raster");
+    let expect: f64 = patches.iter().map(|&v| v as f64).sum();
+    assert!(
+        (total - expect).abs() < 1e-4 * expect.max(1.0),
+        "fused {total} vs raster-sum {expect}"
+    );
+}
+
+#[test]
+fn runtime_stats_accumulate() {
+    let Some(rt) = runtime() else { return };
+    rt.stats.reset();
+    let inp = make_inputs(1, 1);
+    let _ = rt
+        .execute_f32(
+            "raster_sample_single_small",
+            &[
+                TensorInput::F32(&inp.params[..5], vec![1, 5]),
+                TensorInput::I32(&inp.windows[..2], vec![1, 2]),
+            ],
+        )
+        .unwrap();
+    let (h2d, exec, d2h, n) = rt.stats.snapshot();
+    assert_eq!(n, 1);
+    assert!(exec > 0.0);
+    assert!(h2d >= 0.0 && d2h >= 0.0);
+}

@@ -1,0 +1,186 @@
+//! End-to-end integration: whole pipelines across backends, and the
+//! simulation-through-dataflow-engine path.
+
+use std::path::Path;
+use wirecell::config::{BackendChoice, FluctuationMode, SimConfig, Strategy};
+use wirecell::coordinator::SimPipeline;
+use wirecell::depo::{CosmicSource, DepoSource, TrackDepoSource};
+use wirecell::geometry::PlaneId;
+use wirecell::units::*;
+
+fn have_artifacts() -> bool {
+    Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("artifacts/manifest.json")
+        .exists()
+}
+
+fn base_cfg() -> SimConfig {
+    let mut cfg = SimConfig::default();
+    cfg.fluctuation = FluctuationMode::Pool;
+    cfg.noise = false;
+    cfg.pool_size = 1 << 20;
+    cfg
+}
+
+fn cosmic_depos(n: usize) -> Vec<wirecell::depo::Depo> {
+    let cfg = base_cfg();
+    let mut src = CosmicSource::with_target_depos(cfg.detector().unwrap(), n, 99);
+    src.generate()
+}
+
+#[test]
+fn backends_agree_on_physics() {
+    if !have_artifacts() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    let depos = cosmic_depos(3000);
+    let mut charges = Vec::new();
+    for backend in [
+        BackendChoice::Serial,
+        BackendChoice::Threaded(2),
+        BackendChoice::Pjrt,
+    ] {
+        let mut cfg = base_cfg();
+        cfg.backend = backend;
+        cfg.strategy = Strategy::Batched;
+        let mut pipe = SimPipeline::new(cfg).unwrap();
+        let report = pipe.run(&depos).unwrap();
+        charges.push(report.planes[PlaneId::W as usize].charge);
+    }
+    let max = charges.iter().cloned().fold(f64::MIN, f64::max);
+    let min = charges.iter().cloned().fold(f64::MAX, f64::min);
+    assert!(
+        (max - min) / max < 0.01,
+        "backend W-plane charges disagree: {charges:?}"
+    );
+}
+
+#[test]
+fn per_depo_and_batched_pjrt_agree() {
+    if !have_artifacts() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    let depos = cosmic_depos(500);
+    let mut totals = Vec::new();
+    for strategy in [Strategy::PerDepo, Strategy::Batched] {
+        let mut cfg = base_cfg();
+        cfg.backend = BackendChoice::Pjrt;
+        cfg.strategy = strategy;
+        let mut pipe = SimPipeline::new(cfg).unwrap();
+        pipe.produce_frames = false;
+        let report = pipe.run(&depos).unwrap();
+        totals.push(report.planes[PlaneId::W as usize].charge);
+    }
+    assert!(
+        (totals[0] - totals[1]).abs() / totals[0] < 0.01,
+        "strategies disagree: {totals:?}"
+    );
+}
+
+#[test]
+fn fused_collection_matches_staged_rust_ft() {
+    if !have_artifacts() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    // the fused device path must produce the same M(t,x) (up to f32)
+    // as the Rust raster+scatter+FT chain on the same depos
+    let depos = cosmic_depos(600);
+    let mut cfg = base_cfg();
+    cfg.backend = BackendChoice::Pjrt;
+    cfg.strategy = Strategy::Batched;
+    let mut pipe = SimPipeline::new(cfg.clone()).unwrap();
+    let (fused_m, _secs) = pipe.run_fused_collection(&depos).unwrap();
+
+    // staged reference: same pipeline but Rust FT path
+    let mut pipe2 = SimPipeline::new(cfg).unwrap();
+    pipe2.produce_frames = true;
+    let report = pipe2.run(&depos).unwrap();
+    // run() emits volts (response applied); compare integrals which are
+    // proportional — use totals of the W plane vs fused total
+    let frame = report.frame.unwrap();
+    let w = frame.plane(PlaneId::W);
+    // ADC conversion subtracts baseline and quantizes, so compare
+    // against the fused sum only loosely via correlation of hot bins
+    let fused_sum: f64 = fused_m.iter().map(|&v| v as f64).sum();
+    assert!(fused_sum.is_finite());
+    // sanity: the fused output has signal where the frame has signal
+    let fused_peak_idx = fused_m
+        .iter()
+        .enumerate()
+        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .unwrap()
+        .0;
+    let (pw, pt) = (fused_peak_idx / 1024, fused_peak_idx % 1024);
+    // frame peak location should be nearby (same track structure)
+    let mut best = (0usize, 0usize, f32::MIN);
+    for c in 0..w.nchan {
+        for t in 0..w.nticks {
+            let v = w.at(c, t);
+            if v > best.2 {
+                best = (c, t, v);
+            }
+        }
+    }
+    let (fw, ft) = (best.0, best.1);
+    assert!(
+        (pw as i64 - fw as i64).abs() < 30 && (pt as i64 - ft as i64).abs() < 60,
+        "fused peak ({pw},{pt}) far from frame peak ({fw},{ft})"
+    );
+}
+
+#[test]
+fn noise_only_run_has_expected_rms() {
+    let mut cfg = base_cfg();
+    cfg.backend = BackendChoice::Serial;
+    cfg.noise = true;
+    let mut pipe = SimPipeline::new(cfg).unwrap();
+    // no depos: pure noise frame
+    let report = pipe.run(&[]).unwrap();
+    let frame = report.frame.unwrap();
+    let u = frame.plane(PlaneId::U);
+    let s = u.stats();
+    // ADC-quantized noise around the baseline: nonzero rms, zero-ish mean
+    assert!(s.rms > 0.5, "rms={}", s.rms);
+    let mean = s.sum / (u.nchan * u.nticks) as f64;
+    assert!(mean.abs() < 2.0, "mean={mean}");
+}
+
+#[test]
+fn track_signal_localizes_on_expected_wires() {
+    let mut cfg = base_cfg();
+    cfg.backend = BackendChoice::Serial;
+    cfg.fluctuation = FluctuationMode::None;
+    let mut pipe = SimPipeline::new(cfg.clone()).unwrap();
+    // a z-directed track at fixed y: on the W plane (pitch = z), the
+    // signal must span the z range of the track
+    let z0 = -30.0 * CM;
+    let z1 = 30.0 * CM;
+    let depos = TrackDepoSource::mip(
+        [40.0 * CM, 0.0, z0],
+        [40.0 * CM, 0.0, z1],
+        0.0,
+        5,
+    )
+    .generate();
+    let report = pipe.run(&depos).unwrap();
+    let frame = report.frame.unwrap();
+    let w = frame.plane(PlaneId::W);
+    let det = cfg.detector().unwrap();
+    let plane = det.plane(PlaneId::W);
+    let w0 = plane.wire_at(plane.pitch_coord(0.0, z0)).unwrap();
+    let w1 = plane.wire_at(plane.pitch_coord(0.0, z1)).unwrap();
+    let hot: Vec<usize> = (0..w.nchan)
+        .filter(|&c| w.channel(c).iter().any(|&v| v > 20.0))
+        .collect();
+    assert!(!hot.is_empty());
+    let (hmin, hmax) = (*hot.first().unwrap(), *hot.last().unwrap());
+    assert!(
+        hmin >= w0.saturating_sub(5) && hmax <= w1 + 5,
+        "hot wires [{hmin},{hmax}] outside track span [{w0},{w1}]"
+    );
+    // coverage: most wires in the span fire
+    assert!(hot.len() > (w1 - w0) / 2, "only {} hot wires", hot.len());
+}
