@@ -14,6 +14,16 @@ pub fn depos(default: usize) -> usize {
         .unwrap_or(default)
 }
 
+/// Stream length for throughput benches: `WCT_BENCH_EVENTS` env or the
+/// default.
+#[allow(dead_code)]
+pub fn events(default: usize) -> usize {
+    std::env::var("WCT_BENCH_EVENTS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(default)
+}
+
 /// Repetitions: `WCT_BENCH_REPEAT` env or the default (paper: 5).
 pub fn repeat(default: usize) -> usize {
     std::env::var("WCT_BENCH_REPEAT")

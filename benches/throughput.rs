@@ -1,0 +1,58 @@
+//! Multi-event throughput engine: serial (1 worker) vs pooled scaling
+//! across backends.
+//!
+//! ```sh
+//! cargo bench --bench throughput                       # default 16 x 5k depos
+//! WCT_BENCH_EVENTS=64 WCT_BENCH_DEPOS=100000 cargo bench --bench throughput
+//! ```
+//!
+//! Prints one scaling table per backend (workers 1,2,4,... up to the
+//! hardware thread count): wall seconds, events/sec, and the speedup
+//! of the pooled engine over the 1-worker baseline.
+
+mod common;
+
+use wirecell::config::{BackendChoice, FluctuationMode, SimConfig};
+use wirecell::harness::throughput_scaling;
+
+fn main() -> anyhow::Result<()> {
+    let per_event = common::depos(5_000);
+    let events = common::events(16);
+    let hw = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(8);
+    let workers: Vec<usize> = (0..)
+        .map(|i| 1usize << i)
+        .take_while(|&w| w <= hw)
+        .collect();
+
+    let mut cfg = SimConfig::default();
+    cfg.target_depos = per_event;
+    cfg.pool_size = 1 << 18;
+
+    // ref-CPU workers: the inline-RNG path, where event-level pooling
+    // is the only parallel axis.
+    cfg.backend = BackendChoice::Serial;
+    cfg.fluctuation = FluctuationMode::Inline;
+    let (table, serial_series) = throughput_scaling(&cfg, events, &workers)?;
+    common::emit(&table);
+
+    // portable-layer workers: each worker itself rasterizes on 2
+    // threads, composing worker x backend parallelism.
+    cfg.backend = BackendChoice::Threaded(2);
+    cfg.fluctuation = FluctuationMode::Pool;
+    let (table, _) = throughput_scaling(&cfg, events, &workers)?;
+    common::emit(&table);
+
+    if let (Some(first), Some(last)) = (serial_series.first(), serial_series.last()) {
+        println!(
+            "serial-backend pool: {} worker(s) {:.3} s -> {} worker(s) {:.3} s ({:.2}x)",
+            first.0,
+            first.1,
+            last.0,
+            last.1,
+            first.1 / last.1.max(1e-12)
+        );
+    }
+    Ok(())
+}

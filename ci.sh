@@ -1,0 +1,25 @@
+#!/usr/bin/env bash
+# CI gate: build, tests, formatting, and the documentation guarantee
+# (`cargo doc` must stay clean — lib.rs carries #![warn(missing_docs)],
+# and RUSTDOCFLAGS promotes those warnings to errors here).
+#
+# Usage: ./ci.sh            # full gate
+#        SKIP_FMT=1 ./ci.sh # e.g. on toolchains without rustfmt
+set -euo pipefail
+cd "$(dirname "$0")"
+
+run() {
+    echo "==> $*"
+    "$@"
+}
+
+run cargo build --release
+run cargo test -q
+
+if [ -z "${SKIP_FMT:-}" ]; then
+    run cargo fmt --check
+fi
+
+RUSTDOCFLAGS="${RUSTDOCFLAGS:-} -D warnings" run cargo doc --no-deps --quiet
+
+echo "CI gate passed."

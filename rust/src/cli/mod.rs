@@ -105,6 +105,8 @@ impl Cli {
         }
         for key in [
             "target_depos",
+            "events",
+            "workers",
             "seed",
             "pool_size",
             "pitch_oversample",
@@ -141,6 +143,7 @@ USAGE: wire-cell <COMMAND> [--key value]... [--flag]...
 
 COMMANDS:
   simulate     run the full pipeline on a generated cosmic workload
+  throughput   stream many events through a pool of pipeline workers
   table2       regenerate paper Table 2 (ref-CPU / ref-accel / noRNG)
   table3       regenerate paper Table 3 (portable-layer backends)
   fig5         regenerate paper Figure 5 (scatter-add atomic scaling)
@@ -154,7 +157,9 @@ COMMON OPTIONS:
   --backend <b>            serial | threads:N | pjrt
   --strategy <s>           per-depo | batched
   --fluctuation <m>        inline | pool | none
-  --target_depos <n>       workload size (default 100000)
+  --target_depos <n>       workload size, per event (default 100000)
+  --events <n>             throughput: events in the stream (default 8)
+  --workers <n>            throughput: pipeline workers (default 1)
   --seed <n>               master seed
   --artifacts_dir <dir>    AOT artifacts directory (default artifacts)
   --repeat <n>             benchmark repetitions (default 5, as paper)
@@ -212,6 +217,21 @@ mod tests {
         assert_eq!(cfg.backend, BackendChoice::Threaded(4));
         assert_eq!(cfg.target_depos, 1234);
         assert!(!cfg.apply_response);
+    }
+
+    #[test]
+    fn throughput_knobs_parse() {
+        let cli = Cli::parse(&args(&[
+            "throughput",
+            "--events",
+            "32",
+            "--workers",
+            "4",
+        ]))
+        .unwrap();
+        let cfg = cli.sim_config().unwrap();
+        assert_eq!(cfg.events, 32);
+        assert_eq!(cfg.workers, 4);
     }
 
     #[test]

@@ -124,8 +124,14 @@ pub struct SimConfig {
     pub backend: BackendChoice,
     /// Offload strategy for device backends.
     pub strategy: Strategy,
-    /// Target number of depos for generated workloads.
+    /// Target number of depos for generated workloads (per event, for
+    /// multi-event throughput streams).
     pub target_depos: usize,
+    /// Events per throughput-stream run (`throughput` subcommand).
+    pub events: usize,
+    /// Worker pipelines for the throughput engine (each owns a full
+    /// `SimPipeline`; clamped to the event count at run time).
+    pub workers: usize,
     /// Pre-computed pool length (Pool mode).
     pub pool_size: usize,
     /// Master seed.
@@ -151,6 +157,8 @@ impl Default for SimConfig {
             backend: BackendChoice::Serial,
             strategy: Strategy::Batched,
             target_depos: 100_000,
+            events: 8,
+            workers: 1,
             pool_size: 1 << 22,
             seed: 12345,
             noise: false,
@@ -196,6 +204,12 @@ impl SimConfig {
         }
         if let Some(n) = get_usize("target_depos") {
             self.target_depos = n;
+        }
+        if let Some(n) = get_usize("events") {
+            self.events = n.max(1);
+        }
+        if let Some(n) = get_usize("workers") {
+            self.workers = n.max(1);
         }
         if let Some(n) = get_usize("pool_size") {
             self.pool_size = n.max(1);
@@ -264,6 +278,8 @@ impl SimConfig {
             ("backend", Value::from(self.backend.label())),
             ("strategy", Value::from(self.strategy.as_str())),
             ("target_depos", Value::from(self.target_depos)),
+            ("events", Value::from(self.events)),
+            ("workers", Value::from(self.workers)),
             ("pool_size", Value::from(self.pool_size)),
             ("seed", Value::from(self.seed as f64)),
             ("noise", Value::from(self.noise)),
@@ -309,6 +325,20 @@ mod tests {
         assert_eq!(cfg.target_depos, 500);
         // untouched fields keep defaults
         assert_eq!(cfg.detector, "test-small");
+    }
+
+    #[test]
+    fn throughput_knobs_overlay_and_clamp() {
+        let cfg = SimConfig::from_json(r#"{"events": 32, "workers": 4}"#).unwrap();
+        assert_eq!(cfg.events, 32);
+        assert_eq!(cfg.workers, 4);
+        // zero is clamped up, not rejected
+        let cfg = SimConfig::from_json(r#"{"events": 0, "workers": 0}"#).unwrap();
+        assert_eq!(cfg.events, 1);
+        assert_eq!(cfg.workers, 1);
+        // defaults
+        let cfg = SimConfig::default();
+        assert_eq!((cfg.events, cfg.workers), (8, 1));
     }
 
     #[test]

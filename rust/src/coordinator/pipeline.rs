@@ -73,6 +73,24 @@ pub struct SimPipeline {
 impl SimPipeline {
     /// Construct from a validated config.
     pub fn new(cfg: SimConfig) -> Result<Self> {
+        let rng_pool = Self::variate_pool_for(&cfg);
+        Self::with_variate_pool(cfg, rng_pool)
+    }
+
+    /// The variate pool [`new`](Self::new) would generate for `cfg`
+    /// (the seed derivation lives here so every constructor agrees).
+    pub fn variate_pool_for(cfg: &SimConfig) -> Arc<RandomPool> {
+        RandomPool::shared(cfg.seed ^ 0xF00D, cfg.pool_size)
+    }
+
+    /// Construct, adopting a pre-generated variate pool.
+    ///
+    /// The throughput engine forks one template pool per worker
+    /// ([`RandomPool::fork`]) instead of regenerating identical
+    /// variates M times.  For bit-parity with [`new`](Self::new) the
+    /// pool must derive from [`variate_pool_for`](Self::variate_pool_for)
+    /// on the same config.
+    pub fn with_variate_pool(cfg: SimConfig, rng_pool: Arc<RandomPool>) -> Result<Self> {
         cfg.validate().map_err(|e| anyhow!(e))?;
         let detector = cfg.detector().map_err(|e| anyhow!(e))?;
         let nthreads = match cfg.backend {
@@ -80,7 +98,6 @@ impl SimPipeline {
             _ => 1,
         };
         let pool = Arc::new(ThreadPool::new(nthreads.max(1)));
-        let rng_pool = RandomPool::shared(cfg.seed ^ 0xF00D, cfg.pool_size);
         let runtime = match cfg.backend {
             BackendChoice::Pjrt => {
                 let dir = std::path::Path::new(&cfg.artifacts_dir);
@@ -169,6 +186,22 @@ impl SimPipeline {
                 "no AOT artifacts for detector '{other}' — PJRT backend supports 'test-small'"
             )),
         }
+    }
+
+    /// Re-seed the pipeline for the next event of a multi-event stream.
+    ///
+    /// Everything expensive survives: the detector, the thread pool,
+    /// the PJRT runtime, and cached response spectra.  Only the cheap
+    /// per-event state changes: `cfg.seed` (which seeds the backend RNG
+    /// and the noise generator on the next [`run`](Self::run)) and the
+    /// pre-computed variate pool's cursor, which rewinds to zero so an
+    /// event consumes the identical pool slice no matter which worker
+    /// of a throughput pool runs it.  The pool *contents* remain a
+    /// function of the construction-time seed; a stream of events is
+    /// therefore fully determined by (construction config, event seed).
+    pub fn reseed(&mut self, seed: u64) {
+        self.cfg.seed = seed;
+        self.rng_pool.reset();
     }
 
     /// Drift a depo set to the response plane.
@@ -459,6 +492,35 @@ mod tests {
         let report = pipe.run(&track_depos()).unwrap();
         assert!(report.label.contains("Kokkos-OMP 2"));
         assert!(report.planes.iter().all(|p| p.patches > 0));
+    }
+
+    #[test]
+    fn reseed_reproduces_an_event_bit_for_bit() {
+        // a long-lived pipeline re-run after reseed must match a fresh
+        // pipeline constructed with that seed — the property the
+        // throughput worker pool's determinism rests on
+        let depos = track_depos();
+        let mut cfg = cfg_serial();
+        cfg.fluctuation = FluctuationMode::Inline; // exercise the RNG path
+        cfg.noise = true;
+        let mut streaming = SimPipeline::new(cfg.clone()).unwrap();
+        let _warmup = streaming.run(&depos).unwrap(); // dirty the RNG state
+        streaming.reseed(777);
+        let from_stream = streaming.run(&depos).unwrap();
+
+        let mut fresh_cfg = cfg;
+        fresh_cfg.seed = 777;
+        let mut fresh = SimPipeline::new(fresh_cfg).unwrap();
+        let from_fresh = fresh.run(&depos).unwrap();
+
+        let a = from_stream.frame.unwrap();
+        let b = from_fresh.frame.unwrap();
+        for (pa, pb) in a.planes.iter().zip(&b.planes) {
+            assert_eq!(pa.data.len(), pb.data.len());
+            for (x, y) in pa.data.iter().zip(&pb.data) {
+                assert_eq!(x.to_bits(), y.to_bits());
+            }
+        }
     }
 
     #[test]

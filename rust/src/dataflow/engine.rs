@@ -1,8 +1,10 @@
-//! Execution engines: serial and pipelined-threaded (the TBB analog).
+//! Execution engines: serial, pipelined-threaded (the TBB analog), and
+//! a pooled work-stealing variant for multi-event throughput runs.
 
 use super::graph::{Graph, GraphError, NodeKind};
-use super::Payload;
-use std::sync::mpsc;
+use super::{FunctionNode, Payload, SinkNode, SourceNode};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Mutex};
 
 /// Run the graph on the calling thread: pull from the source, push each
 /// payload through the chain, finish with an EOS sweep.
@@ -112,6 +114,81 @@ pub fn run_threaded(graph: Graph, capacity: usize) -> Result<EngineReport, Graph
         }
     });
     Ok(report)
+}
+
+/// Run a source → chain → sink pipeline on a pool of `workers` threads,
+/// each owning a private copy of the function chain.
+///
+/// This is the engine variant behind the multi-event throughput runs
+/// (`throughput::run_stream`): the serial and threaded engines keep one
+/// payload per *stage* in flight, while here up to `workers` payloads
+/// are in flight at once, each carried end-to-end by one worker.  Work
+/// distribution is pull-based (a natural work-stealing discipline): an
+/// idle worker locks the shared source, takes the next payload, and
+/// runs it through its own chain, so fast workers automatically absorb
+/// more of the stream and stragglers never block the pool.
+///
+/// `make_chain(w)` is called once per worker `w` (on that worker's
+/// thread) and must return the private node chain the worker will own
+/// for the whole run — this is where per-worker state (a pipeline, a
+/// backend, cached plans) lives.  The source and sink are shared behind
+/// mutexes; keep them cheap and push heavy work into the chain.
+pub fn run_pooled<F>(
+    source: Box<dyn SourceNode>,
+    sink: Box<dyn SinkNode>,
+    workers: usize,
+    make_chain: F,
+) -> EngineReport
+where
+    F: Fn(usize) -> Vec<Box<dyn FunctionNode>> + Sync,
+{
+    let workers = workers.max(1);
+    let source = Mutex::new(source);
+    let sink = Mutex::new(sink);
+    let produced = AtomicU64::new(0);
+    let consumed = AtomicU64::new(0);
+    std::thread::scope(|scope| {
+        let mut handles = Vec::new();
+        for w in 0..workers {
+            let (source, sink) = (&source, &sink);
+            let (produced, consumed) = (&produced, &consumed);
+            let make_chain = &make_chain;
+            handles.push(scope.spawn(move || {
+                let mut chain = make_chain(w);
+                loop {
+                    // Pull the next payload; the lock scope covers only
+                    // the take so co-workers overlap on the chain work.
+                    let payload = source.lock().unwrap().next();
+                    let Some(payload) = payload else {
+                        break;
+                    };
+                    produced.fetch_add(1, Ordering::Relaxed);
+                    let mut inflight = vec![payload];
+                    for node in chain.iter_mut() {
+                        let mut next = Vec::new();
+                        for p in inflight {
+                            next.extend(node.call(p));
+                        }
+                        inflight = next;
+                    }
+                    if !inflight.is_empty() {
+                        let mut snk = sink.lock().unwrap();
+                        for p in inflight {
+                            snk.consume(p);
+                            consumed.fetch_add(1, Ordering::Relaxed);
+                        }
+                    }
+                }
+            }));
+        }
+        for h in handles {
+            h.join().expect("pooled engine worker panicked");
+        }
+    });
+    EngineReport {
+        produced: produced.load(Ordering::Relaxed),
+        consumed: consumed.load(Ordering::Relaxed),
+    }
 }
 
 /// Counters from an engine run.
@@ -224,6 +301,66 @@ mod tests {
         assert!(run_serial(g).is_err());
         let g = Graph::new();
         assert!(run_threaded(g, 2).is_err());
+    }
+
+    #[test]
+    fn pooled_engine_matches_serial() {
+        let t1 = Arc::new(Mutex::new(0.0));
+        let t2 = Arc::new(Mutex::new(0.0));
+        run_serial(build(100, Collect(t1.clone()))).unwrap();
+        let report = run_pooled(
+            Box::new(CountSource(100)),
+            Box::new(Collect(t2.clone())),
+            4,
+            |_| vec![Box::new(Doubler) as Box<dyn FunctionNode>],
+        );
+        assert_eq!(report.produced, 100);
+        assert_eq!(report.consumed, 100);
+        assert_eq!(*t1.lock().unwrap(), *t2.lock().unwrap());
+    }
+
+    #[test]
+    fn pooled_engine_single_worker() {
+        let total = Arc::new(Mutex::new(0.0));
+        let report = run_pooled(
+            Box::new(CountSource(10)),
+            Box::new(Collect(total.clone())),
+            1,
+            |_| vec![Box::new(Doubler) as Box<dyn FunctionNode>],
+        );
+        assert_eq!(report.consumed, 10);
+        assert_eq!(*total.lock().unwrap(), 20.0);
+    }
+
+    #[test]
+    fn pooled_engine_multi_stage_chains() {
+        // each worker owns a private two-stage chain: charge x4
+        let total = Arc::new(Mutex::new(0.0));
+        let report = run_pooled(
+            Box::new(CountSource(25)),
+            Box::new(Collect(total.clone())),
+            3,
+            |_| {
+                vec![
+                    Box::new(Doubler) as Box<dyn FunctionNode>,
+                    Box::new(Doubler) as Box<dyn FunctionNode>,
+                ]
+            },
+        );
+        assert_eq!(report.produced, 25);
+        assert_eq!(*total.lock().unwrap(), 100.0);
+    }
+
+    #[test]
+    fn pooled_engine_empty_source() {
+        let total = Arc::new(Mutex::new(0.0));
+        let report = run_pooled(
+            Box::new(CountSource(0)),
+            Box::new(Collect(total.clone())),
+            4,
+            |_| vec![Box::new(Doubler) as Box<dyn FunctionNode>],
+        );
+        assert_eq!(report, EngineReport::default());
     }
 
     #[test]

@@ -13,7 +13,7 @@
 mod engine;
 mod graph;
 
-pub use engine::{run_serial, run_threaded};
+pub use engine::{run_pooled, run_serial, run_threaded};
 pub use graph::{Graph, GraphError, NodeId};
 
 use crate::depo::Depo;
@@ -24,6 +24,18 @@ use crate::scatter::PlaneGrid;
 /// The payload that flows along graph edges.
 #[derive(Debug)]
 pub enum Payload {
+    /// A whole event in a multi-event stream: sequence number, the
+    /// per-event seed, and (optionally pre-generated) depos.  Workers
+    /// that receive an `Event` with empty depos generate them from the
+    /// seed, keeping the shared source cheap under its lock.
+    Event {
+        /// Position in the stream (0-based).
+        seq: u64,
+        /// Seed every stochastic stage of this event derives from.
+        seed: u64,
+        /// The event's depos; may be empty (generate-on-worker).
+        depos: Vec<Depo>,
+    },
     /// A set of depos.
     Depos(Vec<Depo>),
     /// Rasterized patches plus their plane tag.
@@ -42,6 +54,7 @@ impl Payload {
     /// Human-readable tag for diagnostics.
     pub fn kind(&self) -> &'static str {
         match self {
+            Payload::Event { .. } => "event",
             Payload::Depos(_) => "depos",
             Payload::Patches(..) => "patches",
             Payload::Grid(..) => "grid",
@@ -168,5 +181,14 @@ mod tests {
         assert_eq!(Payload::Eos.kind(), "eos");
         assert_eq!(Payload::Depos(vec![]).kind(), "depos");
         assert_eq!(Payload::Patches(0, vec![]).kind(), "patches");
+        assert_eq!(
+            Payload::Event {
+                seq: 0,
+                seed: 1,
+                depos: vec![]
+            }
+            .kind(),
+            "event"
+        );
     }
 }

@@ -11,6 +11,7 @@
 //! | Table 3        | [`table3`] |
 //! | Figure 5       | [`fig5`] |
 //! | Figure 3 vs 4 strategy (proposed) | [`strategy_sweep`] |
+//! | multi-event serving throughput (proposed, after arXiv:2203.02479) | [`throughput`], [`throughput_scaling`] |
 
 use crate::backend::{ExecBackend, PjrtBackend, SerialBackend, StageTimings, ThreadedBackend};
 use crate::config::{FluctuationMode, SimConfig, Strategy};
@@ -23,6 +24,7 @@ use crate::raster::{DepoView, GridSpec, Patch};
 use crate::rng::RandomPool;
 use crate::runtime::Runtime;
 use crate::scatter::{scatter_atomic, scatter_serial, PlaneGrid};
+use crate::throughput::{run_stream, StreamOptions, ThroughputReport};
 use anyhow::Result;
 use std::sync::Arc;
 use std::time::Instant;
@@ -314,6 +316,75 @@ pub fn strategy_sweep(
     Ok((table, series))
 }
 
+/// Multi-event throughput: run `events` events across `workers` pooled
+/// pipelines and return the per-stage aggregate table plus the full
+/// report (rates, per-worker shares, determinism digest).
+pub fn throughput(
+    cfg: &SimConfig,
+    events: usize,
+    workers: usize,
+) -> Result<(Table, ThroughputReport)> {
+    let report = run_stream(
+        cfg,
+        &StreamOptions {
+            events,
+            workers,
+            keep_frames: false,
+        },
+    )?;
+    let table = report.stage_table();
+    Ok((table, report))
+}
+
+/// Throughput scaling sweep: the same `events`-event stream at each
+/// worker count, as a serial-vs-pooled comparison table.  Returns the
+/// table plus `(workers, wall seconds, events/sec)` series.
+///
+/// Worker counts are clamped to the event count (a pool can never use
+/// more workers than there are events); requests that clamp to an
+/// already-measured count are skipped so every row reports a
+/// configuration that actually ran.
+pub fn throughput_scaling(
+    cfg: &SimConfig,
+    events: usize,
+    workers: &[usize],
+) -> Result<(Table, Vec<(usize, f64, f64)>)> {
+    let mut table = Table::new(
+        &format!(
+            "Throughput scaling — {events} events x {} depos, backend {}",
+            cfg.target_depos,
+            cfg.backend.label()
+        ),
+        &["Workers", "Wall [s]", "Events/s", "Speedup vs 1st"],
+    );
+    let mut series = Vec::new();
+    let mut base: Option<f64> = None;
+    for &w in workers {
+        let w = w.min(events.max(1));
+        if series.iter().any(|&(prev, _, _)| prev == w) {
+            continue; // clamped duplicate of a measured count
+        }
+        let report = run_stream(
+            cfg,
+            &StreamOptions {
+                events,
+                workers: w,
+                keep_frames: false,
+            },
+        )?;
+        let wall = report.rate.wall_s;
+        let b = *base.get_or_insert(wall);
+        table.row(&[
+            w.to_string(),
+            format!("{wall:.3}"),
+            format!("{:.2}", report.events_per_sec()),
+            format!("{:.2}", b / wall.max(1e-12)),
+        ]);
+        series.push((w, wall, report.events_per_sec()));
+    }
+    Ok((table, series))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -344,6 +415,28 @@ mod tests {
             ref_cpu.fluctuation_s,
             norng.fluctuation_s
         );
+    }
+
+    #[test]
+    fn throughput_harness_reports_rates() {
+        let mut cfg = small_cfg();
+        cfg.target_depos = 300;
+        cfg.fluctuation = FluctuationMode::None;
+        let (table, report) = throughput(&cfg, 3, 2).unwrap();
+        assert_eq!(report.rate.events, 3);
+        assert!(report.events_per_sec() > 0.0);
+        assert!(table.render().contains("raster"));
+    }
+
+    #[test]
+    fn throughput_scaling_rows_match_sweep() {
+        let mut cfg = small_cfg();
+        cfg.target_depos = 300;
+        cfg.fluctuation = FluctuationMode::None;
+        let (table, series) = throughput_scaling(&cfg, 2, &[1, 2]).unwrap();
+        assert_eq!(series.len(), 2);
+        assert_eq!(table.len(), 2);
+        assert!(series.iter().all(|&(_, wall, rate)| wall > 0.0 && rate > 0.0));
     }
 
     #[test]

@@ -17,8 +17,15 @@
 //!   [`special`], [`testing`]
 //! * physics/sim core: [`geometry`], [`depo`], [`physics`], [`drift`],
 //!   [`raster`], [`scatter`]
-//! * framework + portability: dataflow, backend, runtime, coordinator,
-//!   metrics, cli (see later modules)
+//! * framework + portability: [`dataflow`], [`backend`], [`runtime`],
+//!   [`coordinator`], [`metrics`], [`cli`]
+//! * scale-out: [`throughput`] — the multi-event worker-pool engine
+//!   behind `wire-cell throughput`
+//!
+//! See `README.md` for the quickstart and `docs/ARCHITECTURE.md` for
+//! the full layer walk-through.
+
+#![warn(missing_docs)]
 
 pub mod adc;
 pub mod backend;
@@ -45,4 +52,5 @@ pub mod scatter;
 pub mod sigproc;
 pub mod special;
 pub mod testing;
+pub mod throughput;
 pub mod units;

@@ -28,6 +28,7 @@ fn run(args: &[String]) -> Result<()> {
     let repeat: usize = cli.opt_parse("repeat").map_err(|e| anyhow!(e))?.unwrap_or(5);
     match cli.command.as_str() {
         "simulate" => simulate(&cli),
+        "throughput" => throughput(&cli),
         "table2" => {
             let cfg = cli.sim_config().map_err(|e| anyhow!(e))?;
             let n = cfg.target_depos;
@@ -146,6 +147,54 @@ fn simulate(cli: &Cli) -> Result<()> {
         }
     }
     Ok(())
+}
+
+fn throughput(cli: &Cli) -> Result<()> {
+    let cfg = cli.sim_config().map_err(|e| anyhow!(e))?;
+    eprintln!(
+        "streaming {} events x {} depos over {} worker(s), backend {}",
+        cfg.events,
+        cfg.target_depos,
+        cfg.workers,
+        cfg.backend.label()
+    );
+    let (table, report) = harness::throughput(&cfg, cfg.events, cfg.workers)?;
+    // assemble the whole report so --out captures all of it, not just
+    // the stage table
+    let mut text = table.render();
+    text.push('\n');
+    text.push_str(&report.worker_table().render());
+    text.push_str(&format!(
+        "\nevents: {}  depos: {}  wall: {:.3} s\n",
+        report.rate.events, report.rate.depos, report.rate.wall_s
+    ));
+    text.push_str(&format!(
+        "rate: {:.2} events/s  ({:.3e} depos/s)\n",
+        report.events_per_sec(),
+        report.depos_per_sec()
+    ));
+    let digest_note = if matches!(cfg.backend, BackendChoice::Serial) {
+        "invariant under --workers"
+    } else {
+        "bit-exact only with --backend serial"
+    };
+    text.push_str(&format!(
+        "frame digest: {:016x}  (seed {}; {digest_note})\n",
+        report.digest, cfg.seed
+    ));
+    println!("{text}");
+    if let Some(path) = cli.opt("out") {
+        std::fs::write(path, &text)?;
+        eprintln!("wrote {path}");
+    }
+    for e in &report.errors {
+        eprintln!("event error: {e}");
+    }
+    if report.errors.is_empty() {
+        Ok(())
+    } else {
+        Err(anyhow!("{} event(s) failed", report.errors.len()))
+    }
 }
 
 fn inspect(cli: &Cli) -> Result<()> {

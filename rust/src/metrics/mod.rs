@@ -30,6 +30,19 @@ impl StageTimer {
         *self.counts.entry(stage.to_string()).or_default() += 1;
     }
 
+    /// Fold another timer into this one, summing totals and call
+    /// counts stage-by-stage.  This is the aggregation step of the
+    /// throughput engine: each worker times its own events with a
+    /// private `StageTimer`, and the stream report merges them.
+    pub fn merge(&mut self, other: &StageTimer) {
+        for (stage, secs) in &other.totals {
+            *self.totals.entry(stage.clone()).or_default() += secs;
+        }
+        for (stage, n) in &other.counts {
+            *self.counts.entry(stage.clone()).or_default() += n;
+        }
+    }
+
     /// Total for one stage.
     pub fn total(&self, stage: &str) -> f64 {
         self.totals.get(stage).copied().unwrap_or(0.0)
@@ -58,6 +71,38 @@ impl StageTimer {
     pub fn reset(&mut self) {
         self.totals.clear();
         self.counts.clear();
+    }
+}
+
+/// Wall-clock rate summary for a multi-event run: the headline numbers
+/// of the `throughput` subcommand and bench.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct RateStats {
+    /// Events completed.
+    pub events: u64,
+    /// Depos simulated across all events.
+    pub depos: u64,
+    /// Wall-clock for the whole stream [s].
+    pub wall_s: f64,
+}
+
+impl RateStats {
+    /// Events per second (0 for a zero-duration run).
+    pub fn events_per_sec(&self) -> f64 {
+        if self.wall_s > 0.0 {
+            self.events as f64 / self.wall_s
+        } else {
+            0.0
+        }
+    }
+
+    /// Depos per second (0 for a zero-duration run).
+    pub fn depos_per_sec(&self) -> f64 {
+        if self.wall_s > 0.0 {
+            self.depos as f64 / self.wall_s
+        } else {
+            0.0
+        }
     }
 }
 
@@ -159,6 +204,34 @@ mod tests {
         });
         assert_eq!(v, 42);
         assert!(t.total("work") >= 0.004);
+    }
+
+    #[test]
+    fn timer_merges_stage_by_stage() {
+        let mut a = StageTimer::new();
+        a.add("raster", 1.0);
+        a.add("ft", 0.5);
+        let mut b = StageTimer::new();
+        b.add("raster", 2.0);
+        b.add("raster", 1.0);
+        b.add("adc", 0.25);
+        a.merge(&b);
+        assert_eq!(a.total("raster"), 4.0);
+        assert_eq!(a.count("raster"), 3);
+        assert_eq!(a.total("ft"), 0.5);
+        assert_eq!(a.total("adc"), 0.25);
+    }
+
+    #[test]
+    fn rate_stats_rates() {
+        let r = RateStats {
+            events: 20,
+            depos: 40_000,
+            wall_s: 4.0,
+        };
+        assert_eq!(r.events_per_sec(), 5.0);
+        assert_eq!(r.depos_per_sec(), 10_000.0);
+        assert_eq!(RateStats::default().events_per_sec(), 0.0);
     }
 
     #[test]

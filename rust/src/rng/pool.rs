@@ -20,8 +20,10 @@ use super::{normal, Pcg64, UniformRng};
 /// which matches the paper's pool semantics (and is flagged in
 /// DESIGN.md as an accepted approximation for benchmarking).
 pub struct RandomPool {
-    uniforms: Vec<f32>,
-    normals: Vec<f32>,
+    // variate data is behind Arcs so sibling pools (see [`fork`]) can
+    // share the bytes while owning private cursors
+    uniforms: Arc<Vec<f32>>,
+    normals: Arc<Vec<f32>>,
     cursor: AtomicUsize,
 }
 
@@ -42,8 +44,23 @@ impl RandomPool {
             normals.push(normal(&mut rng, 0.0, 1.0) as f32);
         }
         Self {
-            uniforms,
-            normals,
+            uniforms: Arc::new(uniforms),
+            normals: Arc::new(normals),
+            cursor: AtomicUsize::new(0),
+        }
+    }
+
+    /// A sibling pool sharing this pool's (immutable) variate data but
+    /// owning a fresh cursor at zero.
+    ///
+    /// The throughput engine hands one fork per worker: generating the
+    /// pool once instead of `workers` times removes the O(workers)
+    /// startup cost, while the private cursors let each worker rewind
+    /// per event without disturbing the others.
+    pub fn fork(&self) -> Self {
+        Self {
+            uniforms: self.uniforms.clone(),
+            normals: self.normals.clone(),
             cursor: AtomicUsize::new(0),
         }
     }
@@ -233,5 +250,20 @@ mod tests {
     #[should_panic]
     fn zero_length_pool_panics() {
         let _ = RandomPool::generate(1, 0);
+    }
+
+    #[test]
+    fn fork_shares_data_with_private_cursor() {
+        let a = RandomPool::generate(9, 64);
+        let mut ca = a.claim(8);
+        let _burn: Vec<usize> = (0..8).map(|_| ca.next_index()).collect();
+        let b = a.fork();
+        assert_eq!(a.normals(), b.normals()); // same bytes, not a regen
+        // b's cursor starts fresh even though a's has advanced
+        let mut cb = b.claim(4);
+        assert_eq!(cb.next_index(), 0);
+        // and advancing b leaves a's cursor untouched
+        let mut ca2 = a.claim(1);
+        assert_eq!(ca2.next_index(), 8);
     }
 }

@@ -1,0 +1,55 @@
+//! Multi-event throughput engine: shard an event stream over a pool of
+//! persistent simulation pipelines.
+//!
+//! The paper's headline lesson (and the follow-up study
+//! arXiv:2203.02479) is that per-item dispatch is dominated by
+//! launch/transfer overhead and that *batching work against long-lived
+//! state* is the fix.  The single-event [`SimPipeline`] applies that
+//! lesson within one event; this module applies it across events:
+//! realistic production throughput means simulating a *stream* of
+//! events, amortizing every expensive resource — detector geometry,
+//! response spectra, FFT plans, thread pools, pre-computed variate
+//! pools, PJRT runtimes — over the whole stream instead of paying for
+//! them per event.
+//!
+//! ## Sharding model
+//!
+//! ```text
+//!   EventSource ──► [ SimWorker 0 (SimPipeline) ] ──►┐
+//!    (seq,seed)     [ SimWorker 1 (SimPipeline) ] ──►├─► FrameCollector
+//!     pull-based    [      ...                  ] ──►│    + Aggregate
+//!     (stealing)    [ SimWorker M-1             ] ──►┘
+//! ```
+//!
+//! * **One pipeline per worker.** Each worker owns a [`SimPipeline`]
+//!   for the whole stream, so caches stay warm and nothing is shared
+//!   hot; the only cross-worker state is the mutex-guarded source and
+//!   the aggregate report.
+//! * **Pull-based work stealing.** Workers take the next `(seq, seed)`
+//!   event ticket whenever they go idle (the pooled dataflow engine,
+//!   [`crate::dataflow::run_pooled`]), so a straggler event never
+//!   stalls the pool.
+//! * **Seed-sharded determinism.** Every stochastic stage of event
+//!   `seq` derives from [`event_seed`]`(cfg.seed, seq)` alone — depo
+//!   generation, fluctuation RNG, noise.  Which worker runs an event is
+//!   therefore unobservable in the output: with the serial backend the
+//!   frames are byte-identical for any `--workers` value, and
+//!   [`frame_digest`] gives a cheap stream-level witness of that.
+//! * **Plane fan-out stays inside the worker.** Within an event, the
+//!   intra-event parallel axes (threaded rasterization, atomic
+//!   scatter-add) come from the worker's own backend
+//!   (`--backend threads:N`), composing worker-level × backend-level
+//!   parallelism.
+//!
+//! Entry points: [`run_stream`] (library), `wire-cell throughput`
+//! (CLI), `cargo bench --bench throughput` (scaling study), and
+//! [`crate::harness::throughput`] / [`crate::harness::throughput_scaling`]
+//! which format the paper-style tables.
+//!
+//! [`SimPipeline`]: crate::coordinator::SimPipeline
+
+mod report;
+mod worker;
+
+pub use report::{frame_digest, ThroughputReport, WorkerStats};
+pub use worker::{event_seed, run_stream, StreamOptions};

@@ -1,0 +1,251 @@
+//! Stream-level aggregation: merged stage timers, per-worker
+//! utilisation, events/sec, and the order-independent frame digest.
+
+use crate::coordinator::RunReport;
+use crate::frame::Frame;
+use crate::metrics::{RateStats, StageTimer, Table};
+
+/// One FNV-1a absorption step over a 64-bit word.
+#[inline]
+fn fnv1a(mut h: u64, v: u64) -> u64 {
+    h ^= v;
+    h.wrapping_mul(0x0000_0100_0000_01b3)
+}
+
+/// FNV-1a digest over a frame's exact bit content (ident, per-plane
+/// shape, and every sample's `f32` bit pattern).
+///
+/// The stream digest is the XOR of the per-frame digests, so it is
+/// independent of completion order — two runs of the same seeded stream
+/// must produce the same digest no matter how many workers raced over
+/// it.  This is the cheap determinism witness the `throughput`
+/// subcommand prints (and the integration test asserts on) without
+/// retaining whole frames in memory.
+pub fn frame_digest(frame: &Frame) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    h = fnv1a(h, frame.ident);
+    for pf in &frame.planes {
+        h = fnv1a(h, pf.plane as u64);
+        h = fnv1a(h, pf.nchan as u64);
+        h = fnv1a(h, pf.nticks as u64);
+        for &v in &pf.data {
+            h = fnv1a(h, u64::from(v.to_bits()));
+        }
+    }
+    h
+}
+
+/// Per-worker share of a stream run.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct WorkerStats {
+    /// Worker index (0-based).
+    pub id: usize,
+    /// Events this worker completed.
+    pub events: u64,
+    /// Depos this worker simulated.
+    pub depos: u64,
+    /// Wall-clock this worker spent inside events [s].
+    pub busy_s: f64,
+}
+
+/// Everything a throughput stream run reports.
+pub struct ThroughputReport {
+    /// Headline counters: events, depos, wall-clock.
+    pub rate: RateStats,
+    /// Per-worker utilisation, in worker-id order.
+    pub workers: Vec<WorkerStats>,
+    /// Stage timers merged over all events and workers (drift, project,
+    /// raster, scatter, ft, noise, adc, plus the `raster.*` sub-steps).
+    pub stages: StageTimer,
+    /// XOR of all [`frame_digest`]s — the determinism witness.
+    pub digest: u64,
+    /// Retained frames (only with `StreamOptions::keep_frames`),
+    /// `ident` = stream sequence number, arrival order.
+    pub frames: Vec<Frame>,
+    /// Per-event failures (the stream continues past them).
+    pub errors: Vec<String>,
+    /// Backend label the workers ran.
+    pub backend: String,
+}
+
+impl ThroughputReport {
+    /// Events per second over the stream wall-clock.
+    pub fn events_per_sec(&self) -> f64 {
+        self.rate.events_per_sec()
+    }
+
+    /// Depos per second over the stream wall-clock.
+    pub fn depos_per_sec(&self) -> f64 {
+        self.rate.depos_per_sec()
+    }
+
+    /// Per-stage aggregate table (total, mean per event, call count).
+    pub fn stage_table(&self) -> Table {
+        let mut t = Table::new(
+            &format!(
+                "throughput — {} events, {} workers, backend {}",
+                self.rate.events,
+                self.workers.len(),
+                self.backend
+            ),
+            &["Stage", "Total [s]", "Mean/event [ms]", "Calls"],
+        );
+        let events = self.rate.events.max(1) as f64;
+        for (stage, secs, calls) in self.stages.stages() {
+            t.row(&[
+                stage,
+                format!("{secs:.3}"),
+                format!("{:.3}", secs / events * 1e3),
+                calls.to_string(),
+            ]);
+        }
+        t
+    }
+
+    /// Per-worker utilisation table (events, depos, busy time, share).
+    pub fn worker_table(&self) -> Table {
+        let mut t = Table::new(
+            "per-worker utilisation",
+            &["Worker", "Events", "Depos", "Busy [s]", "Busy share"],
+        );
+        let busy_total: f64 = self.workers.iter().map(|w| w.busy_s).sum();
+        for w in &self.workers {
+            let share = if busy_total > 0.0 {
+                100.0 * w.busy_s / busy_total
+            } else {
+                0.0
+            };
+            t.row(&[
+                w.id.to_string(),
+                w.events.to_string(),
+                w.depos.to_string(),
+                format!("{:.3}", w.busy_s),
+                format!("{share:.0}%"),
+            ]);
+        }
+        t
+    }
+}
+
+/// Mutable accumulation shared by the workers of one stream run.
+pub(crate) struct Aggregate {
+    pub(crate) workers: Vec<WorkerStats>,
+    pub(crate) stages: StageTimer,
+    pub(crate) events: u64,
+    pub(crate) depos: u64,
+    pub(crate) digest: u64,
+    pub(crate) errors: Vec<String>,
+}
+
+impl Aggregate {
+    /// Empty aggregate for `n` workers.
+    pub(crate) fn new(n: usize) -> Self {
+        Self {
+            workers: (0..n)
+                .map(|id| WorkerStats {
+                    id,
+                    ..WorkerStats::default()
+                })
+                .collect(),
+            stages: StageTimer::new(),
+            events: 0,
+            depos: 0,
+            digest: 0,
+            errors: Vec::new(),
+        }
+    }
+
+    /// Fold one finished event into the aggregate.
+    pub(crate) fn record(&mut self, worker: usize, report: &RunReport, digest: u64, busy_s: f64) {
+        self.events += 1;
+        self.depos += report.depos as u64;
+        self.digest ^= digest;
+        self.stages.merge(&report.stages);
+        let raster = report.raster_total();
+        self.stages.add("raster.sampling", raster.sampling_s);
+        self.stages.add("raster.fluctuation", raster.fluctuation_s);
+        let w = &mut self.workers[worker];
+        w.events += 1;
+        w.depos += report.depos as u64;
+        w.busy_s += busy_s;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::frame::PlaneFrame;
+    use crate::geometry::PlaneId;
+
+    fn small_frame(ident: u64) -> Frame {
+        let mut pf = PlaneFrame::zeros(PlaneId::U, 2, 4);
+        pf.data[3] = 1.25;
+        Frame {
+            planes: vec![pf],
+            ident,
+        }
+    }
+
+    #[test]
+    fn digest_is_stable_and_bit_sensitive() {
+        let a = small_frame(0);
+        let b = small_frame(0);
+        assert_eq!(frame_digest(&a), frame_digest(&b));
+        let mut c = small_frame(0);
+        c.planes[0].data[3] = f32::from_bits(1.25f32.to_bits() + 1); // one ulp
+        assert_ne!(frame_digest(&a), frame_digest(&c));
+        // the event number is part of the digest
+        assert_ne!(frame_digest(&a), frame_digest(&small_frame(1)));
+    }
+
+    #[test]
+    fn aggregate_tracks_per_worker_shares() {
+        let mut agg = Aggregate::new(2);
+        assert_eq!(agg.workers.len(), 2);
+        assert_eq!(agg.workers[1].id, 1);
+        agg.digest ^= 7;
+        agg.digest ^= 7;
+        assert_eq!(agg.digest, 0); // XOR-combine is order independent
+    }
+
+    #[test]
+    fn tables_render() {
+        let report = ThroughputReport {
+            rate: RateStats {
+                events: 4,
+                depos: 400,
+                wall_s: 2.0,
+            },
+            workers: vec![
+                WorkerStats {
+                    id: 0,
+                    events: 3,
+                    depos: 300,
+                    busy_s: 1.5,
+                },
+                WorkerStats {
+                    id: 1,
+                    events: 1,
+                    depos: 100,
+                    busy_s: 0.5,
+                },
+            ],
+            stages: {
+                let mut s = StageTimer::new();
+                s.add("raster", 1.0);
+                s
+            },
+            digest: 0xdead_beef,
+            frames: Vec::new(),
+            errors: Vec::new(),
+            backend: "serial".into(),
+        };
+        assert_eq!(report.events_per_sec(), 2.0);
+        let st = report.stage_table().render();
+        assert!(st.contains("raster"));
+        assert!(st.contains("4 events"));
+        let wt = report.worker_table().render();
+        assert!(wt.contains("75%"));
+        assert!(wt.contains("25%"));
+    }
+}

@@ -1,0 +1,294 @@
+//! The worker pool: event tickets, per-worker pipelines, and the
+//! stream driver built on the pooled dataflow engine.
+
+use super::report::{frame_digest, Aggregate, ThroughputReport};
+use crate::config::SimConfig;
+use crate::coordinator::SimPipeline;
+use crate::dataflow::{run_pooled, FunctionNode, Payload, SinkNode, SourceNode};
+use crate::depo::{CosmicSource, DepoSource};
+use crate::frame::Frame;
+use crate::metrics::RateStats;
+use anyhow::Result;
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+/// Options for one throughput stream run.
+#[derive(Clone, Copy, Debug)]
+pub struct StreamOptions {
+    /// Number of events in the stream.
+    pub events: usize,
+    /// Worker pipelines running concurrently (clamped to `events`).
+    pub workers: usize,
+    /// Retain the simulated frames in the report.  Memory-heavy for
+    /// long streams; the determinism digest is always computed, so
+    /// verification does not require retention.
+    pub keep_frames: bool,
+}
+
+impl Default for StreamOptions {
+    fn default() -> Self {
+        Self {
+            events: 8,
+            workers: 1,
+            keep_frames: false,
+        }
+    }
+}
+
+/// Per-event seed: a splitmix64-style mix of the base seed and the
+/// stream sequence number.
+///
+/// Every stochastic stage of event `seq` — depo generation, backend
+/// fluctuation RNG, noise — derives from this value alone, which is
+/// what makes the stream's output independent of worker count and
+/// scheduling order.
+pub fn event_seed(base: u64, seq: u64) -> u64 {
+    let mut z = base ^ seq.wrapping_mul(0x9E37_79B9_7F4A_7C15);
+    z = z.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// Source of event tickets: cheap `(seq, seed)` pairs, so the shared
+/// source lock is held for nanoseconds and depo generation happens in
+/// parallel on the workers.
+struct EventSource {
+    next: u64,
+    events: u64,
+    base_seed: u64,
+}
+
+impl SourceNode for EventSource {
+    fn name(&self) -> String {
+        "EventSource".into()
+    }
+
+    fn next(&mut self) -> Option<Payload> {
+        if self.next >= self.events {
+            return None;
+        }
+        let seq = self.next;
+        self.next += 1;
+        Some(Payload::Event {
+            seq,
+            seed: event_seed(self.base_seed, seq),
+            depos: Vec::new(),
+        })
+    }
+}
+
+/// One worker of the pool: a persistent [`SimPipeline`] that turns
+/// event tickets into frames, recording timings into the shared
+/// aggregate.
+struct SimWorker {
+    id: usize,
+    pipe: SimPipeline,
+    depos_per_event: usize,
+    keep_frames: bool,
+    agg: Arc<Mutex<Aggregate>>,
+}
+
+impl FunctionNode for SimWorker {
+    fn name(&self) -> String {
+        format!("SimWorker[{}]", self.id)
+    }
+
+    fn call(&mut self, input: Payload) -> Vec<Payload> {
+        let Payload::Event { seq, seed, depos } = input else {
+            return vec![input]; // pass foreign payloads through
+        };
+        let t0 = Instant::now();
+        let depos = if depos.is_empty() {
+            CosmicSource::with_target_depos(
+                self.pipe.detector().clone(),
+                self.depos_per_event,
+                seed,
+            )
+            .generate()
+        } else {
+            depos
+        };
+        self.pipe.reseed(seed);
+        match self.pipe.run(&depos) {
+            Ok(mut report) => {
+                let busy = t0.elapsed().as_secs_f64();
+                let mut frame = report.frame.take();
+                if let Some(f) = frame.as_mut() {
+                    // stamp the stream position: stable across worker
+                    // counts, unlike arrival order
+                    f.ident = seq;
+                }
+                let digest = frame.as_ref().map(frame_digest).unwrap_or(0);
+                self.agg
+                    .lock()
+                    .unwrap()
+                    .record(self.id, &report, digest, busy);
+                match frame {
+                    Some(f) if self.keep_frames => vec![Payload::Frame(f)],
+                    _ => Vec::new(),
+                }
+            }
+            Err(e) => {
+                self.agg
+                    .lock()
+                    .unwrap()
+                    .errors
+                    .push(format!("event {seq}: {e:#}"));
+                Vec::new()
+            }
+        }
+    }
+}
+
+/// Sink retaining frames when the stream keeps them.
+struct FrameCollector {
+    frames: Arc<Mutex<Vec<Frame>>>,
+}
+
+impl SinkNode for FrameCollector {
+    fn name(&self) -> String {
+        "FrameCollector".into()
+    }
+
+    fn consume(&mut self, input: Payload) {
+        if let Payload::Frame(f) = input {
+            self.frames.lock().unwrap().push(f);
+        }
+    }
+}
+
+/// Simulate a stream of `opts.events` events across `opts.workers`
+/// persistent pipelines and aggregate the results.
+///
+/// Event `seq` is generated from [`event_seed`]`(cfg.seed, seq)` with
+/// `cfg.target_depos` depos, then run through a worker's pipeline
+/// (drift → raster → scatter → FT → noise → ADC under `cfg`).  All
+/// pipelines are built up front so configuration errors surface before
+/// any thread spawns.
+pub fn run_stream(cfg: &SimConfig, opts: &StreamOptions) -> Result<ThroughputReport> {
+    let events = opts.events.max(1);
+    let workers = opts.workers.max(1).min(events);
+    let agg = Arc::new(Mutex::new(Aggregate::new(workers)));
+    let frames = Arc::new(Mutex::new(Vec::new()));
+    let mut prebuilt: Vec<Box<dyn FunctionNode>> = Vec::with_capacity(workers);
+    // generate the (identical) variate data once; each worker adopts a
+    // fork — shared bytes, private cursor
+    let template = SimPipeline::variate_pool_for(cfg);
+    for id in 0..workers {
+        let pipe = SimPipeline::with_variate_pool(cfg.clone(), Arc::new(template.fork()))?;
+        prebuilt.push(Box::new(SimWorker {
+            id,
+            pipe,
+            depos_per_event: cfg.target_depos,
+            keep_frames: opts.keep_frames,
+            agg: agg.clone(),
+        }));
+    }
+    // Workers pop a pre-built chain each; stats are keyed by the
+    // chain's own id, so pop order is irrelevant.
+    let prebuilt = Mutex::new(prebuilt);
+    let source = Box::new(EventSource {
+        next: 0,
+        events: events as u64,
+        base_seed: cfg.seed,
+    });
+    let sink = Box::new(FrameCollector {
+        frames: frames.clone(),
+    });
+    let backend = cfg.backend.label();
+    let t0 = Instant::now();
+    let engine = run_pooled(source, sink, workers, |_w| {
+        vec![prebuilt
+            .lock()
+            .unwrap()
+            .pop()
+            .expect("one pre-built chain per worker")]
+    });
+    let wall_s = t0.elapsed().as_secs_f64();
+    debug_assert_eq!(engine.produced, events as u64);
+    let agg = std::mem::replace(&mut *agg.lock().unwrap(), Aggregate::new(0));
+    let frames = std::mem::take(&mut *frames.lock().unwrap());
+    Ok(ThroughputReport {
+        rate: RateStats {
+            events: agg.events,
+            depos: agg.depos,
+            wall_s,
+        },
+        workers: agg.workers,
+        stages: agg.stages,
+        digest: agg.digest,
+        frames,
+        errors: agg.errors,
+        backend,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{BackendChoice, FluctuationMode};
+
+    fn small_cfg() -> SimConfig {
+        let mut cfg = SimConfig::default();
+        cfg.backend = BackendChoice::Serial;
+        cfg.fluctuation = FluctuationMode::None;
+        cfg.noise = false;
+        cfg.target_depos = 300;
+        cfg.pool_size = 1 << 14;
+        cfg.seed = 41;
+        cfg
+    }
+
+    #[test]
+    fn event_seeds_are_deterministic_and_distinct() {
+        assert_eq!(event_seed(1, 5), event_seed(1, 5));
+        let seeds: Vec<u64> = (0..64).map(|i| event_seed(12345, i)).collect();
+        let mut dedup = seeds.clone();
+        dedup.sort_unstable();
+        dedup.dedup();
+        assert_eq!(dedup.len(), seeds.len(), "seed collision in {seeds:?}");
+        assert_ne!(event_seed(1, 0), event_seed(2, 0));
+    }
+
+    #[test]
+    fn stream_runs_all_events_once() {
+        let report = run_stream(
+            &small_cfg(),
+            &StreamOptions {
+                events: 5,
+                workers: 2,
+                keep_frames: true,
+            },
+        )
+        .unwrap();
+        assert_eq!(report.rate.events, 5);
+        assert!(report.errors.is_empty());
+        assert_eq!(report.frames.len(), 5);
+        // every sequence number exactly once
+        let mut seqs: Vec<u64> = report.frames.iter().map(|f| f.ident).collect();
+        seqs.sort_unstable();
+        assert_eq!(seqs, vec![0, 1, 2, 3, 4]);
+        // worker shares add up
+        assert_eq!(report.workers.iter().map(|w| w.events).sum::<u64>(), 5);
+        assert!(report.rate.wall_s > 0.0);
+        assert!(report.stages.total("raster") > 0.0);
+    }
+
+    #[test]
+    fn workers_clamped_to_events() {
+        let report = run_stream(
+            &small_cfg(),
+            &StreamOptions {
+                events: 2,
+                workers: 8,
+                keep_frames: false,
+            },
+        )
+        .unwrap();
+        assert_eq!(report.workers.len(), 2);
+        assert_eq!(report.rate.events, 2);
+        assert!(report.frames.is_empty()); // not kept
+        assert_ne!(report.digest, 0); // but still digested
+    }
+}
