@@ -5,6 +5,8 @@
 //!   cause of Table 2 isolated from any offload effect.
 //! * Patch size (nsigma sweep): dispatch-overhead-to-work ratio.
 //! * Scatter implementation: serial vs atomic vs tile-striped.
+//! * Fused SoA kernel vs per-patch, per fluctuation mode: how much of
+//!   the fused win survives when RNG cost dominates (docs/KERNELS.md).
 //! * FFT path: radix-2 vs Bluestein grid sizes for the FT stage.
 //!
 //! ```sh
@@ -112,6 +114,27 @@ fn main() -> anyhow::Result<()> {
                 "{:.4}",
                 time_it(&mut |g| scatter_tiled(g, &wl.spec, &patches, &tp, ExecPolicy::Threads(threads)))
             ),
+        ]);
+    }
+    common::emit(&t);
+
+    // --- fused SoA kernel vs per-patch, per fluctuation mode ----------
+    let mut t = Table::new(
+        &format!("Ablation: per-patch vs fused SoA kernel ({n} depos, serial)"),
+        &["Mode", "Per-patch [s]", "Fused [s]", "Speedup", "Digests equal"],
+    );
+    for mode in [FluctuationMode::None, FluctuationMode::Pool, FluctuationMode::Inline] {
+        let mut c = cfg.clone();
+        c.fluctuation = mode;
+        let (_, rows) = wirecell::harness::fused_sweep(&c, &[n], repeat)?;
+        let r = &rows[0];
+        assert!(r.digests_match, "fused digest diverged in mode {mode:?}");
+        t.row(&[
+            format!("{mode:?}"),
+            format!("{:.3}", r.per_patch_s),
+            format!("{:.3}", r.fused_s),
+            format!("{:.2}x", r.speedup),
+            r.digests_match.to_string(),
         ]);
     }
     common::emit(&t);

@@ -1,7 +1,12 @@
-//! Figure 3 vs Figure 4 strategy comparison (the paper *proposes*
-//! Figure 4 and predicts it will win; we implement and measure it):
-//! per-depo offload vs batched offload vs the fully fused
-//! device-resident pipeline, as a function of workload size.
+//! Strategy comparison, two parts:
+//!
+//! 1. **Serial backend, per-patch vs fused SoA** (no artifacts needed):
+//!    the fused kernel must be ≥ 2× faster than the per-patch path at
+//!    scale *and* bit-identical (grid-digest witness) — the
+//!    acceptance gate of the fused-kernel work (docs/KERNELS.md).
+//! 2. **Device strategy sweep** (Figure 3 vs Figure 4; needs AOT
+//!    artifacts): per-depo offload vs batched offload vs the fully
+//!    fused device-resident pipeline, as a function of workload size.
 //!
 //! ```sh
 //! cargo bench --bench strategy
@@ -9,20 +14,83 @@
 
 mod common;
 
-use wirecell::config::SimConfig;
-use wirecell::harness::strategy_sweep;
+use wirecell::config::{FluctuationMode, SimConfig};
+use wirecell::harness::{fused_sweep, strategy_sweep};
 
 fn main() -> anyhow::Result<()> {
-    if !common::have_artifacts() {
-        eprintln!("artifacts/ missing — run `make artifacts` first");
-        return Ok(());
-    }
     let top = common::depos(16_000);
     let repeat = common::repeat(3);
     let counts: Vec<usize> = [1000usize, 4000, 16000, 64000]
         .into_iter()
         .filter(|&c| c <= top.max(1000))
         .collect();
+
+    // --- serial backend: per-patch vs fused SoA kernel ---------------
+    // no-RNG mode isolates the data-path effect (allocation + extra
+    // passes) the fused kernel removes; the digest check still bites
+    let mut cfg = SimConfig::default();
+    cfg.fluctuation = FluctuationMode::None;
+    let (table, rows) = fused_sweep(&cfg, &counts, repeat)?;
+    common::emit(&table);
+    for r in &rows {
+        assert!(
+            r.digests_match,
+            "fused grid diverged from per-patch at n={}",
+            r.n
+        );
+        assert!(
+            r.fused_s < r.per_patch_s,
+            "fused ({:.4}s) should beat per-patch ({:.4}s) at n={}",
+            r.fused_s,
+            r.per_patch_s,
+            r.n
+        );
+    }
+    // the headline gate: once fixed costs have amortized (n ≥ 4000),
+    // the best row must clear 2x (see docs/BENCHMARKS.md); with
+    // WCT_BENCH_DEPOS below that regime there is no qualifying row
+    // and the gate is skipped rather than applied out of its premise
+    match rows
+        .iter()
+        .filter(|r| r.n >= 4000)
+        .max_by(|a, b| a.speedup.partial_cmp(&b.speedup).unwrap())
+    {
+        Some(best) => {
+            assert!(
+                best.speedup >= 2.0,
+                "fused speedup {:.2}x below the 2x gate (best row, n={})",
+                best.speedup,
+                best.n
+            );
+            println!(
+                "fused SoA kernel: {:.1}x over per-patch at {} depos (digests equal)",
+                best.speedup, best.n
+            );
+        }
+        None => eprintln!(
+            "workloads all below 4000 depos — skipping the 2x gate (digest checks still ran)"
+        ),
+    }
+
+    // pool-RNG mode: the digest witness through the variate-pool path
+    let mut cfg_pool = SimConfig::default();
+    cfg_pool.fluctuation = FluctuationMode::Pool;
+    let pool_counts = &counts[..counts.len().min(2)];
+    let (table, rows) = fused_sweep(&cfg_pool, pool_counts, repeat)?;
+    common::emit(&table);
+    for r in &rows {
+        assert!(
+            r.digests_match,
+            "fused pool-RNG grid diverged from per-patch at n={}",
+            r.n
+        );
+    }
+
+    // --- device strategy sweep (Figure 3 vs Figure 4) ----------------
+    if !common::have_artifacts() {
+        eprintln!("artifacts/ missing — skipping the device strategy sweep (run `make artifacts`)");
+        return Ok(());
+    }
     let cfg = SimConfig::default();
     let (table, series) = strategy_sweep(&cfg, &counts, repeat)?;
     common::emit(&table);
@@ -46,6 +114,10 @@ fn main() -> anyhow::Result<()> {
         }
     }
     let (_, p, b, _) = series.last().unwrap();
-    println!("at {} depos: batching wins {:.1}x over per-depo", series.last().unwrap().0, p / b);
+    println!(
+        "at {} depos: batching wins {:.1}x over per-depo",
+        series.last().unwrap().0,
+        p / b
+    );
     Ok(())
 }

@@ -1,10 +1,12 @@
 #!/usr/bin/env bash
-# CI gate: build, tests, formatting, and the documentation guarantee
-# (`cargo doc` must stay clean — lib.rs carries #![warn(missing_docs)],
-# and RUSTDOCFLAGS promotes those warnings to errors here).
+# CI gate: build, tests, lints, bench compilation, formatting, and the
+# documentation guarantee (`cargo doc` must stay clean — lib.rs carries
+# #![warn(missing_docs)], and RUSTDOCFLAGS promotes those warnings to
+# errors here).
 #
-# Usage: ./ci.sh            # full gate
-#        SKIP_FMT=1 ./ci.sh # e.g. on toolchains without rustfmt
+# Usage: ./ci.sh               # full gate
+#        SKIP_FMT=1 ./ci.sh    # e.g. on toolchains without rustfmt
+#        SKIP_CLIPPY=1 ./ci.sh # e.g. on toolchains without clippy
 set -euo pipefail
 cd "$(dirname "$0")"
 
@@ -15,6 +17,26 @@ run() {
 
 run cargo build --release
 run cargo test -q
+
+# Lint gate: warnings are errors.  The -A list holds the project-wide
+# style dispensations (documented in rust/src/lib.rs); it rides the
+# command line so it also covers tests/benches/examples, which are
+# separate crates that crate-level allows in lib.rs cannot reach.
+if [ -z "${SKIP_CLIPPY:-}" ] && cargo clippy --version >/dev/null 2>&1; then
+    run cargo clippy --all-targets -- -D warnings \
+        -A clippy::should_implement_trait \
+        -A clippy::new_without_default \
+        -A clippy::too_many_arguments \
+        -A clippy::needless_range_loop \
+        -A clippy::field_reassign_with_default
+else
+    echo "==> skipping clippy (SKIP_CLIPPY set or cargo-clippy not installed)"
+fi
+
+# Bench-rot gate: every bench target must still compile (the benches
+# carry the paper-shape assertions, so letting them rot silently would
+# hollow out the reproduction — see docs/BENCHMARKS.md).
+run cargo bench --no-run
 
 if [ -z "${SKIP_FMT:-}" ]; then
     run cargo fmt --check

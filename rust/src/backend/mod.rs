@@ -13,10 +13,13 @@
 //!
 //! The *strategy* dimension (paper Figures 3 vs 4) is orthogonal:
 //! `Strategy::PerDepo` dispatches one tiny kernel per depo (the paper's
-//! initial port; dominated by dispatch/transfer overhead), while
+//! initial port; dominated by dispatch/transfer overhead),
 //! `Strategy::Batched` processes depos in large blocks (the proposed
-//! fix).  Both are implemented for every backend so the benches can
-//! fill the full matrix.
+//! fix), and `Strategy::Fused` goes one step further — a single SoA
+//! pass per event that rasterizes, fluctuates, and scatter-adds with
+//! no intermediate patches ([`ExecBackend::rasterize_fused`], built on
+//! [`crate::kernel`]).  All are implemented for every backend so the
+//! benches can fill the full matrix.
 //!
 //! Stage timings are split into the paper's two columns —
 //! "2D sampling" and "fluctuation" — at the same boundaries the paper
@@ -31,7 +34,9 @@ pub use pjrt::PjrtBackend;
 pub use serial::SerialBackend;
 pub use threaded::ThreadedBackend;
 
+use crate::kernel::FusedOutput;
 use crate::raster::{DepoView, GridSpec, Patch};
+use crate::scatter::PlaneGrid;
 use anyhow::Result;
 
 /// Accumulated sub-step wall-clock, in seconds (Table 2/3 columns).
@@ -75,7 +80,52 @@ pub trait ExecBackend: Send {
     fn label(&self) -> String;
 
     /// Rasterize the views into patches, timing the two sub-steps.
+    ///
+    /// # Example
+    ///
+    /// ```
+    /// use wirecell::backend::{ExecBackend, SerialBackend};
+    /// use wirecell::config::FluctuationMode;
+    /// use wirecell::raster::{DepoView, GridSpec, RasterParams};
+    /// use wirecell::units::{MM, US};
+    ///
+    /// let spec = GridSpec::new(40, 3.0 * MM, 64, 0.5 * US, 5, 2);
+    /// let view = DepoView {
+    ///     pitch: 60.0 * MM, time: 16.0 * US,
+    ///     sigma_pitch: 1.5 * MM, sigma_time: 0.8 * US, charge: 5000.0,
+    /// };
+    /// let mut backend = SerialBackend::new(RasterParams::default(), FluctuationMode::None, 1, None);
+    /// let out = backend.rasterize(&[view], &spec)?;
+    /// assert_eq!(out.patches.len(), 1);
+    /// assert!((out.patches[0].total() - 5000.0).abs() < 1.0);
+    /// # Ok::<(), anyhow::Error>(())
+    /// ```
     fn rasterize(&mut self, views: &[DepoView], spec: &GridSpec) -> Result<RasterOutput>;
+
+    /// Fused rasterize + scatter (`Strategy::Fused`): rasterize the
+    /// views and accumulate them straight onto `grid`, without
+    /// returning intermediate patches.
+    ///
+    /// The default implementation is the portable fallback — per-patch
+    /// [`rasterize`](Self::rasterize) followed by a serial scatter-add —
+    /// so every backend supports the fused strategy; the CPU backends
+    /// override it with the truly fused SoA kernels in
+    /// [`crate::kernel`], and the device backend with a streaming
+    /// chunk scatter.
+    fn rasterize_fused(
+        &mut self,
+        views: &[DepoView],
+        spec: &GridSpec,
+        grid: &mut PlaneGrid,
+    ) -> Result<FusedOutput> {
+        let out = self.rasterize(views, spec)?;
+        crate::scatter::scatter_serial(grid, spec, &out.patches);
+        Ok(FusedOutput {
+            depos: out.patches.len(),
+            bins: out.patches.iter().map(|p| p.size()).sum(),
+            timings: out.timings,
+        })
+    }
 }
 
 #[cfg(test)]

@@ -3,9 +3,11 @@
 
 use super::{ExecBackend, RasterOutput, StageTimings};
 use crate::config::Strategy;
+use crate::kernel::FusedOutput;
 use crate::raster::{patch_window, DepoView, GridSpec, Patch, RasterParams};
 use crate::rng::RandomPool;
 use crate::runtime::{Runtime, TensorInput};
+use crate::scatter::PlaneGrid;
 use anyhow::{anyhow, Result};
 use std::sync::Arc;
 use std::time::Instant;
@@ -107,6 +109,42 @@ impl PjrtBackend {
         }
     }
 
+    /// Marshal one chunk of views into the `raster_batch_*` input
+    /// vectors.  Shared by the batched and fused paths so the
+    /// parameter-vector layout (and the sigma floors baked into it)
+    /// can never diverge between them.
+    fn marshal_chunk(
+        &self,
+        chunk: &[&DepoView],
+        spec: &GridSpec,
+        batch: usize,
+        p: usize,
+        t: usize,
+    ) -> ChunkInputs {
+        let mut params = vec![0f32; batch * 5];
+        let mut windows = vec![0i32; batch * 2];
+        let mut origins = Vec::with_capacity(chunk.len());
+        for (i, view) in chunk.iter().enumerate() {
+            let (pb, tb) = self.fixed_window(view, spec, p, t);
+            params[i * 5] = view.pitch as f32;
+            params[i * 5 + 1] = view.time as f32;
+            params[i * 5 + 2] = view.sigma_pitch.max(self.params.min_sigma_pitch) as f32;
+            params[i * 5 + 3] = view.sigma_time.max(self.params.min_sigma_time) as f32;
+            params[i * 5 + 4] = view.charge as f32;
+            windows[i * 2] = pb;
+            windows[i * 2 + 1] = tb;
+            origins.push((pb, tb));
+        }
+        let mut normals = vec![0f32; batch * p * t];
+        self.pool.fill_normals(&mut normals);
+        ChunkInputs {
+            params,
+            windows,
+            origins,
+            normals,
+        }
+    }
+
     fn rasterize_per_depo(&self, views: &[DepoView], spec: &GridSpec) -> Result<RasterOutput> {
         let (p, t) = self.patch_shape();
         let sample_name = format!("raster_sample_single_{}", self.grid_name);
@@ -182,31 +220,16 @@ impl PjrtBackend {
             .filter(|v| patch_window(v, spec, &self.params).is_some())
             .collect();
         for chunk in kept.chunks(batch) {
-            let n = chunk.len();
-            let mut params = vec![0f32; batch * 5];
-            let mut windows = vec![0i32; batch * 2];
-            let mut origins = Vec::with_capacity(n);
-            for (i, view) in chunk.iter().enumerate() {
-                let (pb, tb) = self.fixed_window(view, spec, p, t);
-                params[i * 5] = view.pitch as f32;
-                params[i * 5 + 1] = view.time as f32;
-                params[i * 5 + 2] = view.sigma_pitch.max(self.params.min_sigma_pitch) as f32;
-                params[i * 5 + 3] = view.sigma_time.max(self.params.min_sigma_time) as f32;
-                params[i * 5 + 4] = view.charge as f32;
-                windows[i * 2] = pb;
-                windows[i * 2 + 1] = tb;
-                origins.push((pb, tb));
-            }
-            let mut normals = vec![0f32; batch * p * t];
-            self.pool.fill_normals(&mut normals);
+            let inputs = self.marshal_chunk(chunk, spec, batch, p, t);
+            let origins = &inputs.origins;
 
             let t0 = Instant::now();
             let out = self.runtime.execute_f32(
                 &name,
                 &[
-                    TensorInput::F32(&params, vec![batch as i64, 5]),
-                    TensorInput::I32(&windows, vec![batch as i64, 2]),
-                    TensorInput::F32(&normals, vec![batch as i64, p as i64, t as i64]),
+                    TensorInput::F32(&inputs.params, vec![batch as i64, 5]),
+                    TensorInput::I32(&inputs.windows, vec![batch as i64, 2]),
+                    TensorInput::F32(&inputs.normals, vec![batch as i64, p as i64, t as i64]),
                 ],
             )?;
             self.busy_sync();
@@ -233,10 +256,24 @@ impl PjrtBackend {
     }
 }
 
+/// One chunk's marshalled `raster_batch_*` inputs (see
+/// [`PjrtBackend::marshal_chunk`]).
+struct ChunkInputs {
+    /// Per-depo parameter vectors, `[batch × 5]` row-major.
+    params: Vec<f32>,
+    /// Per-depo window origins for the device, `[batch × 2]`.
+    windows: Vec<i32>,
+    /// The same origins, host-side, for the scatter stage.
+    origins: Vec<(i32, i32)>,
+    /// Pool normals, `[batch × P × T]`.
+    normals: Vec<f32>,
+}
+
 fn strategy_tag(s: Strategy) -> &'static str {
     match s {
         Strategy::PerDepo => "per-depo",
         Strategy::Batched => "batched",
+        Strategy::Fused => "fused",
     }
 }
 
@@ -248,8 +285,74 @@ impl ExecBackend for PjrtBackend {
     fn rasterize(&mut self, views: &[DepoView], spec: &GridSpec) -> Result<RasterOutput> {
         match self.strategy {
             Strategy::PerDepo => self.rasterize_per_depo(views, spec),
-            Strategy::Batched => self.rasterize_batched(views, spec),
+            // the patch-returning API has no fused representation; the
+            // fused path is `rasterize_fused` below
+            Strategy::Batched | Strategy::Fused => self.rasterize_batched(views, spec),
         }
+    }
+
+    /// Fused device strategy: the batched param-vector export
+    /// (one `raster_batch_*` execute per chunk), with each returned
+    /// device buffer scatter-added straight onto the grid — no `Patch`
+    /// vector is ever materialized, so host memory stays O(batch)
+    /// instead of O(event).
+    fn rasterize_fused(
+        &mut self,
+        views: &[DepoView],
+        spec: &GridSpec,
+        grid: &mut PlaneGrid,
+    ) -> Result<FusedOutput> {
+        let (p, t) = self.patch_shape();
+        let batch = self.runtime.manifest().batch;
+        let name = format!("raster_batch_{}", self.grid_name);
+        self.runtime.warmup(&name)?;
+        let kept: Vec<&DepoView> = views
+            .iter()
+            .filter(|v| patch_window(v, spec, &self.params).is_some())
+            .collect();
+        let nticks = grid.nticks;
+        let mut timings = StageTimings::default();
+        let mut bins = 0usize;
+        for chunk in kept.chunks(batch) {
+            let inputs = self.marshal_chunk(chunk, spec, batch, p, t);
+
+            let t0 = Instant::now();
+            let out = self.runtime.execute_f32(
+                &name,
+                &[
+                    TensorInput::F32(&inputs.params, vec![batch as i64, 5]),
+                    TensorInput::I32(&inputs.windows, vec![batch as i64, 2]),
+                    TensorInput::F32(&inputs.normals, vec![batch as i64, p as i64, t as i64]),
+                ],
+            )?;
+            self.busy_sync();
+            let dt = t0.elapsed().as_secs_f64();
+            timings.sampling_s += dt * 0.5;
+            timings.fluctuation_s += dt * 0.5;
+
+            // stream the device buffer straight onto the grid
+            for (i, (pb, tb)) in inputs.origins.iter().enumerate() {
+                let vals = &out[i * p * t..(i + 1) * p * t];
+                for pp in 0..p {
+                    let Some(w) = spec.wire_of(*pb as i64 + pp as i64) else {
+                        continue;
+                    };
+                    let row = w * nticks;
+                    for tt in 0..t {
+                        let Some(k) = spec.tick_of(*tb as i64 + tt as i64) else {
+                            continue;
+                        };
+                        grid.data[row + k] += vals[pp * t + tt];
+                    }
+                }
+                bins += p * t;
+            }
+        }
+        Ok(FusedOutput {
+            depos: kept.len(),
+            bins,
+            timings,
+        })
     }
 }
 

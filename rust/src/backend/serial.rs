@@ -2,8 +2,10 @@
 
 use super::{ExecBackend, RasterOutput, StageTimings};
 use crate::config::FluctuationMode;
+use crate::kernel::{rasterize_fused_serial, FusedOutput};
 use crate::raster::{fluctuate, patch_window, sample_2d, DepoView, Fluctuation, GridSpec, Patch, RasterParams};
 use crate::rng::{Pcg32, RandomPool};
+use crate::scatter::PlaneGrid;
 use anyhow::Result;
 use std::sync::Arc;
 use std::time::Instant;
@@ -86,6 +88,38 @@ impl ExecBackend for SerialBackend {
             });
         }
         Ok(RasterOutput { patches, timings })
+    }
+
+    /// The fused SoA kernel, single-threaded.  Uses the same RNG state
+    /// (inline generator or variate-pool cursor) as
+    /// [`rasterize`](ExecBackend::rasterize), so the produced grid is
+    /// bit-identical to per-patch rasterize + serial scatter.
+    fn rasterize_fused(
+        &mut self,
+        views: &[DepoView],
+        spec: &GridSpec,
+        grid: &mut PlaneGrid,
+    ) -> Result<FusedOutput> {
+        let out = match self.mode {
+            FluctuationMode::None => {
+                rasterize_fused_serial(views, spec, &self.params, &mut Fluctuation::None, grid)
+            }
+            FluctuationMode::Inline => rasterize_fused_serial(
+                views,
+                spec,
+                &self.params,
+                &mut Fluctuation::InlineBinomial(&mut self.rng),
+                grid,
+            ),
+            FluctuationMode::Pool => rasterize_fused_serial(
+                views,
+                spec,
+                &self.params,
+                &mut Fluctuation::PoolNormal(self.pool.as_ref().unwrap()),
+                grid,
+            ),
+        };
+        Ok(out)
     }
 }
 
@@ -172,6 +206,33 @@ mod tests {
     #[should_panic(expected = "pool mode needs a RandomPool")]
     fn pool_mode_without_pool_panics() {
         let _ = SerialBackend::new(RasterParams::default(), FluctuationMode::Pool, 1, None);
+    }
+
+    #[test]
+    fn fused_equals_per_patch_plus_scatter() {
+        // the strategy knob must not change the physics on one thread:
+        // fused grid == rasterize + scatter_serial, bit for bit
+        let vs = views(25);
+        let s = spec();
+        let pool = RandomPool::shared(3, 1 << 16);
+        for mode in [FluctuationMode::None, FluctuationMode::Inline, FluctuationMode::Pool] {
+            let mut a = SerialBackend::new(RasterParams::default(), mode, 7, Some(pool.clone()));
+            pool.reset();
+            let out = a.rasterize(&vs, &s).unwrap();
+            let mut ref_grid = PlaneGrid::for_spec(&s);
+            crate::scatter::scatter_serial(&mut ref_grid, &s, &out.patches);
+
+            let mut b = SerialBackend::new(RasterParams::default(), mode, 7, Some(pool.clone()));
+            pool.reset();
+            let mut fused_grid = PlaneGrid::for_spec(&s);
+            let fout = b.rasterize_fused(&vs, &s, &mut fused_grid).unwrap();
+            assert_eq!(fout.depos, out.patches.len());
+            assert_eq!(
+                ref_grid.digest(),
+                fused_grid.digest(),
+                "mode {mode:?} broke fused bit parity"
+            );
+        }
     }
 
     #[test]

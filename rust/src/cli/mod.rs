@@ -144,6 +144,12 @@ USAGE: wire-cell <COMMAND> [--key value]... [--flag]...
 COMMANDS:
   simulate     run the full pipeline on a generated cosmic workload
   throughput   stream many events through a pool of pipeline workers
+  rasterize    raster+scatter one event's collection plane under the
+               configured backend/strategy; prints the grid digest
+               (on --backend serial, --strategy batched and fused must
+               print the same digest; threaded per-depo/batched runs
+               are not digest-stable — their workers race the variate
+               pool — so compare digests on serial, or fused-vs-fused)
   table2       regenerate paper Table 2 (ref-CPU / ref-accel / noRNG)
   table3       regenerate paper Table 3 (portable-layer backends)
   fig5         regenerate paper Figure 5 (scatter-add atomic scaling)
@@ -155,7 +161,7 @@ COMMON OPTIONS:
   --config <file.json>     load a config file (then apply overrides)
   --detector <name>        test-small | uboone-like
   --backend <b>            serial | threads:N | pjrt
-  --strategy <s>           per-depo | batched
+  --strategy <s>           per-depo | batched | fused
   --fluctuation <m>        inline | pool | none
   --target_depos <n>       workload size, per event (default 100000)
   --events <n>             throughput: events in the stream (default 8)

@@ -75,13 +75,18 @@ impl BackendChoice {
     }
 }
 
-/// Offload strategy: the paper's Figure 3 vs Figure 4.
+/// Offload strategy: the paper's Figure 3 vs Figure 4, plus the fused
+/// SoA kernel this reproduction adds on top.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Strategy {
     /// Per-depo offload (Figure 3): one dispatch + transfer per depo.
     PerDepo,
     /// Batched, device-resident (Figure 4): one transfer in/out.
     Batched,
+    /// Fused SoA kernel (beyond the paper): plan + flat axis tables +
+    /// one fluctuate-and-scatter sweep per event, no intermediate
+    /// patches (`crate::kernel`, docs/KERNELS.md).
+    Fused,
 }
 
 impl Strategy {
@@ -90,7 +95,10 @@ impl Strategy {
         match s {
             "per-depo" => Ok(Self::PerDepo),
             "batched" => Ok(Self::Batched),
-            other => Err(format!("unknown strategy '{other}' (per-depo|batched)")),
+            "fused" => Ok(Self::Fused),
+            other => Err(format!(
+                "unknown strategy '{other}' (per-depo|batched|fused)"
+            )),
         }
     }
 
@@ -99,6 +107,7 @@ impl Strategy {
         match self {
             Self::PerDepo => "per-depo",
             Self::Batched => "batched",
+            Self::Fused => "fused",
         }
     }
 }
@@ -357,6 +366,8 @@ mod tests {
     fn strategy_and_fluctuation_parsing() {
         assert_eq!(Strategy::from_str("per-depo").unwrap(), Strategy::PerDepo);
         assert_eq!(Strategy::from_str("batched").unwrap(), Strategy::Batched);
+        assert_eq!(Strategy::from_str("fused").unwrap(), Strategy::Fused);
+        assert_eq!(Strategy::Fused.as_str(), "fused");
         assert!(Strategy::from_str("x").is_err());
         assert_eq!(FluctuationMode::from_str("pool").unwrap(), FluctuationMode::Pool);
         assert!(FluctuationMode::from_str("rng").is_err());

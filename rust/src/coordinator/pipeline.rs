@@ -2,7 +2,7 @@
 
 use crate::adc::Digitizer;
 use crate::backend::{ExecBackend, PjrtBackend, SerialBackend, StageTimings, ThreadedBackend};
-use crate::config::{BackendChoice, SimConfig};
+use crate::config::{BackendChoice, SimConfig, Strategy};
 use crate::depo::Depo;
 use crate::drift::Drifter;
 use crate::frame::{Frame, PlaneFrame};
@@ -244,20 +244,31 @@ impl SimPipeline {
         for plane in PlaneId::ALL {
             let spec = self.grid_spec(plane);
             let views = stages.time("project", || self.plane_views(&drifted, plane));
-            let t0 = std::time::Instant::now();
-            let out = backend.rasterize(&views, &spec)?;
-            stages.add("raster", t0.elapsed().as_secs_f64());
             let mut grid = PlaneGrid::for_spec(&spec);
-            stages.time("scatter", || match self.cfg.backend {
-                BackendChoice::Threaded(n) if n > 1 => scatter_atomic(
-                    &mut grid,
-                    &spec,
-                    &out.patches,
-                    &self.pool,
-                    ExecPolicy::Threads(n),
-                ),
-                _ => scatter_serial(&mut grid, &spec, &out.patches),
-            });
+            let (npatches, raster_timings) = if self.cfg.strategy == Strategy::Fused {
+                // fused SoA kernel: raster + scatter in one pass (see
+                // docs/KERNELS.md); the combined time lands in the
+                // "raster" stage and no separate scatter stage runs
+                let t0 = std::time::Instant::now();
+                let fout = backend.rasterize_fused(&views, &spec, &mut grid)?;
+                stages.add("raster", t0.elapsed().as_secs_f64());
+                (fout.depos, fout.timings)
+            } else {
+                let t0 = std::time::Instant::now();
+                let out = backend.rasterize(&views, &spec)?;
+                stages.add("raster", t0.elapsed().as_secs_f64());
+                stages.time("scatter", || match self.cfg.backend {
+                    BackendChoice::Threaded(n) if n > 1 => scatter_atomic(
+                        &mut grid,
+                        &spec,
+                        &out.patches,
+                        &self.pool,
+                        ExecPolicy::Threads(n),
+                    ),
+                    _ => scatter_serial(&mut grid, &spec, &out.patches),
+                });
+                (out.patches.len(), out.timings)
+            };
             let charge = grid.total();
             let mut plane_frame = if self.cfg.apply_response {
                 let resp = self.response(plane);
@@ -306,9 +317,9 @@ impl SimPipeline {
             }
             planes.push(PlaneRunStats {
                 views: views.len(),
-                patches: out.patches.len(),
+                patches: npatches,
                 charge,
-                raster: out.timings,
+                raster: raster_timings,
             });
             frames.push(plane_frame);
         }
@@ -521,6 +532,48 @@ mod tests {
                 assert_eq!(x.to_bits(), y.to_bits());
             }
         }
+    }
+
+    #[test]
+    fn fused_strategy_frame_matches_batched_bitwise() {
+        // Strategy::Fused must be a pure implementation change: the
+        // whole frame (response + ADC downstream of the grid) agrees
+        // bit for bit with Strategy::Batched on the serial backend
+        let depos = track_depos();
+        for fluct in [FluctuationMode::None, FluctuationMode::Pool, FluctuationMode::Inline] {
+            let mut cfg = cfg_serial();
+            cfg.fluctuation = fluct;
+            cfg.strategy = Strategy::Batched;
+            let batched = SimPipeline::new(cfg.clone())
+                .unwrap()
+                .run(&depos)
+                .unwrap();
+            cfg.strategy = Strategy::Fused;
+            let fused = SimPipeline::new(cfg).unwrap().run(&depos).unwrap();
+            let a = batched.frame.unwrap();
+            let b = fused.frame.unwrap();
+            for (pa, pb) in a.planes.iter().zip(&b.planes) {
+                for (x, y) in pa.data.iter().zip(&pb.data) {
+                    assert_eq!(x.to_bits(), y.to_bits(), "fluct {fluct:?}");
+                }
+            }
+            // and the fused report still carries per-plane stats
+            assert!(fused.planes.iter().all(|p| p.patches > 0 && p.charge > 0.0));
+        }
+    }
+
+    #[test]
+    fn fused_strategy_runs_on_threaded_backend() {
+        let mut cfg = cfg_serial();
+        cfg.backend = BackendChoice::Threaded(2);
+        cfg.strategy = Strategy::Fused;
+        let mut pipe = SimPipeline::new(cfg).unwrap();
+        let report = pipe.run(&track_depos()).unwrap();
+        assert!(report.label.contains("fused"));
+        assert!(report.planes.iter().all(|p| p.patches > 0));
+        assert!(report.stages.total("raster") > 0.0);
+        // scatter is folded into the fused pass
+        assert_eq!(report.stages.total("scatter"), 0.0);
     }
 
     #[test]

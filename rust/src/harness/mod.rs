@@ -11,6 +11,7 @@
 //! | Table 3        | [`table3`] |
 //! | Figure 5       | [`fig5`] |
 //! | Figure 3 vs 4 strategy (proposed) | [`strategy_sweep`] |
+//! | fused SoA kernel vs per-patch (beyond the paper) | [`fused_sweep`], [`rasterize_report`] |
 //! | multi-event serving throughput (proposed, after arXiv:2203.02479) | [`throughput`], [`throughput_scaling`] |
 
 use crate::backend::{ExecBackend, PjrtBackend, SerialBackend, StageTimings, ThreadedBackend};
@@ -316,6 +317,144 @@ pub fn strategy_sweep(
     Ok((table, series))
 }
 
+/// One row of [`fused_sweep`]: the per-patch path vs the fused SoA
+/// kernel on the serial backend, with the grid-digest witness.
+#[derive(Clone, Copy, Debug)]
+pub struct FusedRow {
+    /// Workload size (depos).
+    pub n: usize,
+    /// Best-of-repeat wall time of per-patch rasterize + serial
+    /// scatter [s].  (`Strategy::PerDepo` and `Strategy::Batched` are
+    /// the same code path on one thread.)
+    pub per_patch_s: f64,
+    /// Best-of-repeat wall time of the fused SoA kernel [s].
+    pub fused_s: f64,
+    /// `per_patch_s / fused_s`.
+    pub speedup: f64,
+    /// Whether the two paths produced bit-identical plane grids.
+    pub digests_match: bool,
+}
+
+/// Serial-backend strategy comparison (the acceptance gate of the
+/// fused-kernel work): per-patch rasterize + scatter vs the fused SoA
+/// kernel, over workload sizes, with bit-parity digests.
+///
+/// Uses `cfg.fluctuation` for both paths; the variate pool is rewound
+/// and the backend re-seeded before every repetition so the digests
+/// are comparable across paths and repeats.
+pub fn fused_sweep(
+    cfg: &SimConfig,
+    counts: &[usize],
+    repeat: usize,
+) -> Result<(Table, Vec<FusedRow>)> {
+    let params = cfg.raster_params();
+    let pool = RandomPool::shared(cfg.seed ^ 0xF00D, cfg.pool_size);
+    let mut table = Table::new(
+        &format!(
+            "Strategy sweep (serial backend, '{}' fluctuation) — per-patch vs fused SoA, best of {}",
+            cfg.fluctuation.as_str(),
+            repeat.max(1)
+        ),
+        &["Depos", "Per-patch [s]", "Fused [s]", "Speedup", "Digests equal"],
+    );
+    let mut rows = Vec::new();
+    for &n in counts {
+        let wl = workload(cfg, n)?;
+        let mut per_patch_s = f64::INFINITY;
+        let mut per_patch_digest = 0u64;
+        for _ in 0..repeat.max(1) {
+            pool.reset();
+            let mut be =
+                SerialBackend::new(params, cfg.fluctuation, cfg.seed, Some(pool.clone()));
+            let mut grid = PlaneGrid::for_spec(&wl.spec);
+            let t0 = Instant::now();
+            let out = be.rasterize(&wl.views, &wl.spec)?;
+            scatter_serial(&mut grid, &wl.spec, &out.patches);
+            per_patch_s = per_patch_s.min(t0.elapsed().as_secs_f64());
+            per_patch_digest = grid.digest();
+        }
+        let mut fused_s = f64::INFINITY;
+        let mut fused_digest = 0u64;
+        for _ in 0..repeat.max(1) {
+            pool.reset();
+            let mut be =
+                SerialBackend::new(params, cfg.fluctuation, cfg.seed, Some(pool.clone()));
+            let mut grid = PlaneGrid::for_spec(&wl.spec);
+            let t0 = Instant::now();
+            let _ = be.rasterize_fused(&wl.views, &wl.spec, &mut grid)?;
+            fused_s = fused_s.min(t0.elapsed().as_secs_f64());
+            fused_digest = grid.digest();
+        }
+        let digests_match = per_patch_digest == fused_digest;
+        let speedup = per_patch_s / fused_s.max(1e-12);
+        table.row(&[
+            n.to_string(),
+            format!("{per_patch_s:.4}"),
+            format!("{fused_s:.4}"),
+            format!("{speedup:.2}x"),
+            digests_match.to_string(),
+        ]);
+        rows.push(FusedRow {
+            n,
+            per_patch_s,
+            fused_s,
+            speedup,
+            digests_match,
+        });
+    }
+    Ok((table, rows))
+}
+
+/// One raster(+scatter) pass on the collection plane under the
+/// configured backend/strategy — the `wire-cell rasterize` subcommand.
+/// Returns the report table and the grid digest (the bit-parity
+/// witness: run it with `--strategy batched` and `--strategy fused`
+/// and compare).
+pub fn rasterize_report(cfg: &SimConfig, n: usize, repeat: usize) -> Result<(Table, u64)> {
+    let wl = workload(cfg, n)?;
+    let mut pipe = SimPipeline::new(cfg.clone())?;
+    let mut best = f64::INFINITY;
+    let mut digest = 0u64;
+    let mut depos = 0usize;
+    let mut best_timings = StageTimings::default();
+    for _ in 0..repeat.max(1) {
+        pipe.reseed(cfg.seed); // rewind the variate pool between reps
+        let mut be = pipe.make_backend()?;
+        let mut grid = PlaneGrid::for_spec(&wl.spec);
+        let t0 = Instant::now();
+        let (d, timings) = if cfg.strategy == Strategy::Fused {
+            let fout = be.rasterize_fused(&wl.views, &wl.spec, &mut grid)?;
+            (fout.depos, fout.timings)
+        } else {
+            let out = be.rasterize(&wl.views, &wl.spec)?;
+            scatter_serial(&mut grid, &wl.spec, &out.patches);
+            (out.patches.len(), out.timings)
+        };
+        let dt = t0.elapsed().as_secs_f64();
+        if dt < best {
+            best = dt;
+            best_timings = timings;
+        }
+        digest = grid.digest();
+        depos = d;
+    }
+    let mut table = Table::new(
+        &format!(
+            "rasterize — backend {}, strategy {}, {n} depos (collection plane), best of {}",
+            cfg.backend.label(),
+            cfg.strategy.as_str(),
+            repeat.max(1)
+        ),
+        &["Metric", "Value"],
+    );
+    table.row(&["on-grid depos".into(), depos.to_string()]);
+    table.row(&["raster+scatter wall [s]".into(), format!("{best:.4}")]);
+    table.row(&["2D sampling [s]".into(), format!("{:.4}", best_timings.sampling_s)]);
+    table.row(&["fluctuation [s]".into(), format!("{:.4}", best_timings.fluctuation_s)]);
+    table.row(&["grid digest".into(), format!("{digest:016x}")]);
+    Ok((table, digest))
+}
+
 /// Multi-event throughput: run `events` events across `workers` pooled
 /// pipelines and return the per-stage aggregate table plus the full
 /// report (rates, per-worker shares, determinism digest).
@@ -437,6 +576,29 @@ mod tests {
         assert_eq!(series.len(), 2);
         assert_eq!(table.len(), 2);
         assert!(series.iter().all(|&(_, wall, rate)| wall > 0.0 && rate > 0.0));
+    }
+
+    #[test]
+    fn fused_sweep_digests_match_per_patch() {
+        let mut cfg = small_cfg();
+        cfg.fluctuation = FluctuationMode::Pool;
+        let (table, rows) = fused_sweep(&cfg, &[400], 1).unwrap();
+        assert_eq!(rows.len(), 1);
+        assert!(rows[0].digests_match, "fused grid diverged from per-patch");
+        assert!(rows[0].fused_s > 0.0 && rows[0].per_patch_s > 0.0);
+        assert!(table.render().contains("Digests equal"));
+    }
+
+    #[test]
+    fn rasterize_report_digest_is_strategy_invariant() {
+        let mut cfg = small_cfg();
+        cfg.fluctuation = FluctuationMode::Pool;
+        cfg.strategy = Strategy::Batched;
+        let (_, d_batched) = rasterize_report(&cfg, 300, 1).unwrap();
+        cfg.strategy = Strategy::Fused;
+        let (table, d_fused) = rasterize_report(&cfg, 300, 2).unwrap();
+        assert_eq!(d_batched, d_fused, "strategy changed the physics");
+        assert!(table.render().contains("grid digest"));
     }
 
     #[test]

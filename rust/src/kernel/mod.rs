@@ -1,0 +1,84 @@
+//! Fused structure-of-arrays rasterization kernels — the hot-spot fix.
+//!
+//! The paper's profiled bottleneck (§3, §4.3) is rasterization, and its
+//! core lesson is that *per-depo* work units drown in dispatch and
+//! allocation overhead.  `Strategy::Batched` fixed the *scheduling*
+//! granularity; this module fixes the *data* granularity: instead of
+//! rasterizing each depo into its own heap-allocated
+//! [`Patch`](crate::raster::Patch), a whole event is processed as one
+//! fused pass over flat structure-of-arrays buffers
+//! (`Strategy::Fused`):
+//!
+//! 1. **Plan** ([`FusedPlan`]) — one pass over the depo views computes
+//!    every patch window and prefix-sum offsets into the flat buffers.
+//! 2. **Materialize** ([`SoaTables`]) — the separable Gaussian axis
+//!    masses (erf differences shared between adjacent bin edges) for
+//!    *all* depos land in two contiguous tables, plus one
+//!    normalization scalar per depo.
+//! 3. **Sweep** ([`rasterize_fused_serial`] /
+//!    [`rasterize_fused_threaded`]) — one pass forms the outer-product
+//!    weight of each bin in registers, draws its fluctuation, and
+//!    scatter-adds straight into the
+//!    [`PlaneGrid`](crate::scatter::PlaneGrid) — no intermediate
+//!    patch, no per-depo allocation.
+//!
+//! ## Bit-parity contract
+//!
+//! The fused path is required to produce **bit-identical** plane grids
+//! (and therefore frames) to the per-patch path on the serial backend —
+//! `rust/tests/fused.rs` asserts it via frame digests.  Three design
+//! points make that hold:
+//!
+//! * axis masses come from the same [`raster`](crate::raster) erf-edge
+//!   routine, and the weight of bin `(p, t)` is formed with the same
+//!   association order `(wp[p] * norm) * wt[t]` as `sample_2d`;
+//! * pool-mode fluctuation claims one variate block per event
+//!   ([`RandomPool::claim_start`](crate::rng::RandomPool::claim_start))
+//!   and indexes it by each bin's *flat offset*, reproducing exactly
+//!   the per-patch `fill_normals` sequence while staying independent
+//!   of thread scheduling;
+//! * the threaded sweep scatters through disjoint coarse-tick stripes
+//!   in (depo, pitch, time) order, so every grid bin receives its f32
+//!   contributions in the same order as the serial reference — for
+//!   *any* thread count.
+//!
+//! See `docs/KERNELS.md` for the memory-layout diagrams and the
+//! paper-to-code stage-boundary map.
+
+mod plan;
+mod soa;
+mod sweep;
+
+pub use plan::FusedPlan;
+pub use soa::SoaTables;
+pub use sweep::{rasterize_fused_serial, rasterize_fused_threaded};
+
+use crate::backend::StageTimings;
+
+/// What a fused rasterize+scatter pass reports.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct FusedOutput {
+    /// Depos rasterized (off-grid views are dropped at plan time).
+    pub depos: usize,
+    /// Fine bins swept (`Σ np·nt` over the plan).
+    pub bins: usize,
+    /// Stage split.  The fused loop cannot be split at the per-patch
+    /// boundary, so `sampling_s` covers plan + SoA table
+    /// materialization and `fluctuation_s` covers the fused
+    /// fluctuate+scatter sweep (see `docs/KERNELS.md` for how this
+    /// maps onto the paper's Table 2–3 columns).
+    pub timings: StageTimings,
+}
+
+/// Raw-pointer wrapper for provably disjoint parallel writes (each
+/// worker touches only the slice its prefix offsets own).
+pub(crate) struct SendPtr<T>(pub(crate) *mut T);
+
+unsafe impl<T> Send for SendPtr<T> {}
+unsafe impl<T> Sync for SendPtr<T> {}
+
+impl<T> SendPtr<T> {
+    pub(crate) fn get(&self) -> *mut T {
+        self.0
+    }
+}

@@ -1,0 +1,191 @@
+//! Patch-extent planning: the first pass of the fused kernel.
+
+use crate::raster::{patch_window, DepoView, GridSpec, RasterParams};
+
+/// Structure-of-arrays plan of every on-grid patch of an event.
+///
+/// One entry per *kept* depo (off-grid views are dropped here, with the
+/// same [`patch_window`] rule the per-patch path uses).  The three
+/// prefix-offset arrays (`wp_off`, `wt_off`, `bin_off`, each
+/// `len() + 1` long) address the flat SoA buffers: depo `i` owns
+/// `wp[wp_off[i]..wp_off[i+1]]`, `wt[wt_off[i]..wt_off[i+1]]`, and the
+/// flat bin range `bin_off[i]..bin_off[i+1]` in (pitch-major,
+/// time-minor) order — the same row-major layout a
+/// [`Patch`](crate::raster::Patch) would have used.
+///
+/// ```
+/// use wirecell::kernel::FusedPlan;
+/// use wirecell::raster::{DepoView, GridSpec, RasterParams};
+/// use wirecell::units::{M, MM, US};
+///
+/// let spec = GridSpec::new(40, 3.0 * MM, 64, 0.5 * US, 5, 2);
+/// let on_grid = DepoView {
+///     pitch: 60.0 * MM, time: 16.0 * US,
+///     sigma_pitch: 1.5 * MM, sigma_time: 0.8 * US, charge: 5000.0,
+/// };
+/// let off_grid = DepoView { pitch: -2.0 * M, ..on_grid };
+/// let plan = FusedPlan::build(&[on_grid, off_grid], &spec, &RasterParams::default());
+/// assert_eq!(plan.len(), 1); // the off-grid depo is dropped at plan time
+/// assert_eq!(plan.view_idx[0], 0);
+/// assert_eq!(plan.total_bins(), plan.np[0] as usize * plan.nt[0] as usize);
+/// ```
+#[derive(Clone, Debug)]
+pub struct FusedPlan {
+    /// Index into the original `views` slice, per kept depo.
+    pub view_idx: Vec<usize>,
+    /// First fine pitch bin per depo (may be negative; scatter clips).
+    pub p0: Vec<i64>,
+    /// First fine time bin per depo (may be negative).
+    pub t0: Vec<i64>,
+    /// Pitch-axis bin count per depo.
+    pub np: Vec<u32>,
+    /// Time-axis bin count per depo.
+    pub nt: Vec<u32>,
+    /// Prefix offsets into the pitch-axis mass table (`len() + 1`).
+    pub wp_off: Vec<usize>,
+    /// Prefix offsets into the time-axis mass table (`len() + 1`).
+    pub wt_off: Vec<usize>,
+    /// Prefix offsets into the flat bin/value space (`len() + 1`).
+    pub bin_off: Vec<usize>,
+}
+
+impl FusedPlan {
+    /// Plan all on-grid windows for `views`, with prefix offsets.
+    pub fn build(views: &[DepoView], spec: &GridSpec, params: &RasterParams) -> Self {
+        let n = views.len();
+        let mut plan = Self {
+            view_idx: Vec::with_capacity(n),
+            p0: Vec::with_capacity(n),
+            t0: Vec::with_capacity(n),
+            np: Vec::with_capacity(n),
+            nt: Vec::with_capacity(n),
+            wp_off: Vec::with_capacity(n + 1),
+            wt_off: Vec::with_capacity(n + 1),
+            bin_off: Vec::with_capacity(n + 1),
+        };
+        plan.wp_off.push(0);
+        plan.wt_off.push(0);
+        plan.bin_off.push(0);
+        for (i, view) in views.iter().enumerate() {
+            let Some((p0, np, t0, nt)) = patch_window(view, spec, params) else {
+                continue;
+            };
+            plan.view_idx.push(i);
+            plan.p0.push(p0);
+            plan.t0.push(t0);
+            plan.np.push(np as u32);
+            plan.nt.push(nt as u32);
+            let wp_end = *plan.wp_off.last().unwrap() + np;
+            let wt_end = *plan.wt_off.last().unwrap() + nt;
+            let bin_end = *plan.bin_off.last().unwrap() + np * nt;
+            plan.wp_off.push(wp_end);
+            plan.wt_off.push(wt_end);
+            plan.bin_off.push(bin_end);
+        }
+        plan
+    }
+
+    /// Number of planned (on-grid) depos.
+    pub fn len(&self) -> usize {
+        self.view_idx.len()
+    }
+
+    /// True when nothing rasterizes.
+    pub fn is_empty(&self) -> bool {
+        self.view_idx.is_empty()
+    }
+
+    /// Total pitch-axis table length.
+    pub fn total_wp(&self) -> usize {
+        *self.wp_off.last().unwrap()
+    }
+
+    /// Total time-axis table length.
+    pub fn total_wt(&self) -> usize {
+        *self.wt_off.last().unwrap()
+    }
+
+    /// Total flat bin count.
+    pub fn total_bins(&self) -> usize {
+        *self.bin_off.last().unwrap()
+    }
+
+    /// Window of planned depo `i` in [`patch_window`] form:
+    /// `(p0, np, t0, nt)`.
+    pub fn window(&self, i: usize) -> (i64, usize, i64, usize) {
+        (
+            self.p0[i],
+            self.np[i] as usize,
+            self.t0[i],
+            self.nt[i] as usize,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::units::*;
+
+    fn spec() -> GridSpec {
+        GridSpec::new(100, 3.0 * MM, 256, 0.5 * US, 5, 2)
+    }
+
+    fn view(pitch: f64, time: f64) -> DepoView {
+        DepoView {
+            pitch,
+            time,
+            sigma_pitch: 1.8 * MM,
+            sigma_time: 0.9 * US,
+            charge: 6000.0,
+        }
+    }
+
+    #[test]
+    fn offsets_are_consistent_prefix_sums() {
+        let s = spec();
+        let p = RasterParams::default();
+        let views = [
+            view(50.0 * MM, 30.0 * US),
+            view(150.0 * MM, 64.0 * US),
+            view(250.0 * MM, 100.0 * US),
+        ];
+        let plan = FusedPlan::build(&views, &s, &p);
+        assert_eq!(plan.len(), 3);
+        assert_eq!(plan.wp_off.len(), 4);
+        for i in 0..plan.len() {
+            let (p0, np, t0, nt) = plan.window(i);
+            assert_eq!(patch_window(&views[i], &s, &p), Some((p0, np, t0, nt)));
+            assert_eq!(plan.wp_off[i + 1] - plan.wp_off[i], np);
+            assert_eq!(plan.wt_off[i + 1] - plan.wt_off[i], nt);
+            assert_eq!(plan.bin_off[i + 1] - plan.bin_off[i], np * nt);
+        }
+        let bins: usize = (0..plan.len())
+            .map(|i| plan.np[i] as usize * plan.nt[i] as usize)
+            .sum();
+        assert_eq!(plan.total_bins(), bins);
+    }
+
+    #[test]
+    fn off_grid_views_dropped_but_indices_kept() {
+        let s = spec();
+        let p = RasterParams::default();
+        let views = [
+            view(50.0 * MM, 30.0 * US),
+            view(-5.0 * M, 30.0 * US), // far off grid
+            view(150.0 * MM, 64.0 * US),
+        ];
+        let plan = FusedPlan::build(&views, &s, &p);
+        assert_eq!(plan.len(), 2);
+        assert_eq!(plan.view_idx, vec![0, 2]);
+    }
+
+    #[test]
+    fn empty_views_make_empty_plan() {
+        let plan = FusedPlan::build(&[], &spec(), &RasterParams::default());
+        assert!(plan.is_empty());
+        assert_eq!(plan.total_bins(), 0);
+        assert_eq!(plan.total_wp(), 0);
+        assert_eq!(plan.bin_off, vec![0]);
+    }
+}

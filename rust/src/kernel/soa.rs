@@ -1,0 +1,208 @@
+//! Flat SoA tables: the materialized "2D sampling" inputs.
+
+use super::plan::FusedPlan;
+use super::SendPtr;
+use crate::parallel::{parallel_for, ExecPolicy, ThreadPool};
+use crate::raster::{axis_masses, DepoView, GridSpec, RasterParams};
+
+/// Separable Gaussian axis masses for every planned depo, in two
+/// contiguous tables, plus the per-depo patch normalization.
+///
+/// The weight the per-patch path would have stored at patch bin
+/// `(p, t)` of depo `i` is reconstructed (bit-for-bit) as
+/// `(wp[wp_off[i] + p] * norm[i]) * wt[wt_off[i] + t]` — the fused
+/// sweep forms it in registers instead of materializing the `np × nt`
+/// outer product.
+#[derive(Clone, Debug, Default)]
+pub struct SoaTables {
+    /// Concatenated pitch-axis masses (addressed by `plan.wp_off`).
+    pub wp: Vec<f64>,
+    /// Concatenated time-axis masses (addressed by `plan.wt_off`).
+    pub wt: Vec<f64>,
+    /// Per-depo normalization `1 / (Σwp · Σwt)` (0 for zero-mass
+    /// patches), matching `sample_2d`'s normalization exactly.
+    pub norm: Vec<f64>,
+}
+
+/// Fill one depo's slices of the tables.  Must mirror `sample_2d`'s
+/// arithmetic (same floors, same erf-edge sharing, same sum order) so
+/// the fused path stays bit-identical to the per-patch path.
+fn fill_one(
+    view: &DepoView,
+    spec: &GridSpec,
+    params: &RasterParams,
+    window: (i64, usize, i64, usize),
+    wp: &mut [f64],
+    wt: &mut [f64],
+) -> f64 {
+    let (p0, _np, t0, _nt) = window;
+    let sp = view.sigma_pitch.max(params.min_sigma_pitch);
+    let st = view.sigma_time.max(params.min_sigma_time);
+    axis_masses(view.pitch, sp, spec.pitch_bins(), p0, wp);
+    axis_masses(view.time, st, spec.time_bins(), t0, wt);
+    let total: f64 = wp.iter().sum::<f64>() * wt.iter().sum::<f64>();
+    if total > 0.0 {
+        1.0 / total
+    } else {
+        0.0
+    }
+}
+
+impl SoaTables {
+    /// Materialize the tables serially.
+    pub fn materialize(
+        plan: &FusedPlan,
+        views: &[DepoView],
+        spec: &GridSpec,
+        params: &RasterParams,
+    ) -> Self {
+        let mut wp = vec![0.0; plan.total_wp()];
+        let mut wt = vec![0.0; plan.total_wt()];
+        let mut norm = vec![0.0; plan.len()];
+        for i in 0..plan.len() {
+            let view = &views[plan.view_idx[i]];
+            norm[i] = fill_one(
+                view,
+                spec,
+                params,
+                plan.window(i),
+                &mut wp[plan.wp_off[i]..plan.wp_off[i + 1]],
+                &mut wt[plan.wt_off[i]..plan.wt_off[i + 1]],
+            );
+        }
+        Self { wp, wt, norm }
+    }
+
+    /// Materialize the tables in parallel over depos.  Each depo's
+    /// slices are disjoint by construction of the prefix offsets, so
+    /// workers write without synchronization; the values are
+    /// bit-identical to [`materialize`](Self::materialize) because each
+    /// depo's computation is self-contained.
+    pub fn materialize_parallel(
+        plan: &FusedPlan,
+        views: &[DepoView],
+        spec: &GridSpec,
+        params: &RasterParams,
+        pool: &ThreadPool,
+        policy: ExecPolicy,
+    ) -> Self {
+        let mut wp = vec![0.0; plan.total_wp()];
+        let mut wt = vec![0.0; plan.total_wt()];
+        let mut norm = vec![0.0; plan.len()];
+        {
+            let wp_ptr = SendPtr(wp.as_mut_ptr());
+            let wt_ptr = SendPtr(wt.as_mut_ptr());
+            let norm_ptr = SendPtr(norm.as_mut_ptr());
+            parallel_for(pool, policy, plan.len(), 64, |range| {
+                for i in range {
+                    let view = &views[plan.view_idx[i]];
+                    let np = plan.np[i] as usize;
+                    let nt = plan.nt[i] as usize;
+                    // SAFETY: the prefix offsets partition the tables,
+                    // so depo i's slices never overlap another depo's,
+                    // and `norm[i]` is written by exactly one worker.
+                    let (wps, wts, n) = unsafe {
+                        (
+                            std::slice::from_raw_parts_mut(
+                                wp_ptr.get().add(plan.wp_off[i]),
+                                np,
+                            ),
+                            std::slice::from_raw_parts_mut(
+                                wt_ptr.get().add(plan.wt_off[i]),
+                                nt,
+                            ),
+                            &mut *norm_ptr.get().add(i),
+                        )
+                    };
+                    *n = fill_one(view, spec, params, plan.window(i), wps, wts);
+                }
+            });
+        }
+        Self { wp, wt, norm }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::raster::{patch_window, sample_2d};
+    use crate::units::*;
+
+    fn spec() -> GridSpec {
+        GridSpec::new(100, 3.0 * MM, 256, 0.5 * US, 5, 2)
+    }
+
+    fn views() -> Vec<DepoView> {
+        (0..12)
+            .map(|i| DepoView {
+                pitch: (40.0 + 18.0 * i as f64) * MM,
+                time: (15.0 + 8.0 * i as f64) * US,
+                sigma_pitch: (0.8 + 0.1 * i as f64) * MM,
+                sigma_time: 0.9 * US,
+                charge: 5000.0,
+            })
+            .collect()
+    }
+
+    #[test]
+    fn tables_reconstruct_sample_2d_bitwise() {
+        // the fused weight (wp[p]*norm)*wt[t] must equal the per-patch
+        // sample_2d weight bit for bit — the parity contract's core
+        let s = spec();
+        let p = RasterParams::default();
+        let vs = views();
+        let plan = FusedPlan::build(&vs, &s, &p);
+        let tables = SoaTables::materialize(&plan, &vs, &s, &p);
+        for i in 0..plan.len() {
+            let v = &vs[plan.view_idx[i]];
+            let win = patch_window(v, &s, &p).unwrap();
+            let reference = sample_2d(v, &s, &p, win);
+            let (_, np, _, nt) = win;
+            let wp = &tables.wp[plan.wp_off[i]..plan.wp_off[i + 1]];
+            let wt = &tables.wt[plan.wt_off[i]..plan.wt_off[i + 1]];
+            for pp in 0..np {
+                let k = wp[pp] * tables.norm[i];
+                for tt in 0..nt {
+                    let fused = k * wt[tt];
+                    assert_eq!(
+                        fused.to_bits(),
+                        reference[pp * nt + tt].to_bits(),
+                        "depo {i} bin ({pp},{tt})"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn parallel_materialize_matches_serial_bitwise() {
+        let s = spec();
+        let p = RasterParams::default();
+        let vs = views();
+        let plan = FusedPlan::build(&vs, &s, &p);
+        let serial = SoaTables::materialize(&plan, &vs, &s, &p);
+        let pool = ThreadPool::new(4);
+        for threads in [1, 2, 4] {
+            let par = SoaTables::materialize_parallel(
+                &plan,
+                &vs,
+                &s,
+                &p,
+                &pool,
+                ExecPolicy::Threads(threads),
+            );
+            assert_eq!(serial.wp, par.wp);
+            assert_eq!(serial.wt, par.wt);
+            assert_eq!(serial.norm, par.norm);
+        }
+    }
+
+    #[test]
+    fn empty_plan_materializes_empty_tables() {
+        let s = spec();
+        let p = RasterParams::default();
+        let plan = FusedPlan::build(&[], &s, &p);
+        let t = SoaTables::materialize(&plan, &[], &s, &p);
+        assert!(t.wp.is_empty() && t.wt.is_empty() && t.norm.is_empty());
+    }
+}

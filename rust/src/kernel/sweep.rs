@@ -1,0 +1,492 @@
+//! The fused sweeps: outer product + fluctuation + scatter in one pass.
+
+use super::plan::FusedPlan;
+use super::soa::SoaTables;
+use super::{FusedOutput, SendPtr};
+use crate::backend::StageTimings;
+use crate::parallel::{parallel_for, ExecPolicy, ThreadPool};
+use crate::raster::{DepoView, Fluctuation, GridSpec, RasterParams};
+use crate::rng::{binomial_exact, binomial_normal_approx, RandomPool};
+use crate::scatter::PlaneGrid;
+use std::time::Instant;
+
+/// Serial fused rasterize+scatter of one event's views into `grid`.
+///
+/// Produces the *bit-identical* grid the per-patch path
+/// (`SerialBackend::rasterize` + `scatter_serial`) would have produced
+/// for the same fluctuation mode and RNG state, without allocating any
+/// intermediate patch: per depo, each bin's weight is formed in
+/// registers from the SoA axis tables, fluctuated, and added straight
+/// into the grid.
+///
+/// ```
+/// use wirecell::kernel::rasterize_fused_serial;
+/// use wirecell::raster::{DepoView, Fluctuation, GridSpec, RasterParams};
+/// use wirecell::scatter::PlaneGrid;
+/// use wirecell::units::{MM, US};
+///
+/// let spec = GridSpec::new(40, 3.0 * MM, 64, 0.5 * US, 5, 2);
+/// let view = DepoView {
+///     pitch: 60.0 * MM, time: 16.0 * US,
+///     sigma_pitch: 1.5 * MM, sigma_time: 0.8 * US, charge: 6000.0,
+/// };
+/// let mut grid = PlaneGrid::for_spec(&spec);
+/// let out = rasterize_fused_serial(
+///     &[view], &spec, &RasterParams::default(), &mut Fluctuation::None, &mut grid);
+/// assert_eq!(out.depos, 1);
+/// assert!(out.bins > 0);
+/// assert!((grid.total() - 6000.0).abs() < 1.0); // charge conserved
+/// ```
+pub fn rasterize_fused_serial(
+    views: &[DepoView],
+    spec: &GridSpec,
+    params: &RasterParams,
+    mode: &mut Fluctuation<'_>,
+    grid: &mut PlaneGrid,
+) -> FusedOutput {
+    let t0 = Instant::now();
+    let plan = FusedPlan::build(views, spec, params);
+    let tables = SoaTables::materialize(&plan, views, spec, params);
+    let t1 = Instant::now();
+
+    // Pool mode claims one variate block for the whole event; indexing
+    // it by flat bin offset reproduces the per-patch fill_normals
+    // sequence exactly (see RandomPool::claim_start).
+    let pool_start = if let Fluctuation::PoolNormal(pool) = mode {
+        pool.claim_start(plan.total_bins())
+    } else {
+        0
+    };
+
+    let nticks = grid.nticks;
+    // Per-depo scratch: the coarse tick of each fine time column,
+    // computed once per depo instead of once per bin.
+    let mut tick_idx: Vec<Option<usize>> = Vec::new();
+    for i in 0..plan.len() {
+        let view = &views[plan.view_idx[i]];
+        let (p0, _np, tb0, nt) = plan.window(i);
+        let wp = &tables.wp[plan.wp_off[i]..plan.wp_off[i + 1]];
+        let wt = &tables.wt[plan.wt_off[i]..plan.wt_off[i + 1]];
+        let norm = tables.norm[i];
+        let n_electrons = view.charge.round().max(0.0) as u64;
+        tick_idx.clear();
+        tick_idx.extend((0..nt).map(|t| spec.tick_of(tb0 + t as i64)));
+        let mut bin = plan.bin_off[i];
+        for (p, &wpv) in wp.iter().enumerate() {
+            let k = wpv * norm;
+            let row = spec.wire_of(p0 + p as i64).map(|w| w * nticks);
+            for (t, &wtv) in wt.iter().enumerate() {
+                let w = k * wtv;
+                // The RNG is consumed for every planned bin — clipped
+                // ones included — exactly as the per-patch fluctuate()
+                // ran before scatter clipping.
+                let value: f32 = match mode {
+                    Fluctuation::None => (w * view.charge) as f32,
+                    Fluctuation::InlineBinomial(rng) => {
+                        binomial_exact(*rng, n_electrons, w.clamp(0.0, 1.0)) as f32
+                    }
+                    Fluctuation::PoolNormal(pool) => binomial_normal_approx(
+                        n_electrons,
+                        w.clamp(0.0, 1.0),
+                        pool.normal_at(pool_start + bin) as f64,
+                    ) as f32,
+                };
+                if let (Some(rowbase), Some(tick)) = (row, tick_idx[t]) {
+                    grid.data[rowbase + tick] += value;
+                }
+                bin += 1;
+            }
+        }
+    }
+    let t2 = Instant::now();
+    FusedOutput {
+        depos: plan.len(),
+        bins: plan.total_bins(),
+        timings: StageTimings {
+            sampling_s: (t1 - t0).as_secs_f64(),
+            fluctuation_s: (t2 - t1).as_secs_f64(),
+            other_s: 0.0,
+        },
+    }
+}
+
+/// Threaded fused rasterize+scatter with pool-based fluctuation.
+///
+/// Two deterministic stages over the host [`ThreadPool`]:
+///
+/// 1. **value fill** — depos are distributed over workers; each writes
+///    its fluctuated bin values into its disjoint slice of one flat
+///    buffer, reading pool normals at `block_start + flat_bin_offset`
+///    so the variates a depo consumes are independent of scheduling;
+/// 2. **striped scatter** — workers own disjoint coarse-tick stripes
+///    and scan the plan in (depo, pitch, time) order, so every grid
+///    bin accumulates its f32 contributions in the serial reference
+///    order.
+///
+/// The produced grid is therefore bit-identical to
+/// [`rasterize_fused_serial`] in pool mode — for *any* `nthreads` —
+/// which `rust/tests/fused.rs` asserts through frame digests.
+pub fn rasterize_fused_threaded(
+    views: &[DepoView],
+    spec: &GridSpec,
+    params: &RasterParams,
+    rng_pool: &RandomPool,
+    grid: &mut PlaneGrid,
+    tpool: &ThreadPool,
+    nthreads: usize,
+) -> FusedOutput {
+    let policy = ExecPolicy::Threads(nthreads.max(1));
+    let t0 = Instant::now();
+    let plan = FusedPlan::build(views, spec, params);
+    let tables = SoaTables::materialize_parallel(&plan, views, spec, params, tpool, policy);
+    let t1 = Instant::now();
+
+    let pool_start = rng_pool.claim_start(plan.total_bins());
+    let mut values = vec![0.0f32; plan.total_bins()];
+    {
+        let vptr = SendPtr(values.as_mut_ptr());
+        parallel_for(tpool, policy, plan.len(), 16, |range| {
+            for i in range {
+                let view = &views[plan.view_idx[i]];
+                let np = plan.np[i] as usize;
+                let nt = plan.nt[i] as usize;
+                let wp = &tables.wp[plan.wp_off[i]..plan.wp_off[i + 1]];
+                let wt = &tables.wt[plan.wt_off[i]..plan.wt_off[i + 1]];
+                let norm = tables.norm[i];
+                let n_electrons = view.charge.round().max(0.0) as u64;
+                // SAFETY: bin_off partitions the flat value buffer, so
+                // depo i's slice overlaps no other depo's.
+                let out = unsafe {
+                    std::slice::from_raw_parts_mut(vptr.get().add(plan.bin_off[i]), np * nt)
+                };
+                let mut bin = plan.bin_off[i];
+                let mut o = 0;
+                for &wpv in wp {
+                    let k = wpv * norm;
+                    for &wtv in wt {
+                        let w = (k * wtv).clamp(0.0, 1.0);
+                        out[o] = binomial_normal_approx(
+                            n_electrons,
+                            w,
+                            rng_pool.normal_at(pool_start + bin) as f64,
+                        ) as f32;
+                        bin += 1;
+                        o += 1;
+                    }
+                }
+            }
+        });
+    }
+    let t2 = Instant::now();
+    scatter_flat_striped(&plan, &values, spec, grid, tpool, policy);
+    let t3 = Instant::now();
+
+    FusedOutput {
+        depos: plan.len(),
+        bins: plan.total_bins(),
+        timings: StageTimings {
+            sampling_s: (t1 - t0).as_secs_f64(),
+            fluctuation_s: (t2 - t1).as_secs_f64() + (t3 - t2).as_secs_f64(),
+            other_s: 0.0,
+        },
+    }
+}
+
+/// Scatter the flat value buffer onto the grid through disjoint
+/// coarse-tick stripes (deterministic add order; see module docs).
+fn scatter_flat_striped(
+    plan: &FusedPlan,
+    values: &[f32],
+    spec: &GridSpec,
+    grid: &mut PlaneGrid,
+    tpool: &ThreadPool,
+    policy: ExecPolicy,
+) {
+    let nticks = grid.nticks;
+    let nstripes = policy.concurrency();
+    if nstripes <= 1 {
+        for i in 0..plan.len() {
+            let (p0, np, tb0, nt) = plan.window(i);
+            for p in 0..np {
+                let Some(w) = spec.wire_of(p0 + p as i64) else {
+                    continue;
+                };
+                let row = w * nticks;
+                let base = plan.bin_off[i] + p * nt;
+                for t in 0..nt {
+                    let Some(k) = spec.tick_of(tb0 + t as i64) else {
+                        continue;
+                    };
+                    grid.data[row + k] += values[base + t];
+                }
+            }
+        }
+        return;
+    }
+    let nwires = grid.nwires;
+    let (_, fine_t) = spec.fine_shape();
+    let tos = spec.time_oversample();
+    let stripe = nticks.div_ceil(nstripes);
+    let ptr = SendPtr(grid.data.as_mut_ptr());
+    parallel_for(tpool, policy, nstripes, 1, |range| {
+        for s in range {
+            let t_lo = s * stripe;
+            let t_hi = ((s + 1) * stripe).min(nticks);
+            if t_lo >= t_hi {
+                continue;
+            }
+            // SAFETY: each stripe worker writes only bins whose coarse
+            // tick lies in its disjoint [t_lo, t_hi) range, so no two
+            // workers touch the same element.
+            let data = unsafe { std::slice::from_raw_parts_mut(ptr.get(), nwires * nticks) };
+            for i in 0..plan.len() {
+                let (p0, np, tb0, nt) = plan.window(i);
+                // quick reject: the depo's coarse tick span vs stripe
+                let tfirst = tb0.max(0);
+                let tlast = (tb0 + nt as i64 - 1).min(fine_t as i64 - 1);
+                if tfirst > tlast {
+                    continue; // fully clipped in time
+                }
+                let k_first = tfirst as usize / tos;
+                let k_last = tlast as usize / tos;
+                if k_last < t_lo || k_first >= t_hi {
+                    continue;
+                }
+                for p in 0..np {
+                    let Some(w) = spec.wire_of(p0 + p as i64) else {
+                        continue;
+                    };
+                    let row = w * nticks;
+                    let base = plan.bin_off[i] + p * nt;
+                    for t in 0..nt {
+                        let Some(k) = spec.tick_of(tb0 + t as i64) else {
+                            continue;
+                        };
+                        if k < t_lo || k >= t_hi {
+                            continue;
+                        }
+                        data[row + k] += values[base + t];
+                    }
+                }
+            }
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::ExecBackend;
+    use crate::backend::SerialBackend;
+    use crate::config::FluctuationMode;
+    use crate::raster::Patch;
+    use crate::rng::Pcg32;
+    use crate::scatter::scatter_serial;
+    use crate::units::*;
+    use std::sync::Arc;
+
+    fn spec() -> GridSpec {
+        GridSpec::new(100, 3.0 * MM, 256, 0.5 * US, 5, 2)
+    }
+
+    fn views(n: usize) -> Vec<DepoView> {
+        (0..n)
+            .map(|i| DepoView {
+                pitch: (20.0 + (i % 90) as f64 * 3.0) * MM,
+                time: (8.0 + (i % 70) as f64 * 1.5) * US,
+                sigma_pitch: (0.6 + 0.05 * (i % 10) as f64) * MM,
+                sigma_time: 0.8 * US,
+                charge: 4000.0 + 100.0 * (i % 7) as f64,
+            })
+            .collect()
+    }
+
+    /// Reference: the per-patch path (rasterize + serial scatter).
+    fn per_patch_grid(vs: &[DepoView], mode: FluctuationMode, pool: Option<Arc<RandomPool>>) -> PlaneGrid {
+        let s = spec();
+        let mut be = SerialBackend::new(RasterParams::default(), mode, 77, pool);
+        let out = be.rasterize(vs, &s).unwrap();
+        let mut grid = PlaneGrid::for_spec(&s);
+        scatter_serial(&mut grid, &s, &out.patches);
+        grid
+    }
+
+    #[test]
+    fn fused_none_matches_per_patch_bitwise() {
+        let vs = views(40);
+        let reference = per_patch_grid(&vs, FluctuationMode::None, None);
+        let s = spec();
+        let mut grid = PlaneGrid::for_spec(&s);
+        let out = rasterize_fused_serial(
+            &vs,
+            &s,
+            &RasterParams::default(),
+            &mut Fluctuation::None,
+            &mut grid,
+        );
+        assert_eq!(out.depos, 40);
+        assert!(out.bins > 0);
+        assert_eq!(reference.digest(), grid.digest());
+    }
+
+    #[test]
+    fn fused_inline_matches_per_patch_bitwise() {
+        // sequential inline RNG: the fused sweep must consume the
+        // generator in exactly the per-patch order (clipped bins too)
+        let vs = {
+            let mut v = views(25);
+            v[3].pitch = -1.0 * MM; // partially overhanging patch
+            v[9].pitch = 297.0 * MM; // overhangs the far edge
+            v
+        };
+        let reference = per_patch_grid(&vs, FluctuationMode::Inline, None);
+        let s = spec();
+        let mut rng = Pcg32::seeded(77); // same seed the backend uses
+        let mut grid = PlaneGrid::for_spec(&s);
+        rasterize_fused_serial(
+            &vs,
+            &s,
+            &RasterParams::default(),
+            &mut Fluctuation::InlineBinomial(&mut rng),
+            &mut grid,
+        );
+        assert_eq!(reference.digest(), grid.digest());
+    }
+
+    #[test]
+    fn fused_pool_matches_per_patch_bitwise() {
+        let vs = views(40);
+        let pool = RandomPool::shared(5, 1 << 16);
+        let reference = per_patch_grid(&vs, FluctuationMode::Pool, Some(pool.clone()));
+        pool.reset();
+        let s = spec();
+        let mut grid = PlaneGrid::for_spec(&s);
+        rasterize_fused_serial(
+            &vs,
+            &s,
+            &RasterParams::default(),
+            &mut Fluctuation::PoolNormal(&pool),
+            &mut grid,
+        );
+        assert_eq!(reference.digest(), grid.digest());
+    }
+
+    #[test]
+    fn threaded_fused_matches_serial_fused_for_any_thread_count() {
+        let vs = views(60);
+        let s = spec();
+        let pool = RandomPool::generate(9, 1 << 16);
+        let mut serial_grid = PlaneGrid::for_spec(&s);
+        rasterize_fused_serial(
+            &vs,
+            &s,
+            &RasterParams::default(),
+            &mut Fluctuation::PoolNormal(&pool),
+            &mut serial_grid,
+        );
+        let tp = ThreadPool::new(4);
+        for threads in [1usize, 2, 3, 4] {
+            pool.reset();
+            let mut grid = PlaneGrid::for_spec(&s);
+            let out = rasterize_fused_threaded(
+                &vs,
+                &s,
+                &RasterParams::default(),
+                &pool,
+                &mut grid,
+                &tp,
+                threads,
+            );
+            assert_eq!(out.depos, 60);
+            assert_eq!(
+                serial_grid.digest(),
+                grid.digest(),
+                "thread count {threads} broke bit parity"
+            );
+        }
+    }
+
+    #[test]
+    fn fused_conserves_charge_without_fluctuation() {
+        let vs = views(30);
+        let s = spec();
+        let mut grid = PlaneGrid::for_spec(&s);
+        rasterize_fused_serial(
+            &vs,
+            &s,
+            &RasterParams::default(),
+            &mut Fluctuation::None,
+            &mut grid,
+        );
+        let expect: f64 = vs.iter().map(|v| v.charge).sum();
+        // all test views are fully on-grid → total within f32 rounding
+        assert!(
+            (grid.total() - expect).abs() < 1e-3 * expect,
+            "{} vs {expect}",
+            grid.total()
+        );
+    }
+
+    #[test]
+    fn fused_empty_and_off_grid_inputs() {
+        let s = spec();
+        let mut grid = PlaneGrid::for_spec(&s);
+        let out = rasterize_fused_serial(
+            &[],
+            &s,
+            &RasterParams::default(),
+            &mut Fluctuation::None,
+            &mut grid,
+        );
+        assert_eq!((out.depos, out.bins), (0, 0));
+        assert_eq!(grid.total(), 0.0);
+        let far = DepoView {
+            pitch: -3.0 * M,
+            time: 10.0 * US,
+            sigma_pitch: 1.0 * MM,
+            sigma_time: 0.5 * US,
+            charge: 1000.0,
+        };
+        let out = rasterize_fused_serial(
+            &[far],
+            &s,
+            &RasterParams::default(),
+            &mut Fluctuation::None,
+            &mut grid,
+        );
+        assert_eq!(out.depos, 0);
+        assert_eq!(grid.total(), 0.0);
+    }
+
+    #[test]
+    fn striped_scatter_matches_flat_reference() {
+        // synthetic plan + values: striped result == serial fold
+        let s = spec();
+        let vs = views(20);
+        let params = RasterParams::default();
+        let plan = FusedPlan::build(&vs, &s, &params);
+        let values: Vec<f32> = (0..plan.total_bins())
+            .map(|i| (i % 11) as f32 * 0.5)
+            .collect();
+        let mut serial = PlaneGrid::for_spec(&s);
+        // serial fold via the patch scatter for an independent check
+        let mut patches = Vec::new();
+        for i in 0..plan.len() {
+            let (p0, np, tb0, nt) = plan.window(i);
+            patches.push(Patch {
+                pbin0: p0,
+                tbin0: tb0,
+                np,
+                nt,
+                values: values[plan.bin_off[i]..plan.bin_off[i + 1]].to_vec(),
+            });
+        }
+        scatter_serial(&mut serial, &s, &patches);
+        let tp = ThreadPool::new(4);
+        for threads in [1usize, 2, 4] {
+            let mut grid = PlaneGrid::for_spec(&s);
+            scatter_flat_striped(&plan, &values, &s, &mut grid, &tp, ExecPolicy::Threads(threads));
+            assert_eq!(serial.digest(), grid.digest(), "threads={threads}");
+        }
+    }
+}

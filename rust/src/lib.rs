@@ -16,16 +16,24 @@
 //! * substrates: [`units`], [`rng`], [`fft`], [`json`], [`parallel`],
 //!   [`special`], [`testing`]
 //! * physics/sim core: [`geometry`], [`depo`], [`physics`], [`drift`],
-//!   [`raster`], [`scatter`]
+//!   [`raster`], [`kernel`] (the fused SoA hot path), [`scatter`]
 //! * framework + portability: [`dataflow`], [`backend`], [`runtime`],
 //!   [`coordinator`], [`metrics`], [`cli`]
 //! * scale-out: [`throughput`] — the multi-event worker-pool engine
 //!   behind `wire-cell throughput`
 //!
-//! See `README.md` for the quickstart and `docs/ARCHITECTURE.md` for
-//! the full layer walk-through.
+//! See `README.md` for the quickstart, `docs/ARCHITECTURE.md` for the
+//! full layer walk-through, and `docs/KERNELS.md` for the fused-kernel
+//! memory layout and execution model.
 
 #![warn(missing_docs)]
+// ci.sh runs `cargo clippy -- -D warnings`; these are the project-wide
+// style dispensations (each is a deliberate idiom, not an oversight).
+#![allow(clippy::should_implement_trait)] // config enums expose from_str(&str) -> Result<_, String>
+#![allow(clippy::new_without_default)] // zero-arg `new` kept symmetric with configured constructors
+#![allow(clippy::too_many_arguments)] // kernel entry points mirror the paper's parameter vectors
+#![allow(clippy::needless_range_loop)] // index loops double as bin-coordinate arithmetic
+#![allow(clippy::field_reassign_with_default)] // config-override style: default() then overrides
 
 pub mod adc;
 pub mod backend;
@@ -40,6 +48,7 @@ pub mod frame;
 pub mod geometry;
 pub mod harness;
 pub mod json;
+pub mod kernel;
 pub mod metrics;
 pub mod parallel;
 pub mod physics;

@@ -2,7 +2,7 @@
 
 use anyhow::{anyhow, Result};
 use wirecell::cli::{usage, Cli};
-use wirecell::config::BackendChoice;
+use wirecell::config::{BackendChoice, Strategy};
 use wirecell::coordinator::SimPipeline;
 use wirecell::depo::{CosmicSource, DepoSource};
 use wirecell::harness;
@@ -29,6 +29,12 @@ fn run(args: &[String]) -> Result<()> {
     match cli.command.as_str() {
         "simulate" => simulate(&cli),
         "throughput" => throughput(&cli),
+        "rasterize" => {
+            let cfg = cli.sim_config().map_err(|e| anyhow!(e))?;
+            let (table, _digest) =
+                harness::rasterize_report(&cfg, cfg.target_depos, repeat)?;
+            emit(&cli, table)
+        }
         "table2" => {
             let cfg = cli.sim_config().map_err(|e| anyhow!(e))?;
             let n = cfg.target_depos;
@@ -173,10 +179,15 @@ fn throughput(cli: &Cli) -> Result<()> {
         report.events_per_sec(),
         report.depos_per_sec()
     ));
-    let digest_note = if matches!(cfg.backend, BackendChoice::Serial) {
+    // the serial backend is always deterministic; the fused strategy's
+    // deterministic pool indexing + striped scatter extends that to the
+    // threaded backend (docs/KERNELS.md)
+    let digest_note = if matches!(cfg.backend, BackendChoice::Serial)
+        || cfg.strategy == Strategy::Fused
+    {
         "invariant under --workers"
     } else {
-        "bit-exact only with --backend serial"
+        "bit-exact only with --backend serial or --strategy fused"
     };
     text.push_str(&format!(
         "frame digest: {:016x}  (seed {}; {digest_note})\n",

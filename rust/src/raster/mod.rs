@@ -175,8 +175,16 @@ pub fn sample_2d(
 }
 
 /// Fill `out[i]` with the Gaussian mass of bin `bin0 + i`, evaluating
-/// the erf once per edge (shared between adjacent bins).
-fn axis_masses(center: f64, sigma: f64, bins: &crate::geometry::Binning, bin0: i64, out: &mut [f64]) {
+/// the erf once per edge (shared between adjacent bins).  Shared with
+/// the fused SoA kernel (`crate::kernel`) so both paths produce
+/// bit-identical axis tables.
+pub(crate) fn axis_masses(
+    center: f64,
+    sigma: f64,
+    bins: &crate::geometry::Binning,
+    bin0: i64,
+    out: &mut [f64],
+) {
     let inv = 1.0 / (sigma * std::f64::consts::SQRT_2);
     let mut prev = crate::special::erf((bins.edge(bin0) - center) * inv);
     for (i, o) in out.iter_mut().enumerate() {

@@ -81,6 +81,21 @@ impl RandomPool {
         self.cursor.store(0, Ordering::Relaxed);
     }
 
+    /// Atomically claim a block of `count` variates and return the
+    /// starting index (modulo the pool length).
+    ///
+    /// The fused kernel (`crate::kernel`) uses this for *deterministic*
+    /// concurrent fluctuation: one block is claimed per event up front,
+    /// and every depo reads [`normal_at`](Self::normal_at)`(start +
+    /// flat_bin_offset)` — so which thread processes a depo never
+    /// changes which variates it consumes.  Reading `(start + j) %
+    /// len()` reproduces exactly the sequence [`Self::fill_normals`]
+    /// would copy for the same cursor state, which is what makes the
+    /// fused path bit-identical to the per-patch one.
+    pub fn claim_start(&self, count: usize) -> usize {
+        self.cursor.fetch_add(count, Ordering::Relaxed) % self.len()
+    }
+
     /// Atomically claim a cursor for `count` variates.  Thread-safe; the
     /// returned [`PoolCursor`] indexes with wrap-around.
     pub fn claim(&self, count: usize) -> PoolCursor {
@@ -250,6 +265,35 @@ mod tests {
     #[should_panic]
     fn zero_length_pool_panics() {
         let _ = RandomPool::generate(1, 0);
+    }
+
+    #[test]
+    fn claim_start_matches_fill_normals_sequence() {
+        // the fused kernel's block indexing must reproduce exactly what
+        // per-patch fill_normals calls would have read
+        let a = RandomPool::generate(21, 64);
+        let b = RandomPool::generate(21, 64);
+        // advance both cursors identically first
+        let mut burn = vec![0.0f32; 10];
+        a.fill_normals(&mut burn);
+        b.fill_normals(&mut burn);
+        // per-patch side: two consecutive fills of 7 and 5
+        let mut fa = vec![0.0f32; 7];
+        let mut fb = vec![0.0f32; 5];
+        a.fill_normals(&mut fa);
+        a.fill_normals(&mut fb);
+        // fused side: one block claim of 12, indexed flat
+        let start = b.claim_start(12);
+        assert_eq!(start, 10);
+        let flat: Vec<f32> = (0..12).map(|j| b.normal_at(start + j)).collect();
+        assert_eq!(&flat[..7], &fa[..]);
+        assert_eq!(&flat[7..], &fb[..]);
+        // wrap-around: claim past the end still matches fill_normals
+        let start = b.claim_start(60); // 22 + 60 > 64 → wraps
+        let flat: Vec<f32> = (0..60).map(|j| b.normal_at(start + j)).collect();
+        let mut filled = vec![0.0f32; 60];
+        a.fill_normals(&mut filled);
+        assert_eq!(flat, filled);
     }
 
     #[test]

@@ -54,6 +54,24 @@ impl PlaneGrid {
     pub fn clear(&mut self) {
         self.data.iter_mut().for_each(|v| *v = 0.0);
     }
+
+    /// FNV-1a digest over the grid's exact bit content (shape plus
+    /// every bin's `f32` bit pattern).
+    ///
+    /// This is the bit-parity witness the fused kernel
+    /// (`crate::kernel`) and `wire-cell rasterize` use: two raster
+    /// paths that claim to compute the same physics must produce equal
+    /// digests, one-ulp differences included.
+    pub fn digest(&self) -> u64 {
+        const PRIME: u64 = 0x0000_0100_0000_01b3;
+        let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+        h = (h ^ self.nwires as u64).wrapping_mul(PRIME);
+        h = (h ^ self.nticks as u64).wrapping_mul(PRIME);
+        for &v in &self.data {
+            h = (h ^ u64::from(v.to_bits())).wrapping_mul(PRIME);
+        }
+        h
+    }
 }
 
 /// Serial scatter-add of patches onto the grid.
@@ -270,6 +288,19 @@ mod tests {
         let mut g = PlaneGrid::for_spec(&s);
         scatter_serial(&mut g, &s, &patches);
         assert!((g.total() - expect).abs() < 1e-6 * expect);
+    }
+
+    #[test]
+    fn digest_is_bit_sensitive() {
+        let s = spec();
+        let mut a = PlaneGrid::for_spec(&s);
+        let mut b = PlaneGrid::for_spec(&s);
+        scatter_serial(&mut a, &s, &[patch(0, 0, 2, 2, 1.0)]);
+        scatter_serial(&mut b, &s, &[patch(0, 0, 2, 2, 1.0)]);
+        assert_eq!(a.digest(), b.digest());
+        // a one-ulp change must flip the digest
+        b.data[0] = f32::from_bits(b.data[0].to_bits() + 1);
+        assert_ne!(a.digest(), b.digest());
     }
 
     #[test]
