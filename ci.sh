@@ -7,6 +7,7 @@
 # Usage: ./ci.sh               # full gate
 #        SKIP_FMT=1 ./ci.sh    # e.g. on toolchains without rustfmt
 #        SKIP_CLIPPY=1 ./ci.sh # e.g. on toolchains without clippy
+#        SKIP_DOC=1 ./ci.sh    # e.g. on toolchains without rustdoc
 set -euo pipefail
 cd "$(dirname "$0")"
 
@@ -24,7 +25,6 @@ run cargo test -q
 # separate crates that crate-level allows in lib.rs cannot reach.
 if [ -z "${SKIP_CLIPPY:-}" ] && cargo clippy --version >/dev/null 2>&1; then
     run cargo clippy --all-targets -- -D warnings \
-        -A clippy::should_implement_trait \
         -A clippy::new_without_default \
         -A clippy::too_many_arguments \
         -A clippy::needless_range_loop \
@@ -38,10 +38,19 @@ fi
 # hollow out the reproduction — see docs/BENCHMARKS.md).
 run cargo bench --no-run
 
-if [ -z "${SKIP_FMT:-}" ]; then
+# Formatting gate: same availability probe + escape hatch as clippy.
+if [ -z "${SKIP_FMT:-}" ] && cargo fmt --version >/dev/null 2>&1; then
     run cargo fmt --check
+else
+    echo "==> skipping fmt (SKIP_FMT set or rustfmt not installed)"
 fi
 
-RUSTDOCFLAGS="${RUSTDOCFLAGS:-} -D warnings" run cargo doc --no-deps --quiet
+# Documentation gate: the crate carries #![warn(missing_docs)]; promote
+# every rustdoc warning to an error so the docs never rot.
+if [ -z "${SKIP_DOC:-}" ]; then
+    RUSTDOCFLAGS="${RUSTDOCFLAGS:-} -D warnings" run cargo doc --no-deps --quiet
+else
+    echo "==> skipping doc gate (SKIP_DOC set)"
+fi
 
 echo "CI gate passed."

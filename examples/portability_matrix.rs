@@ -1,19 +1,21 @@
 //! Portability matrix: every backend × strategy combination on the same
 //! workload — the full landscape behind the paper's Tables 2–3 in one
-//! run.
+//! run, with every backend resolved through the component registry
+//! (one string-keyed lookup per row, no per-backend plumbing).
 //!
 //! ```sh
 //! make artifacts && cargo run --release --example portability_matrix [ndepos]
 //! ```
 
 use std::sync::Arc;
-use wirecell::backend::{ExecBackend, PjrtBackend, SerialBackend, ThreadedBackend};
+use wirecell::backend::ExecBackend;
 use wirecell::config::{FluctuationMode, SimConfig, Strategy};
 use wirecell::harness::{time_backend, workload};
 use wirecell::metrics::Table;
 use wirecell::parallel::ThreadPool;
 use wirecell::rng::RandomPool;
 use wirecell::runtime::Runtime;
+use wirecell::session::{BackendCx, Registry};
 
 fn main() -> anyhow::Result<()> {
     let n: usize = std::env::args()
@@ -24,17 +26,28 @@ fn main() -> anyhow::Result<()> {
 
     let cfg = SimConfig::default();
     let wl = workload(&cfg, n)?;
-    let params = cfg.raster_params();
     let pool = RandomPool::shared(cfg.seed, cfg.pool_size);
-    let rt = Arc::new(Runtime::open(std::path::Path::new(&cfg.artifacts_dir))?);
+    let registry = Registry::with_defaults();
+    // device rows need the AOT artifacts; skip them gracefully if absent
+    let runtime = Runtime::open(std::path::Path::new(&cfg.artifacts_dir))
+        .ok()
+        .map(Arc::new);
 
     let mut table = Table::new(
         &format!("portability matrix — {n} depos, mean of {repeat} runs"),
         &["Backend", "Strategy", "Total [s]", "2D sampling [s]", "Fluctuation [s]", "Throughput [depo/ms]"],
     );
 
-    let mut add = |be: &mut dyn ExecBackend, strategy: &str| -> anyhow::Result<()> {
-        let (t, wall, patches) = time_backend(be, &wl, repeat)?;
+    // one closure covers every row: effective config in, registry out
+    let mut add = |eff: &SimConfig, strategy: &str| -> anyhow::Result<()> {
+        let cx = BackendCx {
+            seed: eff.seed,
+            pool: Arc::new(ThreadPool::new(eff.backend.threads())),
+            rng_pool: pool.clone(),
+            runtime: runtime.clone(),
+        };
+        let mut be = registry.make_backend(eff, &cx)?;
+        let (t, wall, patches) = time_backend(be.as_mut(), &wl, repeat)?;
         table.row(&[
             be.label(),
             strategy.to_string(),
@@ -52,23 +65,33 @@ fn main() -> anyhow::Result<()> {
         FluctuationMode::Pool,
         FluctuationMode::None,
     ] {
-        let mut be = SerialBackend::new(params, mode, cfg.seed, Some(pool.clone()));
-        add(&mut be, "-")?;
+        let mut eff = cfg.clone();
+        eff.fluctuation = mode;
+        add(&eff, "-")?;
     }
 
-    // host-parallel rows
+    // host-parallel rows: the backend string parses through FromStr
     for strategy in [Strategy::PerDepo, Strategy::Batched] {
-        for threads in [1, 2, 4, 8] {
-            let tp = Arc::new(ThreadPool::new(threads));
-            let mut be = ThreadedBackend::new(params, strategy, threads, tp, pool.clone(), cfg.seed);
-            add(&mut be, strategy.as_str())?;
+        for threads in [1usize, 2, 4, 8] {
+            let mut eff = cfg.clone();
+            eff.backend = format!("threads:{threads}")
+                .parse()
+                .map_err(|e: String| anyhow::anyhow!(e))?;
+            eff.strategy = strategy;
+            add(&eff, strategy.as_str())?;
         }
     }
 
     // device rows
-    for strategy in [Strategy::PerDepo, Strategy::Batched] {
-        let mut be = PjrtBackend::new(rt.clone(), "small", strategy, params, pool.clone())?;
-        add(&mut be, strategy.as_str())?;
+    if runtime.is_some() {
+        for strategy in [Strategy::PerDepo, Strategy::Batched] {
+            let mut eff = cfg.clone();
+            eff.backend = "pjrt".parse().map_err(|e: String| anyhow::anyhow!(e))?;
+            eff.strategy = strategy;
+            add(&eff, strategy.as_str())?;
+        }
+    } else {
+        eprintln!("artifacts/ missing — skipping pjrt rows (run `make artifacts`)");
     }
 
     println!("{}", table.render());

@@ -1,14 +1,14 @@
-//! Quickstart: simulate a single muon track end-to-end and look at the
-//! resulting waveforms.
+//! Quickstart: simulate a single muon track end-to-end through the
+//! session API and look at the resulting waveforms.
 //!
 //! ```sh
 //! cargo run --release --example quickstart
 //! ```
 
 use wirecell::config::{BackendChoice, FluctuationMode, SimConfig};
-use wirecell::coordinator::SimPipeline;
 use wirecell::depo::{DepoSource, TrackDepoSource};
 use wirecell::geometry::PlaneId;
+use wirecell::session::SimSession;
 use wirecell::units::*;
 
 fn main() -> anyhow::Result<()> {
@@ -29,9 +29,20 @@ fn main() -> anyhow::Result<()> {
     let depos = source.generate();
     println!("generated {} depos from {}", depos.len(), source.label());
 
-    // 3. Run drift -> rasterize -> scatter -> FT -> noise -> ADC.
-    let mut pipeline = SimPipeline::new(cfg)?;
-    let report = pipeline.run(&depos)?;
+    // 3. Build the session: the stage topology is explicit here (it is
+    //    also the default, so `.build()` alone would do the same); swap
+    //    or drop stages to reshape the run, or put the list in the
+    //    config file's "topology" section instead.
+    let mut session = SimSession::builder()
+        .config(cfg)
+        .stage("drift")
+        .stage("raster")
+        .stage("scatter")
+        .stage("response")
+        .stage("noise")
+        .stage("adc")
+        .build()?;
+    let report = session.run(&depos)?;
     println!("backend: {}", report.label);
     for (stage, secs, _) in report.stages.stages() {
         println!("  {stage:<8} {secs:.4} s");

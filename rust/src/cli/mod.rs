@@ -123,6 +123,16 @@ impl Cli {
                 overlay.insert(key.to_string(), Value::Number(n));
             }
         }
+        // --topology drift,raster,scatter → the config's topology array
+        // (per-stage overrides need the JSON form; names cover the CLI)
+        if let Some(v) = self.opt("topology") {
+            let names: Vec<Value> = v
+                .split(',')
+                .map(|s| Value::from(s.trim()))
+                .filter(|s| s.as_str().map(|x| !x.is_empty()).unwrap_or(false))
+                .collect();
+            overlay.insert("topology".into(), Value::Array(names));
+        }
         if self.has_flag("noise") {
             overlay.insert("noise".into(), Value::Bool(true));
         }
@@ -155,6 +165,8 @@ COMMANDS:
   fig5         regenerate paper Figure 5 (scatter-add atomic scaling)
   sweep        Figure-3 vs Figure-4 strategy sweep over depo counts
   inspect      list artifacts and their metadata
+  stages       list registered components (stages, backends,
+               strategies) — smoke-tests that registration ran
   version      print version and environment info
 
 COMMON OPTIONS:
@@ -163,6 +175,8 @@ COMMON OPTIONS:
   --backend <b>            serial | threads:N | pjrt
   --strategy <s>           per-depo | batched | fused
   --fluctuation <m>        inline | pool | none
+  --topology <list>        comma-separated stage names (default:
+                           drift,raster,scatter,response,noise,adc)
   --target_depos <n>       workload size, per event (default 100000)
   --events <n>             throughput: events in the stream (default 8)
   --workers <n>            throughput: pipeline workers (default 1)
@@ -238,6 +252,51 @@ mod tests {
         let cfg = cli.sim_config().unwrap();
         assert_eq!(cfg.events, 32);
         assert_eq!(cfg.workers, 4);
+    }
+
+    #[test]
+    fn topology_override_parses_and_validates() {
+        let cli = Cli::parse(&args(&[
+            "simulate",
+            "--topology",
+            "drift, raster,scatter",
+        ]))
+        .unwrap();
+        let cfg = cli.sim_config().unwrap();
+        let names: Vec<&str> = cfg.topology.iter().map(|s| s.name.as_str()).collect();
+        assert_eq!(names, vec!["drift", "raster", "scatter"]);
+        // unknown stage names are rejected through the same validation
+        // path as the JSON topology section
+        let cli = Cli::parse(&args(&["simulate", "--topology", "drift,warp"])).unwrap();
+        let err = cli.sim_config().unwrap_err();
+        assert!(err.contains("unknown stage 'warp'"), "{err}");
+    }
+
+    #[test]
+    fn config_file_topology_survives_cli_overrides() {
+        let dir = std::env::temp_dir().join(format!("wct-cli-topo-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("cfg.json");
+        std::fs::write(
+            &path,
+            r#"{"topology": ["drift", {"stage": "raster", "strategy": "fused"}], "seed": 7}"#,
+        )
+        .unwrap();
+        let cli = Cli::parse(&args(&[
+            "simulate",
+            "--config",
+            path.to_str().unwrap(),
+            "--target_depos",
+            "99",
+        ]))
+        .unwrap();
+        let cfg = cli.sim_config().unwrap();
+        // file topology survives, CLI numeric override lands on top
+        assert_eq!(cfg.topology.len(), 2);
+        assert_eq!(cfg.topology[1].name, "raster");
+        assert_eq!(cfg.target_depos, 99);
+        assert_eq!(cfg.seed, 7);
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

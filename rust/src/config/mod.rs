@@ -1,5 +1,7 @@
 //! Typed run configuration with JSON overlays (WCT is JSON-configured;
-//! this reproduces that shape with defaults ⊕ file ⊕ CLI overrides).
+//! this reproduces that shape with defaults ⊕ file ⊕ CLI overrides),
+//! including the `topology` section that makes the stage-graph run
+//! shape data rather than code.
 
 use crate::json::{parse, to_string_pretty, Value};
 use crate::units::{MM, US};
@@ -15,15 +17,27 @@ pub enum FluctuationMode {
     Pool,
 }
 
-impl FluctuationMode {
-    /// Parse from config string.
-    pub fn from_str(s: &str) -> Result<Self, String> {
+impl std::str::FromStr for FluctuationMode {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Self, String> {
         match s {
             "none" => Ok(Self::None),
             "inline" => Ok(Self::Inline),
             "pool" => Ok(Self::Pool),
             other => Err(format!("unknown fluctuation mode '{other}'")),
         }
+    }
+}
+
+impl FluctuationMode {
+    /// Parse from config string.
+    #[deprecated(note = "use `str::parse::<FluctuationMode>()` (std::str::FromStr)")]
+    // the trait impl above is the real parser; this alias keeps old
+    // callers compiling, hence the targeted lint dispensation
+    #[allow(clippy::should_implement_trait)]
+    pub fn from_str(s: &str) -> Result<Self, String> {
+        s.parse()
     }
 
     /// Config string form.
@@ -47,9 +61,10 @@ pub enum BackendChoice {
     Pjrt,
 }
 
-impl BackendChoice {
-    /// Parse "serial" | "threads:N" | "pjrt".
-    pub fn from_str(s: &str) -> Result<Self, String> {
+impl std::str::FromStr for BackendChoice {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Self, String> {
         if s == "serial" {
             return Ok(Self::Serial);
         }
@@ -64,6 +79,17 @@ impl BackendChoice {
         }
         Err(format!("unknown backend '{s}' (serial|threads:N|pjrt)"))
     }
+}
+
+impl BackendChoice {
+    /// Parse "serial" | "threads:N" | "pjrt".
+    #[deprecated(note = "use `str::parse::<BackendChoice>()` (std::str::FromStr)")]
+    // the trait impl above is the real parser; this alias keeps old
+    // callers compiling, hence the targeted lint dispensation
+    #[allow(clippy::should_implement_trait)]
+    pub fn from_str(s: &str) -> Result<Self, String> {
+        s.parse()
+    }
 
     /// Config string form.
     pub fn label(&self) -> String {
@@ -71,6 +97,25 @@ impl BackendChoice {
             Self::Serial => "serial".into(),
             Self::Threaded(n) => format!("threads:{n}"),
             Self::Pjrt => "pjrt".into(),
+        }
+    }
+
+    /// Registry key this choice resolves under ("serial" | "threads" |
+    /// "pjrt") — the thread count is a parameter, not part of the key.
+    pub fn key(&self) -> &'static str {
+        match self {
+            Self::Serial => "serial",
+            Self::Threaded(_) => "threads",
+            Self::Pjrt => "pjrt",
+        }
+    }
+
+    /// Host threads the backend's kernels dispatch on (1 unless
+    /// `Threaded(n)`), which also decides serial-vs-atomic scatter.
+    pub fn threads(&self) -> usize {
+        match self {
+            Self::Threaded(n) => *n,
+            _ => 1,
         }
     }
 }
@@ -89,9 +134,10 @@ pub enum Strategy {
     Fused,
 }
 
-impl Strategy {
-    /// Parse from config string.
-    pub fn from_str(s: &str) -> Result<Self, String> {
+impl std::str::FromStr for Strategy {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Self, String> {
         match s {
             "per-depo" => Ok(Self::PerDepo),
             "batched" => Ok(Self::Batched),
@@ -101,6 +147,17 @@ impl Strategy {
             )),
         }
     }
+}
+
+impl Strategy {
+    /// Parse from config string.
+    #[deprecated(note = "use `str::parse::<Strategy>()` (std::str::FromStr)")]
+    // the trait impl above is the real parser; this alias keeps old
+    // callers compiling, hence the targeted lint dispensation
+    #[allow(clippy::should_implement_trait)]
+    pub fn from_str(s: &str) -> Result<Self, String> {
+        s.parse()
+    }
 
     /// Config string form.
     pub fn as_str(&self) -> &'static str {
@@ -109,6 +166,64 @@ impl Strategy {
             Self::Batched => "batched",
             Self::Fused => "fused",
         }
+    }
+}
+
+/// One stage of a configured topology: a stage-registry key plus
+/// per-stage config overrides (a JSON object overlaid onto the run
+/// config for that stage only).
+///
+/// JSON form: either a bare name (`"raster"`) or an object carrying
+/// the name under `"stage"` plus the overrides
+/// (`{"stage": "raster", "strategy": "fused"}`).
+#[derive(Clone, Debug, PartialEq)]
+pub struct StageSpec {
+    /// Stage registry key ("drift", "raster", ...).
+    pub name: String,
+    /// Overrides object (empty object = none).
+    pub overrides: Value,
+}
+
+impl StageSpec {
+    /// A stage with no overrides.
+    pub fn named(name: &str) -> Self {
+        Self {
+            name: name.to_string(),
+            overrides: Value::Object(Default::default()),
+        }
+    }
+
+    /// The JSON form this spec round-trips through.
+    pub fn to_value(&self) -> Value {
+        match self.overrides.as_object() {
+            Some(o) if !o.is_empty() => {
+                let mut o = o.clone();
+                o.insert("stage".into(), Value::from(self.name.as_str()));
+                Value::Object(o)
+            }
+            _ => Value::from(self.name.as_str()),
+        }
+    }
+
+    /// Parse one topology entry (string or `{"stage": ...}` object).
+    fn from_value(v: &Value) -> Result<Self, String> {
+        if let Some(name) = v.as_str() {
+            return Ok(Self::named(name));
+        }
+        if let Some(obj) = v.as_object() {
+            let name = obj
+                .get("stage")
+                .and_then(|s| s.as_str())
+                .ok_or_else(|| "topology object entries need a string \"stage\" key".to_string())?
+                .to_string();
+            let mut overrides = obj.clone();
+            overrides.remove("stage");
+            return Ok(Self {
+                name,
+                overrides: Value::Object(overrides),
+            });
+        }
+        Err("topology entries must be stage names or {\"stage\": ...} objects".into())
     }
 }
 
@@ -133,13 +248,18 @@ pub struct SimConfig {
     pub backend: BackendChoice,
     /// Offload strategy for device backends.
     pub strategy: Strategy,
+    /// Stage topology for session runs (empty = the default
+    /// drift→raster→scatter→response→noise→adc chain).  Names must be
+    /// built-in stages ([`crate::session::DEFAULT_TOPOLOGY`]); custom
+    /// stages are addressed through the session builder instead.
+    pub topology: Vec<StageSpec>,
     /// Target number of depos for generated workloads (per event, for
     /// multi-event throughput streams).
     pub target_depos: usize,
     /// Events per throughput-stream run (`throughput` subcommand).
     pub events: usize,
     /// Worker pipelines for the throughput engine (each owns a full
-    /// `SimPipeline`; clamped to the event count at run time).
+    /// session; clamped to the event count at run time).
     pub workers: usize,
     /// Pre-computed pool length (Pool mode).
     pub pool_size: usize,
@@ -165,6 +285,7 @@ impl Default for SimConfig {
             fluctuation: FluctuationMode::Inline,
             backend: BackendChoice::Serial,
             strategy: Strategy::Batched,
+            topology: Vec::new(),
             target_depos: 100_000,
             events: 8,
             workers: 1,
@@ -203,13 +324,22 @@ impl SimConfig {
             self.min_sigma_time = x;
         }
         if let Some(s) = get_str("fluctuation") {
-            self.fluctuation = FluctuationMode::from_str(&s)?;
+            self.fluctuation = s.parse()?;
         }
         if let Some(s) = get_str("backend") {
-            self.backend = BackendChoice::from_str(&s)?;
+            self.backend = s.parse()?;
         }
         if let Some(s) = get_str("strategy") {
-            self.strategy = Strategy::from_str(&s)?;
+            self.strategy = s.parse()?;
+        }
+        if let Some(v) = doc.get("topology") {
+            let arr = v
+                .as_array()
+                .ok_or_else(|| "topology must be an array".to_string())?;
+            self.topology = arr
+                .iter()
+                .map(StageSpec::from_value)
+                .collect::<Result<Vec<_>, _>>()?;
         }
         if let Some(n) = get_usize("target_depos") {
             self.target_depos = n;
@@ -271,6 +401,34 @@ impl SimConfig {
             return Err("oversample factors must be >= 1".into());
         }
         self.detector()?;
+        for spec in &self.topology {
+            if !crate::session::DEFAULT_TOPOLOGY.contains(&spec.name.as_str()) {
+                return Err(format!(
+                    "unknown stage '{}' in topology (known: {}; custom stages go through the session builder)",
+                    spec.name,
+                    crate::session::DEFAULT_TOPOLOGY.join(", ")
+                ));
+            }
+            // per-stage overrides must overlay cleanly AND leave a
+            // valid config (probe.topology is cleared, so this cannot
+            // recurse); the backend is session-level and not
+            // per-stage-overridable
+            let mut probe = self.clone();
+            probe.topology.clear();
+            probe
+                .overlay(&spec.overrides)
+                .map_err(|e| format!("stage '{}' overrides: {e}", spec.name))?;
+            if probe.backend != self.backend {
+                return Err(format!(
+                    "stage '{}' overrides the backend; per-stage backend overrides \
+                     are not supported — set the session backend instead",
+                    spec.name
+                ));
+            }
+            probe
+                .validate()
+                .map_err(|e| format!("stage '{}' overrides: {e}", spec.name))?;
+        }
         Ok(())
     }
 
@@ -286,6 +444,10 @@ impl SimConfig {
             ("fluctuation", Value::from(self.fluctuation.as_str())),
             ("backend", Value::from(self.backend.label())),
             ("strategy", Value::from(self.strategy.as_str())),
+            (
+                "topology",
+                Value::Array(self.topology.iter().map(|s| s.to_value()).collect()),
+            ),
             ("target_depos", Value::from(self.target_depos)),
             ("events", Value::from(self.events)),
             ("workers", Value::from(self.workers)),
@@ -317,6 +479,7 @@ mod tests {
         let cfg = SimConfig::default();
         assert!(cfg.validate().is_ok());
         assert_eq!(cfg.fluctuation, FluctuationMode::Inline);
+        assert!(cfg.topology.is_empty());
     }
 
     #[test]
@@ -337,6 +500,50 @@ mod tests {
     }
 
     #[test]
+    fn topology_overlay_round_trips() {
+        // names and override objects both parse ...
+        let cfg = SimConfig::from_json(
+            r#"{"topology": ["drift", {"stage": "raster", "strategy": "fused"}, "scatter"]}"#,
+        )
+        .unwrap();
+        assert_eq!(cfg.topology.len(), 3);
+        assert_eq!(cfg.topology[0], StageSpec::named("drift"));
+        assert_eq!(cfg.topology[1].name, "raster");
+        assert_eq!(
+            cfg.topology[1].overrides.get("strategy").unwrap().as_str(),
+            Some("fused")
+        );
+        // ... and survive to_json → from_json exactly
+        let back = SimConfig::from_json(&cfg.to_json()).unwrap();
+        assert_eq!(cfg, back);
+    }
+
+    #[test]
+    fn topology_rejects_unknown_stage_names() {
+        let err = SimConfig::from_json(r#"{"topology": ["drift", "warp"]}"#).unwrap_err();
+        assert!(err.contains("unknown stage 'warp'"), "{err}");
+        // malformed entries are rejected too
+        assert!(SimConfig::from_json(r#"{"topology": "drift"}"#).is_err());
+        assert!(SimConfig::from_json(r#"{"topology": [3]}"#).is_err());
+        assert!(SimConfig::from_json(r#"{"topology": [{"strategy": "fused"}]}"#).is_err());
+    }
+
+    #[test]
+    fn topology_rejects_bad_stage_overrides() {
+        let err = SimConfig::from_json(r#"{"topology": [{"stage": "raster", "strategy": "zz"}]}"#)
+            .unwrap_err();
+        assert!(err.contains("unknown strategy"), "{err}");
+        // overrides must leave a *valid* config, not just overlay
+        let err = SimConfig::from_json(r#"{"topology": [{"stage": "raster", "nsigma": -5}]}"#)
+            .unwrap_err();
+        assert!(err.contains("nsigma"), "{err}");
+        // the backend is session-level; per-stage swaps are rejected
+        let err = SimConfig::from_json(r#"{"topology": [{"stage": "raster", "backend": "pjrt"}]}"#)
+            .unwrap_err();
+        assert!(err.contains("per-stage backend overrides"), "{err}");
+    }
+
+    #[test]
     fn throughput_knobs_overlay_and_clamp() {
         let cfg = SimConfig::from_json(r#"{"events": 32, "workers": 4}"#).unwrap();
         assert_eq!(cfg.events, 32);
@@ -352,25 +559,46 @@ mod tests {
 
     #[test]
     fn backend_parsing() {
-        assert_eq!(BackendChoice::from_str("serial").unwrap(), BackendChoice::Serial);
-        assert_eq!(BackendChoice::from_str("pjrt").unwrap(), BackendChoice::Pjrt);
+        assert_eq!("serial".parse::<BackendChoice>().unwrap(), BackendChoice::Serial);
+        assert_eq!("pjrt".parse::<BackendChoice>().unwrap(), BackendChoice::Pjrt);
         assert_eq!(
-            BackendChoice::from_str("threads:8").unwrap(),
+            "threads:8".parse::<BackendChoice>().unwrap(),
             BackendChoice::Threaded(8)
         );
-        assert!(BackendChoice::from_str("cuda").is_err());
-        assert!(BackendChoice::from_str("threads:x").is_err());
+        assert!("cuda".parse::<BackendChoice>().is_err());
+        assert!("threads:x".parse::<BackendChoice>().is_err());
+    }
+
+    #[test]
+    fn backend_registry_keys_and_threads() {
+        assert_eq!(BackendChoice::Serial.key(), "serial");
+        assert_eq!(BackendChoice::Threaded(8).key(), "threads");
+        assert_eq!(BackendChoice::Pjrt.key(), "pjrt");
+        assert_eq!(BackendChoice::Serial.threads(), 1);
+        assert_eq!(BackendChoice::Threaded(8).threads(), 8);
+        assert_eq!(BackendChoice::Pjrt.threads(), 1);
     }
 
     #[test]
     fn strategy_and_fluctuation_parsing() {
-        assert_eq!(Strategy::from_str("per-depo").unwrap(), Strategy::PerDepo);
-        assert_eq!(Strategy::from_str("batched").unwrap(), Strategy::Batched);
-        assert_eq!(Strategy::from_str("fused").unwrap(), Strategy::Fused);
+        assert_eq!("per-depo".parse::<Strategy>().unwrap(), Strategy::PerDepo);
+        assert_eq!("batched".parse::<Strategy>().unwrap(), Strategy::Batched);
+        assert_eq!("fused".parse::<Strategy>().unwrap(), Strategy::Fused);
         assert_eq!(Strategy::Fused.as_str(), "fused");
-        assert!(Strategy::from_str("x").is_err());
-        assert_eq!(FluctuationMode::from_str("pool").unwrap(), FluctuationMode::Pool);
-        assert!(FluctuationMode::from_str("rng").is_err());
+        assert!("x".parse::<Strategy>().is_err());
+        assert_eq!("pool".parse::<FluctuationMode>().unwrap(), FluctuationMode::Pool);
+        assert!("rng".parse::<FluctuationMode>().is_err());
+    }
+
+    #[test]
+    #[allow(deprecated)]
+    fn deprecated_inherent_from_str_still_works() {
+        assert_eq!(BackendChoice::from_str("serial").unwrap(), BackendChoice::Serial);
+        assert_eq!(Strategy::from_str("fused").unwrap(), Strategy::Fused);
+        assert_eq!(
+            FluctuationMode::from_str("inline").unwrap(),
+            FluctuationMode::Inline
+        );
     }
 
     #[test]
@@ -392,7 +620,7 @@ mod tests {
     #[test]
     fn labels_roundtrip() {
         for b in ["serial", "threads:3", "pjrt"] {
-            assert_eq!(BackendChoice::from_str(b).unwrap().label(), b);
+            assert_eq!(b.parse::<BackendChoice>().unwrap().label(), b);
         }
     }
 }

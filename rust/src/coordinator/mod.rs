@@ -1,13 +1,18 @@
-//! The simulation coordinator: assembles depo sources, drift, backends,
-//! scatter, FT, noise and digitization into runnable pipelines, and
-//! owns the run-level metrics the benchmark tables are built from.
+//! The simulation coordinator — the compatibility layer over the
+//! session API.
 //!
-//! The coordinator is the L3 "leader": it owns every resource (thread
-//! pool, RNG pool, PJRT runtime, response spectra) and hands them to
-//! the per-stage implementations.  Offload strategies follow the
-//! paper: per-depo (Figure 3), batched (Figure 4, staged), and fused
-//! (Figure 4 complete — raster+scatter+FT in one device-resident
-//! artifact execution).
+//! Since the stage-graph redesign, the L3 "leader" role (owning the
+//! thread pool, RNG pool, PJRT runtime and response spectra, and
+//! driving drift → raster → scatter → response → noise → adc) lives in
+//! [`crate::session`]: stages are registry-resolved
+//! [`SimStage`](crate::session::SimStage) components and
+//! [`SimSession`](crate::session::SimSession) is the entry point.
+//! This module keeps the legacy surface: [`SimPipeline`] (a thin shim
+//! over a default-topology session) and the dataflow node adapters
+//! ([`nodes`]) for the serial/threaded graph engines.  Offload
+//! strategies follow the paper: per-depo (Figure 3), batched (Figure
+//! 4, staged), and fused (Figure 4 complete — raster+scatter+FT in one
+//! device-resident artifact execution).
 
 pub mod nodes;
 mod pipeline;
@@ -16,8 +21,8 @@ pub use pipeline::{PlaneRunStats, RunReport, SimPipeline};
 
 use crate::config::SimConfig;
 
-/// Build a pipeline from a config (convenience entry point used by the
-/// CLI and the examples).
+/// Build a pipeline from a config (legacy convenience entry point;
+/// prefer `SimSession::builder()` in new code).
 pub fn build(cfg: SimConfig) -> anyhow::Result<SimPipeline> {
     SimPipeline::new(cfg)
 }

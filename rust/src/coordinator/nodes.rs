@@ -86,6 +86,21 @@ impl RasterNode {
             backend,
         }
     }
+
+    /// Session-era constructor: resolve the backend for `cfg` through
+    /// the component registry (one lookup, no backend plumbing) and
+    /// derive the grid spec from the config's oversampling.
+    pub fn from_config(
+        cfg: &crate::config::SimConfig,
+        plane: PlaneId,
+        registry: &crate::session::Registry,
+        cx: &crate::session::BackendCx,
+    ) -> anyhow::Result<Self> {
+        let detector = cfg.detector().map_err(|e| anyhow::anyhow!(e))?;
+        let spec = GridSpec::for_plane(&detector, plane, cfg.pitch_oversample, cfg.time_oversample);
+        let backend = registry.make_backend(cfg, cx)?;
+        Ok(Self::new(detector, plane, spec, backend))
+    }
 }
 
 impl FunctionNode for RasterNode {
@@ -281,6 +296,35 @@ mod tests {
         };
         let (sa, sb) = (sum(&a), sum(&b));
         assert!((sa - sb).abs() < 1e-6 * sa.abs().max(1.0), "{sa} vs {sb}");
+    }
+
+    #[test]
+    fn raster_node_builds_from_registry() {
+        use crate::config::SimConfig;
+        use crate::rng::RandomPool;
+        use crate::session::{BackendCx, Registry};
+
+        let mut cfg = SimConfig::default();
+        cfg.fluctuation = FluctuationMode::None;
+        let reg = Registry::with_defaults();
+        let cx = BackendCx {
+            seed: cfg.seed,
+            pool: Arc::new(crate::parallel::ThreadPool::new(1)),
+            rng_pool: RandomPool::shared(1, 1 << 10),
+            runtime: None,
+        };
+        let mut node = RasterNode::from_config(&cfg, PlaneId::W, &reg, &cx).unwrap();
+        assert_eq!(node.name(), "Raster[W]");
+        let depos = TrackDepoSource::mip(
+            [40.0 * CM, -5.0 * CM, -10.0 * CM],
+            [45.0 * CM, 5.0 * CM, 10.0 * CM],
+            0.0,
+            1,
+        )
+        .generate();
+        let out = node.call(Payload::Depos(depos));
+        assert_eq!(out.len(), 1);
+        assert!(matches!(out[0], Payload::Patches(..)));
     }
 
     #[test]

@@ -1,71 +1,31 @@
-//! The end-to-end simulation pipeline.
+//! The legacy end-to-end pipeline entry point, now a thin
+//! compatibility shim over a default-topology [`SimSession`].
+//!
+//! New code should use [`crate::session::SimSession`] directly (the
+//! builder gives stage-topology control, custom registries, and the
+//! same long-lived-resource behavior).  `SimPipeline` remains so the
+//! original API keeps working unchanged — every method delegates, and
+//! the bit-parity of the two paths is asserted by
+//! `rust/tests/session.rs`.
 
-use crate::adc::Digitizer;
-use crate::backend::{ExecBackend, PjrtBackend, SerialBackend, StageTimings, ThreadedBackend};
-use crate::config::{BackendChoice, SimConfig, Strategy};
+use crate::backend::ExecBackend;
+use crate::config::SimConfig;
 use crate::depo::Depo;
-use crate::drift::Drifter;
-use crate::frame::{Frame, PlaneFrame};
 use crate::geometry::{Detector, PlaneId};
-use crate::metrics::StageTimer;
-use crate::noise::{NoiseGenerator, NoiseSpectrum};
-use crate::parallel::{ExecPolicy, ThreadPool};
 use crate::raster::{DepoView, GridSpec};
-use crate::response::{PlaneResponse, ResponseSpectrum};
 use crate::rng::RandomPool;
-use crate::runtime::{Runtime, TensorInput};
-use crate::scatter::{scatter_atomic, scatter_serial, PlaneGrid};
-use crate::units::VOLT;
-use anyhow::{anyhow, Context, Result};
+use crate::runtime::Runtime;
+use crate::session::SimSession;
+use anyhow::Result;
 use std::sync::Arc;
 
-/// Per-plane stats from a run.
-#[derive(Clone, Debug, Default)]
-pub struct PlaneRunStats {
-    /// Views rasterized.
-    pub views: usize,
-    /// Patches produced.
-    pub patches: usize,
-    /// Total rasterized charge (electrons).
-    pub charge: f64,
-    /// Raster sub-step timings (Table 2/3 columns).
-    pub raster: StageTimings,
-}
+pub use crate::session::{PlaneRunStats, RunReport};
 
-/// Full run report.
-pub struct RunReport {
-    /// Backend row label.
-    pub label: String,
-    /// Input depo count.
-    pub depos: usize,
-    /// Per-plane stats (U, V, W order).
-    pub planes: Vec<PlaneRunStats>,
-    /// Whole-pipeline stage timer (drift/raster/scatter/ft/noise/adc).
-    pub stages: StageTimer,
-    /// The simulated event frame (None when `frames=false`).
-    pub frame: Option<Frame>,
-}
-
-impl RunReport {
-    /// Aggregate raster timings over planes.
-    pub fn raster_total(&self) -> StageTimings {
-        let mut t = StageTimings::default();
-        for p in &self.planes {
-            t.add(&p.raster);
-        }
-        t
-    }
-}
-
-/// The configured pipeline.
+/// The configured pipeline — a compatibility shim delegating to a
+/// default-topology [`SimSession`].  Prefer `SimSession` in new code
+/// (see the migration note in `docs/ARCHITECTURE.md`).
 pub struct SimPipeline {
-    cfg: SimConfig,
-    detector: Detector,
-    pool: Arc<ThreadPool>,
-    rng_pool: Arc<RandomPool>,
-    runtime: Option<Arc<Runtime>>,
-    /// Response spectra per plane, built lazily per grid shape.
-    responses: Vec<Option<ResponseSpectrum>>,
+    session: SimSession,
     /// Build ADC frames during `run` (disable for raster-only benches).
     pub produce_frames: bool,
 }
@@ -73,14 +33,17 @@ pub struct SimPipeline {
 impl SimPipeline {
     /// Construct from a validated config.
     pub fn new(cfg: SimConfig) -> Result<Self> {
-        let rng_pool = Self::variate_pool_for(&cfg);
-        Self::with_variate_pool(cfg, rng_pool)
+        Ok(Self {
+            session: SimSession::new(cfg)?,
+            produce_frames: true,
+        })
     }
 
     /// The variate pool [`new`](Self::new) would generate for `cfg`
-    /// (the seed derivation lives here so every constructor agrees).
+    /// (the seed derivation lives in [`SimSession::variate_pool_for`]
+    /// so every constructor agrees).
     pub fn variate_pool_for(cfg: &SimConfig) -> Arc<RandomPool> {
-        RandomPool::shared(cfg.seed ^ 0xF00D, cfg.pool_size)
+        SimSession::variate_pool_for(cfg)
     }
 
     /// Construct, adopting a pre-generated variate pool.
@@ -91,344 +54,78 @@ impl SimPipeline {
     /// pool must derive from [`variate_pool_for`](Self::variate_pool_for)
     /// on the same config.
     pub fn with_variate_pool(cfg: SimConfig, rng_pool: Arc<RandomPool>) -> Result<Self> {
-        cfg.validate().map_err(|e| anyhow!(e))?;
-        let detector = cfg.detector().map_err(|e| anyhow!(e))?;
-        let nthreads = match cfg.backend {
-            BackendChoice::Threaded(n) => n,
-            _ => 1,
-        };
-        let pool = Arc::new(ThreadPool::new(nthreads.max(1)));
-        let runtime = match cfg.backend {
-            BackendChoice::Pjrt => {
-                let dir = std::path::Path::new(&cfg.artifacts_dir);
-                Some(Arc::new(Runtime::open(dir).with_context(|| {
-                    format!("opening artifacts dir {}", dir.display())
-                })?))
-            }
-            _ => None,
-        };
         Ok(Self {
-            cfg,
-            responses: vec![None, None, None],
-            detector,
-            pool,
-            rng_pool,
-            runtime,
+            session: SimSession::builder()
+                .config(cfg)
+                .variate_pool(rng_pool)
+                .build()?,
             produce_frames: true,
         })
     }
 
+    /// The underlying session (escape hatch for migrating callers).
+    pub fn session(&mut self) -> &mut SimSession {
+        &mut self.session
+    }
+
     /// The configured detector.
     pub fn detector(&self) -> &Detector {
-        &self.detector
+        self.session.detector()
     }
 
     /// The configuration in force.
     pub fn config(&self) -> &SimConfig {
-        &self.cfg
+        self.session.config()
     }
 
     /// The PJRT runtime, if the backend uses one.
     pub fn runtime(&self) -> Option<&Arc<Runtime>> {
-        self.runtime.as_ref()
+        self.session.runtime()
     }
 
     /// Grid spec for a plane under this config's oversampling.
     pub fn grid_spec(&self, plane: PlaneId) -> GridSpec {
-        GridSpec::for_plane(
-            &self.detector,
-            plane,
-            self.cfg.pitch_oversample,
-            self.cfg.time_oversample,
-        )
+        self.session.grid_spec(plane)
     }
 
-    /// Instantiate the configured backend.
+    /// Instantiate the configured backend (one registry lookup).
     pub fn make_backend(&self) -> Result<Box<dyn ExecBackend>> {
-        let params = self.cfg.raster_params();
-        Ok(match &self.cfg.backend {
-            BackendChoice::Serial => Box::new(SerialBackend::new(
-                params,
-                self.cfg.fluctuation,
-                self.cfg.seed,
-                Some(self.rng_pool.clone()),
-            )),
-            BackendChoice::Threaded(n) => Box::new(ThreadedBackend::new(
-                params,
-                self.cfg.strategy,
-                *n,
-                self.pool.clone(),
-                self.rng_pool.clone(),
-                self.cfg.seed,
-            )),
-            BackendChoice::Pjrt => {
-                let rt = self
-                    .runtime
-                    .as_ref()
-                    .ok_or_else(|| anyhow!("PJRT runtime not initialized"))?;
-                let grid_name = self.artifact_grid_name()?;
-                Box::new(PjrtBackend::new(
-                    rt.clone(),
-                    &grid_name,
-                    self.cfg.strategy,
-                    params,
-                    self.rng_pool.clone(),
-                )?)
-            }
-        })
+        self.session.make_backend()
     }
 
-    /// Which artifact grid matches the configured detector.
-    fn artifact_grid_name(&self) -> Result<String> {
-        match self.cfg.detector.as_str() {
-            "test-small" => Ok("small".to_string()),
-            other => Err(anyhow!(
-                "no AOT artifacts for detector '{other}' — PJRT backend supports 'test-small'"
-            )),
-        }
-    }
-
-    /// Re-seed the pipeline for the next event of a multi-event stream.
-    ///
-    /// Everything expensive survives: the detector, the thread pool,
-    /// the PJRT runtime, and cached response spectra.  Only the cheap
-    /// per-event state changes: `cfg.seed` (which seeds the backend RNG
-    /// and the noise generator on the next [`run`](Self::run)) and the
-    /// pre-computed variate pool's cursor, which rewinds to zero so an
-    /// event consumes the identical pool slice no matter which worker
-    /// of a throughput pool runs it.  The pool *contents* remain a
-    /// function of the construction-time seed; a stream of events is
-    /// therefore fully determined by (construction config, event seed).
+    /// Re-seed the pipeline for the next event of a multi-event stream
+    /// (see [`SimSession::reseed`]).
     pub fn reseed(&mut self, seed: u64) {
-        self.cfg.seed = seed;
-        self.rng_pool.reset();
+        self.session.reseed(seed);
     }
 
     /// Drift a depo set to the response plane.
     pub fn drift(&self, depos: &[Depo]) -> Vec<Depo> {
-        let drifter = Drifter::new(self.detector.response_plane_x);
-        drifter.drift(depos)
+        self.session.drift(depos)
     }
 
     /// Project drifted depos onto a plane.
     pub fn plane_views(&self, drifted: &[Depo], plane: PlaneId) -> Vec<DepoView> {
-        let p = self.detector.plane(plane);
-        drifted
-            .iter()
-            .map(|d| DepoView::project(d, p, self.detector.drift_speed))
-            .collect()
-    }
-
-    /// Response spectrum for a plane (built on first use).
-    fn response(&mut self, plane: PlaneId) -> &ResponseSpectrum {
-        let idx = plane as usize;
-        if self.responses[idx].is_none() {
-            let pr = PlaneResponse::standard(plane, self.detector.tick);
-            let p = self.detector.plane(plane);
-            self.responses[idx] = Some(ResponseSpectrum::assemble(
-                &pr,
-                p.nwires,
-                self.detector.nticks,
-            ));
-        }
-        self.responses[idx].as_ref().unwrap()
+        self.session.plane_views(drifted, plane)
     }
 
     /// Run the full pipeline over a depo set.
     pub fn run(&mut self, depos: &[Depo]) -> Result<RunReport> {
-        let mut stages = StageTimer::new();
-        let drifted = stages.time("drift", || self.drift(depos));
-        let mut backend = self.make_backend()?;
-        let mut planes = Vec::new();
-        let mut frames = Vec::new();
-        for plane in PlaneId::ALL {
-            let spec = self.grid_spec(plane);
-            let views = stages.time("project", || self.plane_views(&drifted, plane));
-            let mut grid = PlaneGrid::for_spec(&spec);
-            let (npatches, raster_timings) = if self.cfg.strategy == Strategy::Fused {
-                // fused SoA kernel: raster + scatter in one pass (see
-                // docs/KERNELS.md); the combined time lands in the
-                // "raster" stage and no separate scatter stage runs
-                let t0 = std::time::Instant::now();
-                let fout = backend.rasterize_fused(&views, &spec, &mut grid)?;
-                stages.add("raster", t0.elapsed().as_secs_f64());
-                (fout.depos, fout.timings)
-            } else {
-                let t0 = std::time::Instant::now();
-                let out = backend.rasterize(&views, &spec)?;
-                stages.add("raster", t0.elapsed().as_secs_f64());
-                stages.time("scatter", || match self.cfg.backend {
-                    BackendChoice::Threaded(n) if n > 1 => scatter_atomic(
-                        &mut grid,
-                        &spec,
-                        &out.patches,
-                        &self.pool,
-                        ExecPolicy::Threads(n),
-                    ),
-                    _ => scatter_serial(&mut grid, &spec, &out.patches),
-                });
-                (out.patches.len(), out.timings)
-            };
-            let charge = grid.total();
-            let mut plane_frame = if self.cfg.apply_response {
-                let resp = self.response(plane);
-                let signal = stages.time("ft", || resp.apply(&grid));
-                let p = self.detector.plane(plane);
-                PlaneFrame {
-                    plane,
-                    nchan: p.nwires,
-                    nticks: self.detector.nticks,
-                    data: signal.iter().map(|&v| (v / VOLT) as f32).collect(),
-                }
-            } else {
-                PlaneFrame {
-                    plane,
-                    nchan: grid.nwires,
-                    nticks: grid.nticks,
-                    data: grid.data.clone(),
-                }
-            };
-            if self.cfg.noise && self.cfg.apply_response {
-                stages.time("noise", || {
-                    let mut gen = NoiseGenerator::new(
-                        NoiseSpectrum::standard(self.detector.nticks),
-                        self.cfg.seed ^ (plane as u64) << 17,
-                    );
-                    // noise is parametrized in ADC-equivalent units;
-                    // convert through the digitizer scale below
-                    for c in 0..plane_frame.nchan {
-                        let wave = gen.waveform();
-                        let row = &mut plane_frame.data
-                            [c * plane_frame.nticks..(c + 1) * plane_frame.nticks];
-                        for (s, n) in row.iter_mut().zip(wave) {
-                            *s += n as f32 * 1e-3; // mV-scale noise in volt units
-                        }
-                    }
-                });
-            }
-            if self.produce_frames && self.cfg.apply_response {
-                stages.time("adc", || {
-                    let baseline = if plane.is_induction() { 2048.0 } else { 400.0 };
-                    let digi = Digitizer::standard(baseline);
-                    for v in plane_frame.data.iter_mut() {
-                        *v = digi.digitize(*v as f64) as f32 - baseline as f32;
-                    }
-                });
-            }
-            planes.push(PlaneRunStats {
-                views: views.len(),
-                patches: npatches,
-                charge,
-                raster: raster_timings,
-            });
-            frames.push(plane_frame);
-        }
-        Ok(RunReport {
-            label: backend.label(),
-            depos: depos.len(),
-            planes,
-            stages,
-            frame: self.produce_frames.then(|| Frame {
-                planes: frames,
-                ident: self.cfg.seed,
-            }),
-        })
+        self.session.produce_frames = self.produce_frames;
+        self.session.run(depos)
     }
 
-    /// Run the Figure-4 *fused* strategy on the collection plane:
-    /// per-batch device execution of raster → scatter-add (coarse
-    /// grid), cheap linear host accumulation, then ONE device FT per
-    /// event — the staged version of the paper's proposed data flow
-    /// (`fused_pipeline_*` remains available for the one-shot variant).
-    /// Returns (M grid, seconds).
+    /// Run the Figure-4 *fused* strategy on the collection plane (see
+    /// [`SimSession::run_fused_collection`]).  Returns (M grid, seconds).
     pub fn run_fused_collection(&mut self, depos: &[Depo]) -> Result<(Vec<f32>, f64)> {
-        let rt = self
-            .runtime
-            .as_ref()
-            .ok_or_else(|| anyhow!("fused strategy needs the PJRT backend"))?
-            .clone();
-        let grid_name = self.artifact_grid_name()?;
-        let name = format!("raster_scatter_{grid_name}");
-        let ft_name = format!("ft_only_{grid_name}");
-        let meta = rt
-            .manifest()
-            .artifacts
-            .get(&name)
-            .ok_or_else(|| anyhow!("artifact {name} missing"))?
-            .clone();
-        let (p, t) = (meta.grid.patch_p, meta.grid.patch_t);
-        let batch = rt.manifest().batch;
-        let plane = PlaneId::W;
-        let spec = meta.grid.grid_spec();
-        let drifted = self.drift(depos);
-        let views = self.plane_views(&drifted, plane);
-        // response spectrum (half-spectrum re/im) on the artifact grid
-        let pr = PlaneResponse::standard(plane, self.detector.tick);
-        let full = ResponseSpectrum::assemble(&pr, meta.grid.nwires, meta.grid.nticks);
-        let half = meta.grid.nticks / 2 + 1;
-        let mut r_re = vec![0f32; meta.grid.nwires * half];
-        let mut r_im = vec![0f32; meta.grid.nwires * half];
-        for w in 0..meta.grid.nwires {
-            for k in 0..half {
-                let c = full.spectrum()[w * meta.grid.nticks + k];
-                r_re[w * half + k] = c.re as f32;
-                r_im[w * half + k] = c.im as f32;
-            }
-        }
-        rt.warmup(&name)?;
-        rt.warmup(&ft_name)?;
-        let params_cfg = self.cfg.raster_params();
-        let kept: Vec<&DepoView> = views
-            .iter()
-            .filter(|v| crate::raster::patch_window(v, &spec, &params_cfg).is_some())
-            .collect();
-        let mut accum = vec![0f32; meta.grid.nwires * meta.grid.nticks];
-        let t0 = std::time::Instant::now();
-        for chunk in kept.chunks(batch) {
-            let mut params = vec![0f32; batch * 5];
-            let mut windows = vec![0i32; batch * 2];
-            for (i, view) in chunk.iter().enumerate() {
-                let pb = spec.pitch_bins().bin_unclamped(view.pitch) - (p as i64) / 2;
-                let tb = spec.time_bins().bin_unclamped(view.time) - (t as i64) / 2;
-                params[i * 5] = view.pitch as f32;
-                params[i * 5 + 1] = view.time as f32;
-                params[i * 5 + 2] = view.sigma_pitch.max(params_cfg.min_sigma_pitch) as f32;
-                params[i * 5 + 3] = view.sigma_time.max(params_cfg.min_sigma_time) as f32;
-                params[i * 5 + 4] = view.charge as f32;
-                windows[i * 2] = pb as i32;
-                windows[i * 2 + 1] = tb as i32;
-            }
-            let mut normals = vec![0f32; batch * p * t];
-            self.rng_pool.fill_normals(&mut normals);
-            let m = rt.execute_f32(
-                &name,
-                &[
-                    TensorInput::F32(&params, vec![batch as i64, 5]),
-                    TensorInput::I32(&windows, vec![batch as i64, 2]),
-                    TensorInput::F32(&normals, vec![batch as i64, p as i64, t as i64]),
-                ],
-            )?;
-            for (a, v) in accum.iter_mut().zip(m) {
-                *a += v;
-            }
-        }
-        // one FT per event (Eq. 2), on device
-        let measured = rt.execute_f32(
-            &ft_name,
-            &[
-                TensorInput::F32(&accum, vec![meta.grid.nwires as i64, meta.grid.nticks as i64]),
-                TensorInput::F32(&r_re, vec![meta.grid.nwires as i64, half as i64]),
-                TensorInput::F32(&r_im, vec![meta.grid.nwires as i64, half as i64]),
-            ],
-        )?;
-        Ok((measured, t0.elapsed().as_secs_f64()))
+        self.session.run_fused_collection(depos)
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::config::{FluctuationMode, Strategy};
+    use crate::config::{BackendChoice, FluctuationMode, Strategy};
     use crate::depo::{DepoSource, TrackDepoSource};
     use crate::units::*;
 

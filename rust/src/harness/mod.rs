@@ -16,7 +16,6 @@
 
 use crate::backend::{ExecBackend, PjrtBackend, SerialBackend, StageTimings, ThreadedBackend};
 use crate::config::{FluctuationMode, SimConfig, Strategy};
-use crate::coordinator::SimPipeline;
 use crate::depo::{CosmicSource, DepoSource};
 use crate::geometry::PlaneId;
 use crate::metrics::Table;
@@ -25,6 +24,7 @@ use crate::raster::{DepoView, GridSpec, Patch};
 use crate::rng::RandomPool;
 use crate::runtime::Runtime;
 use crate::scatter::{scatter_atomic, scatter_serial, PlaneGrid};
+use crate::session::SimSession;
 use crate::throughput::{run_stream, StreamOptions, ThroughputReport};
 use anyhow::Result;
 use std::sync::Arc;
@@ -44,20 +44,20 @@ pub struct Workload {
 pub fn workload(cfg: &SimConfig, n: usize) -> Result<Workload> {
     let mut cfg = cfg.clone();
     cfg.target_depos = n;
-    let pipe = SimPipeline::new(cfg.clone())?;
-    let mut src = CosmicSource::with_target_depos(pipe.detector().clone(), n, cfg.seed);
+    let session = SimSession::new(cfg.clone())?;
+    let mut src = CosmicSource::with_target_depos(session.detector().clone(), n, cfg.seed);
     let mut depos = src.generate();
     // top up/trim to exactly n so rows are comparable across runs
     let mut extra_seed = cfg.seed;
     while depos.len() < n {
         extra_seed += 1;
-        let mut more = CosmicSource::with_target_depos(pipe.detector().clone(), n, extra_seed);
+        let mut more = CosmicSource::with_target_depos(session.detector().clone(), n, extra_seed);
         depos.extend(more.generate());
     }
     depos.truncate(n);
-    let drifted = pipe.drift(&depos);
-    let views = pipe.plane_views(&drifted, PlaneId::W);
-    let spec = pipe.grid_spec(PlaneId::W);
+    let drifted = session.drift(&depos);
+    let views = session.plane_views(&drifted, PlaneId::W);
+    let spec = session.grid_spec(PlaneId::W);
     Ok(Workload { views, spec })
 }
 
@@ -293,16 +293,16 @@ pub fn strategy_sweep(
             pool.clone(),
         )?;
         let (_, t_bat, _) = time_backend(&mut batched, &wl, repeat)?;
-        // fused: through the coordinator (includes scatter+FT on device)
+        // fused: through the session (includes scatter+FT on device)
         let mut cfg_f = cfg.clone();
         cfg_f.backend = crate::config::BackendChoice::Pjrt;
         cfg_f.target_depos = n;
-        let mut pipe = SimPipeline::new(cfg_f)?;
-        let mut src = CosmicSource::with_target_depos(pipe.detector().clone(), n, cfg.seed);
+        let mut session = SimSession::new(cfg_f)?;
+        let mut src = CosmicSource::with_target_depos(session.detector().clone(), n, cfg.seed);
         let depos = src.generate();
         let mut t_fused = 0.0;
         for _ in 0..repeat.max(1) {
-            let (_, dt) = pipe.run_fused_collection(&depos)?;
+            let (_, dt) = session.run_fused_collection(&depos)?;
             t_fused += dt;
         }
         t_fused /= repeat.max(1) as f64;
@@ -412,17 +412,22 @@ pub fn fused_sweep(
 /// and compare).
 pub fn rasterize_report(cfg: &SimConfig, n: usize, repeat: usize) -> Result<(Table, u64)> {
     let wl = workload(cfg, n)?;
-    let mut pipe = SimPipeline::new(cfg.clone())?;
+    let mut session = SimSession::new(cfg.clone())?;
+    // strategy dispatch is a registry lookup, not a match
+    let fused = session
+        .registry()
+        .strategy(cfg.strategy.as_str())?
+        .fused_scatter;
     let mut best = f64::INFINITY;
     let mut digest = 0u64;
     let mut depos = 0usize;
     let mut best_timings = StageTimings::default();
     for _ in 0..repeat.max(1) {
-        pipe.reseed(cfg.seed); // rewind the variate pool between reps
-        let mut be = pipe.make_backend()?;
+        session.reseed(cfg.seed); // rewind the variate pool between reps
+        let mut be = session.make_backend()?;
         let mut grid = PlaneGrid::for_spec(&wl.spec);
         let t0 = Instant::now();
-        let (d, timings) = if cfg.strategy == Strategy::Fused {
+        let (d, timings) = if fused {
             let fout = be.rasterize_fused(&wl.views, &wl.spec, &mut grid)?;
             (fout.depos, fout.timings)
         } else {

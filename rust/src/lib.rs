@@ -17,19 +17,23 @@
 //!   [`special`], [`testing`]
 //! * physics/sim core: [`geometry`], [`depo`], [`physics`], [`drift`],
 //!   [`raster`], [`kernel`] (the fused SoA hot path), [`scatter`]
-//! * framework + portability: [`dataflow`], [`backend`], [`runtime`],
-//!   [`coordinator`], [`metrics`], [`cli`]
+//! * framework + portability: [`session`] (the stage-graph entry
+//!   point: `SimStage` components, the string-keyed `Registry`, and
+//!   the `SimSession` builder), [`dataflow`], [`backend`], [`runtime`],
+//!   [`coordinator`] (the legacy `SimPipeline` shim + node adapters),
+//!   [`metrics`], [`cli`]
 //! * scale-out: [`throughput`] — the multi-event worker-pool engine
 //!   behind `wire-cell throughput`
 //!
 //! See `README.md` for the quickstart, `docs/ARCHITECTURE.md` for the
-//! full layer walk-through, and `docs/KERNELS.md` for the fused-kernel
-//! memory layout and execution model.
+//! full layer walk-through (including the `SimPipeline` → `SimSession`
+//! migration note and the stage-authoring guide), and
+//! `docs/KERNELS.md` for the fused-kernel memory layout and execution
+//! model.
 
 #![warn(missing_docs)]
 // ci.sh runs `cargo clippy -- -D warnings`; these are the project-wide
 // style dispensations (each is a deliberate idiom, not an oversight).
-#![allow(clippy::should_implement_trait)] // config enums expose from_str(&str) -> Result<_, String>
 #![allow(clippy::new_without_default)] // zero-arg `new` kept symmetric with configured constructors
 #![allow(clippy::too_many_arguments)] // kernel entry points mirror the paper's parameter vectors
 #![allow(clippy::needless_range_loop)] // index loops double as bin-coordinate arithmetic
@@ -58,6 +62,7 @@ pub mod response;
 pub mod rng;
 pub mod runtime;
 pub mod scatter;
+pub mod session;
 pub mod sigproc;
 pub mod special;
 pub mod testing;

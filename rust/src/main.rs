@@ -2,11 +2,10 @@
 
 use anyhow::{anyhow, Result};
 use wirecell::cli::{usage, Cli};
-use wirecell::config::{BackendChoice, Strategy};
-use wirecell::coordinator::SimPipeline;
 use wirecell::depo::{CosmicSource, DepoSource};
 use wirecell::harness;
 use wirecell::metrics::Table;
+use wirecell::session::{Registry, SimSession};
 
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -69,10 +68,16 @@ fn run(args: &[String]) -> Result<()> {
             emit(&cli, table)
         }
         "inspect" => inspect(&cli),
+        "stages" => {
+            // the registry listing doubles as a smoke test that every
+            // built-in component registered
+            emit(&cli, Registry::with_defaults().table())
+        }
         "version" => {
             println!("wire-cell 0.1.0 (paper: EPJ Web Conf 251, 03032 (2021))");
             println!("detectors: test-small, uboone-like");
             println!("backends : serial | threads:N | pjrt (XLA/PJRT CPU)");
+            println!("components: see `wire-cell stages`");
             Ok(())
         }
         other => Err(anyhow!("unknown command '{other}'\n{}", usage())),
@@ -92,7 +97,7 @@ fn emit(cli: &Cli, table: Table) -> Result<()> {
 fn simulate(cli: &Cli) -> Result<()> {
     let cfg = cli.sim_config().map_err(|e| anyhow!(e))?;
     eprintln!("config:\n{}", cfg.to_json());
-    let mut pipe = SimPipeline::new(cfg.clone())?;
+    let mut pipe = SimSession::builder().config(cfg.clone()).build()?;
     let mut src = CosmicSource::with_target_depos(
         pipe.detector().clone(),
         cfg.target_depos,
@@ -143,14 +148,14 @@ fn simulate(cli: &Cli) -> Result<()> {
         }
     }
     println!("total wall: {wall:.3} s");
-    if matches!(cfg.backend, BackendChoice::Pjrt) {
-        if let Some(rt) = pipe.runtime() {
-            let (h2d, exec, d2h, n) = rt.stats.snapshot();
-            println!(
-                "pjrt: {n} dispatches, h2d {h2d:.3} s, exec {exec:.3} s, d2h {d2h:.3} s ({})",
-                rt.platform()
-            );
-        }
+    // the runtime exists exactly when the registry entry for the
+    // configured backend declared it needs one
+    if let Some(rt) = pipe.runtime() {
+        let (h2d, exec, d2h, n) = rt.stats.snapshot();
+        println!(
+            "pjrt: {n} dispatches, h2d {h2d:.3} s, exec {exec:.3} s, d2h {d2h:.3} s ({})",
+            rt.platform()
+        );
     }
     Ok(())
 }
@@ -181,10 +186,12 @@ fn throughput(cli: &Cli) -> Result<()> {
     ));
     // the serial backend is always deterministic; the fused strategy's
     // deterministic pool indexing + striped scatter extends that to the
-    // threaded backend (docs/KERNELS.md)
-    let digest_note = if matches!(cfg.backend, BackendChoice::Serial)
-        || cfg.strategy == Strategy::Fused
-    {
+    // threaded backend (docs/KERNELS.md) — both facts live in the
+    // registry descriptors, not in a match here
+    let registry = Registry::with_defaults();
+    let invariant = registry.backend(cfg.backend.key())?.deterministic
+        || registry.strategy(cfg.strategy.as_str())?.worker_invariant_threaded;
+    let digest_note = if invariant {
         "invariant under --workers"
     } else {
         "bit-exact only with --backend serial or --strategy fused"

@@ -1,0 +1,662 @@
+//! The session API — the single user-level entry point over the stage
+//! graph, the component registry, and interchangeable backends.
+//!
+//! The source paper's core lesson is that one user-level API over
+//! swappable execution backends (ref-CPU / Kokkos-OMP / Kokkos-CUDA)
+//! is what makes the simulation portable, and the follow-up studies
+//! (arXiv:2203.02479, arXiv:2304.01841) show the backend list keeps
+//! growing — so the API must admit new backends *and* new pipeline
+//! stages without touching the core.  This module is that inversion:
+//!
+//! * [`SimStage`] — the typed component a pipeline phase implements
+//!   (`name` / `configure` / `process(StageData) -> StageData`, plus a
+//!   per-stage [`StageTimings`](crate::backend::StageTimings) split);
+//! * [`Registry`] — string-keyed factories for backends, strategies
+//!   and stages, so a new backend registers in exactly one place and
+//!   every former `match cfg.backend` collapses to a lookup;
+//! * [`SimSession`] — the built pipeline: a stage topology (from the
+//!   builder, the config's `topology` section, or
+//!   [`DEFAULT_TOPOLOGY`]) driven over long-lived resources.
+//!
+//! ```
+//! use wirecell::config::{FluctuationMode, SimConfig};
+//! use wirecell::depo::{DepoSource, TrackDepoSource};
+//! use wirecell::session::SimSession;
+//! use wirecell::units::*;
+//!
+//! let mut cfg = SimConfig::default();
+//! cfg.fluctuation = FluctuationMode::None;
+//! let mut session = SimSession::builder()
+//!     .config(cfg)
+//!     .stage("drift")
+//!     .stage("raster")
+//!     .stage("scatter")
+//!     .stage("response")
+//!     .stage("noise")
+//!     .stage("adc")
+//!     .build()?;
+//! let depos = TrackDepoSource::mip(
+//!     [45.0 * CM, -5.0 * CM, -5.0 * CM],
+//!     [50.0 * CM, 5.0 * CM, 5.0 * CM],
+//!     0.0,
+//!     3,
+//! )
+//! .generate();
+//! let report = session.run(&depos)?;
+//! assert_eq!(report.planes.len(), 3);
+//! # Ok::<(), anyhow::Error>(())
+//! ```
+//!
+//! Run shape is data: a config file can carry
+//! `"topology": ["drift", "raster", "scatter"]` (names, or objects
+//! with per-stage overrides like
+//! `{"stage": "raster", "strategy": "fused"}`) and the CLI accepts
+//! `--topology drift,raster,scatter`.  The legacy
+//! [`SimPipeline`](crate::coordinator::SimPipeline) remains as a thin
+//! shim over a default-topology session; see `docs/ARCHITECTURE.md`
+//! for the migration note and the stage-authoring guide.
+
+mod registry;
+mod stage;
+mod stages;
+
+pub use registry::{
+    BackendCx, BackendEntry, BackendFactory, Registry, StageEntry, StageFactory, StrategyInfo,
+    DEFAULT_TOPOLOGY,
+};
+pub use stage::{PlaneData, PlaneRunStats, RunReport, SimStage, StageCx, StageData};
+pub use stages::{AdcStage, DriftStage, NoiseStage, RasterStage, ResponseStage, ScatterStage};
+
+use crate::backend::ExecBackend;
+use crate::config::{SimConfig, StageSpec};
+use crate::depo::Depo;
+use crate::frame::Frame;
+use crate::geometry::{Detector, PlaneId};
+use crate::parallel::ThreadPool;
+use crate::raster::{DepoView, GridSpec};
+use crate::response::{PlaneResponse, ResponseSpectrum};
+use crate::rng::RandomPool;
+use crate::runtime::{Runtime, TensorInput};
+use anyhow::{anyhow, Context, Result};
+use std::sync::Arc;
+
+/// Builder for [`SimSession`]: config ⊕ registry ⊕ stage topology.
+///
+/// Stage precedence: explicit [`stage`](Self::stage) /
+/// [`stage_with`](Self::stage_with) calls win over the config's
+/// `topology` section, which wins over [`DEFAULT_TOPOLOGY`].
+pub struct SessionBuilder {
+    cfg: SimConfig,
+    registry: Registry,
+    stages: Vec<StageSpec>,
+    produce_frames: bool,
+    variate_pool: Option<Arc<RandomPool>>,
+}
+
+impl SessionBuilder {
+    /// Set the run configuration (defaults ⊕ file ⊕ CLI overrides).
+    pub fn config(mut self, cfg: SimConfig) -> Self {
+        self.cfg = cfg;
+        self
+    }
+
+    /// Replace the component registry (to add custom backends,
+    /// strategies or stages before resolution).
+    pub fn registry(mut self, registry: Registry) -> Self {
+        self.registry = registry;
+        self
+    }
+
+    /// Append a stage by registry name.
+    pub fn stage(mut self, name: &str) -> Self {
+        self.stages.push(StageSpec::named(name));
+        self
+    }
+
+    /// Append a stage with per-stage config overrides (a JSON object
+    /// overlaid onto the session config for this stage only, e.g.
+    /// `{"strategy": "fused"}` on the raster stage).
+    pub fn stage_with(mut self, name: &str, overrides: crate::json::Value) -> Self {
+        self.stages.push(StageSpec {
+            name: name.to_string(),
+            overrides,
+        });
+        self
+    }
+
+    /// Whether runs assemble digitized frames (default true; raster
+    /// benches disable it).
+    pub fn produce_frames(mut self, yes: bool) -> Self {
+        self.produce_frames = yes;
+        self
+    }
+
+    /// Adopt a pre-generated variate pool (the throughput engine forks
+    /// one template per worker).  For bit-parity with the default the
+    /// pool must derive from [`SimSession::variate_pool_for`] on the
+    /// same config.
+    pub fn variate_pool(mut self, pool: Arc<RandomPool>) -> Self {
+        self.variate_pool = Some(pool);
+        self
+    }
+
+    /// Validate the config, open long-lived resources, resolve the
+    /// stage topology against the registry, and configure every stage.
+    pub fn build(self) -> Result<SimSession> {
+        let cfg = self.cfg;
+        cfg.validate().map_err(|e| anyhow!(e))?;
+        let detector = cfg.detector().map_err(|e| anyhow!(e))?;
+        let registry = self.registry;
+        let backend_info = registry.backend(cfg.backend.key())?;
+        let pool = Arc::new(ThreadPool::new(cfg.backend.threads().max(1)));
+        let runtime = if backend_info.needs_runtime {
+            let dir = std::path::Path::new(&cfg.artifacts_dir);
+            Some(Arc::new(Runtime::open(dir).with_context(|| {
+                format!("opening artifacts dir {}", dir.display())
+            })?))
+        } else {
+            None
+        };
+        let rng_pool = self
+            .variate_pool
+            .unwrap_or_else(|| SimSession::variate_pool_for(&cfg));
+        let specs: Vec<StageSpec> = if !self.stages.is_empty() {
+            self.stages
+        } else if !cfg.topology.is_empty() {
+            cfg.topology.clone()
+        } else {
+            DEFAULT_TOPOLOGY.iter().map(|&n| StageSpec::named(n)).collect()
+        };
+        let mut stages = Vec::with_capacity(specs.len());
+        for spec in &specs {
+            let mut stage = registry.make_stage(&spec.name)?;
+            // effective config: session config ⊕ this stage's overrides
+            let mut eff = cfg.clone();
+            eff.topology.clear();
+            eff.overlay(&spec.overrides)
+                .map_err(|e| anyhow!("stage '{}' overrides: {e}", spec.name))?;
+            // the backend is a session-level resource (thread pool, PJRT
+            // runtime, variate pool are provisioned once, up front) and
+            // cannot be swapped per stage
+            if eff.backend != cfg.backend {
+                return Err(anyhow!(
+                    "stage '{}' overrides the backend ({} -> {}); per-stage backend \
+                     overrides are not supported — set the session backend instead",
+                    spec.name,
+                    cfg.backend.label(),
+                    eff.backend.label()
+                ));
+            }
+            // the overridden config must satisfy the same invariants as
+            // the session config (range checks etc.)
+            eff.validate()
+                .map_err(|e| anyhow!("stage '{}' overrides: {e}", spec.name))?;
+            stage
+                .configure(&eff)
+                .with_context(|| format!("configuring stage '{}'", spec.name))?;
+            stages.push(stage);
+        }
+        Ok(SimSession {
+            cfg,
+            detector,
+            pool,
+            rng_pool,
+            runtime,
+            registry,
+            stages,
+            responses: vec![None, None, None],
+            produce_frames: self.produce_frames,
+        })
+    }
+}
+
+/// The configured simulation session: a stage topology over long-lived
+/// resources (detector, thread pool, variate pool, optional PJRT
+/// runtime, cached response spectra).  This is the single entry point
+/// used by the CLI, harness, throughput engine, benches and examples;
+/// the legacy `SimPipeline` delegates here.
+pub struct SimSession {
+    cfg: SimConfig,
+    detector: Detector,
+    pool: Arc<ThreadPool>,
+    rng_pool: Arc<RandomPool>,
+    runtime: Option<Arc<Runtime>>,
+    registry: Registry,
+    stages: Vec<Box<dyn SimStage>>,
+    /// Response spectra per plane, built lazily per grid shape.
+    responses: Vec<Option<ResponseSpectrum>>,
+    /// Build ADC frames during `run` (disable for raster-only benches).
+    pub produce_frames: bool,
+}
+
+impl SimSession {
+    /// Start building a session (default registry, default topology).
+    pub fn builder() -> SessionBuilder {
+        SessionBuilder {
+            cfg: SimConfig::default(),
+            registry: Registry::with_defaults(),
+            stages: Vec::new(),
+            produce_frames: true,
+            variate_pool: None,
+        }
+    }
+
+    /// Construct with the default topology — shorthand for
+    /// `SimSession::builder().config(cfg).build()`.
+    pub fn new(cfg: SimConfig) -> Result<Self> {
+        Self::builder().config(cfg).build()
+    }
+
+    /// The variate pool [`new`](Self::new) would generate for `cfg`
+    /// (the seed derivation lives here so every constructor agrees).
+    pub fn variate_pool_for(cfg: &SimConfig) -> Arc<RandomPool> {
+        RandomPool::shared(cfg.seed ^ 0xF00D, cfg.pool_size)
+    }
+
+    /// The configured detector.
+    pub fn detector(&self) -> &Detector {
+        &self.detector
+    }
+
+    /// The configuration in force.
+    pub fn config(&self) -> &SimConfig {
+        &self.cfg
+    }
+
+    /// The component registry this session resolves against.
+    pub fn registry(&self) -> &Registry {
+        &self.registry
+    }
+
+    /// The PJRT runtime, if the backend uses one.
+    pub fn runtime(&self) -> Option<&Arc<Runtime>> {
+        self.runtime.as_ref()
+    }
+
+    /// The session's pre-computed variate pool.
+    pub fn variate_pool(&self) -> &Arc<RandomPool> {
+        &self.rng_pool
+    }
+
+    /// Stage names in execution order.
+    pub fn stage_names(&self) -> Vec<&str> {
+        self.stages.iter().map(|s| s.name()).collect()
+    }
+
+    /// Grid spec for a plane under this config's oversampling.
+    pub fn grid_spec(&self, plane: PlaneId) -> GridSpec {
+        GridSpec::for_plane(
+            &self.detector,
+            plane,
+            self.cfg.pitch_oversample,
+            self.cfg.time_oversample,
+        )
+    }
+
+    /// Instantiate the configured backend through the registry.
+    pub fn make_backend(&self) -> Result<Box<dyn ExecBackend>> {
+        self.registry.make_backend(
+            &self.cfg,
+            &BackendCx {
+                seed: self.cfg.seed,
+                pool: self.pool.clone(),
+                rng_pool: self.rng_pool.clone(),
+                runtime: self.runtime.clone(),
+            },
+        )
+    }
+
+    /// Re-seed the session for the next event of a multi-event stream.
+    ///
+    /// Everything expensive survives: the detector, the thread pool,
+    /// the PJRT runtime, and cached response spectra.  Only the cheap
+    /// per-event state changes: `cfg.seed` (which seeds the backend RNG
+    /// and the noise generator on the next [`run`](Self::run)) and the
+    /// pre-computed variate pool's cursor, which rewinds to zero so an
+    /// event consumes the identical pool slice no matter which worker
+    /// of a throughput pool runs it.  The pool *contents* remain a
+    /// function of the construction-time seed; a stream of events is
+    /// therefore fully determined by (construction config, event seed).
+    pub fn reseed(&mut self, seed: u64) {
+        self.cfg.seed = seed;
+        self.rng_pool.reset();
+    }
+
+    /// Drift a depo set to the response plane.
+    pub fn drift(&self, depos: &[Depo]) -> Vec<Depo> {
+        let drifter = crate::drift::Drifter::new(self.detector.response_plane_x);
+        drifter.drift(depos)
+    }
+
+    /// Project drifted depos onto a plane.
+    pub fn plane_views(&self, drifted: &[Depo], plane: PlaneId) -> Vec<DepoView> {
+        let p = self.detector.plane(plane);
+        drifted
+            .iter()
+            .map(|d| DepoView::project(d, p, self.detector.drift_speed))
+            .collect()
+    }
+
+    /// Run the stage topology over a depo set.
+    pub fn run(&mut self, depos: &[Depo]) -> Result<RunReport> {
+        let ndepos = depos.len();
+        let mut data = StageData::new(depos.to_vec());
+        let Self {
+            cfg,
+            detector,
+            pool,
+            rng_pool,
+            runtime,
+            registry,
+            stages,
+            responses,
+            produce_frames,
+        } = self;
+        for stage in stages.iter_mut() {
+            // fresh reborrows each iteration: the context dies with it
+            let mut cx = StageCx {
+                cfg: &*cfg,
+                detector: &*detector,
+                pool: &*pool,
+                rng_pool: &*rng_pool,
+                runtime: runtime.as_ref(),
+                registry: &*registry,
+                responses: &mut *responses,
+                produce_frames: *produce_frames,
+            };
+            data = stage
+                .process(data, &mut cx)
+                .with_context(|| format!("stage '{}'", stage.name()))?;
+        }
+        let StageData {
+            planes,
+            stats,
+            timer,
+            label,
+            ..
+        } = data;
+        let mut plane_frames = Vec::with_capacity(planes.len());
+        let mut complete = !planes.is_empty();
+        for pd in planes {
+            match pd.frame {
+                Some(f) => plane_frames.push(f),
+                None => complete = false,
+            }
+        }
+        Ok(RunReport {
+            label: if label.is_empty() {
+                self.cfg.backend.label()
+            } else {
+                label
+            },
+            depos: ndepos,
+            planes: stats,
+            stages: timer,
+            frame: (self.produce_frames && complete).then(|| Frame {
+                planes: plane_frames,
+                ident: self.cfg.seed,
+            }),
+        })
+    }
+
+    /// Run the Figure-4 *fused* strategy on the collection plane:
+    /// per-batch device execution of raster → scatter-add (coarse
+    /// grid), cheap linear host accumulation, then ONE device FT per
+    /// event — the staged version of the paper's proposed data flow
+    /// (`fused_pipeline_*` remains available for the one-shot variant).
+    /// Returns (M grid, seconds).
+    pub fn run_fused_collection(&mut self, depos: &[Depo]) -> Result<(Vec<f32>, f64)> {
+        let rt = self
+            .runtime
+            .as_ref()
+            .ok_or_else(|| anyhow!("fused strategy needs the PJRT backend"))?
+            .clone();
+        let grid_name = registry::artifact_grid_name(&self.cfg)?;
+        let name = format!("raster_scatter_{grid_name}");
+        let ft_name = format!("ft_only_{grid_name}");
+        let meta = rt
+            .manifest()
+            .artifacts
+            .get(&name)
+            .ok_or_else(|| anyhow!("artifact {name} missing"))?
+            .clone();
+        let (p, t) = (meta.grid.patch_p, meta.grid.patch_t);
+        let batch = rt.manifest().batch;
+        let plane = PlaneId::W;
+        let spec = meta.grid.grid_spec();
+        let drifted = self.drift(depos);
+        let views = self.plane_views(&drifted, plane);
+        // response spectrum (half-spectrum re/im) on the artifact grid
+        let pr = PlaneResponse::standard(plane, self.detector.tick);
+        let full = ResponseSpectrum::assemble(&pr, meta.grid.nwires, meta.grid.nticks);
+        let half = meta.grid.nticks / 2 + 1;
+        let mut r_re = vec![0f32; meta.grid.nwires * half];
+        let mut r_im = vec![0f32; meta.grid.nwires * half];
+        for w in 0..meta.grid.nwires {
+            for k in 0..half {
+                let c = full.spectrum()[w * meta.grid.nticks + k];
+                r_re[w * half + k] = c.re as f32;
+                r_im[w * half + k] = c.im as f32;
+            }
+        }
+        rt.warmup(&name)?;
+        rt.warmup(&ft_name)?;
+        let params_cfg = self.cfg.raster_params();
+        let kept: Vec<&DepoView> = views
+            .iter()
+            .filter(|v| crate::raster::patch_window(v, &spec, &params_cfg).is_some())
+            .collect();
+        let mut accum = vec![0f32; meta.grid.nwires * meta.grid.nticks];
+        let t0 = std::time::Instant::now();
+        for chunk in kept.chunks(batch) {
+            let mut params = vec![0f32; batch * 5];
+            let mut windows = vec![0i32; batch * 2];
+            for (i, view) in chunk.iter().enumerate() {
+                let pb = spec.pitch_bins().bin_unclamped(view.pitch) - (p as i64) / 2;
+                let tb = spec.time_bins().bin_unclamped(view.time) - (t as i64) / 2;
+                params[i * 5] = view.pitch as f32;
+                params[i * 5 + 1] = view.time as f32;
+                params[i * 5 + 2] = view.sigma_pitch.max(params_cfg.min_sigma_pitch) as f32;
+                params[i * 5 + 3] = view.sigma_time.max(params_cfg.min_sigma_time) as f32;
+                params[i * 5 + 4] = view.charge as f32;
+                windows[i * 2] = pb as i32;
+                windows[i * 2 + 1] = tb as i32;
+            }
+            let mut normals = vec![0f32; batch * p * t];
+            self.rng_pool.fill_normals(&mut normals);
+            let m = rt.execute_f32(
+                &name,
+                &[
+                    TensorInput::F32(&params, vec![batch as i64, 5]),
+                    TensorInput::I32(&windows, vec![batch as i64, 2]),
+                    TensorInput::F32(&normals, vec![batch as i64, p as i64, t as i64]),
+                ],
+            )?;
+            for (a, v) in accum.iter_mut().zip(m) {
+                *a += v;
+            }
+        }
+        // one FT per event (Eq. 2), on device
+        let measured = rt.execute_f32(
+            &ft_name,
+            &[
+                TensorInput::F32(&accum, vec![meta.grid.nwires as i64, meta.grid.nticks as i64]),
+                TensorInput::F32(&r_re, vec![meta.grid.nwires as i64, half as i64]),
+                TensorInput::F32(&r_im, vec![meta.grid.nwires as i64, half as i64]),
+            ],
+        )?;
+        Ok((measured, t0.elapsed().as_secs_f64()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{BackendChoice, FluctuationMode};
+    use crate::depo::{DepoSource, TrackDepoSource};
+    use crate::units::*;
+
+    fn track_depos() -> Vec<Depo> {
+        TrackDepoSource::mip(
+            [50.0 * CM, -10.0 * CM, -20.0 * CM],
+            [60.0 * CM, 10.0 * CM, 20.0 * CM],
+            0.0,
+            7,
+        )
+        .generate()
+    }
+
+    fn cfg_serial() -> SimConfig {
+        let mut cfg = SimConfig::default();
+        cfg.backend = BackendChoice::Serial;
+        cfg.fluctuation = FluctuationMode::None;
+        cfg.noise = false;
+        cfg.pool_size = 1 << 16;
+        cfg
+    }
+
+    #[test]
+    fn default_topology_runs_end_to_end() {
+        let mut session = SimSession::new(cfg_serial()).unwrap();
+        assert_eq!(session.stage_names(), DEFAULT_TOPOLOGY.to_vec());
+        let report = session.run(&track_depos()).unwrap();
+        assert_eq!(report.planes.len(), 3);
+        assert!(report.frame.is_some());
+        assert!(report.stages.total("raster") > 0.0);
+        assert!(report.label.contains("ref-CPU"));
+    }
+
+    #[test]
+    fn builder_stages_override_default_topology() {
+        let mut session = SimSession::builder()
+            .config(cfg_serial())
+            .stage("drift")
+            .stage("raster")
+            .stage("scatter")
+            .build()
+            .unwrap();
+        assert_eq!(session.stage_names(), vec!["drift", "raster", "scatter"]);
+        let report = session.run(&track_depos()).unwrap();
+        // no response stage → no frame, but charge landed on the grids
+        assert!(report.frame.is_none());
+        assert!(report.planes.iter().all(|p| p.charge > 0.0));
+        assert_eq!(report.stages.total("ft"), 0.0);
+    }
+
+    #[test]
+    fn unknown_stage_is_a_build_error() {
+        let err = SimSession::builder()
+            .config(cfg_serial())
+            .stage("warp")
+            .build()
+            .map(|_| ())
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("unknown stage 'warp'"), "{err}");
+    }
+
+    #[test]
+    fn per_stage_override_switches_strategy() {
+        // raster override to fused: scatter stage must skip, frame must
+        // match the plain batched run bit for bit (the fused contract)
+        let depos = track_depos();
+        let mut cfg = cfg_serial();
+        cfg.fluctuation = FluctuationMode::Pool;
+        let base = SimSession::new(cfg.clone())
+            .unwrap()
+            .run(&depos)
+            .unwrap();
+        let mut fused = SimSession::builder()
+            .config(cfg)
+            .stage("drift")
+            .stage_with(
+                "raster",
+                crate::json::Value::object(vec![(
+                    "strategy",
+                    crate::json::Value::from("fused"),
+                )]),
+            )
+            .stage("scatter")
+            .stage("response")
+            .stage("noise")
+            .stage("adc")
+            .build()
+            .unwrap();
+        let report = fused.run(&depos).unwrap();
+        assert_eq!(report.stages.total("scatter"), 0.0);
+        let a = base.frame.unwrap();
+        let b = report.frame.unwrap();
+        for (pa, pb) in a.planes.iter().zip(&b.planes) {
+            for (x, y) in pa.data.iter().zip(&pb.data) {
+                assert_eq!(x.to_bits(), y.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn per_stage_backend_override_is_rejected() {
+        // the backend is session-level (pool/runtime provisioned once);
+        // a stage_with backend swap must fail loudly at build
+        let err = SimSession::builder()
+            .config(cfg_serial())
+            .stage("drift")
+            .stage_with(
+                "raster",
+                crate::json::Value::object(vec![(
+                    "backend",
+                    crate::json::Value::from("threads:4"),
+                )]),
+            )
+            .build()
+            .map(|_| ())
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("per-stage backend overrides"), "{err}");
+    }
+
+    #[test]
+    fn custom_stage_registers_and_runs() {
+        struct Tap(std::sync::Arc<std::sync::atomic::AtomicUsize>);
+        impl SimStage for Tap {
+            fn name(&self) -> &str {
+                "tap"
+            }
+            fn process(&mut self, data: StageData, _cx: &mut StageCx) -> Result<StageData> {
+                self.0.fetch_add(1, std::sync::atomic::Ordering::SeqCst);
+                Ok(data)
+            }
+        }
+        let hits = std::sync::Arc::new(std::sync::atomic::AtomicUsize::new(0));
+        let mut reg = Registry::with_defaults();
+        let h = hits.clone();
+        reg.register_stage(
+            "tap",
+            "counts events flowing past",
+            Box::new(move || Box::new(Tap(h.clone()))),
+        );
+        let mut session = SimSession::builder()
+            .config(cfg_serial())
+            .registry(reg)
+            .stage("drift")
+            .stage("tap")
+            .stage("raster")
+            .stage("scatter")
+            .build()
+            .unwrap();
+        session.run(&track_depos()).unwrap();
+        session.run(&track_depos()).unwrap();
+        assert_eq!(hits.load(std::sync::atomic::Ordering::SeqCst), 2);
+    }
+
+    #[test]
+    fn topology_from_config_json_is_honored() {
+        let mut cfg = cfg_serial();
+        cfg.topology = vec![
+            StageSpec::named("drift"),
+            StageSpec::named("raster"),
+            StageSpec::named("scatter"),
+        ];
+        let session = SimSession::new(cfg).unwrap();
+        assert_eq!(session.stage_names(), vec!["drift", "raster", "scatter"]);
+    }
+}

@@ -1,0 +1,441 @@
+//! The string-keyed component registry: backends, offload strategies,
+//! and pipeline stages, each behind a factory closure.
+//!
+//! This is the session API's extension point and the collapse of every
+//! `match cfg.backend { ... }` the framework layer used to carry: a
+//! backend (or strategy, or stage) registers **in exactly one place**
+//! and the coordinator, CLI, harness and throughput engine all resolve
+//! it by name.  `wire-cell stages` prints the registry contents, which
+//! doubles as a smoke test that registration ran.
+
+use crate::backend::{ExecBackend, PjrtBackend, SerialBackend, ThreadedBackend};
+use crate::config::SimConfig;
+use crate::metrics::Table;
+use crate::parallel::ThreadPool;
+use crate::rng::RandomPool;
+use crate::runtime::Runtime;
+use anyhow::{anyhow, Result};
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+use super::stage::SimStage;
+use super::stages::{AdcStage, DriftStage, NoiseStage, RasterStage, ResponseStage, ScatterStage};
+
+/// The default stage topology, in execution order — the stage-graph
+/// equivalent of the legacy `SimPipeline::run` chain.  `SimConfig`
+/// validates a configured `topology` section against these names (the
+/// built-in vocabulary); custom stages registered at run time are
+/// addressed through [`SessionBuilder::stage`] instead.
+///
+/// [`SessionBuilder::stage`]: super::SessionBuilder::stage
+pub const DEFAULT_TOPOLOGY: &[&str] = &["drift", "raster", "scatter", "response", "noise", "adc"];
+
+/// Resources a backend factory may need beyond the config: the current
+/// event seed and the session's shared pools/runtime.
+///
+/// Factories must take the seed from here, **not** from
+/// `SimConfig::seed` — the context seed tracks
+/// [`reseed`](super::SimSession::reseed) while the config snapshot a
+/// stage holds does not.
+#[derive(Clone)]
+pub struct BackendCx {
+    /// Seed for the backend's own RNG (the current event seed).
+    pub seed: u64,
+    /// Host thread pool (threaded backends dispatch on it).
+    pub pool: Arc<ThreadPool>,
+    /// Pre-computed variate pool (Pool fluctuation mode).
+    pub rng_pool: Arc<RandomPool>,
+    /// PJRT runtime, present when the backend entry declares
+    /// [`needs_runtime`](BackendEntry::needs_runtime).
+    pub runtime: Option<Arc<Runtime>>,
+}
+
+/// Factory closure building an execution backend from a config and the
+/// session resources.
+pub type BackendFactory =
+    Box<dyn Fn(&SimConfig, &BackendCx) -> Result<Box<dyn ExecBackend>> + Send + Sync>;
+
+/// Factory closure building a fresh (unconfigured) stage component.
+pub type StageFactory = Box<dyn Fn() -> Box<dyn SimStage> + Send + Sync>;
+
+/// One registered backend.
+pub struct BackendEntry {
+    /// One-line description for `wire-cell stages`.
+    pub summary: String,
+    /// Whether the session must open a PJRT runtime before the factory
+    /// can run.
+    pub needs_runtime: bool,
+    /// Whether runs are bit-deterministic regardless of scheduling
+    /// (serial is; host-threaded and device backends race the variate
+    /// pool under the per-depo/batched strategies).
+    pub deterministic: bool,
+    /// The constructor.
+    pub factory: BackendFactory,
+}
+
+/// One registered offload strategy (paper Figure 3 vs 4, plus fused).
+#[derive(Clone, Debug)]
+pub struct StrategyInfo {
+    /// One-line description for `wire-cell stages`.
+    pub summary: String,
+    /// Whether the strategy folds scatter into rasterization (the
+    /// raster stage then calls `rasterize_fused` and the scatter stage
+    /// skips).
+    pub fused_scatter: bool,
+    /// Whether the strategy's output is bit-stable on threaded
+    /// backends for any thread/worker count (the fused kernel's
+    /// deterministic pool indexing + striped scatter).
+    pub worker_invariant_threaded: bool,
+}
+
+/// One registered stage component.
+pub struct StageEntry {
+    /// One-line description for `wire-cell stages`.
+    pub summary: String,
+    /// The constructor.
+    pub factory: StageFactory,
+}
+
+/// String-keyed registries for backends, strategies and stages.
+pub struct Registry {
+    backends: BTreeMap<String, BackendEntry>,
+    strategies: BTreeMap<String, StrategyInfo>,
+    stages: BTreeMap<String, StageEntry>,
+}
+
+impl Registry {
+    /// Same as [`with_defaults`](Self::with_defaults) (and
+    /// `Registry::default()`): every built-in registered.  Use
+    /// [`empty`](Self::empty) for a registry with no built-ins.
+    pub fn new() -> Self {
+        Self::with_defaults()
+    }
+
+    /// An empty registry (no built-ins) — for tests and fully custom
+    /// component stacks.
+    pub fn empty() -> Self {
+        Self {
+            backends: BTreeMap::new(),
+            strategies: BTreeMap::new(),
+            stages: BTreeMap::new(),
+        }
+    }
+
+    /// The registry with every built-in backend, strategy and stage
+    /// registered — what `SimSession::builder()` starts from.
+    pub fn with_defaults() -> Self {
+        let mut reg = Self::empty();
+
+        reg.register_backend(
+            "serial",
+            BackendEntry {
+                summary: "hand-written serial Rust (the paper's ref-CPU row)".into(),
+                needs_runtime: false,
+                deterministic: true,
+                factory: Box::new(|cfg, cx| {
+                    Ok(Box::new(SerialBackend::new(
+                        cfg.raster_params(),
+                        cfg.fluctuation,
+                        cx.seed,
+                        Some(cx.rng_pool.clone()),
+                    )))
+                }),
+            },
+        );
+        reg.register_backend(
+            "threads",
+            BackendEntry {
+                summary: "portable layer, host-parallel with N pool threads (Kokkos-OMP)".into(),
+                needs_runtime: false,
+                deterministic: false,
+                factory: Box::new(|cfg, cx| {
+                    Ok(Box::new(ThreadedBackend::new(
+                        cfg.raster_params(),
+                        cfg.strategy,
+                        cfg.backend.threads(),
+                        cx.pool.clone(),
+                        cx.rng_pool.clone(),
+                        cx.seed,
+                    )))
+                }),
+            },
+        );
+        reg.register_backend(
+            "pjrt",
+            BackendEntry {
+                summary: "portable layer, AOT XLA device artifacts (Kokkos-CUDA analog)".into(),
+                needs_runtime: true,
+                deterministic: false,
+                factory: Box::new(|cfg, cx| {
+                    let rt = cx
+                        .runtime
+                        .as_ref()
+                        .ok_or_else(|| anyhow!("PJRT runtime not initialized"))?;
+                    let grid_name = artifact_grid_name(cfg)?;
+                    Ok(Box::new(PjrtBackend::new(
+                        rt.clone(),
+                        &grid_name,
+                        cfg.strategy,
+                        cfg.raster_params(),
+                        cx.rng_pool.clone(),
+                    )?))
+                }),
+            },
+        );
+
+        reg.register_strategy(
+            "per-depo",
+            StrategyInfo {
+                summary: "one dispatch + transfer per depo (paper Figure 3)".into(),
+                fused_scatter: false,
+                worker_invariant_threaded: false,
+            },
+        );
+        reg.register_strategy(
+            "batched",
+            StrategyInfo {
+                summary: "device-resident blocks, one transfer in/out (paper Figure 4)".into(),
+                fused_scatter: false,
+                worker_invariant_threaded: false,
+            },
+        );
+        reg.register_strategy(
+            "fused",
+            StrategyInfo {
+                summary: "SoA raster+fluctuate+scatter in one pass, no patches (docs/KERNELS.md)"
+                    .into(),
+                fused_scatter: true,
+                worker_invariant_threaded: true,
+            },
+        );
+
+        reg.register_stage(
+            "drift",
+            "transport depos to the response plane, applying diffusion widths",
+            Box::new(|| Box::new(DriftStage::new())),
+        );
+        reg.register_stage(
+            "raster",
+            "project per-plane views and rasterize patches (2D sampling + fluctuation)",
+            Box::new(|| Box::new(RasterStage::new())),
+        );
+        reg.register_stage(
+            "scatter",
+            "scatter-add patches onto plane grids (atomic when the backend is threaded)",
+            Box::new(|| Box::new(ScatterStage::new())),
+        );
+        reg.register_stage(
+            "response",
+            "FT stage (paper Eq. 2): field ⊗ electronics response per plane",
+            Box::new(|| Box::new(ResponseStage::new())),
+        );
+        reg.register_stage(
+            "noise",
+            "spectrum-shaped electronics noise",
+            Box::new(|| Box::new(NoiseStage::new())),
+        );
+        reg.register_stage(
+            "adc",
+            "digitize to baseline-subtracted ADC counts",
+            Box::new(|| Box::new(AdcStage::new())),
+        );
+
+        reg
+    }
+
+    /// Register (or replace) a backend under `key`.
+    pub fn register_backend(&mut self, key: &str, entry: BackendEntry) {
+        self.backends.insert(key.to_string(), entry);
+    }
+
+    /// Register (or replace) a strategy under `key`.
+    pub fn register_strategy(&mut self, key: &str, info: StrategyInfo) {
+        self.strategies.insert(key.to_string(), info);
+    }
+
+    /// Register (or replace) a stage under `key`.
+    pub fn register_stage(&mut self, key: &str, summary: &str, factory: StageFactory) {
+        self.stages.insert(
+            key.to_string(),
+            StageEntry {
+                summary: summary.to_string(),
+                factory,
+            },
+        );
+    }
+
+    /// Backend entry for a registry key.
+    pub fn backend(&self, key: &str) -> Result<&BackendEntry> {
+        self.backends
+            .get(key)
+            .ok_or_else(|| anyhow!("unknown backend '{key}' (known: {})", keys(&self.backends)))
+    }
+
+    /// Strategy descriptor for a registry key.
+    pub fn strategy(&self, key: &str) -> Result<&StrategyInfo> {
+        self.strategies
+            .get(key)
+            .ok_or_else(|| anyhow!("unknown strategy '{key}' (known: {})", keys(&self.strategies)))
+    }
+
+    /// Instantiate the backend `cfg.backend` names.
+    pub fn make_backend(
+        &self,
+        cfg: &SimConfig,
+        cx: &BackendCx,
+    ) -> Result<Box<dyn ExecBackend>> {
+        (self.backend(cfg.backend.key())?.factory)(cfg, cx)
+    }
+
+    /// Instantiate a fresh (unconfigured) stage by name.
+    pub fn make_stage(&self, key: &str) -> Result<Box<dyn SimStage>> {
+        let entry = self
+            .stages
+            .get(key)
+            .ok_or_else(|| anyhow!("unknown stage '{key}' (known: {})", keys(&self.stages)))?;
+        Ok((entry.factory)())
+    }
+
+    /// Registered backend keys with summaries, key order.
+    pub fn backends(&self) -> impl Iterator<Item = (&str, &BackendEntry)> {
+        self.backends.iter().map(|(k, e)| (k.as_str(), e))
+    }
+
+    /// Registered strategy keys with descriptors, key order.
+    pub fn strategies(&self) -> impl Iterator<Item = (&str, &StrategyInfo)> {
+        self.strategies.iter().map(|(k, e)| (k.as_str(), e))
+    }
+
+    /// Registered stage keys with summaries, key order.
+    pub fn stages(&self) -> impl Iterator<Item = (&str, &StageEntry)> {
+        self.stages.iter().map(|(k, e)| (k.as_str(), e))
+    }
+
+    /// Render the registry contents as one table (the `wire-cell
+    /// stages` subcommand body).  Stages print first, in default
+    /// execution order before any extras, so the table reads as the
+    /// default topology.
+    pub fn table(&self) -> Table {
+        let mut t = Table::new(
+            "registered components — stages, backends, strategies",
+            &["Kind", "Key", "Description"],
+        );
+        let mut stage_keys: Vec<&str> = DEFAULT_TOPOLOGY
+            .iter()
+            .copied()
+            .filter(|k| self.stages.contains_key(*k))
+            .collect();
+        for k in self.stages.keys() {
+            if !stage_keys.contains(&k.as_str()) {
+                stage_keys.push(k.as_str());
+            }
+        }
+        for k in stage_keys {
+            t.row(&[
+                "stage".into(),
+                k.to_string(),
+                self.stages[k].summary.clone(),
+            ]);
+        }
+        for (k, e) in self.backends() {
+            t.row(&["backend".into(), k.to_string(), e.summary.clone()]);
+        }
+        for (k, e) in self.strategies() {
+            t.row(&["strategy".into(), k.to_string(), e.summary.clone()]);
+        }
+        t
+    }
+}
+
+impl Default for Registry {
+    fn default() -> Self {
+        Self::with_defaults()
+    }
+}
+
+fn keys<V>(map: &BTreeMap<String, V>) -> String {
+    map.keys().cloned().collect::<Vec<_>>().join(", ")
+}
+
+/// Which AOT artifact grid matches the configured detector (the PJRT
+/// backend and the fused device endpoint both need this mapping).
+pub(crate) fn artifact_grid_name(cfg: &SimConfig) -> Result<String> {
+    match cfg.detector.as_str() {
+        "test-small" => Ok("small".to_string()),
+        other => Err(anyhow!(
+            "no AOT artifacts for detector '{other}' — PJRT backend supports 'test-small'"
+        )),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{BackendChoice, FluctuationMode};
+
+    #[test]
+    fn defaults_cover_the_builtin_vocabulary() {
+        let reg = Registry::with_defaults();
+        for key in ["serial", "threads", "pjrt"] {
+            assert!(reg.backend(key).is_ok(), "backend {key} missing");
+        }
+        for key in ["per-depo", "batched", "fused"] {
+            assert!(reg.strategy(key).is_ok(), "strategy {key} missing");
+        }
+        for key in DEFAULT_TOPOLOGY {
+            assert!(reg.make_stage(key).is_ok(), "stage {key} missing");
+        }
+        assert!(reg.strategy("fused").unwrap().fused_scatter);
+        assert!(!reg.strategy("batched").unwrap().fused_scatter);
+        assert!(reg.backend("serial").unwrap().deterministic);
+        assert!(reg.backend("pjrt").unwrap().needs_runtime);
+    }
+
+    #[test]
+    fn unknown_keys_list_known_ones() {
+        let reg = Registry::with_defaults();
+        let e = reg.make_stage("warp").map(|_| ()).unwrap_err().to_string();
+        assert!(e.contains("unknown stage 'warp'") && e.contains("raster"), "{e}");
+        let e = reg.backend("cuda").map(|_| ()).unwrap_err().to_string();
+        assert!(e.contains("serial"), "{e}");
+        let e = reg.strategy("x").map(|_| ()).unwrap_err().to_string();
+        assert!(e.contains("per-depo"), "{e}");
+    }
+
+    #[test]
+    fn backend_factory_builds_from_one_lookup() {
+        let reg = Registry::with_defaults();
+        let mut cfg = SimConfig::default();
+        cfg.backend = BackendChoice::Serial;
+        cfg.fluctuation = FluctuationMode::None;
+        let cx = BackendCx {
+            seed: cfg.seed,
+            pool: Arc::new(ThreadPool::new(1)),
+            rng_pool: RandomPool::shared(1, 1 << 10),
+            runtime: None,
+        };
+        let be = reg.make_backend(&cfg, &cx).unwrap();
+        assert!(be.label().contains("ref-CPU"), "{}", be.label());
+        // the threaded backend resolves through the same single lookup
+        cfg.backend = BackendChoice::Threaded(2);
+        let be = reg.make_backend(&cfg, &cx).unwrap();
+        assert!(be.label().contains("Kokkos-OMP 2"), "{}", be.label());
+        // pjrt without a runtime fails inside the factory, not with a panic
+        cfg.backend = BackendChoice::Pjrt;
+        assert!(reg.make_backend(&cfg, &cx).is_err());
+    }
+
+    #[test]
+    fn stages_table_lists_everything_in_topology_order() {
+        let reg = Registry::with_defaults();
+        let text = reg.table().render();
+        for key in ["drift", "raster", "scatter", "response", "noise", "adc"] {
+            assert!(text.contains(key), "missing {key} in\n{text}");
+        }
+        assert!(text.contains("serial") && text.contains("fused"));
+        // stages render in execution order
+        let drift = text.find("| drift").unwrap();
+        let adc = text.find("| adc").unwrap();
+        assert!(drift < adc);
+    }
+}

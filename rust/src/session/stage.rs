@@ -1,0 +1,207 @@
+//! The typed stage graph: [`SimStage`], the [`StageData`] payload that
+//! flows through it, and the per-stage execution context [`StageCx`].
+//!
+//! A stage is the Wire-Cell-style component unit: it has a registry
+//! name, is configured once from a (possibly stage-overridden)
+//! [`SimConfig`], and transforms one event's [`StageData`] per
+//! [`process`](SimStage::process) call.  The six built-in stages
+//! (drift, raster, scatter, response, noise, adc) reproduce the legacy
+//! `SimPipeline::run` bit for bit when run in the default topology —
+//! only rasterization consumes backend RNG, so running the plane loop
+//! stage-major instead of plane-major leaves every variate draw in the
+//! same order.
+
+use crate::backend::StageTimings;
+use crate::config::SimConfig;
+use crate::depo::Depo;
+use crate::frame::{Frame, PlaneFrame};
+use crate::geometry::{Detector, PlaneId};
+use crate::metrics::StageTimer;
+use crate::parallel::ThreadPool;
+use crate::raster::{DepoView, GridSpec, Patch};
+use crate::response::{PlaneResponse, ResponseSpectrum};
+use crate::rng::RandomPool;
+use crate::runtime::Runtime;
+use crate::scatter::PlaneGrid;
+use anyhow::Result;
+use std::sync::Arc;
+
+use super::registry::{BackendCx, Registry};
+
+/// Per-plane stats from a run (U, V, W order in [`RunReport`]).
+#[derive(Clone, Debug, Default)]
+pub struct PlaneRunStats {
+    /// Views rasterized.
+    pub views: usize,
+    /// Patches produced.
+    pub patches: usize,
+    /// Total rasterized charge (electrons).
+    pub charge: f64,
+    /// Raster sub-step timings (Table 2/3 columns).
+    pub raster: StageTimings,
+}
+
+/// Full run report.
+pub struct RunReport {
+    /// Backend row label.
+    pub label: String,
+    /// Input depo count.
+    pub depos: usize,
+    /// Per-plane stats (U, V, W order).
+    pub planes: Vec<PlaneRunStats>,
+    /// Whole-pipeline stage timer (drift/raster/scatter/ft/noise/adc).
+    pub stages: StageTimer,
+    /// The simulated event frame (None when `frames=false`).
+    pub frame: Option<Frame>,
+}
+
+impl RunReport {
+    /// Aggregate raster timings over planes.
+    pub fn raster_total(&self) -> StageTimings {
+        let mut t = StageTimings::default();
+        for p in &self.planes {
+            t.add(&p.raster);
+        }
+        t
+    }
+}
+
+/// Per-plane working state a stage graph accumulates for one event.
+pub struct PlaneData {
+    /// Which plane this is.
+    pub plane: PlaneId,
+    /// Grid spec the plane rasterizes onto.
+    pub spec: GridSpec,
+    /// Projected depo views (raster stage).
+    pub views: Vec<DepoView>,
+    /// The accumulation grid (raster/scatter stages).
+    pub grid: PlaneGrid,
+    /// Intermediate patches (empty under a fused-scatter strategy).
+    pub patches: Vec<Patch>,
+    /// The plane's waveform frame (response stage onward).
+    pub frame: Option<PlaneFrame>,
+}
+
+/// The payload a stage graph threads through its stages: one event's
+/// evolving state plus the run-level bookkeeping (timer, stats, label).
+pub struct StageData {
+    /// Input energy depositions.
+    pub depos: Vec<Depo>,
+    /// Depos drifted to the response plane (drift stage).
+    pub drifted: Vec<Depo>,
+    /// Per-plane working state (raster stage onward).
+    pub planes: Vec<PlaneData>,
+    /// Per-plane run stats, parallel to `planes`.
+    pub stats: Vec<PlaneRunStats>,
+    /// Fine-grained stage timer (the `RunReport::stages` keys).
+    pub timer: StageTimer,
+    /// Backend row label (set by the raster stage).
+    pub label: String,
+    /// True once charge sits on the grids (set by the scatter stage,
+    /// or by the raster stage under a fused-scatter strategy so the
+    /// scatter stage knows to skip).
+    pub scattered: bool,
+}
+
+impl StageData {
+    /// Fresh payload for one event's depos.
+    pub fn new(depos: Vec<Depo>) -> Self {
+        Self {
+            depos,
+            drifted: Vec::new(),
+            planes: Vec::new(),
+            stats: Vec::new(),
+            timer: StageTimer::new(),
+            label: String::new(),
+            scattered: false,
+        }
+    }
+}
+
+/// Execution context a session hands each stage: the long-lived
+/// resources (detector, pools, runtime, response cache) plus the live
+/// config — `cfg.seed` is the *current event* seed and changes on
+/// [`reseed`](super::SimSession::reseed), which is why stages read it
+/// from here rather than from their configure-time snapshot.
+pub struct StageCx<'a> {
+    /// Live session config (authoritative for the per-event seed).
+    pub cfg: &'a SimConfig,
+    /// The configured detector.
+    pub detector: &'a Detector,
+    /// Host thread pool shared by threaded kernels and atomic scatter.
+    pub pool: &'a Arc<ThreadPool>,
+    /// Pre-computed variate pool (Pool fluctuation mode).
+    pub rng_pool: &'a Arc<RandomPool>,
+    /// PJRT runtime, if the session's backend needs one.
+    pub runtime: Option<&'a Arc<Runtime>>,
+    /// The session's component registry (backend/strategy lookups).
+    pub registry: &'a Registry,
+    /// Lazily-built per-plane response spectra (shared across events).
+    pub responses: &'a mut Vec<Option<ResponseSpectrum>>,
+    /// Whether the run should produce digitized frames.
+    pub produce_frames: bool,
+}
+
+impl StageCx<'_> {
+    /// Backend-construction view of this context (current event seed
+    /// plus the shared resources a [`Registry`] backend factory needs).
+    pub fn backend_cx(&self) -> BackendCx {
+        BackendCx {
+            seed: self.cfg.seed,
+            pool: self.pool.clone(),
+            rng_pool: self.rng_pool.clone(),
+            runtime: self.runtime.cloned(),
+        }
+    }
+
+    /// Response spectrum for a plane (built on first use, then cached
+    /// for the session's lifetime).
+    pub fn response(&mut self, plane: PlaneId) -> &ResponseSpectrum {
+        let idx = plane as usize;
+        if self.responses[idx].is_none() {
+            let pr = PlaneResponse::standard(plane, self.detector.tick);
+            let p = self.detector.plane(plane);
+            self.responses[idx] = Some(ResponseSpectrum::assemble(
+                &pr,
+                p.nwires,
+                self.detector.nticks,
+            ));
+        }
+        self.responses[idx].as_ref().unwrap()
+    }
+}
+
+/// A pipeline stage component (the WCT node analog): named, configured
+/// once, then driven once per event by [`SimSession::run`].
+///
+/// Implementations must be `Send` so sessions can ride throughput
+/// worker threads.  Custom stages register through
+/// [`Registry::register_stage`] and are addressed by name from
+/// [`SessionBuilder::stage`](super::SessionBuilder::stage).
+///
+/// [`SimSession::run`]: super::SimSession::run
+/// [`Registry::register_stage`]: super::Registry::register_stage
+pub trait SimStage: Send {
+    /// Registry name of this stage ("drift", "raster", ...).
+    fn name(&self) -> &str;
+
+    /// Configure from the effective config: the session config with
+    /// this stage's topology overrides overlaid.  Called once at
+    /// [`build`](super::SessionBuilder::build) time.
+    fn configure(&mut self, cfg: &SimConfig) -> Result<()> {
+        let _ = cfg;
+        Ok(())
+    }
+
+    /// Transform one event's [`StageData`].  Fine-grained timings go
+    /// into `data.timer` under the stage's own keys (the raster stage
+    /// records "project" and "raster", the response stage "ft", ...).
+    fn process(&mut self, data: StageData, cx: &mut StageCx) -> Result<StageData>;
+
+    /// The stage's sampling/fluctuation split from its last `process`
+    /// call, for stages that have one (the raster stage reports the
+    /// paper's Table-2/3 columns; others return zeros).
+    fn timings(&self) -> StageTimings {
+        StageTimings::default()
+    }
+}

@@ -1,0 +1,346 @@
+//! The six built-in stage components — the legacy `SimPipeline::run`
+//! chain re-extracted as first-class [`SimStage`]s.
+//!
+//! Bit-parity contract: running the default topology
+//! (drift → raster → scatter → response → noise → adc) produces frames
+//! bit-identical to the legacy monolith.  Only the raster stage
+//! consumes backend RNG, and it visits planes in the same U, V, W
+//! order with one backend instance per event, so every variate draw
+//! lands in the same sequence; noise generators are seeded per plane
+//! and are order-independent by construction.
+
+use crate::adc::Digitizer;
+use crate::backend::{ExecBackend, StageTimings};
+use crate::config::SimConfig;
+use crate::drift::Drifter;
+use crate::frame::PlaneFrame;
+use crate::geometry::PlaneId;
+use crate::noise::{NoiseGenerator, NoiseSpectrum};
+use crate::parallel::ExecPolicy;
+use crate::raster::{DepoView, GridSpec};
+use crate::scatter::{scatter_atomic, scatter_serial, PlaneGrid};
+use crate::units::VOLT;
+use anyhow::Result;
+
+use super::stage::{PlaneData, PlaneRunStats, SimStage, StageCx, StageData};
+
+/// Drift stage: transport depos to the response plane.
+#[derive(Default)]
+pub struct DriftStage;
+
+impl DriftStage {
+    /// New drift stage.
+    pub fn new() -> Self {
+        Self
+    }
+}
+
+impl SimStage for DriftStage {
+    fn name(&self) -> &str {
+        "drift"
+    }
+
+    fn process(&mut self, mut data: StageData, cx: &mut StageCx) -> Result<StageData> {
+        let drifter = Drifter::new(cx.detector.response_plane_x);
+        data.drifted = data.timer.time("drift", || drifter.drift(&data.depos));
+        Ok(data)
+    }
+}
+
+/// Raster stage: project per-plane views, then rasterize them on the
+/// configured backend — the paper's instrumented hot path.  Under a
+/// fused-scatter strategy this stage also accumulates straight onto
+/// the grids and flags `StageData::scattered`.
+#[derive(Default)]
+pub struct RasterStage {
+    cfg: SimConfig,
+    last: StageTimings,
+}
+
+impl RasterStage {
+    /// New raster stage (configured at session build).
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
+impl SimStage for RasterStage {
+    fn name(&self) -> &str {
+        "raster"
+    }
+
+    fn configure(&mut self, cfg: &SimConfig) -> Result<()> {
+        self.cfg = cfg.clone();
+        Ok(())
+    }
+
+    fn process(&mut self, mut data: StageData, cx: &mut StageCx) -> Result<StageData> {
+        let fused = cx
+            .registry
+            .strategy(self.cfg.strategy.as_str())?
+            .fused_scatter;
+        let mut backend = cx.registry.make_backend(&self.cfg, &cx.backend_cx())?;
+        data.label = backend.label();
+        self.last = StageTimings::default();
+        for plane in PlaneId::ALL {
+            let spec = GridSpec::for_plane(
+                cx.detector,
+                plane,
+                self.cfg.pitch_oversample,
+                self.cfg.time_oversample,
+            );
+            let p = cx.detector.plane(plane);
+            let drift_speed = cx.detector.drift_speed;
+            let views: Vec<DepoView> = data.timer.time("project", || {
+                data.drifted
+                    .iter()
+                    .map(|d| DepoView::project(d, p, drift_speed))
+                    .collect()
+            });
+            let mut grid = PlaneGrid::for_spec(&spec);
+            let (npatches, timings, patches) = if fused {
+                // fused SoA kernel: raster + scatter in one pass (see
+                // docs/KERNELS.md); the combined time lands in the
+                // "raster" stage and the scatter stage will skip
+                let t0 = std::time::Instant::now();
+                let fout = backend.rasterize_fused(&views, &spec, &mut grid)?;
+                data.timer.add("raster", t0.elapsed().as_secs_f64());
+                data.scattered = true;
+                (fout.depos, fout.timings, Vec::new())
+            } else {
+                let t0 = std::time::Instant::now();
+                let out = backend.rasterize(&views, &spec)?;
+                data.timer.add("raster", t0.elapsed().as_secs_f64());
+                (out.patches.len(), out.timings, out.patches)
+            };
+            self.last.add(&timings);
+            data.stats.push(PlaneRunStats {
+                views: views.len(),
+                patches: npatches,
+                charge: 0.0, // filled by the scatter stage (grid final)
+                raster: timings,
+            });
+            data.planes.push(PlaneData {
+                plane,
+                spec,
+                views,
+                grid,
+                patches,
+                frame: None,
+            });
+        }
+        Ok(data)
+    }
+
+    fn timings(&self) -> StageTimings {
+        self.last
+    }
+}
+
+/// Scatter stage: accumulate patches onto the plane grids (atomic over
+/// the host pool when the backend is threaded), then finalize the
+/// per-plane charge stats.  Skips the scatter pass when a fused
+/// strategy already put the charge on the grids.
+#[derive(Default)]
+pub struct ScatterStage {
+    nthreads: usize,
+}
+
+impl ScatterStage {
+    /// New scatter stage (configured at session build).
+    pub fn new() -> Self {
+        Self { nthreads: 1 }
+    }
+}
+
+impl SimStage for ScatterStage {
+    fn name(&self) -> &str {
+        "scatter"
+    }
+
+    fn configure(&mut self, cfg: &SimConfig) -> Result<()> {
+        self.nthreads = cfg.backend.threads();
+        Ok(())
+    }
+
+    fn process(&mut self, mut data: StageData, cx: &mut StageCx) -> Result<StageData> {
+        if !data.scattered {
+            for pd in data.planes.iter_mut() {
+                let (spec, grid, patches) = (&pd.spec, &mut pd.grid, &pd.patches);
+                let n = self.nthreads;
+                data.timer.time("scatter", || {
+                    if n > 1 {
+                        scatter_atomic(grid, spec, patches, cx.pool, ExecPolicy::Threads(n))
+                    } else {
+                        scatter_serial(grid, spec, patches)
+                    }
+                });
+            }
+            data.scattered = true;
+        }
+        for (pd, st) in data.planes.iter().zip(data.stats.iter_mut()) {
+            st.charge = pd.grid.total();
+        }
+        Ok(data)
+    }
+}
+
+/// Response stage: the FT stage (paper Eq. 2) — field ⊗ electronics
+/// response applied per plane in the frequency domain.  With
+/// `apply_response = false` it instead copies the raw grid into the
+/// frame (raster-only runs).
+#[derive(Default)]
+pub struct ResponseStage {
+    apply_response: bool,
+}
+
+impl ResponseStage {
+    /// New response stage (configured at session build).
+    pub fn new() -> Self {
+        Self {
+            apply_response: true,
+        }
+    }
+}
+
+impl SimStage for ResponseStage {
+    fn name(&self) -> &str {
+        "response"
+    }
+
+    fn configure(&mut self, cfg: &SimConfig) -> Result<()> {
+        self.apply_response = cfg.apply_response;
+        Ok(())
+    }
+
+    fn process(&mut self, mut data: StageData, cx: &mut StageCx) -> Result<StageData> {
+        for pd in data.planes.iter_mut() {
+            let frame = if self.apply_response {
+                let nchan = cx.detector.plane(pd.plane).nwires;
+                let nticks = cx.detector.nticks;
+                let resp = cx.response(pd.plane);
+                let grid = &pd.grid;
+                let signal = data.timer.time("ft", || resp.apply(grid));
+                PlaneFrame {
+                    plane: pd.plane,
+                    nchan,
+                    nticks,
+                    data: signal.iter().map(|&v| (v / VOLT) as f32).collect(),
+                }
+            } else {
+                PlaneFrame {
+                    plane: pd.plane,
+                    nchan: pd.grid.nwires,
+                    nticks: pd.grid.nticks,
+                    data: pd.grid.data.clone(),
+                }
+            };
+            pd.frame = Some(frame);
+        }
+        Ok(data)
+    }
+}
+
+/// Noise stage: spectrum-shaped electronics noise, seeded per plane
+/// from the current event seed (order-independent across planes).
+#[derive(Default)]
+pub struct NoiseStage {
+    noise: bool,
+    apply_response: bool,
+}
+
+impl NoiseStage {
+    /// New noise stage (configured at session build).
+    pub fn new() -> Self {
+        Self {
+            noise: false,
+            apply_response: true,
+        }
+    }
+}
+
+impl SimStage for NoiseStage {
+    fn name(&self) -> &str {
+        "noise"
+    }
+
+    fn configure(&mut self, cfg: &SimConfig) -> Result<()> {
+        self.noise = cfg.noise;
+        self.apply_response = cfg.apply_response;
+        Ok(())
+    }
+
+    fn process(&mut self, mut data: StageData, cx: &mut StageCx) -> Result<StageData> {
+        if !(self.noise && self.apply_response) {
+            return Ok(data);
+        }
+        let seed = cx.cfg.seed;
+        let nticks = cx.detector.nticks;
+        for pd in data.planes.iter_mut() {
+            let plane = pd.plane;
+            let Some(pf) = pd.frame.as_mut() else { continue };
+            data.timer.time("noise", || {
+                let mut gen = NoiseGenerator::new(
+                    NoiseSpectrum::standard(nticks),
+                    seed ^ ((plane as u64) << 17),
+                );
+                // noise is parametrized in ADC-equivalent units;
+                // convert through the digitizer scale below
+                for c in 0..pf.nchan {
+                    let wave = gen.waveform();
+                    let row = &mut pf.data[c * pf.nticks..(c + 1) * pf.nticks];
+                    for (s, n) in row.iter_mut().zip(wave) {
+                        *s += n as f32 * 1e-3; // mV-scale noise in volt units
+                    }
+                }
+            });
+        }
+        Ok(data)
+    }
+}
+
+/// ADC stage: digitize to baseline-subtracted ADC counts.  Runs only
+/// when the session produces frames and the response stage emitted
+/// voltage waveforms.
+#[derive(Default)]
+pub struct AdcStage {
+    apply_response: bool,
+}
+
+impl AdcStage {
+    /// New ADC stage (configured at session build).
+    pub fn new() -> Self {
+        Self {
+            apply_response: true,
+        }
+    }
+}
+
+impl SimStage for AdcStage {
+    fn name(&self) -> &str {
+        "adc"
+    }
+
+    fn configure(&mut self, cfg: &SimConfig) -> Result<()> {
+        self.apply_response = cfg.apply_response;
+        Ok(())
+    }
+
+    fn process(&mut self, mut data: StageData, cx: &mut StageCx) -> Result<StageData> {
+        if !(cx.produce_frames && self.apply_response) {
+            return Ok(data);
+        }
+        for pd in data.planes.iter_mut() {
+            let plane = pd.plane;
+            let Some(pf) = pd.frame.as_mut() else { continue };
+            data.timer.time("adc", || {
+                let baseline = if plane.is_induction() { 2048.0 } else { 400.0 };
+                let digi = Digitizer::standard(baseline);
+                for v in pf.data.iter_mut() {
+                    *v = digi.digitize(*v as f64) as f32 - baseline as f32;
+                }
+            });
+        }
+        Ok(data)
+    }
+}

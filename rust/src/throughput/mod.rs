@@ -4,7 +4,7 @@
 //! The paper's headline lesson (and the follow-up study
 //! arXiv:2203.02479) is that per-item dispatch is dominated by
 //! launch/transfer overhead and that *batching work against long-lived
-//! state* is the fix.  The single-event [`SimPipeline`] applies that
+//! state* is the fix.  The single-event [`SimSession`] applies that
 //! lesson within one event; this module applies it across events:
 //! realistic production throughput means simulating a *stream* of
 //! events, amortizing every expensive resource — detector geometry,
@@ -15,13 +15,13 @@
 //! ## Sharding model
 //!
 //! ```text
-//!   EventSource ──► [ SimWorker 0 (SimPipeline) ] ──►┐
-//!    (seq,seed)     [ SimWorker 1 (SimPipeline) ] ──►├─► FrameCollector
+//!   EventSource ──► [ SimWorker 0 (SimSession) ] ──►┐
+//!    (seq,seed)     [ SimWorker 1 (SimSession) ] ──►├─► FrameCollector
 //!     pull-based    [      ...                  ] ──►│    + Aggregate
 //!     (stealing)    [ SimWorker M-1             ] ──►┘
 //! ```
 //!
-//! * **One pipeline per worker.** Each worker owns a [`SimPipeline`]
+//! * **One session per worker.** Each worker owns a [`SimSession`]
 //!   for the whole stream, so caches stay warm and nothing is shared
 //!   hot; the only cross-worker state is the mutex-guarded source and
 //!   the aggregate report.
@@ -46,7 +46,7 @@
 //! [`crate::harness::throughput`] / [`crate::harness::throughput_scaling`]
 //! which format the paper-style tables.
 //!
-//! [`SimPipeline`]: crate::coordinator::SimPipeline
+//! [`SimSession`]: crate::session::SimSession
 
 mod report;
 mod worker;

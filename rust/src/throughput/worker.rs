@@ -3,8 +3,8 @@
 
 use super::report::{frame_digest, Aggregate, ThroughputReport};
 use crate::config::SimConfig;
-use crate::coordinator::SimPipeline;
 use crate::dataflow::{run_pooled, FunctionNode, Payload, SinkNode, SourceNode};
+use crate::session::SimSession;
 use crate::depo::{CosmicSource, DepoSource};
 use crate::frame::Frame;
 use crate::metrics::RateStats;
@@ -78,12 +78,12 @@ impl SourceNode for EventSource {
     }
 }
 
-/// One worker of the pool: a persistent [`SimPipeline`] that turns
+/// One worker of the pool: a persistent [`SimSession`] that turns
 /// event tickets into frames, recording timings into the shared
 /// aggregate.
 struct SimWorker {
     id: usize,
-    pipe: SimPipeline,
+    pipe: SimSession,
     depos_per_event: usize,
     keep_frames: bool,
     agg: Arc<Mutex<Aggregate>>,
@@ -174,9 +174,12 @@ pub fn run_stream(cfg: &SimConfig, opts: &StreamOptions) -> Result<ThroughputRep
     let mut prebuilt: Vec<Box<dyn FunctionNode>> = Vec::with_capacity(workers);
     // generate the (identical) variate data once; each worker adopts a
     // fork — shared bytes, private cursor
-    let template = SimPipeline::variate_pool_for(cfg);
+    let template = SimSession::variate_pool_for(cfg);
     for id in 0..workers {
-        let pipe = SimPipeline::with_variate_pool(cfg.clone(), Arc::new(template.fork()))?;
+        let pipe = SimSession::builder()
+            .config(cfg.clone())
+            .variate_pool(Arc::new(template.fork()))
+            .build()?;
         prebuilt.push(Box::new(SimWorker {
             id,
             pipe,
