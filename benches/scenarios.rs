@@ -1,0 +1,63 @@
+//! Scenario × APA-sharding sweep: every registered scenario run
+//! unsharded (one session looping the APAs) vs sharded (pooled shard
+//! executor), with the digest-equality acceptance gate.
+//!
+//! ```sh
+//! cargo bench --bench scenarios
+//! WCT_BENCH_DEPOS=100000 WCT_BENCH_APAS=4 cargo bench --bench scenarios
+//! ```
+
+mod common;
+
+use wirecell::config::{BackendChoice, FluctuationMode, SimConfig, Strategy};
+use wirecell::harness;
+
+fn apas(default: usize) -> usize {
+    std::env::var("WCT_BENCH_APAS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(default)
+}
+
+fn main() -> anyhow::Result<()> {
+    let n = common::depos(20_000);
+    let repeat = common::repeat(3);
+    let napas = apas(2).max(2);
+    let workers = std::thread::available_parallelism()
+        .map(|x| x.get())
+        .unwrap_or(2)
+        .min(napas);
+
+    let mut cfg = SimConfig::default();
+    cfg.target_depos = n;
+    cfg.fluctuation = FluctuationMode::Pool;
+    cfg.pool_size = 1 << 20;
+
+    // serial backend: the digest gate holds for every strategy
+    cfg.backend = BackendChoice::Serial;
+    cfg.strategy = Strategy::Batched;
+    let (table, rows) = harness::scenario_matrix(&cfg, napas, workers, repeat)?;
+    common::emit(&table);
+    for row in &rows {
+        assert!(
+            row.digests_match,
+            "scenario '{}' diverged under sharding (serial backend)",
+            row.scenario
+        );
+    }
+
+    // threaded backend under the fused strategy: worker-invariant, so
+    // the same bit-equality gate applies
+    cfg.backend = BackendChoice::Threaded(workers.max(2));
+    cfg.strategy = Strategy::Fused;
+    let (table, rows) = harness::scenario_matrix(&cfg, napas, workers, repeat)?;
+    common::emit(&table);
+    for row in &rows {
+        assert!(
+            row.digests_match,
+            "scenario '{}' diverged under sharding (threaded fused)",
+            row.scenario
+        );
+    }
+    Ok(())
+}

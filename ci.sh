@@ -53,4 +53,14 @@ else
     echo "==> skipping doc gate (SKIP_DOC set)"
 fi
 
+# Markdown gate (same SKIP_DOC hatch): every relative link and anchor
+# in the user-facing docs must resolve, so README.md and docs/*.md
+# (SCENARIOS.md included) cannot rot silently.  Pure python3, so it
+# runs even on containers without a Rust toolchain.
+if [ -z "${SKIP_DOC:-}" ] && command -v python3 >/dev/null 2>&1; then
+    run python3 tools/check_markdown.py README.md docs/*.md
+else
+    echo "==> skipping markdown link check (SKIP_DOC set or python3 not installed)"
+fi
+
 echo "CI gate passed."

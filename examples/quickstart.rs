@@ -1,54 +1,47 @@
 //! Quickstart: simulate a single muon track end-to-end through the
 //! session API and look at the resulting waveforms.
 //!
+//! The body of `main` up to the first `println!` after `session.run`
+//! is mirrored **verbatim** in the README "Quickstart" section — keep
+//! the two in sync (the README promises its snippet compiles as
+//! shown, and this example is what keeps that promise honest).
+//!
 //! ```sh
 //! cargo run --release --example quickstart
 //! ```
 
-use wirecell::config::{BackendChoice, FluctuationMode, SimConfig};
+use wirecell::config::SimConfig;
 use wirecell::depo::{DepoSource, TrackDepoSource};
 use wirecell::geometry::PlaneId;
 use wirecell::session::SimSession;
 use wirecell::units::*;
 
 fn main() -> anyhow::Result<()> {
-    // 1. Configure: small detector, serial reference backend.
-    let mut cfg = SimConfig::default();
-    cfg.detector = "test-small".into();
-    cfg.backend = BackendChoice::Serial;
-    cfg.fluctuation = FluctuationMode::Inline; // the paper's ref-CPU path
-    cfg.noise = true;
-
-    // 2. A 40 cm muon track crossing the volume diagonally.
-    let mut source = TrackDepoSource::mip(
-        [30.0 * CM, -15.0 * CM, -15.0 * CM],
-        [50.0 * CM, 15.0 * CM, 15.0 * CM],
-        10.0 * US,
-        42,
-    );
-    let depos = source.generate();
-    println!("generated {} depos from {}", depos.len(), source.label());
-
-    // 3. Build the session: the stage topology is explicit here (it is
-    //    also the default, so `.build()` alone would do the same); swap
-    //    or drop stages to reshape the run, or put the list in the
-    //    config file's "topology" section instead.
     let mut session = SimSession::builder()
-        .config(cfg)
+        .config(SimConfig::default())
         .stage("drift")
         .stage("raster")
         .stage("scatter")
         .stage("response")
         .stage("noise")
-        .stage("adc")
+        .stage("adc") // = the default topology
         .build()?;
+    let depos = TrackDepoSource::mip(
+        [30.0 * CM, -15.0 * CM, -15.0 * CM],
+        [50.0 * CM, 15.0 * CM, 15.0 * CM],
+        10.0 * US,
+        42,
+    )
+    .generate();
     let report = session.run(&depos)?;
-    println!("backend: {}", report.label);
+    println!("{} depos -> {} planes", report.depos, report.planes.len());
+    // -- end of the README-mirrored region --
+
     for (stage, secs, _) in report.stages.stages() {
         println!("  {stage:<8} {secs:.4} s");
     }
 
-    // 4. Inspect the collection-plane waveforms.
+    // Inspect the collection-plane waveforms.
     let frame = report.frame.expect("frames enabled");
     let w = frame.plane(PlaneId::W);
     let stats = w.stats();
@@ -57,7 +50,7 @@ fn main() -> anyhow::Result<()> {
         w.nchan, w.nticks, stats.max, stats.rms
     );
 
-    // 5. Extract sparse hit traces above threshold.
+    // Extract sparse hit traces above threshold.
     let traces = w.traces(30.0, 10);
     println!("found {} traces above 30 ADC on W", traces.len());
     if let Some(t) = traces.first() {

@@ -97,6 +97,7 @@ impl Cli {
             "fluctuation",
             "backend",
             "strategy",
+            "scenario",
             "artifacts_dir",
         ] {
             if let Some(v) = self.opt(key) {
@@ -107,6 +108,7 @@ impl Cli {
             "target_depos",
             "events",
             "workers",
+            "apas",
             "seed",
             "pool_size",
             "pitch_oversample",
@@ -152,7 +154,8 @@ pub fn usage() -> &'static str {
 USAGE: wire-cell <COMMAND> [--key value]... [--flag]...
 
 COMMANDS:
-  simulate     run the full pipeline on a generated cosmic workload
+  simulate     run the full pipeline on a generated scenario workload
+               (APA-sharded when --apas > 1)
   throughput   stream many events through a pool of pipeline workers
   rasterize    raster+scatter one event's collection plane under the
                configured backend/strategy; prints the grid digest
@@ -166,7 +169,10 @@ COMMANDS:
   sweep        Figure-3 vs Figure-4 strategy sweep over depo counts
   inspect      list artifacts and their metadata
   stages       list registered components (stages, backends,
-               strategies) — smoke-tests that registration ran
+               strategies, scenarios) — smoke-tests that
+               registration ran
+  scenarios    list registered workload scenarios with their physics
+               rationale (catalog: docs/SCENARIOS.md)
   version      print version and environment info
 
 COMMON OPTIONS:
@@ -177,9 +183,14 @@ COMMON OPTIONS:
   --fluctuation <m>        inline | pool | none
   --topology <list>        comma-separated stage names (default:
                            drift,raster,scatter,response,noise,adc)
+  --scenario <name>        workload scenario (default cosmic-shower;
+                           see `wire-cell scenarios`)
+  --apas <n>               anode-plane assemblies tiled along z
+                           (default 1; >1 runs APA-sharded)
   --target_depos <n>       workload size, per event (default 100000)
   --events <n>             throughput: events in the stream (default 8)
-  --workers <n>            throughput: pipeline workers (default 1)
+  --workers <n>            throughput: pipeline workers; simulate with
+                           --apas > 1: pooled shard sessions (default 1)
   --seed <n>               master seed
   --artifacts_dir <dir>    AOT artifacts directory (default artifacts)
   --repeat <n>             benchmark repetitions (default 5, as paper)
@@ -252,6 +263,28 @@ mod tests {
         let cfg = cli.sim_config().unwrap();
         assert_eq!(cfg.events, 32);
         assert_eq!(cfg.workers, 4);
+    }
+
+    #[test]
+    fn scenario_and_apas_options_parse() {
+        let cli = Cli::parse(&args(&[
+            "simulate",
+            "--scenario",
+            "beam-track",
+            "--apas",
+            "3",
+        ]))
+        .unwrap();
+        let cfg = cli.sim_config().unwrap();
+        assert_eq!(cfg.scenario, "beam-track");
+        assert_eq!(cfg.apas, 3);
+        // defaults when not given
+        let cli = Cli::parse(&args(&["simulate"])).unwrap();
+        let cfg = cli.sim_config().unwrap();
+        assert_eq!((cfg.scenario.as_str(), cfg.apas), ("cosmic-shower", 1));
+        // empty scenario name is rejected through config validation
+        let cli = Cli::parse(&args(&["simulate", "--scenario="])).unwrap();
+        assert!(cli.sim_config().is_err());
     }
 
     #[test]

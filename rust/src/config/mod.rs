@@ -253,6 +253,16 @@ pub struct SimConfig {
     /// built-in stages ([`crate::session::DEFAULT_TOPOLOGY`]); custom
     /// stages are addressed through the session builder instead.
     pub topology: Vec<StageSpec>,
+    /// Named workload for generated runs
+    /// ([`crate::scenario::BUILTIN_SCENARIOS`] lists the built-ins;
+    /// `wire-cell scenarios` prints the live registry).  Resolved
+    /// through the registry, so custom scenarios registered at run
+    /// time are addressable too — unknown names fail at resolution
+    /// with the known-key list.
+    pub scenario: String,
+    /// Anode-plane assemblies the detector row tiles along z (1 =
+    /// the paper's single-APA setup; >1 enables APA-sharded runs).
+    pub apas: usize,
     /// Target number of depos for generated workloads (per event, for
     /// multi-event throughput streams).
     pub target_depos: usize,
@@ -286,6 +296,8 @@ impl Default for SimConfig {
             backend: BackendChoice::Serial,
             strategy: Strategy::Batched,
             topology: Vec::new(),
+            scenario: "cosmic-shower".into(),
+            apas: 1,
             target_depos: 100_000,
             events: 8,
             workers: 1,
@@ -340,6 +352,12 @@ impl SimConfig {
                 .iter()
                 .map(StageSpec::from_value)
                 .collect::<Result<Vec<_>, _>>()?;
+        }
+        if let Some(s) = get_str("scenario") {
+            self.scenario = s;
+        }
+        if let Some(n) = get_usize("apas") {
+            self.apas = n.max(1);
         }
         if let Some(n) = get_usize("target_depos") {
             self.target_depos = n;
@@ -400,6 +418,15 @@ impl SimConfig {
         if self.pitch_oversample == 0 || self.time_oversample == 0 {
             return Err("oversample factors must be >= 1".into());
         }
+        if self.apas == 0 || self.apas > 512 {
+            return Err(format!("apas {} out of range [1, 512]", self.apas));
+        }
+        // scenario *names* are resolved (and typo-checked against the
+        // known-key list) by the registry, so custom scenarios stay
+        // configurable; only the degenerate empty name is rejected here
+        if self.scenario.is_empty() {
+            return Err("scenario name must not be empty".into());
+        }
         self.detector()?;
         for spec in &self.topology {
             if !crate::session::DEFAULT_TOPOLOGY.contains(&spec.name.as_str()) {
@@ -448,6 +475,8 @@ impl SimConfig {
                 "topology",
                 Value::Array(self.topology.iter().map(|s| s.to_value()).collect()),
             ),
+            ("scenario", Value::from(self.scenario.as_str())),
+            ("apas", Value::from(self.apas)),
             ("target_depos", Value::from(self.target_depos)),
             ("events", Value::from(self.events)),
             ("workers", Value::from(self.workers)),
@@ -555,6 +584,35 @@ mod tests {
         // defaults
         let cfg = SimConfig::default();
         assert_eq!((cfg.events, cfg.workers), (8, 1));
+    }
+
+    #[test]
+    fn scenario_and_apas_overlay() {
+        let cfg = SimConfig::from_json(r#"{"scenario": "beam-track", "apas": 4}"#).unwrap();
+        assert_eq!(cfg.scenario, "beam-track");
+        assert_eq!(cfg.apas, 4);
+        // zero APAs clamps up like the other worker-ish knobs
+        let cfg = SimConfig::from_json(r#"{"apas": 0}"#).unwrap();
+        assert_eq!(cfg.apas, 1);
+        // defaults: the paper's single-APA cosmic workload
+        let cfg = SimConfig::default();
+        assert_eq!((cfg.scenario.as_str(), cfg.apas), ("cosmic-shower", 1));
+        // round-trip
+        let mut cfg = SimConfig::default();
+        cfg.scenario = "hotspot".into();
+        cfg.apas = 3;
+        let back = SimConfig::from_json(&cfg.to_json()).unwrap();
+        assert_eq!(cfg, back);
+    }
+
+    #[test]
+    fn scenario_and_apas_rejections() {
+        assert!(SimConfig::from_json(r#"{"scenario": ""}"#).is_err());
+        let mut cfg = SimConfig::default();
+        cfg.apas = 0;
+        assert!(cfg.validate().is_err());
+        cfg.apas = 100_000;
+        assert!(cfg.validate().unwrap_err().contains("apas"));
     }
 
     #[test]

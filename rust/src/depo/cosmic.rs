@@ -212,6 +212,50 @@ mod tests {
     }
 
     #[test]
+    fn cosmic_is_bitwise_reproducible() {
+        // scenario determinism needs bit-pure generation, not just
+        // matching summary stats
+        let det = Detector::test_small();
+        let a = CosmicSource::with_target_depos(det.clone(), 3000, 5).generate();
+        let b = CosmicSource::with_target_depos(det, 3000, 5).generate();
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x, y);
+        }
+    }
+
+    #[test]
+    fn cosmic_charge_is_mip_scale() {
+        // per-depo charge sits in the MIP band the scenario witnesses
+        // bound (1 mm steps: thousands of electrons, Landau-tailed)
+        let det = Detector::test_small();
+        let depos = CosmicSource::with_target_depos(det, 30_000, 13).generate();
+        let s = stats(&depos);
+        let per_depo = s.total_charge / s.count as f64;
+        assert!(
+            (2_000.0..25_000.0).contains(&per_depo),
+            "per-depo charge {per_depo}"
+        );
+    }
+
+    #[test]
+    fn zenith_angles_prefer_vertical() {
+        // cos²θ·sinθ peaks near 35°: steep tracks must dominate over
+        // grazing ones.  Sample the generator's own zenith draw.
+        let mut rng = crate::rng::Pcg32::seeded(99);
+        let n = 4000;
+        let steep = (0..n)
+            .filter(|_| CosmicSource::zenith(&mut rng) < std::f64::consts::FRAC_PI_4)
+            .count();
+        // ∫₀^{π/4} cos²θ sinθ dθ / ∫₀^{π/2} ≈ 0.65
+        assert!(
+            steep > n / 2 && steep < 4 * n / 5,
+            "steep fraction {} / {n}",
+            steep
+        );
+    }
+
+    #[test]
     fn tracks_go_downward() {
         // charge-weighted mean y should be above the volume midpoint
         // (tracks enter at the top and may exit the sides early).

@@ -162,6 +162,40 @@ mod tests {
     }
 
     #[test]
+    fn track_is_bitwise_reproducible() {
+        // the scenario engine's determinism rests on generate() being a
+        // pure function of the seed: assert full bit equality, not just
+        // summary stats
+        let gen = |seed| {
+            TrackDepoSource::mip([0.0, 0.0, 0.0], [5.0 * MM, 0.0, 80.0 * MM], 2.0, seed).generate()
+        };
+        let (a, b) = (gen(11), gen(11));
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x, y);
+        }
+    }
+
+    #[test]
+    fn track_charge_spectrum_is_landau_skewed() {
+        // the per-step loss model is Landau-like: a heavy upper tail,
+        // so max >> mean > median.  This is the statistical shape the
+        // scenario witnesses assume for MIP workloads.
+        let depos =
+            TrackDepoSource::mip([0.0, 0.0, 0.0], [0.0, 0.0, 2000.0 * MM], 0.0, 17).generate();
+        assert_eq!(depos.len(), 2000);
+        let mut charges: Vec<f64> = depos.iter().map(|d| d.charge).collect();
+        charges.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mean = charges.iter().sum::<f64>() / charges.len() as f64;
+        let median = charges[charges.len() / 2];
+        let max = *charges.last().unwrap();
+        assert!(mean > median, "mean {mean} <= median {median} (no upper tail)");
+        assert!(max > 1.5 * mean, "max {max} vs mean {mean}: tail too light");
+        // every step ionizes something
+        assert!(charges[0] > 0.0);
+    }
+
+    #[test]
     fn degenerate_track_is_empty() {
         let mut src = TrackDepoSource::mip([1.0, 2.0, 3.0], [1.0, 2.0, 3.0], 0.0, 1);
         assert!(src.generate().is_empty());

@@ -1,0 +1,149 @@
+//! Multi-APA detector layouts: tiling identical anode-plane assemblies
+//! along the beam (z) axis.
+//!
+//! The source paper benchmarks a single plane set, but real LArTPC
+//! detectors are built from many identical APAs — ProtoDUNE-SP has 6,
+//! the DUNE far-detector modules have 150 — and the follow-up studies
+//! (arXiv:2203.02479, arXiv:2304.01841) stress that portability
+//! conclusions must hold at that scale.  [`ApaLayout`] is the minimal
+//! geometry for it: `napas` copies of one base [`Detector`] tiled
+//! side-by-side along z, each owning its own (U, V, W) plane set and
+//! rasterizing in its own *local* coordinates.  A depo's global z picks
+//! its APA; translating into the APA frame reuses every single-detector
+//! code path unchanged, which is what makes APA sharding a pure
+//! execution-layer concern (see `crate::scenario::sharded`).
+
+use super::Detector;
+
+/// A row of identical APAs along the beam (z) axis.
+///
+/// APA `k` owns global z in `[z0 + k·span, z0 + (k+1)·span)`, where
+/// `span` is the base detector's transverse z extent; its local frame
+/// is the base detector's own coordinate system, so `local z = global
+/// z − k·span`.  With `napas == 1` global and local coincide and the
+/// layout is the identity.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ApaLayout {
+    napas: usize,
+    z0: f64,
+    span: f64,
+}
+
+impl ApaLayout {
+    /// Layout of `napas` copies of `det` tiled along z.
+    ///
+    /// # Examples
+    ///
+    /// ```
+    /// use wirecell::geometry::{ApaLayout, Detector};
+    ///
+    /// let det = Detector::test_small();
+    /// let layout = ApaLayout::for_detector(&det, 3);
+    /// assert_eq!(layout.napas(), 3);
+    /// let (lo, hi) = layout.z_range();
+    /// assert!((hi - lo - 3.0 * layout.span()).abs() < 1e-9);
+    /// ```
+    pub fn for_detector(det: &Detector, napas: usize) -> Self {
+        let (lo, hi) = det.transverse_extent();
+        Self {
+            napas: napas.max(1),
+            z0: lo,
+            span: hi - lo,
+        }
+    }
+
+    /// Number of APAs in the row.
+    pub fn napas(&self) -> usize {
+        self.napas
+    }
+
+    /// One APA's z width (the base detector's transverse extent).
+    pub fn span(&self) -> f64 {
+        self.span
+    }
+
+    /// Global z range covered by the whole row, `[lo, hi)`.
+    pub fn z_range(&self) -> (f64, f64) {
+        (self.z0, self.z0 + self.napas as f64 * self.span)
+    }
+
+    /// Which APA owns global z, or `None` outside the row.
+    pub fn apa_of(&self, z: f64) -> Option<usize> {
+        if z < self.z0 || self.span <= 0.0 {
+            return None;
+        }
+        let k = ((z - self.z0) / self.span) as usize;
+        (k < self.napas).then_some(k)
+    }
+
+    /// Translate a global z into APA `k`'s local frame.
+    pub fn local_z(&self, z: f64, apa: usize) -> f64 {
+        z - apa as f64 * self.span
+    }
+
+    /// Translate APA `k`'s local z back to the global frame.
+    pub fn global_z(&self, local_z: f64, apa: usize) -> f64 {
+        local_z + apa as f64 * self.span
+    }
+
+    /// Global z of APA `k`'s center.
+    pub fn center_z(&self, apa: usize) -> f64 {
+        self.z0 + (apa as f64 + 0.5) * self.span
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn single_apa_is_the_identity() {
+        let det = Detector::test_small();
+        let layout = ApaLayout::for_detector(&det, 1);
+        let (lo, hi) = det.transverse_extent();
+        assert_eq!(layout.z_range(), (lo, hi));
+        assert_eq!(layout.apa_of(0.0), Some(0));
+        assert_eq!(layout.local_z(0.25, 0), 0.25);
+    }
+
+    #[test]
+    fn apas_partition_the_row() {
+        let det = Detector::test_small();
+        let layout = ApaLayout::for_detector(&det, 4);
+        let (lo, hi) = layout.z_range();
+        // every interior point belongs to exactly one APA and round-trips
+        for i in 0..100 {
+            let z = lo + (i as f64 + 0.5) / 100.0 * (hi - lo);
+            let k = layout.apa_of(z).expect("interior z owned");
+            let local = layout.local_z(z, k);
+            assert!(local >= lo && local < lo + layout.span(), "local={local}");
+            assert!((layout.global_z(local, k) - z).abs() < 1e-9);
+        }
+        // boundaries: lower edge owned by the APA above it
+        assert_eq!(layout.apa_of(lo), Some(0));
+        assert_eq!(layout.apa_of(lo + layout.span()), Some(1));
+        // outside the row
+        assert_eq!(layout.apa_of(lo - 1.0), None);
+        assert_eq!(layout.apa_of(hi), None);
+        assert_eq!(layout.apa_of(hi + 1.0), None);
+    }
+
+    #[test]
+    fn zero_apas_clamps_to_one() {
+        let det = Detector::test_small();
+        assert_eq!(ApaLayout::for_detector(&det, 0).napas(), 1);
+    }
+
+    #[test]
+    fn centers_sit_mid_tile() {
+        let det = Detector::test_small();
+        let layout = ApaLayout::for_detector(&det, 2);
+        for k in 0..2 {
+            let c = layout.center_z(k);
+            assert_eq!(layout.apa_of(c), Some(k));
+            let local = layout.local_z(c, k);
+            let (lo, _) = det.transverse_extent();
+            assert!((local - (lo + 0.5 * layout.span())).abs() < 1e-9);
+        }
+    }
+}

@@ -7,11 +7,15 @@
 //! induction, W collection) whose wires lie in the Y–Z plane at a
 //! characteristic angle; a depo's transverse position projects onto each
 //! plane's *pitch* axis, which together with the digitization time axis
-//! spans the (channel × tick) grid the rasterizer fills.
+//! spans the (channel × tick) grid the rasterizer fills.  [`ApaLayout`]
+//! tiles identical plane sets along z for multi-APA detectors
+//! (ProtoDUNE-SP-style rows; see `docs/SCENARIOS.md`).
 
+mod apa;
 mod binning;
 mod plane;
 
+pub use apa::ApaLayout;
 pub use binning::Binning;
 pub use plane::{PlaneId, WirePlane};
 

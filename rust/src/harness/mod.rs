@@ -13,6 +13,7 @@
 //! | Figure 3 vs 4 strategy (proposed) | [`strategy_sweep`] |
 //! | fused SoA kernel vs per-patch (beyond the paper) | [`fused_sweep`], [`rasterize_report`] |
 //! | multi-event serving throughput (proposed, after arXiv:2203.02479) | [`throughput`], [`throughput_scaling`] |
+//! | scenario diversity × APA sharding (proposed, after arXiv:2304.01841) | [`scenario_matrix`] |
 
 use crate::backend::{ExecBackend, PjrtBackend, SerialBackend, StageTimings, ThreadedBackend};
 use crate::config::{FluctuationMode, SimConfig, Strategy};
@@ -24,7 +25,8 @@ use crate::raster::{DepoView, GridSpec, Patch};
 use crate::rng::RandomPool;
 use crate::runtime::Runtime;
 use crate::scatter::{scatter_atomic, scatter_serial, PlaneGrid};
-use crate::session::SimSession;
+use crate::scenario::{Scenario, ShardExec, ShardedSession};
+use crate::session::{Registry, SimSession};
 use crate::throughput::{run_stream, StreamOptions, ThroughputReport};
 use anyhow::Result;
 use std::sync::Arc;
@@ -460,6 +462,115 @@ pub fn rasterize_report(cfg: &SimConfig, n: usize, repeat: usize) -> Result<(Tab
     Ok((table, digest))
 }
 
+/// One row of [`scenario_matrix`]: a scenario run unsharded (one
+/// session looping the APAs) and sharded (a pooled shard executor),
+/// with the digest-equality witness.
+#[derive(Clone, Debug)]
+pub struct ScenarioRow {
+    /// Scenario registry key.
+    pub scenario: String,
+    /// Generated depo count (global, before sharding).
+    pub depos: usize,
+    /// Depos outside the APA row (dropped identically by both paths).
+    pub dropped: usize,
+    /// Best-of-repeat wall time of the unsharded (serial) run [s].
+    pub unsharded_s: f64,
+    /// Best-of-repeat wall time of the pooled sharded run [s].
+    pub sharded_s: f64,
+    /// The gathered event digest (identical for both paths on a
+    /// deterministic backend/strategy).
+    pub digest: u64,
+    /// Whether the two execution paths produced equal digests.
+    pub digests_match: bool,
+}
+
+/// The scenario × sharding sweep (`benches/scenarios.rs`, `wire-cell
+/// scenarios` documents the catalog): every registered scenario is
+/// generated once (witness-checked), then run unsharded (one session,
+/// APA loop) and sharded (`workers` pooled sessions) over `apas`
+/// APAs.  The digest-equality column is the acceptance gate of the
+/// sharded execution path.
+pub fn scenario_matrix(
+    cfg: &SimConfig,
+    apas: usize,
+    workers: usize,
+    repeat: usize,
+) -> Result<(Table, Vec<ScenarioRow>)> {
+    let mut cfg = cfg.clone();
+    cfg.apas = apas.max(1);
+    let registry = Registry::with_defaults();
+    let mut table = Table::new(
+        &format!(
+            "Scenario matrix — {} APAs, {} shard workers, backend {}, strategy {}, best of {}",
+            cfg.apas,
+            workers.max(1),
+            cfg.backend.label(),
+            cfg.strategy.as_str(),
+            repeat.max(1)
+        ),
+        &[
+            "Scenario",
+            "Depos",
+            "Dropped",
+            "Unsharded [s]",
+            "Sharded [s]",
+            "Speedup",
+            "Digests equal",
+        ],
+    );
+    let mut rows = Vec::new();
+    let keys: Vec<String> = registry.scenarios().map(|(k, _)| k.to_string()).collect();
+    for key in keys {
+        cfg.scenario = key.clone();
+        let scenario = registry.make_scenario(&cfg)?;
+        let mut serial = ShardedSession::new(&cfg, ShardExec::Serial)?;
+        let depos = scenario.generate(serial.layout(), cfg.seed);
+        scenario
+            .witness()
+            .check(&depos)
+            .map_err(|e| anyhow::anyhow!("scenario '{key}' witness: {e}"))?;
+        let mut unsharded_s = f64::INFINITY;
+        let mut digest_serial = 0u64;
+        let mut dropped = 0usize;
+        for _ in 0..repeat.max(1) {
+            let t0 = Instant::now();
+            let report = serial.run_event(cfg.seed, &depos)?;
+            unsharded_s = unsharded_s.min(t0.elapsed().as_secs_f64());
+            digest_serial = report.digest();
+            dropped = report.dropped;
+        }
+        let mut pooled = ShardedSession::new(&cfg, ShardExec::Pooled(workers.max(1)))?;
+        let mut sharded_s = f64::INFINITY;
+        let mut digest_pooled = 0u64;
+        for _ in 0..repeat.max(1) {
+            let t0 = Instant::now();
+            let report = pooled.run_event(cfg.seed, &depos)?;
+            sharded_s = sharded_s.min(t0.elapsed().as_secs_f64());
+            digest_pooled = report.digest();
+        }
+        let digests_match = digest_serial == digest_pooled;
+        table.row(&[
+            key.clone(),
+            depos.len().to_string(),
+            dropped.to_string(),
+            format!("{unsharded_s:.4}"),
+            format!("{sharded_s:.4}"),
+            format!("{:.2}x", unsharded_s / sharded_s.max(1e-12)),
+            digests_match.to_string(),
+        ]);
+        rows.push(ScenarioRow {
+            scenario: key,
+            depos: depos.len(),
+            dropped,
+            unsharded_s,
+            sharded_s,
+            digest: digest_serial,
+            digests_match,
+        });
+    }
+    Ok((table, rows))
+}
+
 /// Multi-event throughput: run `events` events across `workers` pooled
 /// pipelines and return the per-stage aggregate table plus the full
 /// report (rates, per-worker shares, determinism digest).
@@ -604,6 +715,21 @@ mod tests {
         let (table, d_fused) = rasterize_report(&cfg, 300, 2).unwrap();
         assert_eq!(d_batched, d_fused, "strategy changed the physics");
         assert!(table.render().contains("grid digest"));
+    }
+
+    #[test]
+    fn scenario_matrix_digests_agree() {
+        let mut cfg = small_cfg();
+        cfg.target_depos = 400;
+        cfg.fluctuation = FluctuationMode::None;
+        let (table, rows) = scenario_matrix(&cfg, 2, 2, 1).unwrap();
+        assert_eq!(rows.len(), crate::scenario::BUILTIN_SCENARIOS.len());
+        for row in &rows {
+            assert!(row.digests_match, "{} diverged under sharding", row.scenario);
+        }
+        assert!(table.render().contains("Digests equal"));
+        // the hotspot row exists and landed everything on one APA's shard
+        assert!(rows.iter().any(|r| r.scenario == "hotspot" && r.dropped == 0));
     }
 
     #[test]

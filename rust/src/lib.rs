@@ -22,14 +22,16 @@
 //!   the `SimSession` builder), [`dataflow`], [`backend`], [`runtime`],
 //!   [`coordinator`] (the legacy `SimPipeline` shim + node adapters),
 //!   [`metrics`], [`cli`]
-//! * scale-out: [`throughput`] — the multi-event worker-pool engine
-//!   behind `wire-cell throughput`
+//! * scale-out: [`scenario`] — named multi-APA workloads and the
+//!   APA-sharded execution path behind `wire-cell scenarios` — and
+//!   [`throughput`] — the multi-event worker-pool engine behind
+//!   `wire-cell throughput`
 //!
 //! See `README.md` for the quickstart, `docs/ARCHITECTURE.md` for the
 //! full layer walk-through (including the `SimPipeline` → `SimSession`
-//! migration note and the stage-authoring guide), and
-//! `docs/KERNELS.md` for the fused-kernel memory layout and execution
-//! model.
+//! migration note and the stage-authoring guide), `docs/SCENARIOS.md`
+//! for the workload catalog, and `docs/KERNELS.md` for the
+//! fused-kernel memory layout and execution model.
 
 #![warn(missing_docs)]
 // ci.sh runs `cargo clippy -- -D warnings`; these are the project-wide
@@ -62,6 +64,7 @@ pub mod response;
 pub mod rng;
 pub mod runtime;
 pub mod scatter;
+pub mod scenario;
 pub mod session;
 pub mod sigproc;
 pub mod special;

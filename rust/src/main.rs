@@ -2,9 +2,9 @@
 
 use anyhow::{anyhow, Result};
 use wirecell::cli::{usage, Cli};
-use wirecell::depo::{CosmicSource, DepoSource};
 use wirecell::harness;
 use wirecell::metrics::Table;
+use wirecell::scenario::{Scenario, ShardExec, ShardedSession};
 use wirecell::session::{Registry, SimSession};
 
 fn main() {
@@ -73,6 +73,7 @@ fn run(args: &[String]) -> Result<()> {
             // built-in component registered
             emit(&cli, Registry::with_defaults().table())
         }
+        "scenarios" => emit(&cli, Registry::with_defaults().scenario_table()),
         "version" => {
             println!("wire-cell 0.1.0 (paper: EPJ Web Conf 251, 03032 (2021))");
             println!("detectors: test-small, uboone-like");
@@ -97,15 +98,21 @@ fn emit(cli: &Cli, table: Table) -> Result<()> {
 fn simulate(cli: &Cli) -> Result<()> {
     let cfg = cli.sim_config().map_err(|e| anyhow!(e))?;
     eprintln!("config:\n{}", cfg.to_json());
+    if cfg.apas > 1 {
+        return simulate_sharded(cli, &cfg);
+    }
+    let registry = Registry::with_defaults();
+    let scenario = registry.make_scenario(&cfg)?;
     let mut pipe = SimSession::builder().config(cfg.clone()).build()?;
-    let mut src = CosmicSource::with_target_depos(
-        pipe.detector().clone(),
-        cfg.target_depos,
-        cfg.seed,
-    );
+    let layout =
+        wirecell::geometry::ApaLayout::for_detector(pipe.detector(), cfg.apas);
     let t0 = std::time::Instant::now();
-    let depos = src.generate();
-    eprintln!("generated {} depos ({})", depos.len(), src.label());
+    let depos = scenario.generate(&layout, cfg.seed);
+    eprintln!(
+        "generated {} depos (scenario '{}')",
+        depos.len(),
+        scenario.name()
+    );
     let report = pipe.run(&depos)?;
     let wall = t0.elapsed().as_secs_f64();
 
@@ -156,6 +163,55 @@ fn simulate(cli: &Cli) -> Result<()> {
             "pjrt: {n} dispatches, h2d {h2d:.3} s, exec {exec:.3} s, d2h {d2h:.3} s ({})",
             rt.platform()
         );
+    }
+    Ok(())
+}
+
+/// Multi-APA `simulate`: generate the scenario's global depo set, fan
+/// it out to per-APA shards over a pooled executor (`--workers`
+/// sessions), and report per-shard accounting plus the gathered event
+/// digest.
+fn simulate_sharded(cli: &Cli, cfg: &wirecell::config::SimConfig) -> Result<()> {
+    let registry = Registry::with_defaults();
+    let scenario = registry.make_scenario(cfg)?;
+    let exec = if cfg.workers > 1 {
+        ShardExec::Pooled(cfg.workers)
+    } else {
+        ShardExec::Serial
+    };
+    let mut session = ShardedSession::new(cfg, exec)?;
+    let t0 = std::time::Instant::now();
+    let depos = scenario.generate(session.layout(), cfg.seed);
+    eprintln!(
+        "generated {} depos (scenario '{}', {} APAs, {} shard session(s))",
+        depos.len(),
+        scenario.name(),
+        session.layout().napas(),
+        session.nsessions()
+    );
+    let report = session.run_event(cfg.seed, &depos)?;
+    let wall = t0.elapsed().as_secs_f64();
+    let mut table = Table::new(
+        &format!("simulate — backend {}, {} APAs", report.label, cfg.apas),
+        &["Stage", "Time [s]", "Calls"],
+    );
+    for (stage, secs, count) in report.stages.stages() {
+        table.row(&[stage, format!("{secs:.3}"), count.to_string()]);
+    }
+    println!("{}", table.render());
+    println!("{}", report.shard_table().render());
+    println!(
+        "event digest: {:016x}  (seed {}; identical for serial and pooled shard execution)",
+        report.digest(),
+        cfg.seed
+    );
+    println!("total wall: {wall:.3} s");
+    if let Some(path) = cli.opt("out") {
+        let mut text = table.render();
+        text.push('\n');
+        text.push_str(&report.shard_table().render());
+        std::fs::write(path, &text)?;
+        eprintln!("wrote {path}");
     }
     Ok(())
 }

@@ -1,0 +1,184 @@
+//! The scenario engine: named workloads over multi-APA detector
+//! layouts, with expected-statistics witnesses and an APA-sharded
+//! execution path.
+//!
+//! The source paper benchmarks exactly one workload — ~100k cosmic-ray
+//! depos on one plane set — but its follow-up studies
+//! (arXiv:2203.02479, arXiv:2304.01841) stress that
+//! portable-performance conclusions only hold when measured across
+//! *diverse* workloads and at multi-APA scale.  This module supplies
+//! both axes:
+//!
+//! * [`Scenario`] — a named depo workload generated over an
+//!   [`ApaLayout`](crate::geometry::ApaLayout) in global coordinates,
+//!   paired with a [`ScenarioWitness`] (expected depo-count and
+//!   charge-scale bounds) that tests and the benchmark harness check
+//!   before trusting a run.  Five built-ins cover the physics space
+//!   ([`BUILTIN_SCENARIOS`]): beam tracks crossing every APA, cosmic
+//!   showers, beam⊕cosmic pile-up, noise-only pedestal events, and a
+//!   hotspot blob that lands everything on one APA (the sharding
+//!   worst case).
+//! * [`sharded`] — [`ShardedSession`]: fan an event's depos out to
+//!   per-APA shards, run each shard through its own
+//!   [`SimSession`](crate::session::SimSession) (serially or over a
+//!   pull-based worker pool), and scatter-gather the shard frames into
+//!   one order-independent, digest-stable event frame.
+//!
+//! Scenarios register in the string-keyed
+//! [`Registry`](crate::session::Registry) exactly like backends,
+//! strategies and stages — a new scenario registers in one place and
+//! the CLI (`wire-cell scenarios`, `--scenario`), the throughput
+//! engine, and `harness::scenario_matrix` all resolve it by name.
+//! `docs/SCENARIOS.md` is the user-facing catalog.
+//!
+//! # Examples
+//!
+//! ```
+//! use wirecell::config::{FluctuationMode, SimConfig};
+//! use wirecell::scenario::{apa_seed, Scenario, ShardExec, ShardedSession};
+//! use wirecell::session::Registry;
+//!
+//! let mut cfg = SimConfig::default();
+//! cfg.scenario = "beam-track".into();
+//! cfg.apas = 2;
+//! cfg.target_depos = 300;
+//! cfg.fluctuation = FluctuationMode::None;
+//! cfg.pool_size = 1 << 14;
+//!
+//! let registry = Registry::with_defaults();
+//! let scenario = registry.make_scenario(&cfg)?;
+//! let mut session = ShardedSession::new(&cfg, ShardExec::Serial)?;
+//! let depos = scenario.generate(session.layout(), cfg.seed);
+//! scenario.witness().check(&depos).map_err(anyhow::Error::msg)?;
+//! let report = session.run_event(cfg.seed, &depos)?;
+//! assert_eq!(report.shards.len(), 2);
+//! assert_ne!(apa_seed(cfg.seed, 1), cfg.seed);
+//! # Ok::<(), anyhow::Error>(())
+//! ```
+
+pub mod sharded;
+mod sources;
+
+pub use sharded::{
+    apa_seed, shard_depos, ShardExec, ShardStats, ShardedReport, ShardedSession,
+};
+pub use sources::{
+    BeamTrackScenario, CosmicShowerScenario, HotspotScenario, NoiseOnlyScenario,
+    PileupMixScenario,
+};
+
+use crate::depo::Depo;
+use crate::geometry::ApaLayout;
+
+/// The built-in scenario vocabulary, registry-key order — what
+/// `Registry::with_defaults` registers and `wire-cell scenarios`
+/// lists.  Custom scenarios register at run time via
+/// [`Registry::register_scenario`](crate::session::Registry::register_scenario).
+pub const BUILTIN_SCENARIOS: &[&str] = &[
+    "beam-track",
+    "cosmic-shower",
+    "hotspot",
+    "noise-only",
+    "pileup-mix",
+];
+
+/// Expected-statistics bounds for a scenario's generated workload —
+/// the cheap sanity witness tests and `harness::scenario_matrix` check
+/// before trusting a run's timings or digests.
+///
+/// All built-in generators are deterministic by seed (same seed, same
+/// depos, bit for bit); the witness bounds the *statistical shape* a
+/// fresh seed must land in: depo count near the configured target and
+/// per-depo charge on the MIP ionization scale.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ScenarioWitness {
+    /// Inclusive depo-count band `(min, max)`.
+    pub count: (usize, usize),
+    /// Inclusive mean-charge band per depo, electrons `(min, max)`;
+    /// checked only when the count may be non-zero.
+    pub mean_charge: (f64, f64),
+}
+
+impl ScenarioWitness {
+    /// Check a generated depo set against the bounds.
+    pub fn check(&self, depos: &[Depo]) -> Result<(), String> {
+        let n = depos.len();
+        if n < self.count.0 || n > self.count.1 {
+            return Err(format!(
+                "depo count {n} outside witness band [{}, {}]",
+                self.count.0, self.count.1
+            ));
+        }
+        if n == 0 {
+            return Ok(());
+        }
+        let mean = depos.iter().map(|d| d.charge).sum::<f64>() / n as f64;
+        if mean < self.mean_charge.0 || mean > self.mean_charge.1 {
+            return Err(format!(
+                "mean charge {mean:.1} e outside witness band [{:.1}, {:.1}]",
+                self.mean_charge.0, self.mean_charge.1
+            ));
+        }
+        Ok(())
+    }
+}
+
+/// A named workload: generates one event's depos in *global*
+/// coordinates over a multi-APA layout, and states the statistical
+/// shape the output must have.
+///
+/// Implementations must be deterministic by seed — the sharded
+/// execution path and the throughput engine both rely on
+/// `(scenario, layout, seed)` fully determining the depo set.  They
+/// must also be `Send`: throughput workers own one scenario each.
+pub trait Scenario: Send {
+    /// Registry name of this scenario ("beam-track", ...).
+    fn name(&self) -> &str;
+
+    /// Generate one event's depos in global coordinates for `layout`.
+    fn generate(&self, layout: &ApaLayout, seed: u64) -> Vec<Depo>;
+
+    /// Expected-statistics bounds for the generated set.
+    fn witness(&self) -> ScenarioWitness;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::depo::Depo;
+
+    #[test]
+    fn witness_checks_count_and_charge() {
+        let w = ScenarioWitness {
+            count: (2, 4),
+            mean_charge: (1000.0, 2000.0),
+        };
+        let mk = |n: usize, q: f64| -> Vec<Depo> {
+            (0..n)
+                .map(|i| Depo::point(0.0, [0.0; 3], q, i as u64))
+                .collect()
+        };
+        assert!(w.check(&mk(3, 1500.0)).is_ok());
+        assert!(w.check(&mk(1, 1500.0)).unwrap_err().contains("count"));
+        assert!(w.check(&mk(5, 1500.0)).unwrap_err().contains("count"));
+        assert!(w.check(&mk(3, 10.0)).unwrap_err().contains("charge"));
+        // a zero-count witness skips the charge band
+        let empty = ScenarioWitness {
+            count: (0, 0),
+            mean_charge: (0.0, 0.0),
+        };
+        assert!(empty.check(&[]).is_ok());
+        assert!(empty.check(&mk(1, 0.0)).is_err());
+    }
+
+    #[test]
+    fn builtin_list_is_sorted_and_distinct() {
+        // registry keys render in BTreeMap order; keep the const in the
+        // same order so docs and listings agree
+        let mut sorted = BUILTIN_SCENARIOS.to_vec();
+        sorted.sort_unstable();
+        sorted.dedup();
+        assert_eq!(sorted, BUILTIN_SCENARIOS.to_vec());
+        assert!(BUILTIN_SCENARIOS.len() >= 5);
+    }
+}

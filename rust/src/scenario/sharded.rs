@@ -1,0 +1,440 @@
+//! APA-sharded execution: fan one event's depos out to per-APA shards,
+//! run each shard through its own [`SimSession`], and scatter-gather
+//! the shard frames into one order-independent, digest-stable event
+//! frame.
+//!
+//! Sharding is a pure execution-layer concern: every APA is an
+//! identical copy of the base detector ([`ApaLayout`]), so a shard run
+//! is just a normal single-detector session run over the depos that
+//! landed in that APA's z window, translated into the APA's local
+//! frame.  The determinism contract mirrors the throughput engine's:
+//! shard `k` of event `e` derives every stochastic stage from
+//! [`apa_seed`]`(e, k)` alone, so *which session or thread runs a
+//! shard is unobservable in the output* — the serial loop and the
+//! pooled executor produce bit-identical frames, and
+//! [`ShardedReport::digest`] is the cheap witness
+//! (`rust/tests/scenarios.rs` asserts the full guarantee).
+
+use crate::backend::StageTimings;
+use crate::config::SimConfig;
+use crate::depo::Depo;
+use crate::frame::Frame;
+use crate::geometry::ApaLayout;
+use crate::metrics::{StageTimer, Table};
+use crate::rng::RandomPool;
+use crate::session::{RunReport, SimSession};
+use crate::throughput::frame_digest;
+use anyhow::{Context, Result};
+use std::collections::VecDeque;
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+/// Per-shard seed: APA 0 keeps the event seed — so a 1-APA sharded run
+/// is bit-identical to a plain [`SimSession`] run — and higher APAs
+/// get a splitmix64-style mix of the event seed and the APA index.
+pub fn apa_seed(event_seed: u64, apa: usize) -> u64 {
+    if apa == 0 {
+        return event_seed;
+    }
+    let mut z = (event_seed ^ 0xA9A5_0000_0000_A9A5)
+        ^ (apa as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+    z = z.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// Split a global depo set into per-APA shards in APA-local
+/// coordinates.  Depos outside the layout's z row are dropped — by
+/// both execution paths identically, which is what keeps the digests
+/// comparable.
+pub fn shard_depos(depos: &[Depo], layout: &ApaLayout) -> Vec<Vec<Depo>> {
+    let mut shards = vec![Vec::new(); layout.napas()];
+    for d in depos {
+        if let Some(k) = layout.apa_of(d.pos[2]) {
+            let mut local = *d;
+            local.pos[2] = layout.local_z(d.pos[2], k);
+            shards[k].push(local);
+        }
+    }
+    shards
+}
+
+/// How the shards of one event are executed.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ShardExec {
+    /// One session runs the shards sequentially in APA order — the
+    /// "unsharded single-session" reference path.
+    Serial,
+    /// Up to `n` sessions race a shared shard queue (the same
+    /// pull-based work-stealing discipline as
+    /// [`run_pooled`](crate::dataflow::run_pooled)): an idle session
+    /// takes the next APA index, so a hotspot shard never stalls the
+    /// others.
+    Pooled(usize),
+}
+
+/// Per-shard share of one sharded event.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct ShardStats {
+    /// APA index.
+    pub apa: usize,
+    /// Depos that landed in this APA.
+    pub depos: usize,
+    /// Charge accumulated on this APA's grids (electrons).
+    pub charge: f64,
+    /// Wall-clock spent inside this shard's run [s].
+    pub busy_s: f64,
+    /// This shard's frame digest (0 when frames are disabled).
+    pub digest: u64,
+}
+
+/// Everything one sharded event run reports.
+pub struct ShardedReport {
+    /// Backend row label of the shard sessions.
+    pub label: String,
+    /// Global input depo count (including dropped).
+    pub depos: usize,
+    /// Depos outside the layout's z row (dropped before sharding).
+    pub dropped: usize,
+    /// Per-shard accounting, APA order.
+    pub shards: Vec<ShardStats>,
+    /// Per-shard frames, APA order (`ident` = APA index; `None` when
+    /// the sessions run frame-less).
+    pub frames: Vec<Option<Frame>>,
+    /// Stage timers merged over all shards.
+    pub stages: StageTimer,
+    /// Raster sampling/fluctuation split summed over all shards —
+    /// the per-shard worker accounting behind the throughput engine's
+    /// `raster.*` rows.
+    pub raster: StageTimings,
+}
+
+impl ShardedReport {
+    /// The scatter-gathered event frame: every shard's plane frames
+    /// concatenated in APA order (U, V, W per APA), independent of the
+    /// order the shards completed in.  `None` if any shard ran
+    /// frame-less.
+    pub fn event_frame(&self) -> Option<Frame> {
+        let mut planes = Vec::new();
+        for f in &self.frames {
+            planes.extend(f.as_ref()?.planes.iter().cloned());
+        }
+        Some(Frame { planes, ident: 0 })
+    }
+
+    /// FNV fold over the APA-ordered shard digests — stable however
+    /// the shards were scheduled, and therefore equal between the
+    /// serial and pooled executors when (and only when) every shard
+    /// frame is bit-identical.
+    pub fn digest(&self) -> u64 {
+        const PRIME: u64 = 0x0000_0100_0000_01b3;
+        let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+        for s in &self.shards {
+            h = (h ^ s.apa as u64).wrapping_mul(PRIME);
+            h = (h ^ s.digest).wrapping_mul(PRIME);
+        }
+        h
+    }
+
+    /// Per-shard accounting table (the `wire-cell simulate` body for
+    /// multi-APA runs).
+    pub fn shard_table(&self) -> Table {
+        let mut t = Table::new(
+            &format!(
+                "per-APA shards — {} depos ({} dropped), backend {}",
+                self.depos, self.dropped, self.label
+            ),
+            &["APA", "Depos", "Charge [e]", "Busy [s]", "Digest"],
+        );
+        for s in &self.shards {
+            t.row(&[
+                s.apa.to_string(),
+                s.depos.to_string(),
+                format!("{:.3e}", s.charge),
+                format!("{:.3}", s.busy_s),
+                format!("{:016x}", s.digest),
+            ]);
+        }
+        t
+    }
+}
+
+/// A multi-APA session: one [`SimSession`] per executor slot over a
+/// shared [`ApaLayout`], driven by [`run_event`](Self::run_event).
+///
+/// All APAs are identical detectors, so the sessions are
+/// interchangeable — a session is re-seeded with [`apa_seed`] before
+/// each shard it runs, which is what lets the serial executor reuse
+/// one session for every shard and the pooled executor hand shards to
+/// whichever session goes idle, without the output depending on the
+/// assignment.
+pub struct ShardedSession {
+    layout: ApaLayout,
+    sessions: Vec<SimSession>,
+    exec: ShardExec,
+}
+
+impl ShardedSession {
+    /// Build a sharded session for `cfg` (`cfg.apas` APAs of
+    /// `cfg.detector`).
+    pub fn new(cfg: &SimConfig, exec: ShardExec) -> Result<Self> {
+        Self::with_variate_pool(cfg, exec, None)
+    }
+
+    /// Like [`new`](Self::new), adopting a pre-generated variate-pool
+    /// template (the throughput engine generates one per stream and
+    /// every worker forks it).  Each internal session gets a private
+    /// fork: shared bytes, private cursor.
+    pub fn with_variate_pool(
+        cfg: &SimConfig,
+        exec: ShardExec,
+        template: Option<&RandomPool>,
+    ) -> Result<Self> {
+        let det = cfg.detector().map_err(anyhow::Error::msg)?;
+        let layout = ApaLayout::for_detector(&det, cfg.apas);
+        let nsessions = match exec {
+            ShardExec::Serial => 1,
+            ShardExec::Pooled(n) => n.max(1).min(layout.napas()),
+        };
+        let owned;
+        let template = match template {
+            Some(t) => t,
+            None => {
+                owned = SimSession::variate_pool_for(cfg);
+                owned.as_ref()
+            }
+        };
+        let mut sessions = Vec::with_capacity(nsessions);
+        for _ in 0..nsessions {
+            sessions.push(
+                SimSession::builder()
+                    .config(cfg.clone())
+                    .variate_pool(Arc::new(template.fork()))
+                    .build()?,
+            );
+        }
+        Ok(Self {
+            layout,
+            sessions,
+            exec,
+        })
+    }
+
+    /// The APA layout shards are split over.
+    pub fn layout(&self) -> &ApaLayout {
+        &self.layout
+    }
+
+    /// The configuration in force (shared by every shard session).
+    pub fn config(&self) -> &SimConfig {
+        self.sessions[0].config()
+    }
+
+    /// The per-APA base detector.
+    pub fn detector(&self) -> &crate::geometry::Detector {
+        self.sessions[0].detector()
+    }
+
+    /// Number of executor sessions (1 for serial, ≤ APAs for pooled).
+    pub fn nsessions(&self) -> usize {
+        self.sessions.len()
+    }
+
+    /// Shard a global depo set over the APAs, run every shard, and
+    /// gather the results in APA order.
+    pub fn run_event(&mut self, event_seed: u64, depos: &[Depo]) -> Result<ShardedReport> {
+        let napas = self.layout.napas();
+        let shards = shard_depos(depos, &self.layout);
+        let dropped = depos.len() - shards.iter().map(Vec::len).sum::<usize>();
+        let mut results: Vec<Option<(RunReport, f64)>> = (0..napas).map(|_| None).collect();
+        match self.exec {
+            ShardExec::Serial => {
+                let session = &mut self.sessions[0];
+                for (k, shard) in shards.iter().enumerate() {
+                    session.reseed(apa_seed(event_seed, k));
+                    let t0 = Instant::now();
+                    let report = session.run(shard).with_context(|| format!("APA {k}"))?;
+                    results[k] = Some((report, t0.elapsed().as_secs_f64()));
+                }
+            }
+            ShardExec::Pooled(_) => {
+                let work: Mutex<VecDeque<usize>> = Mutex::new((0..napas).collect());
+                let done: Mutex<Vec<(usize, Result<RunReport>, f64)>> =
+                    Mutex::new(Vec::with_capacity(napas));
+                let shards = &shards;
+                std::thread::scope(|scope| {
+                    for session in self.sessions.iter_mut() {
+                        let (work, done) = (&work, &done);
+                        scope.spawn(move || loop {
+                            // lock scope covers only the take, so the
+                            // sessions overlap on the shard work
+                            let next = work.lock().unwrap().pop_front();
+                            let Some(k) = next else { break };
+                            session.reseed(apa_seed(event_seed, k));
+                            let t0 = Instant::now();
+                            let r = session.run(&shards[k]);
+                            done.lock()
+                                .unwrap()
+                                .push((k, r, t0.elapsed().as_secs_f64()));
+                        });
+                    }
+                });
+                for (k, r, busy_s) in done.into_inner().unwrap() {
+                    results[k] = Some((r.with_context(|| format!("APA {k}"))?, busy_s));
+                }
+            }
+        }
+        // gather in APA order, whatever order the shards completed in
+        let mut stages = StageTimer::new();
+        let mut raster = StageTimings::default();
+        let mut shard_stats = Vec::with_capacity(napas);
+        let mut frames = Vec::with_capacity(napas);
+        let mut label = String::new();
+        for (k, slot) in results.into_iter().enumerate() {
+            let (mut report, busy_s) = slot.expect("every shard ran");
+            stages.merge(&report.stages);
+            raster.add(&report.raster_total());
+            if label.is_empty() {
+                label = report.label.clone();
+            }
+            let mut frame = report.frame.take();
+            if let Some(f) = frame.as_mut() {
+                f.ident = k as u64;
+            }
+            let digest = frame.as_ref().map(frame_digest).unwrap_or(0);
+            shard_stats.push(ShardStats {
+                apa: k,
+                depos: report.depos,
+                charge: report.planes.iter().map(|p| p.charge).sum(),
+                busy_s,
+                digest,
+            });
+            frames.push(frame);
+        }
+        Ok(ShardedReport {
+            label,
+            depos: depos.len(),
+            dropped,
+            shards: shard_stats,
+            frames,
+            stages,
+            raster,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{BackendChoice, FluctuationMode};
+    use crate::geometry::Detector;
+    use crate::units::*;
+
+    fn cfg(apas: usize) -> SimConfig {
+        let mut cfg = SimConfig::default();
+        cfg.backend = BackendChoice::Serial;
+        cfg.fluctuation = FluctuationMode::None;
+        cfg.noise = false;
+        cfg.apas = apas;
+        cfg.pool_size = 1 << 14;
+        cfg
+    }
+
+    /// A small two-APA depo set: one cluster per APA.
+    fn two_apa_depos(layout: &ApaLayout) -> Vec<Depo> {
+        let mut depos = Vec::new();
+        for k in 0..layout.napas() {
+            for i in 0..40 {
+                depos.push(Depo::point(
+                    i as f64 * US,
+                    [40.0 * CM, 1.0 * CM, layout.center_z(k) + i as f64 * MM],
+                    5_000.0,
+                    (k * 100 + i) as u64,
+                ));
+            }
+        }
+        depos
+    }
+
+    #[test]
+    fn apa_zero_keeps_the_event_seed() {
+        assert_eq!(apa_seed(42, 0), 42);
+        assert_ne!(apa_seed(42, 1), 42);
+        assert_ne!(apa_seed(42, 1), apa_seed(42, 2));
+        assert_ne!(apa_seed(42, 1), apa_seed(43, 1));
+        // deterministic
+        assert_eq!(apa_seed(7, 3), apa_seed(7, 3));
+    }
+
+    #[test]
+    fn shard_depos_translates_and_drops() {
+        let layout = ApaLayout::for_detector(&Detector::test_small(), 2);
+        let (zlo, zhi) = layout.z_range();
+        let depos = vec![
+            Depo::point(0.0, [0.0, 0.0, zlo + 1.0 * MM], 1.0, 0),
+            Depo::point(0.0, [0.0, 0.0, zlo + layout.span() + 1.0 * MM], 1.0, 1),
+            Depo::point(0.0, [0.0, 0.0, zhi + 1.0 * MM], 1.0, 2), // outside
+        ];
+        let shards = shard_depos(&depos, &layout);
+        assert_eq!(shards.len(), 2);
+        assert_eq!(shards[0].len(), 1);
+        assert_eq!(shards[1].len(), 1);
+        // both shards see the same *local* z
+        assert!((shards[0][0].pos[2] - shards[1][0].pos[2]).abs() < 1e-9);
+        assert_eq!(shards[0][0].id, 0);
+        assert_eq!(shards[1][0].id, 1);
+    }
+
+    #[test]
+    fn serial_and_pooled_executors_agree_bitwise() {
+        let cfg = cfg(2);
+        let mut serial = ShardedSession::new(&cfg, ShardExec::Serial).unwrap();
+        let depos = two_apa_depos(serial.layout());
+        let a = serial.run_event(cfg.seed, &depos).unwrap();
+        let mut pooled = ShardedSession::new(&cfg, ShardExec::Pooled(2)).unwrap();
+        assert_eq!(pooled.nsessions(), 2);
+        let b = pooled.run_event(cfg.seed, &depos).unwrap();
+        assert_eq!(a.digest(), b.digest());
+        let (fa, fb) = (a.event_frame().unwrap(), b.event_frame().unwrap());
+        assert_eq!(fa.planes.len(), 6); // U,V,W per APA
+        for (pa, pb) in fa.planes.iter().zip(&fb.planes) {
+            for (x, y) in pa.data.iter().zip(&pb.data) {
+                assert_eq!(x.to_bits(), y.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn single_apa_matches_a_plain_session() {
+        let cfg = cfg(1);
+        let mut sharded = ShardedSession::new(&cfg, ShardExec::Serial).unwrap();
+        let depos = two_apa_depos(sharded.layout());
+        let report = sharded.run_event(cfg.seed, &depos).unwrap();
+        let mut plain = SimSession::new(cfg.clone()).unwrap();
+        let plain_report = plain.run(&depos).unwrap();
+        let sharded_frame = report.event_frame().unwrap();
+        let plain_frame = plain_report.frame.unwrap();
+        assert_eq!(sharded_frame.planes.len(), plain_frame.planes.len());
+        for (pa, pb) in sharded_frame.planes.iter().zip(&plain_frame.planes) {
+            for (x, y) in pa.data.iter().zip(&pb.data) {
+                assert_eq!(x.to_bits(), y.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn report_accounts_for_dropped_depos() {
+        let cfg = cfg(2);
+        let mut s = ShardedSession::new(&cfg, ShardExec::Serial).unwrap();
+        let (_, zhi) = s.layout().z_range();
+        let mut depos = two_apa_depos(s.layout());
+        depos.push(Depo::point(0.0, [40.0 * CM, 0.0, zhi + 1.0 * M], 1.0, 999));
+        let n = depos.len();
+        let report = s.run_event(1, &depos).unwrap();
+        assert_eq!(report.depos, n);
+        assert_eq!(report.dropped, 1);
+        assert_eq!(report.shards.iter().map(|x| x.depos).sum::<usize>(), n - 1);
+        assert!(report.shard_table().render().contains("dropped"));
+    }
+}

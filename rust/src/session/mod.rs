@@ -61,8 +61,8 @@ mod stage;
 mod stages;
 
 pub use registry::{
-    BackendCx, BackendEntry, BackendFactory, Registry, StageEntry, StageFactory, StrategyInfo,
-    DEFAULT_TOPOLOGY,
+    BackendCx, BackendEntry, BackendFactory, Registry, ScenarioEntry, ScenarioFactory,
+    StageEntry, StageFactory, StrategyInfo, DEFAULT_TOPOLOGY,
 };
 pub use stage::{PlaneData, PlaneRunStats, RunReport, SimStage, StageCx, StageData};
 pub use stages::{AdcStage, DriftStage, NoiseStage, RasterStage, ResponseStage, ScatterStage};
@@ -116,6 +116,28 @@ impl SessionBuilder {
     /// Append a stage with per-stage config overrides (a JSON object
     /// overlaid onto the session config for this stage only, e.g.
     /// `{"strategy": "fused"}` on the raster stage).
+    ///
+    /// # Examples
+    ///
+    /// ```
+    /// use wirecell::config::{FluctuationMode, SimConfig};
+    /// use wirecell::json::Value;
+    /// use wirecell::session::SimSession;
+    ///
+    /// let mut cfg = SimConfig::default();
+    /// cfg.fluctuation = FluctuationMode::Pool;
+    /// cfg.pool_size = 1 << 12;
+    /// let session = SimSession::builder()
+    ///     .config(cfg)
+    ///     .stage("drift")
+    ///     .stage_with(
+    ///         "raster",
+    ///         Value::object(vec![("strategy", Value::from("fused"))]),
+    ///     )
+    ///     .build()?;
+    /// assert_eq!(session.stage_names(), vec!["drift", "raster"]);
+    /// # Ok::<(), anyhow::Error>(())
+    /// ```
     pub fn stage_with(mut self, name: &str, overrides: crate::json::Value) -> Self {
         self.stages.push(StageSpec {
             name: name.to_string(),
@@ -215,6 +237,27 @@ impl SessionBuilder {
 /// runtime, cached response spectra).  This is the single entry point
 /// used by the CLI, harness, throughput engine, benches and examples;
 /// the legacy `SimPipeline` delegates here.
+///
+/// # Examples
+///
+/// The default topology end-to-end on one point depo:
+///
+/// ```
+/// use wirecell::config::{FluctuationMode, SimConfig};
+/// use wirecell::depo::Depo;
+/// use wirecell::session::SimSession;
+/// use wirecell::units::*;
+///
+/// let mut cfg = SimConfig::default();
+/// cfg.fluctuation = FluctuationMode::None;
+/// cfg.pool_size = 1 << 12;
+/// let mut session = SimSession::new(cfg)?;
+/// let depos = vec![Depo::point(0.0, [40.0 * CM, 0.0, 0.0], 5_000.0, 0)];
+/// let report = session.run(&depos)?;
+/// assert_eq!(report.planes.len(), 3);
+/// assert!(report.frame.is_some());
+/// # Ok::<(), anyhow::Error>(())
+/// ```
 pub struct SimSession {
     cfg: SimConfig,
     detector: Detector,

@@ -1,12 +1,47 @@
 //! The string-keyed component registry: backends, offload strategies,
-//! and pipeline stages, each behind a factory closure.
+//! pipeline stages and workload scenarios, each behind a factory
+//! closure.
 //!
 //! This is the session API's extension point and the collapse of every
 //! `match cfg.backend { ... }` the framework layer used to carry: a
-//! backend (or strategy, or stage) registers **in exactly one place**
-//! and the coordinator, CLI, harness and throughput engine all resolve
-//! it by name.  `wire-cell stages` prints the registry contents, which
-//! doubles as a smoke test that registration ran.
+//! backend (or strategy, or stage, or scenario) registers **in exactly
+//! one place** and the coordinator, CLI, harness and throughput engine
+//! all resolve it by name.  `wire-cell stages` prints the registry
+//! contents, which doubles as a smoke test that registration ran;
+//! `wire-cell scenarios` prints the scenario catalog.
+//!
+//! # Examples
+//!
+//! Custom components register at run time and resolve like built-ins:
+//!
+//! ```
+//! use wirecell::session::Registry;
+//!
+//! let mut reg = Registry::with_defaults();
+//! reg.register_stage(
+//!     "null",
+//!     "passes every event through untouched",
+//!     Box::new(|| {
+//!         struct Null;
+//!         impl wirecell::session::SimStage for Null {
+//!             fn name(&self) -> &str {
+//!                 "null"
+//!             }
+//!             fn process(
+//!                 &mut self,
+//!                 data: wirecell::session::StageData,
+//!                 _cx: &mut wirecell::session::StageCx,
+//!             ) -> anyhow::Result<wirecell::session::StageData> {
+//!                 Ok(data)
+//!             }
+//!         }
+//!         Box::new(Null)
+//!     }),
+//! );
+//! assert!(reg.make_stage("null").is_ok());
+//! assert!(reg.make_stage("warp").is_err());
+//! assert!(reg.scenario("cosmic-shower").is_ok());
+//! ```
 
 use crate::backend::{ExecBackend, PjrtBackend, SerialBackend, ThreadedBackend};
 use crate::config::SimConfig;
@@ -14,6 +49,10 @@ use crate::metrics::Table;
 use crate::parallel::ThreadPool;
 use crate::rng::RandomPool;
 use crate::runtime::Runtime;
+use crate::scenario::{
+    BeamTrackScenario, CosmicShowerScenario, HotspotScenario, NoiseOnlyScenario,
+    PileupMixScenario, Scenario,
+};
 use anyhow::{anyhow, Result};
 use std::collections::BTreeMap;
 use std::sync::Arc;
@@ -96,11 +135,42 @@ pub struct StageEntry {
     pub factory: StageFactory,
 }
 
-/// String-keyed registries for backends, strategies and stages.
+/// Factory closure building a scenario from the run config (detector,
+/// target depos, APA count).
+pub type ScenarioFactory = Box<dyn Fn(&SimConfig) -> Result<Box<dyn Scenario>> + Send + Sync>;
+
+/// One registered scenario (see `docs/SCENARIOS.md` for the catalog).
+pub struct ScenarioEntry {
+    /// One-line workload description for `wire-cell scenarios`.
+    pub summary: String,
+    /// The physics rationale: what real workload this stands in for.
+    pub physics: String,
+    /// The constructor.
+    pub factory: ScenarioFactory,
+}
+
+/// String-keyed registries for backends, strategies, stages and
+/// scenarios.
+///
+/// # Examples
+///
+/// ```
+/// use wirecell::session::Registry;
+///
+/// let reg = Registry::with_defaults();
+/// assert!(reg.backend("serial").unwrap().deterministic);
+/// assert!(reg.strategy("fused").unwrap().fused_scatter);
+/// assert!(reg.make_stage("raster").is_ok());
+/// assert_eq!(
+///     reg.scenarios().count(),
+///     wirecell::scenario::BUILTIN_SCENARIOS.len()
+/// );
+/// ```
 pub struct Registry {
     backends: BTreeMap<String, BackendEntry>,
     strategies: BTreeMap<String, StrategyInfo>,
     stages: BTreeMap<String, StageEntry>,
+    scenarios: BTreeMap<String, ScenarioEntry>,
 }
 
 impl Registry {
@@ -118,6 +188,7 @@ impl Registry {
             backends: BTreeMap::new(),
             strategies: BTreeMap::new(),
             stages: BTreeMap::new(),
+            scenarios: BTreeMap::new(),
         }
     }
 
@@ -240,6 +311,80 @@ impl Registry {
             Box::new(|| Box::new(AdcStage::new())),
         );
 
+        reg.register_scenario(
+            "beam-track",
+            ScenarioEntry {
+                summary: "forward MIP spill crossing every APA along z".into(),
+                physics: "ProtoDUNE-SP test-beam particles; hardest test of shard \
+                          boundaries (every track spans all APAs)"
+                    .into(),
+                factory: Box::new(|cfg| {
+                    let det = cfg.detector().map_err(anyhow::Error::msg)?;
+                    let s: Box<dyn Scenario> =
+                        Box::new(BeamTrackScenario::new(det, cfg.target_depos, cfg.apas));
+                    Ok(s)
+                }),
+            },
+        );
+        reg.register_scenario(
+            "cosmic-shower",
+            ScenarioEntry {
+                summary: "cos²θ muon shower per APA tile (the default)".into(),
+                physics: "the paper's §4.3.2 benchmark workload (CORSIKA+Geant4 \
+                          stand-in), extended to a multi-APA row"
+                    .into(),
+                factory: Box::new(|cfg| {
+                    let det = cfg.detector().map_err(anyhow::Error::msg)?;
+                    let s: Box<dyn Scenario> =
+                        Box::new(CosmicShowerScenario::new(det, cfg.target_depos));
+                    Ok(s)
+                }),
+            },
+        );
+        reg.register_scenario(
+            "hotspot",
+            ScenarioEntry {
+                summary: "one Gaussian blob of point depos inside APA 0".into(),
+                physics: "neutrino-interaction vertex stand-in; worst-case shard \
+                          imbalance (one APA takes the whole event)"
+                    .into(),
+                factory: Box::new(|cfg| {
+                    let det = cfg.detector().map_err(anyhow::Error::msg)?;
+                    let s: Box<dyn Scenario> =
+                        Box::new(HotspotScenario::new(det, cfg.target_depos));
+                    Ok(s)
+                }),
+            },
+        );
+        reg.register_scenario(
+            "noise-only",
+            ScenarioEntry {
+                summary: "empty depo set: pedestal/calibration events".into(),
+                physics: "measures the fixed per-event floor (FT, noise, ADC) every \
+                          real event pays regardless of activity"
+                    .into(),
+                factory: Box::new(|_cfg| {
+                    let s: Box<dyn Scenario> = Box::new(NoiseOnlyScenario);
+                    Ok(s)
+                }),
+            },
+        );
+        reg.register_scenario(
+            "pileup-mix",
+            ScenarioEntry {
+                summary: "beam spill ⊕ cosmic activity in one readout window".into(),
+                physics: "DUNE-era in-time pile-up; heavy-tailed per-event cost over \
+                          mixed topologies"
+                    .into(),
+                factory: Box::new(|cfg| {
+                    let det = cfg.detector().map_err(anyhow::Error::msg)?;
+                    let s: Box<dyn Scenario> =
+                        Box::new(PileupMixScenario::new(det, cfg.target_depos, cfg.apas));
+                    Ok(s)
+                }),
+            },
+        );
+
         reg
     }
 
@@ -262,6 +407,11 @@ impl Registry {
                 factory,
             },
         );
+    }
+
+    /// Register (or replace) a scenario under `key`.
+    pub fn register_scenario(&mut self, key: &str, entry: ScenarioEntry) {
+        self.scenarios.insert(key.to_string(), entry);
     }
 
     /// Backend entry for a registry key.
@@ -296,6 +446,21 @@ impl Registry {
         Ok((entry.factory)())
     }
 
+    /// Scenario entry for a registry key.
+    pub fn scenario(&self, key: &str) -> Result<&ScenarioEntry> {
+        self.scenarios.get(key).ok_or_else(|| {
+            anyhow!(
+                "unknown scenario '{key}' (known: {})",
+                keys(&self.scenarios)
+            )
+        })
+    }
+
+    /// Instantiate the scenario `cfg.scenario` names.
+    pub fn make_scenario(&self, cfg: &SimConfig) -> Result<Box<dyn Scenario>> {
+        (self.scenario(&cfg.scenario)?.factory)(cfg)
+    }
+
     /// Registered backend keys with summaries, key order.
     pub fn backends(&self) -> impl Iterator<Item = (&str, &BackendEntry)> {
         self.backends.iter().map(|(k, e)| (k.as_str(), e))
@@ -309,6 +474,26 @@ impl Registry {
     /// Registered stage keys with summaries, key order.
     pub fn stages(&self) -> impl Iterator<Item = (&str, &StageEntry)> {
         self.stages.iter().map(|(k, e)| (k.as_str(), e))
+    }
+
+    /// Registered scenario keys with entries, key order.
+    pub fn scenarios(&self) -> impl Iterator<Item = (&str, &ScenarioEntry)> {
+        self.scenarios.iter().map(|(k, e)| (k.as_str(), e))
+    }
+
+    /// Render the scenario catalog as one table (the `wire-cell
+    /// scenarios` subcommand body; the full write-up with worked
+    /// examples is `docs/SCENARIOS.md`).
+    pub fn scenario_table(&self) -> Table {
+        let mut t = Table::new(
+            "registered scenarios — select with --scenario <key>, size with \
+             --target_depos / --apas",
+            &["Key", "Workload", "Physics rationale"],
+        );
+        for (k, e) in self.scenarios() {
+            t.row(&[k.to_string(), e.summary.clone(), e.physics.clone()]);
+        }
+        t
     }
 
     /// Render the registry contents as one table (the `wire-cell
@@ -342,6 +527,9 @@ impl Registry {
         }
         for (k, e) in self.strategies() {
             t.row(&["strategy".into(), k.to_string(), e.summary.clone()]);
+        }
+        for (k, e) in self.scenarios() {
+            t.row(&["scenario".into(), k.to_string(), e.summary.clone()]);
         }
         t
     }
@@ -385,6 +573,12 @@ mod tests {
         for key in DEFAULT_TOPOLOGY {
             assert!(reg.make_stage(key).is_ok(), "stage {key} missing");
         }
+        for key in crate::scenario::BUILTIN_SCENARIOS {
+            assert!(reg.scenario(key).is_ok(), "scenario {key} missing");
+        }
+        // the const and the registrations stay in lockstep
+        let registered: Vec<&str> = reg.scenarios().map(|(k, _)| k).collect();
+        assert_eq!(registered, crate::scenario::BUILTIN_SCENARIOS.to_vec());
         assert!(reg.strategy("fused").unwrap().fused_scatter);
         assert!(!reg.strategy("batched").unwrap().fused_scatter);
         assert!(reg.backend("serial").unwrap().deterministic);
@@ -400,6 +594,35 @@ mod tests {
         assert!(e.contains("serial"), "{e}");
         let e = reg.strategy("x").map(|_| ()).unwrap_err().to_string();
         assert!(e.contains("per-depo"), "{e}");
+        let e = reg.scenario("quiet-sun").map(|_| ()).unwrap_err().to_string();
+        assert!(
+            e.contains("unknown scenario 'quiet-sun'") && e.contains("beam-track"),
+            "{e}"
+        );
+    }
+
+    #[test]
+    fn scenario_factories_build_from_config() {
+        let reg = Registry::with_defaults();
+        let mut cfg = SimConfig::default();
+        cfg.target_depos = 500;
+        cfg.apas = 2;
+        for key in crate::scenario::BUILTIN_SCENARIOS {
+            cfg.scenario = key.to_string();
+            let scn = reg.make_scenario(&cfg).unwrap();
+            assert_eq!(scn.name(), *key);
+        }
+        cfg.scenario = "quiet-sun".into();
+        assert!(reg.make_scenario(&cfg).is_err());
+    }
+
+    #[test]
+    fn scenario_table_lists_the_catalog() {
+        let text = Registry::with_defaults().scenario_table().render();
+        for key in crate::scenario::BUILTIN_SCENARIOS {
+            assert!(text.contains(key), "missing {key} in\n{text}");
+        }
+        assert!(text.contains("--scenario"));
     }
 
     #[test]

@@ -179,6 +179,61 @@ impl StageCx<'_> {
 /// [`Registry::register_stage`] and are addressed by name from
 /// [`SessionBuilder::stage`](super::SessionBuilder::stage).
 ///
+/// # Examples
+///
+/// A ~15-line custom stage, registered and run between drift and
+/// raster:
+///
+/// ```
+/// use wirecell::config::{FluctuationMode, SimConfig};
+/// use wirecell::depo::Depo;
+/// use wirecell::session::{Registry, SimSession, SimStage, StageCx, StageData};
+/// use wirecell::units::CM;
+///
+/// /// Drops depos below a charge threshold before rasterization.
+/// struct ChargeCut(f64);
+///
+/// impl SimStage for ChargeCut {
+///     fn name(&self) -> &str {
+///         "charge-cut"
+///     }
+///     fn process(
+///         &mut self,
+///         mut data: StageData,
+///         _cx: &mut StageCx,
+///     ) -> anyhow::Result<StageData> {
+///         let cut = self.0;
+///         data.drifted.retain(|d| d.charge > cut);
+///         Ok(data)
+///     }
+/// }
+///
+/// let mut reg = Registry::with_defaults();
+/// reg.register_stage(
+///     "charge-cut",
+///     "drop depos below threshold",
+///     Box::new(|| Box::new(ChargeCut(1_000.0))),
+/// );
+/// let mut cfg = SimConfig::default();
+/// cfg.fluctuation = FluctuationMode::None;
+/// cfg.pool_size = 1 << 12;
+/// let mut session = SimSession::builder()
+///     .config(cfg)
+///     .registry(reg)
+///     .stage("drift")
+///     .stage("charge-cut")
+///     .stage("raster")
+///     .stage("scatter")
+///     .build()?;
+/// let depos = vec![
+///     Depo::point(0.0, [40.0 * CM, 0.0, 0.0], 5_000.0, 0),
+///     Depo::point(0.0, [40.0 * CM, 0.0, 0.0], 10.0, 1), // below the cut
+/// ];
+/// let report = session.run(&depos)?;
+/// assert_eq!(report.planes[0].views, 1);
+/// # Ok::<(), anyhow::Error>(())
+/// ```
+///
 /// [`SimSession::run`]: super::SimSession::run
 /// [`Registry::register_stage`]: super::Registry::register_stage
 pub trait SimStage: Send {

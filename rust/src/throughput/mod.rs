@@ -31,10 +31,16 @@
 //!   stalls the pool.
 //! * **Seed-sharded determinism.** Every stochastic stage of event
 //!   `seq` derives from [`event_seed`]`(cfg.seed, seq)` alone — depo
-//!   generation, fluctuation RNG, noise.  Which worker runs an event is
-//!   therefore unobservable in the output: with the serial backend the
-//!   frames are byte-identical for any `--workers` value, and
-//!   [`frame_digest`] gives a cheap stream-level witness of that.
+//!   generation (the configured scenario, `cfg.scenario`), fluctuation
+//!   RNG, noise.  Which worker runs an event is therefore unobservable
+//!   in the output: with the serial backend the frames are
+//!   byte-identical for any `--workers` value, and [`frame_digest`]
+//!   gives a cheap stream-level witness of that.
+//! * **APA sharding composes underneath.** With `cfg.apas > 1` each
+//!   worker runs its event shard-by-shard through a
+//!   [`ShardedSession`](crate::scenario::ShardedSession) (events
+//!   already parallelize across workers), and [`WorkerStats`] counts
+//!   the per-worker shard share.
 //! * **Plane fan-out stays inside the worker.** Within an event, the
 //!   intra-event parallel axes (threaded rasterization, atomic
 //!   scatter-add) come from the worker's own backend

@@ -1,7 +1,7 @@
 //! Stream-level aggregation: merged stage timers, per-worker
 //! utilisation, events/sec, and the order-independent frame digest.
 
-use crate::coordinator::RunReport;
+use crate::backend::StageTimings;
 use crate::frame::Frame;
 use crate::metrics::{RateStats, StageTimer, Table};
 
@@ -42,6 +42,9 @@ pub struct WorkerStats {
     pub id: usize,
     /// Events this worker completed.
     pub events: u64,
+    /// APA shards this worker simulated (= events on a single-APA
+    /// config; events × APAs when the workers run sharded).
+    pub shards: u64,
     /// Depos this worker simulated.
     pub depos: u64,
     /// Wall-clock this worker spent inside events [s].
@@ -102,11 +105,12 @@ impl ThroughputReport {
         t
     }
 
-    /// Per-worker utilisation table (events, depos, busy time, share).
+    /// Per-worker utilisation table (events, shards, depos, busy
+    /// time, share).
     pub fn worker_table(&self) -> Table {
         let mut t = Table::new(
             "per-worker utilisation",
-            &["Worker", "Events", "Depos", "Busy [s]", "Busy share"],
+            &["Worker", "Events", "Shards", "Depos", "Busy [s]", "Busy share"],
         );
         let busy_total: f64 = self.workers.iter().map(|w| w.busy_s).sum();
         for w in &self.workers {
@@ -118,6 +122,7 @@ impl ThroughputReport {
             t.row(&[
                 w.id.to_string(),
                 w.events.to_string(),
+                w.shards.to_string(),
                 w.depos.to_string(),
                 format!("{:.3}", w.busy_s),
                 format!("{share:.0}%"),
@@ -155,18 +160,30 @@ impl Aggregate {
         }
     }
 
-    /// Fold one finished event into the aggregate.
-    pub(crate) fn record(&mut self, worker: usize, report: &RunReport, digest: u64, busy_s: f64) {
+    /// Fold one finished event into the aggregate: the event's global
+    /// depo count, how many APA shards it ran as, its merged stage
+    /// timer, the raster sampling/fluctuation split summed over the
+    /// shards, its frame digest and the worker's busy time.
+    pub(crate) fn record(
+        &mut self,
+        worker: usize,
+        depos: usize,
+        shards: usize,
+        stages: &StageTimer,
+        raster: StageTimings,
+        digest: u64,
+        busy_s: f64,
+    ) {
         self.events += 1;
-        self.depos += report.depos as u64;
+        self.depos += depos as u64;
         self.digest ^= digest;
-        self.stages.merge(&report.stages);
-        let raster = report.raster_total();
+        self.stages.merge(stages);
         self.stages.add("raster.sampling", raster.sampling_s);
         self.stages.add("raster.fluctuation", raster.fluctuation_s);
         let w = &mut self.workers[worker];
         w.events += 1;
-        w.depos += report.depos as u64;
+        w.shards += shards as u64;
+        w.depos += depos as u64;
         w.busy_s += busy_s;
     }
 }
@@ -220,12 +237,14 @@ mod tests {
                 WorkerStats {
                     id: 0,
                     events: 3,
+                    shards: 6,
                     depos: 300,
                     busy_s: 1.5,
                 },
                 WorkerStats {
                     id: 1,
                     events: 1,
+                    shards: 2,
                     depos: 100,
                     busy_s: 0.5,
                 },

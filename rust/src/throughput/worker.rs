@@ -4,10 +4,10 @@
 use super::report::{frame_digest, Aggregate, ThroughputReport};
 use crate::config::SimConfig;
 use crate::dataflow::{run_pooled, FunctionNode, Payload, SinkNode, SourceNode};
-use crate::session::SimSession;
-use crate::depo::{CosmicSource, DepoSource};
 use crate::frame::Frame;
 use crate::metrics::RateStats;
+use crate::scenario::{Scenario, ShardExec, ShardedSession};
+use crate::session::{Registry, SimSession};
 use anyhow::Result;
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
@@ -78,13 +78,16 @@ impl SourceNode for EventSource {
     }
 }
 
-/// One worker of the pool: a persistent [`SimSession`] that turns
-/// event tickets into frames, recording timings into the shared
-/// aggregate.
+/// One worker of the pool: a persistent [`ShardedSession`] (one
+/// [`crate::session::SimSession`] per executor slot) plus the
+/// configured scenario, turning event tickets into gathered event
+/// frames and recording timings into the shared aggregate.  On a
+/// single-APA config this is exactly the pre-scenario worker: one
+/// session, one shard, the event seed unchanged.
 struct SimWorker {
     id: usize,
-    pipe: SimSession,
-    depos_per_event: usize,
+    pipe: ShardedSession,
+    scenario: Box<dyn Scenario>,
     keep_frames: bool,
     agg: Arc<Mutex<Aggregate>>,
 }
@@ -100,30 +103,29 @@ impl FunctionNode for SimWorker {
         };
         let t0 = Instant::now();
         let depos = if depos.is_empty() {
-            CosmicSource::with_target_depos(
-                self.pipe.detector().clone(),
-                self.depos_per_event,
-                seed,
-            )
-            .generate()
+            self.scenario.generate(self.pipe.layout(), seed)
         } else {
             depos
         };
-        self.pipe.reseed(seed);
-        match self.pipe.run(&depos) {
-            Ok(mut report) => {
+        match self.pipe.run_event(seed, &depos) {
+            Ok(report) => {
                 let busy = t0.elapsed().as_secs_f64();
-                let mut frame = report.frame.take();
+                let mut frame = report.event_frame();
                 if let Some(f) = frame.as_mut() {
                     // stamp the stream position: stable across worker
                     // counts, unlike arrival order
                     f.ident = seq;
                 }
                 let digest = frame.as_ref().map(frame_digest).unwrap_or(0);
-                self.agg
-                    .lock()
-                    .unwrap()
-                    .record(self.id, &report, digest, busy);
+                self.agg.lock().unwrap().record(
+                    self.id,
+                    depos.len(),
+                    report.shards.len(),
+                    &report.stages,
+                    report.raster,
+                    digest,
+                    busy,
+                );
                 match frame {
                     Some(f) if self.keep_frames => vec![Payload::Frame(f)],
                     _ => Vec::new(),
@@ -161,29 +163,30 @@ impl SinkNode for FrameCollector {
 /// Simulate a stream of `opts.events` events across `opts.workers`
 /// persistent pipelines and aggregate the results.
 ///
-/// Event `seq` is generated from [`event_seed`]`(cfg.seed, seq)` with
-/// `cfg.target_depos` depos, then run through a worker's pipeline
-/// (drift → raster → scatter → FT → noise → ADC under `cfg`).  All
-/// pipelines are built up front so configuration errors surface before
-/// any thread spawns.
+/// Event `seq` is generated from [`event_seed`]`(cfg.seed, seq)` by
+/// the configured scenario (`cfg.scenario`, sized by
+/// `cfg.target_depos` over `cfg.apas` APAs), then run through a
+/// worker's pipeline — shard by shard when `cfg.apas > 1` (events
+/// parallelize across workers, so each worker runs its shards
+/// serially).  All pipelines are built up front so configuration
+/// errors surface before any thread spawns.
 pub fn run_stream(cfg: &SimConfig, opts: &StreamOptions) -> Result<ThroughputReport> {
     let events = opts.events.max(1);
     let workers = opts.workers.max(1).min(events);
     let agg = Arc::new(Mutex::new(Aggregate::new(workers)));
     let frames = Arc::new(Mutex::new(Vec::new()));
+    let registry = Registry::with_defaults();
     let mut prebuilt: Vec<Box<dyn FunctionNode>> = Vec::with_capacity(workers);
-    // generate the (identical) variate data once; each worker adopts a
-    // fork — shared bytes, private cursor
+    // generate the (identical) variate data once; each worker's shard
+    // sessions adopt forks — shared bytes, private cursors
     let template = SimSession::variate_pool_for(cfg);
     for id in 0..workers {
-        let pipe = SimSession::builder()
-            .config(cfg.clone())
-            .variate_pool(Arc::new(template.fork()))
-            .build()?;
+        let pipe =
+            ShardedSession::with_variate_pool(cfg, ShardExec::Serial, Some(template.as_ref()))?;
         prebuilt.push(Box::new(SimWorker {
             id,
             pipe,
-            depos_per_event: cfg.target_depos,
+            scenario: registry.make_scenario(cfg)?,
             keep_frames: opts.keep_frames,
             agg: agg.clone(),
         }));
@@ -293,5 +296,27 @@ mod tests {
         assert_eq!(report.rate.events, 2);
         assert!(report.frames.is_empty()); // not kept
         assert_ne!(report.digest, 0); // but still digested
+    }
+
+    #[test]
+    fn sharded_stream_accounts_shards() {
+        let mut cfg = small_cfg();
+        cfg.apas = 2;
+        cfg.scenario = "beam-track".into();
+        let report = run_stream(
+            &cfg,
+            &StreamOptions {
+                events: 2,
+                workers: 1,
+                keep_frames: true,
+            },
+        )
+        .unwrap();
+        assert!(report.errors.is_empty(), "{:?}", report.errors);
+        assert_eq!(report.rate.events, 2);
+        assert_eq!(report.workers[0].shards, 4); // 2 events x 2 APAs
+        assert_eq!(report.frames.len(), 2);
+        // gathered event frames carry U,V,W per APA
+        assert!(report.frames.iter().all(|f| f.planes.len() == 6));
     }
 }

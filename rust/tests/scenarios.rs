@@ -1,0 +1,230 @@
+//! Scenario engine integration: the registry catalog, the witness
+//! checks, and the acceptance gate of the APA-sharded execution path —
+//! for every registered scenario, a sharded multi-APA run must produce
+//! a frame digest bit-identical to the unsharded single-session run of
+//! the same scenario, on the serial backend (any strategy) and on the
+//! threaded backend under the fused strategy (the worker-invariant
+//! one; threaded per-depo/batched race the variate pool by design, see
+//! docs/KERNELS.md).
+
+use wirecell::config::{BackendChoice, FluctuationMode, SimConfig, Strategy};
+use wirecell::scenario::{
+    apa_seed, shard_depos, Scenario, ShardExec, ShardedSession, BUILTIN_SCENARIOS,
+};
+use wirecell::session::{Registry, SimSession};
+
+/// Small but non-trivial scenario config: full pipeline with pool
+/// fluctuation so the variate-consumption order is exercised.
+fn scenario_cfg(apas: usize) -> SimConfig {
+    let mut cfg = SimConfig::default();
+    cfg.backend = BackendChoice::Serial;
+    cfg.fluctuation = FluctuationMode::Pool;
+    cfg.noise = true;
+    cfg.target_depos = 400;
+    cfg.pool_size = 1 << 14;
+    cfg.apas = apas;
+    cfg.seed = 20260731;
+    cfg
+}
+
+/// Run one scenario unsharded (serial APA loop) and sharded (pooled),
+/// asserting digest equality and full bit equality of the gathered
+/// event frames.
+fn assert_sharded_parity(mut cfg: SimConfig, key: &str) {
+    cfg.scenario = key.into();
+    let registry = Registry::with_defaults();
+    let scenario = registry.make_scenario(&cfg).unwrap();
+    let mut unsharded = ShardedSession::new(&cfg, ShardExec::Serial).unwrap();
+    let depos = scenario.generate(unsharded.layout(), cfg.seed);
+    scenario
+        .witness()
+        .check(&depos)
+        .unwrap_or_else(|e| panic!("{key} witness: {e}"));
+    let a = unsharded.run_event(cfg.seed, &depos).unwrap();
+    let mut sharded = ShardedSession::new(&cfg, ShardExec::Pooled(2)).unwrap();
+    let b = sharded.run_event(cfg.seed, &depos).unwrap();
+    assert_eq!(
+        a.digest(),
+        b.digest(),
+        "{key}: sharded digest diverged from the unsharded run"
+    );
+    let fa = a.event_frame().unwrap();
+    let fb = b.event_frame().unwrap();
+    assert_eq!(fa.planes.len(), cfg.apas * 3, "{key}: plane count");
+    for (pa, pb) in fa.planes.iter().zip(&fb.planes) {
+        assert_eq!((pa.plane, pa.nchan, pa.nticks), (pb.plane, pb.nchan, pb.nticks));
+        for (x, y) in pa.data.iter().zip(&pb.data) {
+            assert_eq!(x.to_bits(), y.to_bits(), "{key}: sample diverged");
+        }
+    }
+    // re-running the sharded path is stable too
+    let b2 = sharded.run_event(cfg.seed, &depos).unwrap();
+    assert_eq!(b.digest(), b2.digest(), "{key}: sharded rerun unstable");
+}
+
+#[test]
+fn registry_lists_at_least_five_scenarios() {
+    let registry = Registry::with_defaults();
+    let keys: Vec<&str> = registry.scenarios().map(|(k, _)| k).collect();
+    assert!(keys.len() >= 5, "only {} scenarios registered", keys.len());
+    assert_eq!(keys, BUILTIN_SCENARIOS.to_vec());
+    // the `wire-cell scenarios` body carries every key with its
+    // physics rationale
+    let text = registry.scenario_table().render();
+    for (key, entry) in registry.scenarios() {
+        assert!(text.contains(key), "{key} missing from scenario table");
+        assert!(!entry.physics.is_empty(), "{key} has no physics rationale");
+    }
+}
+
+#[test]
+fn every_scenario_sharded_matches_unsharded_serial_backend() {
+    for key in BUILTIN_SCENARIOS {
+        assert_sharded_parity(scenario_cfg(2), key);
+    }
+}
+
+#[test]
+fn every_scenario_sharded_matches_unsharded_threaded_fused() {
+    for key in BUILTIN_SCENARIOS {
+        let mut cfg = scenario_cfg(2);
+        cfg.backend = BackendChoice::Threaded(2);
+        cfg.strategy = Strategy::Fused;
+        assert_sharded_parity(cfg, key);
+    }
+}
+
+#[test]
+fn three_apa_rows_shard_too() {
+    let mut cfg = scenario_cfg(3);
+    cfg.target_depos = 600;
+    assert_sharded_parity(cfg, "beam-track");
+}
+
+#[test]
+fn single_apa_sharded_run_matches_plain_session() {
+    // apa_seed(e, 0) == e: the sharded path degenerates exactly to a
+    // plain session on one APA, for the default scenario
+    let cfg = scenario_cfg(1);
+    let registry = Registry::with_defaults();
+    let scenario = registry.make_scenario(&cfg).unwrap();
+    let mut sharded = ShardedSession::new(&cfg, ShardExec::Serial).unwrap();
+    let depos = scenario.generate(sharded.layout(), cfg.seed);
+    let report = sharded.run_event(cfg.seed, &depos).unwrap();
+    let mut plain = SimSession::new(cfg.clone()).unwrap();
+    let plain_frame = plain.run(&depos).unwrap().frame.unwrap();
+    let sharded_frame = report.event_frame().unwrap();
+    assert_eq!(sharded_frame.planes.len(), plain_frame.planes.len());
+    for (pa, pb) in sharded_frame.planes.iter().zip(&plain_frame.planes) {
+        for (x, y) in pa.data.iter().zip(&pb.data) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+    }
+}
+
+#[test]
+fn scenario_generation_is_seed_pure() {
+    let cfg = scenario_cfg(2);
+    let registry = Registry::with_defaults();
+    for key in BUILTIN_SCENARIOS {
+        let mut c = cfg.clone();
+        c.scenario = key.to_string();
+        let scn = registry.make_scenario(&c).unwrap();
+        let layout = wirecell::geometry::ApaLayout::for_detector(
+            &c.detector().unwrap(),
+            c.apas,
+        );
+        let a = scn.generate(&layout, 1234);
+        let b = scn.generate(&layout, 1234);
+        assert_eq!(a.len(), b.len(), "{key}");
+        assert!(
+            a.iter().zip(&b).all(|(x, y)| x == y),
+            "{key}: generation is not seed-pure"
+        );
+    }
+}
+
+#[test]
+fn hotspot_imbalance_lands_on_one_shard() {
+    let mut cfg = scenario_cfg(4);
+    cfg.scenario = "hotspot".into();
+    cfg.target_depos = 300;
+    let registry = Registry::with_defaults();
+    let scenario = registry.make_scenario(&cfg).unwrap();
+    let mut session = ShardedSession::new(&cfg, ShardExec::Pooled(4)).unwrap();
+    let depos = scenario.generate(session.layout(), cfg.seed);
+    let shards = shard_depos(&depos, session.layout());
+    assert_eq!(shards[0].len(), depos.len(), "hotspot leaked across APAs");
+    // the pooled executor absorbs the imbalance and still gathers a
+    // full event
+    let report = session.run_event(cfg.seed, &depos).unwrap();
+    assert_eq!(report.shards[0].depos, depos.len());
+    assert!(report.shards[1..].iter().all(|s| s.depos == 0));
+    assert!(report.event_frame().is_some());
+}
+
+#[test]
+fn apa_seeds_are_distinct_yet_anchored() {
+    assert_eq!(apa_seed(99, 0), 99);
+    let seeds: Vec<u64> = (0..16).map(|k| apa_seed(99, k)).collect();
+    let mut dedup = seeds.clone();
+    dedup.sort_unstable();
+    dedup.dedup();
+    assert_eq!(dedup.len(), seeds.len(), "APA seed collision: {seeds:?}");
+}
+
+#[test]
+fn config_and_cli_carry_scenario_knobs() {
+    // the JSON config path
+    let cfg = SimConfig::from_json(r#"{"scenario": "pileup-mix", "apas": 2}"#).unwrap();
+    assert_eq!(cfg.scenario, "pileup-mix");
+    assert_eq!(cfg.apas, 2);
+    // the CLI path (--scenario / --apas, as documented in SCENARIOS.md)
+    let args: Vec<String> = ["simulate", "--scenario", "noise-only", "--apas", "2"]
+        .iter()
+        .map(|s| s.to_string())
+        .collect();
+    let cli = wirecell::cli::Cli::parse(&args).unwrap();
+    let cfg = cli.sim_config().unwrap();
+    assert_eq!(cfg.scenario, "noise-only");
+    assert_eq!(cfg.apas, 2);
+    // unknown scenario names fail at registry resolution with the
+    // known-key list
+    let mut bad = cfg;
+    bad.scenario = "quiet-sun".into();
+    let err = Registry::with_defaults()
+        .make_scenario(&bad)
+        .map(|_| ())
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("unknown scenario") && err.contains("cosmic-shower"), "{err}");
+}
+
+#[test]
+fn throughput_stream_is_worker_invariant_with_sharding() {
+    // the engine's core determinism guarantee must survive APA
+    // sharding: same stream, different worker counts, same digest
+    let mut cfg = scenario_cfg(2);
+    cfg.scenario = "beam-track".into();
+    cfg.target_depos = 300;
+    cfg.noise = false;
+    let run = |workers| {
+        wirecell::throughput::run_stream(
+            &cfg,
+            &wirecell::throughput::StreamOptions {
+                events: 4,
+                workers,
+                keep_frames: false,
+            },
+        )
+        .unwrap()
+    };
+    let r1 = run(1);
+    let r3 = run(3);
+    assert!(r1.errors.is_empty(), "{:?}", r1.errors);
+    assert!(r3.errors.is_empty(), "{:?}", r3.errors);
+    assert_eq!(r1.digest, r3.digest);
+    // per-shard worker accounting: 4 events x 2 APAs = 8 shards total
+    assert_eq!(r1.workers.iter().map(|w| w.shards).sum::<u64>(), 8);
+    assert_eq!(r3.workers.iter().map(|w| w.shards).sum::<u64>(), 8);
+}

@@ -1,0 +1,106 @@
+#!/usr/bin/env python3
+"""Markdown link-and-anchor check for the docs gate in ci.sh.
+
+Checks every ``[text](target)`` link in the given markdown files:
+
+* relative file targets must exist (resolved against the linking
+  file's directory);
+* ``file#anchor`` and ``#anchor`` targets must name a heading that
+  GitHub's anchor slugification would produce in the target file;
+* absolute URLs (http/https/mailto) are skipped — this is an offline
+  gate, not a crawler.
+
+Exit status is non-zero if any link is broken, with one line per
+problem, so new docs (SCENARIOS.md included) cannot rot silently.
+"""
+
+import re
+import sys
+from pathlib import Path
+
+LINK_RE = re.compile(r"(?<!\!)\[(?:[^\]]*)\]\(([^)\s]+)(?:\s+\"[^\"]*\")?\)")
+HEADING_RE = re.compile(r"^\s{0,3}(#{1,6})\s+(.*?)\s*#*\s*$")
+FENCE_RE = re.compile(r"^\s*(```|~~~)")
+EXTERNAL = ("http://", "https://", "mailto:", "ftp://")
+
+
+def github_slug(heading: str) -> str:
+    """GitHub's heading-to-anchor slugification (close enough for ASCII docs)."""
+    # strip inline code/emphasis markers and links, keep their text
+    text = re.sub(r"\[([^\]]*)\]\([^)]*\)", r"\1", heading)
+    text = text.replace("`", "").replace("*", "").replace("_", " ")
+    text = text.strip().lower()
+    # drop everything that is not alphanumeric, space or hyphen
+    text = re.sub(r"[^\w\- ]", "", text, flags=re.UNICODE)
+    return text.replace(" ", "-")
+
+
+def anchors_of(path: Path) -> set:
+    anchors = set()
+    counts = {}
+    in_fence = False
+    for line in path.read_text(encoding="utf-8").splitlines():
+        if FENCE_RE.match(line):
+            in_fence = not in_fence
+            continue
+        if in_fence:
+            continue
+        m = HEADING_RE.match(line)
+        if not m:
+            continue
+        slug = github_slug(m.group(2))
+        n = counts.get(slug, 0)
+        counts[slug] = n + 1
+        anchors.add(slug if n == 0 else f"{slug}-{n}")
+    return anchors
+
+
+def links_of(path: Path):
+    in_fence = False
+    for lineno, line in enumerate(path.read_text(encoding="utf-8").splitlines(), 1):
+        if FENCE_RE.match(line):
+            in_fence = not in_fence
+            continue
+        if in_fence:
+            continue
+        for m in LINK_RE.finditer(line):
+            yield lineno, m.group(1)
+
+
+def main(argv):
+    if len(argv) < 2:
+        print("usage: check_markdown.py FILE.md [FILE.md ...]", file=sys.stderr)
+        return 2
+    problems = []
+    checked = 0
+    for name in argv[1:]:
+        md = Path(name)
+        if not md.is_file():
+            problems.append(f"{md}: file not found")
+            continue
+        for lineno, target in links_of(md):
+            if target.startswith(EXTERNAL):
+                continue
+            checked += 1
+            fragment = None
+            base = target
+            if "#" in target:
+                base, fragment = target.split("#", 1)
+            dest = md if not base else (md.parent / base)
+            if not dest.exists():
+                problems.append(f"{md}:{lineno}: broken link '{target}' (no {dest})")
+                continue
+            if fragment is not None and dest.suffix == ".md":
+                if fragment not in anchors_of(dest):
+                    problems.append(
+                        f"{md}:{lineno}: broken anchor '{target}' "
+                        f"(no heading '#{fragment}' in {dest})"
+                    )
+    for p in problems:
+        print(p, file=sys.stderr)
+    print(f"check_markdown: {checked} relative links checked, {len(problems)} broken")
+    return 1 if problems else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))
