@@ -1,0 +1,51 @@
+//! Shared counting-allocator witness for the spectral zero-allocation
+//! gates.  `benches/spectral.rs` and `rust/tests/spectral.rs` both
+//! include this file (the test via `#[path]`), so the counting rules
+//! cannot drift between the bench gate and the test witness; only the
+//! `#[global_allocator]` static must live in each binary.
+//!
+//! Counts are **per thread** (const-initialized TLS, no destructor, so
+//! the counter itself never allocates): a witness measured on the
+//! calling thread with a serial exec cannot be polluted by concurrent
+//! test threads.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::cell::Cell;
+
+thread_local! {
+    static ALLOC_COUNT: Cell<u64> = const { Cell::new(0) };
+}
+
+/// System-delegating allocator that counts every allocation entry
+/// point (`alloc` / `alloc_zeroed` / `realloc`) on the calling thread.
+pub struct CountingAlloc;
+
+impl CountingAlloc {
+    fn bump() {
+        // try_with: never touch TLS during thread teardown
+        let _ = ALLOC_COUNT.try_with(|c| c.set(c.get() + 1));
+    }
+}
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        Self::bump();
+        System.alloc(layout)
+    }
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        Self::bump();
+        System.realloc(ptr, layout, new_size)
+    }
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        Self::bump();
+        System.alloc_zeroed(layout)
+    }
+}
+
+/// Allocations recorded on the calling thread so far.
+pub fn allocs_on_this_thread() -> u64 {
+    ALLOC_COUNT.with(|c| c.get())
+}

@@ -1,0 +1,63 @@
+//! The noise generator exactly as it existed before the spectral
+//! engine: a fresh Hermitian spectrum `Vec` per channel, a fresh FFT
+//! plan per channel (`Plan::new` inside the inverse — the pre-engine
+//! cost model), waveforms `extend`ed into the frame.
+//!
+//! Single source shared by `benches/spectral.rs` (as the timing
+//! baseline) and `rust/tests/spectral.rs` via `#[path]` (as the
+//! byte-parity witness), so the two cannot drift apart: the bench's
+//! "legacy" row and the test's parity guarantee always describe the
+//! same pre-refactor path.  `Plan::new` builds deterministically, so
+//! its arithmetic is bit-identical to the cached-plan inverse — which
+//! is precisely the parity claim.
+
+use wirecell::fft::{Complex, Plan};
+use wirecell::noise::NoiseSpectrum;
+use wirecell::rng::{normal, Pcg32};
+
+/// Pre-refactor per-channel noise generator (see module docs).
+pub struct LegacyNoiseGenerator {
+    spectrum: NoiseSpectrum,
+    rng: Pcg32,
+}
+
+impl LegacyNoiseGenerator {
+    /// New generator with a seed.
+    pub fn new(spectrum: NoiseSpectrum, seed: u64) -> Self {
+        Self {
+            spectrum,
+            rng: Pcg32::seeded(seed),
+        }
+    }
+
+    /// One channel waveform — the legacy draw loop and a per-channel
+    /// un-cached inverse plan.
+    pub fn waveform(&mut self) -> Vec<f64> {
+        let n = self.spectrum.nticks;
+        let mut spec = vec![Complex::ZERO; n];
+        let half = n / 2;
+        for k in 1..half {
+            let a = self.spectrum.amplitude(k) * (n as f64).sqrt() / std::f64::consts::SQRT_2;
+            let re = normal(&mut self.rng, 0.0, 1.0) * a;
+            let im = normal(&mut self.rng, 0.0, 1.0) * a;
+            spec[k] = Complex::new(re, im);
+            spec[n - k] = spec[k].conj();
+        }
+        if n % 2 == 0 && half > 0 {
+            let a = self.spectrum.amplitude(half) * (n as f64).sqrt();
+            spec[half] = Complex::real(normal(&mut self.rng, 0.0, 1.0) * a);
+        }
+        Plan::new(n).inverse(&mut spec);
+        spec.into_iter().map(|c| c.re).collect()
+    }
+
+    /// Row-major (nchan × nticks) frame — the legacy `extend` pattern.
+    pub fn frame(&mut self, nchan: usize) -> Vec<f64> {
+        let n = self.spectrum.nticks;
+        let mut out = Vec::with_capacity(nchan * n);
+        for _ in 0..nchan {
+            out.extend(self.waveform());
+        }
+        out
+    }
+}

@@ -1,6 +1,14 @@
-//! Shared bench plumbing: environment-scaled workload sizes and table
-//! emission.  criterion is not in the vendored registry, so each bench
-//! target is a `harness = false` binary over `wirecell::harness`.
+//! Shared bench plumbing: environment-scaled workload sizes, table
+//! emission, and the counting-allocator witness.  criterion is not in
+//! the vendored registry, so each bench target is a `harness = false`
+//! binary over `wirecell::harness`.
+
+// Used by the spectral bench (and rust/tests/spectral.rs via #[path]);
+// other bench binaries compile them unused.
+#[allow(dead_code)]
+pub mod counting_alloc;
+#[allow(dead_code)]
+pub mod legacy_noise;
 
 use std::io::Write;
 

@@ -34,8 +34,10 @@ else
 fi
 
 # Bench-rot gate: every bench target must still compile (the benches
-# carry the paper-shape assertions, so letting them rot silently would
-# hollow out the reproduction — see docs/BENCHMARKS.md).
+# carry the paper-shape assertions — incl. the fused ≥2x gate in
+# `strategy` and the spectral-engine ≥1.5x + zero-alloc gates in
+# `spectral` — so letting them rot silently would hollow out the
+# reproduction; see docs/BENCHMARKS.md).
 run cargo bench --no-run
 
 # Formatting gate: same availability probe + escape hatch as clippy.

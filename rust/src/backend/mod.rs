@@ -35,6 +35,7 @@ pub use serial::SerialBackend;
 pub use threaded::ThreadedBackend;
 
 use crate::kernel::FusedOutput;
+use crate::parallel::ExecPolicy;
 use crate::raster::{DepoView, GridSpec, Patch};
 use crate::scatter::PlaneGrid;
 use anyhow::Result;
@@ -125,6 +126,17 @@ pub trait ExecBackend: Send {
             bins: out.patches.iter().map(|p| p.size()).sum(),
             timings: out.timings,
         })
+    }
+
+    /// Host dispatch policy the spectral engine (the FT stage's 2-D
+    /// row/column passes, batched noise synthesis) should use on this
+    /// backend — the backend owns the "how parallel is the host" fact,
+    /// so the session stages ask it instead of re-deriving from config.
+    /// Serial by default; the threaded backend reports its pool width.
+    /// The spectral passes are bit-identical for every policy, so this
+    /// is purely a throughput knob.
+    fn spectral_policy(&self) -> ExecPolicy {
+        ExecPolicy::Serial
     }
 }
 

@@ -90,6 +90,13 @@ impl ExecBackend for SerialBackend {
         Ok(RasterOutput { patches, timings })
     }
 
+    /// The reference rows are strictly single-threaded — spectral work
+    /// (FT, noise) stays on the calling thread too, keeping the
+    /// ref-CPU timings honest.
+    fn spectral_policy(&self) -> crate::parallel::ExecPolicy {
+        crate::parallel::ExecPolicy::Serial
+    }
+
     /// The fused SoA kernel, single-threaded.  Uses the same RNG state
     /// (inline generator or variate-pool cursor) as
     /// [`rasterize`](ExecBackend::rasterize), so the produced grid is

@@ -74,6 +74,13 @@ impl ExecBackend for ThreadedBackend {
         }
     }
 
+    /// The FT and noise stages dispatch their spectral passes over this
+    /// backend's pool width (bit-identical to serial — rows, columns
+    /// and noise channels are independent work units).
+    fn spectral_policy(&self) -> ExecPolicy {
+        ExecPolicy::Threads(self.nthreads)
+    }
+
     /// The fused SoA kernel over the host pool: deterministic
     /// value-fill (pool variates indexed by flat bin offset) plus
     /// striped scatter — bit-identical output for any thread count,
@@ -361,6 +368,21 @@ mod tests {
             digests.windows(2).all(|w| w[0] == w[1]),
             "thread count changed the fused grid: {digests:?}"
         );
+    }
+
+    #[test]
+    fn spectral_policy_reports_pool_width() {
+        assert_eq!(
+            backend(Strategy::Batched, 4).spectral_policy(),
+            ExecPolicy::Threads(4)
+        );
+        let serial = crate::backend::SerialBackend::new(
+            RasterParams::default(),
+            crate::config::FluctuationMode::None,
+            1,
+            None,
+        );
+        assert_eq!(serial.spectral_policy(), ExecPolicy::Serial);
     }
 
     #[test]

@@ -12,6 +12,7 @@ use crate::backend::ExecBackend;
 use crate::dataflow::{FunctionNode, Payload, SinkNode, SourceNode};
 use crate::depo::Depo;
 use crate::drift::Drifter;
+use crate::fft::{SpectralExec, SpectralScratch};
 use crate::geometry::{Detector, PlaneId};
 use crate::raster::{DepoView, GridSpec};
 use crate::response::ResponseSpectrum;
@@ -158,15 +159,22 @@ impl FunctionNode for ScatterNode {
     }
 }
 
-/// FT node: Eq. 2 response application.
+/// FT node: Eq. 2 response application through the planned
+/// half-spectrum engine.  The node keeps a warm [`SpectralScratch`], so
+/// per-event transform work allocates nothing — only the outgoing
+/// signal payload is a fresh buffer.
 pub struct FtNode {
     spectrum: Arc<ResponseSpectrum>,
+    scratch: SpectralScratch,
 }
 
 impl FtNode {
     /// FT with a pre-assembled response spectrum.
     pub fn new(spectrum: Arc<ResponseSpectrum>) -> Self {
-        Self { spectrum }
+        Self {
+            spectrum,
+            scratch: SpectralScratch::new(),
+        }
     }
 }
 
@@ -177,7 +185,9 @@ impl FunctionNode for FtNode {
     fn call(&mut self, input: Payload) -> Vec<Payload> {
         match input {
             Payload::Grid(plane, grid) => {
-                let m = self.spectrum.apply(&grid);
+                let mut m = Vec::new();
+                self.spectrum
+                    .apply_into(&grid, &mut m, &mut self.scratch, SpectralExec::serial());
                 vec![Payload::Signal(plane, m)]
             }
             other => vec![other],

@@ -9,20 +9,37 @@
 //! * iterative radix-2 Cooley–Tukey for power-of-two sizes,
 //! * Bluestein's algorithm for arbitrary sizes (so detector geometries
 //!   with non-power-of-two channel counts still work),
-//! * cached [`Plan`]s (twiddles, bit-reversal tables, Bluestein chirps),
+//! * [`Plan`]s (twiddles, bit-reversal tables, Bluestein chirps) cached
+//!   per length in a shared [`Planner`] — nothing in the hot paths ever
+//!   re-plans,
+//! * Hermitian real transforms ([`RealPlan`]: R2C to an `n/2+1`
+//!   half-spectrum, C2R back) and the half-spectrum 2-D engine
+//!   ([`Fft2dReal`]) behind the FT stage, with caller-owned
+//!   [`SpectralScratch`] workspaces for zero-allocation steady state
+//!   and [`SpectralExec`]-dispatched (serial or threaded, bit-identical
+//!   either way) row/column passes,
 //! * 1-D / 2-D forward and inverse transforms over [`Complex`] buffers,
 //! * real-input convenience wrappers and linear-convolution helpers.
 //!
-//! Correctness is pinned against a naive O(N²) DFT in the unit tests and
-//! against `jnp.fft` through the artifact round-trip integration test.
+//! Correctness is pinned against a naive O(N²) DFT in the unit tests
+//! (`rust/tests/spectral.rs` adds the half-spectrum oracle and
+//! allocation-witness suites) and against `jnp.fft` through the
+//! artifact round-trip integration test.
 
 mod complex;
 mod plan;
+mod planner;
 mod real;
+mod real_plan;
 
 pub use complex::Complex;
 pub use plan::{Fft2d, Plan};
-pub use real::{convolve_real, cyclic_convolve_real, next_fast_len, rfft, irfft};
+pub use planner::Planner;
+pub use real::{
+    convolve_real, cyclic_convolve_real, next_fast_len, rfft, rfft_half, irfft, Fft2dReal,
+    RealSample, SpectralExec, SpectralScratch,
+};
+pub use real_plan::{RealPlan, RealScratch};
 
 /// Direction of a transform.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -33,14 +50,15 @@ pub enum Direction {
     Inverse,
 }
 
-/// One-shot forward FFT (plans internally; prefer [`Plan`] in loops).
+/// One-shot forward FFT through the shared [`Planner`] cache (hold a
+/// [`Plan`] handle in loops to skip even the cache lookup).
 pub fn fft(data: &mut [Complex]) {
-    Plan::new(data.len()).forward(data);
+    Planner::shared().plan(data.len()).forward(data);
 }
 
-/// One-shot inverse FFT.
+/// One-shot inverse FFT through the shared [`Planner`] cache.
 pub fn ifft(data: &mut [Complex]) {
-    Plan::new(data.len()).inverse(data);
+    Planner::shared().plan(data.len()).inverse(data);
 }
 
 /// Naive O(N²) DFT — the oracle the fast paths are tested against.

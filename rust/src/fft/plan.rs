@@ -1,6 +1,16 @@
 //! FFT plans: cached radix-2 and Bluestein transforms, plus 2-D plans.
+//!
+//! Plans are immutable after construction and are shared via
+//! [`Arc`](std::sync::Arc) through the [`Planner`](super::Planner)
+//! cache.  The `*_scratch` transform variants let hot paths reuse a
+//! caller-owned convolution buffer so Bluestein-length transforms run
+//! allocation-free (the plain `forward`/`inverse` keep the old
+//! behaviour: radix-2 never allocates, Bluestein allocates its
+//! convolution buffer per call).
 
 use super::complex::Complex;
+use super::planner::Planner;
+use std::sync::Arc;
 
 /// A reusable 1-D FFT plan for a fixed length.
 ///
@@ -63,14 +73,27 @@ impl Plan {
 
     /// In-place forward transform. Panics if `data.len() != self.len()`.
     pub fn forward(&self, data: &mut [Complex]) {
-        assert_eq!(data.len(), self.n, "plan length mismatch");
-        self.run(data, false);
+        self.forward_scratch(data, &mut Vec::new());
     }
 
     /// In-place inverse transform (scaled by 1/N).
     pub fn inverse(&self, data: &mut [Complex]) {
+        self.inverse_scratch(data, &mut Vec::new());
+    }
+
+    /// Forward transform reusing `scratch` for the Bluestein
+    /// convolution buffer (untouched on radix-2 lengths) — zero
+    /// allocations once `scratch` has warmed up to capacity.
+    pub fn forward_scratch(&self, data: &mut [Complex], scratch: &mut Vec<Complex>) {
         assert_eq!(data.len(), self.n, "plan length mismatch");
-        self.run(data, true);
+        self.run(data, false, scratch);
+    }
+
+    /// Inverse transform (scaled by 1/N) reusing `scratch` like
+    /// [`forward_scratch`](Self::forward_scratch).
+    pub fn inverse_scratch(&self, data: &mut [Complex], scratch: &mut Vec<Complex>) {
+        assert_eq!(data.len(), self.n, "plan length mismatch");
+        self.run(data, true, scratch);
         let k = 1.0 / self.n as f64;
         for c in data.iter_mut() {
             *c = c.scale(k);
@@ -78,7 +101,7 @@ impl Plan {
     }
 
     /// Unscaled transform core.
-    fn run(&self, data: &mut [Complex], inverse: bool) {
+    fn run(&self, data: &mut [Complex], inverse: bool, scratch: &mut Vec<Complex>) {
         match &self.kind {
             Kind::Trivial => {}
             Kind::Radix2 {
@@ -95,7 +118,7 @@ impl Plan {
                 m,
                 inner,
             } => {
-                bluestein(data, chirp, bhat_fwd, *m, inner, inverse);
+                bluestein(data, chirp, bhat_fwd, *m, inner, inverse, scratch);
             }
         }
     }
@@ -192,45 +215,65 @@ fn bluestein(
     m: usize,
     inner: &Plan,
     inverse: bool,
+    scratch: &mut Vec<Complex>,
 ) {
     let n = data.len();
     // For the inverse direction, conjugate in, conjugate out (1/N scaling
-    // applied by the caller).
-    let mut a = vec![Complex::ZERO; m];
+    // applied by the caller).  The convolution buffer is caller-owned so
+    // repeated transforms through one plan are allocation-free; the tail
+    // beyond n must be re-zeroed because the buffer is reused.
+    scratch.resize(m, Complex::ZERO);
+    let a = &mut scratch[..];
     for k in 0..n {
         let x = if inverse { data[k].conj() } else { data[k] };
         a[k] = x * chirp[k];
     }
-    inner.forward(&mut a);
+    for ai in a[n..].iter_mut() {
+        *ai = Complex::ZERO;
+    }
+    inner.forward(a);
     for (ai, bi) in a.iter_mut().zip(bhat.iter()) {
         *ai = *ai * *bi;
     }
-    inner.inverse(&mut a);
+    inner.inverse(a);
     for k in 0..n {
         let y = a[k] * chirp[k];
         data[k] = if inverse { y.conj() } else { y };
     }
 }
 
-/// A 2-D FFT plan over row-major `rows × cols` data.
+/// A full-complex 2-D FFT plan over row-major `rows × cols` data.
 ///
 /// The signal-simulation "FT" step transforms the (channel × tick) grid;
 /// rows are channels (wire/pitch axis ω_x) and columns ticks (ω_t).
+/// The production FT path is the half-spectrum
+/// [`Fft2dReal`](super::Fft2dReal); this full-complex plan remains as
+/// the general tool and as the `apply_reference` baseline the spectral
+/// bench gates against.  The 1-D plans are `Arc`-shared through a
+/// [`Planner`], so two 2-D plans over the same lengths reuse one set of
+/// twiddle/bit-reversal tables.
+#[derive(Clone)]
 pub struct Fft2d {
     rows: usize,
     cols: usize,
-    row_plan: Plan,
-    col_plan: Plan,
+    row_plan: Arc<Plan>,
+    col_plan: Arc<Plan>,
 }
 
 impl Fft2d {
-    /// Build a 2-D plan.
+    /// Build a 2-D plan with 1-D plans from the process-wide
+    /// [`Planner`] cache.
     pub fn new(rows: usize, cols: usize) -> Self {
+        Self::with_planner(rows, cols, &Planner::shared())
+    }
+
+    /// Build a 2-D plan sharing 1-D plans through `planner`.
+    pub fn with_planner(rows: usize, cols: usize, planner: &Arc<Planner>) -> Self {
         Self {
             rows,
             cols,
-            row_plan: Plan::new(cols),
-            col_plan: Plan::new(rows),
+            row_plan: planner.plan(cols),
+            col_plan: planner.plan(rows),
         }
     }
 

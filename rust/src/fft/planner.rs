@@ -1,0 +1,161 @@
+//! The plan cache: length-keyed, `Arc`-shared FFT plans.
+//!
+//! Production Wire-Cell leans on FFTW's plan cache — twiddle factors,
+//! bit-reversal tables and Bluestein chirps are computed once per
+//! transform length and reused for the life of the process.  Before
+//! this module existed the repo re-planned constantly: `noise::waveform`
+//! built a fresh [`Plan`] per *channel* (thousands of times per event)
+//! and every [`Deconvolver`](crate::sigproc::Deconvolver) duplicated
+//! the twiddle storage its [`ResponseSpectrum`](crate::response::ResponseSpectrum)
+//! had already built for the same shape.  The [`Planner`] closes that:
+//! one `Mutex<BTreeMap>` per plan family, `Arc` handles out, so every
+//! consumer of a given length shares one immutable plan.
+//!
+//! Lookups happen at construction time (spectrum assembly, generator
+//! creation) — never inside the per-event hot loops, which hold the
+//! `Arc`s they need.  Lock contention is therefore irrelevant, and the
+//! process-wide [`Planner::shared`] instance lets throughput workers on
+//! different threads share one set of tables.
+
+use super::plan::Plan;
+use super::real_plan::RealPlan;
+use std::collections::BTreeMap;
+use std::sync::{Arc, Mutex, OnceLock};
+
+/// Length-keyed cache of complex [`Plan`]s and Hermitian [`RealPlan`]s.
+///
+/// # Examples
+///
+/// ```
+/// use wirecell::fft::{Complex, Planner};
+///
+/// let planner = Planner::shared();
+/// let a = planner.plan(1024);
+/// let b = planner.plan(1024);
+/// // one set of twiddles, shared
+/// assert!(std::sync::Arc::ptr_eq(&a, &b));
+/// let mut buf = vec![Complex::ONE; 1024];
+/// a.forward(&mut buf);
+/// assert!((buf[0].re - 1024.0).abs() < 1e-9);
+/// ```
+#[derive(Default)]
+pub struct Planner {
+    complex: Mutex<BTreeMap<usize, Arc<Plan>>>,
+    real: Mutex<BTreeMap<usize, Arc<RealPlan>>>,
+}
+
+impl Planner {
+    /// A fresh, empty cache.  Prefer [`shared`](Self::shared) unless a
+    /// test needs an isolated cache to count against.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// The process-wide cache behind `fft()`, `rfft()`, session
+    /// pipelines and everything else that does not carry an explicit
+    /// planner.
+    pub fn shared() -> Arc<Planner> {
+        static GLOBAL: OnceLock<Arc<Planner>> = OnceLock::new();
+        GLOBAL.get_or_init(|| Arc::new(Planner::new())).clone()
+    }
+
+    /// The complex plan for length `n`, built on first request.
+    pub fn plan(&self, n: usize) -> Arc<Plan> {
+        let mut map = self.complex.lock().unwrap();
+        map.entry(n).or_insert_with(|| Arc::new(Plan::new(n))).clone()
+    }
+
+    /// The Hermitian real plan for length `n`, built on first request.
+    /// Its inner complex plan (the packed half-length transform, or the
+    /// full-length fallback for odd `n`) comes from [`plan`](Self::plan)
+    /// on this same cache, so real and complex consumers of one length
+    /// family share twiddle storage.
+    pub fn real_plan(&self, n: usize) -> Arc<RealPlan> {
+        {
+            let map = self.real.lock().unwrap();
+            if let Some(p) = map.get(&n) {
+                return p.clone();
+            }
+        }
+        // Build outside the `real` lock: `RealPlan::with_planner` takes
+        // the `complex` lock, and holding both in one scope would pin a
+        // lock order on every caller.
+        let built = Arc::new(RealPlan::with_planner(n, self));
+        let mut map = self.real.lock().unwrap();
+        map.entry(n).or_insert(built).clone()
+    }
+
+    /// Number of cached (complex, real) plans — the scratch-reuse
+    /// witness tests assert this stops growing after warm-up.
+    pub fn cached(&self) -> (usize, usize) {
+        (
+            self.complex.lock().unwrap().len(),
+            self.real.lock().unwrap().len(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fft::Complex;
+
+    #[test]
+    fn plans_are_shared_per_length() {
+        let planner = Planner::new();
+        let a = planner.plan(256);
+        let b = planner.plan(256);
+        assert!(Arc::ptr_eq(&a, &b));
+        let c = planner.plan(512);
+        assert!(!Arc::ptr_eq(&a, &c));
+        assert_eq!(planner.cached(), (2, 0));
+    }
+
+    #[test]
+    fn real_plans_cache_and_reuse_complex_inner() {
+        let planner = Planner::new();
+        let r = planner.real_plan(64); // even: inner complex plan is len 32
+        assert!(Arc::ptr_eq(&r, &planner.real_plan(64)));
+        let (complex, real) = planner.cached();
+        assert_eq!(real, 1);
+        assert_eq!(complex, 1); // the packed inner plan landed in the cache
+        assert!(Arc::ptr_eq(&planner.plan(32), &planner.real_plan(64).inner_plan()));
+    }
+
+    #[test]
+    fn cache_stops_growing_after_warmup() {
+        let planner = Planner::new();
+        for _ in 0..3 {
+            planner.plan(100);
+            planner.real_plan(100);
+            planner.real_plan(101);
+        }
+        // complex: 100 (direct), 50 (even-split inner), 101 (odd real
+        // fallback); real: 100 and 101
+        assert_eq!(planner.cached(), (3, 2));
+    }
+
+    #[test]
+    fn shared_planner_is_a_singleton() {
+        let a = Planner::shared();
+        let b = Planner::shared();
+        assert!(Arc::ptr_eq(&a, &b));
+    }
+
+    #[test]
+    fn cached_plan_transforms_match_fresh_plan_bitwise() {
+        let input: Vec<Complex> = (0..40).map(|i| Complex::new(i as f64, -0.5 * i as f64)).collect();
+        let mut a = input.clone();
+        Planner::shared().plan(40).forward(&mut a);
+        let mut b = input.clone();
+        Plan::new(40).forward(&mut b);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.re.to_bits(), y.re.to_bits());
+            assert_eq!(x.im.to_bits(), y.im.to_bits());
+        }
+        Planner::shared().plan(40).inverse(&mut a);
+        for (x, y) in a.iter().zip(&input) {
+            assert!((x.re - y.re).abs() < 1e-12 && (x.im - y.im).abs() < 1e-12);
+        }
+    }
+}

@@ -1,10 +1,34 @@
-//! Real-input conveniences and convolution helpers built on the complex
-//! plans.  The detector-response application (Eq. 2) is a cyclic
-//! spectral product; the electronics-shaping and noise paths use linear
-//! convolution with zero padding.
+//! Real-input transforms and convolution helpers, plus the planned
+//! half-spectrum 2-D engine behind the FT stage.
+//!
+//! The detector-response application (Eq. 2) is a cyclic spectral
+//! product over a *real* (channel × tick) grid, so the production path
+//! here is Hermitian end to end:
+//!
+//! * [`Fft2dReal`] — half-spectrum 2-D transforms: R2C along rows to
+//!   `cols/2 + 1` bins, full complex along the (already halved) columns.
+//!   [`Fft2dReal::apply_filter_into`] runs the whole Eq. 2 round trip —
+//!   forward, spectral multiply, inverse — with the multiply *fused
+//!   into the column pass* (each column is gathered once, transformed
+//!   forward, filtered, transformed back, and scattered once), into
+//!   caller-owned buffers with zero steady-state allocations.
+//! * [`SpectralScratch`] — the caller-owned workspace (half-spectrum
+//!   buffer + per-worker lanes) that makes the above allocation-free.
+//! * [`SpectralExec`] — serial-or-threaded dispatch for the row/column
+//!   loops.  Rows and columns are independent, so the result is
+//!   bit-identical for every thread count (same invariance story as the
+//!   fused raster kernel, `docs/KERNELS.md`).
+//! * the 1-D conveniences ([`rfft`], [`irfft`], [`cyclic_convolve_real`],
+//!   [`convolve_real`]) — all routed through the process-wide
+//!   [`Planner`] cache instead of planning per call.
 
 use super::complex::Complex;
 use super::plan::Plan;
+use super::planner::Planner;
+use super::real_plan::{RealPlan, RealScratch};
+use crate::parallel::{parallel_for, ExecPolicy, SendPtr, ThreadPool};
+use std::ops::Range;
+use std::sync::{Arc, Mutex};
 
 /// Smallest transform length >= `n` that the fast path handles well
 /// (next power of two; Bluestein internally pads to one anyway, so for
@@ -13,75 +37,370 @@ pub fn next_fast_len(n: usize) -> usize {
     n.next_power_of_two()
 }
 
+/// Samples the spectral engine accepts as real input rows (`f32` plane
+/// grids, `f64` waveforms).
+pub trait RealSample: Copy + Send + Sync {
+    /// Widen to `f64` for the transform.
+    fn to_f64(self) -> f64;
+}
+
+impl RealSample for f64 {
+    #[inline]
+    fn to_f64(self) -> f64 {
+        self
+    }
+}
+
+impl RealSample for f32 {
+    #[inline]
+    fn to_f64(self) -> f64 {
+        self as f64
+    }
+}
+
 /// Forward FFT of a real sequence; returns the full complex spectrum
-/// (length n). Callers needing the half-spectrum can slice `0..n/2+1`
-/// and rely on Hermitian symmetry.
+/// (length n).  Callers needing the half-spectrum should prefer
+/// [`rfft_half`] (half the work) or a cached [`RealPlan`] in loops.
 pub fn rfft(input: &[f64]) -> Vec<Complex> {
     let mut buf: Vec<Complex> = input.iter().map(|&x| Complex::real(x)).collect();
-    Plan::new(buf.len()).forward(&mut buf);
+    Planner::shared().plan(buf.len()).forward(&mut buf);
     buf
 }
 
+/// Forward R2C of a real sequence to its `n/2 + 1` half-spectrum,
+/// through the shared plan cache.
+pub fn rfft_half(input: &[f64]) -> Vec<Complex> {
+    Planner::shared().real_plan(input.len()).forward(input)
+}
+
 /// Inverse FFT returning only the real parts (the caller asserts the
-/// spectrum is Hermitian; imaginary residue is discarded).
+/// spectrum is Hermitian; imaginary residue is discarded).  Plans come
+/// from the shared cache — the old per-call `Plan::new` recomputed
+/// twiddles and bit-reversal tables on every invocation.
 pub fn irfft(spectrum: &[Complex]) -> Vec<f64> {
     let mut buf = spectrum.to_vec();
-    Plan::new(buf.len()).inverse(&mut buf);
+    Planner::shared().plan(buf.len()).inverse(&mut buf);
     buf.into_iter().map(|c| c.re).collect()
 }
 
 /// Cyclic (circular) convolution of two equal-length real sequences via
-/// the spectral product — the exact operation of the paper's "FT" stage
-/// along each axis.
+/// the half-spectrum product — the exact operation of the paper's "FT"
+/// stage along each axis.
 pub fn cyclic_convolve_real(a: &[f64], b: &[f64]) -> Vec<f64> {
     assert_eq!(a.len(), b.len(), "cyclic convolution needs equal lengths");
     let n = a.len();
     if n == 0 {
         return Vec::new();
     }
-    let plan = Plan::new(n);
-    let mut fa: Vec<Complex> = a.iter().map(|&x| Complex::real(x)).collect();
-    let mut fb: Vec<Complex> = b.iter().map(|&x| Complex::real(x)).collect();
-    plan.forward(&mut fa);
-    plan.forward(&mut fb);
+    let plan = Planner::shared().real_plan(n);
+    let mut ws = RealScratch::new();
+    let mut fa = vec![Complex::ZERO; plan.spectrum_len()];
+    let mut fb = vec![Complex::ZERO; plan.spectrum_len()];
+    plan.forward_into(a, &mut fa, &mut ws);
+    plan.forward_into(b, &mut fb, &mut ws);
     for (x, y) in fa.iter_mut().zip(fb.iter()) {
         *x = *x * *y;
     }
-    plan.inverse(&mut fa);
-    fa.into_iter().map(|c| c.re).collect()
+    let mut out = vec![0.0; n];
+    plan.inverse_into(&fa, &mut out, &mut ws);
+    out
 }
 
 /// Linear convolution of real sequences (output length a+b-1) by zero-
-/// padding to a fast length.  Used to build the composite detector
-/// response (field ⊗ electronics) and for oracle checks.
+/// padding to a fast (even, power-of-two) length — the half-spectrum
+/// product then runs on the cheap even-split path.  Used to build the
+/// composite detector response (field ⊗ electronics) and for oracle
+/// checks.
 pub fn convolve_real(a: &[f64], b: &[f64]) -> Vec<f64> {
     if a.is_empty() || b.is_empty() {
         return Vec::new();
     }
     let out_len = a.len() + b.len() - 1;
     let m = next_fast_len(out_len);
-    let plan = Plan::new(m);
-    let mut fa = vec![Complex::ZERO; m];
-    let mut fb = vec![Complex::ZERO; m];
-    for (dst, &src) in fa.iter_mut().zip(a.iter()) {
-        *dst = Complex::real(src);
-    }
-    for (dst, &src) in fb.iter_mut().zip(b.iter()) {
-        *dst = Complex::real(src);
-    }
-    plan.forward(&mut fa);
-    plan.forward(&mut fb);
+    let plan = Planner::shared().real_plan(m);
+    let mut ws = RealScratch::new();
+    let mut pa = vec![0.0; m];
+    let mut pb = vec![0.0; m];
+    pa[..a.len()].copy_from_slice(a);
+    pb[..b.len()].copy_from_slice(b);
+    let mut fa = vec![Complex::ZERO; plan.spectrum_len()];
+    let mut fb = vec![Complex::ZERO; plan.spectrum_len()];
+    plan.forward_into(&pa, &mut fa, &mut ws);
+    plan.forward_into(&pb, &mut fb, &mut ws);
     for (x, y) in fa.iter_mut().zip(fb.iter()) {
         *x = *x * *y;
     }
-    plan.inverse(&mut fa);
-    fa.truncate(out_len);
-    fa.into_iter().map(|c| c.re).collect()
+    plan.inverse_into(&fa, &mut pa, &mut ws);
+    pa.truncate(out_len);
+    pa
+}
+
+/// Host dispatch for the spectral engine's row/column loops: a thread
+/// pool plus an [`ExecPolicy`].  Backends advertise theirs through
+/// [`ExecBackend::spectral_policy`](crate::backend::ExecBackend::spectral_policy);
+/// a missing pool or a serial policy both mean "run on the calling
+/// thread".  The produced bits are identical either way — threading
+/// only reassigns whole rows/columns.
+#[derive(Clone, Copy)]
+pub struct SpectralExec<'a> {
+    pool: Option<&'a ThreadPool>,
+    policy: ExecPolicy,
+}
+
+impl<'a> SpectralExec<'a> {
+    /// Run on the calling thread.
+    pub fn serial() -> SpectralExec<'static> {
+        SpectralExec {
+            pool: None,
+            policy: ExecPolicy::Serial,
+        }
+    }
+
+    /// Dispatch over `pool` with `policy` (serial policies and zero
+    /// thread counts degrade to the calling thread).
+    pub fn new(pool: &'a ThreadPool, policy: ExecPolicy) -> Self {
+        Self {
+            pool: Some(pool),
+            policy,
+        }
+    }
+
+    /// Worker count this exec will actually use.
+    pub fn concurrency(&self) -> usize {
+        match (self.pool, self.policy) {
+            (Some(_), ExecPolicy::Threads(n)) => n.max(1),
+            _ => 1,
+        }
+    }
+
+    /// Run `body` over disjoint chunk ranges of `0..n`, passing each
+    /// chunk's stable lane index (`range.start / grain`, always `<`
+    /// [`concurrency`](Self::concurrency)).  Serial execs call the body
+    /// once with lane 0 on the calling thread.  Lane indices let
+    /// callers hand each chunk a pre-allocated scratch lane, which is
+    /// how the spectral passes stay allocation-free when threaded.
+    pub fn run_chunks(&self, n: usize, body: impl Fn(usize, Range<usize>) + Sync) {
+        if n == 0 {
+            return;
+        }
+        let conc = self.concurrency();
+        if conc <= 1 {
+            body(0, 0..n);
+            return;
+        }
+        let grain = n.div_ceil(conc);
+        let pool = self.pool.expect("concurrency > 1 implies a pool");
+        parallel_for(pool, ExecPolicy::Threads(conc), n, grain, |range| {
+            body(range.start / grain, range)
+        });
+    }
+}
+
+/// Per-worker lane of a [`SpectralScratch`]: one real row buffer, one
+/// column buffer, and the transform scratches.
+#[derive(Default)]
+struct Lane {
+    row: Vec<f64>,
+    col: Vec<Complex>,
+    real: RealScratch,
+    conv: Vec<Complex>,
+}
+
+/// Caller-owned workspace for [`Fft2dReal`]: the half-spectrum buffer
+/// plus one lane per worker.  Buffers grow to their steady-state sizes
+/// on first use and are then reused, so a warmed scratch makes
+/// [`Fft2dReal::apply_filter_into`]'s transform work allocation-free —
+/// the property the spectral witness tests assert with a counting
+/// allocator on the serial path (threaded dispatch adds only the
+/// thread pool's per-dispatch bookkeeping).
+#[derive(Default)]
+pub struct SpectralScratch {
+    spec: Vec<Complex>,
+    lanes: Vec<Mutex<Lane>>,
+}
+
+impl SpectralScratch {
+    /// A fresh, empty workspace (buffers grow on first use).
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    fn prepare(&mut self, spec_len: usize, lanes: usize) {
+        self.spec.resize(spec_len, Complex::ZERO);
+        while self.lanes.len() < lanes {
+            self.lanes.push(Mutex::new(Lane::default()));
+        }
+    }
+}
+
+/// A half-spectrum 2-D transform plan over row-major `rows × cols`
+/// *real* data: R2C along rows (ticks), full complex along columns
+/// (channels).  Spectra are row-major `rows × (cols/2 + 1)`.
+///
+/// Plans are `Arc`-shared through a [`Planner`], so every consumer of a
+/// given shape — response spectra, deconvolvers — reuses one set of
+/// twiddle tables; the plan itself is cheap to clone.
+#[derive(Clone)]
+pub struct Fft2dReal {
+    rows: usize,
+    cols: usize,
+    hc: usize,
+    row_plan: Arc<RealPlan>,
+    col_plan: Arc<Plan>,
+}
+
+impl Fft2dReal {
+    /// Build a plan with 1-D plans from the process-wide cache.
+    pub fn new(rows: usize, cols: usize) -> Self {
+        Self::with_planner(rows, cols, &Planner::shared())
+    }
+
+    /// Build a plan sharing 1-D plans through `planner`.
+    pub fn with_planner(rows: usize, cols: usize, planner: &Arc<Planner>) -> Self {
+        let row_plan = planner.real_plan(cols);
+        Self {
+            rows,
+            cols,
+            hc: row_plan.spectrum_len(),
+            row_plan,
+            col_plan: planner.plan(rows),
+        }
+    }
+
+    /// Grid shape (rows, cols).
+    pub fn shape(&self) -> (usize, usize) {
+        (self.rows, self.cols)
+    }
+
+    /// Half-spectrum row length: `cols/2 + 1`.
+    pub fn half_cols(&self) -> usize {
+        self.hc
+    }
+
+    /// Forward half-spectrum transform of a real grid (serial,
+    /// allocating — assembly-time use; the per-event path is
+    /// [`apply_filter_into`](Self::apply_filter_into)).
+    pub fn forward(&self, input: &[f64]) -> Vec<Complex> {
+        assert_eq!(input.len(), self.rows * self.cols, "grid shape mismatch");
+        let mut spec = vec![Complex::ZERO; self.rows * self.hc];
+        let mut ws = RealScratch::new();
+        for r in 0..self.rows {
+            self.row_plan.forward_into(
+                &input[r * self.cols..(r + 1) * self.cols],
+                &mut spec[r * self.hc..(r + 1) * self.hc],
+                &mut ws,
+            );
+        }
+        let mut col = vec![Complex::ZERO; self.rows];
+        let mut conv = Vec::new();
+        for c in 0..self.hc {
+            for r in 0..self.rows {
+                col[r] = spec[r * self.hc + c];
+            }
+            self.col_plan.forward_scratch(&mut col, &mut conv);
+            for r in 0..self.rows {
+                spec[r * self.hc + c] = col[r];
+            }
+        }
+        spec
+    }
+
+    /// The full Eq. 2 round trip — forward transform, spectral product
+    /// with `filter` (row-major `rows × (cols/2+1)`), inverse transform
+    /// — writing the real result into `out`.
+    ///
+    /// The spectral multiply is fused into the column pass: each column
+    /// is gathered once, transformed forward, multiplied, transformed
+    /// back and scattered once, so the half-spectrum grid is traversed
+    /// one time fewer than the separate multiply pass the full-complex
+    /// path needed.  With a warmed `scratch` the spectral engine itself
+    /// performs zero heap allocations — serial execs are fully
+    /// allocation-free (the counting-allocator witnesses assert this);
+    /// threaded execs additionally pay the parallel substrate's small
+    /// per-dispatch bookkeeping, the same cost every pool dispatch in
+    /// the crate pays.  Output is bit-identical for every `exec` (rows
+    /// and columns are independent work units).
+    pub fn apply_filter_into<T: RealSample>(
+        &self,
+        input: &[T],
+        filter: &[Complex],
+        out: &mut Vec<f64>,
+        scratch: &mut SpectralScratch,
+        exec: SpectralExec<'_>,
+    ) {
+        assert_eq!(input.len(), self.rows * self.cols, "grid shape mismatch");
+        assert_eq!(filter.len(), self.rows * self.hc, "filter shape mismatch");
+        out.resize(self.rows * self.cols, 0.0);
+        if self.rows == 0 || self.cols == 0 {
+            return;
+        }
+        let (rows, cols, hc) = (self.rows, self.cols, self.hc);
+        scratch.prepare(rows * hc, exec.concurrency());
+        let SpectralScratch { spec, lanes } = scratch;
+        let spec_ptr = SendPtr(spec.as_mut_ptr());
+        let lanes: &[Mutex<Lane>] = lanes;
+
+        // Pass 1 — R2C each row into the half-spectrum buffer.
+        exec.run_chunks(rows, |li, range| {
+            let mut lane = lanes[li].lock().unwrap();
+            let lane = &mut *lane;
+            lane.row.resize(cols, 0.0);
+            for r in range {
+                for (dst, src) in lane.row.iter_mut().zip(&input[r * cols..(r + 1) * cols]) {
+                    *dst = src.to_f64();
+                }
+                // rows are disjoint slices of the shared spectrum buffer
+                let spec_row =
+                    unsafe { std::slice::from_raw_parts_mut(spec_ptr.get().add(r * hc), hc) };
+                self.row_plan.forward_into(&lane.row, spec_row, &mut lane.real);
+            }
+        });
+
+        // Pass 2 — per half-spectrum column: forward, multiply by the
+        // filter, inverse.  One gather + one scatter per column.
+        // Columns are strided, so no disjoint sub-slice exists per
+        // worker; gather/scatter go through raw per-element pointer
+        // accesses (never materializing overlapping `&mut` slices —
+        // workers touch disjoint elements, so there is no data race).
+        exec.run_chunks(hc, |li, range| {
+            let mut lane = lanes[li].lock().unwrap();
+            let lane = &mut *lane;
+            lane.col.resize(rows, Complex::ZERO);
+            for c in range {
+                for (r, col) in lane.col.iter_mut().enumerate() {
+                    *col = unsafe { *spec_ptr.get().add(r * hc + c) };
+                }
+                self.col_plan.forward_scratch(&mut lane.col, &mut lane.conv);
+                for (r, col) in lane.col.iter_mut().enumerate() {
+                    *col = *col * filter[r * hc + c];
+                }
+                self.col_plan.inverse_scratch(&mut lane.col, &mut lane.conv);
+                for (r, col) in lane.col.iter().enumerate() {
+                    unsafe { *spec_ptr.get().add(r * hc + c) = *col };
+                }
+            }
+        });
+
+        // Pass 3 — C2R each row into the real output.
+        let out_ptr = SendPtr(out.as_mut_ptr());
+        exec.run_chunks(rows, |li, range| {
+            let mut lane = lanes[li].lock().unwrap();
+            let lane = &mut *lane;
+            for r in range {
+                let spec_row =
+                    unsafe { std::slice::from_raw_parts(spec_ptr.get().add(r * hc), hc) };
+                let out_row =
+                    unsafe { std::slice::from_raw_parts_mut(out_ptr.get().add(r * cols), cols) };
+                self.row_plan.inverse_into(spec_row, out_row, &mut lane.real);
+            }
+        });
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::fft::Fft2d;
 
     fn naive_linear(a: &[f64], b: &[f64]) -> Vec<f64> {
         let mut out = vec![0.0; a.len() + b.len() - 1];
@@ -129,6 +448,22 @@ mod tests {
             let a = spec[k];
             let b = spec[32 - k].conj();
             assert!((a.re - b.re).abs() < 1e-9 && (a.im - b.im).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn rfft_half_matches_full_prefix() {
+        for n in [24usize, 33, 64] {
+            let input: Vec<f64> = (0..n).map(|i| (i as f64 * 0.21).cos()).collect();
+            let full = rfft(&input);
+            let half = rfft_half(&input);
+            assert_eq!(half.len(), n / 2 + 1);
+            for (k, h) in half.iter().enumerate() {
+                assert!(
+                    (h.re - full[k].re).abs() < 1e-9 && (h.im - full[k].im).abs() < 1e-9,
+                    "n={n} bin {k}"
+                );
+            }
         }
     }
 
@@ -186,5 +521,108 @@ mod tests {
     fn empty_inputs() {
         assert!(convolve_real(&[], &[1.0]).is_empty());
         assert!(cyclic_convolve_real(&[], &[]).is_empty());
+    }
+
+    #[test]
+    fn fft2d_real_forward_matches_full_complex() {
+        for (r, c) in [(4usize, 6usize), (5, 9), (8, 8), (6, 10)] {
+            let input: Vec<f64> = (0..r * c).map(|i| ((i * 13) % 7) as f64 - 3.0).collect();
+            let half = Fft2dReal::new(r, c).forward(&input);
+            let mut full: Vec<Complex> = input.iter().map(|&v| Complex::real(v)).collect();
+            Fft2d::new(r, c).forward(&mut full);
+            let hc = c / 2 + 1;
+            for row in 0..r {
+                for k in 0..hc {
+                    let a = half[row * hc + k];
+                    let b = full[row * c + k];
+                    assert!(
+                        (a.re - b.re).abs() < 1e-9 && (a.im - b.im).abs() < 1e-9,
+                        "({r}x{c}) row {row} bin {k}: {a:?} vs {b:?}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn apply_filter_matches_full_complex_roundtrip() {
+        let (r, c) = (6usize, 10usize);
+        let input: Vec<f64> = (0..r * c).map(|i| (i as f64 * 0.11).sin()).collect();
+        // Hermitian filter: spectrum of a real kernel
+        let kernel: Vec<f64> = (0..r * c).map(|i| if i % 17 == 0 { 1.0 } else { 0.1 }).collect();
+        let plan = Fft2dReal::new(r, c);
+        let filter = plan.forward(&kernel);
+        let mut out = Vec::new();
+        plan.apply_filter_into(
+            &input,
+            &filter,
+            &mut out,
+            &mut SpectralScratch::new(),
+            SpectralExec::serial(),
+        );
+        // reference: full-complex forward, multiply, inverse
+        let mut buf: Vec<Complex> = input.iter().map(|&v| Complex::real(v)).collect();
+        let mut ker: Vec<Complex> = kernel.iter().map(|&v| Complex::real(v)).collect();
+        let full = Fft2d::new(r, c);
+        full.forward(&mut buf);
+        full.forward(&mut ker);
+        for (b, k) in buf.iter_mut().zip(&ker) {
+            *b = *b * *k;
+        }
+        full.inverse(&mut buf);
+        for (i, (a, b)) in out.iter().zip(&buf).enumerate() {
+            assert!((a - b.re).abs() < 1e-9, "bin {i}: {a} vs {}", b.re);
+        }
+    }
+
+    #[test]
+    fn apply_filter_threaded_is_bit_identical() {
+        let (r, c) = (12usize, 30usize); // Bluestein columns, even-split rows
+        let input: Vec<f32> = (0..r * c).map(|i| ((i * 7) % 23) as f32 - 11.0).collect();
+        let kernel: Vec<f64> = (0..r * c).map(|i| ((i * 3) % 5) as f64).collect();
+        let plan = Fft2dReal::new(r, c);
+        let filter = plan.forward(&kernel);
+        let mut serial = Vec::new();
+        plan.apply_filter_into(
+            &input,
+            &filter,
+            &mut serial,
+            &mut SpectralScratch::new(),
+            SpectralExec::serial(),
+        );
+        for threads in [2usize, 4] {
+            let pool = ThreadPool::new(threads);
+            let mut out = Vec::new();
+            plan.apply_filter_into(
+                &input,
+                &filter,
+                &mut out,
+                &mut SpectralScratch::new(),
+                SpectralExec::new(&pool, ExecPolicy::Threads(threads)),
+            );
+            for (i, (a, b)) in out.iter().zip(&serial).enumerate() {
+                assert_eq!(a.to_bits(), b.to_bits(), "threads={threads} bin {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn scratch_reuse_is_bit_stable() {
+        let (r, c) = (5usize, 12usize);
+        let input: Vec<f64> = (0..r * c).map(|i| (i as f64).cos()).collect();
+        let plan = Fft2dReal::new(r, c);
+        let filter = vec![Complex::ONE; r * plan.half_cols()];
+        let mut scratch = SpectralScratch::new();
+        let mut a = Vec::new();
+        let mut b = Vec::new();
+        plan.apply_filter_into(&input, &filter, &mut a, &mut scratch, SpectralExec::serial());
+        plan.apply_filter_into(&input, &filter, &mut b, &mut scratch, SpectralExec::serial());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+        // unit filter round-trips the input
+        for (x, y) in a.iter().zip(&input) {
+            assert!((x - y).abs() < 1e-9);
+        }
     }
 }

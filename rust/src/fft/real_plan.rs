@@ -1,0 +1,360 @@
+//! Hermitian real transforms: R2C forward to an `n/2 + 1` half-spectrum
+//! and the matching C2R inverse.
+//!
+//! A real sequence's DFT is Hermitian — `X[n−k] = conj(X[k])` — so only
+//! the first `n/2 + 1` bins carry information.  The FT stage's input
+//! (the charge grid) and output (voltage waveforms) are real, which
+//! means the full-complex path the repo used to run wasted half its
+//! FLOPs and spectrum memory.  [`RealPlan`] recovers both:
+//!
+//! * **even `n`** — the classic packed split: the `n` reals are viewed
+//!   as `n/2` complex numbers, one half-length complex FFT runs, and an
+//!   O(n) twiddle recombination separates the even/odd sub-spectra.
+//!   ~half the work of the full-length complex transform.
+//! * **odd `n`** — falls back to the full-length complex plan
+//!   internally (the packed split needs an even length) but still
+//!   presents the half-spectrum API, so callers are length-agnostic;
+//!   odd lengths have no Nyquist bin and `spectrum_len() = (n+1)/2`.
+//!
+//! All entry points write into caller-owned buffers and take a
+//! [`RealScratch`] workspace, so steady-state use performs **zero heap
+//! allocations** — the contract the spectral-engine witness tests
+//! assert.  Correctness is pinned against the `dft_naive` oracle at
+//! 1e-9 in `rust/tests/spectral.rs` for power-of-two, even-composite
+//! and odd (Bluestein) lengths.
+
+use super::complex::Complex;
+use super::plan::Plan;
+use super::planner::Planner;
+use std::sync::Arc;
+
+/// Caller-owned workspace for [`RealPlan`] transforms: the packed
+/// complex buffer plus the Bluestein convolution scratch the inner
+/// complex plan may need.  Buffers grow on first use and are then
+/// reused — hand one lane per worker thread to keep hot loops
+/// allocation-free.
+#[derive(Default)]
+pub struct RealScratch {
+    /// Packed (even) or full-length (odd) complex work buffer.
+    pub(crate) pack: Vec<Complex>,
+    /// Bluestein convolution scratch for the inner complex plan.
+    pub(crate) conv: Vec<Complex>,
+}
+
+impl RealScratch {
+    /// A fresh, empty workspace.
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
+enum RKind {
+    /// n == 0 or 1.
+    Trivial,
+    /// Even n = 2m: packed half-length transform + twiddle recombine.
+    EvenSplit {
+        m: usize,
+        inner: Arc<Plan>,
+        /// W^k = e^{−2πik/n} for k in 0..=m.
+        twiddle: Vec<Complex>,
+    },
+    /// Odd n: full-length complex transform, half-spectrum interface.
+    OddFull { inner: Arc<Plan> },
+}
+
+/// A reusable Hermitian real-transform plan for a fixed length.
+///
+/// # Examples
+///
+/// ```
+/// use wirecell::fft::{RealPlan, RealScratch};
+///
+/// let plan = RealPlan::new(8);
+/// let x = [1.0, 2.0, 0.0, -1.0, 0.5, 0.25, -2.0, 1.0];
+/// let mut ws = RealScratch::new();
+/// let mut half = vec![wirecell::fft::Complex::ZERO; plan.spectrum_len()];
+/// plan.forward_into(&x, &mut half, &mut ws);
+/// // DC bin is the plain sum
+/// assert!((half[0].re - x.iter().sum::<f64>()).abs() < 1e-12);
+/// let mut back = [0.0; 8];
+/// plan.inverse_into(&half, &mut back, &mut ws);
+/// for (a, b) in back.iter().zip(&x) {
+///     assert!((a - b).abs() < 1e-12);
+/// }
+/// ```
+pub struct RealPlan {
+    n: usize,
+    kind: RKind,
+}
+
+impl RealPlan {
+    /// Build a plan for length `n` with private inner plans.
+    pub fn new(n: usize) -> Self {
+        Self::with_planner(n, &Planner::new())
+    }
+
+    /// Build a plan whose inner complex plan comes from (and lands in)
+    /// `planner`'s cache, sharing twiddle storage with other users of
+    /// the same length family.
+    pub fn with_planner(n: usize, planner: &Planner) -> Self {
+        let kind = if n <= 1 {
+            RKind::Trivial
+        } else if n % 2 == 0 {
+            let m = n / 2;
+            let twiddle = (0..=m)
+                .map(|k| {
+                    Complex::from_polar(1.0, -2.0 * std::f64::consts::PI * k as f64 / n as f64)
+                })
+                .collect();
+            RKind::EvenSplit {
+                m,
+                inner: planner.plan(m),
+                twiddle,
+            }
+        } else {
+            RKind::OddFull {
+                inner: planner.plan(n),
+            }
+        };
+        Self { n, kind }
+    }
+
+    /// Transform length (number of real samples).
+    pub fn len(&self) -> usize {
+        self.n
+    }
+
+    /// True for the degenerate 0-length plan.
+    pub fn is_empty(&self) -> bool {
+        self.n == 0
+    }
+
+    /// Half-spectrum length: `n/2 + 1` (0 for `n == 0`).  Even lengths
+    /// end in the real Nyquist bin; odd lengths have none.
+    pub fn spectrum_len(&self) -> usize {
+        if self.n == 0 {
+            0
+        } else {
+            self.n / 2 + 1
+        }
+    }
+
+    /// The inner complex plan (half length for even `n`, full length
+    /// for odd) — exposed so plan-sharing tests can assert identity.
+    pub fn inner_plan(&self) -> Arc<Plan> {
+        match &self.kind {
+            RKind::Trivial => Arc::new(Plan::new(self.n)),
+            RKind::EvenSplit { inner, .. } | RKind::OddFull { inner } => inner.clone(),
+        }
+    }
+
+    /// R2C forward: `input` (len `n`) → `spectrum` (len
+    /// [`spectrum_len`](Self::spectrum_len)).  Unscaled, matching the
+    /// complex [`Plan::forward`] convention.
+    pub fn forward_into(&self, input: &[f64], spectrum: &mut [Complex], ws: &mut RealScratch) {
+        assert_eq!(input.len(), self.n, "real plan length mismatch");
+        assert_eq!(spectrum.len(), self.spectrum_len(), "half-spectrum length mismatch");
+        match &self.kind {
+            RKind::Trivial => {
+                if self.n == 1 {
+                    spectrum[0] = Complex::real(input[0]);
+                }
+            }
+            RKind::OddFull { inner } => {
+                ws.pack.resize(self.n, Complex::ZERO);
+                for (p, &x) in ws.pack.iter_mut().zip(input) {
+                    *p = Complex::real(x);
+                }
+                inner.forward_scratch(&mut ws.pack, &mut ws.conv);
+                spectrum.copy_from_slice(&ws.pack[..spectrum.len()]);
+            }
+            RKind::EvenSplit { m, inner, twiddle } => {
+                let m = *m;
+                ws.pack.resize(m, Complex::ZERO);
+                for (j, p) in ws.pack.iter_mut().enumerate() {
+                    *p = Complex::new(input[2 * j], input[2 * j + 1]);
+                }
+                inner.forward_scratch(&mut ws.pack, &mut ws.conv);
+                let z = &ws.pack;
+                // X[k] = E[k] + W^k·O[k], where the even/odd sub-spectra
+                // are separated from the packed transform:
+                //   E[k] = (Z[k] + conj(Z[m−k]))/2
+                //   O[k] = (Z[k] − conj(Z[m−k]))·(−i/2)
+                for (k, out) in spectrum.iter_mut().enumerate() {
+                    let zk = z[k % m]; // Z[m] ≡ Z[0]
+                    let zmk = z[(m - k) % m];
+                    let e = (zk + zmk.conj()).scale(0.5);
+                    let o = (zk - zmk.conj()) * Complex::new(0.0, -0.5);
+                    *out = e + twiddle[k] * o;
+                }
+            }
+        }
+    }
+
+    /// C2R inverse: `spectrum` (half, len [`spectrum_len`](Self::spectrum_len))
+    /// → `output` (len `n`), scaled by 1/n like [`Plan::inverse`].  The
+    /// caller asserts the spectrum is the half view of a Hermitian
+    /// spectrum (in particular real DC and — for even `n` — Nyquist
+    /// bins); imaginary residue is discarded by construction.
+    pub fn inverse_into(&self, spectrum: &[Complex], output: &mut [f64], ws: &mut RealScratch) {
+        assert_eq!(output.len(), self.n, "real plan length mismatch");
+        assert_eq!(spectrum.len(), self.spectrum_len(), "half-spectrum length mismatch");
+        match &self.kind {
+            RKind::Trivial => {
+                if self.n == 1 {
+                    output[0] = spectrum[0].re;
+                }
+            }
+            RKind::OddFull { inner } => {
+                ws.pack.resize(self.n, Complex::ZERO);
+                ws.pack[..spectrum.len()].copy_from_slice(spectrum);
+                for k in 1..spectrum.len() {
+                    ws.pack[self.n - k] = spectrum[k].conj();
+                }
+                inner.inverse_scratch(&mut ws.pack, &mut ws.conv);
+                for (o, p) in output.iter_mut().zip(&ws.pack) {
+                    *o = p.re;
+                }
+            }
+            RKind::EvenSplit { m, inner, twiddle } => {
+                let m = *m;
+                ws.pack.resize(m, Complex::ZERO);
+                // Invert the recombination: E[k] = (X[k] + conj(X[m−k]))/2,
+                // W^k·O[k] = (X[k] − conj(X[m−k]))/2, then repack
+                // Z[k] = E[k] + i·O[k] and run the half-length inverse
+                // (whose 1/m scaling is exactly the 1/n the interleaved
+                // reals need).
+                for (k, p) in ws.pack.iter_mut().enumerate() {
+                    let xk = spectrum[k];
+                    let xmk = spectrum[m - k];
+                    let e = (xk + xmk.conj()).scale(0.5);
+                    let wo = (xk - xmk.conj()).scale(0.5);
+                    let o = wo * twiddle[k].conj();
+                    *p = e + Complex::new(0.0, 1.0) * o;
+                }
+                inner.inverse_scratch(&mut ws.pack, &mut ws.conv);
+                for (j, p) in ws.pack.iter().enumerate() {
+                    output[2 * j] = p.re;
+                    output[2 * j + 1] = p.im;
+                }
+            }
+        }
+    }
+
+    /// Allocating forward convenience (tests, cold paths).
+    pub fn forward(&self, input: &[f64]) -> Vec<Complex> {
+        let mut out = vec![Complex::ZERO; self.spectrum_len()];
+        self.forward_into(input, &mut out, &mut RealScratch::new());
+        out
+    }
+
+    /// Allocating inverse convenience (tests, cold paths).
+    pub fn inverse(&self, spectrum: &[Complex]) -> Vec<f64> {
+        let mut out = vec![0.0; self.n];
+        self.inverse_into(spectrum, &mut out, &mut RealScratch::new());
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fft::{dft_naive, Direction};
+
+    fn ramp(n: usize) -> Vec<f64> {
+        (0..n).map(|i| (i as f64 * 0.37).sin() + 0.1 * i as f64).collect()
+    }
+
+    fn naive_half(input: &[f64]) -> Vec<Complex> {
+        let full: Vec<Complex> = input.iter().map(|&x| Complex::real(x)).collect();
+        let mut spec = dft_naive(&full, Direction::Forward);
+        spec.truncate(input.len() / 2 + 1);
+        spec
+    }
+
+    #[test]
+    fn forward_matches_naive_even_and_odd() {
+        for n in [2usize, 4, 6, 8, 10, 16, 30, 64, 100, 256, 7, 15, 97, 241] {
+            let x = ramp(n);
+            let plan = RealPlan::new(n);
+            let fast = plan.forward(&x);
+            let slow = naive_half(&x);
+            assert_eq!(fast.len(), slow.len());
+            for (i, (a, b)) in fast.iter().zip(&slow).enumerate() {
+                assert!(
+                    (a.re - b.re).abs() < 1e-9 * n as f64 && (a.im - b.im).abs() < 1e-9 * n as f64,
+                    "n={n} bin {i}: {a:?} vs {b:?}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn roundtrip_is_identity() {
+        for n in [1usize, 2, 3, 8, 30, 101, 128, 1000] {
+            let x = ramp(n);
+            let plan = RealPlan::new(n);
+            let back = plan.inverse(&plan.forward(&x));
+            for (a, b) in back.iter().zip(&x) {
+                assert!((a - b).abs() < 1e-9, "n={n}: {a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn even_nyquist_bin_is_real() {
+        for n in [8usize, 12, 64, 1024] {
+            let spec = RealPlan::new(n).forward(&ramp(n));
+            assert_eq!(spec.len(), n / 2 + 1);
+            assert!(spec[0].im.abs() < 1e-9, "DC not real");
+            assert!(spec[n / 2].im.abs() < 1e-9, "Nyquist not real");
+        }
+    }
+
+    #[test]
+    fn odd_lengths_have_no_nyquist() {
+        let plan = RealPlan::new(9);
+        assert_eq!(plan.spectrum_len(), 5);
+        // highest bin is a genuine complex bin, mirrored by conj in the
+        // implicit full spectrum
+        let x = ramp(9);
+        let half = plan.forward(&x);
+        let full: Vec<Complex> = x.iter().map(|&v| Complex::real(v)).collect();
+        let full = dft_naive(&full, Direction::Forward);
+        assert!((full[5].re - half[4].conj().re).abs() < 1e-9);
+        assert!((full[5].im - half[4].conj().im).abs() < 1e-9);
+    }
+
+    #[test]
+    fn scratch_reuse_is_bit_stable() {
+        let plan = RealPlan::new(48);
+        let x = ramp(48);
+        let mut ws = RealScratch::new();
+        let mut a = vec![Complex::ZERO; plan.spectrum_len()];
+        let mut b = vec![Complex::ZERO; plan.spectrum_len()];
+        plan.forward_into(&x, &mut a, &mut ws);
+        plan.forward_into(&x, &mut b, &mut ws); // reused, previously-dirty scratch
+        for (p, q) in a.iter().zip(&b) {
+            assert_eq!(p.re.to_bits(), q.re.to_bits());
+            assert_eq!(p.im.to_bits(), q.im.to_bits());
+        }
+    }
+
+    #[test]
+    fn degenerate_lengths() {
+        let p0 = RealPlan::new(0);
+        assert_eq!(p0.spectrum_len(), 0);
+        assert!(p0.forward(&[]).is_empty());
+        let p1 = RealPlan::new(1);
+        let s = p1.forward(&[3.25]);
+        assert_eq!(s.len(), 1);
+        assert_eq!(s[0].re, 3.25);
+        assert_eq!(p1.inverse(&s)[0], 3.25);
+    }
+
+    #[test]
+    #[should_panic(expected = "length mismatch")]
+    fn wrong_length_panics() {
+        RealPlan::new(8).forward(&[0.0; 4]);
+    }
+}

@@ -70,15 +70,7 @@ pub struct FusedOutput {
     pub timings: StageTimings,
 }
 
-/// Raw-pointer wrapper for provably disjoint parallel writes (each
-/// worker touches only the slice its prefix offsets own).
-pub(crate) struct SendPtr<T>(pub(crate) *mut T);
-
-unsafe impl<T> Send for SendPtr<T> {}
-unsafe impl<T> Sync for SendPtr<T> {}
-
-impl<T> SendPtr<T> {
-    pub(crate) fn get(&self) -> *mut T {
-        self.0
-    }
-}
+// The raw-pointer wrapper for provably disjoint parallel writes (each
+// worker touches only the slice its prefix offsets own) lives in the
+// parallel substrate, shared with the scatter and spectral layers.
+pub(crate) use crate::parallel::SendPtr;

@@ -5,9 +5,27 @@
 //! (white floor + low-frequency excess + shaper roll-off), generate a
 //! Hermitian-symmetric random spectrum per channel, and inverse-FFT —
 //! the same frequency-domain construction as production WCT.
+//!
+//! **Planned synthesis.**  The generator holds one cached C2R plan (the
+//! full-length complex plan, `Arc`-shared through the
+//! [`Planner`](crate::fft::Planner)), a pre-evaluated amplitude table,
+//! and a reused spectrum block — the old path called
+//! `irfft` → `Plan::new` per *channel*, recomputing twiddles and
+//! bit-reversal tables thousands of times per event and allocating
+//! three buffers per waveform.  Synthesis is batched: spectra for a
+//! block of channels are drawn serially (the RNG draw order **is** the
+//! bit-parity contract with the pre-refactor generator, so draws never
+//! race), then the inverse transforms — channel-independent — run
+//! through a [`SpectralExec`], bit-identical for any thread count.
+//! The inverse deliberately uses the full-length complex plan rather
+//! than the half-spectrum fast path: its arithmetic is exactly the
+//! legacy `irfft`, which is what keeps frames byte-identical across the
+//! refactor (asserted by `rust/tests/spectral.rs`).
 
-use crate::fft::{irfft, Complex};
+use crate::fft::{Complex, Plan, Planner, SpectralExec};
+use crate::parallel::SendPtr;
 use crate::rng::{normal, Pcg32};
+use std::sync::{Arc, Mutex};
 
 /// Parametrized noise amplitude spectrum.
 #[derive(Clone, Debug)]
@@ -45,53 +63,201 @@ impl NoiseSpectrum {
     }
 }
 
-/// Per-channel noise generator.
+/// How many channels share one drawn-spectrum block per synthesis
+/// round, per worker of the dispatching exec.
+const BLOCK_CHANNELS_PER_WORKER: usize = 4;
+
+/// Per-channel noise generator with cached plan, amplitude table and
+/// reusable spectrum block.
 pub struct NoiseGenerator {
     spectrum: NoiseSpectrum,
     rng: Pcg32,
+    /// Cached inverse plan for `nticks` (legacy-`irfft` arithmetic).
+    plan: Arc<Plan>,
+    /// Quadrature amplitude per bin `k in 0..n/2`:
+    /// `amplitude(k)·√n/√2` (bin 0 stays zero — no DC noise).
+    amp: Vec<f64>,
+    /// Real Nyquist amplitude `amplitude(n/2)·√n` (even `n` only).
+    amp_nyquist: f64,
+    /// Reused per-block spectrum storage (grows once).
+    block: Vec<Complex>,
+    /// Per-worker Bluestein scratch lanes for the threaded inverse.
+    lanes: Vec<Mutex<Vec<Complex>>>,
 }
 
 impl NoiseGenerator {
-    /// New generator with a seed.
+    /// New generator with a seed, planning through the shared cache.
     pub fn new(spectrum: NoiseSpectrum, seed: u64) -> Self {
+        Self::with_planner(spectrum, seed, &Planner::shared())
+    }
+
+    /// New generator sharing FFT plans through `planner`.
+    pub fn with_planner(spectrum: NoiseSpectrum, seed: u64, planner: &Arc<Planner>) -> Self {
+        let n = spectrum.nticks;
+        let half = n / 2;
+        let root_n = (n as f64).sqrt();
+        let amp: Vec<f64> = (0..half)
+            .map(|k| spectrum.amplitude(k) * root_n / std::f64::consts::SQRT_2)
+            .collect();
+        let amp_nyquist = if n % 2 == 0 && half > 0 {
+            spectrum.amplitude(half) * root_n
+        } else {
+            0.0
+        };
         Self {
-            spectrum,
             rng: Pcg32::seeded(seed),
+            plan: planner.plan(n),
+            amp,
+            amp_nyquist,
+            block: Vec::new(),
+            lanes: Vec::new(),
+            spectrum,
         }
     }
 
-    /// Generate one channel waveform of `nticks` samples.
-    ///
-    /// Construction: for each positive-frequency bin draw a complex
-    /// amplitude A(k)·(g1 + i·g2)/√2 with g ~ N(0,1), mirror to the
-    /// negative frequencies (Hermitian), inverse FFT, take real parts.
-    pub fn waveform(&mut self) -> Vec<f64> {
-        let n = self.spectrum.nticks;
-        let mut spec = vec![Complex::ZERO; n];
+    /// Rewind the generator onto a new seed (the noise stage reuses one
+    /// generator — plan, tables, buffers — across events, swapping only
+    /// the RNG state, which is exactly what a fresh construction did).
+    pub fn reseed(&mut self, seed: u64) {
+        self.rng = Pcg32::seeded(seed);
+    }
+
+    /// Draw one channel's Hermitian spectrum into `spec` (len nticks):
+    /// for each positive-frequency bin a complex amplitude
+    /// A(k)·(g1 + i·g2)/√2 with g ~ N(0,1), mirrored to the negative
+    /// frequencies; real Nyquist bin for even lengths.  This is the
+    /// only RNG-consuming step, so the draw order here fixes the byte
+    /// stream.  (Free-standing over disjoint fields so a block slice of
+    /// `self.block` can be filled while `self.rng` advances.)
+    fn draw_spectrum(
+        rng: &mut Pcg32,
+        amp: &[f64],
+        amp_nyquist: f64,
+        n: usize,
+        spec: &mut [Complex],
+    ) {
         let half = n / 2;
+        spec.fill(Complex::ZERO);
         for k in 1..half {
-            let a = self.spectrum.amplitude(k) * (n as f64).sqrt() / std::f64::consts::SQRT_2;
-            let re = normal(&mut self.rng, 0.0, 1.0) * a;
-            let im = normal(&mut self.rng, 0.0, 1.0) * a;
+            let a = amp[k];
+            let re = normal(rng, 0.0, 1.0) * a;
+            let im = normal(rng, 0.0, 1.0) * a;
             spec[k] = Complex::new(re, im);
             spec[n - k] = spec[k].conj();
         }
         if n % 2 == 0 && half > 0 {
             // Nyquist bin must be real
-            let a = self.spectrum.amplitude(half) * (n as f64).sqrt();
-            spec[half] = Complex::real(normal(&mut self.rng, 0.0, 1.0) * a);
+            spec[half] = Complex::real(normal(rng, 0.0, 1.0) * amp_nyquist);
         }
-        irfft(&spec)
     }
 
-    /// Generate `nchan` waveforms as a row-major (nchan × nticks) block.
-    pub fn frame(&mut self, nchan: usize) -> Vec<f64> {
+    /// Batched synthesis core: draw spectra for blocks of channels
+    /// (serial — RNG order is the contract), inverse-transform each
+    /// channel through the cached plan (dispatched over `exec`, bit-
+    /// identical for any worker count), and hand each finished
+    /// time-domain channel to `write(channel, waveform)` as the real
+    /// parts of the transformed block slice.
+    fn synth(
+        &mut self,
+        nchan: usize,
+        exec: SpectralExec<'_>,
+        write: impl Fn(usize, &[Complex]) + Sync,
+    ) {
         let n = self.spectrum.nticks;
-        let mut out = Vec::with_capacity(nchan * n);
-        for _ in 0..nchan {
-            out.extend(self.waveform());
+        if n == 0 || nchan == 0 {
+            return;
         }
+        let conc = exec.concurrency();
+        let block = (conc * BLOCK_CHANNELS_PER_WORKER).clamp(1, nchan);
+        self.block.resize(block * n, Complex::ZERO);
+        while self.lanes.len() < conc {
+            self.lanes.push(Mutex::new(Vec::new()));
+        }
+        let mut done = 0usize;
+        while done < nchan {
+            let nb = block.min(nchan - done);
+            for b in 0..nb {
+                Self::draw_spectrum(
+                    &mut self.rng,
+                    &self.amp,
+                    self.amp_nyquist,
+                    n,
+                    &mut self.block[b * n..(b + 1) * n],
+                );
+            }
+            let ptr = SendPtr(self.block.as_mut_ptr());
+            let plan = &self.plan;
+            let lanes = &self.lanes;
+            exec.run_chunks(nb, |li, range| {
+                let mut conv = lanes[li].lock().unwrap();
+                for b in range {
+                    // channels are disjoint slices of the block buffer
+                    let chan =
+                        unsafe { std::slice::from_raw_parts_mut(ptr.get().add(b * n), n) };
+                    plan.inverse_scratch(chan, &mut conv);
+                    write(done + b, chan);
+                }
+            });
+            done += nb;
+        }
+    }
+
+    /// Generate one channel waveform of `nticks` samples (allocating
+    /// convenience; streams go through [`frame_into`](Self::frame_into)
+    /// or the session noise stage).
+    pub fn waveform(&mut self) -> Vec<f64> {
+        let mut out = Vec::new();
+        self.frame_into(1, &mut out, SpectralExec::serial());
         out
+    }
+
+    /// Generate `nchan` waveforms into `out` as a row-major
+    /// (nchan × nticks) block — zero heap allocations once the
+    /// generator and `out` have warmed up (serial exec; threaded execs
+    /// add only the pool's per-dispatch bookkeeping).
+    pub fn frame_into(&mut self, nchan: usize, out: &mut Vec<f64>, exec: SpectralExec<'_>) {
+        let n = self.spectrum.nticks;
+        out.resize(nchan * n, 0.0);
+        let optr = SendPtr(out.as_mut_ptr());
+        self.synth(nchan, exec, |chan_idx, chan| {
+            let dst =
+                unsafe { std::slice::from_raw_parts_mut(optr.get().add(chan_idx * n), n) };
+            for (d, c) in dst.iter_mut().zip(chan) {
+                *d = c.re;
+            }
+        });
+    }
+
+    /// Generate `nchan` waveforms as a row-major (nchan × nticks) block
+    /// (allocating convenience over [`frame_into`](Self::frame_into)).
+    pub fn frame(&mut self, nchan: usize) -> Vec<f64> {
+        let mut out = Vec::new();
+        self.frame_into(nchan, &mut out, SpectralExec::serial());
+        out
+    }
+
+    /// Add `nchan` synthesized waveforms, scaled by `gain`, onto a
+    /// row-major (nchan × nticks) `f32` frame block — the session noise
+    /// stage's zero-allocation path.  The per-sample arithmetic
+    /// (`sample += (wave as f32) * gain`) is the legacy stage's, so
+    /// frames stay byte-identical.
+    pub fn add_to_frame(
+        &mut self,
+        frame: &mut [f32],
+        nchan: usize,
+        gain: f32,
+        exec: SpectralExec<'_>,
+    ) {
+        let n = self.spectrum.nticks;
+        assert_eq!(frame.len(), nchan * n, "frame shape mismatch");
+        let fptr = SendPtr(frame.as_mut_ptr());
+        self.synth(nchan, exec, |chan_idx, chan| {
+            let dst =
+                unsafe { std::slice::from_raw_parts_mut(fptr.get().add(chan_idx * n), n) };
+            for (d, c) in dst.iter_mut().zip(chan) {
+                *d += (c.re as f32) * gain;
+            }
+        });
     }
 
     /// Access the spectrum parameters.
@@ -175,10 +341,71 @@ mod tests {
     }
 
     #[test]
+    fn reseed_equals_fresh_construction() {
+        let mut gen = NoiseGenerator::new(NoiseSpectrum::standard(256), 7);
+        let _ = gen.frame(3); // advance + dirty every buffer
+        gen.reseed(7);
+        let again = gen.frame(3);
+        let fresh = NoiseGenerator::new(NoiseSpectrum::standard(256), 7).frame(3);
+        for (a, b) in again.iter().zip(&fresh) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
     fn frame_shape() {
         let mut gen = NoiseGenerator::new(NoiseSpectrum::standard(128), 5);
         let f = gen.frame(10);
         assert_eq!(f.len(), 1280);
+    }
+
+    #[test]
+    fn frame_equals_waveform_sequence() {
+        // one draw stream, two consumption patterns — same bytes
+        let mut a = NoiseGenerator::new(NoiseSpectrum::standard(200), 9);
+        let mut b = NoiseGenerator::new(NoiseSpectrum::standard(200), 9);
+        let f = a.frame(5);
+        for ch in 0..5 {
+            let w = b.waveform();
+            for (x, y) in f[ch * 200..(ch + 1) * 200].iter().zip(&w) {
+                assert_eq!(x.to_bits(), y.to_bits(), "channel {ch}");
+            }
+        }
+    }
+
+    #[test]
+    fn threaded_frame_is_bit_identical() {
+        use crate::parallel::{ExecPolicy, ThreadPool};
+        let nticks = 250; // Bluestein length: exercises the conv lanes
+        let mut serial = NoiseGenerator::new(NoiseSpectrum::standard(nticks), 21);
+        let mut threaded = NoiseGenerator::new(NoiseSpectrum::standard(nticks), 21);
+        let sf = serial.frame(13);
+        let pool = ThreadPool::new(4);
+        let mut tf = Vec::new();
+        threaded.frame_into(13, &mut tf, SpectralExec::new(&pool, ExecPolicy::Threads(4)));
+        for (i, (a, b)) in sf.iter().zip(&tf).enumerate() {
+            assert_eq!(a.to_bits(), b.to_bits(), "sample {i}");
+        }
+    }
+
+    #[test]
+    fn add_to_frame_matches_stage_arithmetic() {
+        let nticks = 128;
+        let mut gen = NoiseGenerator::new(NoiseSpectrum::standard(nticks), 4);
+        let mut frame = vec![0.5f32; 3 * nticks];
+        gen.add_to_frame(&mut frame, 3, 1e-3, SpectralExec::serial());
+        // reference: waveform loop with the legacy stage arithmetic
+        let mut gen2 = NoiseGenerator::new(NoiseSpectrum::standard(nticks), 4);
+        let mut expect = vec![0.5f32; 3 * nticks];
+        for c in 0..3 {
+            let wave = gen2.waveform();
+            for (s, n) in expect[c * nticks..(c + 1) * nticks].iter_mut().zip(wave) {
+                *s += n as f32 * 1e-3;
+            }
+        }
+        for (a, b) in frame.iter().zip(&expect) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
     }
 
     #[test]

@@ -54,6 +54,22 @@ impl ExecPolicy {
     }
 }
 
+/// Raw-pointer handoff for provably disjoint parallel writes: wraps a
+/// `*mut T` so worker closures can reconstruct disjoint slices or
+/// elements of one shared buffer across the `Send + Sync` closure
+/// bound.  Callers guarantee disjointness.  Shared by the scatter,
+/// fused-kernel and spectral layers.
+pub(crate) struct SendPtr<T>(pub(crate) *mut T);
+
+unsafe impl<T> Send for SendPtr<T> {}
+unsafe impl<T> Sync for SendPtr<T> {}
+
+impl<T> SendPtr<T> {
+    pub(crate) fn get(&self) -> *mut T {
+        self.0
+    }
+}
+
 /// Default grain (indices per claimed chunk) when the caller passes 0.
 const DEFAULT_GRAIN: usize = 1024;
 

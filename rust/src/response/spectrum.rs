@@ -3,46 +3,79 @@
 //! Implements Eq. 2 of the paper: `M(ω_t, ω_x) = R(ω_t, ω_x)·S(ω_t, ω_x)`
 //! with `R` assembled once from the composite (field ⊗ electronics)
 //! response and cached, exactly like WCT's pre-calculated response.
+//!
+//! The charge grid is real, so `R(ω)` is stored **half-packed** —
+//! row-major `nwires × (nticks/2 + 1)`, the Hermitian half-spectrum —
+//! and [`apply_into`](ResponseSpectrum::apply_into) runs the planned
+//! [`Fft2dReal`] round trip: R2C rows, fused filter-multiply column
+//! pass, C2R rows.  Roughly half the FLOPs and spectrum memory of the
+//! full-complex path, zero heap allocations once the caller's
+//! [`SpectralScratch`] has warmed, and bit-identical output for any
+//! [`SpectralExec`] thread count.  The old full-complex path survives
+//! as [`apply_reference`](ResponseSpectrum::apply_reference) — the
+//! baseline the spectral bench gates against.
 
 use super::PlaneResponse;
-use crate::fft::{Complex, Fft2d};
+use crate::fft::{Complex, Fft2d, Fft2dReal, Planner, SpectralExec, SpectralScratch};
 use crate::scatter::PlaneGrid;
+use std::sync::{Arc, OnceLock};
 
-/// Pre-computed `R(ω_t, ω_x)` on a (nwires × nticks) grid, plus the
-/// 2-D FFT plan for applying it.
+/// Pre-computed `R(ω_t, ω_x)` on a (nwires × nticks) grid, half-packed,
+/// plus the shared-plan 2-D engine for applying it.
 pub struct ResponseSpectrum {
     rows: usize,
     cols: usize,
-    /// R(ω) row-major.
-    spectrum: Vec<Complex>,
-    plan: Fft2d,
+    hc: usize,
+    /// R(ω) row-major, `rows × hc` (Hermitian half along ω_t).
+    half: Vec<Complex>,
+    plan: Fft2dReal,
+    planner: Arc<Planner>,
+    /// Lazily-mirrored full spectrum + full-complex plan for
+    /// [`apply_reference`](Self::apply_reference) only.
+    reference: OnceLock<(Fft2d, Vec<Complex>)>,
 }
 
 impl ResponseSpectrum {
     /// Assemble the spectrum for a plane response on a grid of
-    /// `nwires × nticks`.  The composite response is embedded with its
-    /// central wire at row 0 (negative offsets wrap to the top rows —
-    /// circular-convolution layout) and its time origin at column 0.
+    /// `nwires × nticks`, planning through the process-wide cache.  The
+    /// composite response is embedded with its central wire at row 0
+    /// (negative offsets wrap to the top rows — circular-convolution
+    /// layout) and its time origin at column 0.
     pub fn assemble(pr: &PlaneResponse, nwires: usize, nticks: usize) -> Self {
+        Self::assemble_with(pr, nwires, nticks, &Planner::shared())
+    }
+
+    /// Assemble sharing FFT plans through `planner` — the session path,
+    /// so every spectrum and deconvolver of one shape reuses one set of
+    /// twiddle tables.
+    pub fn assemble_with(
+        pr: &PlaneResponse,
+        nwires: usize,
+        nticks: usize,
+        planner: &Arc<Planner>,
+    ) -> Self {
         let (rw, rt, data) = pr.composite();
         assert!(rw <= nwires, "response wider than grid");
         assert!(rt <= nticks, "response longer than readout");
         let center = (rw / 2) as i64;
-        let mut grid = vec![Complex::ZERO; nwires * nticks];
+        let mut grid = vec![0.0f64; nwires * nticks];
         for w in 0..rw {
             let off = w as i64 - center;
             let row = off.rem_euclid(nwires as i64) as usize;
             for k in 0..rt {
-                grid[row * nticks + k] = Complex::real(data[w * rt + k]);
+                grid[row * nticks + k] = data[w * rt + k];
             }
         }
-        let plan = Fft2d::new(nwires, nticks);
-        plan.forward(&mut grid);
+        let plan = Fft2dReal::with_planner(nwires, nticks, planner);
+        let half = plan.forward(&grid);
         Self {
             rows: nwires,
             cols: nticks,
-            spectrum: grid,
+            hc: plan.half_cols(),
+            half,
             plan,
+            planner: planner.clone(),
+            reference: OnceLock::new(),
         }
     }
 
@@ -51,26 +84,96 @@ impl ResponseSpectrum {
         (self.rows, self.cols)
     }
 
-    /// Raw spectrum access (for export to the JAX artifact inputs).
-    pub fn spectrum(&self) -> &[Complex] {
-        &self.spectrum
+    /// Half-spectrum row length (`nticks/2 + 1`).
+    pub fn half_cols(&self) -> usize {
+        self.hc
     }
 
-    /// Apply Eq. 2 to a charge grid: FFT → multiply by R(ω) → IFFT.
-    /// Returns the measured waveform grid M(t, x) (voltage units per
-    /// the electronics gain folded into R).
-    pub fn apply(&self, grid: &PlaneGrid) -> Vec<f64> {
+    /// The half-packed spectrum, row-major `nwires × (nticks/2+1)` —
+    /// the layout exported to the device FT artifacts, which have taken
+    /// half-spectrum re/im inputs all along.
+    pub fn half_spectrum(&self) -> &[Complex] {
+        &self.half
+    }
+
+    /// The planner this spectrum's plans live in — deconvolvers share
+    /// it so one (nwires, nticks) shape is planned exactly once.
+    pub fn planner(&self) -> &Arc<Planner> {
+        &self.planner
+    }
+
+    /// The shared 2-D half-spectrum plan (cheap to clone: two `Arc`s).
+    pub fn plan2d(&self) -> &Fft2dReal {
+        &self.plan
+    }
+
+    /// Apply Eq. 2 to a charge grid: R2C FFT → half-spectrum multiply
+    /// (fused into the inverse column pass) → C2R IFFT, into the
+    /// caller's `out` buffer.  Returns the measured waveform grid
+    /// M(t, x) in voltage units (electronics gain folded into R).
+    ///
+    /// Zero heap allocations once `out`/`scratch` have warmed up, and
+    /// bit-identical output for every `exec` — the session response
+    /// stage relies on both.
+    pub fn apply_into(
+        &self,
+        grid: &PlaneGrid,
+        out: &mut Vec<f64>,
+        scratch: &mut SpectralScratch,
+        exec: SpectralExec<'_>,
+    ) {
         assert_eq!(
             (grid.nwires, grid.nticks),
             (self.rows, self.cols),
             "grid/spectrum shape mismatch"
         );
+        self.plan
+            .apply_filter_into(&grid.data, &self.half, out, scratch, exec);
+    }
+
+    /// Allocating serial convenience over
+    /// [`apply_into`](Self::apply_into) (tests, cold paths).
+    pub fn apply(&self, grid: &PlaneGrid) -> Vec<f64> {
+        let mut out = Vec::new();
+        self.apply_into(grid, &mut out, &mut SpectralScratch::new(), SpectralExec::serial());
+        out
+    }
+
+    /// The legacy full-complex path, kept as the benchmark baseline:
+    /// complex copy of the grid (heap), full 2-D FFT, full-spectrum
+    /// multiply pass, full 2-D IFFT, real-part extraction (heap) — the
+    /// exact data path `apply` ran before the spectral engine.  The
+    /// mirrored full spectrum is materialized lazily on first call, so
+    /// production sessions never pay for it.
+    pub fn apply_reference(&self, grid: &PlaneGrid) -> Vec<f64> {
+        assert_eq!(
+            (grid.nwires, grid.nticks),
+            (self.rows, self.cols),
+            "grid/spectrum shape mismatch"
+        );
+        let (plan, full) = self.reference.get_or_init(|| {
+            let mut full = vec![Complex::ZERO; self.rows * self.cols];
+            for r in 0..self.rows {
+                let rm = (self.rows - r) % self.rows;
+                for c in 0..self.cols {
+                    full[r * self.cols + c] = if c < self.hc {
+                        self.half[r * self.hc + c]
+                    } else {
+                        self.half[rm * self.hc + (self.cols - c)].conj()
+                    };
+                }
+            }
+            (
+                Fft2d::with_planner(self.rows, self.cols, &self.planner),
+                full,
+            )
+        });
         let mut buf: Vec<Complex> = grid.data.iter().map(|&v| Complex::real(v as f64)).collect();
-        self.plan.forward(&mut buf);
-        for (b, r) in buf.iter_mut().zip(self.spectrum.iter()) {
+        plan.forward(&mut buf);
+        for (b, r) in buf.iter_mut().zip(full.iter()) {
             *b = *b * *r;
         }
-        self.plan.inverse(&mut buf);
+        plan.inverse(&mut buf);
         buf.into_iter().map(|c| c.re).collect()
     }
 }
@@ -162,6 +265,29 @@ mod tests {
         let total: f64 = m.iter().sum();
         let peak = m.iter().cloned().fold(0.0f64, |a, b| a.max(b.abs()));
         assert!(total.abs() < 1e-3 * peak * nt as f64, "total={total} peak={peak}");
+    }
+
+    #[test]
+    fn half_spectrum_layout_and_shape() {
+        let (spec, nw, nt) = small_spectrum(PlaneId::W);
+        assert_eq!(spec.shape(), (nw, nt));
+        assert_eq!(spec.half_cols(), nt / 2 + 1);
+        assert_eq!(spec.half_spectrum().len(), nw * (nt / 2 + 1));
+        // DC bin of a real response is real
+        assert!(spec.half_spectrum()[0].im.abs() < 1e-9);
+    }
+
+    #[test]
+    fn apply_matches_reference_full_complex() {
+        let (spec, nw, nt) = small_spectrum(PlaneId::W);
+        let mut grid = impulse_grid(nw, nt, 30, 100, 1500.0);
+        grid.data[45 * nt + 400] = 800.0;
+        let fast = spec.apply(&grid);
+        let slow = spec.apply_reference(&grid);
+        let peak = slow.iter().cloned().fold(0.0f64, |a, b| a.max(b.abs()));
+        for (i, (a, b)) in fast.iter().zip(&slow).enumerate() {
+            assert!((a - b).abs() < 1e-9 * (1.0 + peak), "bin {i}: {a} vs {b}");
+        }
     }
 
     #[test]

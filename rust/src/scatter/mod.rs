@@ -14,7 +14,7 @@
 //! All fold the fine (oversampled) patch bins onto the coarse
 //! (wire, tick) grid via [`GridSpec::wire_of`] / [`GridSpec::tick_of`].
 
-use crate::parallel::{as_atomic_f32, parallel_for, ExecPolicy, ThreadPool};
+use crate::parallel::{as_atomic_f32, parallel_for, ExecPolicy, SendPtr, ThreadPool};
 use crate::raster::{GridSpec, Patch};
 
 /// The coarse accumulation grid of one plane: row-major
@@ -175,15 +175,6 @@ pub fn scatter_tiled(
         }
     });
 }
-
-struct SendPtr(*mut f32);
-impl SendPtr {
-    fn get(&self) -> *mut f32 {
-        self.0
-    }
-}
-unsafe impl Send for SendPtr {}
-unsafe impl Sync for SendPtr {}
 
 #[cfg(test)]
 mod tests {

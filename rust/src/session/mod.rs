@@ -72,7 +72,8 @@ use crate::config::{SimConfig, StageSpec};
 use crate::depo::Depo;
 use crate::frame::Frame;
 use crate::geometry::{Detector, PlaneId};
-use crate::parallel::ThreadPool;
+use crate::fft::Planner;
+use crate::parallel::{ExecPolicy, ThreadPool};
 use crate::raster::{DepoView, GridSpec};
 use crate::response::{PlaneResponse, ResponseSpectrum};
 use crate::rng::RandomPool;
@@ -91,6 +92,7 @@ pub struct SessionBuilder {
     stages: Vec<StageSpec>,
     produce_frames: bool,
     variate_pool: Option<Arc<RandomPool>>,
+    planner: Option<Arc<Planner>>,
 }
 
 impl SessionBuilder {
@@ -162,6 +164,14 @@ impl SessionBuilder {
         self
     }
 
+    /// Adopt an FFT plan cache (default: the process-wide
+    /// [`Planner::shared`], so every session and throughput worker
+    /// reuses one set of twiddle tables per transform length).
+    pub fn planner(mut self, planner: Arc<Planner>) -> Self {
+        self.planner = Some(planner);
+        self
+    }
+
     /// Validate the config, open long-lived resources, resolve the
     /// stage topology against the registry, and configure every stage.
     pub fn build(self) -> Result<SimSession> {
@@ -182,6 +192,13 @@ impl SessionBuilder {
         let rng_pool = self
             .variate_pool
             .unwrap_or_else(|| SimSession::variate_pool_for(&cfg));
+        let planner = self.planner.unwrap_or_else(Planner::shared);
+        // The backend's host-parallelism fact for the spectral engine
+        // (FT row/column passes, batched noise): the declarative
+        // `BackendEntry::spectral` lift of `ExecBackend::spectral_policy`,
+        // read from the registry entry resolved above — no throwaway
+        // backend construction.
+        let spectral = (backend_info.spectral)(&cfg);
         let specs: Vec<StageSpec> = if !self.stages.is_empty() {
             self.stages
         } else if !cfg.topology.is_empty() {
@@ -225,6 +242,8 @@ impl SessionBuilder {
             rng_pool,
             runtime,
             registry,
+            planner,
+            spectral,
             stages,
             responses: vec![None, None, None],
             produce_frames: self.produce_frames,
@@ -265,6 +284,11 @@ pub struct SimSession {
     rng_pool: Arc<RandomPool>,
     runtime: Option<Arc<Runtime>>,
     registry: Registry,
+    /// FFT plan cache shared by spectra, deconvolvers and noise.
+    planner: Arc<Planner>,
+    /// Host dispatch policy for spectral passes (backend fact,
+    /// resolved once at build).
+    spectral: ExecPolicy,
     stages: Vec<Box<dyn SimStage>>,
     /// Response spectra per plane, built lazily per grid shape.
     responses: Vec<Option<ResponseSpectrum>>,
@@ -281,6 +305,7 @@ impl SimSession {
             stages: Vec::new(),
             produce_frames: true,
             variate_pool: None,
+            planner: None,
         }
     }
 
@@ -319,6 +344,11 @@ impl SimSession {
     /// The session's pre-computed variate pool.
     pub fn variate_pool(&self) -> &Arc<RandomPool> {
         &self.rng_pool
+    }
+
+    /// The session's FFT plan cache.
+    pub fn planner(&self) -> &Arc<Planner> {
+        &self.planner
     }
 
     /// Stage names in execution order.
@@ -391,6 +421,8 @@ impl SimSession {
             rng_pool,
             runtime,
             registry,
+            planner,
+            spectral,
             stages,
             responses,
             produce_frames,
@@ -404,6 +436,8 @@ impl SimSession {
                 rng_pool: &*rng_pool,
                 runtime: runtime.as_ref(),
                 registry: &*registry,
+                planner: &*planner,
+                spectral: *spectral,
                 responses: &mut *responses,
                 produce_frames: *produce_frames,
             };
@@ -469,15 +503,18 @@ impl SimSession {
         let spec = meta.grid.grid_spec();
         let drifted = self.drift(depos);
         let views = self.plane_views(&drifted, plane);
-        // response spectrum (half-spectrum re/im) on the artifact grid
+        // response spectrum on the artifact grid — stored half-packed,
+        // which is exactly the re/im layout the device FT artifact takes
         let pr = PlaneResponse::standard(plane, self.detector.tick);
-        let full = ResponseSpectrum::assemble(&pr, meta.grid.nwires, meta.grid.nticks);
+        let resp =
+            ResponseSpectrum::assemble_with(&pr, meta.grid.nwires, meta.grid.nticks, &self.planner);
         let half = meta.grid.nticks / 2 + 1;
+        debug_assert_eq!(half, resp.half_cols());
         let mut r_re = vec![0f32; meta.grid.nwires * half];
         let mut r_im = vec![0f32; meta.grid.nwires * half];
         for w in 0..meta.grid.nwires {
             for k in 0..half {
-                let c = full.spectrum()[w * meta.grid.nticks + k];
+                let c = resp.half_spectrum()[w * half + k];
                 r_re[w * half + k] = c.re as f32;
                 r_im[w * half + k] = c.im as f32;
             }

@@ -46,7 +46,7 @@
 use crate::backend::{ExecBackend, PjrtBackend, SerialBackend, ThreadedBackend};
 use crate::config::SimConfig;
 use crate::metrics::Table;
-use crate::parallel::ThreadPool;
+use crate::parallel::{ExecPolicy, ThreadPool};
 use crate::rng::RandomPool;
 use crate::runtime::Runtime;
 use crate::scenario::{
@@ -108,6 +108,14 @@ pub struct BackendEntry {
     /// (serial is; host-threaded and device backends race the variate
     /// pool under the per-depo/batched strategies).
     pub deterministic: bool,
+    /// Host dispatch policy the spectral engine (FT passes, batched
+    /// noise) should use under a given config — the declarative lift
+    /// of [`ExecBackend::spectral_policy`], so sessions read the fact
+    /// at build time without constructing a throwaway backend.  Must
+    /// agree with what the factory's backends report (asserted by the
+    /// registry tests); spectral output is bit-identical for every
+    /// policy, so this is purely a throughput fact.
+    pub spectral: fn(&SimConfig) -> ExecPolicy,
     /// The constructor.
     pub factory: BackendFactory,
 }
@@ -203,6 +211,7 @@ impl Registry {
                 summary: "hand-written serial Rust (the paper's ref-CPU row)".into(),
                 needs_runtime: false,
                 deterministic: true,
+                spectral: |_| ExecPolicy::Serial,
                 factory: Box::new(|cfg, cx| {
                     Ok(Box::new(SerialBackend::new(
                         cfg.raster_params(),
@@ -219,6 +228,7 @@ impl Registry {
                 summary: "portable layer, host-parallel with N pool threads (Kokkos-OMP)".into(),
                 needs_runtime: false,
                 deterministic: false,
+                spectral: |cfg| ExecPolicy::Threads(cfg.backend.threads().max(1)),
                 factory: Box::new(|cfg, cx| {
                     Ok(Box::new(ThreadedBackend::new(
                         cfg.raster_params(),
@@ -237,6 +247,9 @@ impl Registry {
                 summary: "portable layer, AOT XLA device artifacts (Kokkos-CUDA analog)".into(),
                 needs_runtime: true,
                 deterministic: false,
+                // device FT is its own endpoint; host-side spectral
+                // work stays on the calling thread
+                spectral: |_| ExecPolicy::Serial,
                 factory: Box::new(|cfg, cx| {
                     let rt = cx
                         .runtime
@@ -297,12 +310,13 @@ impl Registry {
         );
         reg.register_stage(
             "response",
-            "FT stage (paper Eq. 2): field ⊗ electronics response per plane",
+            "FT stage (paper Eq. 2): planned half-spectrum R2C response product, \
+             threaded row/column passes",
             Box::new(|| Box::new(ResponseStage::new())),
         );
         reg.register_stage(
             "noise",
-            "spectrum-shaped electronics noise",
+            "spectrum-shaped electronics noise, batched through one cached C2R plan",
             Box::new(|| Box::new(NoiseStage::new())),
         );
         reg.register_stage(
@@ -583,6 +597,31 @@ mod tests {
         assert!(!reg.strategy("batched").unwrap().fused_scatter);
         assert!(reg.backend("serial").unwrap().deterministic);
         assert!(reg.backend("pjrt").unwrap().needs_runtime);
+    }
+
+    #[test]
+    fn spectral_entry_fact_matches_backend_trait_answer() {
+        // the declarative BackendEntry::spectral lift must agree with
+        // what a constructed backend reports via spectral_policy()
+        let reg = Registry::with_defaults();
+        let mut cfg = SimConfig::default();
+        cfg.fluctuation = FluctuationMode::None;
+        let cx = BackendCx {
+            seed: cfg.seed,
+            pool: Arc::new(ThreadPool::new(1)),
+            rng_pool: RandomPool::shared(1, 1 << 10),
+            runtime: None,
+        };
+        cfg.backend = BackendChoice::Serial;
+        assert_eq!(
+            (reg.backend("serial").unwrap().spectral)(&cfg),
+            reg.make_backend(&cfg, &cx).unwrap().spectral_policy()
+        );
+        cfg.backend = BackendChoice::Threaded(3);
+        assert_eq!(
+            (reg.backend("threads").unwrap().spectral)(&cfg),
+            reg.make_backend(&cfg, &cx).unwrap().spectral_policy()
+        );
     }
 
     #[test]

@@ -14,10 +14,11 @@
 use crate::backend::StageTimings;
 use crate::config::SimConfig;
 use crate::depo::Depo;
+use crate::fft::Planner;
 use crate::frame::{Frame, PlaneFrame};
 use crate::geometry::{Detector, PlaneId};
 use crate::metrics::StageTimer;
-use crate::parallel::ThreadPool;
+use crate::parallel::{ExecPolicy, ThreadPool};
 use crate::raster::{DepoView, GridSpec, Patch};
 use crate::response::{PlaneResponse, ResponseSpectrum};
 use crate::rng::RandomPool;
@@ -136,6 +137,17 @@ pub struct StageCx<'a> {
     pub runtime: Option<&'a Arc<Runtime>>,
     /// The session's component registry (backend/strategy lookups).
     pub registry: &'a Registry,
+    /// The session's FFT plan cache — spectra, deconvolvers and noise
+    /// generators built through it share twiddle storage per length.
+    pub planner: &'a Arc<Planner>,
+    /// Host dispatch policy for spectral work (FT passes, batched
+    /// noise), resolved once at session build from the configured
+    /// backend's [`ExecBackend::spectral_policy`].  Spectral output is
+    /// bit-identical for every policy, so this is purely a throughput
+    /// fact.
+    ///
+    /// [`ExecBackend::spectral_policy`]: crate::backend::ExecBackend::spectral_policy
+    pub spectral: ExecPolicy,
     /// Lazily-built per-plane response spectra (shared across events).
     pub responses: &'a mut Vec<Option<ResponseSpectrum>>,
     /// Whether the run should produce digitized frames.
@@ -154,20 +166,27 @@ impl StageCx<'_> {
         }
     }
 
-    /// Response spectrum for a plane (built on first use, then cached
-    /// for the session's lifetime).
+    /// Response spectrum for a plane (built on first use through the
+    /// session planner, then cached for the session's lifetime).
     pub fn response(&mut self, plane: PlaneId) -> &ResponseSpectrum {
         let idx = plane as usize;
         if self.responses[idx].is_none() {
             let pr = PlaneResponse::standard(plane, self.detector.tick);
             let p = self.detector.plane(plane);
-            self.responses[idx] = Some(ResponseSpectrum::assemble(
+            self.responses[idx] = Some(ResponseSpectrum::assemble_with(
                 &pr,
                 p.nwires,
                 self.detector.nticks,
+                self.planner,
             ));
         }
         self.responses[idx].as_ref().unwrap()
+    }
+
+    /// The spectral-engine exec for this session: the shared host pool
+    /// driven at the backend's [`spectral`](Self::spectral) policy.
+    pub fn spectral_exec(&self) -> crate::fft::SpectralExec<'_> {
+        crate::fft::SpectralExec::new(self.pool, self.spectral)
     }
 }
 

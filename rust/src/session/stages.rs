@@ -13,6 +13,7 @@ use crate::adc::Digitizer;
 use crate::backend::{ExecBackend, StageTimings};
 use crate::config::SimConfig;
 use crate::drift::Drifter;
+use crate::fft::SpectralScratch;
 use crate::frame::PlaneFrame;
 use crate::geometry::PlaneId;
 use crate::noise::{NoiseGenerator, NoiseSpectrum};
@@ -186,12 +187,21 @@ impl SimStage for ScatterStage {
 }
 
 /// Response stage: the FT stage (paper Eq. 2) — field ⊗ electronics
-/// response applied per plane in the frequency domain.  With
-/// `apply_response = false` it instead copies the raw grid into the
-/// frame (raster-only runs).
+/// response applied per plane in the frequency domain, through the
+/// planned half-spectrum engine: cached `Arc` plans, caller-owned
+/// scratch (zero per-event heap allocations for the transform after
+/// the first event), and row/column passes dispatched on the policy
+/// the session resolved at build from the backend's
+/// `ExecBackend::spectral_policy` — bit-identical for any thread
+/// count.  With `apply_response = false`
+/// it instead copies the raw grid into the frame (raster-only runs).
 #[derive(Default)]
 pub struct ResponseStage {
     apply_response: bool,
+    /// Reused half-spectrum workspace (warm after the first event).
+    scratch: SpectralScratch,
+    /// Reused M(t, x) output buffer.
+    signal: Vec<f64>,
 }
 
 impl ResponseStage {
@@ -199,6 +209,7 @@ impl ResponseStage {
     pub fn new() -> Self {
         Self {
             apply_response: true,
+            ..Self::default()
         }
     }
 }
@@ -218,14 +229,18 @@ impl SimStage for ResponseStage {
             let frame = if self.apply_response {
                 let nchan = cx.detector.plane(pd.plane).nwires;
                 let nticks = cx.detector.nticks;
-                let resp = cx.response(pd.plane);
+                cx.response(pd.plane); // build + cache (ends the &mut borrow)
+                let resp = cx.responses[pd.plane as usize].as_ref().unwrap();
+                let exec = cx.spectral_exec();
                 let grid = &pd.grid;
-                let signal = data.timer.time("ft", || resp.apply(grid));
+                let (scratch, signal) = (&mut self.scratch, &mut self.signal);
+                data.timer
+                    .time("ft", || resp.apply_into(grid, signal, scratch, exec));
                 PlaneFrame {
                     plane: pd.plane,
                     nchan,
                     nticks,
-                    data: signal.iter().map(|&v| (v / VOLT) as f32).collect(),
+                    data: self.signal.iter().map(|&v| (v / VOLT) as f32).collect(),
                 }
             } else {
                 PlaneFrame {
@@ -243,10 +258,21 @@ impl SimStage for ResponseStage {
 
 /// Noise stage: spectrum-shaped electronics noise, seeded per plane
 /// from the current event seed (order-independent across planes).
+///
+/// One persistent [`NoiseGenerator`] per plane survives across events
+/// (cached C2R plan, amplitude table, spectrum block — only the RNG is
+/// reseeded), so synthesis performs zero per-event heap allocations
+/// after the first event; channels batch through the generator with
+/// inverse transforms dispatched on the backend's spectral policy.
+/// Waveforms are byte-identical to the legacy per-event,
+/// per-channel-`irfft` stage: the RNG draw order and the per-sample
+/// arithmetic are unchanged.
 #[derive(Default)]
 pub struct NoiseStage {
     noise: bool,
     apply_response: bool,
+    /// Per-plane generators (U, V, W), built on first use.
+    gens: [Option<NoiseGenerator>; 3],
 }
 
 impl NoiseStage {
@@ -255,6 +281,7 @@ impl NoiseStage {
         Self {
             noise: false,
             apply_response: true,
+            ..Self::default()
         }
     }
 }
@@ -279,20 +306,16 @@ impl SimStage for NoiseStage {
         for pd in data.planes.iter_mut() {
             let plane = pd.plane;
             let Some(pf) = pd.frame.as_mut() else { continue };
+            let gen = self.gens[plane as usize].get_or_insert_with(|| {
+                NoiseGenerator::with_planner(NoiseSpectrum::standard(nticks), 0, cx.planner)
+            });
+            gen.reseed(seed ^ ((plane as u64) << 17));
+            let exec = cx.spectral_exec();
+            let nchan = pf.nchan;
             data.timer.time("noise", || {
-                let mut gen = NoiseGenerator::new(
-                    NoiseSpectrum::standard(nticks),
-                    seed ^ ((plane as u64) << 17),
-                );
-                // noise is parametrized in ADC-equivalent units;
-                // convert through the digitizer scale below
-                for c in 0..pf.nchan {
-                    let wave = gen.waveform();
-                    let row = &mut pf.data[c * pf.nticks..(c + 1) * pf.nticks];
-                    for (s, n) in row.iter_mut().zip(wave) {
-                        *s += n as f32 * 1e-3; // mV-scale noise in volt units
-                    }
-                }
+                // noise is parametrized in ADC-equivalent units; the
+                // 1e-3 gain converts mV-scale noise into volt units
+                gen.add_to_frame(&mut pf.data, nchan, 1e-3, exec);
             });
         }
         Ok(data)

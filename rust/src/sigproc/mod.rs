@@ -4,32 +4,43 @@
 //! the whole simulation (and of refs. [9, 10] it builds on): apply the
 //! inverse of Eq. 2 with a Wiener-style regularizing filter and check
 //! that the recovered charge matches what was simulated.
+//!
+//! The filter is half-packed like the response spectrum it inverts, and
+//! the 2-D plan is **shared** with that spectrum through its
+//! [`Planner`](crate::fft::Planner): before the plan cache existed,
+//! every deconvolver rebuilt (and duplicated in memory) the
+//! twiddle/bit-reversal tables `ResponseSpectrum` had already planned
+//! for the same (nwires, nticks) shape.
 
-use crate::fft::{Complex, Fft2d};
+use crate::fft::{Complex, Fft2dReal, SpectralExec, SpectralScratch};
 use crate::response::ResponseSpectrum;
 
 /// Deconvolver for one plane: S_est(ω) = M(ω)·R*(ω)/(|R(ω)|² + λ).
 pub struct Deconvolver {
     rows: usize,
     cols: usize,
-    /// Pre-computed filter R*(ω)/(|R|²+λ).
+    /// Pre-computed filter R*(ω)/(|R|²+λ), half-packed `rows × hc`.
     filter: Vec<Complex>,
-    plan: Fft2d,
+    /// Plan cloned from the source spectrum — two `Arc`s, no new tables.
+    plan: Fft2dReal,
 }
 
 impl Deconvolver {
     /// Build from a response spectrum with Tikhonov parameter `lambda`
-    /// (relative to the peak |R|²).
+    /// (relative to the peak |R|²).  FFT plans are shared with
+    /// `spectrum` — nothing is re-planned.
     pub fn new(spectrum: &ResponseSpectrum, lambda: f64) -> Self {
         let (rows, cols) = spectrum.shape();
+        // Hermitian symmetry: every full-spectrum magnitude occurs in
+        // the half view, so the peak over the half IS the global peak.
         let peak = spectrum
-            .spectrum()
+            .half_spectrum()
             .iter()
             .map(|c| c.norm_sqr())
             .fold(0.0f64, f64::max);
         let lam = lambda * peak;
         let filter: Vec<Complex> = spectrum
-            .spectrum()
+            .half_spectrum()
             .iter()
             .map(|&r| r.conj().scale(1.0 / (r.norm_sqr() + lam)))
             .collect();
@@ -37,20 +48,34 @@ impl Deconvolver {
             rows,
             cols,
             filter,
-            plan: Fft2d::new(rows, cols),
+            plan: spectrum.plan2d().clone(),
         }
     }
 
-    /// Deconvolve a measured grid back to estimated charge.
-    pub fn apply(&self, measured: &[f64]) -> Vec<f64> {
+    /// Deconvolve a measured grid into the caller's `out` buffer —
+    /// zero allocations once `out`/`scratch` have warmed up.
+    pub fn apply_into(
+        &self,
+        measured: &[f64],
+        out: &mut Vec<f64>,
+        scratch: &mut SpectralScratch,
+        exec: SpectralExec<'_>,
+    ) {
         assert_eq!(measured.len(), self.rows * self.cols, "shape mismatch");
-        let mut buf: Vec<Complex> = measured.iter().map(|&v| Complex::real(v)).collect();
-        self.plan.forward(&mut buf);
-        for (b, f) in buf.iter_mut().zip(self.filter.iter()) {
-            *b = *b * *f;
-        }
-        self.plan.inverse(&mut buf);
-        buf.into_iter().map(|c| c.re).collect()
+        self.plan
+            .apply_filter_into(measured, &self.filter, out, scratch, exec);
+    }
+
+    /// Allocating serial convenience over [`apply_into`](Self::apply_into).
+    pub fn apply(&self, measured: &[f64]) -> Vec<f64> {
+        let mut out = Vec::new();
+        self.apply_into(
+            measured,
+            &mut out,
+            &mut SpectralScratch::new(),
+            SpectralExec::serial(),
+        );
+        out
     }
 }
 
@@ -115,6 +140,18 @@ mod tests {
         let soft = Deconvolver::new(&spec, 1e-6).apply(&measured);
         let hard = Deconvolver::new(&spec, 1e-1).apply(&measured);
         assert!(soft[10 * nt + 50] > hard[10 * nt + 50]);
+    }
+
+    #[test]
+    fn deconvolver_shares_the_spectrum_plans() {
+        // isolated planner so concurrent tests can't touch the counts
+        let planner = std::sync::Arc::new(crate::fft::Planner::new());
+        let pr = PlaneResponse::standard(PlaneId::W, 0.5 * US);
+        let spec = ResponseSpectrum::assemble_with(&pr, 32, 256, &planner);
+        let before = planner.cached();
+        let _dec = Deconvolver::new(&spec, 1e-6);
+        // building the deconvolver planned nothing new
+        assert_eq!(planner.cached(), before);
     }
 
     #[test]

@@ -82,7 +82,14 @@ impl ThroughputReport {
         self.rate.depos_per_sec()
     }
 
-    /// Per-stage aggregate table (total, mean per event, call count).
+    /// Per-stage aggregate table (total, mean per event, call count,
+    /// and each stage's share of the summed stage time).  The share
+    /// column is what the spectral-engine work keys on: it makes the
+    /// FT and noise stage fractions directly readable before/after an
+    /// optimization, the way the paper's Table 2/3 discussion reads
+    /// rasterization fractions.  Dotted keys (`raster.sampling`, ...)
+    /// are sub-splits of their parent stage and are excluded from the
+    /// share denominator so the top-level shares sum to ~100%.
     pub fn stage_table(&self) -> Table {
         let mut t = Table::new(
             &format!(
@@ -91,15 +98,24 @@ impl ThroughputReport {
                 self.workers.len(),
                 self.backend
             ),
-            &["Stage", "Total [s]", "Mean/event [ms]", "Calls"],
+            &["Stage", "Total [s]", "Mean/event [ms]", "Calls", "Share"],
         );
         let events = self.rate.events.max(1) as f64;
+        let denom: f64 = self
+            .stages
+            .stages()
+            .iter()
+            .filter(|(name, _, _)| !name.contains('.'))
+            .map(|(_, secs, _)| *secs)
+            .sum();
         for (stage, secs, calls) in self.stages.stages() {
+            let share = if denom > 0.0 { 100.0 * secs / denom } else { 0.0 };
             t.row(&[
                 stage,
                 format!("{secs:.3}"),
                 format!("{:.3}", secs / events * 1e3),
                 calls.to_string(),
+                format!("{share:.1}%"),
             ]);
         }
         t

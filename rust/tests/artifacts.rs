@@ -208,11 +208,12 @@ fn ft_artifact_matches_rust_fft() {
     let pr = PlaneResponse::standard(PlaneId::W, 500.0);
     let spec = ResponseSpectrum::assemble(&pr, nw, nt);
     let half = nt / 2 + 1;
+    assert_eq!(half, spec.half_cols());
     let mut r_re = vec![0f32; nw * half];
     let mut r_im = vec![0f32; nw * half];
     for w in 0..nw {
         for k in 0..half {
-            let c = spec.spectrum()[w * nt + k];
+            let c = spec.half_spectrum()[w * half + k];
             r_re[w * half + k] = c.re as f32;
             r_im[w * half + k] = c.im as f32;
         }

@@ -1,0 +1,353 @@
+//! Integration witnesses for the planned Hermitian spectral engine
+//! (issue 5 acceptance criteria):
+//!
+//! 1. `RealPlan`/`Fft2dReal` vs the `dft_naive` oracle at 1e-9, on
+//!    power-of-two *and* Bluestein lengths, even (Nyquist) and odd
+//!    (no-Nyquist) alike;
+//! 2. serial-vs-threaded **bitwise** parity of `ResponseSpectrum::apply`
+//!    and of full session frames;
+//! 3. **byte-identical** `NoiseGenerator::frame` output vs a
+//!    shared reimplementation of the pre-refactor generator (fresh
+//!    full spectrum + un-cached full-length inverse per channel,
+//!    benches/common/legacy_noise.rs), same seed;
+//! 4. **zero per-event heap allocations** in `ResponseSpectrum::apply`
+//!    and `NoiseGenerator` synthesis after warm-up, asserted by a
+//!    counting global allocator (per-thread counts, serial exec).
+
+use wirecell::fft::{
+    dft_naive, Complex, Direction, Fft2dReal, RealPlan, SpectralExec, SpectralScratch,
+};
+use wirecell::geometry::PlaneId;
+use wirecell::noise::{NoiseGenerator, NoiseSpectrum};
+use wirecell::parallel::{ExecPolicy, ThreadPool};
+use wirecell::response::{PlaneResponse, ResponseSpectrum};
+use wirecell::rng::{Pcg32, UniformRng};
+use wirecell::scatter::PlaneGrid;
+use wirecell::units::US;
+
+// ---------------------------------------------------------------------
+// Counting allocator witness: shared with benches/spectral.rs (single
+// source in benches/common/counting_alloc.rs); counts are per-thread,
+// so concurrent tests in this binary cannot pollute a measurement
+// taken on one thread with a serial exec.
+// ---------------------------------------------------------------------
+
+#[path = "../../benches/common/counting_alloc.rs"]
+mod counting_alloc;
+use counting_alloc::{allocs_on_this_thread, CountingAlloc};
+
+#[global_allocator]
+static COUNTING_ALLOC: CountingAlloc = CountingAlloc;
+
+// ---------------------------------------------------------------------
+// 1. Oracle checks
+// ---------------------------------------------------------------------
+
+fn signal(n: usize) -> Vec<f64> {
+    (0..n)
+        .map(|i| (i as f64 * 0.211).sin() + 0.35 * (i as f64 * 0.05).cos() + 0.01 * i as f64)
+        .collect()
+}
+
+#[test]
+fn real_plan_forward_matches_dft_naive_at_1e9() {
+    // radix-2, even-composite (Bluestein inner), and odd (Bluestein
+    // full fallback) lengths; detector-shaped sizes included
+    for n in [2usize, 8, 64, 256, 512, 1024, 6, 30, 250, 560, 9, 97, 241, 9595 / 19] {
+        let x = signal(n);
+        let plan = RealPlan::new(n);
+        let half = plan.forward(&x);
+        let full: Vec<Complex> = x.iter().map(|&v| Complex::real(v)).collect();
+        let oracle = dft_naive(&full, Direction::Forward);
+        assert_eq!(half.len(), n / 2 + 1);
+        let scale: f64 = x.iter().map(|v| v.abs()).sum::<f64>().max(1.0);
+        for (k, h) in half.iter().enumerate() {
+            assert!(
+                (h.re - oracle[k].re).abs() < 1e-9 * scale
+                    && (h.im - oracle[k].im).abs() < 1e-9 * scale,
+                "n={n} bin {k}: {h:?} vs {:?}",
+                oracle[k]
+            );
+        }
+    }
+}
+
+#[test]
+fn real_plan_inverse_matches_dft_naive_at_1e9() {
+    for n in [4usize, 16, 250, 512, 21, 97] {
+        // build a Hermitian half-spectrum (real DC, real Nyquist when even)
+        let x = signal(n);
+        let plan = RealPlan::new(n);
+        let half = plan.forward(&x);
+        // oracle inverse of the mirrored full spectrum
+        let mut full = vec![Complex::ZERO; n];
+        full[..half.len()].copy_from_slice(&half);
+        for k in 1..half.len() {
+            if n - k < n && n - k >= half.len() {
+                full[n - k] = half[k].conj();
+            }
+        }
+        let oracle = dft_naive(&full, Direction::Inverse);
+        let fast = plan.inverse(&half);
+        for (k, f) in fast.iter().enumerate() {
+            assert!(
+                (f - oracle[k].re).abs() < 1e-9 * (1.0 + oracle[k].re.abs()),
+                "n={n} sample {k}: {f} vs {}",
+                oracle[k].re
+            );
+        }
+    }
+}
+
+#[test]
+fn nyquist_handling_even_vs_odd() {
+    // even: Nyquist bin present, real, and drives alternating signs
+    let n = 16;
+    let mut half = vec![Complex::ZERO; n / 2 + 1];
+    half[n / 2] = Complex::real(n as f64); // pure Nyquist line
+    let wave = RealPlan::new(n).inverse(&half);
+    for (j, w) in wave.iter().enumerate() {
+        let want = if j % 2 == 0 { 1.0 } else { -1.0 };
+        assert!((w - want).abs() < 1e-12, "sample {j}: {w}");
+    }
+    // odd: spectrum_len has no Nyquist slot, round trips regardless
+    let n = 15;
+    let x = signal(n);
+    let plan = RealPlan::new(n);
+    assert_eq!(plan.spectrum_len(), 8);
+    let back = plan.inverse(&plan.forward(&x));
+    for (a, b) in back.iter().zip(&x) {
+        assert!((a - b).abs() < 1e-10);
+    }
+}
+
+#[test]
+fn fft2d_real_matches_naive_2d_dft() {
+    let (r, c) = (6usize, 10usize);
+    let input = signal(r * c);
+    let half = Fft2dReal::new(r, c).forward(&input);
+    let hc = c / 2 + 1;
+    for kr in 0..r {
+        for kc in 0..hc {
+            let mut acc = Complex::ZERO;
+            for jr in 0..r {
+                for jc in 0..c {
+                    let ang = -2.0
+                        * std::f64::consts::PI
+                        * ((kr * jr) as f64 / r as f64 + (kc * jc) as f64 / c as f64);
+                    acc += Complex::real(input[jr * c + jc]) * Complex::from_polar(1.0, ang);
+                }
+            }
+            let got = half[kr * hc + kc];
+            assert!(
+                (got.re - acc.re).abs() < 1e-9 * (1.0 + acc.abs())
+                    && (got.im - acc.im).abs() < 1e-9 * (1.0 + acc.abs()),
+                "bin ({kr},{kc}): {got:?} vs {acc:?}"
+            );
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// 2. Serial vs threaded bitwise parity
+// ---------------------------------------------------------------------
+
+fn charged_grid(nw: usize, nt: usize, seed: u64) -> PlaneGrid {
+    let mut rng = Pcg32::seeded(seed);
+    let mut grid = PlaneGrid {
+        nwires: nw,
+        nticks: nt,
+        data: vec![0.0; nw * nt],
+    };
+    for _ in 0..200 {
+        let w = (rng.below(nw as u32)) as usize;
+        let t = (rng.below(nt as u32)) as usize;
+        grid.data[w * nt + t] += 500.0 + rng.uniform() as f32 * 4000.0;
+    }
+    grid
+}
+
+#[test]
+fn response_apply_is_bitwise_thread_invariant() {
+    // pow-2 ticks AND a Bluestein-everywhere shape
+    for (nw, nt) in [(64usize, 512usize), (60, 250)] {
+        let pr = PlaneResponse::standard(PlaneId::W, 0.5 * US);
+        let spec = ResponseSpectrum::assemble(&pr, nw, nt);
+        let grid = charged_grid(nw, nt, 17);
+        let mut serial = Vec::new();
+        spec.apply_into(
+            &grid,
+            &mut serial,
+            &mut SpectralScratch::new(),
+            SpectralExec::serial(),
+        );
+        for threads in [1usize, 2, 4, 8] {
+            let pool = ThreadPool::new(threads);
+            let mut out = Vec::new();
+            spec.apply_into(
+                &grid,
+                &mut out,
+                &mut SpectralScratch::new(),
+                SpectralExec::new(&pool, ExecPolicy::Threads(threads)),
+            );
+            assert_eq!(out.len(), serial.len());
+            for (i, (a, b)) in out.iter().zip(&serial).enumerate() {
+                assert_eq!(
+                    a.to_bits(),
+                    b.to_bits(),
+                    "({nw}x{nt}) threads={threads} bin {i}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn session_frames_bitwise_identical_across_ft_thread_counts() {
+    use wirecell::config::{FluctuationMode, SimConfig};
+    use wirecell::depo::{DepoSource, TrackDepoSource};
+    use wirecell::session::SimSession;
+    use wirecell::units::CM;
+
+    let depos = TrackDepoSource::mip(
+        [45.0 * CM, -8.0 * CM, -15.0 * CM],
+        [55.0 * CM, 8.0 * CM, 15.0 * CM],
+        0.0,
+        5,
+    )
+    .generate();
+    let mut digests = Vec::new();
+    for threads in [1usize, 2, 4] {
+        let mut cfg = SimConfig::default();
+        cfg.backend = wirecell::config::BackendChoice::Threaded(threads);
+        cfg.strategy = wirecell::config::Strategy::Fused;
+        cfg.fluctuation = FluctuationMode::Pool;
+        cfg.pool_size = 1 << 16;
+        cfg.noise = true;
+        let mut session = SimSession::new(cfg).unwrap();
+        let report = session.run(&depos).unwrap();
+        let frame = report.frame.expect("frame");
+        digests.push(wirecell::throughput::frame_digest(&frame));
+    }
+    assert!(
+        digests.windows(2).all(|w| w[0] == w[1]),
+        "FT/noise thread count changed frame bits: {digests:?}"
+    );
+}
+
+// ---------------------------------------------------------------------
+// 3. Noise bit-parity with the pre-refactor generator
+// ---------------------------------------------------------------------
+
+// The pre-refactor generator, shared with the bench's timing baseline
+// (single source: benches/common/legacy_noise.rs) — fresh Hermitian
+// spectrum Vec per channel, fresh full-length plan per channel,
+// waveforms `extend`ed into the frame.
+#[path = "../../benches/common/legacy_noise.rs"]
+mod legacy_noise;
+use legacy_noise::LegacyNoiseGenerator;
+
+#[test]
+fn noise_frames_byte_identical_to_pre_refactor_generator() {
+    // even/pow-2, even/Bluestein, and odd (no Nyquist) readout lengths
+    for nticks in [512usize, 250, 255] {
+        for seed in [1u64, 42, 0xF00D] {
+            let want = LegacyNoiseGenerator::new(NoiseSpectrum::standard(nticks), seed).frame(9);
+            let got = NoiseGenerator::new(NoiseSpectrum::standard(nticks), seed).frame(9);
+            assert_eq!(want.len(), got.len());
+            for (i, (a, b)) in got.iter().zip(&want).enumerate() {
+                assert_eq!(
+                    a.to_bits(),
+                    b.to_bits(),
+                    "nticks={nticks} seed={seed} sample {i}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn threaded_noise_frames_match_legacy_too() {
+    let nticks = 512;
+    let want = LegacyNoiseGenerator::new(NoiseSpectrum::standard(nticks), 7).frame(16);
+    let pool = ThreadPool::new(4);
+    let mut gen = NoiseGenerator::new(NoiseSpectrum::standard(nticks), 7);
+    let mut got = Vec::new();
+    gen.frame_into(16, &mut got, SpectralExec::new(&pool, ExecPolicy::Threads(4)));
+    for (i, (a, b)) in got.iter().zip(&want).enumerate() {
+        assert_eq!(a.to_bits(), b.to_bits(), "sample {i}");
+    }
+}
+
+// ---------------------------------------------------------------------
+// 4. Zero-allocation witnesses (serial exec: counts are per-thread)
+// ---------------------------------------------------------------------
+
+#[test]
+fn response_apply_into_is_allocation_free_after_warmup() {
+    // 60x250: Bluestein rows AND columns — the worst case for hidden
+    // scratch allocations
+    for (nw, nt) in [(64usize, 512usize), (60, 250)] {
+        let pr = PlaneResponse::standard(PlaneId::W, 0.5 * US);
+        let spec = ResponseSpectrum::assemble(&pr, nw, nt);
+        let grid = charged_grid(nw, nt, 5);
+        let mut out = Vec::new();
+        let mut scratch = SpectralScratch::new();
+        // warm-up event
+        spec.apply_into(&grid, &mut out, &mut scratch, SpectralExec::serial());
+        let before = allocs_on_this_thread();
+        spec.apply_into(&grid, &mut out, &mut scratch, SpectralExec::serial());
+        let after = allocs_on_this_thread();
+        assert_eq!(
+            after - before,
+            0,
+            "({nw}x{nt}) warm apply_into allocated {} times",
+            after - before
+        );
+    }
+}
+
+#[test]
+fn noise_synthesis_is_allocation_free_after_warmup() {
+    for nticks in [512usize, 250] {
+        let mut gen = NoiseGenerator::new(NoiseSpectrum::standard(nticks), 3);
+        let mut out = Vec::new();
+        gen.frame_into(12, &mut out, SpectralExec::serial()); // warm-up
+        let before = allocs_on_this_thread();
+        gen.frame_into(12, &mut out, SpectralExec::serial());
+        let after = allocs_on_this_thread();
+        assert_eq!(
+            after - before,
+            0,
+            "nticks={nticks} warm frame_into allocated {} times",
+            after - before
+        );
+
+        // the f32-frame session path shares the same machinery
+        let mut frame = vec![0.0f32; 12 * nticks];
+        gen.add_to_frame(&mut frame, 12, 1e-3, SpectralExec::serial());
+        let before = allocs_on_this_thread();
+        gen.add_to_frame(&mut frame, 12, 1e-3, SpectralExec::serial());
+        let after = allocs_on_this_thread();
+        assert_eq!(after - before, 0, "nticks={nticks} warm add_to_frame allocated");
+    }
+}
+
+#[test]
+fn deconvolver_shares_plans_and_runs_clean() {
+    use wirecell::sigproc::Deconvolver;
+    let planner = std::sync::Arc::new(wirecell::fft::Planner::new());
+    let pr = PlaneResponse::standard(PlaneId::W, 0.5 * US);
+    let spec = ResponseSpectrum::assemble_with(&pr, 32, 256, &planner);
+    let cached = planner.cached();
+    let dec = Deconvolver::new(&spec, 1e-6);
+    assert_eq!(planner.cached(), cached, "deconvolver re-planned");
+    let grid = charged_grid(32, 256, 11);
+    let measured = spec.apply(&grid);
+    let mut out = Vec::new();
+    let mut scratch = SpectralScratch::new();
+    dec.apply_into(&measured, &mut out, &mut scratch, SpectralExec::serial()); // warm
+    let before = allocs_on_this_thread();
+    dec.apply_into(&measured, &mut out, &mut scratch, SpectralExec::serial());
+    assert_eq!(allocs_on_this_thread() - before, 0, "warm deconvolve allocated");
+}
