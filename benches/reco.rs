@@ -1,0 +1,93 @@
+//! Reconstruction-chain bench: hits/sec through decon → ROI → hit
+//! finding on a beam-track event, serial backend vs threaded fused.
+//! The simulation stages run too (the reco chain consumes their ADC
+//! frames), but the rate is computed over the reco stage time alone.
+//!
+//! ```sh
+//! cargo bench --bench reco
+//! WCT_BENCH_DEPOS=100000 cargo bench --bench reco
+//! ```
+
+mod common;
+
+use wirecell::config::{BackendChoice, FluctuationMode, SimConfig, StageSpec, Strategy};
+use wirecell::metrics::Table;
+use wirecell::session::{Registry, SimSession};
+
+/// Reco stage-timer keys the rate is computed over.
+const RECO_STAGES: [&str; 3] = ["decon", "roi", "hitfind"];
+
+fn main() -> anyhow::Result<()> {
+    let n = common::depos(20_000);
+    let repeat = common::repeat(3);
+    let threads = std::thread::available_parallelism()
+        .map(|x| x.get())
+        .unwrap_or(4)
+        .min(8);
+
+    let mut cfg = SimConfig::default();
+    cfg.scenario = "beam-track".into();
+    cfg.target_depos = n;
+    cfg.fluctuation = FluctuationMode::Pool;
+    cfg.pool_size = 1 << 20;
+    cfg.noise = true;
+    cfg.topology = [
+        "drift", "raster", "scatter", "response", "noise", "adc", "decon", "roi", "hitfind",
+    ]
+    .iter()
+    .map(|s| StageSpec::named(s))
+    .collect();
+
+    let mut table = Table::new(
+        &format!("reco chain — {n} depos, best of {repeat}"),
+        &["Backend", "Hits", "Reco [s]", "Hits/s", "Wall [s]"],
+    );
+    let backends = [
+        (BackendChoice::Serial, Strategy::Batched),
+        (BackendChoice::Threaded(threads), Strategy::Fused),
+    ];
+    for (backend, strategy) in backends {
+        let mut c = cfg.clone();
+        c.backend = backend;
+        c.strategy = strategy;
+        let registry = Registry::with_defaults();
+        let scenario = registry.make_scenario(&c)?;
+        let mut pipe = SimSession::builder().config(c.clone()).build()?;
+        let layout =
+            wirecell::geometry::ApaLayout::for_detector(pipe.detector(), c.apas);
+        let depos = scenario.generate(&layout, c.seed);
+        let mut baseline_hits: Option<usize> = None;
+        let mut best: Option<(f64, f64, usize, String)> = None;
+        for _ in 0..repeat {
+            let t0 = std::time::Instant::now();
+            let report = pipe.run(&depos)?;
+            let wall = t0.elapsed().as_secs_f64();
+            let reco_s: f64 = report
+                .stages
+                .stages()
+                .into_iter()
+                .filter(|(name, _, _)| RECO_STAGES.contains(&name.as_str()))
+                .map(|(_, secs, _)| secs)
+                .sum();
+            // repeats of the same session must reproduce the hit list
+            match baseline_hits {
+                Some(n) => assert_eq!(n, report.hits.len(), "hit list drifted across repeats"),
+                None => baseline_hits = Some(report.hits.len()),
+            }
+            let row = (reco_s, wall, report.hits.len(), report.label.clone());
+            if best.as_ref().map(|b| wall < b.1).unwrap_or(true) {
+                best = Some(row);
+            }
+        }
+        let (reco_s, wall, nhits, label) = best.unwrap();
+        table.row(&[
+            label,
+            nhits.to_string(),
+            format!("{reco_s:.3}"),
+            format!("{:.3e}", nhits as f64 / reco_s.max(1e-9)),
+            format!("{wall:.3}"),
+        ]);
+    }
+    common::emit(&table);
+    Ok(())
+}

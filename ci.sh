@@ -35,9 +35,10 @@ fi
 
 # Bench-rot gate: every bench target must still compile (the benches
 # carry the paper-shape assertions — incl. the fused ≥2x gate in
-# `strategy` and the spectral-engine ≥1.5x + zero-alloc gates in
-# `spectral` — so letting them rot silently would hollow out the
-# reproduction; see docs/BENCHMARKS.md).
+# `strategy`, the spectral-engine ≥1.5x + zero-alloc gates in
+# `spectral`, and the hit-list repeat-stability gate in `reco` — so
+# letting them rot silently would hollow out the reproduction; see
+# docs/BENCHMARKS.md).
 run cargo bench --no-run
 
 # Formatting gate: same availability probe + escape hatch as clippy.

@@ -113,13 +113,14 @@ impl Cli {
             "pool_size",
             "pitch_oversample",
             "time_oversample",
+            "roi_pad",
         ] {
             if let Some(v) = self.opt(key) {
                 let n: f64 = v.parse().map_err(|_| format!("bad --{key}: '{v}'"))?;
                 overlay.insert(key.to_string(), Value::Number(n));
             }
         }
-        for key in ["nsigma"] {
+        for key in ["nsigma", "decon_lambda", "roi_threshold"] {
             if let Some(v) = self.opt(key) {
                 let n: f64 = v.parse().map_err(|_| format!("bad --{key}: '{v}'"))?;
                 overlay.insert(key.to_string(), Value::Number(n));
@@ -182,7 +183,9 @@ COMMON OPTIONS:
   --strategy <s>           per-depo | batched | fused
   --fluctuation <m>        inline | pool | none
   --topology <list>        comma-separated stage names (default:
-                           drift,raster,scatter,response,noise,adc)
+                           drift,raster,scatter,response,noise,adc;
+                           append decon,roi,hitfind for sim+reco runs
+                           with a hit list)
   --scenario <name>        workload scenario (default cosmic-shower;
                            see `wire-cell scenarios`)
   --apas <n>               anode-plane assemblies tiled along z
@@ -197,6 +200,11 @@ COMMON OPTIONS:
   --out <file>             also write the report/table to a file
   --noise                  add electronics noise (simulate)
   --no-response            skip the FT stage (raster-only runs)
+  --decon_lambda <x>       decon Tikhonov regularization, relative to
+                           the peak |R|^2 (default 1e-6)
+  --roi_threshold <x>      ROI threshold floor, electrons above
+                           baseline (default 500)
+  --roi_pad <n>            ROI window padding in ticks (default 4)
 "
 }
 
@@ -303,6 +311,35 @@ mod tests {
         let cli = Cli::parse(&args(&["simulate", "--topology", "drift,warp"])).unwrap();
         let err = cli.sim_config().unwrap_err();
         assert!(err.contains("unknown stage 'warp'"), "{err}");
+    }
+
+    #[test]
+    fn reco_knob_options_parse() {
+        let cli = Cli::parse(&args(&[
+            "simulate",
+            "--decon_lambda",
+            "1e-4",
+            "--roi_threshold",
+            "250",
+            "--roi_pad",
+            "2",
+        ]))
+        .unwrap();
+        let cfg = cli.sim_config().unwrap();
+        assert_eq!(cfg.decon_lambda, 1e-4);
+        assert_eq!(cfg.roi_threshold, 250.0);
+        assert_eq!(cfg.roi_pad, 2);
+        // a full sim+reco topology parses through the CLI path
+        let cli = Cli::parse(&args(&[
+            "simulate",
+            "--topology",
+            "drift,raster,scatter,response,noise,adc,decon,roi,hitfind",
+        ]))
+        .unwrap();
+        let cfg = cli.sim_config().unwrap();
+        let names: Vec<&str> = cfg.topology.iter().map(|s| s.name.as_str()).collect();
+        assert_eq!(names.len(), 9);
+        assert_eq!(names[6..], ["decon", "roi", "hitfind"]);
     }
 
     #[test]

@@ -250,8 +250,10 @@ pub struct SimConfig {
     pub strategy: Strategy,
     /// Stage topology for session runs (empty = the default
     /// drift→raster→scatter→response→noise→adc chain).  Names must be
-    /// built-in stages ([`crate::session::DEFAULT_TOPOLOGY`]); custom
-    /// stages are addressed through the session builder instead.
+    /// built-in stages ([`crate::session::BUILTIN_STAGES`], which adds
+    /// the reco chain decon→roi→hitfind to the default simulation
+    /// stages); custom stages are addressed through the session
+    /// builder instead.
     pub topology: Vec<StageSpec>,
     /// Named workload for generated runs
     /// ([`crate::scenario::BUILTIN_SCENARIOS`] lists the built-ins;
@@ -279,6 +281,15 @@ pub struct SimConfig {
     pub noise: bool,
     /// Apply the FT (response convolution) stage.
     pub apply_response: bool,
+    /// Tikhonov regularization for the decon stage, relative to the
+    /// peak |R(ω)|².
+    pub decon_lambda: f64,
+    /// Absolute ROI threshold floor over the deconvolved waveforms,
+    /// electrons above baseline (the per-channel MAD noise estimate
+    /// can only raise it).
+    pub roi_threshold: f64,
+    /// Ticks of padding added to each side of an ROI window.
+    pub roi_pad: usize,
     /// Directory holding AOT artifacts.
     pub artifacts_dir: String,
 }
@@ -305,6 +316,9 @@ impl Default for SimConfig {
             seed: 12345,
             noise: false,
             apply_response: true,
+            decon_lambda: 1e-6,
+            roi_threshold: 500.0,
+            roi_pad: 4,
             artifacts_dir: "artifacts".into(),
         }
     }
@@ -380,6 +394,15 @@ impl SimConfig {
         if let Some(b) = get_bool("apply_response") {
             self.apply_response = b;
         }
+        if let Some(x) = get_num("decon_lambda") {
+            self.decon_lambda = x;
+        }
+        if let Some(x) = get_num("roi_threshold") {
+            self.roi_threshold = x;
+        }
+        if let Some(n) = get_usize("roi_pad") {
+            self.roi_pad = n;
+        }
         if let Some(s) = get_str("artifacts_dir") {
             self.artifacts_dir = s;
         }
@@ -427,13 +450,25 @@ impl SimConfig {
         if self.scenario.is_empty() {
             return Err("scenario name must not be empty".into());
         }
+        if !(self.decon_lambda.is_finite() && self.decon_lambda > 0.0) {
+            return Err(format!(
+                "decon_lambda {} must be finite and > 0",
+                self.decon_lambda
+            ));
+        }
+        if !(self.roi_threshold.is_finite() && self.roi_threshold >= 0.0) {
+            return Err(format!(
+                "roi_threshold {} must be finite and >= 0",
+                self.roi_threshold
+            ));
+        }
         self.detector()?;
         for spec in &self.topology {
-            if !crate::session::DEFAULT_TOPOLOGY.contains(&spec.name.as_str()) {
+            if !crate::session::BUILTIN_STAGES.contains(&spec.name.as_str()) {
                 return Err(format!(
                     "unknown stage '{}' in topology (known: {}; custom stages go through the session builder)",
                     spec.name,
-                    crate::session::DEFAULT_TOPOLOGY.join(", ")
+                    crate::session::BUILTIN_STAGES.join(", ")
                 ));
             }
             // per-stage overrides must overlay cleanly AND leave a
@@ -484,6 +519,9 @@ impl SimConfig {
             ("seed", Value::from(self.seed as f64)),
             ("noise", Value::from(self.noise)),
             ("apply_response", Value::from(self.apply_response)),
+            ("decon_lambda", Value::from(self.decon_lambda)),
+            ("roi_threshold", Value::from(self.roi_threshold)),
+            ("roi_pad", Value::from(self.roi_pad)),
             ("artifacts_dir", Value::from(self.artifacts_dir.as_str())),
         ]);
         to_string_pretty(&v)
@@ -613,6 +651,35 @@ mod tests {
         assert!(cfg.validate().is_err());
         cfg.apas = 100_000;
         assert!(cfg.validate().unwrap_err().contains("apas"));
+    }
+
+    #[test]
+    fn reco_knobs_overlay_and_validate() {
+        let cfg = SimConfig::from_json(
+            r#"{"decon_lambda": 1e-4, "roi_threshold": 250, "roi_pad": 2}"#,
+        )
+        .unwrap();
+        assert_eq!(cfg.decon_lambda, 1e-4);
+        assert_eq!(cfg.roi_threshold, 250.0);
+        assert_eq!(cfg.roi_pad, 2);
+        // defaults
+        let cfg = SimConfig::default();
+        assert_eq!(
+            (cfg.decon_lambda, cfg.roi_threshold, cfg.roi_pad),
+            (1e-6, 500.0, 4)
+        );
+        // range checks
+        assert!(SimConfig::from_json(r#"{"decon_lambda": 0}"#).is_err());
+        assert!(SimConfig::from_json(r#"{"roi_threshold": -1}"#).is_err());
+        // the reco stages are legal topology names
+        let cfg = SimConfig::from_json(
+            r#"{"topology": ["drift", "raster", "scatter", "response", "noise",
+                             "adc", "decon", "roi", "hitfind"]}"#,
+        )
+        .unwrap();
+        assert_eq!(cfg.topology.len(), 9);
+        let back = SimConfig::from_json(&cfg.to_json()).unwrap();
+        assert_eq!(cfg, back);
     }
 
     #[test]

@@ -154,6 +154,7 @@ fn simulate(cli: &Cli) -> Result<()> {
             );
         }
     }
+    print_hits(&report.hits);
     println!("total wall: {wall:.3} s");
     // the runtime exists exactly when the registry entry for the
     // configured backend declared it needs one
@@ -205,6 +206,7 @@ fn simulate_sharded(cli: &Cli, cfg: &wirecell::config::SimConfig) -> Result<()> 
         report.digest(),
         cfg.seed
     );
+    print_hits(&report.hits);
     println!("total wall: {wall:.3} s");
     if let Some(path) = cli.opt("out") {
         let mut text = table.render();
@@ -214,6 +216,33 @@ fn simulate_sharded(cli: &Cli, cfg: &wirecell::config::SimConfig) -> Result<()> 
         eprintln!("wrote {path}");
     }
     Ok(())
+}
+
+/// Hit-list summary for topologies that run the reco chain
+/// (`...,decon,roi,hitfind`): per-plane counts plus total recovered
+/// charge, and the sparse list itself as one JSON line for piping.
+fn print_hits(hits: &[wirecell::sigproc::Hit]) {
+    if hits.is_empty() {
+        return;
+    }
+    let mut counts = [0usize; 3];
+    let mut charge = 0.0f64;
+    for h in hits {
+        counts[h.plane as usize] += 1;
+        charge += h.charge;
+    }
+    println!(
+        "hits: {} total (U {}, V {}, W {}), charge {:.3e} e",
+        hits.len(),
+        counts[0],
+        counts[1],
+        counts[2],
+        charge
+    );
+    println!(
+        "hit list: {}",
+        wirecell::json::to_string(&wirecell::sigproc::hits_to_json(hits))
+    );
 }
 
 fn throughput(cli: &Cli) -> Result<()> {

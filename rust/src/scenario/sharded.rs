@@ -108,6 +108,10 @@ pub struct ShardedReport {
     /// the per-shard worker accounting behind the throughput engine's
     /// `raster.*` rows.
     pub raster: StageTimings,
+    /// Reconstructed hits gathered over the shards in APA order, with
+    /// channels re-indexed from APA-local to global (`local + apa ×
+    /// nwires(plane)`) — empty unless the topology runs the reco chain.
+    pub hits: Vec<crate::sigproc::Hit>,
 }
 
 impl ShardedReport {
@@ -290,9 +294,24 @@ impl ShardedSession {
         let mut raster = StageTimings::default();
         let mut shard_stats = Vec::with_capacity(napas);
         let mut frames = Vec::with_capacity(napas);
+        let mut hits = Vec::new();
         let mut label = String::new();
+        // per-plane wire counts for the APA-local → global channel
+        // re-indexing (every APA is an identical detector copy)
+        let nwires = {
+            let det = self.sessions[0].detector();
+            [
+                det.plane(crate::geometry::PlaneId::U).nwires,
+                det.plane(crate::geometry::PlaneId::V).nwires,
+                det.plane(crate::geometry::PlaneId::W).nwires,
+            ]
+        };
         for (k, slot) in results.into_iter().enumerate() {
             let (mut report, busy_s) = slot.expect("every shard ran");
+            for mut h in report.hits.drain(..) {
+                h.channel += k * nwires[h.plane as usize];
+                hits.push(h);
+            }
             stages.merge(&report.stages);
             raster.add(&report.raster_total());
             if label.is_empty() {
@@ -320,6 +339,7 @@ impl ShardedSession {
             frames,
             stages,
             raster,
+            hits,
         })
     }
 }

@@ -62,7 +62,7 @@ mod stages;
 
 pub use registry::{
     BackendCx, BackendEntry, BackendFactory, Registry, ScenarioEntry, ScenarioFactory,
-    StageEntry, StageFactory, StrategyInfo, DEFAULT_TOPOLOGY,
+    StageEntry, StageFactory, StrategyInfo, BUILTIN_STAGES, DEFAULT_TOPOLOGY,
 };
 pub use stage::{PlaneData, PlaneRunStats, RunReport, SimStage, StageCx, StageData};
 pub use stages::{AdcStage, DriftStage, NoiseStage, RasterStage, ResponseStage, ScatterStage};
@@ -450,6 +450,7 @@ impl SimSession {
             stats,
             timer,
             label,
+            hits,
             ..
         } = data;
         let mut plane_frames = Vec::with_capacity(planes.len());
@@ -473,6 +474,7 @@ impl SimSession {
                 planes: plane_frames,
                 ident: self.cfg.seed,
             }),
+            hits,
         })
     }
 

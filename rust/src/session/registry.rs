@@ -59,15 +59,23 @@ use std::sync::Arc;
 
 use super::stage::SimStage;
 use super::stages::{AdcStage, DriftStage, NoiseStage, RasterStage, ResponseStage, ScatterStage};
+use crate::sigproc::{DeconStage, HitFindStage, RoiStage};
 
 /// The default stage topology, in execution order — the stage-graph
-/// equivalent of the legacy `SimPipeline::run` chain.  `SimConfig`
-/// validates a configured `topology` section against these names (the
-/// built-in vocabulary); custom stages registered at run time are
-/// addressed through [`SessionBuilder::stage`] instead.
+/// equivalent of the legacy `SimPipeline::run` chain.  Custom stages
+/// registered at run time are addressed through
+/// [`SessionBuilder::stage`] instead.
 ///
 /// [`SessionBuilder::stage`]: super::SessionBuilder::stage
 pub const DEFAULT_TOPOLOGY: &[&str] = &["drift", "raster", "scatter", "response", "noise", "adc"];
+
+/// Every built-in stage name `SimConfig` accepts in a configured
+/// `topology` section: the default simulation chain plus the
+/// reconstruction chain (decon → roi → hitfind), which `--topology`
+/// appends for sim+reco runs or uses alone for reco-only runs.
+pub const BUILTIN_STAGES: &[&str] = &[
+    "drift", "raster", "scatter", "response", "noise", "adc", "decon", "roi", "hitfind",
+];
 
 /// Resources a backend factory may need beyond the config: the current
 /// event seed and the session's shared pools/runtime.
@@ -323,6 +331,22 @@ impl Registry {
             "adc",
             "digitize to baseline-subtracted ADC counts",
             Box::new(|| Box::new(AdcStage::new())),
+        );
+        reg.register_stage(
+            "decon",
+            "invert the response per plane (Tikhonov-regularized, shared FFT plans): \
+             ADC frames back to charge waveforms",
+            Box::new(|| Box::new(DeconStage::new())),
+        );
+        reg.register_stage(
+            "roi",
+            "threshold windows over deconvolved waveforms (median baseline, MAD noise)",
+            Box::new(|| Box::new(RoiStage::new())),
+        );
+        reg.register_stage(
+            "hitfind",
+            "peak-find within ROIs, emitting the sparse hit list",
+            Box::new(|| Box::new(HitFindStage::new())),
         );
 
         reg.register_scenario(
@@ -584,7 +608,7 @@ mod tests {
         for key in ["per-depo", "batched", "fused"] {
             assert!(reg.strategy(key).is_ok(), "strategy {key} missing");
         }
-        for key in DEFAULT_TOPOLOGY {
+        for key in BUILTIN_STAGES {
             assert!(reg.make_stage(key).is_ok(), "stage {key} missing");
         }
         for key in crate::scenario::BUILTIN_SCENARIOS {
@@ -691,7 +715,7 @@ mod tests {
     fn stages_table_lists_everything_in_topology_order() {
         let reg = Registry::with_defaults();
         let text = reg.table().render();
-        for key in ["drift", "raster", "scatter", "response", "noise", "adc"] {
+        for key in BUILTIN_STAGES {
             assert!(text.contains(key), "missing {key} in\n{text}");
         }
         assert!(text.contains("serial") && text.contains("fused"));

@@ -54,6 +54,10 @@ pub struct RunReport {
     pub stages: StageTimer,
     /// The simulated event frame (None when `frames=false`).
     pub frame: Option<Frame>,
+    /// Reconstructed hits (empty unless the topology ends in the reco
+    /// chain: decon → roi → hitfind).  Plane (U, V, W), channel, tick
+    /// order.
+    pub hits: Vec<crate::sigproc::Hit>,
 }
 
 impl RunReport {
@@ -81,6 +85,11 @@ pub struct PlaneData {
     pub patches: Vec<Patch>,
     /// The plane's waveform frame (response stage onward).
     pub frame: Option<PlaneFrame>,
+    /// Deconvolved charge waveforms, electrons per wire-tick bin,
+    /// same row-major shape as `frame` (decon stage onward).
+    pub decon: Option<Vec<f64>>,
+    /// Threshold windows over `decon` (roi stage onward).
+    pub rois: Vec<crate::sigproc::Roi>,
 }
 
 /// The payload a stage graph threads through its stages: one event's
@@ -102,6 +111,8 @@ pub struct StageData {
     /// or by the raster stage under a fused-scatter strategy so the
     /// scatter stage knows to skip).
     pub scattered: bool,
+    /// Reconstructed hits (hitfind stage; plane, channel, tick order).
+    pub hits: Vec<crate::sigproc::Hit>,
 }
 
 impl StageData {
@@ -115,6 +126,7 @@ impl StageData {
             timer: StageTimer::new(),
             label: String::new(),
             scattered: false,
+            hits: Vec::new(),
         }
     }
 }

@@ -128,6 +128,8 @@ impl SimStage for RasterStage {
                 grid,
                 patches,
                 frame: None,
+                decon: None,
+                rois: Vec::new(),
             });
         }
         Ok(data)

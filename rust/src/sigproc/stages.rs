@@ -1,0 +1,332 @@
+//! The reconstruction stage components: deconvolution → ROI → hit
+//! finding, closing the loop from simulated ADC frames back to sparse
+//! charge hits.
+//!
+//! Each stage is an ordinary [`SimStage`] registered in the session
+//! [`Registry`](crate::session::Registry), so `--topology` can append
+//! `decon,roi,hitfind` after the simulation chain (or run any prefix).
+//! The chain is deterministic by construction: deconvolution rides the
+//! spectral engine (bit-identical for every [`SpectralExec`] policy —
+//! see the PR-5 contract in `fft/`), and ROI search plus peak finding
+//! are pure serial `f64` sweeps, so the hit list is bitwise stable
+//! across thread counts and, after the `ShardedSession` gather
+//! re-indexing, across shard counts.
+//!
+//! [`SpectralExec`]: crate::fft::SpectralExec
+
+use crate::adc::Digitizer;
+use crate::config::SimConfig;
+use crate::fft::SpectralScratch;
+use crate::geometry::PlaneId;
+use crate::json::Value;
+use crate::session::{SimStage, StageCx, StageData};
+use crate::units::VOLT;
+use anyhow::Result;
+
+use super::Deconvolver;
+
+/// A reconstructed hit: one peak inside one ROI on one channel.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Hit {
+    /// Plane the channel belongs to.
+    pub plane: PlaneId,
+    /// Channel (wire) index — plane-local in a [`RunReport`], re-indexed
+    /// to global APA-ordered channels by the `ShardedSession` gather.
+    ///
+    /// [`RunReport`]: crate::session::RunReport
+    pub channel: usize,
+    /// Peak tick within the readout window.
+    pub tick: usize,
+    /// ROI width in ticks.
+    pub width: usize,
+    /// Integrated charge over the ROI, electrons (baseline-subtracted).
+    pub charge: f64,
+}
+
+/// A region of interest: a thresholded tick window on one channel.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Roi {
+    /// Channel (wire) index within the plane.
+    pub channel: usize,
+    /// First tick of the window (inclusive).
+    pub lo: usize,
+    /// One past the last tick of the window (exclusive).
+    pub hi: usize,
+    /// Baseline estimate the window was thresholded against.
+    pub baseline: f64,
+}
+
+/// Serialize a hit list to a JSON array (deterministic: `BTreeMap`
+/// object keys, shortest-roundtrip numbers).  This is the golden
+/// artifact format `rust/tests/data/hits_golden.json` pins.
+pub fn hits_to_json(hits: &[Hit]) -> Value {
+    Value::Array(
+        hits.iter()
+            .map(|h| {
+                Value::object(vec![
+                    ("plane", Value::from(h.plane.label())),
+                    ("channel", Value::from(h.channel as f64)),
+                    ("tick", Value::from(h.tick as f64)),
+                    ("width", Value::from(h.width as f64)),
+                    ("charge", Value::from(h.charge)),
+                ])
+            })
+            .collect(),
+    )
+}
+
+/// Deconvolution stage: invert the field ⊗ electronics response per
+/// plane in the frequency domain, turning baseline-subtracted ADC
+/// frames back into charge waveforms (electrons per wire-tick bin).
+///
+/// One [`Deconvolver`] per plane is built on first use through the
+/// session's plan cache (sharing the response spectrum's FFT tables —
+/// nothing is re-planned) and survives across events; the transform
+/// dispatches on the session's spectral policy and is bit-identical
+/// for any thread count.
+#[derive(Default)]
+pub struct DeconStage {
+    apply_response: bool,
+    lambda: f64,
+    /// Per-plane deconvolvers (U, V, W), built on first use.
+    decs: [Option<Deconvolver>; 3],
+    /// Reused half-spectrum workspace (warm after the first event).
+    scratch: SpectralScratch,
+    /// Reused ADC → voltage input buffer.
+    measured: Vec<f64>,
+    /// Reused deconvolution output buffer.
+    out: Vec<f64>,
+}
+
+impl DeconStage {
+    /// New deconvolution stage (configured at session build).
+    pub fn new() -> Self {
+        Self {
+            apply_response: true,
+            lambda: 1e-6,
+            ..Self::default()
+        }
+    }
+}
+
+impl SimStage for DeconStage {
+    fn name(&self) -> &str {
+        "decon"
+    }
+
+    fn configure(&mut self, cfg: &SimConfig) -> Result<()> {
+        self.apply_response = cfg.apply_response;
+        self.lambda = cfg.decon_lambda;
+        Ok(())
+    }
+
+    fn process(&mut self, mut data: StageData, cx: &mut StageCx) -> Result<StageData> {
+        if !(cx.produce_frames && self.apply_response) {
+            return Ok(data);
+        }
+        // Invert the ADC transfer: frames hold baseline-subtracted
+        // counts, so counts / counts_per_volt recovers the voltage the
+        // response stage produced (up to quantization and clamping).
+        let counts_per_volt = Digitizer::standard(0.0).counts_per_volt;
+        for pd in data.planes.iter_mut() {
+            let plane = pd.plane;
+            let Some(pf) = pd.frame.as_ref() else { continue };
+            cx.response(plane); // build + cache (ends the &mut borrow)
+            let resp = cx.responses[plane as usize].as_ref().unwrap();
+            let exec = cx.spectral_exec();
+            let lambda = self.lambda;
+            let dec = self.decs[plane as usize]
+                .get_or_insert_with(|| Deconvolver::new(resp, lambda));
+            self.measured.clear();
+            self.measured
+                .extend(pf.data.iter().map(|&v| (v as f64 / counts_per_volt) * VOLT));
+            let (measured, out, scratch) = (&self.measured, &mut self.out, &mut self.scratch);
+            data.timer
+                .time("decon", || dec.apply_into(measured, out, scratch, exec));
+            pd.decon = Some(self.out.clone());
+        }
+        Ok(data)
+    }
+}
+
+/// Multiplier on the per-channel MAD noise estimate below which a
+/// sample is not ROI-worthy.  The configured absolute floor
+/// (`roi_threshold`) still applies on clean waveforms where the MAD
+/// collapses to zero.
+const ROI_NSIGMA: f64 = 5.0;
+
+/// ROI stage: estimate a per-channel baseline (median) and noise scale
+/// (scaled MAD), then open padded threshold windows over the
+/// deconvolved waveforms.  Overlapping windows merge, so downstream
+/// hit finding sees disjoint regions in ascending tick order.
+#[derive(Default)]
+pub struct RoiStage {
+    threshold: f64,
+    pad: usize,
+}
+
+impl RoiStage {
+    /// New ROI stage (configured at session build).
+    pub fn new() -> Self {
+        Self {
+            threshold: 500.0,
+            pad: 4,
+        }
+    }
+}
+
+/// Median of a waveform, by sorted copy (NaN-free by construction:
+/// deconvolution output is finite).
+fn median(wave: &[f64], buf: &mut Vec<f64>) -> f64 {
+    buf.clear();
+    buf.extend_from_slice(wave);
+    buf.sort_unstable_by(|a, b| a.partial_cmp(b).unwrap());
+    buf[buf.len() / 2]
+}
+
+impl SimStage for RoiStage {
+    fn name(&self) -> &str {
+        "roi"
+    }
+
+    fn configure(&mut self, cfg: &SimConfig) -> Result<()> {
+        self.threshold = cfg.roi_threshold;
+        self.pad = cfg.roi_pad;
+        Ok(())
+    }
+
+    fn process(&mut self, mut data: StageData, _cx: &mut StageCx) -> Result<StageData> {
+        let (floor, pad) = (self.threshold, self.pad);
+        let mut buf = Vec::new();
+        let mut dev = Vec::new();
+        for pd in data.planes.iter_mut() {
+            let Some(pf) = pd.frame.as_ref() else { continue };
+            let Some(decon) = pd.decon.as_ref() else { continue };
+            let nticks = pf.nticks;
+            let rois = data.timer.time("roi", || {
+                let mut rois: Vec<Roi> = Vec::new();
+                for c in 0..pf.nchan {
+                    let wave = &decon[c * nticks..(c + 1) * nticks];
+                    let baseline = median(wave, &mut buf);
+                    dev.clear();
+                    dev.extend(wave.iter().map(|&v| (v - baseline).abs()));
+                    let sigma = 1.4826 * median(&dev, &mut buf);
+                    let thr = floor.max(ROI_NSIGMA * sigma);
+                    let mut t = 0;
+                    while t < nticks {
+                        if wave[t] - baseline > thr {
+                            let mut end = t;
+                            while end < nticks && wave[end] - baseline > thr {
+                                end += 1;
+                            }
+                            let lo = t.saturating_sub(pad);
+                            let hi = (end + pad).min(nticks);
+                            match rois.last_mut() {
+                                // merge back-to-back windows on the same channel
+                                Some(prev) if prev.channel == c && prev.hi >= lo => {
+                                    prev.hi = hi;
+                                }
+                                _ => rois.push(Roi {
+                                    channel: c,
+                                    lo,
+                                    hi,
+                                    baseline,
+                                }),
+                            }
+                            t = end + pad;
+                        } else {
+                            t += 1;
+                        }
+                    }
+                }
+                rois
+            });
+            pd.rois = rois;
+        }
+        Ok(data)
+    }
+}
+
+/// Hit-finding stage: one hit per ROI — the peak tick, the window
+/// width, and the baseline-subtracted charge integral.  Hits append to
+/// `StageData::hits` in plane (U, V, W), channel, tick order, which is
+/// what makes the list's serialization deterministic.
+#[derive(Default)]
+pub struct HitFindStage;
+
+impl HitFindStage {
+    /// New hit-finding stage.
+    pub fn new() -> Self {
+        Self
+    }
+}
+
+impl SimStage for HitFindStage {
+    fn name(&self) -> &str {
+        "hitfind"
+    }
+
+    fn process(&mut self, mut data: StageData, _cx: &mut StageCx) -> Result<StageData> {
+        for pd in data.planes.iter() {
+            let Some(pf) = pd.frame.as_ref() else { continue };
+            let Some(decon) = pd.decon.as_ref() else { continue };
+            let plane = pd.plane;
+            let nticks = pf.nticks;
+            let rois = &pd.rois;
+            let hits = data.timer.time("hitfind", || {
+                let mut hits = Vec::with_capacity(rois.len());
+                for roi in rois {
+                    let wave = &decon[roi.channel * nticks..(roi.channel + 1) * nticks];
+                    let mut peak = roi.lo;
+                    let mut peak_v = f64::NEG_INFINITY;
+                    let mut charge = 0.0;
+                    for t in roi.lo..roi.hi {
+                        let v = wave[t] - roi.baseline;
+                        charge += v;
+                        if v > peak_v {
+                            peak_v = v;
+                            peak = t;
+                        }
+                    }
+                    hits.push(Hit {
+                        plane,
+                        channel: roi.channel,
+                        tick: peak,
+                        width: roi.hi - roi.lo,
+                        charge,
+                    });
+                }
+                hits
+            });
+            data.hits.extend(hits);
+        }
+        Ok(data)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hit_json_shape() {
+        let hits = [Hit {
+            plane: PlaneId::W,
+            channel: 12,
+            tick: 300,
+            width: 9,
+            charge: 4812.5,
+        }];
+        let v = hits_to_json(&hits);
+        let s = crate::json::to_string(&v);
+        assert_eq!(
+            s,
+            r#"[{"channel":12,"charge":4812.5,"plane":"W","tick":300,"width":9}]"#
+        );
+    }
+
+    #[test]
+    fn empty_hit_list_serializes_to_empty_array() {
+        assert_eq!(crate::json::to_string(&hits_to_json(&[])), "[]");
+    }
+}
