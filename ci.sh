@@ -36,8 +36,9 @@ fi
 # Bench-rot gate: every bench target must still compile (the benches
 # carry the paper-shape assertions — incl. the fused ≥2x gate in
 # `strategy`, the spectral-engine ≥1.5x + zero-alloc gates in
-# `spectral`, and the hit-list repeat-stability gate in `reco` — so
-# letting them rot silently would hollow out the reproduction; see
+# `spectral`, the hit-list repeat-stability gate in `reco`, and the
+# mixed-traffic digest worker-invariance gate in `mixed` — so letting
+# them rot silently would hollow out the reproduction; see
 # docs/BENCHMARKS.md).
 run cargo bench --no-run
 

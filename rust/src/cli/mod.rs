@@ -84,47 +84,61 @@ impl Cli {
         self.flags.iter().any(|f| f == name)
     }
 
-    /// Build a SimConfig: defaults ⊕ --config file ⊕ CLI overrides.
+    /// Build a SimConfig: defaults ⊕ --preset ⊕ --config file ⊕ CLI
+    /// overrides (later layers win per key).
     pub fn sim_config(&self) -> Result<SimConfig, String> {
         let mut cfg = SimConfig::default();
+        if let Some(name) = self.opt("preset") {
+            cfg.overlay(&crate::config::preset_overlay(name)?)?;
+        }
         if let Some(path) = self.opt("config") {
-            cfg = SimConfig::from_file(std::path::Path::new(path))?;
+            let text = std::fs::read_to_string(path).map_err(|e| format!("{path}: {e}"))?;
+            let doc = crate::json::parse(&text).map_err(|e| format!("{path}: {e}"))?;
+            cfg.overlay(&doc)?;
         }
         // individual overrides map to the same keys as the JSON schema
+        // (dashed option names map onto the underscored config keys)
         let mut overlay = BTreeMap::new();
-        for key in [
-            "detector",
-            "fluctuation",
-            "backend",
-            "strategy",
-            "scenario",
-            "artifacts_dir",
+        for (opt, key) in [
+            ("detector", "detector"),
+            ("fluctuation", "fluctuation"),
+            ("backend", "backend"),
+            ("strategy", "strategy"),
+            ("scenario", "scenario"),
+            ("artifacts_dir", "artifacts_dir"),
+            ("scenario-mix", "scenario_mix"),
+            ("depo-file", "depo_file"),
         ] {
-            if let Some(v) = self.opt(key) {
+            if let Some(v) = self.opt(opt) {
                 overlay.insert(key.to_string(), Value::from(v));
             }
         }
-        for key in [
-            "target_depos",
-            "events",
-            "workers",
-            "apas",
-            "seed",
-            "pool_size",
-            "pitch_oversample",
-            "time_oversample",
-            "roi_pad",
+        for (opt, key) in [
+            ("target_depos", "target_depos"),
+            ("events", "events"),
+            ("workers", "workers"),
+            ("apas", "apas"),
+            ("seed", "seed"),
+            ("pool_size", "pool_size"),
+            ("pitch_oversample", "pitch_oversample"),
+            ("time_oversample", "time_oversample"),
+            ("roi_pad", "roi_pad"),
+            ("mix-burst", "mix_burst"),
         ] {
+            if let Some(v) = self.opt(opt) {
+                let n: f64 = v.parse().map_err(|_| format!("bad --{opt}: '{v}'"))?;
+                overlay.insert(key.to_string(), Value::Number(n));
+            }
+        }
+        for key in ["nsigma", "decon_lambda", "roi_threshold", "pileup_rate"] {
             if let Some(v) = self.opt(key) {
                 let n: f64 = v.parse().map_err(|_| format!("bad --{key}: '{v}'"))?;
                 overlay.insert(key.to_string(), Value::Number(n));
             }
         }
-        for key in ["nsigma", "decon_lambda", "roi_threshold"] {
-            if let Some(v) = self.opt(key) {
-                let n: f64 = v.parse().map_err(|_| format!("bad --{key}: '{v}'"))?;
-                overlay.insert(key.to_string(), Value::Number(n));
-            }
+        // a depo file implies the replay scenario unless one was named
+        if self.opt("depo-file").is_some() && self.opt("scenario").is_none() {
+            overlay.insert("scenario".into(), Value::from("depo-replay"));
         }
         // --topology drift,raster,scatter → the config's topology array
         // (per-stage overrides need the JSON form; names cover the CLI)
@@ -177,8 +191,11 @@ COMMANDS:
   version      print version and environment info
 
 COMMON OPTIONS:
+  --preset <name>          named config overlay, applied before
+                           --config and per-key overrides
+                           (full-detector | paper)
   --config <file.json>     load a config file (then apply overrides)
-  --detector <name>        test-small | uboone-like
+  --detector <name>        test-small | uboone-like | protodune-sp
   --backend <b>            serial | threads:N | pjrt
   --strategy <s>           per-depo | batched | fused
   --fluctuation <m>        inline | pool | none
@@ -188,6 +205,14 @@ COMMON OPTIONS:
                            with a hit list)
   --scenario <name>        workload scenario (default cosmic-shower;
                            see `wire-cell scenarios`)
+  --scenario-mix <spec>    throughput: weighted mixed traffic, e.g.
+                           \"hotspot:1,noise-only:3\" (bare name = 1)
+  --mix-burst <n>          throughput: arrival burst length for the
+                           mix (default 1)
+  --pileup_rate <x>        full-detector: mean cosmic overlays per
+                           readout window (Poisson, default 2)
+  --depo-file <file.json>  replay depos from a file (implies
+                           --scenario depo-replay unless one is named)
   --apas <n>               anode-plane assemblies tiled along z
                            (default 1; >1 runs APA-sharded)
   --target_depos <n>       workload size, per event (default 100000)
@@ -198,6 +223,9 @@ COMMON OPTIONS:
   --artifacts_dir <dir>    AOT artifacts directory (default artifacts)
   --repeat <n>             benchmark repetitions (default 5, as paper)
   --out <file>             also write the report/table to a file
+  --json <file>            throughput: also write the machine-readable
+                           JSON report (rates, stages, latency
+                           percentiles, per-scenario shares)
   --noise                  add electronics noise (simulate)
   --no-response            skip the FT stage (raster-only runs)
   --decon_lambda <x>       decon Tikhonov regularization, relative to
@@ -367,6 +395,63 @@ mod tests {
         assert_eq!(cfg.target_depos, 99);
         assert_eq!(cfg.seed, 7);
         let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn traffic_and_preset_options_wire_through() {
+        let cli = Cli::parse(&args(&[
+            "throughput",
+            "--scenario-mix",
+            "hotspot:1,noise-only:3",
+            "--mix-burst",
+            "4",
+            "--pileup_rate",
+            "1.5",
+        ]))
+        .unwrap();
+        let cfg = cli.sim_config().unwrap();
+        assert_eq!(cfg.scenario_mix, "hotspot:1,noise-only:3");
+        assert_eq!(cfg.mix_burst, 4);
+        assert_eq!(cfg.pileup_rate, 1.5);
+        // a malformed mix is rejected through config validation
+        let cli = Cli::parse(&args(&["throughput", "--scenario-mix", "hotspot:-1"])).unwrap();
+        let err = cli.sim_config().unwrap_err();
+        assert!(err.contains("scenario_mix"), "{err}");
+        // the preset overlay lands before per-key overrides
+        let cli = Cli::parse(&args(&[
+            "simulate",
+            "--preset",
+            "full-detector",
+            "--target_depos",
+            "500",
+        ]))
+        .unwrap();
+        let cfg = cli.sim_config().unwrap();
+        assert_eq!(cfg.detector, "protodune-sp");
+        assert_eq!(cfg.scenario, "full-detector");
+        assert_eq!(cfg.apas, 6);
+        assert_eq!(cfg.target_depos, 500);
+        let cli = Cli::parse(&args(&["simulate", "--preset", "nope"])).unwrap();
+        assert!(cli.sim_config().is_err());
+    }
+
+    #[test]
+    fn depo_file_implies_the_replay_scenario() {
+        let cli = Cli::parse(&args(&["simulate", "--depo-file", "depos.json"])).unwrap();
+        // validation does not open the file; only the scenario factory does
+        let cfg = cli.sim_config().unwrap();
+        assert_eq!(cfg.scenario, "depo-replay");
+        assert_eq!(cfg.depo_file, "depos.json");
+        // an explicit --scenario wins over the implication
+        let cli = Cli::parse(&args(&[
+            "simulate",
+            "--depo-file",
+            "depos.json",
+            "--scenario",
+            "hotspot",
+        ]))
+        .unwrap();
+        assert_eq!(cli.sim_config().unwrap().scenario, "hotspot");
     }
 
     #[test]

@@ -230,7 +230,8 @@ impl StageSpec {
 /// Full simulation configuration.
 #[derive(Clone, Debug, PartialEq)]
 pub struct SimConfig {
-    /// Detector preset name ("uboone-like" | "test-small").
+    /// Detector preset name
+    /// ("uboone-like" | "test-small" | "protodune-sp").
     pub detector: String,
     /// Impact positions per wire pitch.
     pub pitch_oversample: usize,
@@ -290,6 +291,22 @@ pub struct SimConfig {
     pub roi_threshold: f64,
     /// Ticks of padding added to each side of an ROI window.
     pub roi_pad: usize,
+    /// Mean cosmic overlays per readout window for the
+    /// `full-detector` scenario (Poisson rate, clamped to [0, 64];
+    /// 0 disables pileup).
+    pub pileup_rate: f64,
+    /// Mixed-traffic spec for throughput streams:
+    /// `"name[:weight],name2[:weight2]"` over registered scenarios
+    /// (empty = single-scenario stream; see
+    /// [`crate::throughput::TrafficMix`]).
+    pub scenario_mix: String,
+    /// Arrival burst length for mixed traffic: events arrive in
+    /// blocks of this many consecutive events from one scenario
+    /// (1 = i.i.d. arrivals).
+    pub mix_burst: usize,
+    /// Depo file the `depo-replay` scenario replays (depo/io.rs JSON;
+    /// empty = an empty replay set).
+    pub depo_file: String,
     /// Directory holding AOT artifacts.
     pub artifacts_dir: String,
 }
@@ -319,6 +336,10 @@ impl Default for SimConfig {
             decon_lambda: 1e-6,
             roi_threshold: 500.0,
             roi_pad: 4,
+            pileup_rate: 2.0,
+            scenario_mix: String::new(),
+            mix_burst: 1,
+            depo_file: String::new(),
             artifacts_dir: "artifacts".into(),
         }
     }
@@ -403,6 +424,18 @@ impl SimConfig {
         if let Some(n) = get_usize("roi_pad") {
             self.roi_pad = n;
         }
+        if let Some(x) = get_num("pileup_rate") {
+            self.pileup_rate = x;
+        }
+        if let Some(s) = get_str("scenario_mix") {
+            self.scenario_mix = s;
+        }
+        if let Some(n) = get_usize("mix_burst") {
+            self.mix_burst = n.max(1);
+        }
+        if let Some(s) = get_str("depo_file") {
+            self.depo_file = s;
+        }
         if let Some(s) = get_str("artifacts_dir") {
             self.artifacts_dir = s;
         }
@@ -429,6 +462,7 @@ impl SimConfig {
         match self.detector.as_str() {
             "uboone-like" => Ok(crate::geometry::Detector::uboone_like()),
             "test-small" => Ok(crate::geometry::Detector::test_small()),
+            "protodune-sp" => Ok(crate::geometry::Detector::protodune_sp()),
             other => Err(format!("unknown detector preset '{other}'")),
         }
     }
@@ -461,6 +495,18 @@ impl SimConfig {
                 "roi_threshold {} must be finite and >= 0",
                 self.roi_threshold
             ));
+        }
+        if !(self.pileup_rate.is_finite() && (0.0..=64.0).contains(&self.pileup_rate)) {
+            return Err(format!(
+                "pileup_rate {} must be finite and in [0, 64]",
+                self.pileup_rate
+            ));
+        }
+        // the mix spec must parse (names resolve later, through the
+        // registry, like the single-scenario path)
+        if !self.scenario_mix.is_empty() {
+            crate::throughput::TrafficMix::parse(&self.scenario_mix, self.mix_burst)
+                .map_err(|e| format!("scenario_mix: {e}"))?;
         }
         self.detector()?;
         for spec in &self.topology {
@@ -522,6 +568,10 @@ impl SimConfig {
             ("decon_lambda", Value::from(self.decon_lambda)),
             ("roi_threshold", Value::from(self.roi_threshold)),
             ("roi_pad", Value::from(self.roi_pad)),
+            ("pileup_rate", Value::from(self.pileup_rate)),
+            ("scenario_mix", Value::from(self.scenario_mix.as_str())),
+            ("mix_burst", Value::from(self.mix_burst)),
+            ("depo_file", Value::from(self.depo_file.as_str())),
             ("artifacts_dir", Value::from(self.artifacts_dir.as_str())),
         ]);
         to_string_pretty(&v)
@@ -534,6 +584,41 @@ impl SimConfig {
             min_sigma_pitch: self.min_sigma_pitch,
             min_sigma_time: self.min_sigma_time,
         }
+    }
+}
+
+/// Named config presets `--preset` resolves (see [`preset_overlay`]).
+pub const PRESETS: &[&str] = &["full-detector", "paper"];
+
+/// The overlay document a named preset stands for.  Presets are
+/// ordinary overlays, applied *before* any `--config` file and per-key
+/// CLI overrides (defaults ⊕ preset ⊕ file ⊕ keys), so every knob
+/// they set can still be overridden.
+///
+/// * `full-detector` — ProtoDUNE-SP scale: six `protodune-sp` APA
+///   faces running the `full-detector` beam⊕pileup scenario at 100k
+///   depos per event.
+/// * `paper` — the source paper's benchmark point: one uboone-like
+///   plane set under the ~100k-depo cosmic workload.
+pub fn preset_overlay(name: &str) -> Result<Value, String> {
+    match name {
+        "full-detector" => Ok(Value::object(vec![
+            ("detector", Value::from("protodune-sp")),
+            ("apas", Value::from(6usize)),
+            ("scenario", Value::from("full-detector")),
+            ("target_depos", Value::from(100_000usize)),
+            ("pileup_rate", Value::from(2.0)),
+        ])),
+        "paper" => Ok(Value::object(vec![
+            ("detector", Value::from("uboone-like")),
+            ("apas", Value::from(1usize)),
+            ("scenario", Value::from("cosmic-shower")),
+            ("target_depos", Value::from(100_000usize)),
+        ])),
+        other => Err(format!(
+            "unknown preset '{other}' (known: {})",
+            PRESETS.join(", ")
+        )),
     }
 }
 
@@ -683,6 +768,61 @@ mod tests {
     }
 
     #[test]
+    fn traffic_knobs_overlay_validate_and_roundtrip() {
+        let cfg = SimConfig::from_json(
+            r#"{"scenario_mix": "hotspot:1,noise-only:3", "mix_burst": 4,
+                "pileup_rate": 1.5, "depo_file": "depos.json"}"#,
+        )
+        .unwrap();
+        assert_eq!(cfg.scenario_mix, "hotspot:1,noise-only:3");
+        assert_eq!(cfg.mix_burst, 4);
+        assert_eq!(cfg.pileup_rate, 1.5);
+        assert_eq!(cfg.depo_file, "depos.json");
+        let back = SimConfig::from_json(&cfg.to_json()).unwrap();
+        assert_eq!(cfg, back);
+        // defaults: single-scenario stream, modest pileup, no replay
+        let d = SimConfig::default();
+        assert_eq!(
+            (d.scenario_mix.as_str(), d.mix_burst, d.pileup_rate, d.depo_file.as_str()),
+            ("", 1, 2.0, "")
+        );
+        // burst 0 clamps up like the other count knobs
+        assert_eq!(SimConfig::from_json(r#"{"mix_burst": 0}"#).unwrap().mix_burst, 1);
+        // malformed mixes and out-of-range rates are rejected
+        let err = SimConfig::from_json(r#"{"scenario_mix": "hotspot:-1"}"#).unwrap_err();
+        assert!(err.contains("scenario_mix"), "{err}");
+        assert!(SimConfig::from_json(r#"{"pileup_rate": -0.5}"#).is_err());
+        assert!(SimConfig::from_json(r#"{"pileup_rate": 1e9}"#).is_err());
+    }
+
+    #[test]
+    fn presets_are_overlays() {
+        // full-detector lands on ProtoDUNE-SP scale ...
+        let mut cfg = SimConfig::default();
+        cfg.overlay(&preset_overlay("full-detector").unwrap()).unwrap();
+        cfg.validate().unwrap();
+        assert_eq!(cfg.detector, "protodune-sp");
+        assert_eq!(cfg.apas, 6);
+        assert_eq!(cfg.scenario, "full-detector");
+        assert_eq!(cfg.target_depos, 100_000);
+        // ... but later overlays still win (defaults ⊕ preset ⊕ keys)
+        cfg.overlay(&Value::object(vec![("apas", Value::from(2usize))]))
+            .unwrap();
+        assert_eq!(cfg.apas, 2);
+        // paper preset reproduces the paper's benchmark point
+        let mut cfg = SimConfig::default();
+        cfg.overlay(&preset_overlay("paper").unwrap()).unwrap();
+        cfg.validate().unwrap();
+        assert_eq!((cfg.detector.as_str(), cfg.apas), ("uboone-like", 1));
+        // the known-name list travels with the error
+        let err = preset_overlay("mega").unwrap_err();
+        assert!(err.contains("full-detector"), "{err}");
+        for name in PRESETS {
+            preset_overlay(name).unwrap();
+        }
+    }
+
+    #[test]
     fn backend_parsing() {
         assert_eq!("serial".parse::<BackendChoice>().unwrap(), BackendChoice::Serial);
         assert_eq!("pjrt".parse::<BackendChoice>().unwrap(), BackendChoice::Pjrt);
@@ -740,6 +880,8 @@ mod tests {
         assert_eq!(cfg.detector().unwrap().name, "test-small");
         cfg.detector = "uboone-like".into();
         assert_eq!(cfg.detector().unwrap().planes.len(), 3);
+        cfg.detector = "protodune-sp".into();
+        assert_eq!(cfg.detector().unwrap().name, "protodune-sp");
     }
 
     #[test]

@@ -84,6 +84,30 @@ impl Detector {
         }
     }
 
+    /// A ProtoDUNE-SP-like anode face: 800/800/960 wires at ±35.7°/0°
+    /// with the real 4.669 mm (induction) and 4.790 mm (collection)
+    /// pitches, 0.5 µs tick, 6000-tick (3 ms) readout window.  One
+    /// `Detector` describes one APA face; the `full-detector` preset
+    /// tiles six of them along z with [`ApaLayout`] to reach the
+    /// 15 360-channel ProtoDUNE-SP scale (see `docs/SCENARIOS.md`).
+    pub fn protodune_sp() -> Self {
+        let pitch_uv = 4.669 * MM;
+        let pitch_w = 4.790 * MM;
+        Self {
+            name: "protodune-sp".into(),
+            planes: vec![
+                WirePlane::new(PlaneId::U, 35.7 * DEGREE, pitch_uv, 800, -0.5 * 800.0 * pitch_uv),
+                WirePlane::new(PlaneId::V, -35.7 * DEGREE, pitch_uv, 800, -0.5 * 800.0 * pitch_uv),
+                WirePlane::new(PlaneId::W, 0.0, pitch_w, 960, -0.5 * 960.0 * pitch_w),
+            ],
+            response_plane_x: 10.0 * CM,
+            drift_speed: consts::DRIFT_SPEED,
+            tick: 0.5 * US,
+            nticks: 6000,
+            time_start: 0.0,
+        }
+    }
+
     /// The time-axis binning of the readout window.
     pub fn time_binning(&self) -> Binning {
         Binning::new(
@@ -111,6 +135,41 @@ impl Detector {
     pub fn max_drift(&self) -> f64 {
         2.56 * M
     }
+}
+
+/// Geometry manifest for golden fixtures and reports: detector name,
+/// per-plane wire counts/pitches/angles, readout shape, and the z
+/// tiling of an `napas`-wide APA row.  Serialized with the crate JSON
+/// writer the result is byte-stable, which is what the `full-detector`
+/// golden test under `rust/tests/data/` pins.
+pub fn layout_manifest(det: &Detector, napas: usize) -> crate::json::Value {
+    use crate::json::Value;
+    let layout = ApaLayout::for_detector(det, napas);
+    let planes: Vec<Value> = det
+        .planes
+        .iter()
+        .map(|p| {
+            Value::object(vec![
+                ("angle_deg", Value::from(p.angle / DEGREE)),
+                ("nwires", Value::from(p.nwires)),
+                ("pitch_mm", Value::from(p.pitch / MM)),
+                ("plane", Value::from(p.id.label())),
+            ])
+        })
+        .collect();
+    let (z_lo, _) = layout.z_range();
+    let z_offsets: Vec<Value> = (0..layout.napas())
+        .map(|k| Value::from((z_lo + k as f64 * layout.span()) / MM))
+        .collect();
+    Value::object(vec![
+        ("apas", Value::from(layout.napas())),
+        ("detector", Value::from(det.name.as_str())),
+        ("nticks", Value::from(det.nticks)),
+        ("planes", Value::Array(planes)),
+        ("span_mm", Value::from(layout.span() / MM)),
+        ("tick_us", Value::from(det.tick / US)),
+        ("z_offsets_mm", Value::Array(z_offsets)),
+    ])
 }
 
 #[cfg(test)]
@@ -149,5 +208,44 @@ mod tests {
         let (lo, hi) = det.transverse_extent();
         assert!((lo + hi).abs() < 1e-9);
         assert!(hi > 0.5 * M);
+    }
+
+    #[test]
+    fn protodune_sp_face_shape() {
+        let det = Detector::protodune_sp();
+        assert_eq!(det.plane(PlaneId::U).nwires, 800);
+        assert_eq!(det.plane(PlaneId::V).nwires, 800);
+        assert_eq!(det.plane(PlaneId::W).nwires, 960);
+        assert!((det.plane(PlaneId::U).angle - 35.7 * DEGREE).abs() < 1e-12);
+        assert!((det.plane(PlaneId::V).angle + 35.7 * DEGREE).abs() < 1e-12);
+        assert!((det.plane(PlaneId::U).pitch - 4.669 * MM).abs() < 1e-12);
+        assert!((det.plane(PlaneId::W).pitch - 4.790 * MM).abs() < 1e-12);
+        assert_eq!(det.nticks, 6000);
+        // every plane centers its pitch coverage on (y, z) = (0, 0)
+        let (lo, hi) = det.transverse_extent();
+        assert!((lo + hi).abs() < 1e-9);
+        // 6 faces x (800 + 800 + 960) = 15 360 channels
+        let per_face: usize = det.planes.iter().map(|p| p.nwires).sum();
+        assert_eq!(6 * per_face, 15_360);
+    }
+
+    #[test]
+    fn layout_manifest_pins_the_tiling() {
+        let det = Detector::protodune_sp();
+        let v = layout_manifest(&det, 6);
+        assert_eq!(v.get("apas").unwrap().as_usize(), Some(6));
+        assert_eq!(v.get("detector").unwrap().as_str(), Some("protodune-sp"));
+        assert_eq!(v.get("nticks").unwrap().as_usize(), Some(6000));
+        let planes = v.get("planes").unwrap().as_array().unwrap();
+        assert_eq!(planes.len(), 3);
+        assert_eq!(planes[2].get("nwires").unwrap().as_usize(), Some(960));
+        let offsets = v.get("z_offsets_mm").unwrap().as_array().unwrap();
+        assert_eq!(offsets.len(), 6);
+        // offsets ascend in steps of exactly one APA span
+        let span = v.get("span_mm").unwrap().as_f64().unwrap();
+        for k in 1..offsets.len() {
+            let d = offsets[k].as_f64().unwrap() - offsets[k - 1].as_f64().unwrap();
+            assert!((d - span).abs() < 1e-9, "offset step {d} != span {span}");
+        }
     }
 }

@@ -76,7 +76,7 @@ fn run(args: &[String]) -> Result<()> {
         "scenarios" => emit(&cli, Registry::with_defaults().scenario_table()),
         "version" => {
             println!("wire-cell 0.1.0 (paper: EPJ Web Conf 251, 03032 (2021))");
-            println!("detectors: test-small, uboone-like");
+            println!("detectors: test-small, uboone-like, protodune-sp");
             println!("backends : serial | threads:N | pjrt (XLA/PJRT CPU)");
             println!("components: see `wire-cell stages`");
             Ok(())
@@ -254,12 +254,28 @@ fn throughput(cli: &Cli) -> Result<()> {
         cfg.workers,
         cfg.backend.label()
     );
+    if !cfg.scenario_mix.trim().is_empty() {
+        eprintln!(
+            "mixed traffic: {} (burst {})",
+            cfg.scenario_mix.trim(),
+            cfg.mix_burst
+        );
+    }
     let (table, report) = harness::throughput(&cfg, cfg.events, cfg.workers)?;
     // assemble the whole report so --out captures all of it, not just
     // the stage table
     let mut text = table.render();
     text.push('\n');
     text.push_str(&report.worker_table().render());
+    text.push('\n');
+    text.push_str(&report.latency_table().render());
+    text.push_str(&format!(
+        "\nlatency: p50 {:.3} ms  p95 {:.3} ms  p99 {:.3} ms  (n {})\n",
+        report.latency.p50_s * 1e3,
+        report.latency.p95_s * 1e3,
+        report.latency.p99_s * 1e3,
+        report.latency.n
+    ));
     text.push_str(&format!(
         "\nevents: {}  depos: {}  wall: {:.3} s\n",
         report.rate.events, report.rate.depos, report.rate.wall_s
@@ -288,6 +304,12 @@ fn throughput(cli: &Cli) -> Result<()> {
     println!("{text}");
     if let Some(path) = cli.opt("out") {
         std::fs::write(path, &text)?;
+        eprintln!("wrote {path}");
+    }
+    if let Some(path) = cli.opt("json") {
+        let mut doc = wirecell::json::to_string_pretty(&report.to_json());
+        doc.push('\n');
+        std::fs::write(path, doc)?;
         eprintln!("wrote {path}");
     }
     for e in &report.errors {

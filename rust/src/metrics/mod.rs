@@ -106,6 +106,68 @@ impl RateStats {
     }
 }
 
+/// Percentile of a **pre-sorted** sample set with linear interpolation
+/// between closest ranks (the NumPy default): the rank of percentile
+/// `p` is `p/100 · (n-1)`, interpolated between the two bracketing
+/// samples.  Returns NaN for an empty slice; `p` is clamped to
+/// [0, 100].  This is the estimator behind every p50/p95/p99 figure in
+/// the throughput reports, pinned against closed-form distributions in
+/// this module's tests.
+pub fn percentile(sorted: &[f64], p: f64) -> f64 {
+    if sorted.is_empty() {
+        return f64::NAN;
+    }
+    let p = p.clamp(0.0, 100.0);
+    let rank = p / 100.0 * (sorted.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    if lo == hi {
+        return sorted[lo];
+    }
+    let frac = rank - lo as f64;
+    sorted[lo] + (sorted[hi] - sorted[lo]) * frac
+}
+
+/// Per-event latency summary for a stream run: sample count, mean, the
+/// p50/p95/p99 tail quantiles (see [`percentile`]), and the maximum.
+/// All values in seconds; reports render them in ms.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct LatencySummary {
+    /// Number of latency samples (events).
+    pub n: u64,
+    /// Mean latency [s].
+    pub mean_s: f64,
+    /// Median latency [s].
+    pub p50_s: f64,
+    /// 95th-percentile latency [s].
+    pub p95_s: f64,
+    /// 99th-percentile latency [s].
+    pub p99_s: f64,
+    /// Worst-case latency [s].
+    pub max_s: f64,
+}
+
+impl LatencySummary {
+    /// Summarize raw per-event latency samples (any order; a sorted
+    /// copy is taken internally).  An empty slice yields the all-zero
+    /// default, so reports render cleanly for zero-event runs.
+    pub fn from_samples(samples: &[f64]) -> Self {
+        if samples.is_empty() {
+            return Self::default();
+        }
+        let mut sorted = samples.to_vec();
+        sorted.sort_by(f64::total_cmp);
+        Self {
+            n: sorted.len() as u64,
+            mean_s: sorted.iter().sum::<f64>() / sorted.len() as f64,
+            p50_s: percentile(&sorted, 50.0),
+            p95_s: percentile(&sorted, 95.0),
+            p99_s: percentile(&sorted, 99.0),
+            max_s: *sorted.last().unwrap(),
+        }
+    }
+}
+
 /// Fixed-width table builder that prints rows like the paper's tables.
 pub struct Table {
     title: String,
@@ -241,6 +303,71 @@ mod tests {
         t.reset();
         assert_eq!(t.grand_total(), 0.0);
         assert!(t.stages().is_empty());
+    }
+
+    #[test]
+    fn percentile_of_constant_distribution_is_the_constant() {
+        let s = vec![7.25; 17];
+        for p in [0.0, 1.0, 50.0, 95.0, 99.0, 100.0] {
+            assert_eq!(percentile(&s, p), 7.25, "p={p}");
+        }
+    }
+
+    #[test]
+    fn percentile_of_uniform_grid_is_closed_form() {
+        // 0, 1, ..., 100: rank(p) = p, so percentile(p) == p exactly
+        let s: Vec<f64> = (0..=100).map(|i| i as f64).collect();
+        for p in 0..=100 {
+            assert_eq!(percentile(&s, p as f64), p as f64, "p={p}");
+        }
+        // interpolation between grid points is linear
+        assert_eq!(percentile(&s, 2.5), 2.5);
+        assert_eq!(percentile(&s, 97.5), 97.5);
+    }
+
+    #[test]
+    fn percentile_of_two_point_distribution_is_closed_form() {
+        // 90% zeros, 10% tens (n = 10): rank(p) = 0.09p
+        let mut s = vec![0.0; 9];
+        s.push(10.0);
+        assert_eq!(percentile(&s, 50.0), 0.0);
+        assert!((percentile(&s, 95.0) - 5.5).abs() < 1e-12); // rank 8.55
+        assert!((percentile(&s, 99.0) - 9.1).abs() < 1e-12); // rank 8.91
+        assert_eq!(percentile(&s, 100.0), 10.0);
+    }
+
+    #[test]
+    fn percentile_edge_cases() {
+        // a single sample is every percentile
+        let one = [3.5];
+        for p in [0.0, 50.0, 99.0, 100.0] {
+            assert_eq!(percentile(&one, p), 3.5);
+        }
+        // ties interpolate across the tie boundary
+        let ties = [1.0, 1.0, 2.0, 2.0];
+        assert_eq!(percentile(&ties, 50.0), 1.5);
+        assert_eq!(percentile(&ties, 0.0), 1.0);
+        // empty input is NaN, out-of-range p clamps
+        assert!(percentile(&[], 50.0).is_nan());
+        assert_eq!(percentile(&one, -5.0), 3.5);
+        assert_eq!(percentile(&one, 150.0), 3.5);
+    }
+
+    #[test]
+    fn latency_summary_sorts_and_summarizes() {
+        // deliberately unsorted input
+        let samples = [0.004, 0.001, 0.100, 0.002, 0.003];
+        let l = LatencySummary::from_samples(&samples);
+        assert_eq!(l.n, 5);
+        assert!((l.mean_s - 0.022).abs() < 1e-12);
+        assert_eq!(l.p50_s, 0.003);
+        assert_eq!(l.max_s, 0.100);
+        assert!(l.p95_s <= l.p99_s && l.p99_s <= l.max_s);
+        assert!(l.p50_s <= l.p95_s);
+        // empty stream renders as the zero default, not NaN
+        let empty = LatencySummary::from_samples(&[]);
+        assert_eq!(empty, LatencySummary::default());
+        assert_eq!(empty.p99_s, 0.0);
     }
 
     #[test]

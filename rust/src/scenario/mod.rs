@@ -13,11 +13,14 @@
 //!   [`ApaLayout`](crate::geometry::ApaLayout) in global coordinates,
 //!   paired with a [`ScenarioWitness`] (expected depo-count and
 //!   charge-scale bounds) that tests and the benchmark harness check
-//!   before trusting a run.  Five built-ins cover the physics space
+//!   before trusting a run.  Seven built-ins cover the physics space
 //!   ([`BUILTIN_SCENARIOS`]): beam tracks crossing every APA, cosmic
-//!   showers, beam⊕cosmic pile-up, noise-only pedestal events, and a
+//!   showers, beam⊕cosmic pile-up, noise-only pedestal events, a
 //!   hotspot blob that lands everything on one APA (the sharding
-//!   worst case).
+//!   worst case), the production-shaped `full-detector` workload
+//!   (beam ⊕ Poisson-pileup cosmics, ProtoDUNE-SP scale under
+//!   `--preset full-detector`), and `depo-replay` for recorded
+//!   samples.
 //! * [`sharded`] — [`ShardedSession`]: fan an event's depos out to
 //!   per-APA shards, run each shard through its own
 //!   [`SimSession`](crate::session::SimSession) (serially or over a
@@ -56,15 +59,17 @@
 //! # Ok::<(), anyhow::Error>(())
 //! ```
 
+mod replay;
 pub mod sharded;
 mod sources;
 
+pub use replay::DepoReplayScenario;
 pub use sharded::{
     apa_seed, shard_depos, ShardExec, ShardStats, ShardedReport, ShardedSession,
 };
 pub use sources::{
-    BeamTrackScenario, CosmicShowerScenario, HotspotScenario, NoiseOnlyScenario,
-    PileupMixScenario,
+    BeamTrackScenario, CosmicShowerScenario, FullDetectorScenario, HotspotScenario,
+    NoiseOnlyScenario, PileupMixScenario,
 };
 
 use crate::depo::Depo;
@@ -77,6 +82,8 @@ use crate::geometry::ApaLayout;
 pub const BUILTIN_SCENARIOS: &[&str] = &[
     "beam-track",
     "cosmic-shower",
+    "depo-replay",
+    "full-detector",
     "hotspot",
     "noise-only",
     "pileup-mix",

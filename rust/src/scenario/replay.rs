@@ -1,0 +1,134 @@
+//! **depo-replay** — drive a recorded depo sample through the same
+//! session / sharding / mixed-traffic machinery as the synthetic
+//! generators.
+//!
+//! The replay set is loaded once (from a `depo/io.rs` JSON file via
+//! [`DepoReplayScenario::from_file`], or handed over in memory) and
+//! every event replays it verbatim: `generate` ignores the seed, so a
+//! replayed event is bit-identical to running the recorded list
+//! directly — the roundtrip witness test in `rust/tests/traffic.rs`
+//! pins exactly that.  The depo JSON format stores every f64 in
+//! shortest-roundtrip form, so file → memory → file loses nothing.
+
+use super::{Scenario, ScenarioWitness};
+use crate::depo::{read_depo_file, Depo};
+use crate::geometry::ApaLayout;
+use std::path::Path;
+
+/// Replays a fixed depo list as a [`Scenario`] (see module docs).
+///
+/// Registered as `depo-replay`; without a `depo_file` configured the
+/// replay set is empty and the scenario behaves like `noise-only`.
+pub struct DepoReplayScenario {
+    depos: Vec<Depo>,
+}
+
+impl DepoReplayScenario {
+    /// Replay an in-memory depo list.
+    pub fn new(depos: Vec<Depo>) -> Self {
+        Self { depos }
+    }
+
+    /// Replay a depo file written by `depo::write_depo_file`.
+    pub fn from_file(path: &Path) -> Result<Self, String> {
+        let depos =
+            read_depo_file(path).map_err(|e| format!("depo file {}: {e}", path.display()))?;
+        Ok(Self::new(depos))
+    }
+
+    /// Number of depos replayed per event.
+    pub fn len(&self) -> usize {
+        self.depos.len()
+    }
+
+    /// True when the replay set is empty.
+    pub fn is_empty(&self) -> bool {
+        self.depos.is_empty()
+    }
+}
+
+impl Scenario for DepoReplayScenario {
+    fn name(&self) -> &str {
+        "depo-replay"
+    }
+
+    fn generate(&self, _layout: &ApaLayout, _seed: u64) -> Vec<Depo> {
+        // literal replay: the seed is deliberately ignored
+        self.depos.clone()
+    }
+
+    fn witness(&self) -> ScenarioWitness {
+        let n = self.depos.len();
+        if n == 0 {
+            return ScenarioWitness {
+                count: (0, 0),
+                mean_charge: (0.0, 0.0),
+            };
+        }
+        let mean = self.depos.iter().map(|d| d.charge).sum::<f64>() / n as f64;
+        // the replayed mean is exact; leave a hair of slack for the
+        // witness's own summation order
+        let slack = mean.abs().max(1.0) * 1e-9;
+        ScenarioWitness {
+            count: (n, n),
+            mean_charge: (mean - slack, mean + slack),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::geometry::Detector;
+
+    fn sample() -> Vec<Depo> {
+        (0..20)
+            .map(|i| {
+                Depo::point(
+                    i as f64 * 10.0,
+                    [50.0 + i as f64, -5.0, 3.0 * i as f64],
+                    4_000.0 + 7.0 * i as f64,
+                    i,
+                )
+            })
+            .collect()
+    }
+
+    #[test]
+    fn replay_is_verbatim_and_seed_blind() {
+        let lay = ApaLayout::for_detector(&Detector::test_small(), 1);
+        let scn = DepoReplayScenario::new(sample());
+        let a = scn.generate(&lay, 1);
+        let b = scn.generate(&lay, 999);
+        assert_eq!(a, sample());
+        assert_eq!(a, b, "replay must ignore the seed");
+        scn.witness().check(&a).unwrap();
+        assert_eq!(scn.len(), 20);
+        assert!(!scn.is_empty());
+    }
+
+    #[test]
+    fn empty_replay_passes_its_own_witness() {
+        let scn = DepoReplayScenario::new(Vec::new());
+        assert!(scn.is_empty());
+        scn.witness().check(&[]).unwrap();
+    }
+
+    #[test]
+    fn file_roundtrip_reproduces_the_list() {
+        let path = std::env::temp_dir().join("wct_replay_scenario_test.json");
+        crate::depo::write_depo_file(&path, &sample()).unwrap();
+        let scn = DepoReplayScenario::from_file(&path).unwrap();
+        let lay = ApaLayout::for_detector(&Detector::test_small(), 1);
+        assert_eq!(scn.generate(&lay, 0), sample());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn missing_file_is_a_clear_error() {
+        let err = DepoReplayScenario::from_file(Path::new("/nonexistent/depos.json"))
+            .err()
+            .unwrap();
+        assert!(err.contains("depos.json"), "{err}");
+    }
+}

@@ -50,8 +50,8 @@ use crate::parallel::{ExecPolicy, ThreadPool};
 use crate::rng::RandomPool;
 use crate::runtime::Runtime;
 use crate::scenario::{
-    BeamTrackScenario, CosmicShowerScenario, HotspotScenario, NoiseOnlyScenario,
-    PileupMixScenario, Scenario,
+    BeamTrackScenario, CosmicShowerScenario, DepoReplayScenario, FullDetectorScenario,
+    HotspotScenario, NoiseOnlyScenario, PileupMixScenario, Scenario,
 };
 use anyhow::{anyhow, Result};
 use std::collections::BTreeMap;
@@ -375,6 +375,47 @@ impl Registry {
                     let det = cfg.detector().map_err(anyhow::Error::msg)?;
                     let s: Box<dyn Scenario> =
                         Box::new(CosmicShowerScenario::new(det, cfg.target_depos));
+                    Ok(s)
+                }),
+            },
+        );
+        reg.register_scenario(
+            "depo-replay",
+            ScenarioEntry {
+                summary: "replay a recorded depo file verbatim every event".into(),
+                physics: "drives recorded samples (depo/io.rs JSON, --depo-file) \
+                          through the same session/sharding/mixed-traffic path; \
+                          empty without a configured file"
+                    .into(),
+                factory: Box::new(|cfg| {
+                    let s: Box<dyn Scenario> = if cfg.depo_file.is_empty() {
+                        Box::new(DepoReplayScenario::new(Vec::new()))
+                    } else {
+                        Box::new(
+                            DepoReplayScenario::from_file(std::path::Path::new(&cfg.depo_file))
+                                .map_err(anyhow::Error::msg)?,
+                        )
+                    };
+                    Ok(s)
+                }),
+            },
+        );
+        reg.register_scenario(
+            "full-detector",
+            ScenarioEntry {
+                summary: "beam spill ⊕ Poisson cosmic pileup, production shape".into(),
+                physics: "the full-detector workload: six ProtoDUNE-SP faces under \
+                          --preset full-detector, with per-window pileup drawn from \
+                          pileup_rate"
+                    .into(),
+                factory: Box::new(|cfg| {
+                    let det = cfg.detector().map_err(anyhow::Error::msg)?;
+                    let s: Box<dyn Scenario> = Box::new(FullDetectorScenario::new(
+                        det,
+                        cfg.target_depos,
+                        cfg.apas,
+                        cfg.pileup_rate,
+                    ));
                     Ok(s)
                 }),
             },

@@ -1,0 +1,196 @@
+//! Mixed-traffic arrival schedule: heterogeneous scenarios at
+//! configurable per-scenario rates.
+//!
+//! A [`TrafficMix`] is parsed from a `"name[:weight],name2[:weight2]"`
+//! spec (`--scenario-mix`); each event of a stream draws its scenario
+//! from the weighted set.  The draw for event `seq` is a **pure
+//! function** of `(base_seed, seq / burst)` — a salted
+//! [`event_seed`](super::event_seed) hash, not a stateful RNG — so the
+//! arrival sequence is identical for any worker count and scheduling
+//! order, the same property the per-event simulation seeds already
+//! have.  `burst > 1` groups arrivals into blocks of `burst`
+//! consecutive events from one scenario, modelling bursty traffic
+//! (hotspot bursts, noise-only idle stretches) without giving up
+//! determinism.
+
+use super::worker::event_seed;
+
+/// Domain-separation salt so the scenario draw never correlates with
+/// the per-event simulation seed (which hashes the same `(base, seq)`).
+const MIX_SALT: u64 = 0x4D49_5854_5241_4646; // "MIXTRAFF"
+
+/// One entry of a traffic mix: a registered scenario name and its
+/// relative arrival weight.
+#[derive(Clone, Debug, PartialEq)]
+pub struct MixEntry {
+    /// Registry key of the scenario ("hotspot", "noise-only", ...).
+    pub scenario: String,
+    /// Relative arrival weight (finite, > 0; need not be normalized).
+    pub weight: f64,
+}
+
+/// A deterministic weighted arrival schedule over scenarios (see
+/// module docs).
+#[derive(Clone, Debug, PartialEq)]
+pub struct TrafficMix {
+    entries: Vec<MixEntry>,
+    total: f64,
+    burst: u64,
+}
+
+impl TrafficMix {
+    /// Parse a `"name[:weight],name2[:weight2]"` spec; a bare name
+    /// gets weight 1.  Rejects empty specs, empty names, duplicate
+    /// names, and non-finite or non-positive weights.  `burst` is the
+    /// arrival block length (clamped to ≥ 1).  Scenario names are
+    /// *not* resolved here — the registry does that when the stream
+    /// builds its workers, so custom registrations keep working.
+    pub fn parse(spec: &str, burst: usize) -> Result<Self, String> {
+        let mut entries: Vec<MixEntry> = Vec::new();
+        for part in spec.split(',') {
+            let part = part.trim();
+            if part.is_empty() {
+                return Err(format!(
+                    "empty entry in scenario mix '{spec}' (stray comma?)"
+                ));
+            }
+            let (name, weight) = match part.split_once(':') {
+                Some((n, w)) => {
+                    let weight: f64 = w
+                        .trim()
+                        .parse()
+                        .map_err(|_| format!("bad weight '{w}' for scenario '{}'", n.trim()))?;
+                    (n.trim(), weight)
+                }
+                None => (part, 1.0),
+            };
+            if name.is_empty() {
+                return Err(format!("missing scenario name in mix entry '{part}'"));
+            }
+            if !weight.is_finite() || weight <= 0.0 {
+                return Err(format!(
+                    "weight for scenario '{name}' must be finite and > 0, got {weight}"
+                ));
+            }
+            if entries.iter().any(|e| e.scenario == name) {
+                return Err(format!("scenario '{name}' listed twice in mix"));
+            }
+            entries.push(MixEntry {
+                scenario: name.to_string(),
+                weight,
+            });
+        }
+        let total = entries.iter().map(|e| e.weight).sum();
+        Ok(Self {
+            entries,
+            total,
+            burst: burst.max(1) as u64,
+        })
+    }
+
+    /// The parsed entries, spec order.
+    pub fn entries(&self) -> &[MixEntry] {
+        &self.entries
+    }
+
+    /// The arrival block length.
+    pub fn burst(&self) -> usize {
+        self.burst as usize
+    }
+
+    /// Scenario index (into [`entries`](Self::entries)) for event
+    /// `seq` of a stream seeded with `base_seed`.  Pure function —
+    /// no state, so any worker may evaluate it for any event.
+    pub fn pick(&self, base_seed: u64, seq: u64) -> usize {
+        let h = event_seed(base_seed ^ MIX_SALT, seq / self.burst);
+        // top 53 bits → uniform in [0, 1), scaled onto the weight line
+        let u = (h >> 11) as f64 * (1.0 / (1u64 << 53) as f64);
+        let mut x = u * self.total;
+        for (i, e) in self.entries.iter().enumerate() {
+            if x < e.weight {
+                return i;
+            }
+            x -= e.weight;
+        }
+        self.entries.len() - 1
+    }
+
+    /// The full arrival sequence for an `events`-long stream — what
+    /// the deterministic-schedule tests compare across worker counts.
+    pub fn schedule(&self, base_seed: u64, events: usize) -> Vec<usize> {
+        (0..events as u64).map(|seq| self.pick(base_seed, seq)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_accepts_weights_and_bare_names() {
+        let mix = TrafficMix::parse("hotspot:3,noise-only,beam-track:0.5", 1).unwrap();
+        let e = mix.entries();
+        assert_eq!(e.len(), 3);
+        assert_eq!(e[0].scenario, "hotspot");
+        assert_eq!(e[0].weight, 3.0);
+        assert_eq!(e[1].scenario, "noise-only");
+        assert_eq!(e[1].weight, 1.0);
+        assert_eq!(e[2].weight, 0.5);
+        assert_eq!(mix.burst(), 1);
+    }
+
+    #[test]
+    fn parse_rejects_malformed_specs() {
+        for bad in [
+            "",
+            "hotspot,,noise-only",
+            "hotspot:abc",
+            "hotspot:-1",
+            "hotspot:0",
+            "hotspot:inf",
+            ":2",
+            "hotspot,hotspot",
+        ] {
+            assert!(TrafficMix::parse(bad, 1).is_err(), "accepted {bad:?}");
+        }
+    }
+
+    #[test]
+    fn pick_is_a_pure_function_of_seed_and_seq() {
+        let mix = TrafficMix::parse("a:1,b:2,c:1", 1).unwrap();
+        let sched = mix.schedule(12345, 256);
+        // re-evaluation and out-of-order evaluation agree
+        assert_eq!(sched, mix.schedule(12345, 256));
+        for (seq, &idx) in sched.iter().enumerate().rev() {
+            assert_eq!(mix.pick(12345, seq as u64), idx);
+        }
+        // a different base seed produces a different sequence
+        assert_ne!(sched, mix.schedule(54321, 256));
+        // every entry appears in a long enough stream
+        for want in 0..3 {
+            assert!(sched.contains(&want), "entry {want} never arrived");
+        }
+    }
+
+    #[test]
+    fn weights_shape_the_arrival_fractions() {
+        let mix = TrafficMix::parse("heavy:9,light:1", 1).unwrap();
+        let sched = mix.schedule(777, 4000);
+        let heavy = sched.iter().filter(|&&i| i == 0).count() as f64 / 4000.0;
+        assert!((heavy - 0.9).abs() < 0.03, "heavy fraction {heavy}");
+    }
+
+    #[test]
+    fn burst_groups_arrivals_into_constant_blocks() {
+        let mix = TrafficMix::parse("a:1,b:1", 4).unwrap();
+        let sched = mix.schedule(42, 64);
+        for block in sched.chunks(4) {
+            assert!(block.iter().all(|&i| i == block[0]), "{sched:?}");
+        }
+        // the block sequence itself still varies
+        let blocks: Vec<usize> = sched.chunks(4).map(|b| b[0]).collect();
+        assert!(blocks.windows(2).any(|w| w[0] != w[1]), "{blocks:?}");
+        // burst 0 clamps to 1
+        assert_eq!(TrafficMix::parse("a", 0).unwrap().burst(), 1);
+    }
+}

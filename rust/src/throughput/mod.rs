@@ -47,15 +47,33 @@
 //!   (`--backend threads:N`), composing worker-level × backend-level
 //!   parallelism.
 //!
+//! ## Mixed traffic
+//!
+//! Production streams are not N identical events: beam triggers,
+//! cosmic activity, hotspot bursts and noise-only idle windows arrive
+//! interleaved.  A [`TrafficMix`] (`--scenario-mix
+//! "hotspot:1,noise-only:3"`, burst length `--mix-burst`) draws each
+//! event's scenario from a weighted set as a *pure function* of
+//! `(cfg.seed, seq)`, so the arrival schedule — like the event seeds —
+//! is identical for any worker count.  The report then carries
+//! per-event latency percentiles (p50/p95/p99 via
+//! [`crate::metrics::LatencySummary`]), per scenario and stream-wide,
+//! in [`ThroughputReport::latency_table`] and
+//! [`ThroughputReport::to_json`]: under a heterogeneous mix the tail
+//! latency, not the mean rate, is what distinguishes backends.
+//!
 //! Entry points: [`run_stream`] (library), `wire-cell throughput`
-//! (CLI), `cargo bench --bench throughput` (scaling study), and
-//! [`crate::harness::throughput`] / [`crate::harness::throughput_scaling`]
-//! which format the paper-style tables.
+//! (CLI), `cargo bench --bench throughput` / `--bench mixed` (scaling
+//! and tail-latency studies), and [`crate::harness::throughput`] /
+//! [`crate::harness::throughput_scaling`] which format the paper-style
+//! tables.
 //!
 //! [`SimSession`]: crate::session::SimSession
 
+mod mixed;
 mod report;
 mod worker;
 
-pub use report::{frame_digest, ThroughputReport, WorkerStats};
+pub use mixed::{MixEntry, TrafficMix};
+pub use report::{frame_digest, ScenarioStats, ThroughputReport, WorkerStats};
 pub use worker::{event_seed, run_stream, StreamOptions};

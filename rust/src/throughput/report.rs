@@ -3,7 +3,8 @@
 
 use crate::backend::StageTimings;
 use crate::frame::Frame;
-use crate::metrics::{RateStats, StageTimer, Table};
+use crate::json::Value;
+use crate::metrics::{LatencySummary, RateStats, StageTimer, Table};
 
 /// One FNV-1a absorption step over a 64-bit word.
 #[inline]
@@ -51,12 +52,31 @@ pub struct WorkerStats {
     pub busy_s: f64,
 }
 
+/// Per-scenario share of a stream run — one row per traffic-mix entry
+/// (a single-scenario stream has exactly one).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ScenarioStats {
+    /// Registry key of the scenario.
+    pub name: String,
+    /// Events this scenario received from the arrival schedule.
+    pub events: u64,
+    /// Depos simulated for this scenario.
+    pub depos: u64,
+    /// Per-event latency summary for this scenario's events.
+    pub latency: LatencySummary,
+}
+
 /// Everything a throughput stream run reports.
 pub struct ThroughputReport {
     /// Headline counters: events, depos, wall-clock.
     pub rate: RateStats,
     /// Per-worker utilisation, in worker-id order.
     pub workers: Vec<WorkerStats>,
+    /// Per-event latency over the whole stream (p50/p95/p99 tails).
+    pub latency: LatencySummary,
+    /// Per-scenario shares, traffic-mix order (one entry for a
+    /// single-scenario stream).
+    pub scenarios: Vec<ScenarioStats>,
     /// Stage timers merged over all events and workers (drift, project,
     /// raster, scatter, ft, noise, adc, plus the `raster.*` sub-steps).
     pub stages: StageTimer,
@@ -146,11 +166,130 @@ impl ThroughputReport {
         }
         t
     }
+
+    /// Per-scenario latency table: events, depos, and the mean /
+    /// p50 / p95 / p99 / max per-event latency in ms, one row per
+    /// traffic-mix entry plus an `(all)` row when the mix has several.
+    /// This is the tail-latency view the mixed-traffic work reports —
+    /// the open-loop service time, i.e. the wall-clock a worker spends
+    /// inside one event, queueing excluded.
+    pub fn latency_table(&self) -> Table {
+        let mut t = Table::new(
+            "per-event latency",
+            &[
+                "Scenario", "Events", "Depos", "Mean [ms]", "p50 [ms]", "p95 [ms]", "p99 [ms]",
+                "Max [ms]",
+            ],
+        );
+        let ms = |s: f64| format!("{:.3}", s * 1e3);
+        let row = |l: &LatencySummary| -> [String; 5] {
+            [ms(l.mean_s), ms(l.p50_s), ms(l.p95_s), ms(l.p99_s), ms(l.max_s)]
+        };
+        for s in &self.scenarios {
+            let [mean, p50, p95, p99, max] = row(&s.latency);
+            t.row(&[s.name.clone(), s.events.to_string(), s.depos.to_string(), mean, p50, p95, p99, max]);
+        }
+        if self.scenarios.len() > 1 {
+            let [mean, p50, p95, p99, max] = row(&self.latency);
+            t.row(&[
+                "(all)".into(),
+                self.rate.events.to_string(),
+                self.rate.depos.to_string(),
+                mean,
+                p50,
+                p95,
+                p99,
+                max,
+            ]);
+        }
+        t
+    }
+
+    /// Machine-readable report (`--json`): headline rates, the frame
+    /// digest (as a zero-padded hex string — JSON numbers cannot carry
+    /// 64 bits), stage totals, per-event latency in ms, per-scenario
+    /// shares, per-worker utilisation, and any per-event errors.
+    pub fn to_json(&self) -> Value {
+        let lat = |l: &LatencySummary| -> Value {
+            Value::object(vec![
+                ("n", Value::from(l.n as f64)),
+                ("mean_ms", Value::from(l.mean_s * 1e3)),
+                ("p50_ms", Value::from(l.p50_s * 1e3)),
+                ("p95_ms", Value::from(l.p95_s * 1e3)),
+                ("p99_ms", Value::from(l.p99_s * 1e3)),
+                ("max_ms", Value::from(l.max_s * 1e3)),
+            ])
+        };
+        let stages: Vec<Value> = self
+            .stages
+            .stages()
+            .into_iter()
+            .map(|(name, secs, calls)| {
+                Value::object(vec![
+                    ("calls", Value::from(calls as f64)),
+                    ("stage", Value::from(name)),
+                    ("total_s", Value::from(secs)),
+                ])
+            })
+            .collect();
+        let scenarios: Vec<Value> = self
+            .scenarios
+            .iter()
+            .map(|s| {
+                Value::object(vec![
+                    ("depos", Value::from(s.depos as f64)),
+                    ("events", Value::from(s.events as f64)),
+                    ("latency", lat(&s.latency)),
+                    ("name", Value::from(s.name.as_str())),
+                ])
+            })
+            .collect();
+        let workers: Vec<Value> = self
+            .workers
+            .iter()
+            .map(|w| {
+                Value::object(vec![
+                    ("busy_s", Value::from(w.busy_s)),
+                    ("depos", Value::from(w.depos as f64)),
+                    ("events", Value::from(w.events as f64)),
+                    ("id", Value::from(w.id)),
+                    ("shards", Value::from(w.shards as f64)),
+                ])
+            })
+            .collect();
+        Value::object(vec![
+            ("backend", Value::from(self.backend.as_str())),
+            ("depos", Value::from(self.rate.depos as f64)),
+            ("depos_per_sec", Value::from(self.depos_per_sec())),
+            ("digest", Value::from(format!("{:016x}", self.digest))),
+            (
+                "errors",
+                Value::Array(self.errors.iter().map(|e| Value::from(e.as_str())).collect()),
+            ),
+            ("events", Value::from(self.rate.events as f64)),
+            ("events_per_sec", Value::from(self.events_per_sec())),
+            ("latency", lat(&self.latency)),
+            ("scenarios", Value::Array(scenarios)),
+            ("stages", Value::Array(stages)),
+            ("wall_s", Value::from(self.rate.wall_s)),
+            ("workers", Value::Array(workers)),
+        ])
+    }
+}
+
+/// Per-scenario accumulation: counters plus the raw latency samples
+/// the percentile summary is computed from at stream end.
+pub(crate) struct ScenarioAgg {
+    pub(crate) name: String,
+    pub(crate) events: u64,
+    pub(crate) depos: u64,
+    pub(crate) latencies: Vec<f64>,
 }
 
 /// Mutable accumulation shared by the workers of one stream run.
 pub(crate) struct Aggregate {
     pub(crate) workers: Vec<WorkerStats>,
+    pub(crate) scenarios: Vec<ScenarioAgg>,
     pub(crate) stages: StageTimer,
     pub(crate) events: u64,
     pub(crate) depos: u64,
@@ -159,13 +298,23 @@ pub(crate) struct Aggregate {
 }
 
 impl Aggregate {
-    /// Empty aggregate for `n` workers.
-    pub(crate) fn new(n: usize) -> Self {
+    /// Empty aggregate for `n` workers over the stream's scenario list
+    /// (the traffic-mix entries, or the single configured scenario).
+    pub(crate) fn new(n: usize, scenario_names: &[String]) -> Self {
         Self {
             workers: (0..n)
                 .map(|id| WorkerStats {
                     id,
                     ..WorkerStats::default()
+                })
+                .collect(),
+            scenarios: scenario_names
+                .iter()
+                .map(|name| ScenarioAgg {
+                    name: name.clone(),
+                    events: 0,
+                    depos: 0,
+                    latencies: Vec::new(),
                 })
                 .collect(),
             stages: StageTimer::new(),
@@ -177,12 +326,15 @@ impl Aggregate {
     }
 
     /// Fold one finished event into the aggregate: the event's global
-    /// depo count, how many APA shards it ran as, its merged stage
-    /// timer, the raster sampling/fluctuation split summed over the
-    /// shards, its frame digest and the worker's busy time.
+    /// depo count, which mix scenario produced it, how many APA shards
+    /// it ran as, its merged stage timer, the raster
+    /// sampling/fluctuation split summed over the shards, its frame
+    /// digest and the worker's busy time (which doubles as the event's
+    /// latency sample).
     pub(crate) fn record(
         &mut self,
         worker: usize,
+        scenario: usize,
         depos: usize,
         shards: usize,
         stages: &StageTimer,
@@ -196,6 +348,11 @@ impl Aggregate {
         self.stages.merge(stages);
         self.stages.add("raster.sampling", raster.sampling_s);
         self.stages.add("raster.fluctuation", raster.fluctuation_s);
+        if let Some(s) = self.scenarios.get_mut(scenario) {
+            s.events += 1;
+            s.depos += depos as u64;
+            s.latencies.push(busy_s);
+        }
         let w = &mut self.workers[worker];
         w.events += 1;
         w.shards += shards as u64;
@@ -233,12 +390,20 @@ mod tests {
 
     #[test]
     fn aggregate_tracks_per_worker_shares() {
-        let mut agg = Aggregate::new(2);
+        let mut agg = Aggregate::new(2, &["hotspot".to_string(), "noise-only".to_string()]);
         assert_eq!(agg.workers.len(), 2);
         assert_eq!(agg.workers[1].id, 1);
         agg.digest ^= 7;
         agg.digest ^= 7;
         assert_eq!(agg.digest, 0); // XOR-combine is order independent
+        // events land on the scenario they were drawn for
+        let t = StageTimer::new();
+        agg.record(0, 1, 0, 1, &t, StageTimings::default(), 3, 0.25);
+        agg.record(1, 0, 120, 2, &t, StageTimings::default(), 5, 0.5);
+        assert_eq!(agg.scenarios[0].events, 1);
+        assert_eq!(agg.scenarios[0].depos, 120);
+        assert_eq!(agg.scenarios[1].events, 1);
+        assert_eq!(agg.scenarios[1].latencies, vec![0.25]);
     }
 
     #[test]
@@ -265,6 +430,21 @@ mod tests {
                     busy_s: 0.5,
                 },
             ],
+            latency: LatencySummary::from_samples(&[0.5, 0.5, 0.5, 0.5]),
+            scenarios: vec![
+                ScenarioStats {
+                    name: "hotspot".into(),
+                    events: 3,
+                    depos: 300,
+                    latency: LatencySummary::from_samples(&[0.5, 0.5, 0.5]),
+                },
+                ScenarioStats {
+                    name: "noise-only".into(),
+                    events: 1,
+                    depos: 100,
+                    latency: LatencySummary::from_samples(&[0.5]),
+                },
+            ],
             stages: {
                 let mut s = StageTimer::new();
                 s.add("raster", 1.0);
@@ -282,5 +462,56 @@ mod tests {
         let wt = report.worker_table().render();
         assert!(wt.contains("75%"));
         assert!(wt.contains("25%"));
+        // latency table: one row per scenario plus the (all) roll-up
+        let lt = report.latency_table();
+        assert_eq!(lt.len(), 3);
+        let lr = lt.render();
+        assert!(lr.contains("hotspot"));
+        assert!(lr.contains("(all)"));
+        assert!(lr.contains("500.000")); // 0.5 s = 500 ms everywhere
+    }
+
+    #[test]
+    fn json_report_is_machine_readable() {
+        let report = ThroughputReport {
+            rate: RateStats {
+                events: 2,
+                depos: 40,
+                wall_s: 0.5,
+            },
+            workers: vec![WorkerStats {
+                id: 0,
+                events: 2,
+                shards: 2,
+                depos: 40,
+                busy_s: 0.4,
+            }],
+            latency: LatencySummary::from_samples(&[0.1, 0.3]),
+            scenarios: vec![ScenarioStats {
+                name: "beam-track".into(),
+                events: 2,
+                depos: 40,
+                latency: LatencySummary::from_samples(&[0.1, 0.3]),
+            }],
+            stages: StageTimer::new(),
+            digest: 0x1f,
+            frames: Vec::new(),
+            errors: vec!["event 1: boom".into()],
+            backend: "serial".into(),
+        };
+        let v = report.to_json();
+        assert_eq!(v.get("events").unwrap().as_usize(), Some(2));
+        assert_eq!(v.get("events_per_sec").unwrap().as_f64(), Some(4.0));
+        // 64-bit digest rides as padded hex text
+        assert_eq!(v.get("digest").unwrap().as_str(), Some("000000000000001f"));
+        let p50_ms = v.path("latency.p50_ms").unwrap().as_f64().unwrap();
+        assert!((p50_ms - 200.0).abs() < 1e-9, "{p50_ms}");
+        assert_eq!(v.path("scenarios.0.name").unwrap().as_str(), Some("beam-track"));
+        assert_eq!(v.path("scenarios.0.latency.n").unwrap().as_usize(), Some(2));
+        assert_eq!(v.path("workers.0.depos").unwrap().as_usize(), Some(40));
+        assert_eq!(v.path("errors.0").unwrap().as_str(), Some("event 1: boom"));
+        // the writer round-trips it
+        let text = crate::json::to_string_pretty(&v);
+        assert_eq!(crate::json::parse(&text).unwrap(), v);
     }
 }

@@ -1,14 +1,15 @@
 //! The worker pool: event tickets, per-worker pipelines, and the
 //! stream driver built on the pooled dataflow engine.
 
-use super::report::{frame_digest, Aggregate, ThroughputReport};
+use super::mixed::TrafficMix;
+use super::report::{frame_digest, Aggregate, ScenarioStats, ThroughputReport};
 use crate::config::SimConfig;
 use crate::dataflow::{run_pooled, FunctionNode, Payload, SinkNode, SourceNode};
 use crate::frame::Frame;
-use crate::metrics::RateStats;
+use crate::metrics::{LatencySummary, RateStats};
 use crate::scenario::{Scenario, ShardExec, ShardedSession};
 use crate::session::{Registry, SimSession};
-use anyhow::Result;
+use anyhow::{anyhow, Result};
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
@@ -79,15 +80,21 @@ impl SourceNode for EventSource {
 }
 
 /// One worker of the pool: a persistent [`ShardedSession`] (one
-/// [`crate::session::SimSession`] per executor slot) plus the
-/// configured scenario, turning event tickets into gathered event
-/// frames and recording timings into the shared aggregate.  On a
-/// single-APA config this is exactly the pre-scenario worker: one
-/// session, one shard, the event seed unchanged.
+/// [`crate::session::SimSession`] per executor slot) plus one
+/// scenario per traffic-mix entry (a single-scenario stream owns
+/// exactly one), turning event tickets into gathered event frames and
+/// recording timings into the shared aggregate.  The mix draw for
+/// event `seq` is a pure function of `(base_seed, seq)`, so every
+/// worker computes the same scenario for the same event — the arrival
+/// schedule is worker-count invariant by construction.  On a
+/// single-APA, single-scenario config this is exactly the pre-scenario
+/// worker: one session, one shard, the event seed unchanged.
 struct SimWorker {
     id: usize,
     pipe: ShardedSession,
-    scenario: Box<dyn Scenario>,
+    scenarios: Vec<Box<dyn Scenario>>,
+    mix: Option<TrafficMix>,
+    base_seed: u64,
     keep_frames: bool,
     agg: Arc<Mutex<Aggregate>>,
 }
@@ -102,8 +109,12 @@ impl FunctionNode for SimWorker {
             return vec![input]; // pass foreign payloads through
         };
         let t0 = Instant::now();
+        let idx = match &self.mix {
+            Some(mix) => mix.pick(self.base_seed, seq),
+            None => 0,
+        };
         let depos = if depos.is_empty() {
-            self.scenario.generate(self.pipe.layout(), seed)
+            self.scenarios[idx].generate(self.pipe.layout(), seed)
         } else {
             depos
         };
@@ -119,6 +130,7 @@ impl FunctionNode for SimWorker {
                 let digest = frame.as_ref().map(frame_digest).unwrap_or(0);
                 self.agg.lock().unwrap().record(
                     self.id,
+                    idx,
                     depos.len(),
                     report.shards.len(),
                     &report.stages,
@@ -168,12 +180,26 @@ impl SinkNode for FrameCollector {
 /// `cfg.target_depos` over `cfg.apas` APAs), then run through a
 /// worker's pipeline — shard by shard when `cfg.apas > 1` (events
 /// parallelize across workers, so each worker runs its shards
-/// serially).  All pipelines are built up front so configuration
-/// errors surface before any thread spawns.
+/// serially).  With a non-empty `cfg.scenario_mix` the event's
+/// scenario is instead drawn from the weighted [`TrafficMix`]
+/// schedule (burst length `cfg.mix_burst`), and the report gains
+/// per-scenario event/latency shares.  All pipelines are built up
+/// front so configuration errors surface before any thread spawns.
 pub fn run_stream(cfg: &SimConfig, opts: &StreamOptions) -> Result<ThroughputReport> {
     let events = opts.events.max(1);
     let workers = opts.workers.max(1).min(events);
-    let agg = Arc::new(Mutex::new(Aggregate::new(workers)));
+    // an empty scenario_mix is the single-scenario stream; otherwise
+    // every mix entry becomes a worker-owned scenario instance and the
+    // arrival schedule picks among them per event
+    let mix = match cfg.scenario_mix.trim() {
+        "" => None,
+        spec => Some(TrafficMix::parse(spec, cfg.mix_burst).map_err(|e| anyhow!(e))?),
+    };
+    let names: Vec<String> = match &mix {
+        Some(m) => m.entries().iter().map(|e| e.scenario.clone()).collect(),
+        None => vec![cfg.scenario.clone()],
+    };
+    let agg = Arc::new(Mutex::new(Aggregate::new(workers, &names)));
     let frames = Arc::new(Mutex::new(Vec::new()));
     let registry = Registry::with_defaults();
     let mut prebuilt: Vec<Box<dyn FunctionNode>> = Vec::with_capacity(workers);
@@ -183,10 +209,20 @@ pub fn run_stream(cfg: &SimConfig, opts: &StreamOptions) -> Result<ThroughputRep
     for id in 0..workers {
         let pipe =
             ShardedSession::with_variate_pool(cfg, ShardExec::Serial, Some(template.as_ref()))?;
+        let scenarios = names
+            .iter()
+            .map(|name| {
+                let mut c = cfg.clone();
+                c.scenario = name.clone();
+                registry.make_scenario(&c)
+            })
+            .collect::<Result<Vec<_>>>()?;
         prebuilt.push(Box::new(SimWorker {
             id,
             pipe,
-            scenario: registry.make_scenario(cfg)?,
+            scenarios,
+            mix: mix.clone(),
+            base_seed: cfg.seed,
             keep_frames: opts.keep_frames,
             agg: agg.clone(),
         }));
@@ -213,8 +249,23 @@ pub fn run_stream(cfg: &SimConfig, opts: &StreamOptions) -> Result<ThroughputRep
     });
     let wall_s = t0.elapsed().as_secs_f64();
     debug_assert_eq!(engine.produced, events as u64);
-    let agg = std::mem::replace(&mut *agg.lock().unwrap(), Aggregate::new(0));
+    let agg = std::mem::replace(&mut *agg.lock().unwrap(), Aggregate::new(0, &[]));
     let frames = std::mem::take(&mut *frames.lock().unwrap());
+    let all_latencies: Vec<f64> = agg
+        .scenarios
+        .iter()
+        .flat_map(|s| s.latencies.iter().copied())
+        .collect();
+    let scenarios: Vec<ScenarioStats> = agg
+        .scenarios
+        .iter()
+        .map(|s| ScenarioStats {
+            name: s.name.clone(),
+            events: s.events,
+            depos: s.depos,
+            latency: LatencySummary::from_samples(&s.latencies),
+        })
+        .collect();
     Ok(ThroughputReport {
         rate: RateStats {
             events: agg.events,
@@ -222,6 +273,8 @@ pub fn run_stream(cfg: &SimConfig, opts: &StreamOptions) -> Result<ThroughputRep
             wall_s,
         },
         workers: agg.workers,
+        latency: LatencySummary::from_samples(&all_latencies),
+        scenarios,
         stages: agg.stages,
         digest: agg.digest,
         frames,
@@ -296,6 +349,71 @@ mod tests {
         assert_eq!(report.rate.events, 2);
         assert!(report.frames.is_empty()); // not kept
         assert_ne!(report.digest, 0); // but still digested
+    }
+
+    #[test]
+    fn mixed_stream_splits_events_across_scenarios() {
+        let mut cfg = small_cfg();
+        cfg.scenario_mix = "hotspot:1,noise-only:1".into();
+        cfg.target_depos = 50;
+        let report = run_stream(
+            &cfg,
+            &StreamOptions {
+                events: 12,
+                workers: 2,
+                keep_frames: false,
+            },
+        )
+        .unwrap();
+        assert!(report.errors.is_empty(), "{:?}", report.errors);
+        assert_eq!(report.scenarios.len(), 2);
+        assert_eq!(report.scenarios[0].name, "hotspot");
+        assert_eq!(report.scenarios[1].name, "noise-only");
+        // shares follow the deterministic schedule exactly
+        let mix = TrafficMix::parse(&cfg.scenario_mix, cfg.mix_burst).unwrap();
+        let sched = mix.schedule(cfg.seed, 12);
+        for (i, s) in report.scenarios.iter().enumerate() {
+            let want = sched.iter().filter(|&&x| x == i).count() as u64;
+            assert_eq!(s.events, want, "{} event share", s.name);
+            assert_eq!(s.latency.n, want);
+        }
+        assert_eq!(report.scenarios.iter().map(|s| s.events).sum::<u64>(), 12);
+        // hotspot events carry exactly target_depos; noise-only none
+        assert_eq!(report.scenarios[0].depos, 50 * report.scenarios[0].events);
+        assert_eq!(report.scenarios[1].depos, 0);
+        // the stream-wide latency roll-up covers every event
+        assert_eq!(report.latency.n, 12);
+        assert!(report.latency.p50_s <= report.latency.p99_s);
+        assert!(report.latency.max_s > 0.0);
+    }
+
+    #[test]
+    fn single_scenario_stream_reports_one_share() {
+        let report = run_stream(
+            &small_cfg(),
+            &StreamOptions {
+                events: 3,
+                workers: 1,
+                keep_frames: false,
+            },
+        )
+        .unwrap();
+        assert_eq!(report.scenarios.len(), 1);
+        assert_eq!(report.scenarios[0].name, "cosmic-shower");
+        assert_eq!(report.scenarios[0].events, 3);
+        assert_eq!(report.latency.n, 3);
+    }
+
+    #[test]
+    fn bad_mix_spec_fails_before_any_thread_spawns() {
+        let mut cfg = small_cfg();
+        cfg.scenario_mix = "hotspot:-2".into();
+        let err = run_stream(&cfg, &StreamOptions::default()).err().unwrap();
+        assert!(format!("{err:#}").contains("finite and > 0"), "{err:#}");
+        // unknown scenario names are caught by the registry
+        cfg.scenario_mix = "not-a-scenario".into();
+        let err = run_stream(&cfg, &StreamOptions::default()).err().unwrap();
+        assert!(format!("{err:#}").contains("not-a-scenario"), "{err:#}");
     }
 
     #[test]

@@ -2,7 +2,9 @@
 //! counts (the engine's core guarantee) and an events/sec smoke test.
 
 use wirecell::config::{BackendChoice, FluctuationMode, SimConfig};
-use wirecell::throughput::{event_seed, frame_digest, run_stream, StreamOptions};
+use wirecell::throughput::{
+    event_seed, frame_digest, run_stream, StreamOptions, TrafficMix,
+};
 
 /// Small but non-trivial stream config: full pipeline (response, noise,
 /// ADC) with the inline-RNG serial backend, whose output is a pure
@@ -91,6 +93,83 @@ fn distinct_events_differ() {
         event_seed(stream_cfg().seed, 0),
         event_seed(stream_cfg().seed, 1)
     );
+}
+
+/// Mixed-traffic determinism: with a fixed seed the weighted arrival
+/// schedule AND every per-event frame are identical for any worker
+/// count — scheduling order is unobservable in the output.
+#[test]
+fn mixed_stream_is_schedule_and_frame_deterministic() {
+    let mut cfg = stream_cfg();
+    cfg.target_depos = 400;
+    cfg.scenario_mix = "hotspot:2,noise-only:1,beam-track:1".into();
+    cfg.mix_burst = 2;
+    let events = 8;
+    let run = |workers: usize| {
+        run_stream(
+            &cfg,
+            &StreamOptions {
+                events,
+                workers,
+                keep_frames: true,
+            },
+        )
+        .unwrap()
+    };
+    let r1 = run(1);
+    let r3 = run(3);
+    assert!(r1.errors.is_empty(), "{:?}", r1.errors);
+    assert!(r3.errors.is_empty(), "{:?}", r3.errors);
+    assert_eq!(r1.digest, r3.digest, "mixed-stream digests diverged");
+
+    let by_seq = |mut frames: Vec<wirecell::frame::Frame>| {
+        frames.sort_by_key(|f| f.ident);
+        frames
+    };
+    let f1 = by_seq(r1.frames.clone());
+    let f3 = by_seq(r3.frames.clone());
+    assert_eq!(f1.len(), events);
+    for (a, b) in f1.iter().zip(&f3) {
+        assert_eq!(a.ident, b.ident);
+        for (pa, pb) in a.planes.iter().zip(&b.planes) {
+            for (x, y) in pa.data.iter().zip(&pb.data) {
+                assert_eq!(x.to_bits(), y.to_bits(), "event {} diverged", a.ident);
+            }
+        }
+    }
+
+    // the arrival schedule is a pure function of (seed, seq) and the
+    // per-scenario event shares in BOTH reports match it exactly
+    let mix = TrafficMix::parse(&cfg.scenario_mix, cfg.mix_burst).unwrap();
+    let sched = mix.schedule(cfg.seed, events);
+    assert_eq!(sched, mix.schedule(cfg.seed, events));
+    assert_eq!(sched.len(), events);
+    for (i, entry) in mix.entries().iter().enumerate() {
+        let want = sched.iter().filter(|&&s| s == i).count() as u64;
+        for r in [&r1, &r3] {
+            let stats = r
+                .scenarios
+                .iter()
+                .find(|s| s.name == entry.scenario)
+                .unwrap_or_else(|| panic!("no stats for '{}'", entry.scenario));
+            assert_eq!(
+                stats.events, want,
+                "scenario '{}' share disagrees with the schedule",
+                entry.scenario
+            );
+        }
+    }
+
+    // every event contributed one latency sample, stream-wide and
+    // summed across scenarios
+    assert_eq!(r1.latency.n, events as u64);
+    assert_eq!(
+        r1.scenarios.iter().map(|s| s.latency.n).sum::<u64>(),
+        events as u64
+    );
+    assert!(r1.latency.p50_s <= r1.latency.p95_s);
+    assert!(r1.latency.p95_s <= r1.latency.p99_s);
+    assert!(r1.latency.p99_s <= r1.latency.max_s);
 }
 
 #[test]
