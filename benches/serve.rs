@@ -1,0 +1,231 @@
+//! Serve-path micro-bench: the per-event cost of the daemon's response
+//! pipeline *outside* the simulation itself — arena checkout/stage,
+//! sparse frame encoding, and decode on the client side — plus an
+//! end-to-end loopback serve of a short event stream.
+//!
+//! Two hard gates ride along:
+//!
+//! 1. **allocation-free witness** — one warm arena cycle (checkout →
+//!    stage → encode → recycle) performs zero heap allocations, the
+//!    same discipline `rust/tests/serve.rs` pins;
+//! 2. **round-trip fidelity** — the encoded bytes decode back to a
+//!    bit-identical frame while being timed.
+//!
+//! ```sh
+//! cargo bench --bench serve
+//! ```
+
+mod common;
+
+use common::counting_alloc::{allocs_on_this_thread as allocs, CountingAlloc};
+use std::time::Instant;
+
+use wirecell::config::{BackendChoice, FluctuationMode, SimConfig};
+use wirecell::frame::PlaneFrame;
+use wirecell::geometry::PlaneId;
+use wirecell::metrics::Table;
+use wirecell::rng::{Pcg32, UniformRng};
+use wirecell::serve::protocol::{decode_record, encode_frame_record};
+use wirecell::serve::{run_load, FrameArena, LoadOptions, Record, ServeOptions, StageTotal};
+
+#[global_allocator]
+static COUNTING_ALLOC: CountingAlloc = CountingAlloc;
+
+/// Detector-shaped planes with a sparse, track-like fill: runs of
+/// consecutive hot ticks on a subset of channels, the shape the sparse
+/// run encoder actually sees in production.
+fn sparse_planes(nchan: usize, nticks: usize, fill_runs: usize, seed: u64) -> Vec<PlaneFrame> {
+    let mut rng = Pcg32::seeded(seed);
+    [PlaneId::U, PlaneId::V, PlaneId::W]
+        .into_iter()
+        .map(|plane| {
+            let mut pf = PlaneFrame::zeros(plane, nchan, nticks);
+            for _ in 0..fill_runs {
+                let c = rng.below(nchan as u32) as usize;
+                let t0 = rng.below((nticks - 16) as u32) as usize;
+                let len = 4 + rng.below(12) as usize;
+                for t in t0..t0 + len {
+                    pf.data[c * nticks + t] += 20.0 + 400.0 * rng.uniform() as f32;
+                }
+            }
+            pf
+        })
+        .collect()
+}
+
+fn time_best(repeat: usize, mut f: impl FnMut()) -> f64 {
+    let mut best = f64::INFINITY;
+    for _ in 0..repeat {
+        let t0 = Instant::now();
+        f();
+        best = best.min(t0.elapsed().as_secs_f64());
+    }
+    best
+}
+
+fn main() -> anyhow::Result<()> {
+    let repeat = common::repeat(5);
+    let cfg = SimConfig::default();
+    let det = cfg.detector().map_err(anyhow::Error::msg)?;
+    let (nchan, nticks) = (det.plane(PlaneId::W).nwires, det.nticks);
+    let reps_per_timing = 16usize;
+
+    // --- arena + encode cycle on detector-shaped frames --------------
+    let srcs = sparse_planes(nchan, nticks, 64, 11);
+    let refs: Vec<&PlaneFrame> = srcs.iter().collect();
+    let stages = [
+        StageTotal {
+            stage: "raster".into(),
+            total_s: 0.2,
+            calls: 3,
+        },
+        StageTotal {
+            stage: "adc".into(),
+            total_s: 0.02,
+            calls: 3,
+        },
+    ];
+    let arena = FrameArena::new(2);
+    // warm: steady-state shape and wire capacity
+    let mut wire_len = 0usize;
+    for seq in 0..2u64 {
+        let mut slot = arena.checkout();
+        slot.stage(seq, &refs);
+        let (frame, wire) = slot.frame_and_wire_mut();
+        encode_frame_record(seq, 7, 100, 50_000, &stages, frame, wire);
+        wire_len = slot.wire().len();
+    }
+
+    let cycle_s = time_best(repeat, || {
+        for seq in 0..reps_per_timing as u64 {
+            let mut slot = arena.checkout();
+            slot.stage(seq, &refs);
+            let (frame, wire) = slot.frame_and_wire_mut();
+            encode_frame_record(seq, 7, 100, 50_000, &stages, frame, wire);
+            std::hint::black_box(slot.wire().len());
+        }
+    }) / reps_per_timing as f64;
+
+    // alloc-free witness on one warm cycle (gate)
+    let before = allocs();
+    {
+        let mut slot = arena.checkout();
+        slot.stage(99, &refs);
+        let (frame, wire) = slot.frame_and_wire_mut();
+        encode_frame_record(99, 7, 100, 50_000, &stages, frame, wire);
+    }
+    let cycle_allocs = allocs() - before;
+    assert_eq!(
+        cycle_allocs, 0,
+        "warm serve cycle allocated {cycle_allocs} times"
+    );
+
+    // --- client-side decode of the same record ------------------------
+    let mut slot = arena.checkout();
+    slot.stage(0, &refs);
+    let (frame, wire) = slot.frame_and_wire_mut();
+    encode_frame_record(0, 7, 100, 50_000, &stages, frame, wire);
+    let bytes = slot.wire().to_vec();
+    let decode_s = time_best(repeat, || {
+        for _ in 0..reps_per_timing {
+            let (rec, used) = decode_record(&bytes).unwrap();
+            std::hint::black_box(used);
+            std::hint::black_box(&rec);
+        }
+    }) / reps_per_timing as f64;
+    // fidelity: the timed decode returns a bit-identical frame
+    let (rec, _) = decode_record(&bytes).unwrap();
+    match rec {
+        Record::Frame(f) => {
+            assert_eq!(f.frame.planes.len(), srcs.len());
+            for (a, b) in f.frame.planes.iter().zip(&srcs) {
+                assert!(
+                    a.data.iter().zip(&b.data).all(|(x, y)| x.to_bits() == y.to_bits()),
+                    "decode changed bytes"
+                );
+            }
+        }
+        other => panic!("decoded {other:?}"),
+    }
+    drop(slot);
+
+    let mut t = Table::new(
+        &format!("Serve path — {nchan} ch x {nticks} ticks x 3 planes, wire {wire_len} B"),
+        &["Step", "Time/event [ms]", "MB/s on the wire"],
+    );
+    let mbs = |s: f64| wire_len as f64 / s / 1e6;
+    t.row(&[
+        "arena stage + sparse encode".into(),
+        format!("{:.3}", cycle_s * 1e3),
+        format!("{:.0}", mbs(cycle_s)),
+    ]);
+    t.row(&[
+        "client decode".into(),
+        format!("{:.3}", decode_s * 1e3),
+        format!("{:.0}", mbs(decode_s)),
+    ]);
+    common::emit(&t);
+
+    // --- end-to-end loopback serve ------------------------------------
+    let mut sim = SimConfig::default();
+    sim.backend = BackendChoice::Serial;
+    sim.fluctuation = FluctuationMode::None;
+    sim.noise = false;
+    sim.target_depos = common::depos(500);
+    sim.seed = 7;
+    let events = common::events(8);
+    let (tx, rx) = std::sync::mpsc::channel();
+    let daemon = {
+        let sim = sim.clone();
+        std::thread::spawn(move || {
+            wirecell::serve::serve_with(&sim, &ServeOptions::default(), move |addr| {
+                let _ = tx.send(addr);
+            })
+        })
+    };
+    let addr = rx.recv().expect("daemon bound");
+    let t0 = Instant::now();
+    let load = run_load(
+        addr,
+        &LoadOptions {
+            events,
+            connections: 2,
+            seed: sim.seed,
+            ..LoadOptions::default()
+        },
+    )?;
+    let wall = t0.elapsed().as_secs_f64();
+    wirecell::serve::shutdown(addr)?;
+    daemon.join().expect("daemon thread")?;
+    let mut t = Table::new(
+        &format!(
+            "Loopback serve — {events} events x {} depos, 1 worker, 2 connections",
+            sim.target_depos
+        ),
+        &["Metric", "Value"],
+    );
+    t.row(&["events/s".into(), format!("{:.2}", load.events_per_sec())]);
+    t.row(&[
+        "service p50 [ms]".into(),
+        format!("{:.3}", load.service.p50_s * 1e3),
+    ]);
+    t.row(&[
+        "service p99 [ms]".into(),
+        format!("{:.3}", load.service.p99_s * 1e3),
+    ]);
+    t.row(&[
+        "queueing p99 [ms]".into(),
+        format!("{:.3}", load.queueing.p99_s * 1e3),
+    ]);
+    t.row(&["campaign wall [s]".into(), format!("{wall:.3}")]);
+    common::emit(&t);
+    assert_eq!(load.served as usize, events, "errors: {:?}", load.errors);
+
+    println!(
+        "serve path: {:.3} ms encode, {:.3} ms decode, {:.2} events/s loopback (0 allocs warm)",
+        cycle_s * 1e3,
+        decode_s * 1e3,
+        load.events_per_sec()
+    );
+    Ok(())
+}

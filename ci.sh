@@ -8,6 +8,7 @@
 #        SKIP_FMT=1 ./ci.sh    # e.g. on toolchains without rustfmt
 #        SKIP_CLIPPY=1 ./ci.sh # e.g. on toolchains without clippy
 #        SKIP_DOC=1 ./ci.sh    # e.g. on toolchains without rustdoc
+#        SKIP_SERVE=1 ./ci.sh  # e.g. on sandboxes without loopback TCP
 set -euo pipefail
 cd "$(dirname "$0")"
 
@@ -18,6 +19,49 @@ run() {
 
 run cargo build --release
 run cargo test -q
+
+# Serve smoke gate: boot the daemon end to end through the shipped
+# binary — OS-assigned port published via the --port-file handshake, a
+# short closed-loop load over the binary wire protocol, a /metrics
+# scrape, and a clean protocol-level shutdown.  Same loopback path
+# rust/tests/serve.rs pins, but with CLI parsing and process lifetime
+# in the loop (see docs/SERVICE.md).
+if [ -z "${SKIP_SERVE:-}" ]; then
+    echo "==> serve smoke (wire-cell serve / serve-load over loopback)"
+    BIN=target/release/wire-cell
+    PORT_FILE=$(mktemp)
+    SERVE_OUT=$(mktemp)
+    "$BIN" serve --port 0 --port-file "$PORT_FILE" \
+        --fluctuation none --target_depos 500 &
+    SERVE_PID=$!
+    for _ in $(seq 1 100); do
+        [ -s "$PORT_FILE" ] && break
+        kill -0 "$SERVE_PID" 2>/dev/null || { echo "daemon exited before binding"; exit 1; }
+        sleep 0.1
+    done
+    if ! [ -s "$PORT_FILE" ]; then
+        kill "$SERVE_PID" 2>/dev/null || true
+        echo "daemon never published its port to $PORT_FILE"
+        exit 1
+    fi
+    if ! "$BIN" serve-load --port-file "$PORT_FILE" --events 3 --connections 2 \
+        --metrics --shutdown >"$SERVE_OUT" 2>&1; then
+        cat "$SERVE_OUT"
+        kill "$SERVE_PID" 2>/dev/null || true
+        echo "serve-load against the daemon failed"
+        exit 1
+    fi
+    if ! grep -q '^wirecell_serve_events_total 3$' "$SERVE_OUT"; then
+        cat "$SERVE_OUT"
+        kill "$SERVE_PID" 2>/dev/null || true
+        echo "metrics scrape missing 'wirecell_serve_events_total 3'"
+        exit 1
+    fi
+    wait "$SERVE_PID"
+    rm -f "$PORT_FILE" "$SERVE_OUT"
+else
+    echo "==> skipping serve smoke (SKIP_SERVE set)"
+fi
 
 # Lint gate: warnings are errors.  The -A list holds the project-wide
 # style dispensations (documented in rust/src/lib.rs); it rides the

@@ -21,7 +21,15 @@ pub struct Cli {
 }
 
 /// Options that are bare flags (never consume a following value).
-const KNOWN_FLAGS: &[&str] = &["noise", "no-response", "no-pjrt", "quiet", "frames"];
+const KNOWN_FLAGS: &[&str] = &[
+    "noise",
+    "no-response",
+    "no-pjrt",
+    "quiet",
+    "frames",
+    "metrics",
+    "shutdown",
+];
 
 impl Cli {
     /// Parse an argument list (exclusive of argv[0]).
@@ -108,6 +116,7 @@ impl Cli {
             ("artifacts_dir", "artifacts_dir"),
             ("scenario-mix", "scenario_mix"),
             ("depo-file", "depo_file"),
+            ("depo-dir", "depo_dir"),
         ] {
             if let Some(v) = self.opt(opt) {
                 overlay.insert(key.to_string(), Value::from(v));
@@ -124,6 +133,9 @@ impl Cli {
             ("time_oversample", "time_oversample"),
             ("roi_pad", "roi_pad"),
             ("mix-burst", "mix_burst"),
+            ("arrival-rate", "arrival_rate"),
+            ("port", "serve_port"),
+            ("queue-depth", "serve_queue"),
         ] {
             if let Some(v) = self.opt(opt) {
                 let n: f64 = v.parse().map_err(|_| format!("bad --{opt}: '{v}'"))?;
@@ -139,6 +151,10 @@ impl Cli {
         // a depo file implies the replay scenario unless one was named
         if self.opt("depo-file").is_some() && self.opt("scenario").is_none() {
             overlay.insert("scenario".into(), Value::from("depo-replay"));
+        }
+        // a depo directory implies the stream-replay scenario likewise
+        if self.opt("depo-dir").is_some() && self.opt("scenario").is_none() {
+            overlay.insert("scenario".into(), Value::from("depo-stream"));
         }
         // --topology drift,raster,scatter → the config's topology array
         // (per-stage overrides need the JSON form; names cover the CLI)
@@ -172,6 +188,10 @@ COMMANDS:
   simulate     run the full pipeline on a generated scenario workload
                (APA-sharded when --apas > 1)
   throughput   stream many events through a pool of pipeline workers
+  serve        run a persistent simulation daemon on a TCP port
+               (binary protocol + GET /metrics; see docs/SERVICE.md)
+  serve-load   closed-loop load generator against a running daemon
+               (--port required; --metrics scrapes, --shutdown stops)
   rasterize    raster+scatter one event's collection plane under the
                configured backend/strategy; prints the grid digest
                (on --backend serial, --strategy batched and fused must
@@ -213,6 +233,24 @@ COMMON OPTIONS:
                            readout window (Poisson, default 2)
   --depo-file <file.json>  replay depos from a file (implies
                            --scenario depo-replay unless one is named)
+  --depo-dir <dir>         replay a directory of depo files as a
+                           sustained stream, sorted order, event seq
+                           picks the file (implies --scenario
+                           depo-stream unless one is named)
+  --arrival-rate <hz>      throughput/serve-load: closed-loop arrival
+                           pacing in events/s (0 = open loop); the
+                           report splits queueing wait from service
+  --port <n>               serve: TCP port (0 = ephemeral);
+                           serve-load: daemon port to target
+  --queue-depth <n>        serve: admission queue bound (default 16;
+                           beyond it requests are rejected with a
+                           retry-after hint)
+  --port-file <file>       serve: write the bound port here once
+                           listening (for scripts using --port 0)
+  --connections <n>        serve-load: concurrent client connections
+  --metrics                serve-load: scrape and print /metrics after
+                           the run
+  --shutdown               serve-load: stop the daemon afterwards
   --apas <n>               anode-plane assemblies tiled along z
                            (default 1; >1 runs APA-sharded)
   --target_depos <n>       workload size, per event (default 100000)
@@ -447,6 +485,52 @@ mod tests {
             "simulate",
             "--depo-file",
             "depos.json",
+            "--scenario",
+            "hotspot",
+        ]))
+        .unwrap();
+        assert_eq!(cli.sim_config().unwrap().scenario, "hotspot");
+    }
+
+    #[test]
+    fn serve_and_pacing_options_wire_through() {
+        let cli = Cli::parse(&args(&[
+            "serve",
+            "--port",
+            "9190",
+            "--queue-depth",
+            "4",
+            "--arrival-rate",
+            "25.5",
+        ]))
+        .unwrap();
+        let cfg = cli.sim_config().unwrap();
+        assert_eq!(cfg.serve_port, 9190);
+        assert_eq!(cfg.serve_queue, 4);
+        assert_eq!(cfg.arrival_rate, 25.5);
+        // defaults when absent
+        let cfg = Cli::parse(&args(&["serve"])).unwrap().sim_config().unwrap();
+        assert_eq!((cfg.serve_port, cfg.serve_queue), (0, 16));
+        assert_eq!(cfg.arrival_rate, 0.0);
+        // --metrics / --shutdown are bare flags, not value options
+        let cli = Cli::parse(&args(&["serve-load", "--metrics", "--shutdown", "--port", "1"]))
+            .unwrap();
+        assert!(cli.has_flag("metrics"));
+        assert!(cli.has_flag("shutdown"));
+        assert_eq!(cli.opt("port"), Some("1"));
+    }
+
+    #[test]
+    fn depo_dir_implies_the_stream_scenario() {
+        let cli = Cli::parse(&args(&["throughput", "--depo-dir", "depos/"])).unwrap();
+        let cfg = cli.sim_config().unwrap();
+        assert_eq!(cfg.scenario, "depo-stream");
+        assert_eq!(cfg.depo_dir, "depos/");
+        // an explicit --scenario wins over the implication
+        let cli = Cli::parse(&args(&[
+            "throughput",
+            "--depo-dir",
+            "depos/",
             "--scenario",
             "hotspot",
         ]))

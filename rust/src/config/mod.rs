@@ -307,6 +307,19 @@ pub struct SimConfig {
     /// Depo file the `depo-replay` scenario replays (depo/io.rs JSON;
     /// empty = an empty replay set).
     pub depo_file: String,
+    /// Directory of depo files the `depo-stream` scenario replays in
+    /// sorted-filename sequence (empty = an empty stream).
+    pub depo_dir: String,
+    /// Closed-loop arrival rate for throughput streams and the
+    /// serve-load generator, events per second of wall clock (0 =
+    /// open loop: submit as fast as workers pull).
+    pub arrival_rate: f64,
+    /// TCP port `wire-cell serve` listens on (0 = ephemeral, kernel
+    /// assigned; the daemon prints the bound address).
+    pub serve_port: usize,
+    /// Bounded request-queue depth for `wire-cell serve`: requests
+    /// beyond this many waiting are rejected with a retry-after hint.
+    pub serve_queue: usize,
     /// Directory holding AOT artifacts.
     pub artifacts_dir: String,
 }
@@ -340,6 +353,10 @@ impl Default for SimConfig {
             scenario_mix: String::new(),
             mix_burst: 1,
             depo_file: String::new(),
+            depo_dir: String::new(),
+            arrival_rate: 0.0,
+            serve_port: 0,
+            serve_queue: 16,
             artifacts_dir: "artifacts".into(),
         }
     }
@@ -436,6 +453,18 @@ impl SimConfig {
         if let Some(s) = get_str("depo_file") {
             self.depo_file = s;
         }
+        if let Some(s) = get_str("depo_dir") {
+            self.depo_dir = s;
+        }
+        if let Some(x) = get_num("arrival_rate") {
+            self.arrival_rate = x;
+        }
+        if let Some(n) = get_usize("serve_port") {
+            self.serve_port = n;
+        }
+        if let Some(n) = get_usize("serve_queue") {
+            self.serve_queue = n.max(1);
+        }
         if let Some(s) = get_str("artifacts_dir") {
             self.artifacts_dir = s;
         }
@@ -500,6 +529,24 @@ impl SimConfig {
             return Err(format!(
                 "pileup_rate {} must be finite and in [0, 64]",
                 self.pileup_rate
+            ));
+        }
+        if !(self.arrival_rate.is_finite() && (0.0..=1e6).contains(&self.arrival_rate)) {
+            return Err(format!(
+                "arrival_rate {} must be finite and in [0, 1e6] events/s",
+                self.arrival_rate
+            ));
+        }
+        if self.serve_port > u16::MAX as usize {
+            return Err(format!(
+                "serve_port {} out of range [0, 65535]",
+                self.serve_port
+            ));
+        }
+        if self.serve_queue == 0 || self.serve_queue > 1 << 20 {
+            return Err(format!(
+                "serve_queue {} out of range [1, 2^20]",
+                self.serve_queue
             ));
         }
         // the mix spec must parse (names resolve later, through the
@@ -572,6 +619,10 @@ impl SimConfig {
             ("scenario_mix", Value::from(self.scenario_mix.as_str())),
             ("mix_burst", Value::from(self.mix_burst)),
             ("depo_file", Value::from(self.depo_file.as_str())),
+            ("depo_dir", Value::from(self.depo_dir.as_str())),
+            ("arrival_rate", Value::from(self.arrival_rate)),
+            ("serve_port", Value::from(self.serve_port)),
+            ("serve_queue", Value::from(self.serve_queue)),
             ("artifacts_dir", Value::from(self.artifacts_dir.as_str())),
         ]);
         to_string_pretty(&v)
@@ -793,6 +844,36 @@ mod tests {
         assert!(err.contains("scenario_mix"), "{err}");
         assert!(SimConfig::from_json(r#"{"pileup_rate": -0.5}"#).is_err());
         assert!(SimConfig::from_json(r#"{"pileup_rate": 1e9}"#).is_err());
+    }
+
+    #[test]
+    fn serve_and_pacing_knobs_overlay_validate_and_roundtrip() {
+        let cfg = SimConfig::from_json(
+            r#"{"arrival_rate": 25.5, "serve_port": 9090, "serve_queue": 4,
+                "depo_dir": "depos/"}"#,
+        )
+        .unwrap();
+        assert_eq!(cfg.arrival_rate, 25.5);
+        assert_eq!(cfg.serve_port, 9090);
+        assert_eq!(cfg.serve_queue, 4);
+        assert_eq!(cfg.depo_dir, "depos/");
+        let back = SimConfig::from_json(&cfg.to_json()).unwrap();
+        assert_eq!(cfg, back);
+        // defaults: open loop, ephemeral port, modest queue, no stream
+        let d = SimConfig::default();
+        assert_eq!(
+            (d.arrival_rate, d.serve_port, d.serve_queue, d.depo_dir.as_str()),
+            (0.0, 0, 16, "")
+        );
+        // queue 0 clamps up on overlay like the other count knobs
+        assert_eq!(SimConfig::from_json(r#"{"serve_queue": 0}"#).unwrap().serve_queue, 1);
+        // rejections
+        assert!(SimConfig::from_json(r#"{"arrival_rate": -1}"#).is_err());
+        assert!(SimConfig::from_json(r#"{"arrival_rate": 1e9}"#).is_err());
+        assert!(SimConfig::from_json(r#"{"serve_port": 70000}"#).is_err());
+        let mut cfg = SimConfig::default();
+        cfg.serve_queue = 0;
+        assert!(cfg.validate().unwrap_err().contains("serve_queue"));
     }
 
     #[test]

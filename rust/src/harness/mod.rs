@@ -573,7 +573,9 @@ pub fn scenario_matrix(
 
 /// Multi-event throughput: run `events` events across `workers` pooled
 /// pipelines and return the per-stage aggregate table plus the full
-/// report (rates, per-worker shares, determinism digest).
+/// report (rates, per-worker shares, determinism digest).  A non-zero
+/// `cfg.arrival_rate` (`--arrival-rate`) paces the stream closed-loop
+/// and the report's queueing summary carries the resulting wait.
 pub fn throughput(
     cfg: &SimConfig,
     events: usize,
@@ -585,6 +587,7 @@ pub fn throughput(
             events,
             workers,
             keep_frames: false,
+            arrival_rate_hz: cfg.arrival_rate,
         },
     )?;
     let table = report.stage_table();
@@ -619,12 +622,14 @@ pub fn throughput_scaling(
         if series.iter().any(|&(prev, _, _)| prev == w) {
             continue; // clamped duplicate of a measured count
         }
+        // always open-loop: the sweep measures capacity, not pacing
         let report = run_stream(
             cfg,
             &StreamOptions {
                 events,
                 workers: w,
                 keep_frames: false,
+                arrival_rate_hz: 0.0,
             },
         )?;
         let wall = report.rate.wall_s;

@@ -23,9 +23,11 @@
 //!   [`coordinator`] (the legacy `SimPipeline` shim + node adapters),
 //!   [`metrics`], [`cli`]
 //! * scale-out: [`scenario`] — named multi-APA workloads and the
-//!   APA-sharded execution path behind `wire-cell scenarios` — and
+//!   APA-sharded execution path behind `wire-cell scenarios` —
 //!   [`throughput`] — the multi-event worker-pool engine behind
-//!   `wire-cell throughput`
+//!   `wire-cell throughput` — and [`serve`] — the persistent
+//!   streaming service (binary wire protocol, frame arena, admission
+//!   control, Prometheus metrics) behind `wire-cell serve`
 //!
 //! See `README.md` for the quickstart, `docs/ARCHITECTURE.md` for the
 //! full layer walk-through (including the `SimPipeline` → `SimSession`
@@ -65,6 +67,7 @@ pub mod rng;
 pub mod runtime;
 pub mod scatter;
 pub mod scenario;
+pub mod serve;
 pub mod session;
 pub mod sigproc;
 pub mod special;

@@ -28,6 +28,8 @@ fn run(args: &[String]) -> Result<()> {
     match cli.command.as_str() {
         "simulate" => simulate(&cli),
         "throughput" => throughput(&cli),
+        "serve" => serve(&cli),
+        "serve-load" => serve_load(&cli),
         "rasterize" => {
             let cfg = cli.sim_config().map_err(|e| anyhow!(e))?;
             let (table, _digest) =
@@ -311,6 +313,92 @@ fn throughput(cli: &Cli) -> Result<()> {
         doc.push('\n');
         std::fs::write(path, doc)?;
         eprintln!("wrote {path}");
+    }
+    for e in &report.errors {
+        eprintln!("event error: {e}");
+    }
+    if report.errors.is_empty() {
+        Ok(())
+    } else {
+        Err(anyhow!("{} event(s) failed", report.errors.len()))
+    }
+}
+
+fn serve(cli: &Cli) -> Result<()> {
+    let cfg = cli.sim_config().map_err(|e| anyhow!(e))?;
+    let opts = wirecell::serve::ServeOptions {
+        port: cfg.serve_port as u16,
+        workers: cfg.workers.max(1),
+        queue_depth: cfg.serve_queue,
+        arena_slots: cli
+            .opt_parse("arena-slots")
+            .map_err(|e| anyhow!(e))?
+            .unwrap_or(0),
+        port_file: cli.opt("port-file").unwrap_or("").to_string(),
+    };
+    let report = wirecell::serve::serve(&cfg, &opts)?;
+    println!(
+        "served {} event(s) ({} requests, {} rejects, {} errors) over {:.1} s",
+        report.served, report.requests, report.rejects, report.errors, report.uptime_s
+    );
+    Ok(())
+}
+
+fn serve_load(cli: &Cli) -> Result<()> {
+    let cfg = cli.sim_config().map_err(|e| anyhow!(e))?;
+    let port = match (cfg.serve_port, cli.opt("port-file")) {
+        (p, _) if p > 0 => p as u16,
+        (_, Some(path)) => std::fs::read_to_string(path)
+            .map_err(|e| anyhow!("{path}: {e}"))?
+            .trim()
+            .parse::<u16>()
+            .map_err(|e| anyhow!("{path}: bad port: {e}"))?,
+        _ => return Err(anyhow!("serve-load needs --port <n> or --port-file <file>")),
+    };
+    let addr = std::net::SocketAddr::from(([127, 0, 0, 1], port));
+    // --scenario on serve-load names what to *request*; an unset
+    // scenario defers to the daemon's own configured default
+    let scenario = cli.opt("scenario").unwrap_or("").to_string();
+    let opts = wirecell::serve::LoadOptions {
+        events: cfg.events,
+        connections: cli
+            .opt_parse("connections")
+            .map_err(|e| anyhow!(e))?
+            .unwrap_or(cfg.workers.max(1)),
+        arrival_rate_hz: cfg.arrival_rate,
+        scenario,
+        seed: cfg.seed,
+        overrides: cli.opt("overrides").unwrap_or("").to_string(),
+        max_retries: cli
+            .opt_parse("max-retries")
+            .map_err(|e| anyhow!(e))?
+            .unwrap_or(10),
+    };
+    let report = wirecell::serve::run_load(addr, &opts)?;
+    println!(
+        "load: {} requested, {} served, {} rejects  ({:.2} events/s over {:.3} s)",
+        report.events,
+        report.served,
+        report.rejects,
+        report.events_per_sec(),
+        report.wall_s
+    );
+    println!(
+        "queueing: p50 {:.3} ms  p95 {:.3} ms  p99 {:.3} ms   service: p50 {:.3} ms  p95 {:.3} ms  p99 {:.3} ms",
+        report.queueing.p50_s * 1e3,
+        report.queueing.p95_s * 1e3,
+        report.queueing.p99_s * 1e3,
+        report.service.p50_s * 1e3,
+        report.service.p95_s * 1e3,
+        report.service.p99_s * 1e3
+    );
+    println!("frame digest: {:016x}  (seed {})", report.digest, cfg.seed);
+    if cli.has_flag("metrics") {
+        print!("{}", wirecell::serve::scrape_metrics(addr)?);
+    }
+    if cli.has_flag("shutdown") {
+        wirecell::serve::shutdown(addr)?;
+        eprintln!("daemon at {addr} asked to shut down");
     }
     for e in &report.errors {
         eprintln!("event error: {e}");

@@ -1,4 +1,10 @@
-//! Metrics: stage timers and paper-style table formatting.
+//! Metrics: stage timers, latency quantiles, paper-style table
+//! formatting, and Prometheus text exposition (the [`prom`] submodule,
+//! re-exported here) for the serve-mode `/metrics` endpoint.
+
+mod prom;
+
+pub use prom::{parse_prometheus, Histogram, PromText};
 
 use std::collections::BTreeMap;
 use std::time::Instant;

@@ -1,0 +1,286 @@
+//! Prometheus text-exposition building blocks for the serve-mode
+//! `/metrics` endpoint.
+//!
+//! The serve daemon ([`crate::serve`]) exposes its counters, gauges,
+//! histograms and latency summaries in the Prometheus text format
+//! (version 0.0.4): `# HELP` / `# TYPE` comment pairs followed by
+//! `name{labels} value` sample lines.  [`PromText`] renders that
+//! format from plain numbers plus the crate's own
+//! [`LatencySummary`](super::LatencySummary); [`Histogram`] is a
+//! fixed-bucket accumulator that renders as a Prometheus histogram
+//! (cumulative `le` buckets plus `_sum` / `_count`); and
+//! [`parse_prometheus`] is the minimal scrape-side parser the tests
+//! and the ci.sh smoke gate use to assert the endpoint stays
+//! machine-readable.
+
+use super::LatencySummary;
+use std::collections::BTreeMap;
+
+/// Format one sample value the way Prometheus expects: `f64` display
+/// form (shortest round-trip), with the special values spelled the
+/// Prometheus way (`+Inf`, `-Inf`, `NaN`).
+fn fmt_value(v: f64) -> String {
+    if v.is_nan() {
+        "NaN".to_string()
+    } else if v == f64::INFINITY {
+        "+Inf".to_string()
+    } else if v == f64::NEG_INFINITY {
+        "-Inf".to_string()
+    } else {
+        format!("{v}")
+    }
+}
+
+/// Fixed-bucket histogram accumulator.
+///
+/// Buckets are defined by their inclusive upper bounds (ascending);
+/// every observation lands in the first bucket whose bound is `>=` the
+/// value, or in the implicit `+Inf` overflow bucket.  Rendering is
+/// cumulative, as the Prometheus `histogram` type requires.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Histogram {
+    bounds: Vec<f64>,
+    counts: Vec<u64>,
+    overflow: u64,
+    sum: f64,
+}
+
+impl Histogram {
+    /// Histogram over the given ascending upper bounds.
+    pub fn new(bounds: &[f64]) -> Self {
+        debug_assert!(
+            bounds.windows(2).all(|w| w[0] < w[1]),
+            "histogram bounds must be strictly ascending"
+        );
+        Self {
+            bounds: bounds.to_vec(),
+            counts: vec![0; bounds.len()],
+            overflow: 0,
+            sum: 0.0,
+        }
+    }
+
+    /// Log-spaced latency buckets from 100 µs to ~30 s — the default
+    /// shape for the serve daemon's service/queue latency histograms.
+    pub fn latency_default() -> Self {
+        Self::new(&[
+            1e-4, 3e-4, 1e-3, 3e-3, 1e-2, 3e-2, 1e-1, 3e-1, 1.0, 3.0, 10.0, 30.0,
+        ])
+    }
+
+    /// Record one observation.
+    pub fn observe(&mut self, v: f64) {
+        self.sum += v;
+        match self.bounds.iter().position(|&b| v <= b) {
+            Some(i) => self.counts[i] += 1,
+            None => self.overflow += 1,
+        }
+    }
+
+    /// Total number of observations.
+    pub fn count(&self) -> u64 {
+        self.counts.iter().sum::<u64>() + self.overflow
+    }
+
+    /// Sum of all observations.
+    pub fn sum(&self) -> f64 {
+        self.sum
+    }
+
+    /// Cumulative `(upper_bound, count)` pairs, ending with the
+    /// `(+Inf, total)` overflow bucket — exactly the sample lines a
+    /// Prometheus `histogram` publishes.
+    pub fn cumulative(&self) -> Vec<(f64, u64)> {
+        let mut out = Vec::with_capacity(self.bounds.len() + 1);
+        let mut acc = 0;
+        for (b, c) in self.bounds.iter().zip(&self.counts) {
+            acc += c;
+            out.push((*b, acc));
+        }
+        out.push((f64::INFINITY, acc + self.overflow));
+        out
+    }
+}
+
+/// Prometheus text-format builder: call the typed appenders, then
+/// [`render`](Self::render).
+///
+/// Metric names are the caller's responsibility (use the
+/// `wirecell_serve_` prefix for the serve daemon); this type owns the
+/// exposition-format details — HELP/TYPE headers, quantile and `le`
+/// labels, `_sum` / `_count` series.
+#[derive(Default)]
+pub struct PromText {
+    out: String,
+}
+
+impl PromText {
+    /// Empty document.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    fn header(&mut self, name: &str, help: &str, kind: &str) {
+        self.out.push_str(&format!("# HELP {name} {help}\n"));
+        self.out.push_str(&format!("# TYPE {name} {kind}\n"));
+    }
+
+    /// Append a counter sample.
+    pub fn counter(&mut self, name: &str, help: &str, value: f64) {
+        self.header(name, help, "counter");
+        self.out.push_str(&format!("{name} {}\n", fmt_value(value)));
+    }
+
+    /// Append a gauge sample.
+    pub fn gauge(&mut self, name: &str, help: &str, value: f64) {
+        self.header(name, help, "gauge");
+        self.out.push_str(&format!("{name} {}\n", fmt_value(value)));
+    }
+
+    /// Append a summary with p50/p95/p99 quantiles from a
+    /// [`LatencySummary`] (plus the conventional `_sum` / `_count`
+    /// series, reconstructed from `mean × n`).
+    pub fn summary(&mut self, name: &str, help: &str, lat: &LatencySummary) {
+        self.header(name, help, "summary");
+        for (q, v) in [
+            ("0.5", lat.p50_s),
+            ("0.95", lat.p95_s),
+            ("0.99", lat.p99_s),
+        ] {
+            self.out
+                .push_str(&format!("{name}{{quantile=\"{q}\"}} {}\n", fmt_value(v)));
+        }
+        self.out.push_str(&format!(
+            "{name}_sum {}\n",
+            fmt_value(lat.mean_s * lat.n as f64)
+        ));
+        self.out.push_str(&format!("{name}_count {}\n", lat.n));
+    }
+
+    /// Append a histogram (cumulative `le` buckets, `_sum`, `_count`).
+    pub fn histogram(&mut self, name: &str, help: &str, h: &Histogram) {
+        self.header(name, help, "histogram");
+        for (le, c) in h.cumulative() {
+            self.out.push_str(&format!(
+                "{name}_bucket{{le=\"{}\"}} {c}\n",
+                fmt_value(le)
+            ));
+        }
+        self.out
+            .push_str(&format!("{name}_sum {}\n", fmt_value(h.sum())));
+        self.out.push_str(&format!("{name}_count {}\n", h.count()));
+    }
+
+    /// The rendered exposition document.
+    pub fn render(self) -> String {
+        self.out
+    }
+}
+
+/// Minimal scrape-side parser: `name{labels} value` per line, comments
+/// and blanks skipped.  Returns samples keyed by the full series name
+/// (labels included, verbatim).  Errors on any non-comment line that
+/// does not split into a series name and a parseable float — which is
+/// exactly the "does the endpoint still emit Prometheus text" gate the
+/// tests and ci.sh need.
+pub fn parse_prometheus(text: &str) -> Result<BTreeMap<String, f64>, String> {
+    let mut out = BTreeMap::new();
+    for (lineno, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let (name, value) = line
+            .rsplit_once(char::is_whitespace)
+            .ok_or_else(|| format!("line {}: no value in '{line}'", lineno + 1))?;
+        let v = match value {
+            "+Inf" => f64::INFINITY,
+            "-Inf" => f64::NEG_INFINITY,
+            "NaN" => f64::NAN,
+            other => other
+                .parse::<f64>()
+                .map_err(|_| format!("line {}: bad value '{other}'", lineno + 1))?,
+        };
+        out.insert(name.trim().to_string(), v);
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_and_gauges_render_and_parse() {
+        let mut p = PromText::new();
+        p.counter("events_total", "Events served", 42.0);
+        p.gauge("queue_depth", "Requests waiting", 3.0);
+        let text = p.render();
+        assert!(text.contains("# TYPE events_total counter"));
+        assert!(text.contains("# HELP queue_depth Requests waiting"));
+        let m = parse_prometheus(&text).unwrap();
+        assert_eq!(m["events_total"], 42.0);
+        assert_eq!(m["queue_depth"], 3.0);
+    }
+
+    #[test]
+    fn summary_emits_quantiles_sum_and_count() {
+        let lat = LatencySummary::from_samples(&[0.1, 0.2, 0.3, 0.4]);
+        let mut p = PromText::new();
+        p.summary("svc_seconds", "Service latency", &lat);
+        let m = parse_prometheus(&p.render()).unwrap();
+        assert!((m["svc_seconds{quantile=\"0.5\"}"] - 0.25).abs() < 1e-12);
+        assert_eq!(m["svc_seconds_count"], 4.0);
+        assert!((m["svc_seconds_sum"] - 1.0).abs() < 1e-12);
+        assert!(m["svc_seconds{quantile=\"0.99\"}"] <= 0.4 + 1e-12);
+    }
+
+    #[test]
+    fn histogram_buckets_are_cumulative_with_inf() {
+        let mut h = Histogram::new(&[0.1, 1.0]);
+        for v in [0.05, 0.5, 0.5, 5.0] {
+            h.observe(v);
+        }
+        assert_eq!(h.count(), 4);
+        assert!((h.sum() - 6.05).abs() < 1e-12);
+        assert_eq!(
+            h.cumulative(),
+            vec![(0.1, 1), (1.0, 3), (f64::INFINITY, 4)]
+        );
+        let mut p = PromText::new();
+        p.histogram("lat_seconds", "Latency", &h);
+        let m = parse_prometheus(&p.render()).unwrap();
+        assert_eq!(m["lat_seconds_bucket{le=\"0.1\"}"], 1.0);
+        assert_eq!(m["lat_seconds_bucket{le=\"+Inf\"}"], 4.0);
+        assert_eq!(m["lat_seconds_count"], 4.0);
+    }
+
+    #[test]
+    fn default_latency_buckets_cover_the_serving_range() {
+        let mut h = Histogram::latency_default();
+        h.observe(1e-5); // faster than the first bound -> first bucket
+        h.observe(120.0); // slower than the last bound -> +Inf
+        let cum = h.cumulative();
+        assert_eq!(cum.first().unwrap().1, 1);
+        assert_eq!(cum.last().unwrap(), &(f64::INFINITY, 2));
+    }
+
+    #[test]
+    fn parser_rejects_malformed_lines() {
+        assert!(parse_prometheus("just_a_name\n").is_err());
+        assert!(parse_prometheus("name not_a_number\n").is_err());
+        // special values parse
+        let m = parse_prometheus("a +Inf\nb NaN\n").unwrap();
+        assert_eq!(m["a"], f64::INFINITY);
+        assert!(m["b"].is_nan());
+    }
+
+    #[test]
+    fn empty_summary_renders_cleanly() {
+        let mut p = PromText::new();
+        p.summary("s", "empty", &LatencySummary::default());
+        let m = parse_prometheus(&p.render()).unwrap();
+        assert_eq!(m["s_count"], 0.0);
+        assert_eq!(m["s_sum"], 0.0);
+    }
+}

@@ -13,14 +13,15 @@
 //!   [`ApaLayout`](crate::geometry::ApaLayout) in global coordinates,
 //!   paired with a [`ScenarioWitness`] (expected depo-count and
 //!   charge-scale bounds) that tests and the benchmark harness check
-//!   before trusting a run.  Seven built-ins cover the physics space
+//!   before trusting a run.  Eight built-ins cover the physics space
 //!   ([`BUILTIN_SCENARIOS`]): beam tracks crossing every APA, cosmic
 //!   showers, beam⊕cosmic pile-up, noise-only pedestal events, a
 //!   hotspot blob that lands everything on one APA (the sharding
 //!   worst case), the production-shaped `full-detector` workload
 //!   (beam ⊕ Poisson-pileup cosmics, ProtoDUNE-SP scale under
-//!   `--preset full-detector`), and `depo-replay` for recorded
-//!   samples.
+//!   `--preset full-detector`), `depo-replay` for one recorded
+//!   sample, and `depo-stream` for a directory of recorded samples
+//!   replayed in sequence (`--depo-dir`).
 //! * [`sharded`] — [`ShardedSession`]: fan an event's depos out to
 //!   per-APA shards, run each shard through its own
 //!   [`SimSession`](crate::session::SimSession) (serially or over a
@@ -63,7 +64,7 @@ mod replay;
 pub mod sharded;
 mod sources;
 
-pub use replay::DepoReplayScenario;
+pub use replay::{DepoReplayScenario, DepoStreamScenario};
 pub use sharded::{
     apa_seed, shard_depos, ShardExec, ShardStats, ShardedReport, ShardedSession,
 };
@@ -83,6 +84,7 @@ pub const BUILTIN_SCENARIOS: &[&str] = &[
     "beam-track",
     "cosmic-shower",
     "depo-replay",
+    "depo-stream",
     "full-detector",
     "hotspot",
     "noise-only",
@@ -144,6 +146,21 @@ pub trait Scenario: Send {
 
     /// Generate one event's depos in global coordinates for `layout`.
     fn generate(&self, layout: &ApaLayout, seed: u64) -> Vec<Depo>;
+
+    /// Generate the depos for event number `seq` of a stream.
+    ///
+    /// Synthetic generators are seed-driven and position-blind, so the
+    /// default simply forwards to [`generate`](Scenario::generate) —
+    /// the stream position is already folded into the per-event seed
+    /// by [`event_seed`](crate::throughput::event_seed).  Replay-style
+    /// scenarios (notably [`DepoStreamScenario`]) override this to
+    /// select the `seq`-th recorded sample, which is what makes a
+    /// replayed stream deterministic for any worker count: workers
+    /// receive `(seq, seed)` tickets, never "whatever file is next".
+    fn generate_seq(&self, layout: &ApaLayout, seed: u64, seq: u64) -> Vec<Depo> {
+        let _ = seq;
+        self.generate(layout, seed)
+    }
 
     /// Expected-statistics bounds for the generated set.
     fn witness(&self) -> ScenarioWitness;

@@ -1,14 +1,24 @@
-//! **depo-replay** — drive a recorded depo sample through the same
-//! session / sharding / mixed-traffic machinery as the synthetic
-//! generators.
+//! **depo-replay** and **depo-stream** — drive recorded depo samples
+//! through the same session / sharding / mixed-traffic machinery as
+//! the synthetic generators.
 //!
-//! The replay set is loaded once (from a `depo/io.rs` JSON file via
+//! [`DepoReplayScenario`] replays *one* recorded sample: the set is
+//! loaded once (from a `depo/io.rs` JSON file via
 //! [`DepoReplayScenario::from_file`], or handed over in memory) and
-//! every event replays it verbatim: `generate` ignores the seed, so a
+//! every event replays it verbatim — `generate` ignores the seed, so a
 //! replayed event is bit-identical to running the recorded list
-//! directly — the roundtrip witness test in `rust/tests/traffic.rs`
+//! directly; the roundtrip witness test in `rust/tests/traffic.rs`
 //! pins exactly that.  The depo JSON format stores every f64 in
 //! shortest-roundtrip form, so file → memory → file loses nothing.
+//!
+//! [`DepoStreamScenario`] generalizes replay to a *sustained stream*:
+//! `--depo-dir <dir>` loads every `*.json` depo file in the directory
+//! in sorted filename order, and event `seq` of a stream replays
+//! sample `seq % len` via
+//! [`Scenario::generate_seq`](super::Scenario::generate_seq).  The
+//! sequence position — not worker arrival order and not the seed —
+//! selects the sample, so a streamed run stays deterministic for any
+//! worker count, in batch mode and behind the serve daemon alike.
 
 use super::{Scenario, ScenarioWitness};
 use crate::depo::{read_depo_file, Depo};
@@ -76,6 +86,108 @@ impl Scenario for DepoReplayScenario {
     }
 }
 
+/// Replays a directory of recorded depo samples in deterministic
+/// (sorted-filename) sequence (see module docs).
+///
+/// Registered as `depo-stream`; configure with `--depo-dir <dir>`.
+/// Without a directory the stream is empty and every event behaves
+/// like `noise-only`.
+pub struct DepoStreamScenario {
+    sets: Vec<Vec<Depo>>,
+}
+
+impl DepoStreamScenario {
+    /// Stream over in-memory samples, replayed round-robin by event
+    /// sequence number.
+    pub fn new(sets: Vec<Vec<Depo>>) -> Self {
+        Self { sets }
+    }
+
+    /// Load every `*.json` depo file under `dir` (non-recursive), in
+    /// sorted filename order.  Errors if the directory is unreadable,
+    /// contains no depo files, or any file fails to parse — a silent
+    /// empty stream would masquerade as noise-only.
+    pub fn from_dir(dir: &Path) -> Result<Self, String> {
+        let entries =
+            std::fs::read_dir(dir).map_err(|e| format!("depo dir {}: {e}", dir.display()))?;
+        let mut paths: Vec<std::path::PathBuf> = entries
+            .filter_map(|e| e.ok().map(|e| e.path()))
+            .filter(|p| p.extension().is_some_and(|x| x == "json"))
+            .collect();
+        paths.sort();
+        if paths.is_empty() {
+            return Err(format!(
+                "depo dir {}: no *.json depo files",
+                dir.display()
+            ));
+        }
+        let mut sets = Vec::with_capacity(paths.len());
+        for p in &paths {
+            sets.push(
+                read_depo_file(p).map_err(|e| format!("depo file {}: {e}", p.display()))?,
+            );
+        }
+        Ok(Self::new(sets))
+    }
+
+    /// Number of recorded samples in the stream cycle.
+    pub fn len(&self) -> usize {
+        self.sets.len()
+    }
+
+    /// True when the stream holds no samples.
+    pub fn is_empty(&self) -> bool {
+        self.sets.is_empty()
+    }
+}
+
+impl Scenario for DepoStreamScenario {
+    fn name(&self) -> &str {
+        "depo-stream"
+    }
+
+    fn generate(&self, layout: &ApaLayout, seed: u64) -> Vec<Depo> {
+        // single-event entry points (simulate, scenario_matrix) see
+        // the head of the stream
+        self.generate_seq(layout, seed, 0)
+    }
+
+    fn generate_seq(&self, _layout: &ApaLayout, _seed: u64, seq: u64) -> Vec<Depo> {
+        if self.sets.is_empty() {
+            return Vec::new();
+        }
+        // literal replay of sample seq % len: seed-blind by design
+        self.sets[(seq % self.sets.len() as u64) as usize].clone()
+    }
+
+    fn witness(&self) -> ScenarioWitness {
+        if self.sets.is_empty() || self.sets.iter().all(|s| s.is_empty()) {
+            return ScenarioWitness {
+                count: (0, 0),
+                mean_charge: (0.0, 0.0),
+            };
+        }
+        // band covering every sample in the cycle: any event of the
+        // stream must land inside
+        let mut count = (usize::MAX, 0usize);
+        let mut charge = (f64::INFINITY, f64::NEG_INFINITY);
+        for set in &self.sets {
+            count.0 = count.0.min(set.len());
+            count.1 = count.1.max(set.len());
+            if !set.is_empty() {
+                let mean = set.iter().map(|d| d.charge).sum::<f64>() / set.len() as f64;
+                charge.0 = charge.0.min(mean);
+                charge.1 = charge.1.max(mean);
+            }
+        }
+        let slack = charge.1.abs().max(1.0) * 1e-9;
+        ScenarioWitness {
+            count,
+            mean_charge: (charge.0 - slack, charge.1 + slack),
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -130,5 +242,83 @@ mod tests {
             .err()
             .unwrap();
         assert!(err.contains("depos.json"), "{err}");
+    }
+
+    fn stream_sets() -> Vec<Vec<Depo>> {
+        (0..3)
+            .map(|k| {
+                (0..(10 + k))
+                    .map(|i| {
+                        Depo::point(
+                            i as f64,
+                            [40.0 + i as f64, 0.0, 2.0 * k as f64],
+                            3_000.0 + 500.0 * k as f64,
+                            i as u64,
+                        )
+                    })
+                    .collect()
+            })
+            .collect()
+    }
+
+    #[test]
+    fn stream_replays_by_sequence_not_seed() {
+        let lay = ApaLayout::for_detector(&Detector::test_small(), 1);
+        let sets = stream_sets();
+        let scn = DepoStreamScenario::new(sets.clone());
+        assert_eq!(scn.len(), 3);
+        for seq in 0..7u64 {
+            let got = scn.generate_seq(&lay, 0xABCD + seq, seq);
+            assert_eq!(got, sets[(seq % 3) as usize], "seq {seq}");
+            scn.witness().check(&got).unwrap();
+        }
+        // generate() is the head of the stream
+        assert_eq!(scn.generate(&lay, 42), sets[0]);
+    }
+
+    #[test]
+    fn stream_witness_bands_cover_every_sample() {
+        let scn = DepoStreamScenario::new(stream_sets());
+        let w = scn.witness();
+        assert_eq!(w.count, (10, 12));
+        assert!(w.mean_charge.0 <= 3_000.0 && w.mean_charge.1 >= 4_000.0);
+        // empty stream has the noise-only witness
+        let empty = DepoStreamScenario::new(Vec::new());
+        assert!(empty.is_empty());
+        empty.witness().check(&[]).unwrap();
+        let lay = ApaLayout::for_detector(&Detector::test_small(), 1);
+        assert!(empty.generate_seq(&lay, 0, 5).is_empty());
+    }
+
+    #[test]
+    fn stream_from_dir_loads_sorted_json_files() {
+        let dir = std::env::temp_dir().join("wct_depo_stream_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let sets = stream_sets();
+        // write out of order; sorted filenames must decide the sequence
+        crate::depo::write_depo_file(&dir.join("evt_002.json"), &sets[2]).unwrap();
+        crate::depo::write_depo_file(&dir.join("evt_000.json"), &sets[0]).unwrap();
+        crate::depo::write_depo_file(&dir.join("evt_001.json"), &sets[1]).unwrap();
+        std::fs::write(dir.join("README.txt"), "not a depo file").unwrap();
+        let scn = DepoStreamScenario::from_dir(&dir).unwrap();
+        assert_eq!(scn.len(), 3);
+        let lay = ApaLayout::for_detector(&Detector::test_small(), 1);
+        for seq in 0..3u64 {
+            assert_eq!(scn.generate_seq(&lay, 0, seq), sets[seq as usize]);
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn stream_dir_errors_are_clear() {
+        let err = DepoStreamScenario::from_dir(Path::new("/nonexistent/depodir"))
+            .err()
+            .unwrap();
+        assert!(err.contains("depodir"), "{err}");
+        let empty = std::env::temp_dir().join("wct_depo_stream_empty_test");
+        std::fs::create_dir_all(&empty).unwrap();
+        let err = DepoStreamScenario::from_dir(&empty).err().unwrap();
+        assert!(err.contains("no *.json"), "{err}");
+        std::fs::remove_dir_all(&empty).ok();
     }
 }

@@ -1,0 +1,338 @@
+//! Zero-copy frame arena: recycled per-event buffers for the serve
+//! hot path.
+//!
+//! Every served event needs two pieces of storage: a staged [`Frame`]
+//! (the gathered per-plane waveforms) and a wire buffer (the encoded
+//! response record).  Allocating them per event would put a
+//! `vec![0.0; nchan*nticks]` per plane on the hot path — exactly the
+//! per-event cost the throughput engine already eliminated for its
+//! scratch buffers.  The arena recycles both instead:
+//!
+//! * [`FrameArena::checkout`] pops a recycled slot from the free list
+//!   (a *hit*) or hands out an empty one (a *miss* — only the first
+//!   few events of a stream, while the arena warms up).
+//! * The worker stages shard planes into `slot.frame` with
+//!   [`ArenaSlot::stage`] (pure `copy_from_slice` once shapes match)
+//!   and encodes the response into `slot.wire`
+//!   (`protocol::encode_record` appends into the retained capacity).
+//! * Dropping the slot — which the connection thread does right after
+//!   `write_all` — returns the buffers to the free list: *return on
+//!   send*.
+//!
+//! Steady state therefore allocates **zero** per-event frame storage;
+//! `rust/tests/serve.rs` pins that with the same counting-allocator
+//! witness technique as `rust/tests/spectral.rs`.  The free list is
+//! pre-reserved to capacity so even the recycling push cannot
+//! allocate.  Slots checked out beyond capacity still work; their
+//! buffers are simply dropped instead of recycled (counted as
+//! `discarded`).
+
+use crate::frame::{Frame, PlaneFrame};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// One recyclable buffer pair (see module docs).
+#[derive(Debug)]
+pub struct SlotBuf {
+    /// Staged event frame (plane Vecs retain capacity across events).
+    pub frame: Frame,
+    /// Encoded wire record (retains capacity across events).
+    pub wire: Vec<u8>,
+}
+
+impl SlotBuf {
+    fn empty() -> Self {
+        Self {
+            frame: Frame {
+                planes: Vec::new(),
+                ident: 0,
+            },
+            wire: Vec::new(),
+        }
+    }
+}
+
+struct ArenaInner {
+    free: Mutex<Vec<SlotBuf>>,
+    capacity: usize,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    recycled: AtomicU64,
+    discarded: AtomicU64,
+}
+
+/// Counter snapshot from [`FrameArena::stats`] — the numbers behind
+/// the daemon's `wirecell_serve_arena_*` metrics.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ArenaStats {
+    /// Checkouts served from the free list.
+    pub hits: u64,
+    /// Checkouts that handed out a fresh (empty) slot.
+    pub misses: u64,
+    /// Slots returned to the free list on drop.
+    pub recycled: u64,
+    /// Slots dropped because the free list was already full.
+    pub discarded: u64,
+    /// Slots currently waiting on the free list.
+    pub free: usize,
+    /// Free-list capacity.
+    pub capacity: usize,
+}
+
+impl ArenaStats {
+    /// Fraction of checkouts served from the free list (1.0 for a
+    /// fresh arena with no traffic, so the metric reads "warm").
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            1.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+}
+
+/// Shared, thread-safe arena of recyclable frame/wire buffer pairs.
+/// Clones share the same free list (`Arc`-backed).
+#[derive(Clone)]
+pub struct FrameArena {
+    inner: Arc<ArenaInner>,
+}
+
+impl FrameArena {
+    /// Arena holding at most `capacity` recycled slots (a good size is
+    /// workers + queue depth: every in-flight event can hold one).
+    pub fn new(capacity: usize) -> Self {
+        let capacity = capacity.max(1);
+        Self {
+            inner: Arc::new(ArenaInner {
+                // pre-reserve so the recycling push never allocates
+                free: Mutex::new(Vec::with_capacity(capacity)),
+                capacity,
+                hits: AtomicU64::new(0),
+                misses: AtomicU64::new(0),
+                recycled: AtomicU64::new(0),
+                discarded: AtomicU64::new(0),
+            }),
+        }
+    }
+
+    /// Check out a slot: recycled if one is free (hit), fresh and
+    /// empty otherwise (miss).  Never blocks beyond the free-list
+    /// mutex; never allocates (a fresh slot's Vecs are empty — their
+    /// storage is allocated lazily by the first [`ArenaSlot::stage`]).
+    pub fn checkout(&self) -> ArenaSlot {
+        let recycled = self.inner.free.lock().unwrap().pop();
+        match recycled {
+            Some(buf) => {
+                self.inner.hits.fetch_add(1, Ordering::Relaxed);
+                ArenaSlot {
+                    buf: Some(buf),
+                    arena: Arc::clone(&self.inner),
+                }
+            }
+            None => {
+                self.inner.misses.fetch_add(1, Ordering::Relaxed);
+                ArenaSlot {
+                    buf: Some(SlotBuf::empty()),
+                    arena: Arc::clone(&self.inner),
+                }
+            }
+        }
+    }
+
+    /// Counter snapshot.
+    pub fn stats(&self) -> ArenaStats {
+        ArenaStats {
+            hits: self.inner.hits.load(Ordering::Relaxed),
+            misses: self.inner.misses.load(Ordering::Relaxed),
+            recycled: self.inner.recycled.load(Ordering::Relaxed),
+            discarded: self.inner.discarded.load(Ordering::Relaxed),
+            free: self.inner.free.lock().unwrap().len(),
+            capacity: self.inner.capacity,
+        }
+    }
+}
+
+/// A checked-out buffer pair; returns itself to the arena on drop
+/// (*return on send*).
+pub struct ArenaSlot {
+    buf: Option<SlotBuf>,
+    arena: Arc<ArenaInner>,
+}
+
+impl ArenaSlot {
+    /// Stage an event into the slot's frame: set `ident` and copy the
+    /// source planes in order.  When the slot's retained shape matches
+    /// (the steady state — one serving config, constant geometry) this
+    /// is pure `copy_from_slice`; on first use or a shape change the
+    /// plane storage is (re)built, which allocates.
+    pub fn stage(&mut self, ident: u64, sources: &[&PlaneFrame]) {
+        let frame = &mut self.buf.as_mut().expect("slot in use").frame;
+        frame.ident = ident;
+        let shape_matches = frame.planes.len() == sources.len()
+            && frame
+                .planes
+                .iter()
+                .zip(sources)
+                .all(|(dst, src)| {
+                    dst.plane == src.plane
+                        && dst.nchan == src.nchan
+                        && dst.nticks == src.nticks
+                });
+        if !shape_matches {
+            frame.planes = sources
+                .iter()
+                .map(|src| PlaneFrame::zeros(src.plane, src.nchan, src.nticks))
+                .collect();
+        }
+        for (dst, src) in frame.planes.iter_mut().zip(sources) {
+            dst.data.copy_from_slice(&src.data);
+        }
+    }
+
+    /// The staged frame.
+    pub fn frame(&self) -> &Frame {
+        &self.buf.as_ref().expect("slot in use").frame
+    }
+
+    /// The wire buffer (encode into it with
+    /// [`protocol::encode_record`](super::protocol::encode_record)
+    /// after clearing; capacity is retained across events).
+    pub fn wire_mut(&mut self) -> &mut Vec<u8> {
+        &mut self.buf.as_mut().expect("slot in use").wire
+    }
+
+    /// The encoded wire bytes.
+    pub fn wire(&self) -> &[u8] {
+        &self.buf.as_ref().expect("slot in use").wire
+    }
+
+    /// Split borrow for the encode step: the staged frame (read) and
+    /// the wire buffer (write) at once, so the serve hot path can run
+    /// [`encode_frame_record`](super::protocol::encode_frame_record)
+    /// straight out of the slot.
+    pub fn frame_and_wire_mut(&mut self) -> (&Frame, &mut Vec<u8>) {
+        let buf = self.buf.as_mut().expect("slot in use");
+        (&buf.frame, &mut buf.wire)
+    }
+}
+
+impl Drop for ArenaSlot {
+    fn drop(&mut self) {
+        if let Some(mut buf) = self.buf.take() {
+            buf.wire.clear(); // keep capacity, drop content
+            let mut free = self.arena.free.lock().unwrap();
+            if free.len() < self.arena.capacity {
+                free.push(buf); // within reserved capacity: no alloc
+                self.arena.recycled.fetch_add(1, Ordering::Relaxed);
+            } else {
+                self.arena.discarded.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::geometry::PlaneId;
+
+    fn source_planes() -> Vec<PlaneFrame> {
+        let mut u = PlaneFrame::zeros(PlaneId::U, 2, 8);
+        u.data[3] = 1.5;
+        let mut v = PlaneFrame::zeros(PlaneId::V, 2, 8);
+        v.data[9] = -2.0;
+        let w = PlaneFrame::zeros(PlaneId::W, 3, 8);
+        vec![u, v, w]
+    }
+
+    #[test]
+    fn checkout_miss_then_recycle_then_hit() {
+        let arena = FrameArena::new(2);
+        let srcs = source_planes();
+        let refs: Vec<&PlaneFrame> = srcs.iter().collect();
+        {
+            let mut slot = arena.checkout();
+            slot.stage(41, &refs);
+            assert_eq!(slot.frame().ident, 41);
+            assert_eq!(slot.frame().planes[0].data[3], 1.5);
+        } // drop → recycle
+        let s = arena.stats();
+        assert_eq!((s.hits, s.misses, s.recycled, s.free), (0, 1, 1, 1));
+        {
+            let mut slot = arena.checkout();
+            // recycled slot still holds the staged shape
+            assert_eq!(slot.frame().planes.len(), 3);
+            slot.stage(42, &refs);
+            assert_eq!(slot.frame().ident, 42);
+        }
+        let s = arena.stats();
+        assert_eq!((s.hits, s.misses), (1, 1));
+        assert_eq!(s.hit_rate(), 0.5);
+    }
+
+    #[test]
+    fn overflow_slots_are_discarded_not_recycled() {
+        let arena = FrameArena::new(1);
+        let a = arena.checkout();
+        let b = arena.checkout();
+        drop(a); // fills the free list
+        drop(b); // free list full → discarded
+        let s = arena.stats();
+        assert_eq!((s.recycled, s.discarded, s.free, s.capacity), (1, 1, 1, 1));
+    }
+
+    #[test]
+    fn stage_rebuilds_on_shape_change_and_copies_bitwise() {
+        let arena = FrameArena::new(1);
+        let srcs = source_planes();
+        let refs: Vec<&PlaneFrame> = srcs.iter().collect();
+        let mut slot = arena.checkout();
+        slot.stage(1, &refs);
+        // a different shape forces a rebuild rather than a bad copy
+        let small = [PlaneFrame::zeros(PlaneId::U, 1, 4)];
+        let small_refs: Vec<&PlaneFrame> = small.iter().collect();
+        slot.stage(2, &small_refs);
+        assert_eq!(slot.frame().planes.len(), 1);
+        assert_eq!(slot.frame().planes[0].data.len(), 4);
+        // back to the original shape: rebuilt again, data bit-exact
+        slot.stage(3, &refs);
+        for (dst, src) in slot.frame().planes.iter().zip(&srcs) {
+            let a: Vec<u32> = dst.data.iter().map(|x| x.to_bits()).collect();
+            let b: Vec<u32> = src.data.iter().map(|x| x.to_bits()).collect();
+            assert_eq!(a, b);
+        }
+    }
+
+    #[test]
+    fn wire_buffer_clears_but_keeps_capacity_across_recycle() {
+        let arena = FrameArena::new(1);
+        let cap_after_first;
+        {
+            let mut slot = arena.checkout();
+            slot.wire_mut().extend_from_slice(&[1, 2, 3, 4, 5, 6, 7, 8]);
+            cap_after_first = slot.wire_mut().capacity();
+            assert!(cap_after_first >= 8);
+        }
+        let mut slot = arena.checkout();
+        assert!(slot.wire().is_empty(), "recycled wire buffer is cleared");
+        assert_eq!(slot.wire_mut().capacity(), cap_after_first);
+    }
+
+    #[test]
+    fn clones_share_one_free_list() {
+        let arena = FrameArena::new(4);
+        let other = arena.clone();
+        drop(other.checkout()); // miss + recycle through the clone
+        let s = arena.stats();
+        assert_eq!((s.misses, s.recycled, s.free), (1, 1, 1));
+        drop(arena.checkout()); // hit through the original
+        assert_eq!(arena.stats().hits, 1);
+    }
+
+    #[test]
+    fn fresh_arena_reads_warm() {
+        assert_eq!(FrameArena::new(8).stats().hit_rate(), 1.0);
+    }
+}

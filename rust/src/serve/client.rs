@@ -1,0 +1,259 @@
+//! Loopback client for the serve daemon — and, pointed at a port with
+//! an arrival rate, a closed-loop load generator (`wire-cell
+//! serve-load`).
+//!
+//! [`ServeClient`] is the thin synchronous wrapper: one TCP
+//! connection, one request in flight ([`ServeClient::request`] writes
+//! a record and blocks for the response).  [`run_load`] builds on it:
+//! `connections` client threads share a global arrival schedule
+//! (ticket `seq` is sent no earlier than `seq / rate` seconds in, the
+//! same closed-loop discipline as the throughput engine's paced
+//! source), honour `retry_after_ms` hints from admission rejects, and
+//! fold every response into a [`LoadReport`] — served/reject/error
+//! counts, the XOR frame digest (comparable against a direct
+//! [`run_stream`](crate::throughput::run_stream) of the same seed),
+//! and the server-observed queueing/service latency summaries.
+
+use super::protocol::{self, Record, Request};
+use crate::metrics::LatencySummary;
+use crate::throughput::{event_seed, frame_digest};
+use anyhow::{anyhow, bail, Context, Result};
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+/// One synchronous connection to a serve daemon.
+pub struct ServeClient {
+    stream: TcpStream,
+}
+
+impl ServeClient {
+    /// Connect to a daemon.
+    pub fn connect(addr: SocketAddr) -> Result<Self> {
+        let stream = TcpStream::connect(addr).with_context(|| format!("connecting {addr}"))?;
+        stream.set_nodelay(true)?;
+        Ok(Self { stream })
+    }
+
+    /// Send one request and block for the daemon's response record
+    /// (frame, reject, or error).
+    pub fn request(&mut self, req: &Request) -> Result<Record> {
+        protocol::write_record(&mut self.stream, &Record::Request(req.clone()))?;
+        protocol::read_record(&mut self.stream)?
+            .ok_or_else(|| anyhow!("daemon closed the connection mid-request"))
+    }
+
+    /// Ask the daemon to drain and stop; blocks for the Ack.
+    pub fn shutdown(&mut self) -> Result<()> {
+        protocol::write_record(&mut self.stream, &Record::Shutdown)?;
+        match protocol::read_record(&mut self.stream)? {
+            Some(Record::Ack) => Ok(()),
+            other => bail!("expected shutdown Ack, got {other:?}"),
+        }
+    }
+}
+
+/// Ask a daemon to shut down (one-shot connection).
+pub fn shutdown(addr: SocketAddr) -> Result<()> {
+    ServeClient::connect(addr)?.shutdown()
+}
+
+/// Fetch the daemon's `/metrics` document (Prometheus text) over
+/// plain HTTP and return the body.
+pub fn scrape_metrics(addr: SocketAddr) -> Result<String> {
+    let mut stream = TcpStream::connect(addr).with_context(|| format!("connecting {addr}"))?;
+    write!(
+        stream,
+        "GET /metrics HTTP/1.1\r\nHost: {addr}\r\nConnection: close\r\n\r\n"
+    )?;
+    let mut raw = String::new();
+    stream.read_to_string(&mut raw)?;
+    let (head, body) = raw
+        .split_once("\r\n\r\n")
+        .ok_or_else(|| anyhow!("malformed HTTP response"))?;
+    let status = head.lines().next().unwrap_or("");
+    if !status.contains("200") {
+        bail!("metrics scrape failed: {status}");
+    }
+    Ok(body.to_string())
+}
+
+/// Options for one [`run_load`] campaign.
+#[derive(Clone, Debug)]
+pub struct LoadOptions {
+    /// Events to request.
+    pub events: usize,
+    /// Concurrent client connections (parallel in-flight requests —
+    /// this is what actually builds a queue at the daemon).
+    pub connections: usize,
+    /// Closed-loop arrival pacing [events/s] (0 = flat out).
+    pub arrival_rate_hz: f64,
+    /// Scenario to request ("" = the daemon's default).
+    pub scenario: String,
+    /// Base seed; event `seq` uses
+    /// [`event_seed`]`(seed, seq)` — the throughput engine's
+    /// convention, so a load run is digest-comparable to a local
+    /// stream of the same seed.
+    pub seed: u64,
+    /// JSON config overrides to send with every request ("" = none,
+    /// the daemon's hot path).
+    pub overrides: String,
+    /// Retries per event after admission rejects (honouring each
+    /// reject's `retry_after_ms` hint) before giving up.
+    pub max_retries: u32,
+}
+
+impl Default for LoadOptions {
+    fn default() -> Self {
+        Self {
+            events: 8,
+            connections: 1,
+            arrival_rate_hz: 0.0,
+            scenario: String::new(),
+            seed: 0,
+            overrides: String::new(),
+            max_retries: 10,
+        }
+    }
+}
+
+/// What a load campaign observed.
+#[derive(Clone, Debug, Default)]
+pub struct LoadReport {
+    /// Events requested.
+    pub events: u64,
+    /// Events served (frames received).
+    pub served: u64,
+    /// Admission rejects received (retried events count each reject).
+    pub rejects: u64,
+    /// Events abandoned (retries exhausted, or error records).
+    pub errors: Vec<String>,
+    /// XOR of the per-frame digests, comparable to
+    /// [`ThroughputReport::digest`](crate::throughput::ThroughputReport)
+    /// for the same seed/scenario/config.
+    pub digest: u64,
+    /// Campaign wall-clock [s].
+    pub wall_s: f64,
+    /// Server-observed queueing wait per served event.
+    pub queueing: LatencySummary,
+    /// Server-observed service time per served event.
+    pub service: LatencySummary,
+}
+
+impl LoadReport {
+    /// Served events per second over the campaign wall-clock.
+    pub fn events_per_sec(&self) -> f64 {
+        if self.wall_s > 0.0 {
+            self.served as f64 / self.wall_s
+        } else {
+            0.0
+        }
+    }
+}
+
+/// Accumulation shared by the load generator's connection threads.
+#[derive(Default)]
+struct LoadAgg {
+    served: u64,
+    rejects: u64,
+    errors: Vec<String>,
+    digest: u64,
+    queue_s: Vec<f64>,
+    service_s: Vec<f64>,
+}
+
+/// Drive a closed-loop load campaign against a daemon.
+///
+/// Events `0..events` are spread round-robin over `connections`
+/// threads; each thread sends event `seq` no earlier than
+/// `seq / arrival_rate_hz` seconds after the campaign starts (flat
+/// out when the rate is 0), retrying admission rejects after the
+/// hinted backoff.
+pub fn run_load(addr: SocketAddr, opts: &LoadOptions) -> Result<LoadReport> {
+    let events = opts.events.max(1);
+    let connections = opts.connections.max(1).min(events);
+    let agg = Mutex::new(LoadAgg::default());
+    let t0 = Instant::now();
+    std::thread::scope(|s| -> Result<()> {
+        let mut handles = Vec::with_capacity(connections);
+        for c in 0..connections {
+            let agg = &agg;
+            let opts = &*opts;
+            handles.push(s.spawn(move || -> Result<()> {
+                let mut client = ServeClient::connect(addr)?;
+                let mut seq = c as u64;
+                while (seq as usize) < events {
+                    if opts.arrival_rate_hz > 0.0 {
+                        let due = t0
+                            + Duration::from_secs_f64(seq as f64 / opts.arrival_rate_hz);
+                        let now = Instant::now();
+                        if due > now {
+                            std::thread::sleep(due - now);
+                        }
+                    }
+                    let req = Request {
+                        seq,
+                        seed: event_seed(opts.seed, seq),
+                        scenario: opts.scenario.clone(),
+                        overrides: opts.overrides.clone(),
+                    };
+                    let mut attempts = 0u32;
+                    loop {
+                        match client.request(&req)? {
+                            Record::Frame(f) => {
+                                let mut a = agg.lock().unwrap();
+                                a.served += 1;
+                                a.digest ^= frame_digest(&f.frame);
+                                a.queue_s.push(f.queue_us as f64 / 1e6);
+                                a.service_s.push(f.service_us as f64 / 1e6);
+                                break;
+                            }
+                            Record::Reject { retry_after_ms, .. } => {
+                                let mut a = agg.lock().unwrap();
+                                a.rejects += 1;
+                                if attempts >= opts.max_retries {
+                                    a.errors.push(format!(
+                                        "event {seq}: dropped after {attempts} retries"
+                                    ));
+                                    break;
+                                }
+                                drop(a);
+                                attempts += 1;
+                                std::thread::sleep(Duration::from_millis(
+                                    u64::from(retry_after_ms.max(1)),
+                                ));
+                            }
+                            Record::Error { message, .. } => {
+                                agg.lock()
+                                    .unwrap()
+                                    .errors
+                                    .push(format!("event {seq}: {message}"));
+                                break;
+                            }
+                            other => bail!("unexpected response: {other:?}"),
+                        }
+                    }
+                    seq += connections as u64;
+                }
+                Ok(())
+            }));
+        }
+        for h in handles {
+            h.join().expect("load thread panicked")?;
+        }
+        Ok(())
+    })?;
+    let wall_s = t0.elapsed().as_secs_f64();
+    let agg = agg.into_inner().unwrap();
+    Ok(LoadReport {
+        events: events as u64,
+        served: agg.served,
+        rejects: agg.rejects,
+        errors: agg.errors,
+        digest: agg.digest,
+        wall_s,
+        queueing: LatencySummary::from_samples(&agg.queue_s),
+        service: LatencySummary::from_samples(&agg.service_s),
+    })
+}

@@ -1,0 +1,736 @@
+//! The `wire-cell serve` daemon: a persistent simulation service on a
+//! TCP socket.
+//!
+//! ```text
+//!              ┌───────────────────────────────────────────────┐
+//!   client ──► │ conn thread: decode Request ── admit ──┐      │
+//!   client ──► │ conn thread: ...                       ▼      │
+//!              │                             bounded VecDeque  │
+//!              │                                  │ Condvar    │
+//!              │   SimWorker 0 (ShardedSession) ◄─┤            │
+//!              │   SimWorker 1 (ShardedSession) ◄─┘            │
+//!              │        │ stage into FrameArena slot,          │
+//!              │        │ encode into slot.wire                │
+//!              │        ▼                                      │
+//!              │   mpsc back to the conn thread ── write_all ──┼─►
+//!              │   (slot drops after send → arena recycle)     │
+//!              └───────────────────────────────────────────────┘
+//! ```
+//!
+//! * **Persistent fleet.** Workers are built once — geometry, response
+//!   spectra, FFT plans, variate pools all warm — and serve the whole
+//!   daemon lifetime, the across-events analogue of the throughput
+//!   engine's per-stream workers.
+//! * **Admission control.** The request queue is bounded
+//!   (`--queue-depth`); a request arriving at a full queue is rejected
+//!   immediately with a `retry_after_ms` hint derived from the EWMA
+//!   service time and the backlog, instead of building an unbounded
+//!   latency tail.
+//! * **Hot and slow paths.** Requests with empty `overrides` run on
+//!   the worker's cached session and per-scenario cache (the hot
+//!   path).  A request carrying config overrides builds a one-off
+//!   session — correct, but paying full construction cost; it is the
+//!   escape hatch, not the steady state.
+//! * **Zero-copy responses.** Event frames are staged into recycled
+//!   [`FrameArena`] slots and encoded into the slot's retained wire
+//!   buffer; the slot returns to the arena when the connection thread
+//!   drops it right after `write_all` (*return on send*).
+//! * **Metrics.** The same socket answers plain `GET /metrics` with
+//!   Prometheus text (see [`super::stats`]); binary clients and
+//!   scrapers share one port.
+//! * **Graceful shutdown.** A [`Record::Shutdown`] sets the flag,
+//!   wakes everyone, drains queued tickets, and the daemon returns a
+//!   final [`ServeReport`].
+
+use super::arena::{ArenaSlot, FrameArena};
+use super::protocol::{self, Record, Request, StageTotal};
+use super::stats::ServeMetrics;
+use crate::config::SimConfig;
+use crate::frame::PlaneFrame;
+use crate::scenario::{Scenario, ShardExec, ShardedReport, ShardedSession};
+use crate::session::{Registry, SimSession};
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::{HashMap, VecDeque};
+use std::io::{ErrorKind, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// Options for one daemon run.
+#[derive(Clone, Debug)]
+pub struct ServeOptions {
+    /// TCP port to bind on loopback (0 = ephemeral; the bound address
+    /// goes to the `on_bound` callback and the optional port file).
+    pub port: u16,
+    /// Simulation workers (each owns a persistent session fleet).
+    pub workers: usize,
+    /// Admission-queue bound: requests beyond `queue_depth` waiting
+    /// tickets are rejected with a retry hint.
+    pub queue_depth: usize,
+    /// Frame-arena slots (0 = auto: workers + queue depth, so every
+    /// in-flight event can hold one).
+    pub arena_slots: usize,
+    /// Write the bound port number to this file once listening
+    /// ("" = don't).  Lets scripts start on port 0 and discover the
+    /// real port race-free.
+    pub port_file: String,
+}
+
+impl Default for ServeOptions {
+    fn default() -> Self {
+        Self {
+            port: 0,
+            workers: 1,
+            queue_depth: 16,
+            arena_slots: 0,
+            port_file: String::new(),
+        }
+    }
+}
+
+/// Final accounting a daemon returns after shutdown.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct ServeReport {
+    /// Requests accepted off the wire.
+    pub requests: u64,
+    /// Events simulated and served.
+    pub served: u64,
+    /// Requests rejected by admission control.
+    pub rejects: u64,
+    /// Requests that failed.
+    pub errors: u64,
+    /// Daemon lifetime [s].
+    pub uptime_s: f64,
+}
+
+/// One admitted request waiting for a worker.
+struct Ticket {
+    req: Request,
+    arrival: Instant,
+    reply: mpsc::Sender<Reply>,
+}
+
+/// What a worker hands back to the connection thread.
+enum Reply {
+    /// A served event: the arena slot with the encoded record in its
+    /// wire buffer.  Dropping it (after send) recycles the buffers.
+    Slot(ArenaSlot),
+    /// A control record (error) to write conventionally.
+    Record(Record),
+}
+
+/// State shared by the accept loop, connection threads and workers.
+struct Shared {
+    queue: Mutex<VecDeque<Ticket>>,
+    cv: Condvar,
+    shutdown: AtomicBool,
+    metrics: ServeMetrics,
+    arena: FrameArena,
+    queue_depth: usize,
+    workers: usize,
+    started: Instant,
+}
+
+impl Shared {
+    /// Flip the shutdown flag *under the queue lock* and wake
+    /// everyone.  The lock matters: admission and worker-exit checks
+    /// also run under it, so no ticket can be admitted after the last
+    /// worker has decided the queue is drained (which would strand the
+    /// client waiting on a reply that never comes).
+    fn begin_shutdown(&self) {
+        let _q = self.queue.lock().unwrap();
+        self.shutdown.store(true, Ordering::SeqCst);
+        self.cv.notify_all();
+    }
+
+    /// Admit a request or reject it with a retry hint (queue full).
+    fn admit(&self, req: Request, reply: mpsc::Sender<Reply>) -> Result<(), Record> {
+        let mut q = self.queue.lock().unwrap();
+        if self.shutdown.load(Ordering::SeqCst) {
+            return Err(Record::Error {
+                seq: req.seq,
+                message: "daemon is shutting down".into(),
+            });
+        }
+        if q.len() >= self.queue_depth {
+            self.metrics.on_reject();
+            return Err(Record::Reject {
+                seq: req.seq,
+                retry_after_ms: self.metrics.retry_after_ms(q.len(), self.workers),
+                queue_len: q.len() as u32,
+            });
+        }
+        q.push_back(Ticket {
+            req,
+            arrival: Instant::now(),
+            reply,
+        });
+        self.metrics.set_queue_depth(q.len());
+        self.cv.notify_one();
+        Ok(())
+    }
+
+    /// Blocking pop for workers.  `None` = shutdown with the queue
+    /// drained (queued tickets are still served after the flag flips).
+    fn next_ticket(&self) -> Option<Ticket> {
+        let mut q = self.queue.lock().unwrap();
+        loop {
+            if let Some(t) = q.pop_front() {
+                self.metrics.set_queue_depth(q.len());
+                return Some(t);
+            }
+            if self.shutdown.load(Ordering::SeqCst) {
+                return None;
+            }
+            let (guard, _) = self.cv.wait_timeout(q, Duration::from_millis(100)).unwrap();
+            q = guard;
+        }
+    }
+}
+
+/// One simulation worker: a persistent [`ShardedSession`] on the base
+/// config plus a per-scenario cache for override-free requests.
+struct Worker {
+    session: ShardedSession,
+    scenarios: HashMap<String, Box<dyn Scenario>>,
+    registry: Registry,
+    base: SimConfig,
+}
+
+impl Worker {
+    fn run(&mut self, shared: &Shared) {
+        while let Some(ticket) = shared.next_ticket() {
+            let start = Instant::now();
+            let queue_s = start.saturating_duration_since(ticket.arrival).as_secs_f64();
+            let reply = match self.serve_one(&ticket.req, queue_s, start, shared) {
+                Ok(slot) => {
+                    shared
+                        .metrics
+                        .on_served(queue_s, start.elapsed().as_secs_f64());
+                    Reply::Slot(slot)
+                }
+                Err(e) => {
+                    shared.metrics.on_error();
+                    Reply::Record(Record::Error {
+                        seq: ticket.req.seq,
+                        message: format!("{e:#}"),
+                    })
+                }
+            };
+            // a dead receiver means the client hung up; a Slot reply
+            // still recycles through its Drop either way
+            let _ = ticket.reply.send(reply);
+        }
+    }
+
+    fn serve_one(
+        &mut self,
+        req: &Request,
+        queue_s: f64,
+        start: Instant,
+        shared: &Shared,
+    ) -> Result<ArenaSlot> {
+        let report = if req.overrides.is_empty() {
+            // hot path: cached session, cached scenario
+            let name = if req.scenario.is_empty() {
+                self.base.scenario.clone()
+            } else {
+                req.scenario.clone()
+            };
+            if !self.scenarios.contains_key(&name) {
+                let mut c = self.base.clone();
+                c.scenario = name.clone();
+                let sc = self.registry.make_scenario(&c)?;
+                self.scenarios.insert(name.clone(), sc);
+            }
+            let depos = self.scenarios[&name].generate_seq(
+                self.session.layout(),
+                req.seed,
+                req.seq,
+            );
+            self.session.run_event(req.seed, &depos)?
+        } else {
+            // slow path: a one-off config and session for this request
+            let doc = crate::json::parse(&req.overrides)
+                .map_err(|e| anyhow!("bad overrides JSON: {e}"))?;
+            let mut c = self.base.clone();
+            c.overlay(&doc).map_err(anyhow::Error::msg)?;
+            if !req.scenario.is_empty() {
+                c.scenario = req.scenario.clone();
+            }
+            c.validate().map_err(anyhow::Error::msg)?;
+            let mut session = ShardedSession::new(&c, ShardExec::Serial)?;
+            let scenario = self.registry.make_scenario(&c)?;
+            let depos = scenario.generate_seq(session.layout(), req.seed, req.seq);
+            session.run_event(req.seed, &depos)?
+        };
+        stage_reply(&report, req, queue_s, start, shared)
+    }
+}
+
+/// Stage a finished event into an arena slot and encode the FRAME
+/// record into the slot's wire buffer.
+fn stage_reply(
+    report: &ShardedReport,
+    req: &Request,
+    queue_s: f64,
+    start: Instant,
+    shared: &Shared,
+) -> Result<ArenaSlot> {
+    let mut sources: Vec<&PlaneFrame> = Vec::with_capacity(report.frames.len() * 3);
+    for f in &report.frames {
+        let f = f
+            .as_ref()
+            .ok_or_else(|| anyhow!("daemon topology runs frame-less; nothing to serve"))?;
+        sources.extend(f.planes.iter());
+    }
+    let stages: Vec<StageTotal> = report
+        .stages
+        .stages()
+        .into_iter()
+        .map(|(stage, total_s, calls)| StageTotal {
+            stage,
+            total_s,
+            calls,
+        })
+        .collect();
+    let mut slot = shared.arena.checkout();
+    slot.stage(req.seq, &sources);
+    let (frame, wire) = slot.frame_and_wire_mut();
+    protocol::encode_frame_record(
+        req.seq,
+        req.seed,
+        (queue_s * 1e6) as u64,
+        (start.elapsed().as_secs_f64() * 1e6) as u64,
+        &stages,
+        frame,
+        wire,
+    );
+    Ok(slot)
+}
+
+/// `read_exact` that tolerates read timeouts so the connection thread
+/// can notice shutdown between bytes.  Returns `Ok(false)` on clean
+/// EOF / shutdown before the first byte (only when `eof_ok`).
+fn read_exact_or_shutdown(
+    stream: &mut TcpStream,
+    buf: &mut [u8],
+    shared: &Shared,
+    eof_ok: bool,
+) -> Result<bool> {
+    let mut got = 0;
+    while got < buf.len() {
+        match stream.read(&mut buf[got..]) {
+            Ok(0) => {
+                if got == 0 && eof_ok {
+                    return Ok(false);
+                }
+                bail!("connection closed mid-record");
+            }
+            Ok(n) => got += n,
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    ErrorKind::WouldBlock | ErrorKind::TimedOut | ErrorKind::Interrupted
+                ) =>
+            {
+                if shared.shutdown.load(Ordering::SeqCst) {
+                    if got == 0 && eof_ok {
+                        return Ok(false);
+                    }
+                    bail!("shutdown during record read");
+                }
+            }
+            Err(e) => return Err(e.into()),
+        }
+    }
+    Ok(true)
+}
+
+/// Read one record, waking on shutdown.  `Ok(None)` = clean end of
+/// conversation (EOF at a record boundary, or shutdown).
+fn read_record_interruptible(stream: &mut TcpStream, shared: &Shared) -> Result<Option<Record>> {
+    let mut len_buf = [0u8; 4];
+    if !read_exact_or_shutdown(stream, &mut len_buf, shared, true)? {
+        return Ok(None);
+    }
+    let len = u32::from_le_bytes(len_buf);
+    if len > protocol::MAX_RECORD_LEN {
+        bail!("record length {len} exceeds MAX_RECORD_LEN");
+    }
+    let mut payload = vec![0u8; len as usize];
+    read_exact_or_shutdown(stream, &mut payload, shared, false)?;
+    protocol::decode_payload(&payload).map(Some)
+}
+
+/// Serve `GET /metrics` (and 404 anything else) on an HTTP/1.x
+/// connection, then close it.
+fn serve_http(stream: &mut TcpStream, shared: &Shared) {
+    // drain the request head (cap 16 KiB — scrapers send tiny GETs)
+    let mut head = Vec::with_capacity(512);
+    let mut byte = [0u8; 1];
+    while head.len() < 16 * 1024 && !head.ends_with(b"\r\n\r\n") {
+        match stream.read(&mut byte) {
+            Ok(1) => head.push(byte[0]),
+            Ok(_) => break,
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    ErrorKind::WouldBlock | ErrorKind::TimedOut | ErrorKind::Interrupted
+                ) =>
+            {
+                if shared.shutdown.load(Ordering::SeqCst) {
+                    return;
+                }
+            }
+            Err(_) => return,
+        }
+    }
+    let line = String::from_utf8_lossy(&head);
+    let path = line.split_whitespace().nth(1).unwrap_or("");
+    let (status, body) = if path == "/metrics" || path.starts_with("/metrics?") {
+        let uptime = shared.started.elapsed().as_secs_f64();
+        (
+            "200 OK",
+            shared.metrics.render(&shared.arena.stats(), uptime),
+        )
+    } else {
+        ("404 Not Found", "only /metrics lives here\n".to_string())
+    };
+    let response = format!(
+        "HTTP/1.1 {status}\r\nContent-Type: text/plain; version=0.0.4; charset=utf-8\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{body}",
+        body.len()
+    );
+    let _ = stream.write_all(response.as_bytes());
+}
+
+/// Drive one client connection: HTTP scrape or binary record loop.
+fn handle_conn(mut stream: TcpStream, shared: &Shared) {
+    let _ = stream.set_read_timeout(Some(Duration::from_millis(250)));
+    let _ = stream.set_nodelay(true);
+    // discriminate by the first 4 bytes: "GET " is never a plausible
+    // record length prefix for a Request (it would be ~half a GiB)
+    let mut probe = [0u8; 4];
+    loop {
+        match stream.peek(&mut probe) {
+            Ok(4) => break,
+            Ok(0) => return,
+            Ok(_) => std::thread::sleep(Duration::from_millis(2)),
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    ErrorKind::WouldBlock | ErrorKind::TimedOut | ErrorKind::Interrupted
+                ) =>
+            {
+                if shared.shutdown.load(Ordering::SeqCst) {
+                    return;
+                }
+            }
+            Err(_) => return,
+        }
+    }
+    if &probe == b"GET " {
+        serve_http(&mut stream, shared);
+        return;
+    }
+    loop {
+        let rec = match read_record_interruptible(&mut stream, shared) {
+            Ok(Some(r)) => r,
+            Ok(None) => return,
+            Err(e) => {
+                // a malformed record poisons the framing; answer and
+                // drop the connection
+                let _ = protocol::write_record(
+                    &mut stream,
+                    &Record::Error {
+                        seq: 0,
+                        message: format!("{e:#}"),
+                    },
+                );
+                return;
+            }
+        };
+        match rec {
+            Record::Request(req) => {
+                shared.metrics.on_request();
+                let (tx, rx) = mpsc::channel();
+                match shared.admit(req, tx) {
+                    Err(reject) => {
+                        if protocol::write_record(&mut stream, &reject).is_err() {
+                            return;
+                        }
+                    }
+                    Ok(()) => match rx.recv() {
+                        Ok(Reply::Slot(slot)) => {
+                            if stream.write_all(slot.wire()).is_err() {
+                                return;
+                            }
+                            // slot drops here: return on send
+                        }
+                        Ok(Reply::Record(rec)) => {
+                            if protocol::write_record(&mut stream, &rec).is_err() {
+                                return;
+                            }
+                        }
+                        Err(_) => return, // workers gone
+                    },
+                }
+            }
+            Record::Shutdown => {
+                shared.begin_shutdown();
+                let _ = protocol::write_record(&mut stream, &Record::Ack);
+                return;
+            }
+            other => {
+                let _ = protocol::write_record(
+                    &mut stream,
+                    &Record::Error {
+                        seq: 0,
+                        message: format!("unexpected client record kind {other:?}"),
+                    },
+                );
+            }
+        }
+    }
+}
+
+/// Run the daemon until a client sends [`Record::Shutdown`], calling
+/// `on_bound` with the listening address once the socket is up (tests
+/// and scripts use it to learn an ephemeral port race-free).
+///
+/// Binds loopback only: the daemon speaks an unauthenticated binary
+/// protocol and is a local service by design.
+pub fn serve_with(
+    cfg: &SimConfig,
+    opts: &ServeOptions,
+    on_bound: impl FnOnce(SocketAddr),
+) -> Result<ServeReport> {
+    cfg.validate().map_err(anyhow::Error::msg)?;
+    let workers = opts.workers.max(1);
+    let queue_depth = opts.queue_depth.max(1);
+    let arena_slots = if opts.arena_slots == 0 {
+        workers + queue_depth
+    } else {
+        opts.arena_slots
+    };
+    // build the whole fleet before accepting anything, so config
+    // errors surface immediately and every connection hits warm state
+    let template = SimSession::variate_pool_for(cfg);
+    let mut fleet = Vec::with_capacity(workers);
+    for _ in 0..workers {
+        let session =
+            ShardedSession::with_variate_pool(cfg, ShardExec::Serial, Some(template.as_ref()))?;
+        let registry = Registry::with_defaults();
+        let mut scenarios = HashMap::new();
+        scenarios.insert(cfg.scenario.clone(), registry.make_scenario(cfg)?);
+        fleet.push(Worker {
+            session,
+            scenarios,
+            registry,
+            base: cfg.clone(),
+        });
+    }
+    let listener = TcpListener::bind(("127.0.0.1", opts.port))
+        .with_context(|| format!("binding 127.0.0.1:{}", opts.port))?;
+    listener.set_nonblocking(true)?;
+    let addr = listener.local_addr()?;
+    if !opts.port_file.is_empty() {
+        std::fs::write(&opts.port_file, format!("{}\n", addr.port()))
+            .with_context(|| format!("writing port file {}", opts.port_file))?;
+    }
+    let shared = Shared {
+        queue: Mutex::new(VecDeque::new()),
+        cv: Condvar::new(),
+        shutdown: AtomicBool::new(false),
+        metrics: ServeMetrics::new(),
+        arena: FrameArena::new(arena_slots),
+        queue_depth,
+        workers,
+        started: Instant::now(),
+    };
+    on_bound(addr);
+    std::thread::scope(|s| {
+        for mut worker in fleet.drain(..) {
+            let shared = &shared;
+            s.spawn(move || worker.run(shared));
+        }
+        loop {
+            if shared.shutdown.load(Ordering::SeqCst) {
+                break;
+            }
+            match listener.accept() {
+                Ok((stream, _peer)) => {
+                    let shared = &shared;
+                    s.spawn(move || handle_conn(stream, shared));
+                }
+                Err(e) if e.kind() == ErrorKind::WouldBlock => {
+                    std::thread::sleep(Duration::from_millis(25));
+                }
+                Err(e) if e.kind() == ErrorKind::Interrupted => {}
+                Err(e) => {
+                    // a broken listener is fatal; wake everyone and stop
+                    shared.begin_shutdown();
+                    eprintln!("wire-cell serve: accept failed: {e}");
+                    break;
+                }
+            }
+        }
+        // scope waits for workers (queue drain) and open connections
+    });
+    Ok(ServeReport {
+        requests: shared.metrics.requests(),
+        served: shared.metrics.served(),
+        rejects: shared.metrics.rejects(),
+        errors: shared.metrics.errors(),
+        uptime_s: shared.started.elapsed().as_secs_f64(),
+    })
+}
+
+/// [`serve_with`] plus console output — the `wire-cell serve`
+/// subcommand body.
+pub fn serve(cfg: &SimConfig, opts: &ServeOptions) -> Result<ServeReport> {
+    let report = serve_with(cfg, opts, |addr| {
+        println!("wire-cell serve: listening on {addr} (scenario '{}')", cfg.scenario);
+        println!("wire-cell serve: metrics at http://{addr}/metrics");
+    })?;
+    println!(
+        "wire-cell serve: shut down after {:.1}s — {} served, {} rejected, {} errors",
+        report.uptime_s, report.served, report.rejects, report.errors
+    );
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{BackendChoice, FluctuationMode};
+    use std::net::TcpStream;
+
+    fn small_cfg() -> SimConfig {
+        let mut cfg = SimConfig::default();
+        cfg.backend = BackendChoice::Serial;
+        cfg.fluctuation = FluctuationMode::None;
+        cfg.noise = false;
+        cfg.target_depos = 60;
+        cfg.pool_size = 1 << 14;
+        cfg.seed = 99;
+        cfg
+    }
+
+    /// Spawn a daemon on an ephemeral port; returns its address and
+    /// the join handle yielding the final report.
+    fn spawn_daemon(
+        cfg: SimConfig,
+        opts: ServeOptions,
+    ) -> (SocketAddr, std::thread::JoinHandle<Result<ServeReport>>) {
+        let (tx, rx) = mpsc::channel();
+        let handle = std::thread::spawn(move || {
+            serve_with(&cfg, &opts, move |addr| {
+                let _ = tx.send(addr);
+            })
+        });
+        let addr = rx
+            .recv_timeout(Duration::from_secs(30))
+            .expect("daemon bound");
+        (addr, handle)
+    }
+
+    fn request(stream: &mut TcpStream, req: Request) -> Record {
+        protocol::write_record(stream, &Record::Request(req)).unwrap();
+        protocol::read_record(stream).unwrap().expect("a response")
+    }
+
+    #[test]
+    fn daemon_serves_events_and_shuts_down() {
+        let (addr, handle) = spawn_daemon(small_cfg(), ServeOptions::default());
+        let mut stream = TcpStream::connect(addr).unwrap();
+        for seq in 0..3u64 {
+            let resp = request(
+                &mut stream,
+                Request {
+                    seq,
+                    seed: 1000 + seq,
+                    scenario: String::new(),
+                    overrides: String::new(),
+                },
+            );
+            match resp {
+                Record::Frame(f) => {
+                    assert_eq!(f.seq, seq);
+                    assert_eq!(f.seed, 1000 + seq);
+                    assert_eq!(f.frame.ident, seq);
+                    assert!(!f.frame.planes.is_empty());
+                    assert!(f.service_us > 0);
+                    assert!(f.stages.iter().any(|s| s.stage == "raster"));
+                }
+                other => panic!("expected a frame, got {other:?}"),
+            }
+        }
+        protocol::write_record(&mut stream, &Record::Shutdown).unwrap();
+        assert!(matches!(
+            protocol::read_record(&mut stream).unwrap(),
+            Some(Record::Ack)
+        ));
+        let report = handle.join().unwrap().unwrap();
+        assert_eq!(report.served, 3);
+        assert_eq!(report.requests, 3);
+        assert_eq!(report.rejects, 0);
+        assert_eq!(report.errors, 0);
+    }
+
+    #[test]
+    fn unknown_scenario_answers_error_not_hangup() {
+        let (addr, handle) = spawn_daemon(small_cfg(), ServeOptions::default());
+        let mut stream = TcpStream::connect(addr).unwrap();
+        let resp = request(
+            &mut stream,
+            Request {
+                seq: 5,
+                seed: 1,
+                scenario: "not-a-scenario".into(),
+                overrides: String::new(),
+            },
+        );
+        match resp {
+            Record::Error { seq, message } => {
+                assert_eq!(seq, 5);
+                assert!(message.contains("not-a-scenario"), "{message}");
+            }
+            other => panic!("expected an error, got {other:?}"),
+        }
+        // the connection survives the error
+        let resp = request(
+            &mut stream,
+            Request {
+                seq: 6,
+                seed: 2,
+                scenario: String::new(),
+                overrides: String::new(),
+            },
+        );
+        assert!(matches!(resp, Record::Frame(_)));
+        protocol::write_record(&mut stream, &Record::Shutdown).unwrap();
+        let report = handle.join().unwrap().unwrap();
+        assert_eq!(report.errors, 1);
+        assert_eq!(report.served, 1);
+    }
+
+    #[test]
+    fn port_file_reports_the_bound_port() {
+        let dir = std::env::temp_dir().join("wct_serve_portfile_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("port");
+        let opts = ServeOptions {
+            port_file: path.to_string_lossy().into_owned(),
+            ..ServeOptions::default()
+        };
+        let (addr, handle) = spawn_daemon(small_cfg(), opts);
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(text.trim().parse::<u16>().unwrap(), addr.port());
+        let mut stream = TcpStream::connect(addr).unwrap();
+        protocol::write_record(&mut stream, &Record::Shutdown).unwrap();
+        let _ = handle.join().unwrap().unwrap();
+        let _ = std::fs::remove_file(&path);
+    }
+}

@@ -1,0 +1,45 @@
+//! Streaming simulation service: the `wire-cell serve` daemon, its
+//! binary wire protocol, the zero-copy frame arena, and the loopback
+//! client / load generator.
+//!
+//! The throughput engine ([`crate::throughput`]) answers "how fast can
+//! this machine simulate a stream it owns end-to-end?".  This module
+//! answers the production-shaped follow-up: "how does a *persistent*
+//! simulation service behave when the stream arrives from outside?" —
+//! the regime where queueing, admission control and per-event
+//! allocation discipline dominate, not raw kernel speed.
+//!
+//! Four layers, one per submodule:
+//!
+//! * [`daemon`] — `wire-cell serve`: a persistent worker fleet behind
+//!   a bounded admission queue on a loopback TCP socket, with
+//!   reject-with-retry-hint overload behaviour and graceful
+//!   drain-and-stop shutdown.
+//! * [`protocol`] — length-prefixed binary records; frames travel as
+//!   bit-exact sparse runs, so a served frame is byte-identical to a
+//!   locally simulated one.  Pinned by
+//!   `rust/tests/data/serve_protocol_golden.bin`.
+//! * [`arena`] — recycled frame/wire buffer pairs checked out per
+//!   event and returned on send: zero steady-state per-event frame
+//!   allocation on the serve path (witnessed by a counting allocator
+//!   in `rust/tests/serve.rs`).
+//! * [`stats`] — service metrics with split queueing/service
+//!   latency, rendered as Prometheus text at `GET /metrics` on the
+//!   same port.
+//!
+//! [`client`] is the matching synchronous client; with an arrival
+//! rate and several connections it doubles as the closed-loop load
+//! generator behind `wire-cell serve-load`.  `docs/SERVICE.md` has the
+//! wire-format tables, the metrics reference, and worked examples.
+
+pub mod arena;
+pub mod client;
+pub mod daemon;
+pub mod protocol;
+pub mod stats;
+
+pub use arena::{ArenaSlot, ArenaStats, FrameArena};
+pub use client::{run_load, scrape_metrics, shutdown, LoadOptions, LoadReport, ServeClient};
+pub use daemon::{serve, serve_with, ServeOptions, ServeReport};
+pub use protocol::{FrameResponse, Record, Request, StageTotal, PROTOCOL_VERSION};
+pub use stats::{ServeMetrics, LATENCY_WINDOW};

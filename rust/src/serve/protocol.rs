@@ -1,0 +1,735 @@
+//! The binary wire protocol between `wire-cell serve` and its clients.
+//!
+//! Every message is one length-prefixed **record**:
+//!
+//! ```text
+//! u32 LE  payload length (bytes that follow; <= MAX_RECORD_LEN)
+//! u8      protocol version (PROTOCOL_VERSION, currently 1)
+//! u8      record kind (the Record discriminants below)
+//! ...     kind-specific body, all integers little-endian
+//! ```
+//!
+//! Frames travel **sparse**: per plane, contiguous runs of non-zero
+//! samples as `(channel, first tick, count, samples...)`.  Samples are
+//! carried as raw `f32` bit patterns and the zero test is
+//! `to_bits() != 0` — not `== 0.0` — so the encoding is bit-exact
+//! round trip (`-0.0`, denormals and NaN payloads all survive).  That
+//! is what lets `rust/tests/serve.rs` assert socket-delivered frames
+//! byte-identical to a direct [`ShardedSession`] run.
+//!
+//! The byte layout is pinned by
+//! `rust/tests/data/serve_protocol_golden.bin` (decode → re-encode →
+//! exact bytes); any format change must bump [`PROTOCOL_VERSION`] and
+//! regenerate the golden file.  `docs/SERVICE.md` carries the
+//! user-facing field tables.
+//!
+//! [`ShardedSession`]: crate::scenario::ShardedSession
+
+use crate::frame::{Frame, PlaneFrame};
+use crate::geometry::PlaneId;
+use anyhow::{anyhow, bail, Result};
+use std::io::{Read, Write};
+
+/// Wire-format version carried in every record.
+pub const PROTOCOL_VERSION: u8 = 1;
+
+/// Upper bound on one record's payload (guards the length prefix
+/// against garbage/hostile input before any allocation happens).
+pub const MAX_RECORD_LEN: u32 = 256 << 20;
+
+/// Record-kind bytes (the wire discriminants of [`Record`]).
+pub mod kind {
+    /// Client → server: simulate one event.
+    pub const REQUEST: u8 = 1;
+    /// Server → client: the simulated event frame plus timings.
+    pub const FRAME: u8 = 2;
+    /// Server → client: admission control rejected the request.
+    pub const REJECT: u8 = 3;
+    /// Server → client: the request failed.
+    pub const ERROR: u8 = 4;
+    /// Client → server: drain the queue and stop serving.
+    pub const SHUTDOWN: u8 = 5;
+    /// Server → client: shutdown acknowledged.
+    pub const ACK: u8 = 6;
+}
+
+/// One event request: which scenario, which seed, plus optional JSON
+/// config overrides (empty string = serve with the daemon's base
+/// config — the hot, cached path).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Request {
+    /// Client-chosen sequence number, echoed in the response and fed
+    /// to [`Scenario::generate_seq`](crate::scenario::Scenario::generate_seq).
+    pub seq: u64,
+    /// Event seed (the daemon uses it verbatim — derive per-event
+    /// seeds client-side with
+    /// [`event_seed`](crate::throughput::event_seed)).
+    pub seed: u64,
+    /// Scenario registry name ("" = the daemon's configured default).
+    pub scenario: String,
+    /// JSON config-overrides object, or "" for none.
+    pub overrides: String,
+}
+
+/// One per-stage timing total riding along with a frame response.
+#[derive(Clone, Debug, PartialEq)]
+pub struct StageTotal {
+    /// Stage registry name ("raster", "adc", ...).
+    pub stage: String,
+    /// Total seconds spent in the stage for this event.
+    pub total_s: f64,
+    /// Stage invocations for this event (shards × calls).
+    pub calls: u64,
+}
+
+/// A served event: the sparse-encoded frame plus observed latencies
+/// and per-stage timings.
+#[derive(Clone, Debug)]
+pub struct FrameResponse {
+    /// Echo of the request sequence number.
+    pub seq: u64,
+    /// Echo of the request seed.
+    pub seed: u64,
+    /// Microseconds the request waited in the admission queue.
+    pub queue_us: u64,
+    /// Microseconds of service (generate + simulate + encode).
+    pub service_us: u64,
+    /// Per-stage totals, sorted by stage name (deterministic bytes).
+    pub stages: Vec<StageTotal>,
+    /// The event frame, bit-exact.
+    pub frame: Frame,
+}
+
+/// Every message that can cross the wire (see [`kind`] for the
+/// discriminant bytes).
+#[derive(Clone, Debug)]
+pub enum Record {
+    /// Client → server: simulate one event.
+    Request(Request),
+    /// Server → client: a served event.
+    Frame(Box<FrameResponse>),
+    /// Server → client: queue full; retry after the hinted delay.
+    Reject {
+        /// Echo of the request sequence number.
+        seq: u64,
+        /// Suggested client backoff before retrying [ms].
+        retry_after_ms: u32,
+        /// Queue occupancy observed at rejection time.
+        queue_len: u32,
+    },
+    /// Server → client: the request failed (bad scenario name,
+    /// invalid overrides, ...).
+    Error {
+        /// Echo of the request sequence number.
+        seq: u64,
+        /// Human-readable failure description.
+        message: String,
+    },
+    /// Client → server: drain and stop.
+    Shutdown,
+    /// Server → client: shutdown acknowledged.
+    Ack,
+}
+
+// ---- little-endian primitives -------------------------------------
+
+#[inline]
+fn put_u16(out: &mut Vec<u8>, v: u16) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+#[inline]
+fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+#[inline]
+fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+#[inline]
+fn put_f64(out: &mut Vec<u8>, v: f64) {
+    out.extend_from_slice(&v.to_bits().to_le_bytes());
+}
+
+/// Byte-slice cursor for decoding; every getter bounds-checks.
+struct Cursor<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn new(buf: &'a [u8]) -> Self {
+        Self { buf, pos: 0 }
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.pos + n > self.buf.len() {
+            bail!(
+                "record truncated: need {n} bytes at offset {}, have {}",
+                self.pos,
+                self.buf.len() - self.pos
+            );
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u16(&mut self) -> Result<u16> {
+        Ok(u16::from_le_bytes(self.take(2)?.try_into().unwrap()))
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn f64(&mut self) -> Result<f64> {
+        Ok(f64::from_bits(self.u64()?))
+    }
+
+    fn str16(&mut self) -> Result<String> {
+        let n = self.u16()? as usize;
+        let s = self.take(n)?;
+        Ok(std::str::from_utf8(s)
+            .map_err(|e| anyhow!("bad utf-8 in string field: {e}"))?
+            .to_string())
+    }
+
+    fn str32(&mut self) -> Result<String> {
+        let n = self.u32()? as usize;
+        let s = self.take(n)?;
+        Ok(std::str::from_utf8(s)
+            .map_err(|e| anyhow!("bad utf-8 in string field: {e}"))?
+            .to_string())
+    }
+
+    fn done(&self) -> Result<()> {
+        if self.pos != self.buf.len() {
+            bail!(
+                "record has {} trailing bytes past the decoded body",
+                self.buf.len() - self.pos
+            );
+        }
+        Ok(())
+    }
+}
+
+fn put_str16(out: &mut Vec<u8>, s: &str) {
+    debug_assert!(s.len() <= u16::MAX as usize);
+    put_u16(out, s.len() as u16);
+    out.extend_from_slice(s.as_bytes());
+}
+
+fn put_str32(out: &mut Vec<u8>, s: &str) {
+    put_u32(out, s.len() as u32);
+    out.extend_from_slice(s.as_bytes());
+}
+
+// ---- sparse frame encoding ----------------------------------------
+
+/// Append one plane's sparse encoding: header
+/// `(plane u8, nchan u32, nticks u32, nruns u32)` then per run
+/// `(channel u32, first tick u32, count u32, count × f32-bits u32)`.
+fn encode_plane(pf: &PlaneFrame, out: &mut Vec<u8>) {
+    out.push(pf.plane as u8);
+    put_u32(out, pf.nchan as u32);
+    put_u32(out, pf.nticks as u32);
+    let nruns_at = out.len();
+    put_u32(out, 0); // patched below
+    let mut nruns = 0u32;
+    for c in 0..pf.nchan {
+        let wave = pf.channel(c);
+        let mut t = 0;
+        while t < pf.nticks {
+            if wave[t].to_bits() != 0 {
+                let mut end = t + 1;
+                while end < pf.nticks && wave[end].to_bits() != 0 {
+                    end += 1;
+                }
+                put_u32(out, c as u32);
+                put_u32(out, t as u32);
+                put_u32(out, (end - t) as u32);
+                for &v in &wave[t..end] {
+                    put_u32(out, v.to_bits());
+                }
+                nruns += 1;
+                t = end;
+            } else {
+                t += 1;
+            }
+        }
+    }
+    out[nruns_at..nruns_at + 4].copy_from_slice(&nruns.to_le_bytes());
+}
+
+fn decode_plane(c: &mut Cursor) -> Result<PlaneFrame> {
+    let plane = match c.u8()? {
+        0 => PlaneId::U,
+        1 => PlaneId::V,
+        2 => PlaneId::W,
+        other => bail!("bad plane id {other}"),
+    };
+    let nchan = c.u32()? as usize;
+    let nticks = c.u32()? as usize;
+    let nruns = c.u32()?;
+    let mut pf = PlaneFrame::zeros(plane, nchan, nticks);
+    for _ in 0..nruns {
+        let chan = c.u32()? as usize;
+        let tbin = c.u32()? as usize;
+        let count = c.u32()? as usize;
+        if chan >= nchan || tbin + count > nticks {
+            bail!(
+                "sparse run out of bounds: chan {chan}/{nchan}, ticks {tbin}+{count}/{nticks}"
+            );
+        }
+        for i in 0..count {
+            pf.data[chan * nticks + tbin + i] = f32::from_bits(c.u32()?);
+        }
+    }
+    Ok(pf)
+}
+
+/// Append a whole frame: `ident u64`, `nplanes u16`, then each plane's
+/// sparse block in stored order.
+fn encode_frame(frame: &Frame, out: &mut Vec<u8>) {
+    put_u64(out, frame.ident);
+    put_u16(out, frame.planes.len() as u16);
+    for pf in &frame.planes {
+        encode_plane(pf, out);
+    }
+}
+
+fn decode_frame(c: &mut Cursor) -> Result<Frame> {
+    let ident = c.u64()?;
+    let nplanes = c.u16()? as usize;
+    let mut planes = Vec::with_capacity(nplanes);
+    for _ in 0..nplanes {
+        planes.push(decode_plane(c)?);
+    }
+    Ok(Frame { planes, ident })
+}
+
+// ---- record encode/decode -----------------------------------------
+
+/// Append one length-prefixed FRAME record built from *borrowed*
+/// parts — the serve hot path, where the frame lives in an arena slot
+/// and must not be moved into a [`FrameResponse`] just to be encoded.
+/// Byte-identical to [`encode_record`] on the equivalent
+/// [`Record::Frame`].
+#[allow(clippy::too_many_arguments)]
+pub fn encode_frame_record(
+    seq: u64,
+    seed: u64,
+    queue_us: u64,
+    service_us: u64,
+    stages: &[StageTotal],
+    frame: &Frame,
+    out: &mut Vec<u8>,
+) {
+    let len_at = out.len();
+    put_u32(out, 0); // patched below
+    out.push(PROTOCOL_VERSION);
+    out.push(kind::FRAME);
+    put_u64(out, seq);
+    put_u64(out, seed);
+    put_u64(out, queue_us);
+    put_u64(out, service_us);
+    put_u16(out, stages.len() as u16);
+    for s in stages {
+        put_str16(out, &s.stage);
+        put_f64(out, s.total_s);
+        put_u64(out, s.calls);
+    }
+    encode_frame(frame, out);
+    let payload = (out.len() - len_at - 4) as u32;
+    out[len_at..len_at + 4].copy_from_slice(&payload.to_le_bytes());
+}
+
+/// Append `rec` as one length-prefixed record.  Appends — never
+/// clears — so callers can batch records into one buffer; the serve
+/// hot path reuses an arena-owned buffer and allocates nothing once
+/// the buffer has grown to steady-state size.
+pub fn encode_record(rec: &Record, out: &mut Vec<u8>) {
+    let len_at = out.len();
+    put_u32(out, 0); // patched below
+    out.push(PROTOCOL_VERSION);
+    match rec {
+        Record::Request(r) => {
+            out.push(kind::REQUEST);
+            put_u64(out, r.seq);
+            put_u64(out, r.seed);
+            put_str16(out, &r.scenario);
+            put_str32(out, &r.overrides);
+        }
+        Record::Frame(f) => {
+            // undo the generic prefix; the borrowed-parts encoder
+            // writes its own (keeping the two paths byte-identical)
+            out.truncate(len_at);
+            encode_frame_record(
+                f.seq, f.seed, f.queue_us, f.service_us, &f.stages, &f.frame, out,
+            );
+            return;
+        }
+        Record::Reject {
+            seq,
+            retry_after_ms,
+            queue_len,
+        } => {
+            out.push(kind::REJECT);
+            put_u64(out, *seq);
+            put_u32(out, *retry_after_ms);
+            put_u32(out, *queue_len);
+        }
+        Record::Error { seq, message } => {
+            out.push(kind::ERROR);
+            put_u64(out, *seq);
+            put_str32(out, message);
+        }
+        Record::Shutdown => out.push(kind::SHUTDOWN),
+        Record::Ack => out.push(kind::ACK),
+    }
+    let payload = (out.len() - len_at - 4) as u32;
+    out[len_at..len_at + 4].copy_from_slice(&payload.to_le_bytes());
+}
+
+/// Decode one record's payload (the bytes *after* the u32 length
+/// prefix).  The whole payload must be consumed.
+pub fn decode_payload(payload: &[u8]) -> Result<Record> {
+    let mut c = Cursor::new(payload);
+    let version = c.u8()?;
+    if version != PROTOCOL_VERSION {
+        bail!("protocol version {version} (this build speaks {PROTOCOL_VERSION})");
+    }
+    let rec = match c.u8()? {
+        kind::REQUEST => Record::Request(Request {
+            seq: c.u64()?,
+            seed: c.u64()?,
+            scenario: c.str16()?,
+            overrides: c.str32()?,
+        }),
+        kind::FRAME => {
+            let seq = c.u64()?;
+            let seed = c.u64()?;
+            let queue_us = c.u64()?;
+            let service_us = c.u64()?;
+            let nstages = c.u16()? as usize;
+            let mut stages = Vec::with_capacity(nstages);
+            for _ in 0..nstages {
+                stages.push(StageTotal {
+                    stage: c.str16()?,
+                    total_s: c.f64()?,
+                    calls: c.u64()?,
+                });
+            }
+            let frame = decode_frame(&mut c)?;
+            Record::Frame(Box::new(FrameResponse {
+                seq,
+                seed,
+                queue_us,
+                service_us,
+                stages,
+                frame,
+            }))
+        }
+        kind::REJECT => Record::Reject {
+            seq: c.u64()?,
+            retry_after_ms: c.u32()?,
+            queue_len: c.u32()?,
+        },
+        kind::ERROR => Record::Error {
+            seq: c.u64()?,
+            message: c.str32()?,
+        },
+        kind::SHUTDOWN => Record::Shutdown,
+        kind::ACK => Record::Ack,
+        other => bail!("unknown record kind {other}"),
+    };
+    c.done()?;
+    Ok(rec)
+}
+
+/// Decode one length-prefixed record from the front of `buf`,
+/// returning the record and the total bytes consumed (prefix
+/// included).
+pub fn decode_record(buf: &[u8]) -> Result<(Record, usize)> {
+    if buf.len() < 4 {
+        bail!("record truncated: no length prefix");
+    }
+    let len = u32::from_le_bytes(buf[..4].try_into().unwrap());
+    if len > MAX_RECORD_LEN {
+        bail!("record length {len} exceeds MAX_RECORD_LEN {MAX_RECORD_LEN}");
+    }
+    let end = 4 + len as usize;
+    if buf.len() < end {
+        bail!("record truncated: length says {len}, have {}", buf.len() - 4);
+    }
+    Ok((decode_payload(&buf[4..end])?, end))
+}
+
+/// Blocking read of one record from a stream.  Returns `Ok(None)` on
+/// clean EOF at a record boundary.
+pub fn read_record(r: &mut impl Read) -> Result<Option<Record>> {
+    let mut len_buf = [0u8; 4];
+    let mut got = 0;
+    while got < 4 {
+        match r.read(&mut len_buf[got..]) {
+            Ok(0) if got == 0 => return Ok(None),
+            Ok(0) => bail!("eof inside record length prefix"),
+            Ok(n) => got += n,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(e.into()),
+        }
+    }
+    let len = u32::from_le_bytes(len_buf);
+    if len > MAX_RECORD_LEN {
+        bail!("record length {len} exceeds MAX_RECORD_LEN {MAX_RECORD_LEN}");
+    }
+    let mut payload = vec![0u8; len as usize];
+    r.read_exact(&mut payload)?;
+    decode_payload(&payload).map(Some)
+}
+
+/// Blocking write of one record to a stream (encodes into a scratch
+/// buffer; the daemon's hot path uses [`encode_record`] into an
+/// arena-owned buffer instead).
+pub fn write_record(w: &mut impl Write, rec: &Record) -> Result<()> {
+    let mut buf = Vec::new();
+    encode_record(rec, &mut buf);
+    w.write_all(&buf)?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_frame() -> Frame {
+        let mut u = PlaneFrame::zeros(PlaneId::U, 2, 4);
+        u.data = vec![0.0, 1.5, 2.5, 0.0, -0.5, 0.0, 0.0, 3.25];
+        let w = PlaneFrame::zeros(PlaneId::W, 1, 3);
+        Frame {
+            planes: vec![u, w],
+            ident: 7,
+        }
+    }
+
+    fn assert_frames_bit_equal(a: &Frame, b: &Frame) {
+        assert_eq!(a.ident, b.ident);
+        assert_eq!(a.planes.len(), b.planes.len());
+        for (pa, pb) in a.planes.iter().zip(&b.planes) {
+            assert_eq!(pa.plane, pb.plane);
+            assert_eq!((pa.nchan, pa.nticks), (pb.nchan, pb.nticks));
+            let bits_a: Vec<u32> = pa.data.iter().map(|v| v.to_bits()).collect();
+            let bits_b: Vec<u32> = pb.data.iter().map(|v| v.to_bits()).collect();
+            assert_eq!(bits_a, bits_b);
+        }
+    }
+
+    #[test]
+    fn request_roundtrip() {
+        let rec = Record::Request(Request {
+            seq: 7,
+            seed: 0xDEAD_BEEF,
+            scenario: "hotspot".into(),
+            overrides: String::new(),
+        });
+        let mut buf = Vec::new();
+        encode_record(&rec, &mut buf);
+        let (back, used) = decode_record(&buf).unwrap();
+        assert_eq!(used, buf.len());
+        match back {
+            Record::Request(r) => {
+                assert_eq!(r.seq, 7);
+                assert_eq!(r.seed, 0xDEAD_BEEF);
+                assert_eq!(r.scenario, "hotspot");
+                assert_eq!(r.overrides, "");
+            }
+            other => panic!("decoded {other:?}"),
+        }
+    }
+
+    #[test]
+    fn frame_response_roundtrip_is_bit_exact() {
+        let frame = sample_frame();
+        let rec = Record::Frame(Box::new(FrameResponse {
+            seq: 7,
+            seed: 0xDEAD_BEEF,
+            queue_us: 1500,
+            service_us: 250_000,
+            stages: vec![
+                StageTotal {
+                    stage: "adc".into(),
+                    total_s: 0.125,
+                    calls: 3,
+                },
+                StageTotal {
+                    stage: "raster".into(),
+                    total_s: 1.5,
+                    calls: 6,
+                },
+            ],
+            frame: frame.clone(),
+        }));
+        let mut buf = Vec::new();
+        encode_record(&rec, &mut buf);
+        let (back, _) = decode_record(&buf).unwrap();
+        match back {
+            Record::Frame(f) => {
+                assert_eq!((f.seq, f.seed), (7, 0xDEAD_BEEF));
+                assert_eq!((f.queue_us, f.service_us), (1500, 250_000));
+                assert_eq!(f.stages.len(), 2);
+                assert_eq!(f.stages[0].stage, "adc");
+                assert_eq!(f.stages[1].calls, 6);
+                assert_frames_bit_equal(&f.frame, &frame);
+            }
+            other => panic!("decoded {other:?}"),
+        }
+        // re-encode must reproduce the bytes exactly
+        let mut again = Vec::new();
+        let (back2, _) = decode_record(&buf).unwrap();
+        encode_record(&back2, &mut again);
+        assert_eq!(buf, again);
+    }
+
+    #[test]
+    fn sparse_encoding_preserves_negative_zero_and_nan() {
+        let mut pf = PlaneFrame::zeros(PlaneId::V, 1, 5);
+        pf.data[1] = -0.0; // to_bits() != 0 → carried, not dropped
+        pf.data[2] = f32::from_bits(0x7FC0_0001); // NaN with payload
+        pf.data[3] = f32::MIN_POSITIVE / 2.0; // denormal
+        let frame = Frame {
+            planes: vec![pf],
+            ident: 1,
+        };
+        let mut buf = Vec::new();
+        encode_frame(&frame, &mut buf);
+        let back = decode_frame(&mut Cursor::new(&buf)).unwrap();
+        assert_frames_bit_equal(&frame, &back);
+        assert_eq!(back.planes[0].data[1].to_bits(), (-0.0f32).to_bits());
+        assert_eq!(back.planes[0].data[2].to_bits(), 0x7FC0_0001);
+    }
+
+    #[test]
+    fn sparse_runs_split_on_true_zeros_only() {
+        let mut pf = PlaneFrame::zeros(PlaneId::W, 1, 6);
+        pf.data = vec![1.0, 2.0, 0.0, 0.0, 3.0, 0.0];
+        let mut buf = Vec::new();
+        encode_plane(&pf, &mut buf);
+        // header: plane(1) + nchan(4) + nticks(4) + nruns(4) = 13
+        let nruns = u32::from_le_bytes(buf[9..13].try_into().unwrap());
+        assert_eq!(nruns, 2);
+        // run 1: 2 samples, run 2: 1 sample → 13 + (12+8) + (12+4)
+        assert_eq!(buf.len(), 13 + 20 + 16);
+        let back = decode_plane(&mut Cursor::new(&buf)).unwrap();
+        assert_eq!(
+            back.data.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            pf.data.iter().map(|v| v.to_bits()).collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn all_control_records_roundtrip() {
+        for rec in [
+            Record::Reject {
+                seq: 9,
+                retry_after_ms: 40,
+                queue_len: 16,
+            },
+            Record::Error {
+                seq: 3,
+                message: "unknown scenario 'warp'".into(),
+            },
+            Record::Shutdown,
+            Record::Ack,
+        ] {
+            let mut buf = Vec::new();
+            encode_record(&rec, &mut buf);
+            let (back, used) = decode_record(&buf).unwrap();
+            assert_eq!(used, buf.len());
+            // encode(decode(x)) == x byte-for-byte
+            let mut again = Vec::new();
+            encode_record(&back, &mut again);
+            assert_eq!(buf, again);
+        }
+    }
+
+    #[test]
+    fn stream_io_roundtrips_multiple_records() {
+        let mut buf = Vec::new();
+        write_record(
+            &mut buf,
+            &Record::Request(Request {
+                seq: 1,
+                seed: 2,
+                scenario: "noise-only".into(),
+                overrides: r#"{"apas":2}"#.into(),
+            }),
+        )
+        .unwrap();
+        write_record(&mut buf, &Record::Shutdown).unwrap();
+        let mut r = std::io::Cursor::new(buf);
+        match read_record(&mut r).unwrap().unwrap() {
+            Record::Request(req) => assert_eq!(req.overrides, r#"{"apas":2}"#),
+            other => panic!("{other:?}"),
+        }
+        assert!(matches!(read_record(&mut r).unwrap(), Some(Record::Shutdown)));
+        assert!(read_record(&mut r).unwrap().is_none(), "clean EOF");
+    }
+
+    #[test]
+    fn malformed_records_are_rejected() {
+        // bad version
+        let mut buf = Vec::new();
+        encode_record(&Record::Ack, &mut buf);
+        buf[4] = 99;
+        assert!(decode_record(&buf).is_err());
+        // bad kind
+        let mut buf = Vec::new();
+        encode_record(&Record::Ack, &mut buf);
+        buf[5] = 200;
+        assert!(decode_record(&buf).is_err());
+        // truncated payload
+        let mut buf = Vec::new();
+        encode_record(
+            &Record::Request(Request {
+                seq: 0,
+                seed: 0,
+                scenario: "x".into(),
+                overrides: String::new(),
+            }),
+            &mut buf,
+        );
+        let cut = buf.len() - 3;
+        assert!(decode_record(&buf[..cut]).is_err());
+        // hostile length prefix
+        let huge = (MAX_RECORD_LEN + 1).to_le_bytes();
+        assert!(decode_record(&huge).is_err());
+        // trailing garbage inside the declared payload
+        let mut buf = Vec::new();
+        encode_record(&Record::Ack, &mut buf);
+        buf.push(0xFF);
+        let len = (buf.len() - 4) as u32;
+        buf[..4].copy_from_slice(&len.to_le_bytes());
+        assert!(decode_record(&buf).is_err());
+    }
+
+    #[test]
+    fn encode_appends_without_clearing() {
+        let mut buf = vec![0xAA];
+        encode_record(&Record::Ack, &mut buf);
+        assert_eq!(buf[0], 0xAA);
+        let (rec, used) = decode_record(&buf[1..]).unwrap();
+        assert!(matches!(rec, Record::Ack));
+        assert_eq!(used, buf.len() - 1);
+    }
+}

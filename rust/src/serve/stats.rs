@@ -1,0 +1,332 @@
+//! Serve-daemon metrics: lock-light counters, trailing-window latency
+//! quantiles, and the Prometheus rendering behind `GET /metrics`.
+//!
+//! Counters and gauges are atomics touched straight from the accept /
+//! worker threads; latency samples go through one small mutex into
+//! bounded trailing windows (so quantiles track *recent* behaviour and
+//! memory stays constant however long the daemon runs) plus cumulative
+//! [`Histogram`]s (so a real Prometheus server can compute its own
+//! quantiles over any horizon).  Queueing latency — time between
+//! admission and service start — is tracked separately from service
+//! latency throughout; separating the two is the point of the serve
+//! mode's admission queue.
+//!
+//! The exposed series (see `docs/SERVICE.md` for the full reference)
+//! all carry the `wirecell_serve_` prefix.
+
+use crate::metrics::{Histogram, LatencySummary, PromText};
+use crate::serve::arena::ArenaStats;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// Trailing-window latency quantiles cover this many samples.
+pub const LATENCY_WINDOW: usize = 4096;
+
+/// Bounded sliding window of f64 samples (overwrites oldest-first once
+/// full).
+#[derive(Debug)]
+struct RingWindow {
+    buf: Vec<f64>,
+    next: usize,
+}
+
+impl RingWindow {
+    fn new(cap: usize) -> Self {
+        Self {
+            buf: Vec::with_capacity(cap.max(1)),
+            next: 0,
+        }
+    }
+
+    fn push(&mut self, v: f64) {
+        if self.buf.len() < self.buf.capacity() {
+            self.buf.push(v);
+        } else {
+            self.buf[self.next] = v;
+            self.next = (self.next + 1) % self.buf.len();
+        }
+    }
+
+    fn summary(&self) -> LatencySummary {
+        LatencySummary::from_samples(&self.buf)
+    }
+}
+
+#[derive(Debug)]
+struct LatWindows {
+    service: RingWindow,
+    queueing: RingWindow,
+    service_hist: Histogram,
+    queue_hist: Histogram,
+}
+
+/// Shared serve-daemon metrics (one instance per daemon, touched by
+/// every accept and worker thread).
+pub struct ServeMetrics {
+    requests: AtomicU64,
+    served: AtomicU64,
+    rejects: AtomicU64,
+    errors: AtomicU64,
+    queue_depth: AtomicU64,
+    ewma_service_us: AtomicU64,
+    lat: Mutex<LatWindows>,
+}
+
+impl ServeMetrics {
+    /// Fresh all-zero metrics.
+    pub fn new() -> Self {
+        Self {
+            requests: AtomicU64::new(0),
+            served: AtomicU64::new(0),
+            rejects: AtomicU64::new(0),
+            errors: AtomicU64::new(0),
+            queue_depth: AtomicU64::new(0),
+            ewma_service_us: AtomicU64::new(0),
+            lat: Mutex::new(LatWindows {
+                service: RingWindow::new(LATENCY_WINDOW),
+                queueing: RingWindow::new(LATENCY_WINDOW),
+                service_hist: Histogram::latency_default(),
+                queue_hist: Histogram::latency_default(),
+            }),
+        }
+    }
+
+    /// Count an accepted request (admitted or not).
+    pub fn on_request(&self) {
+        self.requests.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Count an admission rejection.
+    pub fn on_reject(&self) {
+        self.rejects.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Count a failed request.
+    pub fn on_error(&self) {
+        self.errors.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record a served event with its split latencies.
+    pub fn on_served(&self, queue_s: f64, service_s: f64) {
+        self.served.fetch_add(1, Ordering::Relaxed);
+        {
+            let mut lat = self.lat.lock().unwrap();
+            lat.service.push(service_s);
+            lat.queueing.push(queue_s);
+            lat.service_hist.observe(service_s);
+            lat.queue_hist.observe(queue_s);
+        }
+        // EWMA of service time (α = 1/8), integer micros: the basis
+        // for retry-after hints.  Racy read-modify-write is fine for a
+        // smoothed hint.
+        let us = (service_s * 1e6) as u64;
+        let old = self.ewma_service_us.load(Ordering::Relaxed);
+        let new = if old == 0 { us } else { old - old / 8 + us / 8 };
+        self.ewma_service_us.store(new.max(1), Ordering::Relaxed);
+    }
+
+    /// Publish the current admission-queue depth.
+    pub fn set_queue_depth(&self, depth: usize) {
+        self.queue_depth.store(depth as u64, Ordering::Relaxed);
+    }
+
+    /// Events served so far.
+    pub fn served(&self) -> u64 {
+        self.served.load(Ordering::Relaxed)
+    }
+
+    /// Requests accepted so far.
+    pub fn requests(&self) -> u64 {
+        self.requests.load(Ordering::Relaxed)
+    }
+
+    /// Admission rejections so far.
+    pub fn rejects(&self) -> u64 {
+        self.rejects.load(Ordering::Relaxed)
+    }
+
+    /// Failed requests so far.
+    pub fn errors(&self) -> u64 {
+        self.errors.load(Ordering::Relaxed)
+    }
+
+    /// Trailing-window latency summaries `(queueing, service)`.
+    pub fn latency(&self) -> (LatencySummary, LatencySummary) {
+        let lat = self.lat.lock().unwrap();
+        (lat.queueing.summary(), lat.service.summary())
+    }
+
+    /// Retry-after hint [ms] for a rejected request: the EWMA service
+    /// time times the work already ahead of the caller, spread over
+    /// the worker fleet; clamped to [1 ms, 60 s].  Before any event
+    /// has been served the EWMA is unknown and the hint is a flat
+    /// 10 ms.
+    pub fn retry_after_ms(&self, queue_len: usize, workers: usize) -> u32 {
+        let ewma_us = self.ewma_service_us.load(Ordering::Relaxed);
+        if ewma_us == 0 {
+            return 10;
+        }
+        let backlog = ewma_us.saturating_mul(queue_len as u64 + 1) / workers.max(1) as u64;
+        (backlog / 1000).clamp(1, 60_000) as u32
+    }
+
+    /// Render the full `/metrics` document (Prometheus text format).
+    pub fn render(&self, arena: &ArenaStats, uptime_s: f64) -> String {
+        let (queueing, service) = self.latency();
+        let mut p = PromText::new();
+        p.counter(
+            "wirecell_serve_requests_total",
+            "Event requests accepted off the wire",
+            self.requests() as f64,
+        );
+        p.counter(
+            "wirecell_serve_events_total",
+            "Events simulated and served",
+            self.served() as f64,
+        );
+        p.counter(
+            "wirecell_serve_rejects_total",
+            "Requests rejected by admission control (queue full)",
+            self.rejects() as f64,
+        );
+        p.counter(
+            "wirecell_serve_errors_total",
+            "Requests that failed (bad scenario, invalid overrides, ...)",
+            self.errors() as f64,
+        );
+        p.gauge(
+            "wirecell_serve_queue_depth",
+            "Requests currently waiting in the admission queue",
+            self.queue_depth.load(Ordering::Relaxed) as f64,
+        );
+        p.gauge(
+            "wirecell_serve_uptime_seconds",
+            "Seconds since the daemon started",
+            uptime_s,
+        );
+        p.counter(
+            "wirecell_serve_arena_hits_total",
+            "Frame-arena checkouts served from the free list",
+            arena.hits as f64,
+        );
+        p.counter(
+            "wirecell_serve_arena_misses_total",
+            "Frame-arena checkouts that allocated a fresh slot",
+            arena.misses as f64,
+        );
+        p.gauge(
+            "wirecell_serve_arena_hit_rate",
+            "Fraction of arena checkouts recycled (1 = steady state)",
+            arena.hit_rate(),
+        );
+        p.gauge(
+            "wirecell_serve_arena_free",
+            "Recycled slots currently waiting in the arena",
+            arena.free as f64,
+        );
+        p.summary(
+            "wirecell_serve_queue_latency_seconds",
+            "Admission-to-service-start wait, trailing window",
+            &queueing,
+        );
+        p.summary(
+            "wirecell_serve_service_latency_seconds",
+            "Generate+simulate+encode service time, trailing window",
+            &service,
+        );
+        {
+            let lat = self.lat.lock().unwrap();
+            p.histogram(
+                "wirecell_serve_queue_seconds",
+                "Admission-to-service-start wait, cumulative histogram",
+                &lat.queue_hist,
+            );
+            p.histogram(
+                "wirecell_serve_service_seconds",
+                "Service time, cumulative histogram",
+                &lat.service_hist,
+            );
+        }
+        p.render()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::parse_prometheus;
+    use crate::serve::arena::FrameArena;
+
+    #[test]
+    fn counters_accumulate_and_render() {
+        let m = ServeMetrics::new();
+        m.on_request();
+        m.on_request();
+        m.on_reject();
+        m.on_error();
+        m.on_served(0.002, 0.040);
+        m.set_queue_depth(3);
+        let text = m.render(&FrameArena::new(4).stats(), 12.5);
+        let map = parse_prometheus(&text).unwrap();
+        assert_eq!(map["wirecell_serve_requests_total"], 2.0);
+        assert_eq!(map["wirecell_serve_events_total"], 1.0);
+        assert_eq!(map["wirecell_serve_rejects_total"], 1.0);
+        assert_eq!(map["wirecell_serve_errors_total"], 1.0);
+        assert_eq!(map["wirecell_serve_queue_depth"], 3.0);
+        assert_eq!(map["wirecell_serve_uptime_seconds"], 12.5);
+        // the acceptance-criteria series: queueing-latency percentiles
+        assert!(
+            (map["wirecell_serve_queue_latency_seconds{quantile=\"0.99\"}"] - 0.002).abs()
+                < 1e-12
+        );
+        assert!(
+            (map["wirecell_serve_service_latency_seconds{quantile=\"0.5\"}"] - 0.040).abs()
+                < 1e-12
+        );
+        assert_eq!(map["wirecell_serve_service_seconds_count"], 1.0);
+    }
+
+    #[test]
+    fn latency_split_is_preserved() {
+        let m = ServeMetrics::new();
+        for i in 0..100 {
+            m.on_served(0.001 * (i % 10) as f64, 0.010);
+        }
+        let (q, s) = m.latency();
+        assert_eq!(q.n, 100);
+        assert!((s.p50_s - 0.010).abs() < 1e-12);
+        assert!(q.p50_s < s.p50_s, "queueing and service are distinct");
+        assert!(q.max_s <= 0.009 + 1e-12);
+    }
+
+    #[test]
+    fn window_slides_after_capacity() {
+        let mut w = RingWindow::new(4);
+        for v in [1.0, 2.0, 3.0, 4.0, 10.0, 20.0] {
+            w.push(v);
+        }
+        // 1.0 and 2.0 have been overwritten
+        let s = w.summary();
+        assert_eq!(s.n, 4);
+        assert_eq!(s.max_s, 20.0);
+        assert!(s.mean_s > 4.0);
+    }
+
+    #[test]
+    fn retry_hint_scales_with_backlog() {
+        let m = ServeMetrics::new();
+        assert_eq!(m.retry_after_ms(5, 2), 10, "cold hint is flat");
+        m.on_served(0.0, 0.100); // ewma ≈ 100 ms
+        let short = m.retry_after_ms(0, 1);
+        let long = m.retry_after_ms(9, 1);
+        assert!(short >= 50, "one service time ahead: {short}");
+        assert!(long >= 5 * short, "ten services ahead: {long} vs {short}");
+        let spread = m.retry_after_ms(9, 10);
+        assert!(spread < long, "more workers shrink the hint");
+        // clamp
+        for _ in 0..200 {
+            m.on_served(0.0, 120.0);
+        }
+        assert_eq!(m.retry_after_ms(100, 1), 60_000);
+    }
+}

@@ -50,8 +50,8 @@ use crate::parallel::{ExecPolicy, ThreadPool};
 use crate::rng::RandomPool;
 use crate::runtime::Runtime;
 use crate::scenario::{
-    BeamTrackScenario, CosmicShowerScenario, DepoReplayScenario, FullDetectorScenario,
-    HotspotScenario, NoiseOnlyScenario, PileupMixScenario, Scenario,
+    BeamTrackScenario, CosmicShowerScenario, DepoReplayScenario, DepoStreamScenario,
+    FullDetectorScenario, HotspotScenario, NoiseOnlyScenario, PileupMixScenario, Scenario,
 };
 use anyhow::{anyhow, Result};
 use std::collections::BTreeMap;
@@ -393,6 +393,28 @@ impl Registry {
                     } else {
                         Box::new(
                             DepoReplayScenario::from_file(std::path::Path::new(&cfg.depo_file))
+                                .map_err(anyhow::Error::msg)?,
+                        )
+                    };
+                    Ok(s)
+                }),
+            },
+        );
+        reg.register_scenario(
+            "depo-stream",
+            ScenarioEntry {
+                summary: "replay a directory of recorded depo files in sequence".into(),
+                physics: "sustained replay stream (--depo-dir): event seq of a stream \
+                          replays sample seq % len in sorted-filename order, in batch \
+                          mode and behind `wire-cell serve` alike; empty without a \
+                          configured directory"
+                    .into(),
+                factory: Box::new(|cfg| {
+                    let s: Box<dyn Scenario> = if cfg.depo_dir.is_empty() {
+                        Box::new(DepoStreamScenario::new(Vec::new()))
+                    } else {
+                        Box::new(
+                            DepoStreamScenario::from_dir(std::path::Path::new(&cfg.depo_dir))
                                 .map_err(anyhow::Error::msg)?,
                         )
                     };

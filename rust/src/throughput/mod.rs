@@ -62,6 +62,21 @@
 //! [`ThroughputReport::to_json`]: under a heterogeneous mix the tail
 //! latency, not the mean rate, is what distinguishes backends.
 //!
+//! ## Closed-loop pacing
+//!
+//! Flat-out (open-loop) streaming measures *capacity*; production DAQ
+//! questions are usually about behaviour *at a load point* ("what is
+//! the p99 at 80% of capacity?").  `StreamOptions::arrival_rate_hz`
+//! (`--arrival-rate`) paces the source on a fixed schedule — ticket
+//! `seq` releases at `seq / rate` seconds — and the report then splits
+//! per-event **queueing wait** (arrival to service start,
+//! [`ThroughputReport::queueing`], the `(queueing)` row of the latency
+//! table) from **service time** ([`ThroughputReport::latency`]).
+//! Pacing shapes time only, never physics: the digest of a paced
+//! stream equals the open-loop digest.  The `wire-cell serve` daemon
+//! ([`crate::serve`]) reuses exactly this wait/work split for its
+//! admission queue metrics.
+//!
 //! Entry points: [`run_stream`] (library), `wire-cell throughput`
 //! (CLI), `cargo bench --bench throughput` / `--bench mixed` (scaling
 //! and tail-latency studies), and [`crate::harness::throughput`] /

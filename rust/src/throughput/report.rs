@@ -72,8 +72,18 @@ pub struct ThroughputReport {
     pub rate: RateStats,
     /// Per-worker utilisation, in worker-id order.
     pub workers: Vec<WorkerStats>,
-    /// Per-event latency over the whole stream (p50/p95/p99 tails).
+    /// Per-event *service* latency over the whole stream (p50/p95/p99
+    /// tails): wall-clock a worker spends inside one event.
     pub latency: LatencySummary,
+    /// Per-event *queueing* latency: arrival (the source releasing the
+    /// ticket) to service start.  Near zero on an open-loop run —
+    /// workers pull tickets the moment they go idle — and the number
+    /// that actually grows under closed-loop pressure
+    /// (`arrival_rate_hz` at or past the service capacity).
+    pub queueing: LatencySummary,
+    /// Closed-loop arrival rate the stream was paced at [events/s]
+    /// (0 = open loop).
+    pub arrival_rate_hz: f64,
     /// Per-scenario shares, traffic-mix order (one entry for a
     /// single-scenario stream).
     pub scenarios: Vec<ScenarioStats>,
@@ -202,6 +212,18 @@ impl ThroughputReport {
                 max,
             ]);
         }
+        // the wait-vs-work split: time in queue before service started
+        let [mean, p50, p95, p99, max] = row(&self.queueing);
+        t.row(&[
+            "(queueing)".into(),
+            self.queueing.n.to_string(),
+            "-".into(),
+            mean,
+            p50,
+            p95,
+            p99,
+            max,
+        ]);
         t
     }
 
@@ -258,6 +280,7 @@ impl ThroughputReport {
             })
             .collect();
         Value::object(vec![
+            ("arrival_rate_hz", Value::from(self.arrival_rate_hz)),
             ("backend", Value::from(self.backend.as_str())),
             ("depos", Value::from(self.rate.depos as f64)),
             ("depos_per_sec", Value::from(self.depos_per_sec())),
@@ -269,6 +292,7 @@ impl ThroughputReport {
             ("events", Value::from(self.rate.events as f64)),
             ("events_per_sec", Value::from(self.events_per_sec())),
             ("latency", lat(&self.latency)),
+            ("queueing", lat(&self.queueing)),
             ("scenarios", Value::Array(scenarios)),
             ("stages", Value::Array(stages)),
             ("wall_s", Value::from(self.rate.wall_s)),
@@ -294,6 +318,7 @@ pub(crate) struct Aggregate {
     pub(crate) events: u64,
     pub(crate) depos: u64,
     pub(crate) digest: u64,
+    pub(crate) queueing: Vec<f64>,
     pub(crate) errors: Vec<String>,
 }
 
@@ -321,6 +346,7 @@ impl Aggregate {
             events: 0,
             depos: 0,
             digest: 0,
+            queueing: Vec::new(),
             errors: Vec::new(),
         }
     }
@@ -330,7 +356,10 @@ impl Aggregate {
     /// it ran as, its merged stage timer, the raster
     /// sampling/fluctuation split summed over the shards, its frame
     /// digest and the worker's busy time (which doubles as the event's
-    /// latency sample).
+    /// service-latency sample).  `queue_s` is the event's queueing
+    /// wait — arrival to service start — kept separate from `busy_s`
+    /// so paced (closed-loop) runs can report the wait/work split.
+    #[allow(clippy::too_many_arguments)]
     pub(crate) fn record(
         &mut self,
         worker: usize,
@@ -340,9 +369,11 @@ impl Aggregate {
         stages: &StageTimer,
         raster: StageTimings,
         digest: u64,
+        queue_s: f64,
         busy_s: f64,
     ) {
         self.events += 1;
+        self.queueing.push(queue_s);
         self.depos += depos as u64;
         self.digest ^= digest;
         self.stages.merge(stages);
@@ -398,12 +429,13 @@ mod tests {
         assert_eq!(agg.digest, 0); // XOR-combine is order independent
         // events land on the scenario they were drawn for
         let t = StageTimer::new();
-        agg.record(0, 1, 0, 1, &t, StageTimings::default(), 3, 0.25);
-        agg.record(1, 0, 120, 2, &t, StageTimings::default(), 5, 0.5);
+        agg.record(0, 1, 0, 1, &t, StageTimings::default(), 3, 0.002, 0.25);
+        agg.record(1, 0, 120, 2, &t, StageTimings::default(), 5, 0.004, 0.5);
         assert_eq!(agg.scenarios[0].events, 1);
         assert_eq!(agg.scenarios[0].depos, 120);
         assert_eq!(agg.scenarios[1].events, 1);
         assert_eq!(agg.scenarios[1].latencies, vec![0.25]);
+        assert_eq!(agg.queueing, vec![0.002, 0.004]);
     }
 
     #[test]
@@ -431,6 +463,8 @@ mod tests {
                 },
             ],
             latency: LatencySummary::from_samples(&[0.5, 0.5, 0.5, 0.5]),
+            queueing: LatencySummary::from_samples(&[0.01, 0.01, 0.01, 0.01]),
+            arrival_rate_hz: 0.0,
             scenarios: vec![
                 ScenarioStats {
                     name: "hotspot".into(),
@@ -462,13 +496,16 @@ mod tests {
         let wt = report.worker_table().render();
         assert!(wt.contains("75%"));
         assert!(wt.contains("25%"));
-        // latency table: one row per scenario plus the (all) roll-up
+        // latency table: one row per scenario, the (all) roll-up, and
+        // the queueing wait/work split
         let lt = report.latency_table();
-        assert_eq!(lt.len(), 3);
+        assert_eq!(lt.len(), 4);
         let lr = lt.render();
         assert!(lr.contains("hotspot"));
         assert!(lr.contains("(all)"));
+        assert!(lr.contains("(queueing)"));
         assert!(lr.contains("500.000")); // 0.5 s = 500 ms everywhere
+        assert!(lr.contains("10.000")); // 0.01 s queueing wait
     }
 
     #[test]
@@ -487,6 +524,8 @@ mod tests {
                 busy_s: 0.4,
             }],
             latency: LatencySummary::from_samples(&[0.1, 0.3]),
+            queueing: LatencySummary::from_samples(&[0.02, 0.04]),
+            arrival_rate_hz: 25.0,
             scenarios: vec![ScenarioStats {
                 name: "beam-track".into(),
                 events: 2,
@@ -506,6 +545,10 @@ mod tests {
         assert_eq!(v.get("digest").unwrap().as_str(), Some("000000000000001f"));
         let p50_ms = v.path("latency.p50_ms").unwrap().as_f64().unwrap();
         assert!((p50_ms - 200.0).abs() < 1e-9, "{p50_ms}");
+        // the wait/work split rides alongside the service latency
+        let q50_ms = v.path("queueing.p50_ms").unwrap().as_f64().unwrap();
+        assert!((q50_ms - 30.0).abs() < 1e-9, "{q50_ms}");
+        assert_eq!(v.get("arrival_rate_hz").unwrap().as_f64(), Some(25.0));
         assert_eq!(v.path("scenarios.0.name").unwrap().as_str(), Some("beam-track"));
         assert_eq!(v.path("scenarios.0.latency.n").unwrap().as_usize(), Some(2));
         assert_eq!(v.path("workers.0.depos").unwrap().as_usize(), Some(40));

@@ -24,6 +24,14 @@ pub struct StreamOptions {
     /// long streams; the determinism digest is always computed, so
     /// verification does not require retention.
     pub keep_frames: bool,
+    /// Closed-loop arrival pacing [events/s]: the source releases
+    /// ticket `seq` no earlier than `seq / rate` seconds into the
+    /// stream, so a stream paced below capacity measures latency *at*
+    /// a load point instead of flat-out, and one paced above capacity
+    /// builds a real queue whose wait shows up in
+    /// [`ThroughputReport::queueing`].  `0` (the default) is the
+    /// open-loop mode: tickets release as fast as workers pull them.
+    pub arrival_rate_hz: f64,
 }
 
 impl Default for StreamOptions {
@@ -32,6 +40,7 @@ impl Default for StreamOptions {
             events: 8,
             workers: 1,
             keep_frames: false,
+            arrival_rate_hz: 0.0,
         }
     }
 }
@@ -53,11 +62,18 @@ pub fn event_seed(base: u64, seq: u64) -> u64 {
 
 /// Source of event tickets: cheap `(seq, seed)` pairs, so the shared
 /// source lock is held for nanoseconds and depo generation happens in
-/// parallel on the workers.
+/// parallel on the workers — except under closed-loop pacing
+/// (`arrival_rate_hz > 0`), where `next` deliberately sleeps until the
+/// ticket's scheduled arrival.  Each released ticket's arrival instant
+/// is stamped into the shared `arrivals` table; workers read it at
+/// service start to split queueing wait from service time.
 struct EventSource {
     next: u64,
     events: u64,
     base_seed: u64,
+    rate_hz: f64,
+    started: Option<Instant>,
+    arrivals: Arc<Mutex<Vec<Option<Instant>>>>,
 }
 
 impl SourceNode for EventSource {
@@ -71,6 +87,15 @@ impl SourceNode for EventSource {
         }
         let seq = self.next;
         self.next += 1;
+        if self.rate_hz > 0.0 {
+            let t0 = *self.started.get_or_insert_with(Instant::now);
+            let due = t0 + std::time::Duration::from_secs_f64(seq as f64 / self.rate_hz);
+            let now = Instant::now();
+            if due > now {
+                std::thread::sleep(due - now);
+            }
+        }
+        self.arrivals.lock().unwrap()[seq as usize] = Some(Instant::now());
         Some(Payload::Event {
             seq,
             seed: event_seed(self.base_seed, seq),
@@ -97,6 +122,7 @@ struct SimWorker {
     base_seed: u64,
     keep_frames: bool,
     agg: Arc<Mutex<Aggregate>>,
+    arrivals: Arc<Mutex<Vec<Option<Instant>>>>,
 }
 
 impl FunctionNode for SimWorker {
@@ -109,12 +135,17 @@ impl FunctionNode for SimWorker {
             return vec![input]; // pass foreign payloads through
         };
         let t0 = Instant::now();
+        // queueing wait: arrival stamp (source releasing the ticket)
+        // to service start, i.e. right now
+        let queue_s = self.arrivals.lock().unwrap()[seq as usize]
+            .map(|a| t0.saturating_duration_since(a).as_secs_f64())
+            .unwrap_or(0.0);
         let idx = match &self.mix {
             Some(mix) => mix.pick(self.base_seed, seq),
             None => 0,
         };
         let depos = if depos.is_empty() {
-            self.scenarios[idx].generate(self.pipe.layout(), seed)
+            self.scenarios[idx].generate_seq(self.pipe.layout(), seed, seq)
         } else {
             depos
         };
@@ -136,6 +167,7 @@ impl FunctionNode for SimWorker {
                     &report.stages,
                     report.raster,
                     digest,
+                    queue_s,
                     busy,
                 );
                 match frame {
@@ -183,8 +215,12 @@ impl SinkNode for FrameCollector {
 /// serially).  With a non-empty `cfg.scenario_mix` the event's
 /// scenario is instead drawn from the weighted [`TrafficMix`]
 /// schedule (burst length `cfg.mix_burst`), and the report gains
-/// per-scenario event/latency shares.  All pipelines are built up
-/// front so configuration errors surface before any thread spawns.
+/// per-scenario event/latency shares.  With
+/// `opts.arrival_rate_hz > 0` the source paces ticket release on a
+/// fixed closed-loop schedule and the report's `queueing` summary
+/// carries the resulting admission-to-service wait, separate from the
+/// per-event service latency.  All pipelines are built up front so
+/// configuration errors surface before any thread spawns.
 pub fn run_stream(cfg: &SimConfig, opts: &StreamOptions) -> Result<ThroughputReport> {
     let events = opts.events.max(1);
     let workers = opts.workers.max(1).min(events);
@@ -201,6 +237,7 @@ pub fn run_stream(cfg: &SimConfig, opts: &StreamOptions) -> Result<ThroughputRep
     };
     let agg = Arc::new(Mutex::new(Aggregate::new(workers, &names)));
     let frames = Arc::new(Mutex::new(Vec::new()));
+    let arrivals: Arc<Mutex<Vec<Option<Instant>>>> = Arc::new(Mutex::new(vec![None; events]));
     let registry = Registry::with_defaults();
     let mut prebuilt: Vec<Box<dyn FunctionNode>> = Vec::with_capacity(workers);
     // generate the (identical) variate data once; each worker's shard
@@ -225,6 +262,7 @@ pub fn run_stream(cfg: &SimConfig, opts: &StreamOptions) -> Result<ThroughputRep
             base_seed: cfg.seed,
             keep_frames: opts.keep_frames,
             agg: agg.clone(),
+            arrivals: arrivals.clone(),
         }));
     }
     // Workers pop a pre-built chain each; stats are keyed by the
@@ -234,6 +272,9 @@ pub fn run_stream(cfg: &SimConfig, opts: &StreamOptions) -> Result<ThroughputRep
         next: 0,
         events: events as u64,
         base_seed: cfg.seed,
+        rate_hz: opts.arrival_rate_hz.max(0.0),
+        started: None,
+        arrivals: arrivals.clone(),
     });
     let sink = Box::new(FrameCollector {
         frames: frames.clone(),
@@ -274,6 +315,8 @@ pub fn run_stream(cfg: &SimConfig, opts: &StreamOptions) -> Result<ThroughputRep
         },
         workers: agg.workers,
         latency: LatencySummary::from_samples(&all_latencies),
+        queueing: LatencySummary::from_samples(&agg.queueing),
+        arrival_rate_hz: opts.arrival_rate_hz.max(0.0),
         scenarios,
         stages: agg.stages,
         digest: agg.digest,
@@ -318,6 +361,7 @@ mod tests {
                 events: 5,
                 workers: 2,
                 keep_frames: true,
+                arrival_rate_hz: 0.0,
             },
         )
         .unwrap();
@@ -342,6 +386,7 @@ mod tests {
                 events: 2,
                 workers: 8,
                 keep_frames: false,
+                arrival_rate_hz: 0.0,
             },
         )
         .unwrap();
@@ -349,6 +394,37 @@ mod tests {
         assert_eq!(report.rate.events, 2);
         assert!(report.frames.is_empty()); // not kept
         assert_ne!(report.digest, 0); // but still digested
+    }
+
+    #[test]
+    fn paced_stream_slows_arrivals_and_reports_queueing() {
+        let mut cfg = small_cfg();
+        cfg.target_depos = 20;
+        let paced = StreamOptions {
+            events: 4,
+            workers: 1,
+            keep_frames: false,
+            arrival_rate_hz: 100.0,
+        };
+        let report = run_stream(&cfg, &paced).unwrap();
+        assert!(report.errors.is_empty(), "{:?}", report.errors);
+        assert_eq!(report.arrival_rate_hz, 100.0);
+        // tickets 1..3 cannot release before 10/20/30 ms into the run
+        assert!(report.rate.wall_s >= 0.030, "wall {}", report.rate.wall_s);
+        // every event carries a queueing sample, split from service
+        assert_eq!(report.queueing.n, 4);
+        assert!(report.queueing.max_s >= 0.0);
+        // pacing shapes time, never physics: same digest as open loop
+        let open = run_stream(
+            &cfg,
+            &StreamOptions {
+                arrival_rate_hz: 0.0,
+                ..paced
+            },
+        )
+        .unwrap();
+        assert_eq!(open.digest, report.digest, "pacing must not change physics");
+        assert_eq!(open.arrival_rate_hz, 0.0);
     }
 
     #[test]
@@ -362,6 +438,7 @@ mod tests {
                 events: 12,
                 workers: 2,
                 keep_frames: false,
+                arrival_rate_hz: 0.0,
             },
         )
         .unwrap();
@@ -395,6 +472,7 @@ mod tests {
                 events: 3,
                 workers: 1,
                 keep_frames: false,
+                arrival_rate_hz: 0.0,
             },
         )
         .unwrap();
@@ -427,6 +505,7 @@ mod tests {
                 events: 2,
                 workers: 1,
                 keep_frames: true,
+                arrival_rate_hz: 0.0,
             },
         )
         .unwrap();

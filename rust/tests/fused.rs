@@ -105,6 +105,7 @@ fn throughput_stream_fused_digest_is_worker_invariant() {
                 events: 3,
                 workers,
                 keep_frames: false,
+                arrival_rate_hz: 0.0,
             },
         )
         .unwrap()

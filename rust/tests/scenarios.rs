@@ -215,6 +215,7 @@ fn throughput_stream_is_worker_invariant_with_sharding() {
                 events: 4,
                 workers,
                 keep_frames: false,
+                arrival_rate_hz: 0.0,
             },
         )
         .unwrap()

@@ -1,0 +1,455 @@
+//! Integration witnesses for the `wire-cell serve` subsystem (issue 8
+//! acceptance criteria):
+//!
+//! 1. **loopback bitwise parity** — a frame served over the socket is
+//!    bit-identical (every `f32::to_bits`, plus the ident) to the same
+//!    event simulated directly on a `ShardedSession`, and a load
+//!    campaign's XOR digest equals `run_stream`'s for the same seed;
+//! 2. **golden bytes** — the wire format is pinned by
+//!    `tests/data/serve_protocol_golden.bin`, written by an independent
+//!    Python encoder (`tools/gen_serve_golden.py`): decode → re-encode
+//!    must reproduce the file exactly;
+//! 3. **arena discipline** — the steady-state serve cycle (checkout →
+//!    stage → encode → drop/recycle) performs **zero** heap
+//!    allocations, pinned by the same counting-allocator witness as
+//!    `rust/tests/spectral.rs`;
+//! 4. **admission control** — a full queue answers `Reject` with a
+//!    usable `retry_after_ms` hint instead of queueing unboundedly;
+//! 5. **metrics** — `GET /metrics` on the serving port parses as
+//!    Prometheus text and carries the split queueing/service latency
+//!    quantile series.
+
+use std::net::{SocketAddr, TcpStream};
+use std::sync::mpsc;
+use std::time::Duration;
+
+use wirecell::config::{BackendChoice, FluctuationMode, SimConfig};
+use wirecell::frame::PlaneFrame;
+use wirecell::geometry::PlaneId;
+use wirecell::metrics::parse_prometheus;
+use wirecell::scenario::{Scenario, ShardExec, ShardedSession};
+use wirecell::serve::protocol::{
+    decode_record, encode_frame_record, encode_record, read_record, write_record,
+};
+use wirecell::serve::{
+    run_load, scrape_metrics, FrameArena, LoadOptions, Record, Request, ServeClient,
+    ServeOptions, ServeReport, StageTotal,
+};
+use wirecell::session::Registry;
+use wirecell::throughput::{event_seed, frame_digest, run_stream, StreamOptions};
+
+// ---------------------------------------------------------------------
+// Counting allocator witness (shared source with the spectral gates;
+// counts are per-thread, so the serve cycle measured on this thread is
+// immune to concurrent test threads).
+// ---------------------------------------------------------------------
+
+#[path = "../../benches/common/counting_alloc.rs"]
+mod counting_alloc;
+use counting_alloc::{allocs_on_this_thread, CountingAlloc};
+
+#[global_allocator]
+static COUNTING_ALLOC: CountingAlloc = CountingAlloc;
+
+// ---------------------------------------------------------------------
+// Helpers
+// ---------------------------------------------------------------------
+
+fn small_cfg() -> SimConfig {
+    let mut cfg = SimConfig::default();
+    cfg.backend = BackendChoice::Serial;
+    cfg.fluctuation = FluctuationMode::None;
+    cfg.noise = false;
+    cfg.target_depos = 60;
+    cfg.pool_size = 1 << 14;
+    cfg.seed = 4242;
+    cfg
+}
+
+/// Spawn a daemon on an ephemeral loopback port; returns its bound
+/// address and the join handle yielding the final [`ServeReport`].
+fn spawn_daemon(
+    cfg: SimConfig,
+    opts: ServeOptions,
+) -> (SocketAddr, std::thread::JoinHandle<anyhow::Result<ServeReport>>) {
+    let (tx, rx) = mpsc::channel();
+    let handle = std::thread::spawn(move || {
+        wirecell::serve::serve_with(&cfg, &opts, move |addr| {
+            let _ = tx.send(addr);
+        })
+    });
+    let addr = rx
+        .recv_timeout(Duration::from_secs(60))
+        .expect("daemon bound within 60 s");
+    (addr, handle)
+}
+
+fn assert_planes_bit_equal(got: &[PlaneFrame], want: &[PlaneFrame]) {
+    assert_eq!(got.len(), want.len(), "plane count");
+    for (a, b) in got.iter().zip(want) {
+        assert_eq!(a.plane, b.plane);
+        assert_eq!((a.nchan, a.nticks), (b.nchan, b.nticks));
+        let bits_a: Vec<u32> = a.data.iter().map(|v| v.to_bits()).collect();
+        let bits_b: Vec<u32> = b.data.iter().map(|v| v.to_bits()).collect();
+        assert_eq!(bits_a, bits_b, "plane {:?} waveform bits", a.plane);
+    }
+}
+
+// ---------------------------------------------------------------------
+// 1. Loopback bitwise parity
+// ---------------------------------------------------------------------
+
+#[test]
+fn served_frames_are_bitwise_identical_to_direct_simulation() {
+    let cfg = small_cfg();
+    let (addr, handle) = spawn_daemon(cfg.clone(), ServeOptions::default());
+
+    // the reference: the exact same engine the daemon wraps, driven
+    // directly, with the throughput engine's seed/ident conventions
+    let registry = Registry::with_defaults();
+    let scenario = registry.make_scenario(&cfg).unwrap();
+    let mut direct = ShardedSession::new(&cfg, ShardExec::Serial).unwrap();
+
+    let mut client = ServeClient::connect(addr).unwrap();
+    for seq in 0..3u64 {
+        let seed = event_seed(cfg.seed, seq);
+        let resp = client
+            .request(&Request {
+                seq,
+                seed,
+                scenario: String::new(),
+                overrides: String::new(),
+            })
+            .unwrap();
+        let served = match resp {
+            Record::Frame(f) => f,
+            other => panic!("expected a frame for seq {seq}, got {other:?}"),
+        };
+        let depos = scenario.generate_seq(direct.layout(), seed, seq);
+        let report = direct.run_event(seed, &depos).unwrap();
+        let mut want = report.event_frame().expect("topology keeps frames");
+        want.ident = seq; // the stream-position convention
+
+        assert_eq!(served.seq, seq);
+        assert_eq!(served.seed, seed);
+        assert_eq!(served.frame.ident, seq);
+        assert_planes_bit_equal(&served.frame.planes, &want.planes);
+        assert_eq!(frame_digest(&served.frame), frame_digest(&want));
+        assert!(
+            served.stages.iter().any(|s| s.stage == "raster"),
+            "stage timings ride along: {:?}",
+            served.stages
+        );
+    }
+    client.shutdown().unwrap();
+    let report = handle.join().unwrap().unwrap();
+    assert_eq!(report.served, 3);
+    assert_eq!(report.errors, 0);
+}
+
+#[test]
+fn load_campaign_digest_matches_a_local_stream() {
+    let cfg = small_cfg();
+    let (addr, handle) = spawn_daemon(cfg.clone(), ServeOptions::default());
+    let load = run_load(
+        addr,
+        &LoadOptions {
+            events: 4,
+            connections: 2,
+            seed: cfg.seed,
+            ..LoadOptions::default()
+        },
+    )
+    .unwrap();
+    assert_eq!(load.served, 4, "errors: {:?}", load.errors);
+    assert!(load.errors.is_empty(), "{:?}", load.errors);
+    assert_eq!(load.queueing.n, 4);
+    assert_eq!(load.service.n, 4);
+
+    let stream = run_stream(
+        &cfg,
+        &StreamOptions {
+            events: 4,
+            workers: 1,
+            keep_frames: false,
+            arrival_rate_hz: 0.0,
+        },
+    )
+    .unwrap();
+    assert_eq!(
+        load.digest, stream.digest,
+        "socket-served stream must be bit-identical to the local engine"
+    );
+
+    wirecell::serve::shutdown(addr).unwrap();
+    let report = handle.join().unwrap().unwrap();
+    assert_eq!(report.served, 4);
+}
+
+// ---------------------------------------------------------------------
+// 2. Golden bytes
+// ---------------------------------------------------------------------
+
+#[test]
+fn golden_bytes_pin_the_wire_format() {
+    let path = concat!(
+        env!("CARGO_MANIFEST_DIR"),
+        "/rust/tests/data/serve_protocol_golden.bin"
+    );
+    let golden = std::fs::read(path).expect("tools/gen_serve_golden.py output present");
+
+    // record 1: the pinned request
+    let (rec1, used1) = decode_record(&golden).unwrap();
+    match &rec1 {
+        Record::Request(r) => {
+            assert_eq!(r.seq, 7);
+            assert_eq!(r.seed, 0xDEAD_BEEF);
+            assert_eq!(r.scenario, "hotspot");
+            assert_eq!(r.overrides, "");
+        }
+        other => panic!("record 1 should be a request, got {other:?}"),
+    }
+
+    // record 2: the pinned frame response
+    let (rec2, used2) = decode_record(&golden[used1..]).unwrap();
+    assert_eq!(used1 + used2, golden.len(), "exactly two records");
+    match &rec2 {
+        Record::Frame(f) => {
+            assert_eq!((f.seq, f.seed), (7, 0xDEAD_BEEF));
+            assert_eq!((f.queue_us, f.service_us), (1500, 250_000));
+            assert_eq!(f.stages.len(), 2);
+            assert_eq!((f.stages[0].stage.as_str(), f.stages[0].calls), ("adc", 3));
+            assert_eq!(f.stages[0].total_s, 0.125);
+            assert_eq!(
+                (f.stages[1].stage.as_str(), f.stages[1].calls),
+                ("raster", 6)
+            );
+            assert_eq!(f.frame.ident, 7);
+            assert_eq!(f.frame.planes.len(), 2);
+            let u = &f.frame.planes[0];
+            assert_eq!((u.plane, u.nchan, u.nticks), (PlaneId::U, 2, 4));
+            let bits: Vec<u32> = u.data.iter().map(|v| v.to_bits()).collect();
+            let want: Vec<u32> = [0.0f32, 1.5, 2.5, 0.0, -0.5, 0.0, 0.0, 3.25]
+                .iter()
+                .map(|v| v.to_bits())
+                .collect();
+            assert_eq!(bits, want);
+            let w = &f.frame.planes[1];
+            assert_eq!((w.plane, w.nchan, w.nticks), (PlaneId::W, 1, 3));
+            assert!(w.data.iter().all(|v| v.to_bits() == 0));
+        }
+        other => panic!("record 2 should be a frame, got {other:?}"),
+    }
+
+    // decode → re-encode reproduces the Python writer's bytes exactly
+    let mut reencoded = Vec::new();
+    encode_record(&rec1, &mut reencoded);
+    encode_record(&rec2, &mut reencoded);
+    assert_eq!(
+        reencoded, golden,
+        "wire format drifted from the golden file — bump PROTOCOL_VERSION \
+         and regenerate with tools/gen_serve_golden.py"
+    );
+}
+
+// ---------------------------------------------------------------------
+// 3. Arena allocation discipline
+// ---------------------------------------------------------------------
+
+#[test]
+fn steady_state_serve_cycle_allocates_nothing() {
+    let arena = FrameArena::new(2);
+    let mut u = PlaneFrame::zeros(PlaneId::U, 8, 64);
+    for (i, v) in u.data.iter_mut().enumerate() {
+        if i % 7 == 0 {
+            *v = (i as f32) * 0.25 - 3.0;
+        }
+    }
+    let mut v = PlaneFrame::zeros(PlaneId::V, 8, 64);
+    v.data[100] = -1.5;
+    let w = PlaneFrame::zeros(PlaneId::W, 10, 64);
+    let srcs = [u, v, w];
+    let refs: Vec<&PlaneFrame> = srcs.iter().collect();
+    let stages = [
+        StageTotal {
+            stage: "raster".into(),
+            total_s: 0.25,
+            calls: 3,
+        },
+        StageTotal {
+            stage: "adc".into(),
+            total_s: 0.01,
+            calls: 3,
+        },
+    ];
+
+    // warm-up: grow the slot to the steady-state shape and the wire
+    // buffer to the steady-state capacity (two cycles, so the slot we
+    // measure has been through a full recycle)
+    for seq in 0..2u64 {
+        let mut slot = arena.checkout();
+        slot.stage(seq, &refs);
+        let (frame, wire) = slot.frame_and_wire_mut();
+        encode_frame_record(seq, 99, 10, 2000, &stages, frame, wire);
+    }
+    let warm = arena.stats();
+    assert_eq!(warm.misses, 1, "one cold slot, then recycled");
+    assert_eq!(warm.hits, 1);
+
+    // the measured hot cycle: checkout → stage → encode → return-on-send
+    let before = allocs_on_this_thread();
+    let mut slot = arena.checkout();
+    slot.stage(2, &refs);
+    let (frame, wire) = slot.frame_and_wire_mut();
+    encode_frame_record(2, 99, 10, 2000, &stages, frame, wire);
+    let wire_len = slot.wire().len();
+    drop(slot); // recycle
+    let after = allocs_on_this_thread();
+    assert_eq!(
+        after - before,
+        0,
+        "steady-state serve cycle must not allocate"
+    );
+    assert!(wire_len > 0);
+
+    let s = arena.stats();
+    assert_eq!(s.hits, 2);
+    assert_eq!(s.recycled, 3);
+    assert_eq!(s.discarded, 0);
+}
+
+// ---------------------------------------------------------------------
+// 4. Admission control
+// ---------------------------------------------------------------------
+
+#[test]
+fn full_queue_rejects_with_a_retry_hint() {
+    let cfg = small_cfg();
+    let opts = ServeOptions {
+        workers: 1,
+        queue_depth: 1,
+        ..ServeOptions::default()
+    };
+    let (addr, handle) = spawn_daemon(cfg, opts);
+
+    // connection A: a slow-path request (config overrides force a
+    // one-off session build plus a much larger event) occupies the
+    // single worker for a long time
+    let mut a = TcpStream::connect(addr).unwrap();
+    write_record(
+        &mut a,
+        &Record::Request(Request {
+            seq: 0,
+            seed: 1,
+            scenario: String::new(),
+            overrides: r#"{"target_depos": 50000}"#.into(),
+        }),
+    )
+    .unwrap();
+    std::thread::sleep(Duration::from_millis(150)); // worker picks A up
+
+    // connection B fills the queue_depth=1 admission queue
+    let mut b = TcpStream::connect(addr).unwrap();
+    write_record(
+        &mut b,
+        &Record::Request(Request {
+            seq: 1,
+            seed: 2,
+            scenario: String::new(),
+            overrides: String::new(),
+        }),
+    )
+    .unwrap();
+    std::thread::sleep(Duration::from_millis(150)); // B admitted, queued
+
+    // connection C must bounce off the full queue
+    let mut c = TcpStream::connect(addr).unwrap();
+    write_record(
+        &mut c,
+        &Record::Request(Request {
+            seq: 2,
+            seed: 3,
+            scenario: String::new(),
+            overrides: String::new(),
+        }),
+    )
+    .unwrap();
+    match read_record(&mut c).unwrap().expect("a response for C") {
+        Record::Reject {
+            seq,
+            retry_after_ms,
+            queue_len,
+        } => {
+            assert_eq!(seq, 2);
+            assert!(retry_after_ms >= 1, "hint: {retry_after_ms}");
+            assert_eq!(queue_len, 1);
+        }
+        other => panic!("expected a reject, got {other:?}"),
+    }
+
+    // A and B still complete normally — rejects shed load, they don't
+    // poison admitted work
+    assert!(matches!(
+        read_record(&mut a).unwrap().expect("A served"),
+        Record::Frame(_)
+    ));
+    assert!(matches!(
+        read_record(&mut b).unwrap().expect("B served"),
+        Record::Frame(_)
+    ));
+
+    write_record(&mut c, &Record::Shutdown).unwrap();
+    let report = handle.join().unwrap().unwrap();
+    assert_eq!(report.served, 2);
+    assert!(report.rejects >= 1, "report: {report:?}");
+}
+
+// ---------------------------------------------------------------------
+// 5. Metrics endpoint
+// ---------------------------------------------------------------------
+
+#[test]
+fn metrics_scrape_parses_and_carries_the_latency_split() {
+    let cfg = small_cfg();
+    let (addr, handle) = spawn_daemon(cfg.clone(), ServeOptions::default());
+    let load = run_load(
+        addr,
+        &LoadOptions {
+            events: 4,
+            connections: 2,
+            seed: cfg.seed,
+            ..LoadOptions::default()
+        },
+    )
+    .unwrap();
+    assert_eq!(load.served, 4, "errors: {:?}", load.errors);
+
+    let text = scrape_metrics(addr).unwrap();
+    let map = parse_prometheus(&text).expect("valid Prometheus text");
+    assert_eq!(map["wirecell_serve_events_total"], 4.0);
+    assert!(map["wirecell_serve_requests_total"] >= 4.0);
+    assert_eq!(map["wirecell_serve_errors_total"], 0.0);
+    assert!(map["wirecell_serve_uptime_seconds"] > 0.0);
+    // the acceptance-criteria series: queueing AND service quantiles
+    for q in ["0.5", "0.95", "0.99"] {
+        let qk = format!("wirecell_serve_queue_latency_seconds{{quantile=\"{q}\"}}");
+        let sk = format!("wirecell_serve_service_latency_seconds{{quantile=\"{q}\"}}");
+        assert!(map.contains_key(&qk), "missing {qk}\n{text}");
+        assert!(map.contains_key(&sk), "missing {sk}\n{text}");
+        assert!(map[&sk] > 0.0, "service latency quantile {q} is zero");
+    }
+    let hit_rate = map["wirecell_serve_arena_hit_rate"];
+    assert!((0.0..=1.0).contains(&hit_rate), "hit rate {hit_rate}");
+
+    // a non-metrics path 404s without killing the daemon
+    let mut stream = TcpStream::connect(addr).unwrap();
+    use std::io::{Read, Write};
+    write!(stream, "GET /nope HTTP/1.1\r\nHost: x\r\n\r\n").unwrap();
+    let mut raw = String::new();
+    stream.read_to_string(&mut raw).unwrap();
+    assert!(raw.starts_with("HTTP/1.1 404"), "{raw}");
+
+    wirecell::serve::shutdown(addr).unwrap();
+    let report = handle.join().unwrap().unwrap();
+    assert_eq!(report.served, 4);
+}

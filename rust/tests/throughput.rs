@@ -30,6 +30,7 @@ fn same_seed_same_frames_regardless_of_worker_count() {
                 events,
                 workers,
                 keep_frames: true,
+                arrival_rate_hz: 0.0,
             },
         )
         .unwrap()
@@ -80,6 +81,7 @@ fn distinct_events_differ() {
             events: 3,
             workers: 2,
             keep_frames: true,
+            arrival_rate_hz: 0.0,
         },
     )
     .unwrap();
@@ -112,6 +114,7 @@ fn mixed_stream_is_schedule_and_frame_deterministic() {
                 events,
                 workers,
                 keep_frames: true,
+                arrival_rate_hz: 0.0,
             },
         )
         .unwrap()
@@ -172,6 +175,81 @@ fn mixed_stream_is_schedule_and_frame_deterministic() {
     assert!(r1.latency.p99_s <= r1.latency.max_s);
 }
 
+/// Closed-loop pacing (`--arrival-rate`): the source releases tickets
+/// on a fixed schedule, the report splits queueing wait from service
+/// time, and — the physics guarantee — pacing changes *when* events
+/// run, never *what* they compute.
+#[test]
+fn paced_stream_reports_queueing_and_preserves_physics() {
+    let mut cfg = stream_cfg();
+    cfg.fluctuation = FluctuationMode::None; // keep CI quick
+    cfg.noise = false;
+    cfg.target_depos = 300;
+    let events = 4;
+    let rate_hz = 40.0;
+    let paced = run_stream(
+        &cfg,
+        &StreamOptions {
+            events,
+            workers: 2,
+            keep_frames: false,
+            arrival_rate_hz: rate_hz,
+        },
+    )
+    .unwrap();
+    assert!(paced.errors.is_empty(), "{:?}", paced.errors);
+    assert_eq!(paced.arrival_rate_hz, rate_hz);
+
+    // every event carries a queueing sample, separate from the
+    // service-latency summary
+    assert_eq!(paced.queueing.n, events as u64);
+    assert_eq!(paced.latency.n, events as u64);
+    assert!(paced.queueing.max_s >= 0.0);
+
+    // the last ticket is not released before (events-1)/rate, so the
+    // campaign wall clock has a hard pacing floor
+    assert!(
+        paced.rate.wall_s >= (events as f64 - 1.0) / rate_hz,
+        "wall {} s beat the arrival schedule",
+        paced.rate.wall_s
+    );
+
+    // pacing must not touch the physics: open-loop digest is identical
+    let open = run_stream(
+        &cfg,
+        &StreamOptions {
+            events,
+            workers: 2,
+            keep_frames: false,
+            arrival_rate_hz: 0.0,
+        },
+    )
+    .unwrap();
+    assert_eq!(open.arrival_rate_hz, 0.0);
+    assert_eq!(
+        paced.digest, open.digest,
+        "pacing changed the simulated frames"
+    );
+
+    // and the --json document carries the split for downstream tooling
+    let v = paced.to_json();
+    assert_eq!(
+        v.get("arrival_rate_hz").unwrap().as_f64(),
+        Some(rate_hz),
+        "json misses arrival_rate_hz"
+    );
+    for key in ["n", "mean_ms", "p50_ms", "p95_ms", "p99_ms", "max_ms"] {
+        assert!(
+            v.path(&format!("queueing.{key}")).is_some(),
+            "json misses queueing.{key}"
+        );
+    }
+    assert_eq!(
+        v.path("queueing.n").unwrap().as_f64(),
+        Some(events as f64)
+    );
+}
+
 #[test]
 fn events_per_sec_smoke() {
     let mut cfg = stream_cfg();
@@ -184,6 +262,7 @@ fn events_per_sec_smoke() {
             events,
             workers: 4,
             keep_frames: false,
+            arrival_rate_hz: 0.0,
         },
     )
     .unwrap();

@@ -1,0 +1,87 @@
+#!/usr/bin/env python3
+"""Generate rust/tests/data/serve_protocol_golden.bin.
+
+An independent (non-Rust) writer of the `wire-cell serve` wire format,
+producing the two pinned records that rust/tests/serve.rs decodes,
+re-encodes and compares byte-for-byte:
+
+  1. REQUEST  {seq 7, seed 0xDEADBEEF, scenario "hotspot", overrides ""}
+  2. FRAME    {seq 7, seed 0xDEADBEEF, queue 1500 us, service 250000 us,
+               stages [("adc", 0.125 s, 3), ("raster", 1.5 s, 6)],
+               frame ident 7 with a sparse U plane and an all-zero W plane}
+
+The values mirror the unit round-trip test in rust/src/serve/protocol.rs,
+so the golden file, the Rust encoder and the Rust decoder pin each other
+three ways.  Any change to the byte layout must bump PROTOCOL_VERSION
+and regenerate this file:
+
+    python3 tools/gen_serve_golden.py
+"""
+
+import struct
+from pathlib import Path
+
+VERSION = 1
+KIND_REQUEST = 1
+KIND_FRAME = 2
+
+
+def str16(s: str) -> bytes:
+    b = s.encode()
+    return struct.pack("<H", len(b)) + b
+
+
+def str32(s: str) -> bytes:
+    b = s.encode()
+    return struct.pack("<I", len(b)) + b
+
+
+def f32bits(v: float) -> int:
+    return struct.unpack("<I", struct.pack("<f", v))[0]
+
+
+def record(body: bytes) -> bytes:
+    return struct.pack("<I", len(body)) + body
+
+
+def request_record() -> bytes:
+    body = bytearray([VERSION, KIND_REQUEST])
+    body += struct.pack("<QQ", 7, 0xDEADBEEF)
+    body += str16("hotspot")
+    body += str32("")
+    return record(bytes(body))
+
+
+def frame_record() -> bytes:
+    body = bytearray([VERSION, KIND_FRAME])
+    body += struct.pack("<QQQQ", 7, 0xDEADBEEF, 1500, 250_000)
+    # stages, sorted by name
+    body += struct.pack("<H", 2)
+    body += str16("adc") + struct.pack("<d", 0.125) + struct.pack("<Q", 3)
+    body += str16("raster") + struct.pack("<d", 1.5) + struct.pack("<Q", 6)
+    # frame: ident, nplanes, then per-plane sparse blocks
+    body += struct.pack("<QH", 7, 2)
+    # U plane (id 0), 2 channels x 4 ticks:
+    #   data = [0.0, 1.5, 2.5, 0.0,   -0.5, 0.0, 0.0, 3.25]
+    # -> runs (chan, first tick, count, samples...):
+    #      (0, 1, 2, [1.5, 2.5]), (1, 0, 1, [-0.5]), (1, 3, 1, [3.25])
+    body += bytes([0]) + struct.pack("<III", 2, 4, 3)
+    body += struct.pack("<III", 0, 1, 2) + struct.pack(
+        "<II", f32bits(1.5), f32bits(2.5)
+    )
+    body += struct.pack("<III", 1, 0, 1) + struct.pack("<I", f32bits(-0.5))
+    body += struct.pack("<III", 1, 3, 1) + struct.pack("<I", f32bits(3.25))
+    # W plane (id 2), 1 channel x 3 ticks, all zero -> no runs
+    body += bytes([2]) + struct.pack("<III", 1, 3, 0)
+    return record(bytes(body))
+
+
+def main() -> None:
+    out = Path(__file__).resolve().parent.parent / "rust/tests/data/serve_protocol_golden.bin"
+    data = request_record() + frame_record()
+    out.write_bytes(data)
+    print(f"wrote {out} ({len(data)} bytes)")
+
+
+if __name__ == "__main__":
+    main()
