@@ -1,0 +1,181 @@
+//! SIMD lane bench: the portable-vector erf axis-table fill and the
+//! lane-chunked spectral passes vs their scalar twins, with two hard
+//! gates:
+//!
+//! 1. **axis-fill throughput** — `SoaTables::materialize` at the best
+//!    lane width must beat the scalar fill by **≥ 1.3×** on a
+//!    detector-shaped depo set (the Clenshaw erf polynomial is the
+//!    vectorizable bulk of the "2D sampling" cost);
+//! 2. **parity + allocation witness** — every lane width must
+//!    reproduce the scalar tables bit for bit, and a warm lane FT
+//!    apply must perform zero heap allocations.
+//!
+//! ```sh
+//! cargo bench --bench simd
+//! ```
+
+mod common;
+
+use common::counting_alloc::{allocs_on_this_thread as allocs, CountingAlloc};
+use std::time::Instant;
+
+use wirecell::config::SimConfig;
+use wirecell::fft::{SpectralExec, SpectralScratch};
+use wirecell::geometry::PlaneId;
+use wirecell::kernel::{FusedPlan, SoaTables};
+use wirecell::metrics::Table;
+use wirecell::raster::{DepoView, GridSpec, RasterParams};
+use wirecell::response::{PlaneResponse, ResponseSpectrum};
+use wirecell::rng::{Pcg32, UniformRng};
+use wirecell::scatter::PlaneGrid;
+use wirecell::simd::SUPPORTED_WIDTHS;
+use wirecell::units::{MM, US};
+
+#[global_allocator]
+static COUNTING_ALLOC: CountingAlloc = CountingAlloc;
+
+/// Detector-shaped depo views spread over the plane (uboone-like
+/// diffusion widths, so the mean patch is the paper's ~20×20 bins).
+fn views(spec_extent_wires: usize, n: usize) -> Vec<DepoView> {
+    let mut rng = Pcg32::seeded(7);
+    (0..n)
+        .map(|_| DepoView {
+            pitch: rng.uniform() * spec_extent_wires as f64 * 3.0 * MM,
+            time: rng.uniform() * 1000.0 * US,
+            sigma_pitch: (0.6 + rng.uniform()) * MM,
+            sigma_time: (0.5 + rng.uniform()) * US,
+            charge: 1000.0 + rng.uniform() * 9000.0,
+        })
+        .collect()
+}
+
+fn time_best(repeat: usize, mut f: impl FnMut()) -> f64 {
+    let mut best = f64::INFINITY;
+    for _ in 0..repeat {
+        let t0 = Instant::now();
+        f();
+        best = best.min(t0.elapsed().as_secs_f64());
+    }
+    best
+}
+
+fn main() -> anyhow::Result<()> {
+    let repeat = common::repeat(5);
+    let cfg = SimConfig::default();
+    let det = cfg.detector().map_err(anyhow::Error::msg)?;
+    let spec = GridSpec::for_plane(&det, PlaneId::W, cfg.pitch_oversample, cfg.time_oversample);
+    let nwires = det.plane(PlaneId::W).nwires;
+    let vs = views(nwires, common::depos(4_000));
+
+    // --- erf axis-table fill: scalar vs every lane width -------------
+    let scalar = RasterParams::default(); // lane_width = 1
+    let plan = FusedPlan::build(&vs, &spec, &scalar);
+    let mut t = Table::new(
+        &format!("SIMD lanes — erf axis-table fill, {} depos", vs.len()),
+        &["Lane width", "Time/fill [ms]", "Speedup vs scalar"],
+    );
+    let reference = SoaTables::materialize(&plan, &vs, &spec, &scalar);
+    let scalar_s = time_best(repeat, || {
+        std::hint::black_box(SoaTables::materialize(&plan, &vs, &spec, &scalar).norm.len());
+    });
+    t.row(&[
+        "1 (scalar)".into(),
+        format!("{:.3}", scalar_s * 1e3),
+        "1.00x".into(),
+    ]);
+    let mut best_speedup = 0.0f64;
+    for w in SUPPORTED_WIDTHS {
+        if w == 1 {
+            continue;
+        }
+        let params = RasterParams {
+            lane_width: w,
+            ..scalar
+        };
+        // parity guard before timing: the lane tables must be the
+        // scalar tables bit for bit (the contract the tier-1 suite
+        // pins per-kernel; this re-checks it on the bench workload)
+        let lanes = SoaTables::materialize(&plan, &vs, &spec, &params);
+        let bits = |xs: &[f64]| xs.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+        assert_eq!(bits(&lanes.wp), bits(&reference.wp), "wp diverged at x{w}");
+        assert_eq!(bits(&lanes.wt), bits(&reference.wt), "wt diverged at x{w}");
+        assert_eq!(bits(&lanes.norm), bits(&reference.norm), "norm diverged at x{w}");
+        let s = time_best(repeat, || {
+            std::hint::black_box(SoaTables::materialize(&plan, &vs, &spec, &params).norm.len());
+        });
+        best_speedup = best_speedup.max(scalar_s / s);
+        t.row(&[
+            format!("{w}"),
+            format!("{:.3}", s * 1e3),
+            format!("{:.2}x", scalar_s / s),
+        ]);
+    }
+    common::emit(&t);
+
+    // the headline gate: the best lane width must pay for itself
+    assert!(
+        best_speedup >= 1.3,
+        "best lane speedup {best_speedup:.2}x below the 1.3x gate \
+         (scalar fill {scalar_s:.4}s)"
+    );
+    println!("lane axis fill: {best_speedup:.2}x over scalar at the best width");
+
+    // --- spectral lane passes: informational rows --------------------
+    let (nw, nt) = (nwires, det.nticks);
+    let pr = PlaneResponse::standard(PlaneId::W, det.tick);
+    let ft = ResponseSpectrum::assemble(&pr, nw, nt);
+    let mut rng = Pcg32::seeded(17);
+    let mut grid = PlaneGrid {
+        nwires: nw,
+        nticks: nt,
+        data: vec![0.0; nw * nt],
+    };
+    for _ in 0..common::depos(1_000).min(nw * nt) {
+        let w = rng.below(nw as u32) as usize;
+        let tt = rng.below(nt as u32) as usize;
+        grid.data[w * nt + tt] += 500.0 + rng.uniform() as f32 * 4000.0;
+    }
+    let mut out = Vec::new();
+    let mut scratch = SpectralScratch::new();
+    let mut t = Table::new(
+        &format!("SIMD lanes — FT apply, {nw}x{nt} collection grid"),
+        &["Lane width", "Time/apply [ms]", "Speedup vs scalar"],
+    );
+    ft.apply_into(&grid, &mut out, &mut scratch, SpectralExec::serial()); // warm
+    let ft_scalar_s = time_best(repeat, || {
+        ft.apply_into(&grid, &mut out, &mut scratch, SpectralExec::serial());
+        std::hint::black_box(out.len());
+    });
+    t.row(&[
+        "1 (scalar)".into(),
+        format!("{:.3}", ft_scalar_s * 1e3),
+        "1.00x".into(),
+    ]);
+    for w in SUPPORTED_WIDTHS {
+        if w == 1 {
+            continue;
+        }
+        let exec = SpectralExec::serial().with_lanes(w);
+        ft.apply_into(&grid, &mut out, &mut scratch, exec); // warm
+        let s = time_best(repeat, || {
+            ft.apply_into(&grid, &mut out, &mut scratch, exec);
+            std::hint::black_box(out.len());
+        });
+        t.row(&[
+            format!("{w}"),
+            format!("{:.3}", s * 1e3),
+            format!("{:.2}x", ft_scalar_s / s),
+        ]);
+    }
+    common::emit(&t);
+
+    // allocation-free witness: one warm lane apply, zero allocations
+    let exec = SpectralExec::serial().with_lanes(8);
+    ft.apply_into(&grid, &mut out, &mut scratch, exec);
+    let before = allocs();
+    ft.apply_into(&grid, &mut out, &mut scratch, exec);
+    let lane_allocs = allocs() - before;
+    assert_eq!(lane_allocs, 0, "warm lane FT apply allocated {lane_allocs} times");
+    println!("lane FT apply: 0 allocs warm, tables bit-identical at every width");
+    Ok(())
+}

@@ -9,6 +9,7 @@
 #        SKIP_CLIPPY=1 ./ci.sh # e.g. on toolchains without clippy
 #        SKIP_DOC=1 ./ci.sh    # e.g. on toolchains without rustdoc
 #        SKIP_SERVE=1 ./ci.sh  # e.g. on sandboxes without loopback TCP
+#        SKIP_SIMD=1 ./ci.sh   # e.g. on hosts too noisy for the lane gate
 set -euo pipefail
 cd "$(dirname "$0")"
 
@@ -80,11 +81,22 @@ fi
 # Bench-rot gate: every bench target must still compile (the benches
 # carry the paper-shape assertions — incl. the fused ≥2x gate in
 # `strategy`, the spectral-engine ≥1.5x + zero-alloc gates in
-# `spectral`, the hit-list repeat-stability gate in `reco`, and the
-# mixed-traffic digest worker-invariance gate in `mixed` — so letting
-# them rot silently would hollow out the reproduction; see
-# docs/BENCHMARKS.md).
+# `spectral`, the lane ≥1.3x + bit-parity gates in `simd`, the
+# hit-list repeat-stability gate in `reco`, and the mixed-traffic
+# digest worker-invariance gate in `mixed` — so letting them rot
+# silently would hollow out the reproduction; see docs/BENCHMARKS.md).
 run cargo bench --no-run
+
+# SIMD lane gate: actually *run* the lane bench — it carries the
+# ≥1.3x axis-fill speedup assertion plus the bitwise table parity and
+# zero-alloc witnesses, so a regression in the lane kernels fails CI
+# rather than just a table row.  Hatch for noisy/shared hosts where
+# the timing gate would flake.
+if [ -z "${SKIP_SIMD:-}" ]; then
+    run cargo bench --bench simd
+else
+    echo "==> skipping simd lane gate (SKIP_SIMD set)"
+fi
 
 # Formatting gate: same availability probe + escape hatch as clippy.
 if [ -z "${SKIP_FMT:-}" ] && cargo fmt --version >/dev/null 2>&1; then

@@ -138,6 +138,17 @@ pub trait ExecBackend: Send {
     fn spectral_policy(&self) -> ExecPolicy {
         ExecPolicy::Serial
     }
+
+    /// Host SIMD lane width the backend's raster hot loops run at
+    /// (1 = scalar).  Like [`spectral_policy`](Self::spectral_policy)
+    /// this is a fact the backend owns: the CPU backends report their
+    /// configured `RasterParams::lane_width`, while the device backend
+    /// reports 1 — its hot loops run on the accelerator, so host lanes
+    /// don't apply.  The lane paths are bit-identical to scalar, so
+    /// this is purely a throughput knob.
+    fn lanes(&self) -> usize {
+        1
+    }
 }
 
 #[cfg(test)]

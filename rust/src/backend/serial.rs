@@ -97,6 +97,12 @@ impl ExecBackend for SerialBackend {
         crate::parallel::ExecPolicy::Serial
     }
 
+    /// Single-threaded but still lane-vectorized: the configured lane
+    /// width applies to the axis fills and the fused sweep.
+    fn lanes(&self) -> usize {
+        self.params.lane_width.max(1)
+    }
+
     /// The fused SoA kernel, single-threaded.  Uses the same RNG state
     /// (inline generator or variate-pool cursor) as
     /// [`rasterize`](ExecBackend::rasterize), so the produced grid is

@@ -81,6 +81,12 @@ impl ExecBackend for ThreadedBackend {
         ExecPolicy::Threads(self.nthreads)
     }
 
+    /// The configured lane width — threads and lanes compose (threads
+    /// split depos/rows, lanes chunk each inner loop).
+    fn lanes(&self) -> usize {
+        self.params.lane_width.max(1)
+    }
+
     /// The fused SoA kernel over the host pool: deterministic
     /// value-fill (pool variates indexed by flat bin offset) plus
     /// striped scatter — bit-identical output for any thread count,
@@ -383,6 +389,33 @@ mod tests {
             None,
         );
         assert_eq!(serial.spectral_policy(), ExecPolicy::Serial);
+    }
+
+    #[test]
+    fn lanes_report_configured_width() {
+        // default params are scalar; a lane-configured backend reports
+        // its width, and zero clamps up to 1
+        assert_eq!(backend(Strategy::Batched, 2).lanes(), 1);
+        let mut params = RasterParams::default();
+        params.lane_width = 4;
+        let b = ThreadedBackend::new(
+            params,
+            Strategy::Fused,
+            2,
+            Arc::new(ThreadPool::new(2)),
+            RandomPool::shared(1, 1 << 10),
+            42,
+        );
+        assert_eq!(b.lanes(), 4);
+        let mut params = RasterParams::default();
+        params.lane_width = 0;
+        let s = crate::backend::SerialBackend::new(
+            params,
+            crate::config::FluctuationMode::None,
+            1,
+            None,
+        );
+        assert_eq!(s.lanes(), 1);
     }
 
     #[test]

@@ -29,6 +29,7 @@ const KNOWN_FLAGS: &[&str] = &[
     "frames",
     "metrics",
     "shutdown",
+    "autotune",
 ];
 
 impl Cli {
@@ -112,6 +113,7 @@ impl Cli {
             ("fluctuation", "fluctuation"),
             ("backend", "backend"),
             ("strategy", "strategy"),
+            ("lanes", "lanes"),
             ("scenario", "scenario"),
             ("artifacts_dir", "artifacts_dir"),
             ("scenario-mix", "scenario_mix"),
@@ -218,6 +220,14 @@ COMMON OPTIONS:
   --detector <name>        test-small | uboone-like | protodune-sp
   --backend <b>            serial | threads:N | pjrt
   --strategy <s>           per-depo | batched | fused
+  --lanes <m>              SIMD lane mode for the host hot loops:
+                           off | auto | x2 | x4 | x8 (default auto;
+                           bit-identical output at every width)
+  --autotune               simulate/throughput: measure a short sweep
+                           over {backend, strategy, lanes} and apply
+                           (and cache) the fastest plan
+  --plan-file <file>       exec-plan cache location (default
+                           <artifacts_dir>/exec_plan.json)
   --fluctuation <m>        inline | pool | none
   --topology <list>        comma-separated stage names (default:
                            drift,raster,scatter,response,noise,adc;
@@ -536,6 +546,24 @@ mod tests {
         ]))
         .unwrap();
         assert_eq!(cli.sim_config().unwrap().scenario, "hotspot");
+    }
+
+    #[test]
+    fn lanes_and_autotune_options_wire_through() {
+        let cli = Cli::parse(&args(&["simulate", "--lanes", "x4", "--autotune"])).unwrap();
+        assert!(cli.has_flag("autotune"));
+        let cfg = cli.sim_config().unwrap();
+        assert_eq!(cfg.lanes, "x4");
+        assert_eq!(cfg.lane_width(), 4);
+        // --autotune stays a flag even when followed by a value option
+        let cli = Cli::parse(&args(&["simulate", "--autotune", "--seed", "9"])).unwrap();
+        assert!(cli.has_flag("autotune"));
+        assert_eq!(cli.opt("seed"), Some("9"));
+        // default when absent, bad mode rejected through validation
+        let cfg = Cli::parse(&args(&["simulate"])).unwrap().sim_config().unwrap();
+        assert_eq!(cfg.lanes, "auto");
+        let cli = Cli::parse(&args(&["simulate", "--lanes", "x16"])).unwrap();
+        assert!(cli.sim_config().unwrap_err().contains("lanes"));
     }
 
     #[test]

@@ -249,6 +249,12 @@ pub struct SimConfig {
     pub backend: BackendChoice,
     /// Offload strategy for device backends.
     pub strategy: Strategy,
+    /// SIMD lane mode for the host hot loops (`off` | `auto` | `x2` |
+    /// `x4` | `x8`; see [`crate::simd::LaneMode`]).  `auto` is a fixed
+    /// portable width, not a CPU probe, so a config means the same
+    /// thing on every host; the lane paths are bit-identical to
+    /// scalar, so this knob never changes an output frame.
+    pub lanes: String,
     /// Stage topology for session runs (empty = the default
     /// drift→raster→scatter→response→noise→adc chain).  Names must be
     /// built-in stages ([`crate::session::BUILTIN_STAGES`], which adds
@@ -336,6 +342,7 @@ impl Default for SimConfig {
             fluctuation: FluctuationMode::Inline,
             backend: BackendChoice::Serial,
             strategy: Strategy::Batched,
+            lanes: "auto".into(),
             topology: Vec::new(),
             scenario: "cosmic-shower".into(),
             apas: 1,
@@ -395,6 +402,9 @@ impl SimConfig {
         }
         if let Some(s) = get_str("strategy") {
             self.strategy = s.parse()?;
+        }
+        if let Some(s) = get_str("lanes") {
+            self.lanes = s;
         }
         if let Some(v) = doc.get("topology") {
             let arr = v
@@ -504,6 +514,7 @@ impl SimConfig {
         if self.pitch_oversample == 0 || self.time_oversample == 0 {
             return Err("oversample factors must be >= 1".into());
         }
+        crate::simd::LaneMode::parse(&self.lanes).map_err(|e| format!("lanes: {e}"))?;
         if self.apas == 0 || self.apas > 512 {
             return Err(format!("apas {} out of range [1, 512]", self.apas));
         }
@@ -599,6 +610,7 @@ impl SimConfig {
             ("fluctuation", Value::from(self.fluctuation.as_str())),
             ("backend", Value::from(self.backend.label())),
             ("strategy", Value::from(self.strategy.as_str())),
+            ("lanes", Value::from(self.lanes.as_str())),
             (
                 "topology",
                 Value::Array(self.topology.iter().map(|s| s.to_value()).collect()),
@@ -628,12 +640,22 @@ impl SimConfig {
         to_string_pretty(&v)
     }
 
+    /// The lane width the configured [`lanes`](Self::lanes) mode
+    /// resolves to (1 for `off` or an unparseable string — overlay
+    /// validation rejects the latter before it gets here).
+    pub fn lane_width(&self) -> usize {
+        crate::simd::LaneMode::parse(&self.lanes)
+            .map(|m| m.width())
+            .unwrap_or(1)
+    }
+
     /// `RasterParams` view of this config.
     pub fn raster_params(&self) -> crate::raster::RasterParams {
         crate::raster::RasterParams {
             nsigma: self.nsigma,
             min_sigma_pitch: self.min_sigma_pitch,
             min_sigma_time: self.min_sigma_time,
+            lane_width: self.lane_width(),
         }
     }
 }
@@ -901,6 +923,29 @@ mod tests {
         for name in PRESETS {
             preset_overlay(name).unwrap();
         }
+    }
+
+    #[test]
+    fn lanes_knob_overlay_validate_and_roundtrip() {
+        // default: portable auto width
+        let d = SimConfig::default();
+        assert_eq!(d.lanes, "auto");
+        assert_eq!(d.lane_width(), crate::simd::AUTO_WIDTH);
+        assert_eq!(d.raster_params().lane_width, crate::simd::AUTO_WIDTH);
+        // overlay + resolution
+        for (s, w) in [("off", 1usize), ("x2", 2), ("x4", 4), ("x8", 8)] {
+            let cfg = SimConfig::from_json(&format!(r#"{{"lanes": "{s}"}}"#)).unwrap();
+            assert_eq!(cfg.lanes, s);
+            assert_eq!(cfg.lane_width(), w);
+        }
+        // round-trip through to_json
+        let mut cfg = SimConfig::default();
+        cfg.lanes = "x8".into();
+        let back = SimConfig::from_json(&cfg.to_json()).unwrap();
+        assert_eq!(cfg, back);
+        // bad modes are rejected at validation with the knob named
+        let err = SimConfig::from_json(r#"{"lanes": "x16"}"#).unwrap_err();
+        assert!(err.contains("lanes"), "{err}");
     }
 
     #[test]

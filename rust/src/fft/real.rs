@@ -145,6 +145,7 @@ pub fn convolve_real(a: &[f64], b: &[f64]) -> Vec<f64> {
 pub struct SpectralExec<'a> {
     pool: Option<&'a ThreadPool>,
     policy: ExecPolicy,
+    lanes: usize,
 }
 
 impl<'a> SpectralExec<'a> {
@@ -153,6 +154,7 @@ impl<'a> SpectralExec<'a> {
         SpectralExec {
             pool: None,
             policy: ExecPolicy::Serial,
+            lanes: 1,
         }
     }
 
@@ -162,7 +164,22 @@ impl<'a> SpectralExec<'a> {
         Self {
             pool: Some(pool),
             policy,
+            lanes: 1,
         }
+    }
+
+    /// Select the lane width the spectral passes run at (the
+    /// recombination and filter-multiply loops chunk by `width`).  The
+    /// lane paths are bit-identical to scalar, so this knob never moves
+    /// an output bit — only throughput.  Widths `<= 1` mean scalar.
+    pub fn with_lanes(mut self, width: usize) -> Self {
+        self.lanes = width.max(1);
+        self
+    }
+
+    /// Lane width the passes will use (1 = scalar loops).
+    pub fn lanes(&self) -> usize {
+        self.lanes
     }
 
     /// Worker count this exec will actually use.
@@ -335,6 +352,7 @@ impl Fft2dReal {
             return;
         }
         let (rows, cols, hc) = (self.rows, self.cols, self.hc);
+        let lane_w = exec.lanes();
         scratch.prepare(rows * hc, exec.concurrency());
         let SpectralScratch { spec, lanes } = scratch;
         let spec_ptr = SendPtr(spec.as_mut_ptr());
@@ -352,7 +370,8 @@ impl Fft2dReal {
                 // rows are disjoint slices of the shared spectrum buffer
                 let spec_row =
                     unsafe { std::slice::from_raw_parts_mut(spec_ptr.get().add(r * hc), hc) };
-                self.row_plan.forward_into(&lane.row, spec_row, &mut lane.real);
+                self.row_plan
+                    .forward_into_lanes(&lane.row, spec_row, &mut lane.real, lane_w);
             }
         });
 
@@ -371,8 +390,28 @@ impl Fft2dReal {
                     *col = unsafe { *spec_ptr.get().add(r * hc + c) };
                 }
                 self.col_plan.forward_scratch(&mut lane.col, &mut lane.conv);
-                for (r, col) in lane.col.iter_mut().enumerate() {
-                    *col = *col * filter[r * hc + c];
+                // the spectral product is elementwise, so the lane
+                // chunking below is bit-neutral (one multiply per bin
+                // either way); the strided filter reads are the gather
+                if lane_w > 1 {
+                    crate::simd::dispatch_lanes!(lane_w, W => {
+                        let mut r = 0usize;
+                        while r + W <= rows {
+                            let mut vals = [Complex::ZERO; W];
+                            for j in 0..W {
+                                vals[j] = lane.col[r + j] * filter[(r + j) * hc + c];
+                            }
+                            lane.col[r..r + W].copy_from_slice(&vals);
+                            r += W;
+                        }
+                        for rr in r..rows {
+                            lane.col[rr] = lane.col[rr] * filter[rr * hc + c];
+                        }
+                    });
+                } else {
+                    for (r, col) in lane.col.iter_mut().enumerate() {
+                        *col = *col * filter[r * hc + c];
+                    }
                 }
                 self.col_plan.inverse_scratch(&mut lane.col, &mut lane.conv);
                 for (r, col) in lane.col.iter().enumerate() {
@@ -391,7 +430,8 @@ impl Fft2dReal {
                     unsafe { std::slice::from_raw_parts(spec_ptr.get().add(r * hc), hc) };
                 let out_row =
                     unsafe { std::slice::from_raw_parts_mut(out_ptr.get().add(r * cols), cols) };
-                self.row_plan.inverse_into(spec_row, out_row, &mut lane.real);
+                self.row_plan
+                    .inverse_into_lanes(spec_row, out_row, &mut lane.real, lane_w);
             }
         });
     }
@@ -602,6 +642,52 @@ mod tests {
             );
             for (i, (a, b)) in out.iter().zip(&serial).enumerate() {
                 assert_eq!(a.to_bits(), b.to_bits(), "threads={threads} bin {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn apply_filter_lanes_are_bit_identical() {
+        // the spectral lane knob must never move an output bit — any
+        // width, serial or threaded (odd cols exercise the scalar
+        // delegation, even cols the chunked even-split path)
+        for (r, c) in [(12usize, 30usize), (6, 17), (8, 64)] {
+            let input: Vec<f64> = (0..r * c).map(|i| ((i * 7) % 23) as f64 - 11.0).collect();
+            let kernel: Vec<f64> = (0..r * c).map(|i| ((i * 3) % 5) as f64).collect();
+            let plan = Fft2dReal::new(r, c);
+            let filter = plan.forward(&kernel);
+            let mut want = Vec::new();
+            plan.apply_filter_into(
+                &input,
+                &filter,
+                &mut want,
+                &mut SpectralScratch::new(),
+                SpectralExec::serial(),
+            );
+            let pool = ThreadPool::new(3);
+            for w in crate::simd::SUPPORTED_WIDTHS {
+                let mut out = Vec::new();
+                plan.apply_filter_into(
+                    &input,
+                    &filter,
+                    &mut out,
+                    &mut SpectralScratch::new(),
+                    SpectralExec::serial().with_lanes(w),
+                );
+                for (i, (a, b)) in out.iter().zip(&want).enumerate() {
+                    assert_eq!(a.to_bits(), b.to_bits(), "({r}x{c}) lanes={w} bin {i}");
+                }
+                let mut outt = Vec::new();
+                plan.apply_filter_into(
+                    &input,
+                    &filter,
+                    &mut outt,
+                    &mut SpectralScratch::new(),
+                    SpectralExec::new(&pool, ExecPolicy::Threads(3)).with_lanes(w),
+                );
+                for (i, (a, b)) in outt.iter().zip(&want).enumerate() {
+                    assert_eq!(a.to_bits(), b.to_bits(), "({r}x{c}) lanes={w} threaded bin {i}");
+                }
             }
         }
     }

@@ -241,6 +241,115 @@ impl RealPlan {
         }
     }
 
+    /// Lane-chunked [`forward_into`](Self::forward_into): the even-split
+    /// twiddle recombination runs over `width`-element chunks of
+    /// independent bins (gather, lockstep compute, store), with a scalar
+    /// tail.  Every bin's operation sequence is exactly the scalar
+    /// one — the iterations never interact — so the output is
+    /// **bit-identical** for any width; `width <= 1` (and the trivial /
+    /// odd-length kinds, which have no recombination loop) delegate to
+    /// the scalar method outright.
+    pub fn forward_into_lanes(
+        &self,
+        input: &[f64],
+        spectrum: &mut [Complex],
+        ws: &mut RealScratch,
+        width: usize,
+    ) {
+        let RKind::EvenSplit { m, inner, twiddle } = &self.kind else {
+            return self.forward_into(input, spectrum, ws);
+        };
+        if width <= 1 {
+            return self.forward_into(input, spectrum, ws);
+        }
+        assert_eq!(input.len(), self.n, "real plan length mismatch");
+        assert_eq!(spectrum.len(), self.spectrum_len(), "half-spectrum length mismatch");
+        let m = *m;
+        ws.pack.resize(m, Complex::ZERO);
+        for (j, p) in ws.pack.iter_mut().enumerate() {
+            *p = Complex::new(input[2 * j], input[2 * j + 1]);
+        }
+        inner.forward_scratch(&mut ws.pack, &mut ws.conv);
+        let z = &ws.pack;
+        let nspec = spectrum.len();
+        let mut k = 0usize;
+        crate::simd::dispatch_lanes!(width, W => {
+            while k + W <= nspec {
+                let mut vals = [Complex::ZERO; W];
+                for j in 0..W {
+                    let kk = k + j;
+                    let zk = z[kk % m];
+                    let zmk = z[(m - kk) % m];
+                    let e = (zk + zmk.conj()).scale(0.5);
+                    let o = (zk - zmk.conj()) * Complex::new(0.0, -0.5);
+                    vals[j] = e + twiddle[kk] * o;
+                }
+                spectrum[k..k + W].copy_from_slice(&vals);
+                k += W;
+            }
+        });
+        for kk in k..nspec {
+            let zk = z[kk % m];
+            let zmk = z[(m - kk) % m];
+            let e = (zk + zmk.conj()).scale(0.5);
+            let o = (zk - zmk.conj()) * Complex::new(0.0, -0.5);
+            spectrum[kk] = e + twiddle[kk] * o;
+        }
+    }
+
+    /// Lane-chunked [`inverse_into`](Self::inverse_into) — the same
+    /// contract as [`forward_into_lanes`](Self::forward_into_lanes):
+    /// chunked even-split repack, bit-identical output, scalar
+    /// delegation for `width <= 1` and the non-split kinds.
+    pub fn inverse_into_lanes(
+        &self,
+        spectrum: &[Complex],
+        output: &mut [f64],
+        ws: &mut RealScratch,
+        width: usize,
+    ) {
+        let RKind::EvenSplit { m, inner, twiddle } = &self.kind else {
+            return self.inverse_into(spectrum, output, ws);
+        };
+        if width <= 1 {
+            return self.inverse_into(spectrum, output, ws);
+        }
+        assert_eq!(output.len(), self.n, "real plan length mismatch");
+        assert_eq!(spectrum.len(), self.spectrum_len(), "half-spectrum length mismatch");
+        let m = *m;
+        ws.pack.resize(m, Complex::ZERO);
+        let mut k = 0usize;
+        crate::simd::dispatch_lanes!(width, W => {
+            while k + W <= m {
+                let mut vals = [Complex::ZERO; W];
+                for j in 0..W {
+                    let kk = k + j;
+                    let xk = spectrum[kk];
+                    let xmk = spectrum[m - kk];
+                    let e = (xk + xmk.conj()).scale(0.5);
+                    let wo = (xk - xmk.conj()).scale(0.5);
+                    let o = wo * twiddle[kk].conj();
+                    vals[j] = e + Complex::new(0.0, 1.0) * o;
+                }
+                ws.pack[k..k + W].copy_from_slice(&vals);
+                k += W;
+            }
+        });
+        for kk in k..m {
+            let xk = spectrum[kk];
+            let xmk = spectrum[m - kk];
+            let e = (xk + xmk.conj()).scale(0.5);
+            let wo = (xk - xmk.conj()).scale(0.5);
+            let o = wo * twiddle[kk].conj();
+            ws.pack[kk] = e + Complex::new(0.0, 1.0) * o;
+        }
+        inner.inverse_scratch(&mut ws.pack, &mut ws.conv);
+        for (j, p) in ws.pack.iter().enumerate() {
+            output[2 * j] = p.re;
+            output[2 * j + 1] = p.im;
+        }
+    }
+
     /// Allocating forward convenience (tests, cold paths).
     pub fn forward(&self, input: &[f64]) -> Vec<Complex> {
         let mut out = vec![Complex::ZERO; self.spectrum_len()];
@@ -337,6 +446,57 @@ mod tests {
         for (p, q) in a.iter().zip(&b) {
             assert_eq!(p.re.to_bits(), q.re.to_bits());
             assert_eq!(p.im.to_bits(), q.im.to_bits());
+        }
+    }
+
+    #[test]
+    fn lane_recombination_is_bitwise_scalar() {
+        // the chunked even-split recombination must agree with the
+        // scalar loop to the last bit, for every supported width and
+        // for lengths that leave every possible tail size
+        for n in [2usize, 4, 6, 8, 10, 16, 30, 48, 64, 100, 256, 7, 15, 97] {
+            let x = ramp(n);
+            let plan = RealPlan::new(n);
+            let mut ws = RealScratch::new();
+            let mut want = vec![Complex::ZERO; plan.spectrum_len()];
+            plan.forward_into(&x, &mut want, &mut ws);
+            let mut back_want = vec![0.0; n];
+            plan.inverse_into(&want, &mut back_want, &mut ws);
+            for w in crate::simd::SUPPORTED_WIDTHS {
+                let mut got = vec![Complex::ZERO; plan.spectrum_len()];
+                plan.forward_into_lanes(&x, &mut got, &mut ws, w);
+                for (i, (a, b)) in got.iter().zip(&want).enumerate() {
+                    assert_eq!(a.re.to_bits(), b.re.to_bits(), "n={n} w={w} bin {i} re");
+                    assert_eq!(a.im.to_bits(), b.im.to_bits(), "n={n} w={w} bin {i} im");
+                }
+                let mut back = vec![0.0; n];
+                plan.inverse_into_lanes(&want, &mut back, &mut ws, w);
+                for (i, (a, b)) in back.iter().zip(&back_want).enumerate() {
+                    assert_eq!(a.to_bits(), b.to_bits(), "n={n} w={w} sample {i}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn lane_forward_matches_naive_oracle() {
+        // same 1e-9·n envelope the scalar path is pinned to
+        for n in [8usize, 30, 64, 100] {
+            let x = ramp(n);
+            let plan = RealPlan::new(n);
+            let slow = naive_half(&x);
+            let mut ws = RealScratch::new();
+            for w in [2usize, 4, 8] {
+                let mut fast = vec![Complex::ZERO; plan.spectrum_len()];
+                plan.forward_into_lanes(&x, &mut fast, &mut ws, w);
+                for (i, (a, b)) in fast.iter().zip(&slow).enumerate() {
+                    assert!(
+                        (a.re - b.re).abs() < 1e-9 * n as f64
+                            && (a.im - b.im).abs() < 1e-9 * n as f64,
+                        "n={n} w={w} bin {i}: {a:?} vs {b:?}"
+                    );
+                }
+            }
         }
     }
 

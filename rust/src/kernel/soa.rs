@@ -3,7 +3,7 @@
 use super::plan::FusedPlan;
 use super::SendPtr;
 use crate::parallel::{parallel_for, ExecPolicy, ThreadPool};
-use crate::raster::{axis_masses, DepoView, GridSpec, RasterParams};
+use crate::raster::{axis_masses_dispatch, DepoView, GridSpec, RasterParams};
 
 /// Separable Gaussian axis masses for every planned depo, in two
 /// contiguous tables, plus the per-depo patch normalization.
@@ -26,7 +26,10 @@ pub struct SoaTables {
 
 /// Fill one depo's slices of the tables.  Must mirror `sample_2d`'s
 /// arithmetic (same floors, same erf-edge sharing, same sum order) so
-/// the fused path stays bit-identical to the per-patch path.
+/// the fused path stays bit-identical to the per-patch path.  Both
+/// route through the same width-dispatched axis fill, so the lane knob
+/// (`params.lane_width`) composes with the strategy knob without
+/// perturbing a single bit.
 fn fill_one(
     view: &DepoView,
     spec: &GridSpec,
@@ -38,8 +41,8 @@ fn fill_one(
     let (p0, _np, t0, _nt) = window;
     let sp = view.sigma_pitch.max(params.min_sigma_pitch);
     let st = view.sigma_time.max(params.min_sigma_time);
-    axis_masses(view.pitch, sp, spec.pitch_bins(), p0, wp);
-    axis_masses(view.time, st, spec.time_bins(), t0, wt);
+    axis_masses_dispatch(view.pitch, sp, spec.pitch_bins(), p0, wp, params.lane_width);
+    axis_masses_dispatch(view.time, st, spec.time_bins(), t0, wt, params.lane_width);
     let total: f64 = wp.iter().sum::<f64>() * wt.iter().sum::<f64>();
     if total > 0.0 {
         1.0 / total
@@ -194,6 +197,24 @@ mod tests {
             assert_eq!(serial.wp, par.wp);
             assert_eq!(serial.wt, par.wt);
             assert_eq!(serial.norm, par.norm);
+        }
+    }
+
+    #[test]
+    fn lane_width_keeps_tables_bitwise_identical() {
+        // the SIMD axis fill is pinned to the scalar oracle per width
+        let s = spec();
+        let vs = views();
+        let scalar = RasterParams::default();
+        let plan = FusedPlan::build(&vs, &s, &scalar);
+        let want = SoaTables::materialize(&plan, &vs, &s, &scalar);
+        for w in crate::simd::SUPPORTED_WIDTHS {
+            let mut p = RasterParams::default();
+            p.lane_width = w;
+            let got = SoaTables::materialize(&plan, &vs, &s, &p);
+            assert_eq!(want.wp, got.wp, "lane width {w} changed wp");
+            assert_eq!(want.wt, got.wt, "lane width {w} changed wt");
+            assert_eq!(want.norm, got.norm, "lane width {w} changed norm");
         }
     }
 

@@ -8,7 +8,36 @@ use crate::parallel::{parallel_for, ExecPolicy, ThreadPool};
 use crate::raster::{DepoView, Fluctuation, GridSpec, RasterParams};
 use crate::rng::{binomial_exact, binomial_normal_approx, RandomPool};
 use crate::scatter::PlaneGrid;
+use crate::simd::{dispatch_lanes, scale_chunk};
 use std::time::Instant;
+
+/// Fluctuate one bin's weight into its f32 electron count.  Shared by
+/// the scalar and lane-chunked sweep loops so both draw the identical
+/// variate for the identical weight — the lane path chunks only the
+/// `k·wt` product and calls this element-major, preserving the inline
+/// generator's sequential draw order and the pool's `start + bin`
+/// addressing bit for bit.
+#[inline(always)]
+fn fluctuate_bin(
+    mode: &mut Fluctuation<'_>,
+    w: f64,
+    charge: f64,
+    n_electrons: u64,
+    pool_start: usize,
+    bin: usize,
+) -> f32 {
+    match mode {
+        Fluctuation::None => (w * charge) as f32,
+        Fluctuation::InlineBinomial(rng) => {
+            binomial_exact(*rng, n_electrons, w.clamp(0.0, 1.0)) as f32
+        }
+        Fluctuation::PoolNormal(pool) => binomial_normal_approx(
+            n_electrons,
+            w.clamp(0.0, 1.0),
+            pool.normal_at(pool_start + bin) as f64,
+        ) as f32,
+    }
+}
 
 /// Serial fused rasterize+scatter of one event's views into `grid`.
 ///
@@ -75,23 +104,32 @@ pub fn rasterize_fused_serial(
         for (p, &wpv) in wp.iter().enumerate() {
             let k = wpv * norm;
             let row = spec.wire_of(p0 + p as i64).map(|w| w * nticks);
-            for (t, &wtv) in wt.iter().enumerate() {
-                let w = k * wtv;
-                // The RNG is consumed for every planned bin — clipped
-                // ones included — exactly as the per-patch fluctuate()
-                // ran before scatter clipping.
-                let value: f32 = match mode {
-                    Fluctuation::None => (w * view.charge) as f32,
-                    Fluctuation::InlineBinomial(rng) => {
-                        binomial_exact(*rng, n_electrons, w.clamp(0.0, 1.0)) as f32
+            // The RNG is consumed for every planned bin — clipped ones
+            // included — exactly as the per-patch fluctuate() ran
+            // before scatter clipping.  The lane path chunks only the
+            // weight products; fluctuation and the grid adds run
+            // element-major within each chunk, so draw order (and
+            // therefore every bit of the grid) matches scalar.
+            let mut t = 0usize;
+            if params.lane_width > 1 {
+                dispatch_lanes!(params.lane_width, W => {
+                    while t + W <= wt.len() {
+                        let ws: [f64; W] = scale_chunk(k, &wt[t..t + W]);
+                        for j in 0..W {
+                            let value =
+                                fluctuate_bin(mode, ws[j], view.charge, n_electrons, pool_start, bin);
+                            if let (Some(rowbase), Some(tick)) = (row, tick_idx[t + j]) {
+                                grid.data[rowbase + tick] += value;
+                            }
+                            bin += 1;
+                        }
+                        t += W;
                     }
-                    Fluctuation::PoolNormal(pool) => binomial_normal_approx(
-                        n_electrons,
-                        w.clamp(0.0, 1.0),
-                        pool.normal_at(pool_start + bin) as f64,
-                    ) as f32,
-                };
-                if let (Some(rowbase), Some(tick)) = (row, tick_idx[t]) {
+                });
+            }
+            for (tt, &wtv) in wt.iter().enumerate().skip(t) {
+                let value = fluctuate_bin(mode, k * wtv, view.charge, n_electrons, pool_start, bin);
+                if let (Some(rowbase), Some(tick)) = (row, tick_idx[tt]) {
                     grid.data[rowbase + tick] += value;
                 }
                 bin += 1;
@@ -163,11 +201,32 @@ pub fn rasterize_fused_threaded(
                 let mut o = 0;
                 for &wpv in wp {
                     let k = wpv * norm;
-                    for &wtv in wt {
-                        let w = (k * wtv).clamp(0.0, 1.0);
+                    // Same lane contract as the serial sweep: chunked
+                    // weight products, element-major pool reads at
+                    // `pool_start + bin` (random access, so the chunk
+                    // boundary cannot shift which variate a bin gets).
+                    let mut t = 0usize;
+                    if params.lane_width > 1 {
+                        dispatch_lanes!(params.lane_width, W => {
+                            while t + W <= wt.len() {
+                                let ws: [f64; W] = scale_chunk(k, &wt[t..t + W]);
+                                for j in 0..W {
+                                    out[o] = binomial_normal_approx(
+                                        n_electrons,
+                                        ws[j].clamp(0.0, 1.0),
+                                        rng_pool.normal_at(pool_start + bin) as f64,
+                                    ) as f32;
+                                    bin += 1;
+                                    o += 1;
+                                }
+                                t += W;
+                            }
+                        });
+                    }
+                    for &wtv in wt.iter().skip(t) {
                         out[o] = binomial_normal_approx(
                             n_electrons,
-                            w,
+                            (k * wtv).clamp(0.0, 1.0),
                             rng_pool.normal_at(pool_start + bin) as f64,
                         ) as f32;
                         bin += 1;
@@ -403,6 +462,92 @@ mod tests {
                 grid.digest(),
                 "thread count {threads} broke bit parity"
             );
+        }
+    }
+
+    #[test]
+    fn lane_width_keeps_fused_serial_bitwise() {
+        // every lane width × every fluctuation mode reproduces the
+        // scalar grid bit for bit, clipped windows included (those are
+        // where a chunk-boundary RNG slip would show first)
+        let vs = {
+            let mut v = views(30);
+            v[3].pitch = -1.0 * MM;
+            v[9].pitch = 297.0 * MM;
+            v
+        };
+        let s = spec();
+        let pool = RandomPool::shared(5, 1 << 16);
+        let run = |width: usize, mode_id: usize| -> u64 {
+            let mut params = RasterParams::default();
+            params.lane_width = width;
+            let mut grid = PlaneGrid::for_spec(&s);
+            match mode_id {
+                0 => {
+                    rasterize_fused_serial(&vs, &s, &params, &mut Fluctuation::None, &mut grid);
+                }
+                1 => {
+                    let mut rng = Pcg32::seeded(77);
+                    rasterize_fused_serial(
+                        &vs,
+                        &s,
+                        &params,
+                        &mut Fluctuation::InlineBinomial(&mut rng),
+                        &mut grid,
+                    );
+                }
+                _ => {
+                    pool.reset();
+                    rasterize_fused_serial(
+                        &vs,
+                        &s,
+                        &params,
+                        &mut Fluctuation::PoolNormal(&pool),
+                        &mut grid,
+                    );
+                }
+            }
+            grid.digest()
+        };
+        for mode_id in 0..3 {
+            let want = run(1, mode_id);
+            for w in crate::simd::SUPPORTED_WIDTHS {
+                assert_eq!(
+                    want,
+                    run(w, mode_id),
+                    "lane width {w} broke parity in fluctuation mode {mode_id}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn lane_width_keeps_fused_threaded_bitwise_across_threads() {
+        let vs = views(60);
+        let s = spec();
+        let pool = RandomPool::generate(9, 1 << 16);
+        let mut reference = PlaneGrid::for_spec(&s);
+        rasterize_fused_serial(
+            &vs,
+            &s,
+            &RasterParams::default(),
+            &mut Fluctuation::PoolNormal(&pool),
+            &mut reference,
+        );
+        let tp = ThreadPool::new(4);
+        for w in crate::simd::SUPPORTED_WIDTHS {
+            let mut params = RasterParams::default();
+            params.lane_width = w;
+            for threads in [1usize, 3, 4] {
+                pool.reset();
+                let mut grid = PlaneGrid::for_spec(&s);
+                rasterize_fused_threaded(&vs, &s, &params, &pool, &mut grid, &tp, threads);
+                assert_eq!(
+                    reference.digest(),
+                    grid.digest(),
+                    "lanes {w} × threads {threads} broke bit parity"
+                );
+            }
         }
     }
 

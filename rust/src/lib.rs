@@ -70,6 +70,7 @@ pub mod scenario;
 pub mod serve;
 pub mod session;
 pub mod sigproc;
+pub mod simd;
 pub mod special;
 pub mod testing;
 pub mod throughput;

@@ -97,8 +97,49 @@ fn emit(cli: &Cli, table: Table) -> Result<()> {
     Ok(())
 }
 
+/// Resolve and apply an execution plan when the user opted in with
+/// `--autotune` (measure + cache) or `--plan-file` (consume a cache).
+/// Plain runs never consult the store, so a stray cache file cannot
+/// silently override explicit `--backend`/`--strategy` choices.  An
+/// applied plan only moves the four throughput knobs (backend,
+/// strategy, lanes, workers) — frame digests are unchanged by the
+/// parity contracts.
+fn apply_exec_plan(cli: &Cli, cfg: &mut wirecell::config::SimConfig) -> Result<()> {
+    use wirecell::runtime::autotune::{resolve, PlanSource, PlanStore};
+    let tune = cli.has_flag("autotune");
+    if !tune && cli.opt("plan-file").is_none() {
+        return Ok(());
+    }
+    let path = cli
+        .opt("plan-file")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(|| std::path::Path::new(&cfg.artifacts_dir).join("exec_plan.json"));
+    let store = PlanStore::at(path);
+    let (plan, source) = resolve(cfg, &store, tune)?;
+    if source == PlanSource::Default {
+        eprintln!(
+            "exec plan: no cached plan in {} (run with --autotune to measure one); \
+             using configured knobs",
+            store.path().display()
+        );
+        return Ok(());
+    }
+    plan.apply(cfg).map_err(|e| anyhow!(e))?;
+    eprintln!(
+        "exec plan ({}): backend {}, strategy {}, lanes {}, workers {}  [{}]",
+        if source == PlanSource::Tuned { "autotuned" } else { "cached" },
+        plan.backend,
+        plan.strategy,
+        plan.lanes,
+        plan.workers,
+        store.path().display()
+    );
+    Ok(())
+}
+
 fn simulate(cli: &Cli) -> Result<()> {
-    let cfg = cli.sim_config().map_err(|e| anyhow!(e))?;
+    let mut cfg = cli.sim_config().map_err(|e| anyhow!(e))?;
+    apply_exec_plan(cli, &mut cfg)?;
     eprintln!("config:\n{}", cfg.to_json());
     if cfg.apas > 1 {
         return simulate_sharded(cli, &cfg);
@@ -248,7 +289,8 @@ fn print_hits(hits: &[wirecell::sigproc::Hit]) {
 }
 
 fn throughput(cli: &Cli) -> Result<()> {
-    let cfg = cli.sim_config().map_err(|e| anyhow!(e))?;
+    let mut cfg = cli.sim_config().map_err(|e| anyhow!(e))?;
+    apply_exec_plan(cli, &mut cfg)?;
     eprintln!(
         "streaming {} events x {} depos over {} worker(s), backend {}",
         cfg.events,

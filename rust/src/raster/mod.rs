@@ -85,6 +85,11 @@ pub struct RasterParams {
     pub min_sigma_pitch: f64,
     /// Width floor along time.
     pub min_sigma_time: f64,
+    /// SIMD lane width for the axis-table and weight loops (1 =
+    /// scalar; 2/4/8 run the lockstep lane paths, which are
+    /// bit-identical to scalar — see `crate::simd`).  Resolved from
+    /// the config's `lanes` mode by `SimConfig::raster_params`.
+    pub lane_width: usize,
 }
 
 impl Default for RasterParams {
@@ -93,6 +98,7 @@ impl Default for RasterParams {
             nsigma: 3.0,
             min_sigma_pitch: 1e-3,
             min_sigma_time: 1e-3,
+            lane_width: 1,
         }
     }
 }
@@ -160,8 +166,8 @@ pub fn sample_2d(
         wt_vec = vec![0.0; nt];
         &mut wt_vec[..]
     };
-    axis_masses(view.pitch, sp, pb, p0, wp);
-    axis_masses(view.time, st, tb, t0, wt);
+    axis_masses_dispatch(view.pitch, sp, pb, p0, wp, params.lane_width);
+    axis_masses_dispatch(view.time, st, tb, t0, wt, params.lane_width);
     let total: f64 = wp.iter().sum::<f64>() * wt.iter().sum::<f64>();
     let norm = if total > 0.0 { 1.0 / total } else { 0.0 };
     let mut out = Vec::with_capacity(np * nt);
@@ -191,6 +197,65 @@ pub(crate) fn axis_masses(
         let next = crate::special::erf((bins.edge(bin0 + i as i64 + 1) - center) * inv);
         *o = 0.5 * (next - prev);
         prev = next;
+    }
+}
+
+/// Lane form of [`axis_masses`]: the trailing edges are evaluated `W`
+/// erfs at a time through `special::erf_block`, then differenced with
+/// the running `prev` carried across chunk boundaries.  Same erf calls
+/// at the same arguments, same `0.5 * (next - prev)` subtractions in
+/// the same order — so the filled table is **bit-identical** to the
+/// scalar fill for every width (the contract `rust/tests/simd.rs`
+/// pins); the lockstep erf chunk is where the auto-vectorizer earns
+/// the `benches/simd.rs` gate.
+pub(crate) fn axis_masses_lanes<const W: usize>(
+    center: f64,
+    sigma: f64,
+    bins: &crate::geometry::Binning,
+    bin0: i64,
+    out: &mut [f64],
+) {
+    let inv = 1.0 / (sigma * std::f64::consts::SQRT_2);
+    let mut prev = crate::special::erf((bins.edge(bin0) - center) * inv);
+    let n = out.len();
+    let mut i = 0usize;
+    while i + W <= n {
+        let mut xs = [0.0f64; W];
+        for j in 0..W {
+            xs[j] = (bins.edge(bin0 + (i + j) as i64 + 1) - center) * inv;
+        }
+        let es = crate::special::erf_block(xs);
+        for j in 0..W {
+            out[i + j] = 0.5 * (es[j] - prev);
+            prev = es[j];
+        }
+        i += W;
+    }
+    for k in i..n {
+        let next = crate::special::erf((bins.edge(bin0 + k as i64 + 1) - center) * inv);
+        out[k] = 0.5 * (next - prev);
+        prev = next;
+    }
+}
+
+/// Width-dispatched axis fill: the scalar loop for width 1 (or any
+/// unsupported value), the lane fill otherwise.  This is the single
+/// funnel both the per-patch path ([`sample_2d`]) and the fused SoA
+/// tables (`crate::kernel::soa`) route through, so the strategy and
+/// lane knobs compose without forking the erf arithmetic.
+pub(crate) fn axis_masses_dispatch(
+    center: f64,
+    sigma: f64,
+    bins: &crate::geometry::Binning,
+    bin0: i64,
+    out: &mut [f64],
+    width: usize,
+) {
+    match width {
+        8 => axis_masses_lanes::<8>(center, sigma, bins, bin0, out),
+        4 => axis_masses_lanes::<4>(center, sigma, bins, bin0, out),
+        2 => axis_masses_lanes::<2>(center, sigma, bins, bin0, out),
+        _ => axis_masses(center, sigma, bins, bin0, out),
     }
 }
 
@@ -390,6 +455,43 @@ mod tests {
         pool.reset();
         let b = rasterize(&v, &s, &p, &mut Fluctuation::PoolNormal(&pool)).unwrap();
         assert_eq!(a.values, b.values);
+    }
+
+    #[test]
+    fn lane_axis_masses_bitwise_matches_scalar() {
+        // every supported width, including lengths that leave a tail
+        let s = spec();
+        let pb = s.pitch_bins();
+        for n in [1usize, 2, 3, 5, 8, 17, 33, 64] {
+            let mut want = vec![0.0f64; n];
+            axis_masses(151.3 * MM, 1.7 * MM, pb, 240, &mut want);
+            for w in crate::simd::SUPPORTED_WIDTHS {
+                let mut got = vec![0.0f64; n];
+                axis_masses_dispatch(151.3 * MM, 1.7 * MM, pb, 240, &mut got, w);
+                assert!(
+                    want.iter().zip(&got).all(|(a, b)| a.to_bits() == b.to_bits()),
+                    "lane width {w} changed the axis table at n={n}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn lane_width_does_not_change_sample_2d_bits() {
+        let s = spec();
+        let v = view(150.0 * MM, 64.0 * US);
+        let scalar = RasterParams::default();
+        let win = patch_window(&v, &s, &scalar).unwrap();
+        let want = sample_2d(&v, &s, &scalar, win);
+        for w in [2usize, 4, 8] {
+            let mut p = RasterParams::default();
+            p.lane_width = w;
+            let got = sample_2d(&v, &s, &p, win);
+            assert!(
+                want.iter().zip(&got).all(|(a, b)| a.to_bits() == b.to_bits()),
+                "lane width {w} changed sample_2d"
+            );
+        }
     }
 
     #[test]

@@ -1,0 +1,573 @@
+//! Autotuned execution planning: a short measured sweep over the
+//! host execution knobs that emits an [`ExecPlan`], cached in a
+//! runtime manifest keyed by machine fingerprint + config digest.
+//!
+//! The knobs the sweep covers — backend (serial vs threads:ncpu),
+//! strategy (batched vs fused), SIMD lanes (off vs auto) — are all
+//! *throughput* knobs: every candidate produces bit-identical frames
+//! (the fused/batched and lane parity contracts), so the plan can
+//! never change physics, only wall clock.  That is what makes it safe
+//! to apply a cached plan silently: `--autotune` runs the sweep once
+//! per (machine, workload-config) pair, later runs reuse the stored
+//! winner, and a digest mismatch (the workload changed) or a
+//! fingerprint mismatch (the plan file moved machines) falls back to
+//! the config's own knobs with a warning, never a panic.
+//!
+//! ```no_run
+//! use wirecell::config::SimConfig;
+//! use wirecell::runtime::autotune::{resolve, PlanSource, PlanStore};
+//!
+//! let mut cfg = SimConfig::default();
+//! let store = PlanStore::at("artifacts/exec_plan.json");
+//! let (plan, source) = resolve(&cfg, &store, /*tune=*/ true)?;
+//! if source != PlanSource::Default {
+//!     plan.apply(&mut cfg).map_err(anyhow::Error::msg)?;
+//! }
+//! # Ok::<(), anyhow::Error>(())
+//! ```
+
+use crate::config::SimConfig;
+use crate::json::{self, Value};
+use crate::scenario::Scenario as _;
+use anyhow::{anyhow, Context, Result};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use std::time::Instant;
+
+/// Plan schema version; bump on incompatible field changes.  Stored
+/// plans with another version are treated as stale (warn + fallback).
+pub const PLAN_VERSION: usize = 1;
+
+/// Cap on generated depos per probe event — the sweep measures knob
+/// *ratios*, which stabilize well below production event sizes.
+const PROBE_DEPOS: usize = 2_000;
+
+/// Cap on the probe variate pool (pool fluctuation mode only needs to
+/// cover the probe event).
+const PROBE_POOL: usize = 1 << 16;
+
+/// A resolved execution plan: the tuned knob settings plus the cache
+/// key they were measured under.
+///
+/// Serialization is the repo's canonical JSON writer
+/// ([`json::to_string_pretty`]): object keys come out of a `BTreeMap`
+/// alphabetically sorted, so serialize → parse → re-serialize is
+/// byte-stable — the property the golden-file test pins.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ExecPlan {
+    /// Schema version ([`PLAN_VERSION`]).
+    pub version: usize,
+    /// Backend config string ("serial" | "threads:N" | "pjrt").
+    pub backend: String,
+    /// Strategy config string ("per-depo" | "batched" | "fused").
+    pub strategy: String,
+    /// Lane mode config string ("off" | "auto" | "x2" | "x4" | "x8").
+    pub lanes: String,
+    /// APA shard count the plan was measured at (recorded for audit;
+    /// a workload fact, so [`apply`](Self::apply) never changes it).
+    pub shards: usize,
+    /// Throughput-engine worker pipelines (derived: fill the host with
+    /// `workers × backend-threads ≈ ncpu`).
+    pub workers: usize,
+    /// Machine fingerprint the plan was measured on.
+    pub fingerprint: String,
+    /// Digest of the workload config (execution knobs excluded, so
+    /// applying the plan does not invalidate its own cache key).
+    pub config_digest: String,
+}
+
+impl ExecPlan {
+    /// The no-tuning plan: a snapshot of the config's own knobs.
+    pub fn default_for(cfg: &SimConfig) -> Self {
+        Self {
+            version: PLAN_VERSION,
+            backend: cfg.backend.label(),
+            strategy: cfg.strategy.as_str().to_string(),
+            lanes: cfg.lanes.clone(),
+            shards: cfg.apas,
+            workers: cfg.workers,
+            fingerprint: machine_fingerprint(),
+            config_digest: config_digest(cfg),
+        }
+    }
+
+    /// JSON form (keys alphabetical, see the type docs).
+    pub fn to_json(&self) -> Value {
+        Value::object(vec![
+            ("backend", Value::from(self.backend.as_str())),
+            ("config_digest", Value::from(self.config_digest.as_str())),
+            ("fingerprint", Value::from(self.fingerprint.as_str())),
+            ("lanes", Value::from(self.lanes.as_str())),
+            ("shards", Value::from(self.shards)),
+            ("strategy", Value::from(self.strategy.as_str())),
+            ("version", Value::from(self.version)),
+            ("workers", Value::from(self.workers)),
+        ])
+    }
+
+    /// Canonical serialized form (what the plan store writes).
+    pub fn serialize(&self) -> String {
+        json::to_string_pretty(&self.to_json())
+    }
+
+    /// Parse the canonical serialized form.
+    pub fn parse(text: &str) -> Result<Self, String> {
+        let v = json::parse(text).map_err(|e| format!("exec plan: {e}"))?;
+        Self::from_value(&v)
+    }
+
+    /// Build from a parsed JSON value.
+    pub fn from_value(v: &Value) -> Result<Self, String> {
+        let s = |k: &str| -> Result<String, String> {
+            v.get(k)
+                .and_then(|x| x.as_str())
+                .map(|x| x.to_string())
+                .ok_or_else(|| format!("exec plan missing string key '{k}'"))
+        };
+        let n = |k: &str| -> Result<usize, String> {
+            v.get(k)
+                .and_then(|x| x.as_usize())
+                .ok_or_else(|| format!("exec plan missing integer key '{k}'"))
+        };
+        Ok(Self {
+            version: n("version")?,
+            backend: s("backend")?,
+            strategy: s("strategy")?,
+            lanes: s("lanes")?,
+            shards: n("shards")?,
+            workers: n("workers")?,
+            fingerprint: s("fingerprint")?,
+            config_digest: s("config_digest")?,
+        })
+    }
+
+    /// Overwrite the config's execution knobs with this plan's.  Only
+    /// the four digest-excluded knobs change (backend, strategy,
+    /// lanes, workers); the workload config is untouched, so frame
+    /// digests are identical to a default-plan run by the parity
+    /// contracts.
+    pub fn apply(&self, cfg: &mut SimConfig) -> Result<(), String> {
+        cfg.backend = self.backend.parse()?;
+        cfg.strategy = self.strategy.parse()?;
+        crate::simd::LaneMode::parse(&self.lanes).map_err(|e| format!("lanes: {e}"))?;
+        cfg.lanes = self.lanes.clone();
+        cfg.workers = self.workers.max(1);
+        Ok(())
+    }
+
+    /// Whether this stored plan is valid for `cfg` on this machine.
+    pub fn matches(&self, cfg: &SimConfig) -> bool {
+        self.version == PLAN_VERSION
+            && self.fingerprint == machine_fingerprint()
+            && self.config_digest == config_digest(cfg)
+    }
+}
+
+/// Where a resolved plan came from.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PlanSource {
+    /// Cache hit in the plan store.
+    Cached,
+    /// Freshly measured by [`autotune`] (and stored).
+    Tuned,
+    /// No cache entry and tuning off: the config's own knobs.
+    Default,
+}
+
+/// Machine fingerprint the cache is keyed by: arch, OS and logical
+/// CPU count — the facts that move a tuned winner.  Deliberately
+/// coarse (no CPU model string: not portably available without a
+/// dependency) and deterministic per host.
+pub fn machine_fingerprint() -> String {
+    let ncpu = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1);
+    format!(
+        "{}-{}-c{ncpu}",
+        std::env::consts::ARCH,
+        std::env::consts::OS
+    )
+}
+
+/// FNV-1a 64 digest of the *workload* config: the config JSON with
+/// the execution knobs (backend, strategy, lanes, workers) removed,
+/// so a plan keyed by this digest survives its own application.
+pub fn config_digest(cfg: &SimConfig) -> String {
+    let v = cfg.to_json();
+    let mut obj = v.as_object().cloned().unwrap_or_default();
+    for k in ["backend", "strategy", "lanes", "workers"] {
+        obj.remove(k);
+    }
+    format!("{:016x}", fnv1a(json::to_string(&Value::Object(obj)).as_bytes()))
+}
+
+fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+fn cache_key(cfg: &SimConfig) -> String {
+    format!("{}|{}", machine_fingerprint(), config_digest(cfg))
+}
+
+/// On-disk plan cache: a JSON manifest
+/// `{"plans": {"<fingerprint>|<digest>": {...plan...}}}`.
+///
+/// Every failure mode degrades to "no cached plan" with a warning on
+/// stderr — a corrupt, truncated or foreign-machine manifest must
+/// never take the simulation down.
+pub struct PlanStore {
+    path: PathBuf,
+}
+
+impl PlanStore {
+    /// A store backed by `path` (need not exist yet).
+    pub fn at(path: impl Into<PathBuf>) -> Self {
+        Self { path: path.into() }
+    }
+
+    /// The backing file.
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    /// The manifest's plan table, or None (missing file) / empty-map
+    /// fallback with a warning (corrupt file).
+    fn load(&self) -> Option<BTreeMap<String, Value>> {
+        let text = std::fs::read_to_string(&self.path).ok()?;
+        match json::parse(&text) {
+            Ok(v) => match v.get("plans").and_then(|p| p.as_object()) {
+                Some(plans) => Some(plans.clone()),
+                None => {
+                    eprintln!(
+                        "warning: plan manifest {} has no \"plans\" object; ignoring it",
+                        self.path.display()
+                    );
+                    None
+                }
+            },
+            Err(e) => {
+                eprintln!(
+                    "warning: plan manifest {} is corrupt ({e}); ignoring it",
+                    self.path.display()
+                );
+                None
+            }
+        }
+    }
+
+    /// Cached plan for `cfg` on this machine, if a valid one exists.
+    /// Stale entries (version or fingerprint mismatch) warn and miss.
+    pub fn lookup(&self, cfg: &SimConfig) -> Option<ExecPlan> {
+        let plans = self.load()?;
+        let entry = plans.get(&cache_key(cfg))?;
+        let plan = match ExecPlan::from_value(entry) {
+            Ok(p) => p,
+            Err(e) => {
+                eprintln!(
+                    "warning: cached plan in {} is malformed ({e}); re-deriving",
+                    self.path.display()
+                );
+                return None;
+            }
+        };
+        if !plan.matches(cfg) {
+            eprintln!(
+                "warning: cached plan in {} is stale (version/fingerprint/digest \
+                 mismatch); re-deriving",
+                self.path.display()
+            );
+            return None;
+        }
+        Some(plan)
+    }
+
+    /// Insert `plan` under its own cache key and rewrite the manifest.
+    pub fn store(&self, plan: &ExecPlan) -> Result<()> {
+        let mut plans = self.load().unwrap_or_default();
+        plans.insert(
+            format!("{}|{}", plan.fingerprint, plan.config_digest),
+            plan.to_json(),
+        );
+        let doc = Value::object(vec![("plans", Value::Object(plans))]);
+        if let Some(dir) = self.path.parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)
+                    .with_context(|| format!("creating {}", dir.display()))?;
+            }
+        }
+        std::fs::write(&self.path, json::to_string_pretty(&doc))
+            .with_context(|| format!("writing {}", self.path.display()))?;
+        Ok(())
+    }
+}
+
+/// One sweep candidate: the knob triple a probe measures.
+struct Candidate {
+    backend: String,
+    strategy: crate::config::Strategy,
+    lanes: &'static str,
+}
+
+/// Run the measured sweep and return the winning plan.
+///
+/// Probes the host candidates — {serial, threads:ncpu} × {batched,
+/// fused} × {lanes off, auto}, ≤ 8 probes — on a reduced copy of the
+/// workload (`target_depos` capped at 2 000, pool at 2¹⁶), timing one
+/// full default-topology event per probe, best of 2.  The PJRT
+/// backend is never probed (device plans depend on compiled
+/// artifacts, not host knobs): a pjrt config gets its own knobs back
+/// unmeasured.
+pub fn autotune(cfg: &SimConfig) -> Result<ExecPlan> {
+    if cfg.backend == crate::config::BackendChoice::Pjrt {
+        return Ok(ExecPlan::default_for(cfg));
+    }
+    let ncpu = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1);
+
+    // Reduced probe workload: same scenario/detector/physics, capped
+    // event size so the sweep stays sub-second per probe.
+    let mut probe_base = cfg.clone();
+    probe_base.target_depos = cfg.target_depos.min(PROBE_DEPOS);
+    probe_base.pool_size = cfg.pool_size.min(PROBE_POOL);
+    probe_base.topology.clear();
+
+    let registry = crate::session::Registry::with_defaults();
+    let scenario = registry.make_scenario(&probe_base)?;
+    let detector = probe_base.detector().map_err(|e| anyhow!(e))?;
+    let layout = crate::geometry::ApaLayout::for_detector(&detector, probe_base.apas);
+    let depos = scenario.generate(&layout, probe_base.seed);
+
+    let mut candidates = Vec::new();
+    let mut backends = vec!["serial".to_string()];
+    if ncpu > 1 {
+        backends.push(format!("threads:{ncpu}"));
+    }
+    for backend in &backends {
+        for strategy in [crate::config::Strategy::Batched, crate::config::Strategy::Fused] {
+            for lanes in ["off", "auto"] {
+                candidates.push(Candidate {
+                    backend: backend.clone(),
+                    strategy,
+                    lanes,
+                });
+            }
+        }
+    }
+
+    let mut best: Option<(f64, Candidate)> = None;
+    for cand in candidates {
+        let mut probe = probe_base.clone();
+        probe.backend = cand.backend.parse().map_err(|e: String| anyhow!(e))?;
+        probe.strategy = cand.strategy;
+        probe.lanes = cand.lanes.to_string();
+        let mut session = crate::session::SimSession::new(probe)?;
+        // best of 2: the first run pays lazy costs (response spectra,
+        // FFT plans) the second measures past
+        let mut elapsed = f64::INFINITY;
+        for _ in 0..2 {
+            session.reseed(probe_base.seed);
+            let t0 = Instant::now();
+            session.run(&depos)?;
+            elapsed = elapsed.min(t0.elapsed().as_secs_f64());
+        }
+        match &best {
+            Some((t, _)) if *t <= elapsed => {}
+            _ => best = Some((elapsed, cand)),
+        }
+    }
+    let (_, winner) = best.ok_or_else(|| anyhow!("autotune: no candidates probed"))?;
+
+    // Worker heuristic: fill the host — workers × backend-threads ≈
+    // ncpu (measuring throughput workers directly would multiply the
+    // sweep cost by the worker axis).
+    let backend_threads = winner.backend.parse::<crate::config::BackendChoice>()
+        .map(|b| b.threads())
+        .unwrap_or(1);
+    let workers = (ncpu / backend_threads.max(1)).max(1);
+
+    Ok(ExecPlan {
+        version: PLAN_VERSION,
+        backend: winner.backend,
+        strategy: winner.strategy.as_str().to_string(),
+        lanes: winner.lanes.to_string(),
+        shards: cfg.apas,
+        workers,
+        fingerprint: machine_fingerprint(),
+        config_digest: config_digest(cfg),
+    })
+}
+
+/// Resolve the plan for `cfg`: cache hit wins, otherwise a fresh
+/// sweep when `tune` is set (stored for next time), otherwise the
+/// config's own knobs.
+pub fn resolve(cfg: &SimConfig, store: &PlanStore, tune: bool) -> Result<(ExecPlan, PlanSource)> {
+    if let Some(plan) = store.lookup(cfg) {
+        return Ok((plan, PlanSource::Cached));
+    }
+    if tune {
+        let plan = autotune(cfg)?;
+        store.store(&plan)?;
+        return Ok((plan, PlanSource::Tuned));
+    }
+    Ok((ExecPlan::default_for(cfg), PlanSource::Default))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{BackendChoice, FluctuationMode, Strategy};
+
+    fn tmp(name: &str) -> PathBuf {
+        std::env::temp_dir().join(format!("wct_autotune_{}_{name}", std::process::id()))
+    }
+
+    fn small_cfg() -> SimConfig {
+        let mut cfg = SimConfig::default();
+        cfg.fluctuation = FluctuationMode::None;
+        cfg.noise = false;
+        cfg.target_depos = 300;
+        cfg.pool_size = 1 << 14;
+        cfg
+    }
+
+    #[test]
+    fn plan_serialize_parse_reserialize_is_byte_stable() {
+        let plan = ExecPlan::default_for(&SimConfig::default());
+        let once = plan.serialize();
+        let twice = ExecPlan::parse(&once).unwrap().serialize();
+        assert_eq!(once, twice);
+        // keys come out alphabetically (BTreeMap), pinning the layout
+        let backend_at = once.find("\"backend\"").unwrap();
+        let version_at = once.find("\"version\"").unwrap();
+        assert!(backend_at < version_at);
+    }
+
+    #[test]
+    fn digest_ignores_execution_knobs_but_not_workload() {
+        let a = small_cfg();
+        let mut b = a.clone();
+        b.backend = BackendChoice::Threaded(4);
+        b.strategy = Strategy::Fused;
+        b.lanes = "x8".into();
+        b.workers = 7;
+        assert_eq!(config_digest(&a), config_digest(&b));
+        let mut c = a.clone();
+        c.target_depos = 301;
+        assert_ne!(config_digest(&a), config_digest(&c));
+    }
+
+    #[test]
+    fn apply_only_touches_the_digest_excluded_knobs() {
+        let mut cfg = small_cfg();
+        let before_digest = config_digest(&cfg);
+        let plan = ExecPlan {
+            version: PLAN_VERSION,
+            backend: "threads:3".into(),
+            strategy: "fused".into(),
+            lanes: "x4".into(),
+            shards: cfg.apas,
+            workers: 2,
+            fingerprint: machine_fingerprint(),
+            config_digest: before_digest.clone(),
+        };
+        plan.apply(&mut cfg).unwrap();
+        assert_eq!(cfg.backend, BackendChoice::Threaded(3));
+        assert_eq!(cfg.strategy, Strategy::Fused);
+        assert_eq!(cfg.lanes, "x4");
+        assert_eq!(cfg.workers, 2);
+        // the plan's own cache key survives its application
+        assert_eq!(config_digest(&cfg), before_digest);
+        assert!(plan.matches(&cfg));
+        // and a bad lane string is rejected, not stored
+        let mut bad = plan.clone();
+        bad.lanes = "x16".into();
+        assert!(bad.apply(&mut cfg).unwrap_err().contains("lanes"));
+    }
+
+    #[test]
+    fn store_roundtrip_hit_and_miss() {
+        let path = tmp("roundtrip.json");
+        let _ = std::fs::remove_file(&path);
+        let store = PlanStore::at(&path);
+        let cfg = small_cfg();
+        assert!(store.lookup(&cfg).is_none(), "fresh store must miss");
+        let plan = ExecPlan::default_for(&cfg);
+        store.store(&plan).unwrap();
+        assert_eq!(store.lookup(&cfg), Some(plan));
+        // a different workload misses without disturbing the entry
+        let mut other = cfg.clone();
+        other.target_depos = 999;
+        assert!(store.lookup(&other).is_none());
+        assert!(store.lookup(&cfg).is_some());
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn corrupt_manifest_warns_and_misses_instead_of_panicking() {
+        let path = tmp("corrupt.json");
+        std::fs::write(&path, "{not json at all").unwrap();
+        let store = PlanStore::at(&path);
+        assert!(store.lookup(&small_cfg()).is_none());
+        // storing over a corrupt manifest heals it
+        let plan = ExecPlan::default_for(&small_cfg());
+        store.store(&plan).unwrap();
+        assert_eq!(store.lookup(&small_cfg()), Some(plan));
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn stale_fingerprint_warns_and_misses() {
+        let path = tmp("stale.json");
+        let _ = std::fs::remove_file(&path);
+        let cfg = small_cfg();
+        let mut plan = ExecPlan::default_for(&cfg);
+        plan.fingerprint = "mars-os9-c1".into();
+        // plant it under the key lookup() will compute for cfg
+        let store = PlanStore::at(&path);
+        let mut plans = BTreeMap::new();
+        plans.insert(cache_key(&cfg), plan.to_json());
+        std::fs::write(
+            &path,
+            json::to_string_pretty(&Value::object(vec![("plans", Value::Object(plans))])),
+        )
+        .unwrap();
+        assert!(store.lookup(&cfg).is_none());
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn resolve_tunes_once_then_hits_the_cache() {
+        let path = tmp("resolve.json");
+        let _ = std::fs::remove_file(&path);
+        let store = PlanStore::at(&path);
+        let cfg = small_cfg();
+        // no cache, no tuning: the config's own knobs
+        let (plan, source) = resolve(&cfg, &store, false).unwrap();
+        assert_eq!(source, PlanSource::Default);
+        assert_eq!(plan, ExecPlan::default_for(&cfg));
+        // tune: measured winner lands in the store...
+        let (tuned, source) = resolve(&cfg, &store, true).unwrap();
+        assert_eq!(source, PlanSource::Tuned);
+        assert!(tuned.matches(&cfg));
+        // ...and the next resolve hits it byte-for-byte
+        let (cached, source) = resolve(&cfg, &store, false).unwrap();
+        assert_eq!(source, PlanSource::Cached);
+        assert_eq!(cached, tuned);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn pjrt_configs_are_never_probed() {
+        let mut cfg = small_cfg();
+        cfg.backend = BackendChoice::Pjrt;
+        let plan = autotune(&cfg).unwrap();
+        assert_eq!(plan.backend, "pjrt");
+        assert_eq!(plan, ExecPlan::default_for(&cfg));
+    }
+}

@@ -11,6 +11,7 @@
 //! analog, `execute` the kernel, `to_literal_sync`+`to_vec` the
 //! device→host read-back.
 
+pub mod autotune;
 mod manifest;
 
 pub use manifest::{ArtifactMeta, GridMeta, Manifest};

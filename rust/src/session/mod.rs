@@ -199,6 +199,11 @@ impl SessionBuilder {
         // read from the registry entry resolved above — no throwaway
         // backend construction.
         let spectral = (backend_info.spectral)(&cfg);
+        // Ditto for the backend's host SIMD lane width (the
+        // `BackendEntry::lanes` lift of `ExecBackend::lanes`): the
+        // spectral engine's recombination/multiply loops run lane-
+        // chunked at this width, bit-identical to scalar.
+        let lanes = (backend_info.lanes)(&cfg);
         let specs: Vec<StageSpec> = if !self.stages.is_empty() {
             self.stages
         } else if !cfg.topology.is_empty() {
@@ -244,6 +249,7 @@ impl SessionBuilder {
             registry,
             planner,
             spectral,
+            lanes,
             stages,
             responses: vec![None, None, None],
             produce_frames: self.produce_frames,
@@ -289,6 +295,9 @@ pub struct SimSession {
     /// Host dispatch policy for spectral passes (backend fact,
     /// resolved once at build).
     spectral: ExecPolicy,
+    /// Host SIMD lane width for spectral loops (backend fact,
+    /// resolved once at build; 1 = scalar).
+    lanes: usize,
     stages: Vec<Box<dyn SimStage>>,
     /// Response spectra per plane, built lazily per grid shape.
     responses: Vec<Option<ResponseSpectrum>>,
@@ -423,6 +432,7 @@ impl SimSession {
             registry,
             planner,
             spectral,
+            lanes,
             stages,
             responses,
             produce_frames,
@@ -438,6 +448,7 @@ impl SimSession {
                 registry: &*registry,
                 planner: &*planner,
                 spectral: *spectral,
+                lanes: *lanes,
                 responses: &mut *responses,
                 produce_frames: *produce_frames,
             };

@@ -124,6 +124,13 @@ pub struct BackendEntry {
     /// registry tests); spectral output is bit-identical for every
     /// policy, so this is purely a throughput fact.
     pub spectral: fn(&SimConfig) -> ExecPolicy,
+    /// Host SIMD lane width the backend's hot loops run at under a
+    /// given config — the declarative lift of [`ExecBackend::lanes`],
+    /// read at session-build time like [`spectral`](Self::spectral).
+    /// Must agree with what the factory's backends report (asserted by
+    /// the registry tests).  Lane paths are bit-identical to scalar,
+    /// so this is purely a throughput fact.
+    pub lanes: fn(&SimConfig) -> usize,
     /// The constructor.
     pub factory: BackendFactory,
 }
@@ -220,6 +227,7 @@ impl Registry {
                 needs_runtime: false,
                 deterministic: true,
                 spectral: |_| ExecPolicy::Serial,
+                lanes: |cfg| cfg.lane_width(),
                 factory: Box::new(|cfg, cx| {
                     Ok(Box::new(SerialBackend::new(
                         cfg.raster_params(),
@@ -237,6 +245,7 @@ impl Registry {
                 needs_runtime: false,
                 deterministic: false,
                 spectral: |cfg| ExecPolicy::Threads(cfg.backend.threads().max(1)),
+                lanes: |cfg| cfg.lane_width(),
                 factory: Box::new(|cfg, cx| {
                     Ok(Box::new(ThreadedBackend::new(
                         cfg.raster_params(),
@@ -258,6 +267,9 @@ impl Registry {
                 // device FT is its own endpoint; host-side spectral
                 // work stays on the calling thread
                 spectral: |_| ExecPolicy::Serial,
+                // hot loops run on the accelerator — host lanes don't
+                // apply
+                lanes: |_| 1,
                 factory: Box::new(|cfg, cx| {
                     let rt = cx
                         .runtime
@@ -709,6 +721,40 @@ mod tests {
             (reg.backend("threads").unwrap().spectral)(&cfg),
             reg.make_backend(&cfg, &cx).unwrap().spectral_policy()
         );
+    }
+
+    #[test]
+    fn lanes_entry_fact_matches_backend_trait_answer() {
+        // same contract as the spectral fact: the declarative
+        // BackendEntry::lanes lift must agree with a constructed
+        // backend's ExecBackend::lanes() answer, for every lane mode
+        let reg = Registry::with_defaults();
+        let mut cfg = SimConfig::default();
+        cfg.fluctuation = FluctuationMode::None;
+        let cx = BackendCx {
+            seed: cfg.seed,
+            pool: Arc::new(ThreadPool::new(1)),
+            rng_pool: RandomPool::shared(1, 1 << 10),
+            runtime: None,
+        };
+        for lanes in ["off", "auto", "x2", "x8"] {
+            cfg.lanes = lanes.into();
+            cfg.backend = BackendChoice::Serial;
+            assert_eq!(
+                (reg.backend("serial").unwrap().lanes)(&cfg),
+                reg.make_backend(&cfg, &cx).unwrap().lanes(),
+                "serial, lanes={lanes}"
+            );
+            cfg.backend = BackendChoice::Threaded(3);
+            assert_eq!(
+                (reg.backend("threads").unwrap().lanes)(&cfg),
+                reg.make_backend(&cfg, &cx).unwrap().lanes(),
+                "threads, lanes={lanes}"
+            );
+        }
+        // the device entry always reports 1, whatever the config says
+        cfg.lanes = "x8".into();
+        assert_eq!((reg.backend("pjrt").unwrap().lanes)(&cfg), 1);
     }
 
     #[test]

@@ -160,6 +160,14 @@ pub struct StageCx<'a> {
     ///
     /// [`ExecBackend::spectral_policy`]: crate::backend::ExecBackend::spectral_policy
     pub spectral: ExecPolicy,
+    /// Host SIMD lane width for spectral recombination/multiply loops,
+    /// resolved once at session build from the configured backend's
+    /// [`ExecBackend::lanes`] fact (1 = scalar).  Lane paths are
+    /// bit-identical to scalar, so like `spectral` this is purely a
+    /// throughput fact.
+    ///
+    /// [`ExecBackend::lanes`]: crate::backend::ExecBackend::lanes
+    pub lanes: usize,
     /// Lazily-built per-plane response spectra (shared across events).
     pub responses: &'a mut Vec<Option<ResponseSpectrum>>,
     /// Whether the run should produce digitized frames.
@@ -196,9 +204,10 @@ impl StageCx<'_> {
     }
 
     /// The spectral-engine exec for this session: the shared host pool
-    /// driven at the backend's [`spectral`](Self::spectral) policy.
+    /// driven at the backend's [`spectral`](Self::spectral) policy and
+    /// [`lanes`](Self::lanes) width.
     pub fn spectral_exec(&self) -> crate::fft::SpectralExec<'_> {
-        crate::fft::SpectralExec::new(self.pool, self.spectral)
+        crate::fft::SpectralExec::new(self.pool, self.spectral).with_lanes(self.lanes)
     }
 }
 

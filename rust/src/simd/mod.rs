@@ -1,0 +1,243 @@
+//! Portable SIMD lanes: the crate-wide lane model behind the
+//! vectorized hot loops (`raster::axis_masses`, the fused sweep's
+//! weight products, the spectral engine's recombination and filter
+//! multiplies).
+//!
+//! The design is `std::simd`-shaped but builds on stable Rust: a
+//! "vector" is a fixed-size `[f64; W]` chunk processed in elementwise
+//! lockstep — every lane performs exactly the scalar operation
+//! sequence, so the vector paths are **bit-identical** to their scalar
+//! oracles (the property `rust/tests/simd.rs` pins per scenario × lane
+//! width × thread count), while the fixed trip counts let the
+//! auto-vectorizer emit packed instructions.  Explicit intrinsics are
+//! the re-scoped ROADMAP tail, not this layer.
+//!
+//! Three pieces live here:
+//!
+//! * [`Lanes`] — the typed lane-width vocabulary ([`Scalar`], [`X2`],
+//!   [`X4`], [`X8`]).  Kernels are generic over `const W: usize`; the
+//!   trait is the registry of supported widths (and their labels) that
+//!   tests, the autotuner and the backend facts iterate.
+//! * [`LaneMode`] — the config-string form (`off` / `auto` / `x2` /
+//!   `x4` / `x8`) resolved to a runtime width.
+//! * [`dispatch_lanes!`](crate::simd) — the runtime width → const
+//!   width dispatcher kernels use to monomorphize their chunk loops.
+
+/// Widest lane chunk any [`Lanes`] impl advertises.
+pub const MAX_WIDTH: usize = 8;
+
+/// Width `auto` resolves to: `f64x4` — one AVX2 register on x86-64,
+/// a NEON register pair on aarch64, and a size the auto-vectorizer
+/// handles well everywhere else.  A constant (not CPU-probed) so a
+/// given config means the same thing on every host; the measured
+/// choice between widths belongs to the autotuner.
+pub const AUTO_WIDTH: usize = 4;
+
+/// A lane width the vectorized kernels can run at.  Implementations
+/// are zero-sized tags; kernels take `const W: usize` and the
+/// [`dispatch_lanes!`](crate::simd) macro maps a runtime width onto
+/// them, falling back to [`Scalar`] for any unsupported value.
+pub trait Lanes: Copy + Default + Send + Sync + 'static {
+    /// Number of f64 elements processed per lockstep chunk.
+    const WIDTH: usize;
+    /// Human label for reports and bench tables.
+    const LABEL: &'static str;
+}
+
+/// One element per chunk: the scalar fallback (always available).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Scalar;
+
+/// Two-wide f64 chunks (SSE2 / NEON register width).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct X2;
+
+/// Four-wide f64 chunks (AVX2 register width, the `auto` choice).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct X4;
+
+/// Eight-wide f64 chunks (AVX-512 register width).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct X8;
+
+impl Lanes for Scalar {
+    const WIDTH: usize = 1;
+    const LABEL: &'static str = "scalar";
+}
+impl Lanes for X2 {
+    const WIDTH: usize = 2;
+    const LABEL: &'static str = "f64x2";
+}
+impl Lanes for X4 {
+    const WIDTH: usize = 4;
+    const LABEL: &'static str = "f64x4";
+}
+impl Lanes for X8 {
+    const WIDTH: usize = 8;
+    const LABEL: &'static str = "f64x8";
+}
+
+/// Every width the dispatcher supports, ascending ([`Scalar`] first).
+pub const SUPPORTED_WIDTHS: [usize; 4] = [Scalar::WIDTH, X2::WIDTH, X4::WIDTH, X8::WIDTH];
+
+/// Label for a runtime width (unsupported widths read as scalar, which
+/// is also how the dispatcher treats them).
+pub fn label_for(width: usize) -> &'static str {
+    match width {
+        X2::WIDTH => X2::LABEL,
+        X4::WIDTH => X4::LABEL,
+        X8::WIDTH => X8::LABEL,
+        _ => Scalar::LABEL,
+    }
+}
+
+/// The configured lane mode: the `lanes` config key / `--lanes` CLI
+/// option parsed into a policy, resolved to a width with
+/// [`width`](LaneMode::width).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LaneMode {
+    /// Scalar loops only (width 1).
+    Off,
+    /// The portable default width ([`AUTO_WIDTH`]).
+    Auto,
+    /// A fixed supported width (2, 4 or 8).
+    Fixed(usize),
+}
+
+impl LaneMode {
+    /// Parse the config-string form: `off`, `auto`, `x2`, `x4`, `x8`.
+    pub fn parse(s: &str) -> Result<Self, String> {
+        match s {
+            "off" => Ok(Self::Off),
+            "auto" => Ok(Self::Auto),
+            "x2" => Ok(Self::Fixed(X2::WIDTH)),
+            "x4" => Ok(Self::Fixed(X4::WIDTH)),
+            "x8" => Ok(Self::Fixed(X8::WIDTH)),
+            other => Err(format!(
+                "unknown lane mode '{other}' (expected off | auto | x2 | x4 | x8)"
+            )),
+        }
+    }
+
+    /// The runtime lane width this mode resolves to.
+    pub fn width(self) -> usize {
+        match self {
+            Self::Off => Scalar::WIDTH,
+            Self::Auto => AUTO_WIDTH,
+            Self::Fixed(w) => w,
+        }
+    }
+
+    /// Canonical config-string form (what [`parse`](Self::parse) eats).
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Self::Off => "off",
+            Self::Auto => "auto",
+            Self::Fixed(2) => "x2",
+            Self::Fixed(8) => "x8",
+            Self::Fixed(_) => "x4",
+        }
+    }
+}
+
+/// Monomorphize a lane-generic expression at a runtime width: binds the
+/// const `$W` to 2, 4 or 8 when `$width` matches a supported vector
+/// width, and to 1 (the scalar fallback) otherwise.
+///
+/// ```ignore
+/// let w = params.lane_width;
+/// dispatch_lanes!(w, W => axis_masses_lanes::<W>(center, sigma, bins, bin0, out));
+/// ```
+macro_rules! dispatch_lanes {
+    ($width:expr, $W:ident => $body:expr) => {
+        match $width {
+            8 => {
+                const $W: usize = 8;
+                $body
+            }
+            4 => {
+                const $W: usize = 4;
+                $body
+            }
+            2 => {
+                const $W: usize = 2;
+                $body
+            }
+            _ => {
+                const $W: usize = 1;
+                $body
+            }
+        }
+    };
+}
+pub(crate) use dispatch_lanes;
+
+/// Elementwise `out[j] = k * xs[j]` over one lane chunk — the fused
+/// sweep's weight product (`k = wp·norm`, `xs = wt` slice).  One
+/// multiply per element, identical to the scalar loop's op, so the
+/// chunked path is bit-identical.
+#[inline(always)]
+pub fn scale_chunk<const W: usize>(k: f64, xs: &[f64]) -> [f64; W] {
+    let mut out = [0.0f64; W];
+    for j in 0..W {
+        out[j] = k * xs[j];
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mode_strings_roundtrip() {
+        for s in ["off", "auto", "x2", "x4", "x8"] {
+            let m = LaneMode::parse(s).unwrap();
+            assert_eq!(m.as_str(), s);
+            assert_eq!(LaneMode::parse(m.as_str()).unwrap(), m);
+        }
+        assert!(LaneMode::parse("x16").is_err());
+        assert!(LaneMode::parse("").is_err());
+        assert!(LaneMode::parse("Auto").is_err());
+    }
+
+    #[test]
+    fn widths_resolve() {
+        assert_eq!(LaneMode::Off.width(), 1);
+        assert_eq!(LaneMode::Auto.width(), AUTO_WIDTH);
+        assert_eq!(LaneMode::parse("x2").unwrap().width(), 2);
+        assert_eq!(LaneMode::parse("x8").unwrap().width(), 8);
+        assert!(SUPPORTED_WIDTHS.contains(&AUTO_WIDTH));
+        assert!(SUPPORTED_WIDTHS.iter().all(|&w| w <= MAX_WIDTH));
+    }
+
+    #[test]
+    fn labels_name_the_widths() {
+        assert_eq!(label_for(1), "scalar");
+        assert_eq!(label_for(4), "f64x4");
+        assert_eq!(label_for(3), "scalar"); // unsupported → scalar, like the dispatcher
+    }
+
+    #[test]
+    fn dispatch_binds_the_const_width() {
+        fn probe<const W: usize>() -> usize {
+            W
+        }
+        for (input, expect) in [(1usize, 1usize), (2, 2), (4, 4), (8, 8), (0, 1), (3, 1), (16, 1)] {
+            let got = dispatch_lanes!(input, W => probe::<W>());
+            assert_eq!(got, expect, "width {input}");
+        }
+    }
+
+    #[test]
+    fn scale_chunk_matches_scalar_multiplies() {
+        let xs = [0.25, -1.5, 3.0e-7, 42.0, 0.0, -0.0, 1.0, 2.0];
+        let k = 0.12345;
+        let out: [f64; 8] = scale_chunk(k, &xs);
+        for j in 0..8 {
+            assert_eq!(out[j].to_bits(), (k * xs[j]).to_bits());
+        }
+        let narrow: [f64; 2] = scale_chunk(k, &xs[..2]);
+        assert_eq!(narrow[1].to_bits(), (k * xs[1]).to_bits());
+    }
+}

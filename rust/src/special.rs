@@ -6,50 +6,54 @@
 //! helper is the primitive the rasterizer's "2D sampling" step is built
 //! from.
 
+// Chebyshev coefficients (Numerical Recipes 3rd ed., erfc_cheb).
+// Shared between the scalar path and the lockstep lane path
+// (`erf_block`) — both must run the identical recurrence for the
+// vector axis tables to stay bit-identical to the scalar oracle.
+const ERFC_COF: [f64; 28] = [
+    -1.3026537197817094,
+    6.4196979235649026e-1,
+    1.9476473204185836e-2,
+    -9.561514786808631e-3,
+    -9.46595344482036e-4,
+    3.66839497852761e-4,
+    4.2523324806907e-5,
+    -2.0278578112534e-5,
+    -1.624290004647e-6,
+    1.303655835580e-6,
+    1.5626441722e-8,
+    -8.5238095915e-8,
+    6.529054439e-9,
+    5.059343495e-9,
+    -9.91364156e-10,
+    -2.27365122e-10,
+    9.6467911e-11,
+    2.394038e-12,
+    -6.886027e-12,
+    8.94487e-13,
+    3.13092e-13,
+    -1.12708e-13,
+    3.81e-16,
+    7.106e-15,
+    -1.523e-15,
+    -9.4e-17,
+    1.21e-16,
+    -2.8e-17,
+];
+
 /// Complementary error function, |fractional error| < 1.2e-7.
 pub fn erfc(x: f64) -> f64 {
     let z = x.abs();
     let t = 2.0 / (2.0 + z);
     let ty = 4.0 * t - 2.0;
-    // Chebyshev coefficients (Numerical Recipes 3rd ed., erfc_cheb).
-    const COF: [f64; 28] = [
-        -1.3026537197817094,
-        6.4196979235649026e-1,
-        1.9476473204185836e-2,
-        -9.561514786808631e-3,
-        -9.46595344482036e-4,
-        3.66839497852761e-4,
-        4.2523324806907e-5,
-        -2.0278578112534e-5,
-        -1.624290004647e-6,
-        1.303655835580e-6,
-        1.5626441722e-8,
-        -8.5238095915e-8,
-        6.529054439e-9,
-        5.059343495e-9,
-        -9.91364156e-10,
-        -2.27365122e-10,
-        9.6467911e-11,
-        2.394038e-12,
-        -6.886027e-12,
-        8.94487e-13,
-        3.13092e-13,
-        -1.12708e-13,
-        3.81e-16,
-        7.106e-15,
-        -1.523e-15,
-        -9.4e-17,
-        1.21e-16,
-        -2.8e-17,
-    ];
     let mut d = 0.0;
     let mut dd = 0.0;
-    for &c in COF.iter().rev().take(COF.len() - 1) {
+    for &c in ERFC_COF.iter().rev().take(ERFC_COF.len() - 1) {
         let tmp = d;
         d = ty * d - dd + c;
         dd = tmp;
     }
-    let ans = t * (-z * z + 0.5 * (COF[0] + ty * d) - dd).exp();
+    let ans = t * (-z * z + 0.5 * (ERFC_COF[0] + ty * d) - dd).exp();
     if x >= 0.0 {
         ans
     } else {
@@ -60,6 +64,49 @@ pub fn erfc(x: f64) -> f64 {
 /// Error function.
 pub fn erf(x: f64) -> f64 {
     1.0 - erfc(x)
+}
+
+/// Lockstep lane evaluation of [`erf`] over one `[f64; W]` chunk — the
+/// vector form behind the SIMD axis-table fill (`crate::raster`,
+/// `crate::kernel::soa`).
+///
+/// Every lane executes exactly the scalar [`erfc`] operation sequence
+/// (abs, the `t`/`ty` transforms, the Chebyshev–Clenshaw recurrence
+/// over [`ERFC_COF`] in the same order, the final `exp` and sign
+/// select), just interleaved element-major so the fixed-width inner
+/// loops auto-vectorize.  IEEE f64 arithmetic is deterministic per
+/// operation and nothing here reassociates, so each output is
+/// **bit-identical** to `erf(xs[j])` — including the ±0.0, ±inf and
+/// NaN edge cases (asserted below and in `rust/tests/simd.rs`).
+#[inline]
+pub fn erf_block<const W: usize>(xs: [f64; W]) -> [f64; W] {
+    let mut z = [0.0f64; W];
+    let mut t = [0.0f64; W];
+    let mut ty = [0.0f64; W];
+    for j in 0..W {
+        z[j] = xs[j].abs();
+    }
+    for j in 0..W {
+        t[j] = 2.0 / (2.0 + z[j]);
+    }
+    for j in 0..W {
+        ty[j] = 4.0 * t[j] - 2.0;
+    }
+    let mut d = [0.0f64; W];
+    let mut dd = [0.0f64; W];
+    for &c in ERFC_COF.iter().rev().take(ERFC_COF.len() - 1) {
+        for j in 0..W {
+            let tmp = d[j];
+            d[j] = ty[j] * d[j] - dd[j] + c;
+            dd[j] = tmp;
+        }
+    }
+    let mut out = [0.0f64; W];
+    for j in 0..W {
+        let ans = t[j] * (-z[j] * z[j] + 0.5 * (ERFC_COF[0] + ty[j] * d[j]) - dd[j]).exp();
+        out[j] = 1.0 - if xs[j] >= 0.0 { ans } else { 2.0 - ans };
+    }
+    out
 }
 
 /// Standard normal CDF Φ(x).
@@ -120,6 +167,106 @@ mod tests {
     fn erfc_tails() {
         assert!(erfc(6.0) < 1e-16);
         assert!((erfc(-6.0) - 2.0).abs() < 1e-15);
+    }
+
+    #[test]
+    fn erf_high_precision_anchors() {
+        // 17-digit reference values (mpmath); the NR Chebyshev fit is
+        // documented at |fractional error| < 1.2e-7, so the assert
+        // pins the oracle to its full stated envelope against anchors
+        // that are themselves exact to the last f64 digit.
+        let cases = [
+            (0.1, 0.112_462_916_018_284_89),
+            (0.25, 0.276_326_390_168_236_93),
+            (0.5, 0.520_499_877_813_046_5),
+            (1.0, 0.842_700_792_949_714_9),
+            (1.5, 0.966_105_146_475_310_7),
+            (2.0, 0.995_322_265_018_952_7),
+            (2.5, 0.999_593_047_982_555_3),
+            (3.0, 0.999_977_909_503_001_4),
+            (4.0, 0.999_999_984_582_742_1),
+        ];
+        for (x, want) in cases {
+            let got = erf(x);
+            assert!(
+                (got - want).abs() < 1.2e-7 * want.abs().max(1e-30),
+                "erf({x}) = {got:.17}, want {want:.17}"
+            );
+            // the complement must honor the same envelope
+            let gotc = erfc(x);
+            let wantc = 1.0 - want;
+            assert!(
+                (gotc - wantc).abs() < 1.2e-7 * wantc.abs() + 1e-12,
+                "erfc({x}) = {gotc:e}, want {wantc:e}"
+            );
+        }
+    }
+
+    #[test]
+    fn erf_signed_zero() {
+        // both zeros land on the same (tiny) value: the sign select
+        // treats -0.0 >= 0.0 as true, exactly like +0.0
+        assert_eq!(erf(0.0).to_bits(), erf(-0.0).to_bits());
+        assert!(erf(0.0).abs() < 1.2e-7);
+        assert_eq!(erfc(0.0).to_bits(), erfc(-0.0).to_bits());
+        assert!((erfc(0.0) - 1.0).abs() < 1.2e-7);
+    }
+
+    #[test]
+    fn erf_infinities_saturate_exactly() {
+        // exp(-inf) = 0 makes the tails exact, not merely close
+        assert_eq!(erf(f64::INFINITY), 1.0);
+        assert_eq!(erf(f64::NEG_INFINITY), -1.0);
+        assert_eq!(erfc(f64::INFINITY), 0.0);
+        assert_eq!(erfc(f64::NEG_INFINITY), 2.0);
+    }
+
+    #[test]
+    fn erf_nan_propagates() {
+        assert!(erf(f64::NAN).is_nan());
+        assert!(erfc(f64::NAN).is_nan());
+    }
+
+    #[test]
+    fn erf_saturates_beyond_six_sigma() {
+        // |x| > 6: erfc underflows past f64's 1-ulp of 1.0, so erf
+        // rounds to exactly ±1 — the rasterizer relies on this for
+        // far-tail bins contributing exactly zero mass
+        for x in [6.0, 6.5, 8.0, 12.0, 26.5] {
+            assert_eq!(erf(x), 1.0, "erf({x})");
+            assert_eq!(erf(-x), -1.0, "erf(-{x})");
+            assert!(erfc(x) >= 0.0 && erfc(x) < 1e-16, "erfc({x}) = {:e}", erfc(x));
+            assert!((erfc(-x) - 2.0).abs() < 1e-15, "erfc(-{x})");
+        }
+    }
+
+    #[test]
+    fn erf_block_bitwise_matches_scalar() {
+        // the lane path is the axis-table fill's oracle contract:
+        // every supported width, bit-for-bit, including edge values
+        let samples = [
+            0.0, -0.0, 0.3, -0.7, 1.0, -1.5, 2.25, -3.5, 6.5, -8.0,
+            1e-12, -1e-12, f64::INFINITY, f64::NEG_INFINITY, f64::NAN, 0.5,
+        ];
+        fn check<const W: usize>(samples: &[f64]) {
+            for chunk in samples.chunks_exact(W) {
+                let mut xs = [0.0f64; W];
+                xs.copy_from_slice(chunk);
+                let got = erf_block(xs);
+                for j in 0..W {
+                    assert_eq!(
+                        got[j].to_bits(),
+                        erf(xs[j]).to_bits(),
+                        "erf_block::<{W}>({}) diverged from scalar",
+                        xs[j]
+                    );
+                }
+            }
+        }
+        check::<1>(&samples);
+        check::<2>(&samples);
+        check::<4>(&samples);
+        check::<8>(&samples);
     }
 
     #[test]

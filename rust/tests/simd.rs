@@ -1,0 +1,387 @@
+//! Differential witnesses for the SIMD lane layer and the autotuned
+//! execution planner (PR 9 acceptance criteria):
+//!
+//! 1. **lane/scalar frame parity** — seeded scenario and randomized
+//!    depo sets run through full sessions at every supported lane
+//!    width × backend/thread count × strategy must produce bitwise
+//!    identical frames (digest equality); a mismatch is shrunk to the
+//!    smallest failing depo prefix before the panic reports it;
+//! 2. **spectral lane parity** — the lane-chunked half-spectrum
+//!    recombination stays within 1e-9 of the `dft_naive` oracle and
+//!    bitwise equal to the scalar engine;
+//! 3. **zero-allocation warm lane path** — a warm lane-vectorized FT
+//!    apply performs no heap allocations (counting allocator);
+//! 4. **exec-plan determinism** — the golden plan file pins the
+//!    byte-stable serialize→parse→re-serialize cycle, and applying a
+//!    plan never changes frame digests vs a default-plan run.
+
+use wirecell::config::{BackendChoice, FluctuationMode, SimConfig, Strategy};
+use wirecell::depo::Depo;
+use wirecell::fft::{dft_naive, Complex, Direction, RealPlan, RealScratch, SpectralExec, SpectralScratch};
+use wirecell::geometry::{ApaLayout, PlaneId};
+use wirecell::response::{PlaneResponse, ResponseSpectrum};
+use wirecell::rng::{Pcg32, UniformRng};
+use wirecell::runtime::autotune::{resolve, ExecPlan, PlanSource, PlanStore, PLAN_VERSION};
+use wirecell::scenario::Scenario;
+use wirecell::session::{Registry, SimSession};
+use wirecell::simd::SUPPORTED_WIDTHS;
+use wirecell::throughput::frame_digest;
+use wirecell::units::{CM, US};
+
+// ---------------------------------------------------------------------
+// Counting allocator witness (shared single source with the benches).
+// ---------------------------------------------------------------------
+
+#[path = "../../benches/common/counting_alloc.rs"]
+mod counting_alloc;
+use counting_alloc::{allocs_on_this_thread, CountingAlloc};
+
+#[global_allocator]
+static COUNTING_ALLOC: CountingAlloc = CountingAlloc;
+
+// ---------------------------------------------------------------------
+// 1. Lane/scalar frame parity with failing-prefix shrinking
+// ---------------------------------------------------------------------
+
+/// The five generated workload scenarios (the replay pair needs
+/// recorded files and `full-detector` is the preset-scaled variant of
+/// the same generators).
+const SCENARIOS: &[&str] = &[
+    "beam-track",
+    "cosmic-shower",
+    "hotspot",
+    "noise-only",
+    "pileup-mix",
+];
+
+fn base_cfg() -> SimConfig {
+    let mut cfg = SimConfig::default();
+    cfg.backend = BackendChoice::Serial;
+    cfg.strategy = Strategy::Fused;
+    cfg.lanes = "off".into();
+    cfg.fluctuation = FluctuationMode::Pool;
+    cfg.pool_size = 1 << 16;
+    cfg.noise = true; // exercise the lane-routed spectral/noise paths
+    cfg.target_depos = 300;
+    cfg
+}
+
+fn scenario_depos(cfg: &SimConfig) -> Vec<Depo> {
+    let registry = Registry::with_defaults();
+    let scenario = registry.make_scenario(cfg).unwrap();
+    let det = cfg.detector().unwrap();
+    let layout = ApaLayout::for_detector(&det, cfg.apas);
+    scenario.generate(&layout, cfg.seed)
+}
+
+/// Frame digest of one session run of `cfg` over `depos`.
+fn digest(cfg: &SimConfig, depos: &[Depo]) -> u64 {
+    let mut session = SimSession::new(cfg.clone()).unwrap();
+    let report = session.run(depos).unwrap();
+    frame_digest(&report.frame.expect("run produced no frame"))
+}
+
+/// Assert `cfg` produces the reference digest `want` on `depos`; on
+/// mismatch, binary-search the smallest failing prefix (re-deriving
+/// the scalar reference per prefix) and panic with a reproducible
+/// description.
+fn assert_parity(label: &str, cfg: &SimConfig, reference: &SimConfig, depos: &[Depo], want: u64) {
+    if digest(cfg, depos) == want {
+        return;
+    }
+    let fails = |n: usize| digest(cfg, &depos[..n]) != digest(reference, &depos[..n]);
+    let (mut lo, mut hi) = (1usize, depos.len());
+    while lo < hi {
+        let mid = lo + (hi - lo) / 2;
+        if fails(mid) {
+            hi = mid;
+        } else {
+            lo = mid + 1;
+        }
+    }
+    panic!(
+        "{label}: lanes='{}' backend={} strategy={:?} diverged from scalar \
+         (lanes='{}' backend={}); smallest failing prefix: {lo} of {} depos, \
+         last depo = {:?}",
+        cfg.lanes,
+        cfg.backend.label(),
+        cfg.strategy,
+        reference.lanes,
+        reference.backend.label(),
+        depos.len(),
+        depos.get(lo - 1)
+    );
+}
+
+#[test]
+fn lane_frames_bitwise_match_scalar_across_scenarios_widths_threads() {
+    for scenario in SCENARIOS {
+        let mut reference = base_cfg();
+        reference.scenario = scenario.to_string();
+        let depos = scenario_depos(&reference);
+        let want = digest(&reference, &depos);
+        // serial fused at every lane mode vs the scalar reference
+        for lanes in ["x2", "x4", "x8", "auto"] {
+            let mut cfg = reference.clone();
+            cfg.lanes = lanes.into();
+            assert_parity(scenario, &cfg, &reference, &depos, want);
+        }
+        // serial batched rides the same lane-routed axis fills (and the
+        // fused contract makes it digest-equal to the fused reference)
+        for lanes in ["off", "x2", "x8"] {
+            let mut cfg = reference.clone();
+            cfg.strategy = Strategy::Batched;
+            cfg.lanes = lanes.into();
+            assert_parity(scenario, &cfg, &reference, &depos, want);
+        }
+        // threaded fused (the worker-invariant strategy): lanes on/off
+        // across thread counts, all against the serial scalar digest
+        for threads in [2usize, 3] {
+            for lanes in ["off", "x4", "x8"] {
+                let mut cfg = reference.clone();
+                cfg.backend = BackendChoice::Threaded(threads);
+                cfg.lanes = lanes.into();
+                assert_parity(scenario, &cfg, &reference, &depos, want);
+            }
+        }
+    }
+}
+
+#[test]
+fn lane_frames_match_scalar_with_inline_binomial_rng() {
+    // the inline exact-binomial path draws from a sequential generator:
+    // the lane sweep must preserve the exact draw order
+    let mut reference = base_cfg();
+    reference.fluctuation = FluctuationMode::Inline;
+    reference.strategy = Strategy::Batched;
+    let depos = scenario_depos(&reference);
+    let want = digest(&reference, &depos);
+    for strategy in [Strategy::Batched, Strategy::Fused] {
+        for lanes in ["off", "x2", "x4", "x8"] {
+            let mut cfg = reference.clone();
+            cfg.strategy = strategy;
+            cfg.lanes = lanes.into();
+            assert_parity("cosmic-shower/inline", &cfg, &reference, &depos, want);
+        }
+    }
+}
+
+/// Seeded randomized depo sets, including off-grid and clipped
+/// outliers — the shrinking harness makes a failure here actionable.
+fn random_depos(seed: u64, n: usize) -> Vec<Depo> {
+    let mut rng = Pcg32::seeded(seed);
+    let mut depos = Vec::with_capacity(n);
+    for i in 0..n {
+        let frac = |r: &mut Pcg32| r.uniform();
+        let x = (20.0 + 60.0 * frac(&mut rng)) * CM;
+        let y = (-25.0 + 50.0 * frac(&mut rng)) * CM;
+        let z = (-25.0 + 50.0 * frac(&mut rng)) * CM;
+        let t = 5.0 * frac(&mut rng) * US;
+        let q = 500.0 + 9_500.0 * frac(&mut rng);
+        let mut d = Depo::point(t, [x, y, z], q, i as u64);
+        // every 17th depo lands off-grid (clip/skip paths must agree)
+        if i % 17 == 0 {
+            d.pos[2] = -3.0e3; // far outside the z wire range [mm]
+        }
+        depos.push(d);
+    }
+    depos
+}
+
+#[test]
+fn lane_frames_bitwise_match_scalar_on_randomized_depo_sets() {
+    let reference = base_cfg();
+    for seed in [11u64, 4242] {
+        let depos = random_depos(seed, 250);
+        let want = digest(&reference, &depos);
+        for lanes in ["x2", "x4", "x8"] {
+            let mut cfg = reference.clone();
+            cfg.lanes = lanes.into();
+            assert_parity(&format!("random/seed={seed}"), &cfg, &reference, &depos, want);
+            let mut threaded = cfg.clone();
+            threaded.backend = BackendChoice::Threaded(3);
+            assert_parity(&format!("random/seed={seed}"), &threaded, &reference, &depos, want);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// 2. Spectral lane parity: 1e-9 vs the naive oracle, bitwise vs scalar
+// ---------------------------------------------------------------------
+
+fn signal(n: usize) -> Vec<f64> {
+    (0..n)
+        .map(|i| (i as f64 * 0.173).sin() + 0.4 * (i as f64 * 0.041).cos())
+        .collect()
+}
+
+#[test]
+fn lane_half_spectrum_stays_within_1e9_of_dft_naive() {
+    for n in [8usize, 64, 250, 512, 30, 97] {
+        let x = signal(n);
+        let full: Vec<Complex> = x.iter().map(|&v| Complex::real(v)).collect();
+        let oracle = dft_naive(&full, Direction::Forward);
+        let scale: f64 = x.iter().map(|v| v.abs()).sum::<f64>().max(1.0);
+        let plan = RealPlan::new(n);
+        for w in SUPPORTED_WIDTHS {
+            let mut half = vec![Complex::ZERO; plan.spectrum_len()];
+            plan.forward_into_lanes(&x, &mut half, &mut RealScratch::new(), w);
+            for (k, h) in half.iter().enumerate() {
+                assert!(
+                    (h.re - oracle[k].re).abs() < 1e-9 * scale
+                        && (h.im - oracle[k].im).abs() < 1e-9 * scale,
+                    "n={n} width={w} bin {k}: {h:?} vs {:?}",
+                    oracle[k]
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn lane_response_apply_is_bitwise_scalar() {
+    let (nw, nt) = (48usize, 512usize);
+    let pr = PlaneResponse::standard(PlaneId::W, 0.5 * US);
+    let spec = ResponseSpectrum::assemble(&pr, nw, nt);
+    let mut rng = Pcg32::seeded(23);
+    let mut grid = wirecell::scatter::PlaneGrid {
+        nwires: nw,
+        nticks: nt,
+        data: vec![0.0; nw * nt],
+    };
+    for _ in 0..300 {
+        let w = rng.below(nw as u32) as usize;
+        let t = rng.below(nt as u32) as usize;
+        grid.data[w * nt + t] += 500.0 + rng.uniform() as f32 * 4000.0;
+    }
+    let mut scalar = Vec::new();
+    spec.apply_into(&grid, &mut scalar, &mut SpectralScratch::new(), SpectralExec::serial());
+    for w in SUPPORTED_WIDTHS {
+        let mut out = Vec::new();
+        spec.apply_into(
+            &grid,
+            &mut out,
+            &mut SpectralScratch::new(),
+            SpectralExec::serial().with_lanes(w),
+        );
+        for (i, (a, b)) in out.iter().zip(&scalar).enumerate() {
+            assert_eq!(a.to_bits(), b.to_bits(), "width={w} bin {i}");
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// 3. Zero-allocation warm lane path
+// ---------------------------------------------------------------------
+
+#[test]
+fn warm_lane_ft_apply_is_allocation_free() {
+    // Bluestein-everywhere shape: the worst case for hidden scratch
+    for (nw, nt) in [(64usize, 512usize), (60, 250)] {
+        let pr = PlaneResponse::standard(PlaneId::W, 0.5 * US);
+        let spec = ResponseSpectrum::assemble(&pr, nw, nt);
+        let mut grid = wirecell::scatter::PlaneGrid {
+            nwires: nw,
+            nticks: nt,
+            data: vec![0.0; nw * nt],
+        };
+        grid.data[nt + 3] = 4321.0;
+        let exec = SpectralExec::serial().with_lanes(8);
+        let mut out = Vec::new();
+        let mut scratch = SpectralScratch::new();
+        spec.apply_into(&grid, &mut out, &mut scratch, exec); // warm-up
+        let before = allocs_on_this_thread();
+        spec.apply_into(&grid, &mut out, &mut scratch, exec);
+        let grew = allocs_on_this_thread() - before;
+        assert_eq!(grew, 0, "({nw}x{nt}) warm lane apply allocated {grew} times");
+    }
+}
+
+// ---------------------------------------------------------------------
+// 4. Exec-plan determinism
+// ---------------------------------------------------------------------
+
+/// The fixed plan the golden file pins (field values chosen to cover
+/// every key; nothing machine-dependent).
+fn golden_plan() -> ExecPlan {
+    ExecPlan {
+        version: PLAN_VERSION,
+        backend: "threads:8".into(),
+        strategy: "fused".into(),
+        lanes: "auto".into(),
+        shards: 1,
+        workers: 2,
+        fingerprint: "x86_64-linux-c16".into(),
+        config_digest: "00f1e2d3c4b5a697".into(),
+    }
+}
+
+#[test]
+fn exec_plan_serialization_matches_the_golden_file_byte_for_byte() {
+    let golden = include_str!("data/exec_plan_golden.json");
+    let plan = golden_plan();
+    // serialize == golden (modulo the file's trailing newline), and
+    // serialize → parse → re-serialize is a fixed point
+    assert_eq!(plan.serialize(), golden.trim_end(), "plan layout drifted");
+    let reparsed = ExecPlan::parse(golden).unwrap();
+    assert_eq!(reparsed, plan);
+    assert_eq!(reparsed.serialize(), plan.serialize());
+}
+
+#[test]
+fn plan_store_round_trips_through_a_manifest_file() {
+    let path = std::env::temp_dir().join(format!("wct_simd_plan_{}.json", std::process::id()));
+    let _ = std::fs::remove_file(&path);
+    let store = PlanStore::at(&path);
+    let cfg = base_cfg();
+    // miss → default source
+    let (_, source) = resolve(&cfg, &store, false).unwrap();
+    assert_eq!(source, PlanSource::Default);
+    // plant the config's own knobs as a plan; next resolve must hit
+    let plan = ExecPlan::default_for(&cfg);
+    store.store(&plan).unwrap();
+    let (cached, source) = resolve(&cfg, &store, false).unwrap();
+    assert_eq!(source, PlanSource::Cached);
+    assert_eq!(cached, plan);
+    // corrupting the manifest degrades to a miss, not a panic
+    std::fs::write(&path, "{\"plans\": 42").unwrap();
+    let (_, source) = resolve(&cfg, &store, false).unwrap();
+    assert_eq!(source, PlanSource::Default);
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn applied_plans_never_change_frame_digests() {
+    // the acceptance bar: a cached plan only moves throughput knobs,
+    // so a plan-applied run is bitwise the default run
+    let mut reference = base_cfg();
+    reference.backend = BackendChoice::Serial;
+    reference.strategy = Strategy::Batched;
+    reference.lanes = "off".into();
+    let depos = scenario_depos(&reference);
+    let want = digest(&reference, &depos);
+    let plans = [
+        ("serial", "fused", "x4", 1usize),
+        ("serial", "batched", "auto", 3),
+        ("threads:3", "fused", "x8", 1),
+    ];
+    for (backend, strategy, lanes, workers) in plans {
+        let plan = ExecPlan {
+            version: PLAN_VERSION,
+            backend: backend.into(),
+            strategy: strategy.into(),
+            lanes: lanes.into(),
+            shards: reference.apas,
+            workers,
+            fingerprint: "any".into(),
+            config_digest: "any".into(),
+        };
+        let mut cfg = reference.clone();
+        plan.apply(&mut cfg).unwrap();
+        assert_eq!(
+            digest(&cfg, &depos),
+            want,
+            "plan ({backend}, {strategy}, {lanes}) changed the frame digest"
+        );
+    }
+}
