@@ -220,6 +220,10 @@ fn main() -> anyhow::Result<()> {
     t.row(&["campaign wall [s]".into(), format!("{wall:.3}")]);
     common::emit(&t);
     assert_eq!(load.served as usize, events, "errors: {:?}", load.errors);
+    // fault-layer inertness: no plan armed, so the bench run must see
+    // zero retries — any retry here means the hardening path leaked
+    // into the fault-free fast path
+    assert_eq!(load.retries, 0, "fault-free bench run retried");
 
     println!(
         "serve path: {:.3} ms encode, {:.3} ms decode, {:.2} events/s loopback (0 allocs warm)",

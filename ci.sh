@@ -9,6 +9,7 @@
 #        SKIP_CLIPPY=1 ./ci.sh # e.g. on toolchains without clippy
 #        SKIP_DOC=1 ./ci.sh    # e.g. on toolchains without rustdoc
 #        SKIP_SERVE=1 ./ci.sh  # e.g. on sandboxes without loopback TCP
+#        SKIP_CHAOS=1 ./ci.sh  # skip the fault-injection serve smoke
 #        SKIP_SIMD=1 ./ci.sh   # e.g. on hosts too noisy for the lane gate
 set -euo pipefail
 cd "$(dirname "$0")"
@@ -64,6 +65,57 @@ else
     echo "==> skipping serve smoke (SKIP_SERVE set)"
 fi
 
+# Chaos smoke gate: the same loopback path, but with the checked-in
+# fault plan armed (tools/fault_smoke.json: one request delay, one
+# dropped connection, one worker panic) and a retrying client.  The
+# campaign must still finish cleanly with every event served exactly
+# once (the plan deliberately avoids conn.reply faults, so
+# wirecell_serve_events_total is exact) and the panic must show up as
+# contained in the metrics rather than as a dead daemon.
+if [ -z "${SKIP_SERVE:-}" ] && [ -z "${SKIP_CHAOS:-}" ]; then
+    echo "==> chaos smoke (serve --fault-plan tools/fault_smoke.json)"
+    BIN=target/release/wire-cell
+    PORT_FILE=$(mktemp)
+    CHAOS_OUT=$(mktemp)
+    "$BIN" serve --port 0 --port-file "$PORT_FILE" \
+        --fault-plan tools/fault_smoke.json \
+        --fluctuation none --target_depos 500 &
+    SERVE_PID=$!
+    for _ in $(seq 1 100); do
+        [ -s "$PORT_FILE" ] && break
+        kill -0 "$SERVE_PID" 2>/dev/null || { echo "daemon exited before binding"; exit 1; }
+        sleep 0.1
+    done
+    if ! [ -s "$PORT_FILE" ]; then
+        kill "$SERVE_PID" 2>/dev/null || true
+        echo "daemon never published its port to $PORT_FILE"
+        exit 1
+    fi
+    if ! "$BIN" serve-load --port-file "$PORT_FILE" --events 4 --connections 2 \
+        --max-retries 16 --metrics --shutdown >"$CHAOS_OUT" 2>&1; then
+        cat "$CHAOS_OUT"
+        kill "$SERVE_PID" 2>/dev/null || true
+        echo "retrying serve-load did not survive the fault plan"
+        exit 1
+    fi
+    if ! grep -q '^wirecell_serve_events_total 4$' "$CHAOS_OUT"; then
+        cat "$CHAOS_OUT"
+        kill "$SERVE_PID" 2>/dev/null || true
+        echo "chaos smoke: expected exactly 4 served events under faults"
+        exit 1
+    fi
+    if ! grep -q '^wirecell_serve_worker_panics_total 1$' "$CHAOS_OUT"; then
+        cat "$CHAOS_OUT"
+        kill "$SERVE_PID" 2>/dev/null || true
+        echo "chaos smoke: the injected worker panic was not contained/counted"
+        exit 1
+    fi
+    wait "$SERVE_PID"
+    rm -f "$PORT_FILE" "$CHAOS_OUT"
+else
+    echo "==> skipping chaos smoke (SKIP_SERVE or SKIP_CHAOS set)"
+fi
+
 # Lint gate: warnings are errors.  The -A list holds the project-wide
 # style dispensations (documented in rust/src/lib.rs); it rides the
 # command line so it also covers tests/benches/examples, which are
@@ -82,9 +134,11 @@ fi
 # carry the paper-shape assertions — incl. the fused ≥2x gate in
 # `strategy`, the spectral-engine ≥1.5x + zero-alloc gates in
 # `spectral`, the lane ≥1.3x + bit-parity gates in `simd`, the
-# hit-list repeat-stability gate in `reco`, and the mixed-traffic
-# digest worker-invariance gate in `mixed` — so letting them rot
-# silently would hollow out the reproduction; see docs/BENCHMARKS.md).
+# hit-list repeat-stability gate in `reco`, the mixed-traffic
+# digest worker-invariance gate in `mixed`, and the zero-alloc +
+# zero-retry fault-layer-inertness gates in `serve` — so letting them
+# rot silently would hollow out the reproduction; see
+# docs/BENCHMARKS.md).
 run cargo bench --no-run
 
 # SIMD lane gate: actually *run* the lane bench — it carries the

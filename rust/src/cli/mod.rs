@@ -255,9 +255,27 @@ COMMON OPTIONS:
   --queue-depth <n>        serve: admission queue bound (default 16;
                            beyond it requests are rejected with a
                            retry-after hint)
+  --shed-threshold <n>     serve: queue length at or above which
+                           override-carrying (slow-path) requests are
+                           shed before hot traffic (default: 3/4 of
+                           --queue-depth; clamped to [1, queue-depth])
+  --fault-plan <spec>      serve: arm the deterministic fault-injection
+                           layer from a JSON plan file (or inline JSON
+                           starting with '{'); WIRECELL_FAULT_PLAN is
+                           the env equivalent, the flag wins; absent =>
+                           the fault layer is fully inert (see
+                           docs/SERVICE.md \"Failure semantics\")
   --port-file <file>       serve: write the bound port here once
                            listening (for scripts using --port 0)
   --connections <n>        serve-load: concurrent client connections
+  --deadline <ms>          serve-load: per-event deadline; sent to the
+                           daemon (expired requests are answered with
+                           DEADLINE_EXCEEDED, never simulated) and
+                           enforced client-side across retries
+                           (0 = none, the default)
+  --max-retries <n>        serve-load: per-event retry budget for
+                           rejects, worker panics, expired deadlines
+                           and transport failures (default 10)
   --metrics                serve-load: scrape and print /metrics after
                            the run
   --shutdown               serve-load: stop the daemon afterwards

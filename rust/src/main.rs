@@ -377,6 +377,11 @@ fn serve(cli: &Cli) -> Result<()> {
             .map_err(|e| anyhow!(e))?
             .unwrap_or(0),
         port_file: cli.opt("port-file").unwrap_or("").to_string(),
+        fault_plan: cli.opt("fault-plan").unwrap_or("").to_string(),
+        shed_threshold: cli
+            .opt_parse("shed-threshold")
+            .map_err(|e| anyhow!(e))?
+            .unwrap_or(0),
     };
     let report = wirecell::serve::serve(&cfg, &opts)?;
     println!(
@@ -415,13 +420,18 @@ fn serve_load(cli: &Cli) -> Result<()> {
             .opt_parse("max-retries")
             .map_err(|e| anyhow!(e))?
             .unwrap_or(10),
+        deadline_ms: cli
+            .opt_parse("deadline")
+            .map_err(|e| anyhow!(e))?
+            .unwrap_or(0),
     };
     let report = wirecell::serve::run_load(addr, &opts)?;
     println!(
-        "load: {} requested, {} served, {} rejects  ({:.2} events/s over {:.3} s)",
+        "load: {} requested, {} served, {} rejects, {} retries  ({:.2} events/s over {:.3} s)",
         report.events,
         report.served,
         report.rejects,
+        report.retries,
         report.events_per_sec(),
         report.wall_s
     );

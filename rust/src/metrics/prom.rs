@@ -131,6 +131,18 @@ impl PromText {
         self.out.push_str(&format!("{name} {}\n", fmt_value(value)));
     }
 
+    /// Append a counter with one sample line per `(labels, value)`
+    /// pair under a shared HELP/TYPE header — e.g.
+    /// `sheds_total{path="overrides"} 3`.  Labels are the caller's
+    /// verbatim `key="value"` text, without the braces.
+    pub fn counter_labeled(&mut self, name: &str, help: &str, samples: &[(&str, f64)]) {
+        self.header(name, help, "counter");
+        for (labels, value) in samples {
+            self.out
+                .push_str(&format!("{name}{{{labels}}} {}\n", fmt_value(*value)));
+        }
+    }
+
     /// Append a gauge sample.
     pub fn gauge(&mut self, name: &str, help: &str, value: f64) {
         self.header(name, help, "gauge");
@@ -221,6 +233,21 @@ mod tests {
         let m = parse_prometheus(&text).unwrap();
         assert_eq!(m["events_total"], 42.0);
         assert_eq!(m["queue_depth"], 3.0);
+    }
+
+    #[test]
+    fn labeled_counters_share_one_header() {
+        let mut p = PromText::new();
+        p.counter_labeled(
+            "sheds_total",
+            "Requests shed by path",
+            &[("path=\"overrides\"", 3.0), ("path=\"hot\"", 0.0)],
+        );
+        let text = p.render();
+        assert_eq!(text.matches("# TYPE sheds_total counter").count(), 1);
+        let m = parse_prometheus(&text).unwrap();
+        assert_eq!(m["sheds_total{path=\"overrides\"}"], 3.0);
+        assert_eq!(m["sheds_total{path=\"hot\"}"], 0.0);
     }
 
     #[test]

@@ -8,13 +8,27 @@
 //! `connections` client threads share a global arrival schedule
 //! (ticket `seq` is sent no earlier than `seq / rate` seconds in, the
 //! same closed-loop discipline as the throughput engine's paced
-//! source), honour `retry_after_ms` hints from admission rejects, and
-//! fold every response into a [`LoadReport`] — served/reject/error
-//! counts, the XOR frame digest (comparable against a direct
-//! [`run_stream`](crate::throughput::run_stream) of the same seed),
-//! and the server-observed queueing/service latency summaries.
+//! source), and fold every response into a [`LoadReport`] —
+//! served/reject/error counts, the XOR frame digest (comparable
+//! against a direct [`run_stream`](crate::throughput::run_stream) of
+//! the same seed), and the server-observed queueing/service latency
+//! summaries.
+//!
+//! The load generator **survives failure**: a dropped connection, a
+//! corrupt response, a worker-panic ERROR, or a DEADLINE_EXCEEDED
+//! answer triggers a bounded reconnect-and-retry with deterministic
+//! decorrelated-jitter backoff (seeded from the campaign seed, so a
+//! chaos run is replayable — see [`super::fault`]).  Every resend
+//! declares itself via the request's `attempt` field, which the
+//! daemon counts as `wirecell_serve_client_retries_total`.  Because
+//! frames are a pure function of `(seed, seq)`, a campaign that
+//! retries its way through injected faults produces a digest
+//! bit-identical to a fault-free run — the chaos witness in
+//! `rust/tests/serve.rs` pins exactly that.
 
-use super::protocol::{self, Record, Request};
+use super::daemon::panic_message;
+use super::fault;
+use super::protocol::{self, ecode, Record, Request};
 use crate::metrics::LatencySummary;
 use crate::throughput::{event_seed, frame_digest};
 use anyhow::{anyhow, bail, Context, Result};
@@ -25,6 +39,7 @@ use std::time::{Duration, Instant};
 
 /// One synchronous connection to a serve daemon.
 pub struct ServeClient {
+    addr: SocketAddr,
     stream: TcpStream,
 }
 
@@ -33,11 +48,19 @@ impl ServeClient {
     pub fn connect(addr: SocketAddr) -> Result<Self> {
         let stream = TcpStream::connect(addr).with_context(|| format!("connecting {addr}"))?;
         stream.set_nodelay(true)?;
-        Ok(Self { stream })
+        Ok(Self { addr, stream })
+    }
+
+    /// Drop the current connection and dial the daemon again.  After
+    /// any [`request`](Self::request) error the connection's framing
+    /// is suspect; this is the only safe way back.
+    pub fn reconnect(&mut self) -> Result<()> {
+        *self = Self::connect(self.addr)?;
+        Ok(())
     }
 
     /// Send one request and block for the daemon's response record
-    /// (frame, reject, or error).
+    /// (frame, reject, error, or deadline-exceeded).
     pub fn request(&mut self, req: &Request) -> Result<Record> {
         protocol::write_record(&mut self.stream, &Record::Request(req.clone()))?;
         protocol::read_record(&mut self.stream)?
@@ -59,24 +82,43 @@ pub fn shutdown(addr: SocketAddr) -> Result<()> {
     ServeClient::connect(addr)?.shutdown()
 }
 
-/// Fetch the daemon's `/metrics` document (Prometheus text) over
-/// plain HTTP and return the body.
-pub fn scrape_metrics(addr: SocketAddr) -> Result<String> {
+/// One-shot plain-HTTP GET against the daemon's socket; returns
+/// `(status line, body)`.
+fn http_get(addr: SocketAddr, path: &str) -> Result<(String, String)> {
     let mut stream = TcpStream::connect(addr).with_context(|| format!("connecting {addr}"))?;
     write!(
         stream,
-        "GET /metrics HTTP/1.1\r\nHost: {addr}\r\nConnection: close\r\n\r\n"
+        "GET {path} HTTP/1.1\r\nHost: {addr}\r\nConnection: close\r\n\r\n"
     )?;
     let mut raw = String::new();
     stream.read_to_string(&mut raw)?;
     let (head, body) = raw
         .split_once("\r\n\r\n")
         .ok_or_else(|| anyhow!("malformed HTTP response"))?;
-    let status = head.lines().next().unwrap_or("");
+    let status = head.lines().next().unwrap_or("").to_string();
+    Ok((status, body.to_string()))
+}
+
+/// Fetch the daemon's `/metrics` document (Prometheus text) over
+/// plain HTTP and return the body.
+pub fn scrape_metrics(addr: SocketAddr) -> Result<String> {
+    let (status, body) = http_get(addr, "/metrics")?;
     if !status.contains("200") {
         bail!("metrics scrape failed: {status}");
     }
-    Ok(body.to_string())
+    Ok(body)
+}
+
+/// Probe the daemon's `GET /healthz` endpoint; returns the state name
+/// (`"ready"`, `"degraded"`, or `"draining"` — the latter rides a 503
+/// status, which is still a healthy probe).
+pub fn healthz(addr: SocketAddr) -> Result<String> {
+    let (status, body) = http_get(addr, "/healthz")?;
+    let state = body.trim().to_string();
+    match state.as_str() {
+        "ready" | "degraded" | "draining" => Ok(state),
+        _ => bail!("unexpected /healthz answer: {status} / {state:?}"),
+    }
 }
 
 /// Options for one [`run_load`] campaign.
@@ -94,14 +136,21 @@ pub struct LoadOptions {
     /// Base seed; event `seq` uses
     /// [`event_seed`]`(seed, seq)` — the throughput engine's
     /// convention, so a load run is digest-comparable to a local
-    /// stream of the same seed.
+    /// stream of the same seed.  Also seeds the retry backoff jitter.
     pub seed: u64,
     /// JSON config overrides to send with every request ("" = none,
     /// the daemon's hot path).
     pub overrides: String,
-    /// Retries per event after admission rejects (honouring each
-    /// reject's `retry_after_ms` hint) before giving up.
+    /// Retries per event — covering admission rejects (honouring each
+    /// reject's `retry_after_ms` hint), dropped/corrupted
+    /// connections, worker-panic errors, and deadline-exceeded
+    /// answers — before the event is abandoned.
     pub max_retries: u32,
+    /// Per-request deadline [ms] sent via the protocol's DEADLINE
+    /// feature (0 = none).  Also honoured client-side: once an
+    /// event's first send is `deadline_ms` old, it is abandoned
+    /// rather than retried.
+    pub deadline_ms: u32,
 }
 
 impl Default for LoadOptions {
@@ -114,6 +163,7 @@ impl Default for LoadOptions {
             seed: 0,
             overrides: String::new(),
             max_retries: 10,
+            deadline_ms: 0,
         }
     }
 }
@@ -127,7 +177,11 @@ pub struct LoadReport {
     pub served: u64,
     /// Admission rejects received (retried events count each reject).
     pub rejects: u64,
-    /// Events abandoned (retries exhausted, or error records).
+    /// Resends of any cause (rejects, reconnects, panics, deadlines).
+    /// Zero on a fault-free, uncontended run.
+    pub retries: u64,
+    /// Events abandoned (retries exhausted, or terminal error
+    /// records), plus any connection-thread failures.
     pub errors: Vec<String>,
     /// XOR of the per-frame digests, comparable to
     /// [`ThroughputReport::digest`](crate::throughput::ThroughputReport)
@@ -157,10 +211,26 @@ impl LoadReport {
 struct LoadAgg {
     served: u64,
     rejects: u64,
+    retries: u64,
     errors: Vec<String>,
     digest: u64,
     queue_s: Vec<f64>,
     service_s: Vec<f64>,
+}
+
+/// Deterministic decorrelated-jitter backoff: each delay is drawn
+/// from `[BASE, min(CAP, 3 × previous)]` with the unit coming from
+/// the fault layer's pure `(seed, site, sequence)` hash — so the same
+/// campaign seed replays the same backoff schedule, faults and all.
+fn backoff_ms(seed: u64, seq: u64, attempt: u32, prev_ms: &mut u64) -> u64 {
+    const BASE_MS: u64 = 2;
+    const CAP_MS: u64 = 250;
+    let draw = seq.wrapping_mul(1009).wrapping_add(u64::from(attempt));
+    let u = fault::unit(seed, "client.backoff", draw);
+    let hi = prev_ms.saturating_mul(3).clamp(BASE_MS, CAP_MS);
+    let ms = BASE_MS + ((hi - BASE_MS) as f64 * u) as u64;
+    *prev_ms = ms.max(BASE_MS);
+    ms
 }
 
 /// Drive a closed-loop load campaign against a daemon.
@@ -168,14 +238,17 @@ struct LoadAgg {
 /// Events `0..events` are spread round-robin over `connections`
 /// threads; each thread sends event `seq` no earlier than
 /// `seq / arrival_rate_hz` seconds after the campaign starts (flat
-/// out when the rate is 0), retrying admission rejects after the
-/// hinted backoff.
+/// out when the rate is 0).  Recoverable failures — admission
+/// rejects, transport errors, worker panics, expired deadlines — are
+/// retried up to `max_retries` times per event; an exhausted or
+/// terminally failed event lands in [`LoadReport::errors`] instead of
+/// aborting the campaign, as does a panicked connection thread.
 pub fn run_load(addr: SocketAddr, opts: &LoadOptions) -> Result<LoadReport> {
     let events = opts.events.max(1);
     let connections = opts.connections.max(1).min(events);
     let agg = Mutex::new(LoadAgg::default());
     let t0 = Instant::now();
-    std::thread::scope(|s| -> Result<()> {
+    std::thread::scope(|s| {
         let mut handles = Vec::with_capacity(connections);
         for c in 0..connections {
             let agg = &agg;
@@ -192,68 +265,192 @@ pub fn run_load(addr: SocketAddr, opts: &LoadOptions) -> Result<LoadReport> {
                             std::thread::sleep(due - now);
                         }
                     }
-                    let req = Request {
-                        seq,
-                        seed: event_seed(opts.seed, seq),
-                        scenario: opts.scenario.clone(),
-                        overrides: opts.overrides.clone(),
-                    };
-                    let mut attempts = 0u32;
-                    loop {
-                        match client.request(&req)? {
-                            Record::Frame(f) => {
-                                let mut a = agg.lock().unwrap();
-                                a.served += 1;
-                                a.digest ^= frame_digest(&f.frame);
-                                a.queue_s.push(f.queue_us as f64 / 1e6);
-                                a.service_s.push(f.service_us as f64 / 1e6);
-                                break;
-                            }
-                            Record::Reject { retry_after_ms, .. } => {
-                                let mut a = agg.lock().unwrap();
-                                a.rejects += 1;
-                                if attempts >= opts.max_retries {
-                                    a.errors.push(format!(
-                                        "event {seq}: dropped after {attempts} retries"
-                                    ));
-                                    break;
-                                }
-                                drop(a);
-                                attempts += 1;
-                                std::thread::sleep(Duration::from_millis(
-                                    u64::from(retry_after_ms.max(1)),
-                                ));
-                            }
-                            Record::Error { message, .. } => {
-                                agg.lock()
-                                    .unwrap()
-                                    .errors
-                                    .push(format!("event {seq}: {message}"));
-                                break;
-                            }
-                            other => bail!("unexpected response: {other:?}"),
-                        }
-                    }
+                    drive_event(&mut client, seq, opts, agg)?;
                     seq += connections as u64;
                 }
                 Ok(())
             }));
         }
-        for h in handles {
-            h.join().expect("load thread panicked")?;
+        // a failed or panicked connection thread degrades the report
+        // instead of aborting the campaign (its remaining events are
+        // simply never requested)
+        for (c, h) in handles.into_iter().enumerate() {
+            match h.join() {
+                Ok(Ok(())) => {}
+                Ok(Err(e)) => {
+                    let err = std::io::Error::other(format!("connection {c}: {e:#}"));
+                    agg.lock().unwrap().errors.push(err.to_string());
+                }
+                Err(panic) => {
+                    let err = std::io::Error::other(format!(
+                        "connection {c} panicked: {}",
+                        panic_message(&panic)
+                    ));
+                    agg.lock().unwrap().errors.push(err.to_string());
+                }
+            }
         }
-        Ok(())
-    })?;
+    });
     let wall_s = t0.elapsed().as_secs_f64();
     let agg = agg.into_inner().unwrap();
     Ok(LoadReport {
         events: events as u64,
         served: agg.served,
         rejects: agg.rejects,
+        retries: agg.retries,
         errors: agg.errors,
         digest: agg.digest,
         wall_s,
         queueing: LatencySummary::from_samples(&agg.queue_s),
         service: LatencySummary::from_samples(&agg.service_s),
     })
+}
+
+/// Request one event until a frame lands or the retry budget (or the
+/// client-side deadline) runs out.  Only an unexpected response kind
+/// is a hard error; everything else degrades into the aggregate.
+fn drive_event(
+    client: &mut ServeClient,
+    seq: u64,
+    opts: &LoadOptions,
+    agg: &Mutex<LoadAgg>,
+) -> Result<()> {
+    let first_send = Instant::now();
+    let mut attempts = 0u32;
+    let mut prev_ms = 2u64;
+    // budget check + backoff before every resend; false = abandoned
+    let mut retry = |attempts: &mut u32, why: &str, agg: &Mutex<LoadAgg>| -> bool {
+        if *attempts >= opts.max_retries {
+            agg.lock()
+                .unwrap()
+                .errors
+                .push(format!("event {seq}: dropped after {attempts} retries ({why})"));
+            return false;
+        }
+        if opts.deadline_ms > 0
+            && first_send.elapsed() >= Duration::from_millis(u64::from(opts.deadline_ms))
+        {
+            agg.lock()
+                .unwrap()
+                .errors
+                .push(format!("event {seq}: client deadline expired ({why})"));
+            return false;
+        }
+        *attempts += 1;
+        agg.lock().unwrap().retries += 1;
+        true
+    };
+    loop {
+        let req = Request {
+            seq,
+            seed: event_seed(opts.seed, seq),
+            scenario: opts.scenario.clone(),
+            overrides: opts.overrides.clone(),
+            deadline_ms: opts.deadline_ms,
+            attempt: attempts,
+        };
+        match client.request(&req) {
+            Ok(Record::Frame(f)) => {
+                let mut a = agg.lock().unwrap();
+                a.served += 1;
+                a.digest ^= frame_digest(&f.frame);
+                a.queue_s.push(f.queue_us as f64 / 1e6);
+                a.service_s.push(f.service_us as f64 / 1e6);
+                return Ok(());
+            }
+            Ok(Record::Reject { retry_after_ms, .. }) => {
+                agg.lock().unwrap().rejects += 1;
+                if !retry(&mut attempts, "admission reject", agg) {
+                    return Ok(());
+                }
+                // the server's hint knows the backlog better than our
+                // jitter schedule does
+                std::thread::sleep(Duration::from_millis(u64::from(retry_after_ms.max(1))));
+            }
+            Ok(Record::Error { code, .. }) if code == ecode::WORKER_PANIC => {
+                // the daemon recovered and says so: safe to resend
+                if !retry(&mut attempts, "worker panic", agg) {
+                    return Ok(());
+                }
+                std::thread::sleep(Duration::from_millis(backoff_ms(
+                    opts.seed,
+                    seq,
+                    attempts,
+                    &mut prev_ms,
+                )));
+            }
+            Ok(Record::Error { message, .. }) => {
+                // terminal (bad scenario, invalid overrides, ...):
+                // resending the same bytes cannot succeed
+                agg.lock()
+                    .unwrap()
+                    .errors
+                    .push(format!("event {seq}: {message}"));
+                return Ok(());
+            }
+            Ok(Record::DeadlineExceeded { .. }) => {
+                if !retry(&mut attempts, "server deadline", agg) {
+                    return Ok(());
+                }
+                std::thread::sleep(Duration::from_millis(backoff_ms(
+                    opts.seed,
+                    seq,
+                    attempts,
+                    &mut prev_ms,
+                )));
+            }
+            Ok(other) => bail!("unexpected response: {other:?}"),
+            Err(_) => {
+                // dropped connection or corrupt record: the framing is
+                // gone; back off, reconnect, resend
+                if !retry(&mut attempts, "transport error", agg) {
+                    return Ok(());
+                }
+                std::thread::sleep(Duration::from_millis(backoff_ms(
+                    opts.seed,
+                    seq,
+                    attempts,
+                    &mut prev_ms,
+                )));
+                while client.reconnect().is_err() {
+                    if !retry(&mut attempts, "reconnect failed", agg) {
+                        return Ok(());
+                    }
+                    std::thread::sleep(Duration::from_millis(backoff_ms(
+                        opts.seed,
+                        seq,
+                        attempts,
+                        &mut prev_ms,
+                    )));
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn backoff_is_deterministic_bounded_and_grows() {
+        let schedule = |seed: u64| -> Vec<u64> {
+            let mut prev = 2;
+            (1..=8).map(|a| backoff_ms(seed, 3, a, &mut prev)).collect()
+        };
+        let a = schedule(42);
+        assert_eq!(a, schedule(42), "same seed => same schedule");
+        assert_ne!(a, schedule(43), "different seed => different jitter");
+        assert!(a.iter().all(|&ms| (2..=250).contains(&ms)), "{a:?}");
+        // decorrelated jitter can wander, but the ceiling it draws
+        // from only grows until the cap
+        let mut prev = 2;
+        let mut ceilings = Vec::new();
+        for attempt in 1..=8 {
+            let before = prev;
+            backoff_ms(7, 1, attempt, &mut prev);
+            ceilings.push(before.saturating_mul(3).clamp(2, 250));
+        }
+        assert!(ceilings.windows(2).all(|w| w[0] <= w[1]), "{ceilings:?}");
+    }
 }

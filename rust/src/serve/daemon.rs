@@ -35,16 +35,39 @@
 //!   [`FrameArena`] slots and encoded into the slot's retained wire
 //!   buffer; the slot returns to the arena when the connection thread
 //!   drops it right after `write_all` (*return on send*).
-//! * **Metrics.** The same socket answers plain `GET /metrics` with
-//!   Prometheus text (see [`super::stats`]); binary clients and
-//!   scrapers share one port.
+//! * **Metrics + health.** The same socket answers plain
+//!   `GET /metrics` with Prometheus text (see [`super::stats`]) and
+//!   `GET /healthz` with the daemon's coarse state
+//!   (`ready`/`degraded`/`draining`); binary clients and scrapers
+//!   share one port.
+//! * **Deadlines.** A request may carry `deadline_ms`
+//!   ([`protocol::feature::DEADLINE`]); an expired ticket is answered
+//!   with a DEADLINE_EXCEEDED record at dequeue — and again checked
+//!   after simulation, before the frame is encoded — instead of
+//!   burning a worker on an answer nobody is waiting for.
+//! * **Panic containment.** Worker stage execution runs under
+//!   `catch_unwind`; a panicked event becomes an ERROR record
+//!   ([`protocol::ecode::WORKER_PANIC`]) to its requester, the
+//!   worker's sessions are rebuilt, and the daemon keeps serving.
+//! * **Brownout.** Above a queue-pressure threshold
+//!   (`--shed-threshold`) the slow overrides path is shed first —
+//!   rejected with retry hints while cached-scenario traffic keeps
+//!   flowing to the full queue depth.
+//! * **Fault injection.** Named probe sites ([`super::fault::site`])
+//!   thread the whole path; a seeded [`FaultPlan`]
+//!   (`--fault-plan` / `WIRECELL_FAULT_PLAN`) makes drops, delays,
+//!   corruption and panics replayable.  No plan loaded = one dead
+//!   branch per site.
 //! * **Graceful shutdown.** A [`Record::Shutdown`] sets the flag,
 //!   wakes everyone, drains queued tickets, and the daemon returns a
 //!   final [`ServeReport`].
+//!
+//! [`FaultPlan`]: super::fault::FaultPlan
 
 use super::arena::{ArenaSlot, FrameArena};
-use super::protocol::{self, Record, Request, StageTotal};
-use super::stats::ServeMetrics;
+use super::fault::{site, FaultAction, FaultSet};
+use super::protocol::{self, ecode, Record, Request, StageTotal};
+use super::stats::{HealthState, ServeMetrics};
 use crate::config::SimConfig;
 use crate::frame::PlaneFrame;
 use crate::scenario::{Scenario, ShardExec, ShardedReport, ShardedSession};
@@ -53,6 +76,7 @@ use anyhow::{anyhow, bail, Context, Result};
 use std::collections::{HashMap, VecDeque};
 use std::io::{ErrorKind, Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{mpsc, Condvar, Mutex};
 use std::time::{Duration, Instant};
@@ -75,6 +99,14 @@ pub struct ServeOptions {
     /// ("" = don't).  Lets scripts start on port 0 and discover the
     /// real port race-free.
     pub port_file: String,
+    /// Fault plan: inline JSON or a path to a JSON file ("" = none; the
+    /// `WIRECELL_FAULT_PLAN` environment variable is the fallback).
+    /// See [`super::fault`].
+    pub fault_plan: String,
+    /// Queue occupancy at which the brownout policy starts shedding
+    /// overrides (slow-path) requests (0 = auto: 3/4 of
+    /// `queue_depth`).  Hot-path traffic is admitted to full depth.
+    pub shed_threshold: usize,
 }
 
 impl Default for ServeOptions {
@@ -85,6 +117,8 @@ impl Default for ServeOptions {
             queue_depth: 16,
             arena_slots: 0,
             port_file: String::new(),
+            fault_plan: String::new(),
+            shed_threshold: 0,
         }
     }
 }
@@ -100,6 +134,14 @@ pub struct ServeReport {
     pub rejects: u64,
     /// Requests that failed.
     pub errors: u64,
+    /// Requests expired by their deadline.
+    pub deadline_exceeded: u64,
+    /// Worker panics contained by the recovery boundary.
+    pub worker_panics: u64,
+    /// Overrides-path requests shed by the brownout policy.
+    pub sheds: u64,
+    /// Requests that declared themselves client retries.
+    pub client_retries: u64,
     /// Daemon lifetime [s].
     pub uptime_s: f64,
 }
@@ -128,7 +170,9 @@ struct Shared {
     metrics: ServeMetrics,
     arena: FrameArena,
     queue_depth: usize,
+    shed_threshold: usize,
     workers: usize,
+    faults: FaultSet,
     started: Instant,
 }
 
@@ -144,16 +188,23 @@ impl Shared {
         self.cv.notify_all();
     }
 
-    /// Admit a request or reject it with a retry hint (queue full).
+    /// Admit a request or reject it with a retry hint.  Two bounds
+    /// apply: the brownout threshold sheds overrides (slow-path)
+    /// traffic first, and the full queue depth bounds everything.
     fn admit(&self, req: Request, reply: mpsc::Sender<Reply>) -> Result<(), Record> {
         let mut q = self.queue.lock().unwrap();
         if self.shutdown.load(Ordering::SeqCst) {
             return Err(Record::Error {
                 seq: req.seq,
                 message: "daemon is shutting down".into(),
+                code: ecode::GENERIC,
             });
         }
-        if q.len() >= self.queue_depth {
+        let shed = !req.overrides.is_empty() && q.len() >= self.shed_threshold;
+        if shed || q.len() >= self.queue_depth {
+            if shed {
+                self.metrics.on_shed();
+            }
             self.metrics.on_reject();
             return Err(Record::Reject {
                 seq: req.seq,
@@ -169,6 +220,26 @@ impl Shared {
         self.metrics.set_queue_depth(q.len());
         self.cv.notify_one();
         Ok(())
+    }
+
+    /// The daemon's coarse health, served at `GET /healthz`: draining
+    /// once shutdown begins; degraded while the brownout threshold is
+    /// engaged, or after a worker panic until the fleet has served a
+    /// full round of events since (one per worker); ready otherwise.
+    fn health(&self) -> HealthState {
+        if self.shutdown.load(Ordering::SeqCst) {
+            return HealthState::Draining;
+        }
+        let qlen = self.queue.lock().unwrap().len();
+        if qlen >= self.shed_threshold {
+            return HealthState::Degraded;
+        }
+        if self.metrics.worker_panics() > 0
+            && self.metrics.served_since_panic() < self.workers as u64
+        {
+            return HealthState::Degraded;
+        }
+        HealthState::Ready
     }
 
     /// Blocking pop for workers.  `None` = shutdown with the queue
@@ -189,6 +260,28 @@ impl Shared {
     }
 }
 
+/// What one ticket produced on the worker side.
+enum Served {
+    /// A frame, staged and encoded into an arena slot.
+    Slot(ArenaSlot),
+    /// The deadline expired after simulation but before encode; the
+    /// frame was discarded.
+    Expired {
+        /// How long the request had been in flight [ms].
+        waited_ms: u32,
+    },
+}
+
+/// How long ticket `t` has been in flight, measured from admission.
+fn waited_ms(t: &Ticket) -> u32 {
+    t.arrival.elapsed().as_millis().min(u32::MAX as u128) as u32
+}
+
+/// Whether ticket `t`'s deadline (if any) has expired.
+fn deadline_expired(t: &Ticket) -> bool {
+    t.req.deadline_ms != 0 && waited_ms(t) >= t.req.deadline_ms
+}
+
 /// One simulation worker: a persistent [`ShardedSession`] on the base
 /// config plus a per-scenario cache for override-free requests.
 struct Worker {
@@ -203,18 +296,70 @@ impl Worker {
         while let Some(ticket) = shared.next_ticket() {
             let start = Instant::now();
             let queue_s = start.saturating_duration_since(ticket.arrival).as_secs_f64();
-            let reply = match self.serve_one(&ticket.req, queue_s, start, shared) {
-                Ok(slot) => {
+            // deadline check at dequeue: an expired ticket is answered
+            // and dropped, never simulated
+            if deadline_expired(&ticket) {
+                shared.metrics.on_deadline_exceeded();
+                let _ = ticket.reply.send(Reply::Record(Record::DeadlineExceeded {
+                    seq: ticket.req.seq,
+                    deadline_ms: ticket.req.deadline_ms,
+                    waited_ms: waited_ms(&ticket),
+                }));
+                continue;
+            }
+            // panic containment: stage execution (and the worker.exec
+            // fault site) runs under catch_unwind, so one poisoned
+            // request answers its own client and the daemon lives on.
+            // AssertUnwindSafe: on panic the session is discarded and
+            // rebuilt below, so no torn state is ever observed.
+            let outcome = catch_unwind(AssertUnwindSafe(|| {
+                match shared.faults.check(site::WORKER_EXEC) {
+                    Some(FaultAction::WorkerPanic) => {
+                        panic!("fault injection: worker-panic at {}", site::WORKER_EXEC)
+                    }
+                    Some(FaultAction::SlowWorker(ms)) | Some(FaultAction::Delay(ms)) => {
+                        std::thread::sleep(Duration::from_millis(ms))
+                    }
+                    _ => {}
+                }
+                self.serve_one(&ticket, queue_s, start, shared)
+            }));
+            let reply = match outcome {
+                Ok(Ok(Served::Slot(slot))) => {
                     shared
                         .metrics
                         .on_served(queue_s, start.elapsed().as_secs_f64());
                     Reply::Slot(slot)
                 }
-                Err(e) => {
+                Ok(Ok(Served::Expired { waited_ms })) => {
+                    shared.metrics.on_deadline_exceeded();
+                    Reply::Record(Record::DeadlineExceeded {
+                        seq: ticket.req.seq,
+                        deadline_ms: ticket.req.deadline_ms,
+                        waited_ms,
+                    })
+                }
+                Ok(Err(e)) => {
                     shared.metrics.on_error();
                     Reply::Record(Record::Error {
                         seq: ticket.req.seq,
                         message: format!("{e:#}"),
+                        code: ecode::GENERIC,
+                    })
+                }
+                Err(panic) => {
+                    shared.metrics.on_worker_panic();
+                    shared.metrics.on_error();
+                    let what = panic_message(&panic);
+                    eprintln!(
+                        "wire-cell serve: worker panicked on seq {} ({what}); rebuilding sessions",
+                        ticket.req.seq
+                    );
+                    self.rebuild();
+                    Reply::Record(Record::Error {
+                        seq: ticket.req.seq,
+                        message: format!("worker panicked: {what}"),
+                        code: ecode::WORKER_PANIC,
                     })
                 }
             };
@@ -224,13 +369,35 @@ impl Worker {
         }
     }
 
+    /// Replace the (possibly torn) session fleet after a panic: a
+    /// fresh [`ShardedSession`] from the base config and an empty
+    /// scenario cache, re-primed with the default scenario.  The base
+    /// config was validated at startup, so failure here is unexpected;
+    /// if it happens anyway the old state is kept and the next request
+    /// gets an ordinary error.
+    fn rebuild(&mut self) {
+        match ShardedSession::new(&self.base, ShardExec::Serial) {
+            Ok(session) => {
+                self.session = session;
+                self.scenarios.clear();
+                if let Ok(sc) = self.registry.make_scenario(&self.base) {
+                    self.scenarios.insert(self.base.scenario.clone(), sc);
+                }
+            }
+            Err(e) => {
+                eprintln!("wire-cell serve: worker rebuild failed: {e:#}");
+            }
+        }
+    }
+
     fn serve_one(
         &mut self,
-        req: &Request,
+        ticket: &Ticket,
         queue_s: f64,
         start: Instant,
         shared: &Shared,
-    ) -> Result<ArenaSlot> {
+    ) -> Result<Served> {
+        let req = &ticket.req;
         let report = if req.overrides.is_empty() {
             // hot path: cached session, cached scenario
             let name = if req.scenario.is_empty() {
@@ -265,7 +432,27 @@ impl Worker {
             let depos = scenario.generate_seq(session.layout(), req.seed, req.seq);
             session.run_event(req.seed, &depos)?
         };
-        stage_reply(&report, req, queue_s, start, shared)
+        // deadline check before encode: if the client's budget ran out
+        // during simulation, don't spend more staging bytes nobody
+        // will wait for
+        if deadline_expired(ticket) {
+            return Ok(Served::Expired {
+                waited_ms: waited_ms(ticket),
+            });
+        }
+        stage_reply(&report, req, queue_s, start, shared).map(Served::Slot)
+    }
+}
+
+/// Best-effort text of a caught panic payload (`&str` and `String`
+/// payloads cover `panic!` in practice).
+pub(crate) fn panic_message(panic: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = panic.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = panic.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
     }
 }
 
@@ -364,8 +551,8 @@ fn read_record_interruptible(stream: &mut TcpStream, shared: &Shared) -> Result<
     protocol::decode_payload(&payload).map(Some)
 }
 
-/// Serve `GET /metrics` (and 404 anything else) on an HTTP/1.x
-/// connection, then close it.
+/// Serve `GET /metrics` and `GET /healthz` (and 404 anything else) on
+/// an HTTP/1.x connection, then close it.
 fn serve_http(stream: &mut TcpStream, shared: &Shared) {
     // drain the request head (cap 16 KiB — scrapers send tiny GETs)
     let mut head = Vec::with_capacity(512);
@@ -393,16 +580,61 @@ fn serve_http(stream: &mut TcpStream, shared: &Shared) {
         let uptime = shared.started.elapsed().as_secs_f64();
         (
             "200 OK",
-            shared.metrics.render(&shared.arena.stats(), uptime),
+            shared
+                .metrics
+                .render(&shared.arena.stats(), uptime, shared.health()),
         )
+    } else if path == "/healthz" || path.starts_with("/healthz?") {
+        // degraded still answers 200: the daemon is serving, just
+        // under pressure; draining answers 503 so balancers stop
+        // sending new traffic while the queue empties
+        let health = shared.health();
+        let status = match health {
+            HealthState::Ready | HealthState::Degraded => "200 OK",
+            HealthState::Draining => "503 Service Unavailable",
+        };
+        (status, format!("{}\n", health.label()))
     } else {
-        ("404 Not Found", "only /metrics lives here\n".to_string())
+        (
+            "404 Not Found",
+            "only /metrics and /healthz live here\n".to_string(),
+        )
     };
     let response = format!(
         "HTTP/1.1 {status}\r\nContent-Type: text/plain; version=0.0.4; charset=utf-8\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{body}",
         body.len()
     );
     let _ = stream.write_all(response.as_bytes());
+}
+
+/// Write reply bytes through the `conn.reply` fault site.  Returns
+/// `false` when the connection is done (injected drop or write
+/// failure).  Corruption flips the version byte in a *copy* — the
+/// length prefix stays intact, so the client reads one whole record
+/// and gets a clean decode error; the arena slot is never touched.
+fn send_reply(stream: &mut TcpStream, bytes: &[u8], shared: &Shared) -> bool {
+    match shared.faults.check(site::CONN_REPLY) {
+        Some(FaultAction::DropConnection) => return false,
+        Some(FaultAction::Delay(ms)) | Some(FaultAction::SlowWorker(ms)) => {
+            std::thread::sleep(Duration::from_millis(ms));
+        }
+        Some(FaultAction::CorruptRecord) => {
+            let mut bad = bytes.to_vec();
+            if bad.len() > 4 {
+                bad[4] ^= 0xFF;
+            }
+            return stream.write_all(&bad).is_ok();
+        }
+        Some(FaultAction::WorkerPanic) | None => {}
+    }
+    stream.write_all(bytes).is_ok()
+}
+
+/// [`send_reply`] for a [`Record`] (encodes into a scratch buffer).
+fn send_record(stream: &mut TcpStream, rec: &Record, shared: &Shared) -> bool {
+    let mut buf = Vec::new();
+    protocol::encode_record(rec, &mut buf);
+    send_reply(stream, &buf, shared)
 }
 
 /// Drive one client connection: HTTP scrape or binary record loop.
@@ -446,6 +678,7 @@ fn handle_conn(mut stream: TcpStream, shared: &Shared) {
                     &Record::Error {
                         seq: 0,
                         message: format!("{e:#}"),
+                        code: ecode::GENERIC,
                     },
                 );
                 return;
@@ -454,22 +687,32 @@ fn handle_conn(mut stream: TcpStream, shared: &Shared) {
         match rec {
             Record::Request(req) => {
                 shared.metrics.on_request();
+                if req.attempt > 0 {
+                    shared.metrics.on_client_retry();
+                }
+                match shared.faults.check(site::CONN_REQUEST) {
+                    Some(FaultAction::DropConnection) => return,
+                    Some(FaultAction::Delay(ms)) | Some(FaultAction::SlowWorker(ms)) => {
+                        std::thread::sleep(Duration::from_millis(ms));
+                    }
+                    _ => {}
+                }
                 let (tx, rx) = mpsc::channel();
                 match shared.admit(req, tx) {
                     Err(reject) => {
-                        if protocol::write_record(&mut stream, &reject).is_err() {
+                        if !send_record(&mut stream, &reject, shared) {
                             return;
                         }
                     }
                     Ok(()) => match rx.recv() {
                         Ok(Reply::Slot(slot)) => {
-                            if stream.write_all(slot.wire()).is_err() {
+                            if !send_reply(&mut stream, slot.wire(), shared) {
                                 return;
                             }
                             // slot drops here: return on send
                         }
                         Ok(Reply::Record(rec)) => {
-                            if protocol::write_record(&mut stream, &rec).is_err() {
+                            if !send_record(&mut stream, &rec, shared) {
                                 return;
                             }
                         }
@@ -479,6 +722,8 @@ fn handle_conn(mut stream: TcpStream, shared: &Shared) {
             }
             Record::Shutdown => {
                 shared.begin_shutdown();
+                // the Ack bypasses the fault sites: protocol-level
+                // shutdown must stay reliable even mid-chaos-run
                 let _ = protocol::write_record(&mut stream, &Record::Ack);
                 return;
             }
@@ -488,6 +733,7 @@ fn handle_conn(mut stream: TcpStream, shared: &Shared) {
                     &Record::Error {
                         seq: 0,
                         message: format!("unexpected client record kind {other:?}"),
+                        code: ecode::GENERIC,
                     },
                 );
             }
@@ -513,6 +759,27 @@ pub fn serve_with(
         workers + queue_depth
     } else {
         opts.arena_slots
+    };
+    // brownout threshold: explicit, or 3/4 of the queue depth;
+    // clamped into [1, queue_depth] either way
+    let shed_threshold = if opts.shed_threshold == 0 {
+        (queue_depth * 3 / 4).max(1)
+    } else {
+        opts.shed_threshold.clamp(1, queue_depth)
+    };
+    // fault plan: the option wins, the environment hatch is fallback;
+    // no plan = a disabled FaultSet (one dead branch per site)
+    let fault_spec = if opts.fault_plan.is_empty() {
+        std::env::var("WIRECELL_FAULT_PLAN").unwrap_or_default()
+    } else {
+        opts.fault_plan.clone()
+    };
+    let faults = if fault_spec.is_empty() {
+        FaultSet::disabled()
+    } else {
+        let set = FaultSet::load(&fault_spec).map_err(anyhow::Error::msg)?;
+        eprintln!("wire-cell serve: FAULT PLAN ARMED ({fault_spec}) — chaos run, not production");
+        set
     };
     // build the whole fleet before accepting anything, so config
     // errors surface immediately and every connection hits warm state
@@ -546,7 +813,9 @@ pub fn serve_with(
         metrics: ServeMetrics::new(),
         arena: FrameArena::new(arena_slots),
         queue_depth,
+        shed_threshold,
         workers,
+        faults,
         started: Instant::now(),
     };
     on_bound(addr);
@@ -583,6 +852,10 @@ pub fn serve_with(
         served: shared.metrics.served(),
         rejects: shared.metrics.rejects(),
         errors: shared.metrics.errors(),
+        deadline_exceeded: shared.metrics.deadline_exceeded(),
+        worker_panics: shared.metrics.worker_panics(),
+        sheds: shared.metrics.sheds_overrides(),
+        client_retries: shared.metrics.client_retries(),
         uptime_s: shared.started.elapsed().as_secs_f64(),
     })
 }
@@ -598,6 +871,12 @@ pub fn serve(cfg: &SimConfig, opts: &ServeOptions) -> Result<ServeReport> {
         "wire-cell serve: shut down after {:.1}s — {} served, {} rejected, {} errors",
         report.uptime_s, report.served, report.rejects, report.errors
     );
+    if report.worker_panics + report.deadline_exceeded + report.sheds + report.client_retries > 0 {
+        println!(
+            "wire-cell serve: hardening: {} worker panics contained, {} deadlines exceeded, {} shed, {} client retries",
+            report.worker_panics, report.deadline_exceeded, report.sheds, report.client_retries
+        );
+    }
     Ok(report)
 }
 
@@ -651,8 +930,7 @@ mod tests {
                 Request {
                     seq,
                     seed: 1000 + seq,
-                    scenario: String::new(),
-                    overrides: String::new(),
+                    ..Request::default()
                 },
             );
             match resp {
@@ -689,13 +967,14 @@ mod tests {
                 seq: 5,
                 seed: 1,
                 scenario: "not-a-scenario".into(),
-                overrides: String::new(),
+                ..Request::default()
             },
         );
         match resp {
-            Record::Error { seq, message } => {
+            Record::Error { seq, message, code } => {
                 assert_eq!(seq, 5);
                 assert!(message.contains("not-a-scenario"), "{message}");
+                assert_eq!(code, ecode::GENERIC);
             }
             other => panic!("expected an error, got {other:?}"),
         }
@@ -705,8 +984,7 @@ mod tests {
             Request {
                 seq: 6,
                 seed: 2,
-                scenario: String::new(),
-                overrides: String::new(),
+                ..Request::default()
             },
         );
         assert!(matches!(resp, Record::Frame(_)));
@@ -714,6 +992,143 @@ mod tests {
         let report = handle.join().unwrap().unwrap();
         assert_eq!(report.errors, 1);
         assert_eq!(report.served, 1);
+    }
+
+    #[test]
+    fn expired_deadline_is_answered_not_simulated() {
+        // one worker, stalled 250 ms on its first event by an inline
+        // fault plan, so the second request (deadline 1 ms) expires in
+        // the queue deterministically
+        let opts = ServeOptions {
+            fault_plan: r#"{"sites": {"worker.exec": [
+                {"action": "slow-worker", "ms": 250, "count": 1}
+            ]}}"#
+                .into(),
+            ..ServeOptions::default()
+        };
+        let (addr, handle) = spawn_daemon(small_cfg(), opts);
+        let occupier = std::thread::spawn(move || {
+            let mut stream = TcpStream::connect(addr).unwrap();
+            let resp = request(
+                &mut stream,
+                Request {
+                    seq: 1,
+                    seed: 1,
+                    ..Request::default()
+                },
+            );
+            assert!(matches!(resp, Record::Frame(_)));
+        });
+        std::thread::sleep(Duration::from_millis(60));
+        let mut stream = TcpStream::connect(addr).unwrap();
+        let resp = request(
+            &mut stream,
+            Request {
+                seq: 2,
+                seed: 2,
+                deadline_ms: 1,
+                ..Request::default()
+            },
+        );
+        match resp {
+            Record::DeadlineExceeded {
+                seq,
+                deadline_ms,
+                waited_ms,
+            } => {
+                assert_eq!(seq, 2);
+                assert_eq!(deadline_ms, 1);
+                assert!(waited_ms >= 1, "waited {waited_ms}ms");
+            }
+            other => panic!("expected DeadlineExceeded, got {other:?}"),
+        }
+        occupier.join().unwrap();
+        // a roomy deadline is honored normally
+        let resp = request(
+            &mut stream,
+            Request {
+                seq: 3,
+                seed: 3,
+                deadline_ms: 60_000,
+                ..Request::default()
+            },
+        );
+        assert!(matches!(resp, Record::Frame(_)));
+        protocol::write_record(&mut stream, &Record::Shutdown).unwrap();
+        let report = handle.join().unwrap().unwrap();
+        assert_eq!(report.deadline_exceeded, 1);
+        assert_eq!(report.served, 2);
+        assert_eq!(report.errors, 0, "an expired deadline is not an error");
+    }
+
+    #[test]
+    fn brownout_sheds_overrides_but_admits_hot_traffic() {
+        let opts = ServeOptions {
+            queue_depth: 2,
+            shed_threshold: 1,
+            fault_plan: r#"{"sites": {"worker.exec": [
+                {"action": "slow-worker", "ms": 250, "count": 1}
+            ]}}"#
+                .into(),
+            ..ServeOptions::default()
+        };
+        let (addr, handle) = spawn_daemon(small_cfg(), opts);
+        // occupy the single worker (stalled 250 ms)...
+        let occupier = std::thread::spawn(move || {
+            let mut stream = TcpStream::connect(addr).unwrap();
+            let resp = request(
+                &mut stream,
+                Request {
+                    seq: 1,
+                    seed: 1,
+                    ..Request::default()
+                },
+            );
+            assert!(matches!(resp, Record::Frame(_)));
+        });
+        std::thread::sleep(Duration::from_millis(60));
+        // ...queue one hot request (occupancy 1 = at the shed mark)...
+        let queued = std::thread::spawn(move || {
+            let mut stream = TcpStream::connect(addr).unwrap();
+            let resp = request(
+                &mut stream,
+                Request {
+                    seq: 2,
+                    seed: 2,
+                    ..Request::default()
+                },
+            );
+            assert!(matches!(resp, Record::Frame(_)));
+        });
+        std::thread::sleep(Duration::from_millis(60));
+        // ...now overrides traffic is shed while hot traffic still fits
+        let mut stream = TcpStream::connect(addr).unwrap();
+        let resp = request(
+            &mut stream,
+            Request {
+                seq: 3,
+                seed: 3,
+                overrides: r#"{"target_depos": 40}"#.into(),
+                ..Request::default()
+            },
+        );
+        assert!(matches!(resp, Record::Reject { seq: 3, .. }), "{resp:?}");
+        let resp = request(
+            &mut stream,
+            Request {
+                seq: 4,
+                seed: 4,
+                ..Request::default()
+            },
+        );
+        assert!(matches!(resp, Record::Frame(_)), "hot path still flows");
+        occupier.join().unwrap();
+        queued.join().unwrap();
+        protocol::write_record(&mut stream, &Record::Shutdown).unwrap();
+        let report = handle.join().unwrap().unwrap();
+        assert_eq!(report.sheds, 1);
+        assert_eq!(report.rejects, 1, "a shed is also a reject on the wire");
+        assert_eq!(report.served, 3);
     }
 
     #[test]

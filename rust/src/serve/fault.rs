@@ -1,0 +1,535 @@
+//! Deterministic fault injection for the serve stack.
+//!
+//! A chaos run you cannot replay is an anecdote.  This module makes
+//! induced failure a *config artifact*: a [`FaultPlan`] is a seeded,
+//! JSON-serializable table of per-site rules, and whether a given
+//! check fires is a pure function of `(plan seed, site name, site
+//! sequence number)` — so the same plan against the same traffic
+//! produces the same fault pattern, and a failing chaos run can be
+//! re-run bit-for-bit from the plan file alone.
+//!
+//! ```json
+//! {
+//!   "seed": 7,
+//!   "sites": {
+//!     "conn.request": [
+//!       {"action": "delay", "ms": 10, "prob": 1.0, "count": 1},
+//!       {"action": "drop-connection", "prob": 0.5, "count": 2, "after": 1}
+//!     ],
+//!     "worker.exec": [
+//!       {"action": "worker-panic", "prob": 1.0, "count": 1}
+//!     ]
+//!   }
+//! }
+//! ```
+//!
+//! * **Sites** are named probe points compiled into the daemon (see
+//!   [`site`]); loading a plan that names an unknown site is an error,
+//!   so typos fail fast instead of silently injecting nothing.
+//! * **Rules** are evaluated in order per check; the first eligible
+//!   rule that triggers wins.  A rule is eligible once the site's
+//!   check counter reaches `after`, until it has fired `count` times
+//!   (`count` 0 = unlimited), and triggers when the deterministic
+//!   unit draw for `(seed, site, sequence)` falls below `prob`.
+//! * **Off by default.**  A daemon without a plan holds a disabled
+//!   [`FaultSet`]; every check is a single `Option` test on the hot
+//!   path and the serve behaviour is byte-identical to a build without
+//!   this module.
+//!
+//! The daemon enables a plan via `--fault-plan <file|inline-json>` or
+//! the `WIRECELL_FAULT_PLAN` environment hatch (same spelling), and
+//! the retrying client's backoff jitter reuses [`unit`] so load
+//! campaigns are replayable too.  `docs/SERVICE.md` ("Failure
+//! semantics") carries the user-facing format table and the replay
+//! workflow.
+
+use crate::json::{self, Value};
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+/// The named injection sites compiled into the serve stack.
+pub mod site {
+    /// Connection thread, after a REQUEST record is decoded and before
+    /// it is admitted.  Honours `delay`, `drop-connection`.
+    pub const CONN_REQUEST: &str = "conn.request";
+    /// Connection thread, before a reply record is written.  Honours
+    /// `delay`, `drop-connection`, `corrupt-record`.
+    pub const CONN_REPLY: &str = "conn.reply";
+    /// Worker thread, before stage execution (inside the
+    /// `catch_unwind` recovery boundary).  Honours `slow-worker`,
+    /// `delay` (alias) and `worker-panic`.
+    pub const WORKER_EXEC: &str = "worker.exec";
+    /// Every site the daemon probes (plan validation rejects others).
+    pub const ALL: &[&str] = &[CONN_REQUEST, CONN_REPLY, WORKER_EXEC];
+}
+
+/// One injectable failure.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultAction {
+    /// Sleep for the given milliseconds, then continue normally.
+    Delay(u64),
+    /// Close the TCP connection without a reply.
+    DropConnection,
+    /// Flip a byte in the encoded reply so the client's decoder fails.
+    CorruptRecord,
+    /// Stall the worker for the given milliseconds before serving.
+    SlowWorker(u64),
+    /// Panic inside the worker's stage execution.
+    WorkerPanic,
+}
+
+impl FaultAction {
+    /// The plan-file spelling of this action.
+    pub fn name(&self) -> &'static str {
+        match self {
+            FaultAction::Delay(_) => "delay",
+            FaultAction::DropConnection => "drop-connection",
+            FaultAction::CorruptRecord => "corrupt-record",
+            FaultAction::SlowWorker(_) => "slow-worker",
+            FaultAction::WorkerPanic => "worker-panic",
+        }
+    }
+}
+
+/// One per-site rule: an action plus its trigger window.
+#[derive(Clone, Debug, PartialEq)]
+pub struct FaultRule {
+    /// What to inject when the rule triggers.
+    pub action: FaultAction,
+    /// Trigger probability per eligible check, in `[0, 1]`.
+    pub prob: f64,
+    /// Maximum number of fires (0 = unlimited).
+    pub count: u64,
+    /// Site checks to skip before the rule becomes eligible.
+    pub after: u64,
+}
+
+/// A seeded, serializable chaos schedule: rules per named site.
+#[derive(Clone, Debug, PartialEq, Default)]
+pub struct FaultPlan {
+    /// Seed for the deterministic trigger draws.
+    pub seed: u64,
+    /// Rules per injection site (see [`site`]), evaluated in order.
+    pub sites: BTreeMap<String, Vec<FaultRule>>,
+}
+
+// FNV-1a over the site name — stable across runs and platforms.
+fn fnv1a(s: &str) -> u64 {
+    let mut h = 0xCBF2_9CE4_8422_2325u64;
+    for b in s.as_bytes() {
+        h ^= u64::from(*b);
+        h = h.wrapping_mul(0x0000_0100_0000_01B3);
+    }
+    h
+}
+
+fn splitmix64(mut x: u64) -> u64 {
+    x = x.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    let mut z = x;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// The deterministic unit draw behind every trigger decision (and the
+/// retrying client's backoff jitter): a pure function of
+/// `(seed, site, seq)` mapping into `[0, 1)`.
+pub fn unit(seed: u64, site: &str, seq: u64) -> f64 {
+    let h = splitmix64(splitmix64(seed ^ fnv1a(site)) ^ seq);
+    (h >> 11) as f64 / (1u64 << 53) as f64
+}
+
+impl FaultPlan {
+    /// Parse a plan from JSON text (the `--fault-plan` format).
+    pub fn parse(text: &str) -> Result<Self, String> {
+        let doc = json::parse(text).map_err(|e| format!("fault plan: {e}"))?;
+        let obj = doc
+            .as_object()
+            .ok_or("fault plan: top level must be an object")?;
+        for k in obj.keys() {
+            if k != "seed" && k != "sites" {
+                return Err(format!("fault plan: unknown key '{k}'"));
+            }
+        }
+        let seed = match obj.get("seed") {
+            None => 0,
+            Some(v) => v
+                .as_i64()
+                .map(|n| n as u64)
+                .ok_or("fault plan: 'seed' must be an integer")?,
+        };
+        let mut sites = BTreeMap::new();
+        if let Some(v) = obj.get("sites") {
+            let map = v
+                .as_object()
+                .ok_or("fault plan: 'sites' must be an object")?;
+            for (name, rules) in map {
+                if !site::ALL.contains(&name.as_str()) {
+                    return Err(format!(
+                        "fault plan: unknown site '{name}' (known: {})",
+                        site::ALL.join(", ")
+                    ));
+                }
+                let arr = rules
+                    .as_array()
+                    .ok_or_else(|| format!("fault plan: site '{name}' must hold an array"))?;
+                let mut parsed = Vec::with_capacity(arr.len());
+                for (i, r) in arr.iter().enumerate() {
+                    parsed.push(parse_rule(name, i, r)?);
+                }
+                sites.insert(name.clone(), parsed);
+            }
+        }
+        Ok(Self { seed, sites })
+    }
+
+    /// Load a plan from a spec that is either inline JSON (starts with
+    /// `{`) or a path to a JSON file — the `--fault-plan` /
+    /// `WIRECELL_FAULT_PLAN` contract.
+    pub fn load(spec: &str) -> Result<Self, String> {
+        let spec = spec.trim();
+        if spec.starts_with('{') {
+            Self::parse(spec)
+        } else {
+            let text = std::fs::read_to_string(spec)
+                .map_err(|e| format!("fault plan {spec}: {e}"))?;
+            Self::parse(&text)
+        }
+    }
+
+    /// The plan as a JSON value, every field explicit.  `parse` of the
+    /// rendered text reproduces the plan exactly (fixed point), so
+    /// plans can be archived and replayed from their serialized form.
+    pub fn to_json(&self) -> Value {
+        let mut sites = BTreeMap::new();
+        for (name, rules) in &self.sites {
+            let arr = rules
+                .iter()
+                .map(|r| {
+                    let ms = match r.action {
+                        FaultAction::Delay(ms) | FaultAction::SlowWorker(ms) => ms,
+                        _ => 0,
+                    };
+                    Value::object(vec![
+                        ("action", Value::from(r.action.name())),
+                        ("ms", Value::Number(ms as f64)),
+                        ("prob", Value::Number(r.prob)),
+                        ("count", Value::Number(r.count as f64)),
+                        ("after", Value::Number(r.after as f64)),
+                    ])
+                })
+                .collect();
+            sites.insert(name.clone(), Value::Array(arr));
+        }
+        Value::object(vec![
+            ("seed", Value::Number(self.seed as f64)),
+            ("sites", Value::Object(sites)),
+        ])
+    }
+
+    /// Total number of rules across every site.
+    pub fn nrules(&self) -> usize {
+        self.sites.values().map(Vec::len).sum()
+    }
+}
+
+impl std::fmt::Display for FaultPlan {
+    /// Pretty-printed JSON of [`to_json`](Self::to_json); `parse` of
+    /// the output reproduces the plan (fixed point).
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(&json::to_string_pretty(&self.to_json()))
+    }
+}
+
+fn parse_rule(site_name: &str, idx: usize, v: &Value) -> Result<FaultRule, String> {
+    let at = |msg: &str| format!("fault plan: site '{site_name}' rule {idx}: {msg}");
+    let obj = v.as_object().ok_or_else(|| at("must be an object"))?;
+    for k in obj.keys() {
+        if !["action", "ms", "prob", "count", "after"].contains(&k.as_str()) {
+            return Err(at(&format!("unknown key '{k}'")));
+        }
+    }
+    let action_name = obj
+        .get("action")
+        .and_then(Value::as_str)
+        .ok_or_else(|| at("needs an 'action' string"))?;
+    let ms = match obj.get("ms") {
+        None => 1,
+        Some(v) => v
+            .as_i64()
+            .filter(|n| *n >= 0)
+            .map(|n| n as u64)
+            .ok_or_else(|| at("'ms' must be a non-negative integer"))?,
+    };
+    let action = match action_name {
+        "delay" => FaultAction::Delay(ms),
+        "drop-connection" => FaultAction::DropConnection,
+        "corrupt-record" => FaultAction::CorruptRecord,
+        "slow-worker" => FaultAction::SlowWorker(ms),
+        "worker-panic" => FaultAction::WorkerPanic,
+        other => {
+            return Err(at(&format!(
+                "unknown action '{other}' (known: delay, drop-connection, \
+                 corrupt-record, slow-worker, worker-panic)"
+            )))
+        }
+    };
+    let prob = match obj.get("prob") {
+        None => 1.0,
+        Some(v) => {
+            let p = v.as_f64().ok_or_else(|| at("'prob' must be a number"))?;
+            if !(0.0..=1.0).contains(&p) {
+                return Err(at("'prob' must be in [0, 1]"));
+            }
+            p
+        }
+    };
+    let get_u64 = |key: &str| -> Result<u64, String> {
+        match obj.get(key) {
+            None => Ok(0),
+            Some(v) => v
+                .as_i64()
+                .filter(|n| *n >= 0)
+                .map(|n| n as u64)
+                .ok_or_else(|| at(&format!("'{key}' must be a non-negative integer"))),
+        }
+    };
+    Ok(FaultRule {
+        action,
+        prob,
+        count: get_u64("count")?,
+        after: get_u64("after")?,
+    })
+}
+
+/// Per-rule runtime state: how many times it has fired.
+struct RuleState {
+    rule: FaultRule,
+    fired: AtomicU64,
+}
+
+/// Per-site runtime state: the check counter plus rule states.
+struct SiteState {
+    seq: AtomicU64,
+    rules: Vec<RuleState>,
+}
+
+struct FaultState {
+    seed: u64,
+    sites: BTreeMap<String, SiteState>,
+}
+
+/// The runtime injector the daemon threads share.  Disabled (the
+/// default) it is a `None` and every [`check`](Self::check) is a
+/// single branch; armed, it evaluates the plan's rules for the named
+/// site against a monotonically increasing per-site sequence counter.
+#[derive(Clone, Default)]
+pub struct FaultSet {
+    inner: Option<Arc<FaultState>>,
+}
+
+impl FaultSet {
+    /// The inert injector (no plan loaded).
+    pub fn disabled() -> Self {
+        Self { inner: None }
+    }
+
+    /// Arm an injector with a plan.
+    pub fn from_plan(plan: FaultPlan) -> Self {
+        let sites = plan
+            .sites
+            .iter()
+            .map(|(name, rules)| {
+                (
+                    name.clone(),
+                    SiteState {
+                        seq: AtomicU64::new(0),
+                        rules: rules
+                            .iter()
+                            .map(|r| RuleState {
+                                rule: r.clone(),
+                                fired: AtomicU64::new(0),
+                            })
+                            .collect(),
+                    },
+                )
+            })
+            .collect();
+        Self {
+            inner: Some(Arc::new(FaultState {
+                seed: plan.seed,
+                sites,
+            })),
+        }
+    }
+
+    /// Load and arm from a `--fault-plan` spec (inline JSON or path).
+    pub fn load(spec: &str) -> Result<Self, String> {
+        Ok(Self::from_plan(FaultPlan::load(spec)?))
+    }
+
+    /// Whether a plan is armed.
+    pub fn active(&self) -> bool {
+        self.inner.is_some()
+    }
+
+    /// Probe a site: advance its sequence counter and return the first
+    /// rule-triggered action, if any.  `None` on a disabled set (the
+    /// hot-path cost of the whole layer is this one branch).
+    ///
+    /// The *fire pattern as a function of the site sequence number* is
+    /// deterministic; under concurrency the assignment of sequence
+    /// numbers to specific requests follows arrival order at the site.
+    pub fn check(&self, site_name: &str) -> Option<FaultAction> {
+        let state = self.inner.as_ref()?;
+        let site_state = state.sites.get(site_name)?;
+        let seq = site_state.seq.fetch_add(1, Ordering::Relaxed);
+        for rs in &site_state.rules {
+            let r = &rs.rule;
+            if seq < r.after {
+                continue;
+            }
+            if r.count != 0 && rs.fired.load(Ordering::Relaxed) >= r.count {
+                continue;
+            }
+            if r.prob < 1.0 && unit(state.seed, site_name, seq) >= r.prob {
+                continue;
+            }
+            if r.count != 0 {
+                // claim one fire; lose the race past the cap → next rule
+                if rs.fired.fetch_add(1, Ordering::Relaxed) >= r.count {
+                    continue;
+                }
+            }
+            return Some(r.action);
+        }
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const PLAN: &str = r#"{
+        "seed": 42,
+        "sites": {
+            "conn.request": [
+                {"action": "delay", "ms": 10, "prob": 1.0, "count": 1},
+                {"action": "drop-connection", "prob": 0.5, "count": 2, "after": 1}
+            ],
+            "worker.exec": [
+                {"action": "worker-panic", "prob": 1.0, "count": 1}
+            ]
+        }
+    }"#;
+
+    #[test]
+    fn parse_serialize_is_a_fixed_point() {
+        let plan = FaultPlan::parse(PLAN).unwrap();
+        assert_eq!(plan.seed, 42);
+        assert_eq!(plan.nrules(), 3);
+        let text = plan.to_string();
+        let back = FaultPlan::parse(&text).unwrap();
+        assert_eq!(back, plan, "parse(to_string(plan)) == plan");
+        // and the serialized form itself is stable
+        assert_eq!(back.to_string(), text);
+    }
+
+    #[test]
+    fn defaults_fill_in_and_unknowns_are_rejected() {
+        let plan =
+            FaultPlan::parse(r#"{"sites": {"worker.exec": [{"action": "slow-worker"}]}}"#)
+                .unwrap();
+        let r = &plan.sites["worker.exec"][0];
+        assert_eq!(r.action, FaultAction::SlowWorker(1));
+        assert_eq!((r.prob, r.count, r.after), (1.0, 0, 0));
+        assert_eq!(plan.seed, 0);
+
+        for bad in [
+            r#"[]"#,
+            r#"{"sites": {"nope.site": []}}"#,
+            r#"{"sites": {"worker.exec": [{"action": "explode"}]}}"#,
+            r#"{"sites": {"worker.exec": [{"action": "delay", "prob": 1.5}]}}"#,
+            r#"{"sites": {"worker.exec": [{"action": "delay", "ms": -1}]}}"#,
+            r#"{"sites": {"worker.exec": [{"action": "delay", "typo": 1}]}}"#,
+            r#"{"seed": "x"}"#,
+            r#"{"extra": 1}"#,
+            r#"not json"#,
+        ] {
+            assert!(FaultPlan::parse(bad).is_err(), "should reject: {bad}");
+        }
+    }
+
+    #[test]
+    fn trigger_sequence_is_deterministic() {
+        let plan = FaultPlan::parse(
+            r#"{"seed": 7, "sites": {"conn.request": [
+                {"action": "drop-connection", "prob": 0.3}
+            ]}}"#,
+        )
+        .unwrap();
+        let pattern = |p: &FaultPlan| -> Vec<bool> {
+            let set = FaultSet::from_plan(p.clone());
+            (0..64).map(|_| set.check(site::CONN_REQUEST).is_some()).collect()
+        };
+        let a = pattern(&plan);
+        let b = pattern(&plan);
+        assert_eq!(a, b, "same plan + seed => same fire pattern");
+        assert!(a.iter().any(|&x| x), "p=0.3 over 64 draws fires");
+        assert!(a.iter().any(|&x| !x), "p=0.3 over 64 draws also skips");
+
+        let mut other = plan.clone();
+        other.seed = 8;
+        assert_ne!(pattern(&other), a, "a different seed moves the pattern");
+
+        // the raw draw is a pure function of (seed, site, seq)
+        assert_eq!(unit(7, "conn.request", 5), unit(7, "conn.request", 5));
+        assert_ne!(unit(7, "conn.request", 5), unit(7, "conn.reply", 5));
+    }
+
+    #[test]
+    fn count_after_and_ordering_semantics() {
+        let set = FaultSet::from_plan(FaultPlan::parse(PLAN).unwrap());
+        // seq 0: first rule (delay, count 1) wins
+        assert_eq!(set.check(site::CONN_REQUEST), Some(FaultAction::Delay(10)));
+        // seq >= 1: delay is spent; drop-connection (prob 0.5, count 2,
+        // after 1) fires exactly twice over the deterministic draws
+        let mut drops = 0;
+        for _ in 1..200 {
+            match set.check(site::CONN_REQUEST) {
+                Some(FaultAction::DropConnection) => drops += 1,
+                Some(other) => panic!("unexpected action {other:?}"),
+                None => {}
+            }
+        }
+        assert_eq!(drops, 2, "count caps the fires");
+        // the worker site is independent
+        assert_eq!(set.check(site::WORKER_EXEC), Some(FaultAction::WorkerPanic));
+        assert_eq!(set.check(site::WORKER_EXEC), None, "count 1 is spent");
+        // unknown site on an armed set: no-op, never a panic
+        assert_eq!(set.check("conn.reply"), None);
+    }
+
+    #[test]
+    fn disabled_set_is_inert_and_load_handles_inline_and_file() {
+        let off = FaultSet::disabled();
+        assert!(!off.active());
+        for _ in 0..8 {
+            assert_eq!(off.check(site::CONN_REQUEST), None);
+        }
+
+        let inline = FaultSet::load(r#"{"seed": 1}"#).unwrap();
+        assert!(inline.active());
+
+        let dir = std::env::temp_dir().join(format!("wct-fault-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("plan.json");
+        std::fs::write(&path, PLAN).unwrap();
+        let from_file = FaultSet::load(path.to_str().unwrap()).unwrap();
+        assert!(from_file.active());
+        assert!(FaultSet::load("/nonexistent/plan.json").is_err());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -25,21 +25,34 @@
 //!   in `rust/tests/serve.rs`).
 //! * [`stats`] — service metrics with split queueing/service
 //!   latency, rendered as Prometheus text at `GET /metrics` on the
-//!   same port.
+//!   same port, plus the [`stats::HealthState`] behind `GET /healthz`.
+//! * [`fault`] — seeded, deterministic fault injection
+//!   ([`fault::FaultPlan`] / [`fault::FaultSet`]): delays, dropped
+//!   connections, corrupt records, slow workers and worker panics,
+//!   armed only via `--fault-plan` / `WIRECELL_FAULT_PLAN` and fully
+//!   inert otherwise.
 //!
 //! [`client`] is the matching synchronous client; with an arrival
 //! rate and several connections it doubles as the closed-loop load
-//! generator behind `wire-cell serve-load`.  `docs/SERVICE.md` has the
-//! wire-format tables, the metrics reference, and worked examples.
+//! generator behind `wire-cell serve-load`.  The client retries
+//! rejected, panicked, deadline-expired and transport-failed events
+//! with bounded deterministic backoff, so a chaos campaign converges
+//! to the same aggregate digest as a fault-free run.  `docs/SERVICE.md`
+//! has the wire-format tables, the metrics reference, the failure
+//! semantics, and worked examples.
 
 pub mod arena;
 pub mod client;
 pub mod daemon;
+pub mod fault;
 pub mod protocol;
 pub mod stats;
 
 pub use arena::{ArenaSlot, ArenaStats, FrameArena};
-pub use client::{run_load, scrape_metrics, shutdown, LoadOptions, LoadReport, ServeClient};
+pub use client::{
+    healthz, run_load, scrape_metrics, shutdown, LoadOptions, LoadReport, ServeClient,
+};
 pub use daemon::{serve, serve_with, ServeOptions, ServeReport};
+pub use fault::{FaultAction, FaultPlan, FaultRule, FaultSet};
 pub use protocol::{FrameResponse, Record, Request, StageTotal, PROTOCOL_VERSION};
-pub use stats::{ServeMetrics, LATENCY_WINDOW};
+pub use stats::{HealthState, ServeMetrics, LATENCY_WINDOW};

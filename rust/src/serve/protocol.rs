@@ -19,9 +19,17 @@
 //!
 //! The byte layout is pinned by
 //! `rust/tests/data/serve_protocol_golden.bin` (decode → re-encode →
-//! exact bytes); any format change must bump [`PROTOCOL_VERSION`] and
-//! regenerate the golden file.  `docs/SERVICE.md` carries the
-//! user-facing field tables.
+//! exact bytes); any *incompatible* format change must bump
+//! [`PROTOCOL_VERSION`] and regenerate the golden file.  Optional
+//! capabilities ride as **additive extensions** instead: REQUEST may
+//! carry a trailing [`feature`]-bits byte (deadline, retry attempt)
+//! and ERROR a trailing [`ecode`] byte, each emitted only when
+//! nonzero, so a legacy record's bytes are unchanged and old
+//! clients/daemons interoperate with new ones.  Extensions are
+//! canonical-form: a zero feature byte, a zero-valued feature field,
+//! or a zero trailing error code must be *omitted*, which keeps
+//! `encode(decode(x)) == x` byte-for-byte.  `docs/SERVICE.md` carries
+//! the user-facing field tables.
 //!
 //! [`ShardedSession`]: crate::scenario::ShardedSession
 
@@ -51,12 +59,40 @@ pub mod kind {
     pub const SHUTDOWN: u8 = 5;
     /// Server → client: shutdown acknowledged.
     pub const ACK: u8 = 6;
+    /// Server → client: the request's deadline expired before service.
+    pub const DEADLINE_EXCEEDED: u8 = 7;
+}
+
+/// REQUEST feature bits (the optional trailing byte; see the module
+/// docs on additive extensions).  Each set bit appends one field, in
+/// bit order.
+pub mod feature {
+    /// `u32 deadline_ms` follows: give up on the request this many
+    /// milliseconds after the daemon admits it (clocks are never
+    /// compared across the wire).
+    pub const DEADLINE: u8 = 1;
+    /// `u32 attempt` follows: which retry this is (1 = first resend).
+    /// Lets the daemon count client retries without a side channel.
+    pub const ATTEMPT: u8 = 2;
+    /// Every feature bit this build understands.
+    pub const KNOWN: u8 = DEADLINE | ATTEMPT;
+}
+
+/// ERROR codes (the optional trailing byte on ERROR records).
+/// [`GENERIC`](ecode::GENERIC) is never written — its absence *is*
+/// the encoding — so legacy errors are byte-identical.
+pub mod ecode {
+    /// Ordinary request failure (bad scenario, invalid overrides...).
+    pub const GENERIC: u8 = 0;
+    /// The worker panicked while simulating this event; the daemon
+    /// recovered and the request is safe to retry.
+    pub const WORKER_PANIC: u8 = 1;
 }
 
 /// One event request: which scenario, which seed, plus optional JSON
 /// config overrides (empty string = serve with the daemon's base
 /// config — the hot, cached path).
-#[derive(Clone, Debug, PartialEq, Eq)]
+#[derive(Clone, Debug, PartialEq, Eq, Default)]
 pub struct Request {
     /// Client-chosen sequence number, echoed in the response and fed
     /// to [`Scenario::generate_seq`](crate::scenario::Scenario::generate_seq).
@@ -69,6 +105,14 @@ pub struct Request {
     pub scenario: String,
     /// JSON config-overrides object, or "" for none.
     pub overrides: String,
+    /// Deadline in milliseconds from daemon admission (0 = none).
+    /// Carried via [`feature::DEADLINE`]; an expired request is
+    /// answered with a DEADLINE_EXCEEDED record and never simulated.
+    pub deadline_ms: u32,
+    /// Retry attempt number (0 = first try).  Carried via
+    /// [`feature::ATTEMPT`]; nonzero attempts count toward the
+    /// daemon's `wirecell_serve_client_retries_total`.
+    pub attempt: u32,
 }
 
 /// One per-stage timing total riding along with a frame response.
@@ -118,12 +162,25 @@ pub enum Record {
         queue_len: u32,
     },
     /// Server → client: the request failed (bad scenario name,
-    /// invalid overrides, ...).
+    /// invalid overrides, worker panic, ...).
     Error {
         /// Echo of the request sequence number.
         seq: u64,
         /// Human-readable failure description.
         message: String,
+        /// Machine-readable failure class (an [`ecode`] constant;
+        /// [`ecode::GENERIC`] rides as *no* trailing byte).
+        code: u8,
+    },
+    /// Server → client: the request's deadline expired in queue or in
+    /// service; the event was not (fully) simulated.
+    DeadlineExceeded {
+        /// Echo of the request sequence number.
+        seq: u64,
+        /// Echo of the request's deadline [ms].
+        deadline_ms: u32,
+        /// How long the request had been waiting when it was expired [ms].
+        waited_ms: u32,
     },
     /// Client → server: drain and stop.
     Shutdown,
@@ -211,6 +268,10 @@ impl<'a> Cursor<'a> {
         Ok(std::str::from_utf8(s)
             .map_err(|e| anyhow!("bad utf-8 in string field: {e}"))?
             .to_string())
+    }
+
+    fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
     }
 
     fn done(&self) -> Result<()> {
@@ -370,6 +431,25 @@ pub fn encode_record(rec: &Record, out: &mut Vec<u8>) {
             put_u64(out, r.seed);
             put_str16(out, &r.scenario);
             put_str32(out, &r.overrides);
+            // additive extension, canonical form: the feature byte and
+            // each field appear only when nonzero, so a request without
+            // them is byte-identical to the pre-extension encoding
+            let mut bits = 0u8;
+            if r.deadline_ms != 0 {
+                bits |= feature::DEADLINE;
+            }
+            if r.attempt != 0 {
+                bits |= feature::ATTEMPT;
+            }
+            if bits != 0 {
+                out.push(bits);
+                if r.deadline_ms != 0 {
+                    put_u32(out, r.deadline_ms);
+                }
+                if r.attempt != 0 {
+                    put_u32(out, r.attempt);
+                }
+            }
         }
         Record::Frame(f) => {
             // undo the generic prefix; the borrowed-parts encoder
@@ -390,10 +470,24 @@ pub fn encode_record(rec: &Record, out: &mut Vec<u8>) {
             put_u32(out, *retry_after_ms);
             put_u32(out, *queue_len);
         }
-        Record::Error { seq, message } => {
+        Record::Error { seq, message, code } => {
             out.push(kind::ERROR);
             put_u64(out, *seq);
             put_str32(out, message);
+            // additive extension: GENERIC (0) rides as no byte at all
+            if *code != ecode::GENERIC {
+                out.push(*code);
+            }
+        }
+        Record::DeadlineExceeded {
+            seq,
+            deadline_ms,
+            waited_ms,
+        } => {
+            out.push(kind::DEADLINE_EXCEEDED);
+            put_u64(out, *seq);
+            put_u32(out, *deadline_ms);
+            put_u32(out, *waited_ms);
         }
         Record::Shutdown => out.push(kind::SHUTDOWN),
         Record::Ack => out.push(kind::ACK),
@@ -411,12 +505,44 @@ pub fn decode_payload(payload: &[u8]) -> Result<Record> {
         bail!("protocol version {version} (this build speaks {PROTOCOL_VERSION})");
     }
     let rec = match c.u8()? {
-        kind::REQUEST => Record::Request(Request {
-            seq: c.u64()?,
-            seed: c.u64()?,
-            scenario: c.str16()?,
-            overrides: c.str32()?,
-        }),
+        kind::REQUEST => {
+            let mut req = Request {
+                seq: c.u64()?,
+                seed: c.u64()?,
+                scenario: c.str16()?,
+                overrides: c.str32()?,
+                ..Request::default()
+            };
+            // optional trailing feature bits (additive extension);
+            // canonical form is enforced so encode∘decode == identity
+            if c.remaining() > 0 {
+                let bits = c.u8()?;
+                if bits == 0 {
+                    bail!("non-canonical request: zero feature byte must be omitted");
+                }
+                if bits & !feature::KNOWN != 0 {
+                    bail!(
+                        "request carries unknown feature bits {:#04x} (this build \
+                         understands {:#04x})",
+                        bits & !feature::KNOWN,
+                        feature::KNOWN
+                    );
+                }
+                if bits & feature::DEADLINE != 0 {
+                    req.deadline_ms = c.u32()?;
+                    if req.deadline_ms == 0 {
+                        bail!("non-canonical request: zero deadline_ms must be omitted");
+                    }
+                }
+                if bits & feature::ATTEMPT != 0 {
+                    req.attempt = c.u32()?;
+                    if req.attempt == 0 {
+                        bail!("non-canonical request: zero attempt must be omitted");
+                    }
+                }
+            }
+            Record::Request(req)
+        }
         kind::FRAME => {
             let seq = c.u64()?;
             let seed = c.u64()?;
@@ -446,9 +572,24 @@ pub fn decode_payload(payload: &[u8]) -> Result<Record> {
             retry_after_ms: c.u32()?,
             queue_len: c.u32()?,
         },
-        kind::ERROR => Record::Error {
+        kind::ERROR => {
+            let seq = c.u64()?;
+            let message = c.str32()?;
+            let code = if c.remaining() > 0 {
+                let code = c.u8()?;
+                if code == ecode::GENERIC {
+                    bail!("non-canonical error: GENERIC code byte must be omitted");
+                }
+                code
+            } else {
+                ecode::GENERIC
+            };
+            Record::Error { seq, message, code }
+        }
+        kind::DEADLINE_EXCEEDED => Record::DeadlineExceeded {
             seq: c.u64()?,
-            message: c.str32()?,
+            deadline_ms: c.u32()?,
+            waited_ms: c.u32()?,
         },
         kind::SHUTDOWN => Record::Shutdown,
         kind::ACK => Record::Ack,
@@ -542,6 +683,7 @@ mod tests {
             seed: 0xDEAD_BEEF,
             scenario: "hotspot".into(),
             overrides: String::new(),
+            ..Request::default()
         });
         let mut buf = Vec::new();
         encode_record(&rec, &mut buf);
@@ -648,7 +790,34 @@ mod tests {
             Record::Error {
                 seq: 3,
                 message: "unknown scenario 'warp'".into(),
+                code: ecode::GENERIC,
             },
+            Record::Error {
+                seq: 4,
+                message: "worker panicked: index out of bounds".into(),
+                code: ecode::WORKER_PANIC,
+            },
+            Record::DeadlineExceeded {
+                seq: 5,
+                deadline_ms: 250,
+                waited_ms: 312,
+            },
+            Record::Request(Request {
+                seq: 6,
+                seed: 1,
+                scenario: "hotspot".into(),
+                overrides: String::new(),
+                deadline_ms: 500,
+                attempt: 2,
+            }),
+            Record::Request(Request {
+                seq: 7,
+                seed: 1,
+                scenario: String::new(),
+                overrides: String::new(),
+                deadline_ms: 0,
+                attempt: 3,
+            }),
             Record::Shutdown,
             Record::Ack,
         ] {
@@ -673,6 +842,7 @@ mod tests {
                 seed: 2,
                 scenario: "noise-only".into(),
                 overrides: r#"{"apas":2}"#.into(),
+                ..Request::default()
             }),
         )
         .unwrap();
@@ -706,6 +876,7 @@ mod tests {
                 seed: 0,
                 scenario: "x".into(),
                 overrides: String::new(),
+                ..Request::default()
             }),
             &mut buf,
         );
@@ -731,5 +902,176 @@ mod tests {
         let (rec, used) = decode_record(&buf[1..]).unwrap();
         assert!(matches!(rec, Record::Ack));
         assert_eq!(used, buf.len() - 1);
+    }
+
+    /// The additive extensions must not move a single legacy byte: a
+    /// request without deadline/attempt and a GENERIC error encode
+    /// exactly as they did before the feature-bits byte existed.
+    #[test]
+    fn extension_free_records_keep_legacy_bytes() {
+        let mut buf = Vec::new();
+        encode_record(
+            &Record::Request(Request {
+                seq: 7,
+                seed: 9,
+                scenario: "ab".into(),
+                overrides: "c".into(),
+                ..Request::default()
+            }),
+            &mut buf,
+        );
+        // hand-built pre-extension encoding
+        let mut legacy = Vec::new();
+        put_u32(&mut legacy, 0);
+        legacy.push(PROTOCOL_VERSION);
+        legacy.push(kind::REQUEST);
+        put_u64(&mut legacy, 7);
+        put_u64(&mut legacy, 9);
+        put_str16(&mut legacy, "ab");
+        put_str32(&mut legacy, "c");
+        let n = (legacy.len() - 4) as u32;
+        legacy[..4].copy_from_slice(&n.to_le_bytes());
+        assert_eq!(buf, legacy, "extension-free REQUEST bytes moved");
+
+        let mut buf = Vec::new();
+        encode_record(
+            &Record::Error {
+                seq: 3,
+                message: "no".into(),
+                code: ecode::GENERIC,
+            },
+            &mut buf,
+        );
+        let mut legacy = Vec::new();
+        put_u32(&mut legacy, 0);
+        legacy.push(PROTOCOL_VERSION);
+        legacy.push(kind::ERROR);
+        put_u64(&mut legacy, 3);
+        put_str32(&mut legacy, "no");
+        let n = (legacy.len() - 4) as u32;
+        legacy[..4].copy_from_slice(&n.to_le_bytes());
+        assert_eq!(buf, legacy, "GENERIC ERROR bytes moved");
+    }
+
+    /// Non-canonical extension encodings are rejected rather than
+    /// silently renormalized — that is what keeps decode→encode an
+    /// exact byte fixed point (the golden-file property).
+    #[test]
+    fn non_canonical_extensions_are_rejected() {
+        let base = Record::Request(Request {
+            seq: 1,
+            seed: 2,
+            scenario: String::new(),
+            overrides: String::new(),
+            ..Request::default()
+        });
+        let append = |extra: &[u8]| {
+            let mut buf = Vec::new();
+            encode_record(&base, &mut buf);
+            buf.extend_from_slice(extra);
+            let n = (buf.len() - 4) as u32;
+            buf[..4].copy_from_slice(&n.to_le_bytes());
+            buf
+        };
+        // zero feature byte
+        assert!(decode_record(&append(&[0])).is_err());
+        // unknown feature bit
+        assert!(decode_record(&append(&[0x80])).is_err());
+        // DEADLINE bit with zero deadline_ms
+        assert!(decode_record(&append(&[feature::DEADLINE, 0, 0, 0, 0])).is_err());
+        // ATTEMPT bit with zero attempt
+        assert!(decode_record(&append(&[feature::ATTEMPT, 0, 0, 0, 0])).is_err());
+        // DEADLINE bit with missing field bytes
+        assert!(decode_record(&append(&[feature::DEADLINE])).is_err());
+        // explicit GENERIC code byte on an error
+        let mut buf = Vec::new();
+        encode_record(
+            &Record::Error {
+                seq: 1,
+                message: "x".into(),
+                code: ecode::GENERIC,
+            },
+            &mut buf,
+        );
+        buf.push(ecode::GENERIC);
+        let n = (buf.len() - 4) as u32;
+        buf[..4].copy_from_slice(&n.to_le_bytes());
+        assert!(decode_record(&buf).is_err());
+    }
+
+    /// Table-driven hostile-input corpus: every malformed byte string
+    /// must come back as a clean `Err` — never a panic, hang, or
+    /// runaway allocation.  (`decode_record` reads only from the
+    /// given slice, so "no hang" is by construction; the assertions
+    /// pin "no panic" and "Err, not Ok".)
+    #[test]
+    fn malformed_input_corpus_never_panics() {
+        // a valid one-run FRAME record to mutate: 1 plane, 1 chan,
+        // 4 ticks, run at tick 1 with 2 samples
+        let mut pf = PlaneFrame::zeros(PlaneId::U, 1, 4);
+        pf.data[1] = 1.0;
+        pf.data[2] = 2.0;
+        let mut frame_rec = Vec::new();
+        encode_record(
+            &Record::Frame(Box::new(FrameResponse {
+                seq: 1,
+                seed: 2,
+                queue_us: 3,
+                service_us: 4,
+                stages: vec![],
+                frame: Frame {
+                    planes: vec![pf],
+                    ident: 1,
+                },
+            })),
+            &mut frame_rec,
+        );
+        // sparse-run header lives after len(4)+ver(1)+kind(1)+seq(8)+
+        // seed(8)+queue(8)+service(8)+nstages(2)+ident(8)+nplanes(2)
+        // +plane(1)+nchan(4) = 55; nticks at 55, nruns at 59, then
+        // run: channel at 63, tbin at 67, count at 71
+        let run_past_nticks = {
+            let mut b = frame_rec.clone();
+            b[71..75].copy_from_slice(&100u32.to_le_bytes()); // count: 2 → 100
+            b
+        };
+        let run_bad_channel = {
+            let mut b = frame_rec.clone();
+            b[63..67].copy_from_slice(&7u32.to_le_bytes()); // channel: 0 → 7
+            b
+        };
+        let truncated_run = {
+            let mut b = frame_rec.clone();
+            b.truncate(frame_rec.len() - 3); // cut into the samples
+            let n = (b.len() - 4) as u32;
+            b[..4].copy_from_slice(&n.to_le_bytes());
+            b
+        };
+        let cases: Vec<(&str, Vec<u8>)> = vec![
+            ("empty input", vec![]),
+            ("truncated length prefix", vec![0x10, 0x00]),
+            (
+                "length prefix > MAX_RECORD_LEN",
+                (MAX_RECORD_LEN + 1).to_le_bytes().to_vec(),
+            ),
+            ("length prefix with no payload", vec![4, 0, 0, 0]),
+            ("unknown version byte", vec![2, 0, 0, 0, 99, kind::ACK]),
+            (
+                "unknown kind byte",
+                vec![2, 0, 0, 0, PROTOCOL_VERSION, 200],
+            ),
+            ("empty payload", vec![0, 0, 0, 0]),
+            (
+                "kind with truncated body",
+                vec![3, 0, 0, 0, PROTOCOL_VERSION, kind::REQUEST, 1],
+            ),
+            ("sparse run extends past nticks", run_past_nticks),
+            ("sparse run channel out of range", run_bad_channel),
+            ("sparse run truncated mid-samples", truncated_run),
+        ];
+        for (what, bytes) in cases {
+            let got = decode_record(&bytes);
+            assert!(got.is_err(), "{what}: expected Err, got {got:?}");
+        }
     }
 }

@@ -22,6 +22,41 @@ use std::sync::Mutex;
 /// Trailing-window latency quantiles cover this many samples.
 pub const LATENCY_WINDOW: usize = 4096;
 
+/// The daemon's coarse health, served at `GET /healthz` and exposed as
+/// the `wirecell_serve_health_state` gauge.  See `docs/SERVICE.md`
+/// ("Failure semantics") for the state rules.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum HealthState {
+    /// Serving normally.
+    Ready,
+    /// Up, but under pressure: the brownout threshold is engaged, or a
+    /// worker panicked recently and the fleet has not yet proven
+    /// itself by serving a full round of events since.
+    Degraded,
+    /// Shutdown requested; draining the queue, not admitting.
+    Draining,
+}
+
+impl HealthState {
+    /// The `/healthz` body / log spelling.
+    pub fn label(&self) -> &'static str {
+        match self {
+            HealthState::Ready => "ready",
+            HealthState::Degraded => "degraded",
+            HealthState::Draining => "draining",
+        }
+    }
+
+    /// Gauge encoding: 0 = ready, 1 = degraded, 2 = draining.
+    pub fn as_f64(&self) -> f64 {
+        match self {
+            HealthState::Ready => 0.0,
+            HealthState::Degraded => 1.0,
+            HealthState::Draining => 2.0,
+        }
+    }
+}
+
 /// Bounded sliding window of f64 samples (overwrites oldest-first once
 /// full).
 #[derive(Debug)]
@@ -67,6 +102,11 @@ pub struct ServeMetrics {
     served: AtomicU64,
     rejects: AtomicU64,
     errors: AtomicU64,
+    deadline_exceeded: AtomicU64,
+    worker_panics: AtomicU64,
+    served_since_panic: AtomicU64,
+    sheds_overrides: AtomicU64,
+    client_retries: AtomicU64,
     queue_depth: AtomicU64,
     ewma_service_us: AtomicU64,
     lat: Mutex<LatWindows>,
@@ -80,6 +120,11 @@ impl ServeMetrics {
             served: AtomicU64::new(0),
             rejects: AtomicU64::new(0),
             errors: AtomicU64::new(0),
+            deadline_exceeded: AtomicU64::new(0),
+            worker_panics: AtomicU64::new(0),
+            served_since_panic: AtomicU64::new(0),
+            sheds_overrides: AtomicU64::new(0),
+            client_retries: AtomicU64::new(0),
             queue_depth: AtomicU64::new(0),
             ewma_service_us: AtomicU64::new(0),
             lat: Mutex::new(LatWindows {
@@ -106,9 +151,32 @@ impl ServeMetrics {
         self.errors.fetch_add(1, Ordering::Relaxed);
     }
 
+    /// Count a request expired by its deadline (queue or service side).
+    pub fn on_deadline_exceeded(&self) {
+        self.deadline_exceeded.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Count a contained worker panic; resets the served-since-panic
+    /// probation counter that feeds [`HealthState::Degraded`].
+    pub fn on_worker_panic(&self) {
+        self.worker_panics.fetch_add(1, Ordering::Relaxed);
+        self.served_since_panic.store(0, Ordering::Relaxed);
+    }
+
+    /// Count a request shed by the brownout policy (overrides path).
+    pub fn on_shed(&self) {
+        self.sheds_overrides.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Count a client-declared retry (REQUEST with a nonzero attempt).
+    pub fn on_client_retry(&self) {
+        self.client_retries.fetch_add(1, Ordering::Relaxed);
+    }
+
     /// Record a served event with its split latencies.
     pub fn on_served(&self, queue_s: f64, service_s: f64) {
         self.served.fetch_add(1, Ordering::Relaxed);
+        self.served_since_panic.fetch_add(1, Ordering::Relaxed);
         {
             let mut lat = self.lat.lock().unwrap();
             lat.service.push(service_s);
@@ -150,6 +218,32 @@ impl ServeMetrics {
         self.errors.load(Ordering::Relaxed)
     }
 
+    /// Deadline-expired requests so far.
+    pub fn deadline_exceeded(&self) -> u64 {
+        self.deadline_exceeded.load(Ordering::Relaxed)
+    }
+
+    /// Contained worker panics so far.
+    pub fn worker_panics(&self) -> u64 {
+        self.worker_panics.load(Ordering::Relaxed)
+    }
+
+    /// Events served since the most recent worker panic (equals
+    /// [`served`](Self::served) if none ever happened).
+    pub fn served_since_panic(&self) -> u64 {
+        self.served_since_panic.load(Ordering::Relaxed)
+    }
+
+    /// Overrides-path requests shed by the brownout policy so far.
+    pub fn sheds_overrides(&self) -> u64 {
+        self.sheds_overrides.load(Ordering::Relaxed)
+    }
+
+    /// Client-declared retries observed so far.
+    pub fn client_retries(&self) -> u64 {
+        self.client_retries.load(Ordering::Relaxed)
+    }
+
     /// Trailing-window latency summaries `(queueing, service)`.
     pub fn latency(&self) -> (LatencySummary, LatencySummary) {
         let lat = self.lat.lock().unwrap();
@@ -171,7 +265,7 @@ impl ServeMetrics {
     }
 
     /// Render the full `/metrics` document (Prometheus text format).
-    pub fn render(&self, arena: &ArenaStats, uptime_s: f64) -> String {
+    pub fn render(&self, arena: &ArenaStats, uptime_s: f64, health: HealthState) -> String {
         let (queueing, service) = self.latency();
         let mut p = PromText::new();
         p.counter(
@@ -193,6 +287,31 @@ impl ServeMetrics {
             "wirecell_serve_errors_total",
             "Requests that failed (bad scenario, invalid overrides, ...)",
             self.errors() as f64,
+        );
+        p.counter(
+            "wirecell_serve_deadline_exceeded_total",
+            "Requests expired by their deadline before a frame went out",
+            self.deadline_exceeded() as f64,
+        );
+        p.counter(
+            "wirecell_serve_worker_panics_total",
+            "Worker panics contained by the recovery boundary",
+            self.worker_panics() as f64,
+        );
+        p.counter_labeled(
+            "wirecell_serve_sheds_total",
+            "Requests shed by the brownout policy, by traffic path",
+            &[("path=\"overrides\"", self.sheds_overrides() as f64)],
+        );
+        p.counter(
+            "wirecell_serve_client_retries_total",
+            "Requests that declared themselves retries (nonzero attempt)",
+            self.client_retries() as f64,
+        );
+        p.gauge(
+            "wirecell_serve_health_state",
+            "Daemon health: 0 = ready, 1 = degraded, 2 = draining",
+            health.as_f64(),
         );
         p.gauge(
             "wirecell_serve_queue_depth",
@@ -264,14 +383,24 @@ mod tests {
         m.on_request();
         m.on_reject();
         m.on_error();
+        m.on_deadline_exceeded();
+        m.on_worker_panic();
+        m.on_shed();
+        m.on_client_retry();
+        m.on_client_retry();
         m.on_served(0.002, 0.040);
         m.set_queue_depth(3);
-        let text = m.render(&FrameArena::new(4).stats(), 12.5);
+        let text = m.render(&FrameArena::new(4).stats(), 12.5, HealthState::Degraded);
         let map = parse_prometheus(&text).unwrap();
         assert_eq!(map["wirecell_serve_requests_total"], 2.0);
         assert_eq!(map["wirecell_serve_events_total"], 1.0);
         assert_eq!(map["wirecell_serve_rejects_total"], 1.0);
         assert_eq!(map["wirecell_serve_errors_total"], 1.0);
+        assert_eq!(map["wirecell_serve_deadline_exceeded_total"], 1.0);
+        assert_eq!(map["wirecell_serve_worker_panics_total"], 1.0);
+        assert_eq!(map["wirecell_serve_sheds_total{path=\"overrides\"}"], 1.0);
+        assert_eq!(map["wirecell_serve_client_retries_total"], 2.0);
+        assert_eq!(map["wirecell_serve_health_state"], 1.0);
         assert_eq!(map["wirecell_serve_queue_depth"], 3.0);
         assert_eq!(map["wirecell_serve_uptime_seconds"], 12.5);
         // the acceptance-criteria series: queueing-latency percentiles
@@ -310,6 +439,30 @@ mod tests {
         assert_eq!(s.n, 4);
         assert_eq!(s.max_s, 20.0);
         assert!(s.mean_s > 4.0);
+    }
+
+    #[test]
+    fn panic_probation_counter_resets() {
+        let m = ServeMetrics::new();
+        m.on_served(0.0, 0.01);
+        m.on_served(0.0, 0.01);
+        assert_eq!(m.served_since_panic(), 2);
+        m.on_worker_panic();
+        assert_eq!(m.worker_panics(), 1);
+        assert_eq!(m.served_since_panic(), 0, "panic restarts the probation");
+        m.on_served(0.0, 0.01);
+        assert_eq!(m.served_since_panic(), 1);
+        assert_eq!(m.served(), 3, "the cumulative count is untouched");
+    }
+
+    #[test]
+    fn health_state_encoding_is_stable() {
+        assert_eq!(HealthState::Ready.label(), "ready");
+        assert_eq!(HealthState::Degraded.label(), "degraded");
+        assert_eq!(HealthState::Draining.label(), "draining");
+        assert_eq!(HealthState::Ready.as_f64(), 0.0);
+        assert_eq!(HealthState::Degraded.as_f64(), 1.0);
+        assert_eq!(HealthState::Draining.as_f64(), 2.0);
     }
 
     #[test]

@@ -17,7 +17,12 @@
 //!    usable `retry_after_ms` hint instead of queueing unboundedly;
 //! 5. **metrics** — `GET /metrics` on the serving port parses as
 //!    Prometheus text and carries the split queueing/service latency
-//!    quantile series.
+//!    quantile series (plus the issue-10 hardening counters);
+//! 6. **chaos** (issue 10) — under an armed fault plan (drops, delays,
+//!    a corrupt record, a worker panic) a retrying load campaign still
+//!    converges to the byte-identical aggregate digest of a fault-free
+//!    run, the daemon never dies, and `GET /healthz` walks
+//!    degraded → ready around a contained worker panic.
 
 use std::net::{SocketAddr, TcpStream};
 use std::sync::mpsc;
@@ -29,10 +34,10 @@ use wirecell::geometry::PlaneId;
 use wirecell::metrics::parse_prometheus;
 use wirecell::scenario::{Scenario, ShardExec, ShardedSession};
 use wirecell::serve::protocol::{
-    decode_record, encode_frame_record, encode_record, read_record, write_record,
+    decode_record, ecode, encode_frame_record, encode_record, read_record, write_record,
 };
 use wirecell::serve::{
-    run_load, scrape_metrics, FrameArena, LoadOptions, Record, Request, ServeClient,
+    healthz, run_load, scrape_metrics, FrameArena, LoadOptions, Record, Request, ServeClient,
     ServeOptions, ServeReport, StageTotal,
 };
 use wirecell::session::Registry;
@@ -117,8 +122,7 @@ fn served_frames_are_bitwise_identical_to_direct_simulation() {
             .request(&Request {
                 seq,
                 seed,
-                scenario: String::new(),
-                overrides: String::new(),
+                ..Request::default()
             })
             .unwrap();
         let served = match resp {
@@ -341,8 +345,8 @@ fn full_queue_rejects_with_a_retry_hint() {
         &Record::Request(Request {
             seq: 0,
             seed: 1,
-            scenario: String::new(),
             overrides: r#"{"target_depos": 50000}"#.into(),
+            ..Request::default()
         }),
     )
     .unwrap();
@@ -355,8 +359,7 @@ fn full_queue_rejects_with_a_retry_hint() {
         &Record::Request(Request {
             seq: 1,
             seed: 2,
-            scenario: String::new(),
-            overrides: String::new(),
+            ..Request::default()
         }),
     )
     .unwrap();
@@ -369,8 +372,7 @@ fn full_queue_rejects_with_a_retry_hint() {
         &Record::Request(Request {
             seq: 2,
             seed: 3,
-            scenario: String::new(),
-            overrides: String::new(),
+            ..Request::default()
         }),
     )
     .unwrap();
@@ -440,6 +442,14 @@ fn metrics_scrape_parses_and_carries_the_latency_split() {
     }
     let hit_rate = map["wirecell_serve_arena_hit_rate"];
     assert!((0.0..=1.0).contains(&hit_rate), "hit rate {hit_rate}");
+    // the issue-10 hardening series are present (and inert without a
+    // fault plan: nothing panicked, expired, shed or retried)
+    assert_eq!(map["wirecell_serve_worker_panics_total"], 0.0);
+    assert_eq!(map["wirecell_serve_deadline_exceeded_total"], 0.0);
+    assert_eq!(map["wirecell_serve_sheds_total{path=\"overrides\"}"], 0.0);
+    assert_eq!(map["wirecell_serve_client_retries_total"], 0.0);
+    assert_eq!(map["wirecell_serve_health_state"], 0.0, "ready == 0");
+    assert_eq!(healthz(addr).unwrap(), "ready");
 
     // a non-metrics path 404s without killing the daemon
     let mut stream = TcpStream::connect(addr).unwrap();
@@ -452,4 +462,143 @@ fn metrics_scrape_parses_and_carries_the_latency_split() {
     wirecell::serve::shutdown(addr).unwrap();
     let report = handle.join().unwrap().unwrap();
     assert_eq!(report.served, 4);
+}
+
+// ---------------------------------------------------------------------
+// 6. Chaos witnesses (issue 10)
+// ---------------------------------------------------------------------
+
+#[test]
+fn chaos_campaign_converges_to_the_fault_free_digest() {
+    let cfg = small_cfg();
+
+    // the reference: a fault-free campaign over the same events
+    let (addr, handle) = spawn_daemon(cfg.clone(), ServeOptions::default());
+    let clean = run_load(
+        addr,
+        &LoadOptions {
+            events: 6,
+            connections: 2,
+            seed: cfg.seed,
+            ..LoadOptions::default()
+        },
+    )
+    .unwrap();
+    wirecell::serve::shutdown(addr).unwrap();
+    handle.join().unwrap().unwrap();
+    assert_eq!(clean.served, 6, "errors: {:?}", clean.errors);
+    assert_eq!(clean.retries, 0, "fault-free run must not retry");
+
+    // the chaos run: request-side delays and dropped connections, one
+    // corrupt reply, one worker panic — every recoverable failure mode
+    // at once, under a seeded (replayable) plan
+    let plan = r#"{"seed": 99, "sites": {
+        "conn.request": [
+            {"action": "delay", "ms": 5, "count": 2},
+            {"action": "drop-connection", "count": 2, "after": 1}
+        ],
+        "conn.reply": [
+            {"action": "corrupt-record", "count": 1}
+        ],
+        "worker.exec": [
+            {"action": "worker-panic", "count": 1}
+        ]
+    }}"#;
+    let opts = ServeOptions {
+        fault_plan: plan.into(),
+        ..ServeOptions::default()
+    };
+    let (addr, handle) = spawn_daemon(cfg.clone(), opts);
+    let chaos = run_load(
+        addr,
+        &LoadOptions {
+            events: 6,
+            connections: 2,
+            seed: cfg.seed,
+            max_retries: 32,
+            ..LoadOptions::default()
+        },
+    )
+    .unwrap();
+    assert!(chaos.errors.is_empty(), "{:?}", chaos.errors);
+    assert_eq!(chaos.served, 6);
+    assert!(
+        chaos.retries >= 2,
+        "the two guaranteed connection drops each force a retry: {chaos:?}"
+    );
+    // frames are pure functions of (seed, seq): retrying through the
+    // faults must reproduce the fault-free aggregate digest exactly
+    assert_eq!(
+        chaos.digest, clean.digest,
+        "chaos campaign digest drifted from the fault-free run"
+    );
+
+    // the daemon survived and still answers both HTTP endpoints
+    let h = healthz(addr).unwrap();
+    assert!(h == "ready" || h == "degraded", "healthz: {h}");
+    let text = scrape_metrics(addr).unwrap();
+    let map = parse_prometheus(&text).expect("valid Prometheus text");
+    assert!(map["wirecell_serve_worker_panics_total"] >= 1.0);
+    assert!(map["wirecell_serve_client_retries_total"] >= 1.0);
+
+    wirecell::serve::shutdown(addr).unwrap();
+    let report = handle.join().unwrap().unwrap();
+    assert!(report.worker_panics >= 1, "report: {report:?}");
+    assert!(report.client_retries >= 1, "report: {report:?}");
+}
+
+#[test]
+fn healthz_walks_degraded_to_ready_around_a_worker_panic() {
+    let cfg = small_cfg();
+    let opts = ServeOptions {
+        workers: 1,
+        fault_plan: r#"{"sites": {"worker.exec": [
+            {"action": "worker-panic", "count": 1}
+        ]}}"#
+            .into(),
+        ..ServeOptions::default()
+    };
+    let (addr, handle) = spawn_daemon(cfg.clone(), opts);
+    assert_eq!(healthz(addr).unwrap(), "ready");
+
+    // first event: the injected panic is contained and reported as a
+    // typed ERROR, not a dead socket
+    let mut client = ServeClient::connect(addr).unwrap();
+    let seed = event_seed(cfg.seed, 0);
+    let resp = client
+        .request(&Request {
+            seq: 0,
+            seed,
+            ..Request::default()
+        })
+        .unwrap();
+    match resp {
+        Record::Error { code, seq, .. } => {
+            assert_eq!(code, ecode::WORKER_PANIC);
+            assert_eq!(seq, 0);
+        }
+        other => panic!("expected a worker-panic error, got {other:?}"),
+    }
+    // post-panic probation: degraded until the rebuilt fleet proves
+    // itself by serving again
+    assert_eq!(healthz(addr).unwrap(), "degraded");
+
+    // the resend (attempt = 1, as the retrying client would send it)
+    // is served by the rebuilt worker, which lifts the probation
+    let resp = client
+        .request(&Request {
+            seq: 0,
+            seed,
+            attempt: 1,
+            ..Request::default()
+        })
+        .unwrap();
+    assert!(matches!(resp, Record::Frame(_)), "got {resp:?}");
+    assert_eq!(healthz(addr).unwrap(), "ready");
+
+    client.shutdown().unwrap();
+    let report = handle.join().unwrap().unwrap();
+    assert_eq!(report.worker_panics, 1);
+    assert_eq!(report.client_retries, 1);
+    assert_eq!(report.served, 1);
 }
